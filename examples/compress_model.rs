@@ -1,0 +1,83 @@
+//! Compress a trained model with LCD and with every baseline, printing a
+//! side-by-side weight-reconstruction comparison — the "which quantizer
+//! should I use" decision table for a downstream user.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example compress_model [gpt|llama|bert]`
+
+use lcd::baselines::{skim_quantize, SkimConfig};
+use lcd::config::{LcdConfig, ModelKind};
+use lcd::hessian::HessianDiag;
+use lcd::quant::{gptq_quantize, quant_symmetric, QuantSpec};
+use lcd::repro::shared::{open_runtime, train_or_load};
+use lcd::tensor::Matrix;
+use lcd::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "gpt".into());
+    let mut cfg = LcdConfig::default();
+    cfg.model = ModelKind::parse(&model)?;
+
+    let rt = open_runtime(&cfg)?;
+    let tm = train_or_load(&rt, &cfg)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xc0de);
+
+    // Calibration Hessians shared by all quantizers.
+    let calib = tm.calib_tokens(cfg.calib_batches, &mut rng);
+    let linears = tm.runner.spec.linear_params();
+    let mut acts: Vec<Vec<f32>> = vec![Vec::new(); linears.len()];
+    for tokens in &calib {
+        for (i, a) in tm.runner.calib(&tm.store, tokens)?.into_iter().enumerate() {
+            acts[i].extend(a);
+        }
+    }
+
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "layer", "rtn3", "gptq3", "skim3", "lcd", "lcd #cent"
+    );
+    let cm = tm.compress(&cfg, &mut rng)?;
+    let mut totals = [0.0f64; 4];
+    for (li, p) in tm.runner.spec.linear_params().iter().enumerate() {
+        let w = tm.store.get(&p.name)?.data().to_vec();
+        let m = Matrix::new(p.shape[0], p.shape[1], w.clone())?;
+        let x = Matrix::new(acts[li].len() / p.shape[0], p.shape[0], acts[li].clone())?;
+        let h = HessianDiag::from_activations(&x, 0.01);
+
+        let rtn = quant_symmetric(&w, QuantSpec { bits: 3, symmetric: true }).mse(&w);
+        let gptq = gptq_quantize(&m, &h.per_input, 3).mse;
+        let skim =
+            skim_quantize(&m, &h.per_input, &SkimConfig::default(), &mut rng).mse;
+        // LCD clusters the *smoothed* weights; report in unsmoothed units
+        // for comparability (divide reconstruction by s_m).
+        let layer = &cm.layers[li];
+        let rec: Vec<f32> =
+            layer.clustering.reconstruct().iter().map(|v| v / layer.s_m).collect();
+        let lcd = lcd::util::mse(&w, &rec);
+
+        totals[0] += rtn;
+        totals[1] += gptq;
+        totals[2] += skim;
+        totals[3] += lcd;
+        println!(
+            "{:<12} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>14}",
+            p.name, rtn, gptq, skim, lcd, layer.clustering.k()
+        );
+    }
+    println!(
+        "{:<12} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>11.2} avg",
+        "TOTAL",
+        totals[0],
+        totals[1],
+        totals[2],
+        totals[3],
+        cm.avg_centroids()
+    );
+    println!(
+        "LCD packs to {} KiB ({:.2} bits/weight) with INT{} activations",
+        cm.weight_bytes() / 1024,
+        cm.avg_bits(),
+        cm.act_bits
+    );
+    Ok(())
+}

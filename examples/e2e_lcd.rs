@@ -1,0 +1,125 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! 1. **Train** gpt-mini from scratch on the synthetic corpus by looping
+//!    the AOT `train_step` artifact from rust (loss curve logged).
+//! 2. **Compress** with the full LCD pipeline: calibration → adaptive
+//!    smoothing → DBCI → Hessian distillation with progressive +
+//!    speculative centroid optimization → 4-bit LUT.
+//! 3. **Evaluate** perplexity FP vs LCD through the `nll` / `lut_nll`
+//!    artifacts (the latter runs the Pallas smooth-quant + bucket-LUT
+//!    kernels lowered into XLA).
+//! 4. **Serve** batched generation requests through the coordinator and
+//!    report latency/throughput.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example e2e_lcd`
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use lcd::config::LcdConfig;
+use lcd::coordinator::server;
+use lcd::data::{CharTokenizer, CorpusSpec, SyntheticCorpus};
+use lcd::model::WeightStore;
+use lcd::pipeline::{compress_model, train_model, ModelRunner};
+use lcd::repro::shared::build_engine;
+use lcd::runtime::Runtime;
+use lcd::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = LcdConfig::default();
+    cfg.train_steps = std::env::var("LCD_E2E_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(800);
+    let mut rng = Rng::new(cfg.seed);
+
+    // ---------------------------------------------------------- 1. train
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let runner = ModelRunner::new(&rt, &cfg)?;
+    println!(
+        "[1/4] training {} ({} params) for {} steps on the synthetic corpus",
+        runner.stem,
+        runner.spec.params.iter().map(|p| p.shape.iter().product::<usize>()).sum::<usize>(),
+        cfg.train_steps
+    );
+    let corpus = SyntheticCorpus::generate(CorpusSpec { seed: cfg.seed ^ 0x5eed, sentences: 6000, zipf_s: 1.1 });
+    let (train_stream, eval_stream) = corpus.split(0.08);
+    let mut store = WeightStore::init(&runner.spec, &mut rng);
+    let t0 = std::time::Instant::now();
+    let log = train_model(&runner, &mut store, &train_stream, cfg.train_steps, cfg.train_lr, &mut rng)?;
+    let train_secs = t0.elapsed().as_secs_f64();
+    for (i, chunk) in log.losses.chunks((cfg.train_steps / 10).max(1)).enumerate() {
+        let mean: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        println!("  step {:>5}: loss {:.4}", i * (cfg.train_steps / 10).max(1), mean);
+    }
+    println!("  trained in {train_secs:.1}s ({:.1} steps/s)", cfg.train_steps as f64 / train_secs);
+
+    // ------------------------------------------------------- 2. compress
+    println!("[2/4] LCD compression (calibrate -> smooth -> DBCI -> distill -> LUT)");
+    let calib: Vec<Vec<i32>> = (0..cfg.calib_batches)
+        .map(|_| lcd::data::sample_lm_batch(&train_stream, runner.spec.batch, runner.spec.seq, &mut rng).tokens)
+        .collect();
+    let t0 = std::time::Instant::now();
+    let cm = compress_model(&runner, &cfg, &store, &calib)?;
+    println!(
+        "  {} layers -> avg {:.2} centroids ({:.2} bits), {} KiB packed (in {:.1}s)",
+        cm.layers.len(),
+        cm.avg_centroids(),
+        cm.avg_bits(),
+        cm.weight_bytes() / 1024,
+        t0.elapsed().as_secs_f64()
+    );
+    for r in &cm.reports {
+        println!(
+            "    {:<10} k={:<3} mse={:.2e} s_m={:.4} (smooth mse {:.2e} vs raw {:.2e})",
+            r.name, r.k, r.mse, r.s_m, r.smooth_mse, r.smooth_mse_unsmoothed
+        );
+    }
+
+    // ----------------------------------------------------------- 3. eval
+    println!("[3/4] perplexity through the AOT artifacts");
+    let batches = lcd::data::eval_lm_batches(&eval_stream, runner.spec.batch, runner.spec.seq);
+    let mut nll_fp = |b: &lcd::data::LmBatch| runner.nll(&store, b);
+    let ppl_fp = lcd::eval::perplexity(&batches, &mut nll_fp)?;
+    let mut nll_lut = |b: &lcd::data::LmBatch| runner.lut_nll(&cm, b, None);
+    let ppl_lut = lcd::eval::perplexity(&batches, &mut nll_lut)?;
+    println!(
+        "  FP ppl {:.3}   LCD ppl {:.3}  ({:+.1}% at {:.2} bits + INT{} acts)",
+        ppl_fp,
+        ppl_lut,
+        (ppl_lut / ppl_fp - 1.0) * 100.0,
+        cm.avg_bits(),
+        cm.act_bits
+    );
+
+    // ---------------------------------------------------------- 4. serve
+    println!("[4/4] batched serving through the coordinator (lut engine)");
+    // The serving engine rebuilds its own runtime inside the worker
+    // thread; it reuses the checkpoint via the shared cache path, so save
+    // the weights where build_engine's train_or_load looks.
+    let ckpt_dir = format!("{}/checkpoints", cfg.artifacts_dir);
+    std::fs::create_dir_all(&ckpt_dir).ok();
+    store.save(&format!("{ckpt_dir}/{}_s{}_t{}.lcdw", runner.stem, cfg.seed, cfg.train_steps))?;
+    drop(rt);
+
+    let cfg2 = cfg.clone();
+    let handle = server::start(cfg.serve.max_batch, cfg.serve.queue_cap, move || {
+        build_engine(&cfg2, "lut")
+    });
+    let tok = CharTokenizer::new();
+    let prompts = ["the cat ", "a bird moves ", "two plus three is ", "the river is "];
+    let mut rxs = Vec::new();
+    for i in 0..24 {
+        rxs.push(handle.submit(tok.encode(prompts[i % prompts.len()]), 16));
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        if i < 4 {
+            println!("  '{}' -> '{}'", prompts[i % prompts.len()], tok.decode(&resp.tokens));
+        }
+    }
+    let snap = handle.shutdown();
+    println!("  {}", snap.report());
+    println!("e2e OK");
+    Ok(())
+}

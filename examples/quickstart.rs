@@ -1,0 +1,77 @@
+//! Quickstart: LCD on a single weight matrix, no artifacts needed.
+//!
+//! Demonstrates the core API: DBCI initialization, Hessian-guided
+//! distillation with progressive + speculative centroid optimization,
+//! LUT compilation, and the bucket-LUT GEMM — all host-side.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lcd::clustering::{dbci_init, DbciParams};
+use lcd::distill::{distill_layer, DistillConfig};
+use lcd::hessian::HessianDiag;
+use lcd::lut::{lut_gemm_bucket, lut_gemm_fp_ref, quantize_input, LutLayer};
+use lcd::quant::{quant_symmetric, QuantSpec};
+use lcd::tensor::Matrix;
+use lcd::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+    let (d_in, d_out) = (256, 128);
+
+    // An LLM-like weight matrix: Gaussian bulk + heavy outlier tail.
+    let weights: Vec<f32> = (0..d_in * d_out)
+        .map(|_| {
+            if rng.uniform() < 0.01 {
+                rng.normal_scaled(0.0, 0.4)
+            } else {
+                rng.normal_scaled(0.0, 0.05)
+            }
+        })
+        .collect();
+
+    // Calibration activations -> diagonal Hessian.
+    let acts = Matrix { rows: 512, cols: d_in, data: rng.normal_vec(512 * d_in, 0.0, 0.5) };
+    let hdiag = HessianDiag::from_activations(&acts, 0.01);
+    let h = hdiag.per_weight(d_out);
+
+    // 1. DBCI initialization (paper §3.1).
+    let (init, report) = dbci_init(&weights, &DbciParams::default());
+    println!("DBCI: σ={:.4} eps={:.5} MinPts={} -> {} initial centroids", report.sigma, report.eps, report.min_pts, init.k());
+
+    // 2. Distillation with progressive + speculative optimization (§3.2-3.3).
+    let out = distill_layer(&weights, &h, &DistillConfig::default());
+    println!(
+        "distilled: {} -> {} centroids in {} steps (final Eq.4 loss {:.3e})",
+        init.k(),
+        out.clustering.k(),
+        out.steps,
+        out.final_loss
+    );
+
+    // Compare against 4-bit RTN at equal-ish bits.
+    let rtn = quant_symmetric(&weights, QuantSpec { bits: 4, symmetric: true });
+    println!(
+        "reconstruction MSE: LCD({} centroids) {:.3e}  vs  RTN-4bit(16 levels) {:.3e}",
+        out.clustering.k(),
+        out.clustering.mse(&weights),
+        rtn.mse(&weights)
+    );
+
+    // 3. LUT compile + bucket GEMM (§4).
+    let layer = LutLayer::compile(&out.clustering, d_in, d_out, 1.0, 0.02)?;
+    let x = rng.normal_vec(4 * d_in, 0.0, 1.0);
+    let q = quantize_input(&x, layer.input_inv_scale);
+    let y = lut_gemm_bucket(&q, 4, &layer);
+    let y_ref = lut_gemm_fp_ref(&q, 4, &layer);
+    let err = lcd::util::max_abs_diff(&y.data, &y_ref.data);
+    println!(
+        "bucket-LUT GEMM: {}x{} @ batch 4, {:.1}x compressed vs fp16, max |Δ| vs reference {:.2e}",
+        d_in,
+        d_out,
+        layer.compression_vs_fp16(),
+        err
+    );
+    assert!(err < 1e-3);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Serving benchmark: drive the coordinator with a Poisson-ish open-loop
+//! request stream against the FP and LUT engines, reporting the paper's
+//! serving metrics (p50/p99 latency, TTFT, throughput, rejects).
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_bench [requests] [gen_tokens]`
+
+use lcd::config::LcdConfig;
+use lcd::coordinator::server;
+use lcd::data::CharTokenizer;
+use lcd::repro::shared::build_engine;
+use lcd::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let gen_tokens: usize =
+        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let cfg = LcdConfig::default();
+    let tok = CharTokenizer::new();
+    let prompts =
+        ["the cat ", "a bird moves ", "two plus three is ", "the river is ", "every lamp "];
+
+    for engine in ["fp", "lut"] {
+        let cfg2 = cfg.clone();
+        let engine_name = engine.to_string();
+        let handle = server::start(cfg.serve.max_batch, cfg.serve.queue_cap, move || {
+            build_engine(&cfg2, &engine_name)
+        });
+
+        // Open-loop arrivals: exponential inter-arrival times at a rate
+        // the single-core engine can sustain (~50 req/s for fp).
+        let mut rng = Rng::new(99);
+        let mut rxs = Vec::new();
+        for i in 0..n_requests {
+            let p = tok.encode(prompts[i % prompts.len()]);
+            rxs.push(handle.submit(p, gen_tokens));
+            let wait_us = (-(rng.uniform().max(1e-9)).ln() * 20_000.0) as u64;
+            std::thread::sleep(std::time::Duration::from_micros(wait_us.min(100_000)));
+        }
+        let mut ok = 0usize;
+        for rx in rxs {
+            if rx.recv().is_ok() {
+                ok += 1;
+            }
+        }
+        let snap = handle.shutdown();
+        println!("engine {engine:<4} ({ok}/{n_requests} ok): {}", snap.report());
+    }
+    Ok(())
+}

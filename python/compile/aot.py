@@ -1,0 +1,311 @@
+"""AOT lowering: JAX models -> HLO text artifacts + manifest.json.
+
+Run once by ``make artifacts``; the rust binary is self-contained
+afterwards. HLO *text* is the interchange format (NOT serialized
+HloModuleProto): jax >= 0.5 emits 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md and aot_recipe notes.
+
+Artifacts per model m (gpt_mini, llama_mini, bert_mini):
+  fwd_m         (params..., tokens)                        -> (logits,)
+  nll_m         (params..., tokens, targets, mask)         -> (sum_nll, count)
+  train_step_m  (params..., momenta..., tokens, targets,
+                 mask, lr)                                 -> (params..., momenta..., loss)
+  calib_m       (params..., tokens)                        -> (per-linear activations...)
+  lut_fwd_m     (nonlinear params..., per-linear
+                 [centroids, idx, inv_s, out_s]..., tokens,
+                 qmax)                                     -> (logits,)
+  lut_nll_m     (... same + targets, mask)                 -> (sum_nll, count)
+(bert uses labels[B] instead of targets+mask.)
+
+Standalone kernel artifacts (microbench / cross-validation from rust):
+  k_lut_gemm, k_smooth_quant, k_hessian_diag, k_cluster_assign.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model as M  # noqa: E402
+from compile.kernels import cluster_assign, hessian_diag, lut_gemm, smooth_quant  # noqa: E402
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def tensor_spec(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": "i32" if dtype == I32 else "f32"}
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.artifacts = {}
+
+    def emit(self, name, fn, inputs, output_names):
+        """Lower `fn(*arrays)` over `inputs` = [(name, shape, dtype)]."""
+        arg_specs = [spec(s, d) for (_, s, d) in inputs]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        # Output shapes from the lowered signature.
+        out_avals = jax.eval_shape(fn, *arg_specs)
+        if not isinstance(out_avals, tuple):
+            out_avals = (out_avals,)
+        assert len(out_avals) == len(output_names), (
+            f"{name}: {len(out_avals)} outputs vs {len(output_names)} names"
+        )
+        self.artifacts[name] = {
+            "file": fname,
+            "inputs": [tensor_spec(n, s, d) for (n, s, d) in inputs],
+            "outputs": [
+                tensor_spec(n, a.shape, I32 if a.dtype == jnp.int32 else F32)
+                for n, a in zip(output_names, out_avals)
+            ],
+        }
+        print(f"  {name}: {len(text)} chars, {len(inputs)} in / {len(output_names)} out")
+
+
+def model_param_inputs(cfg, prefix=""):
+    return [(prefix + s.name, s.shape, F32) for s in M.param_specs(cfg)]
+
+
+def data_inputs(cfg):
+    b, s = cfg.batch, cfg.seq
+    if cfg.kind == "bert":
+        return [("tokens", (b, s), I32), ("labels", (b,), I32)]
+    return [("tokens", (b, s), I32), ("targets", (b, s), I32), ("mask", (b, s), F32)]
+
+
+def emit_model(em: Emitter, cfg):
+    specs = M.param_specs(cfg)
+    names = [s.name for s in specs]
+    n_params = len(names)
+    p_in = model_param_inputs(cfg)
+    d_in = data_inputs(cfg)
+    n_data = len(d_in)
+
+    def to_params(args):
+        return dict(zip(names, args[:n_params]))
+
+    # fwd
+    def fwd_fn(*args):
+        params = to_params(args)
+        tokens = args[n_params]
+        return (M.fwd(cfg, params, tokens),)
+
+    em.emit(f"fwd_{cfg.name}", fwd_fn, p_in + [d_in[0]], ["logits"])
+
+    # nll
+    def nll_fn(*args):
+        params = to_params(args)
+        data = args[n_params:]
+        if cfg.kind == "bert":
+            s, c = M.nll_bert(cfg, params, *data)
+        else:
+            s, c = M.nll(cfg, params, *data)
+        return (s.reshape(1), c.reshape(1))
+
+    em.emit(f"nll_{cfg.name}", nll_fn, p_in + d_in, ["sum_nll", "count"])
+
+    # train_step
+    m_in = [(f"m.{n}", s, F32) for (n, s, _) in p_in]
+
+    def train_fn(*args):
+        params = to_params(args)
+        momenta = dict(zip(names, args[n_params : 2 * n_params]))
+        data = args[2 * n_params : 2 * n_params + n_data]
+        lr = args[2 * n_params + n_data]
+        new_p, new_m, loss = M.train_step(cfg, params, momenta, data, lr)
+        return tuple(new_p[n] for n in names) + tuple(new_m[n] for n in names) + (
+            loss.reshape(1),
+        )
+
+    em.emit(
+        f"train_step_{cfg.name}",
+        train_fn,
+        p_in + m_in + d_in + [("lr", (1,), F32)],
+        names + [f"m.{n}" for n in names] + ["loss"],
+    )
+
+    # calib
+    def calib_fn(*args):
+        params = to_params(args)
+        tokens = args[n_params]
+        return M.calib(cfg, params, tokens)
+
+    em.emit(
+        f"calib_{cfg.name}",
+        calib_fn,
+        p_in + [d_in[0]],
+        [f"act{i}" for i in range(M.n_linear(cfg))] + ["checksum"],
+    )
+
+    # lut_fwd / lut_nll
+    nonlinear = [s for s in specs if s.linear is None]
+    linears = sorted((s for s in specs if s.linear is not None), key=lambda s: s.linear)
+    nl_in = [(s.name, s.shape, F32) for s in nonlinear]
+    lut_in = []
+    for s in linears:
+        d_in_dim, d_out_dim = s.shape
+        lut_in += [
+            (f"lut{s.linear}.centroids", (M.MAX_CENTROIDS,), F32),
+            (f"lut{s.linear}.idx", (d_in_dim, d_out_dim), I32),
+            (f"lut{s.linear}.inv_s", (1,), F32),
+            (f"lut{s.linear}.out_s", (1,), F32),
+        ]
+    n_nl = len(nl_in)
+    n_lut = len(linears)
+
+    def unpack_lut(args):
+        params = {s.name: args[i] for i, s in enumerate(nonlinear)}
+        lut_params = {}
+        for j in range(n_lut):
+            base = n_nl + 4 * j
+            lut_params[j] = (args[base], args[base + 1], args[base + 2], args[base + 3])
+        rest = args[n_nl + 4 * n_lut :]
+        return params, lut_params, rest
+
+    def lut_fwd_fn(*args):
+        params, lut_params, rest = unpack_lut(args)
+        tokens, qmax = rest
+        return (M.lut_fwd(cfg, params, lut_params, tokens, qmax),)
+
+    em.emit(
+        f"lut_fwd_{cfg.name}",
+        lut_fwd_fn,
+        nl_in + lut_in + [d_in[0], ("qmax", (1,), F32)],
+        ["logits"],
+    )
+
+    def lut_nll_fn(*args):
+        params, lut_params, rest = unpack_lut(args)
+        if cfg.kind == "bert":
+            tokens, labels, qmax = rest
+            s, c = M.lut_nll_bert(cfg, params, lut_params, tokens, labels, qmax)
+        else:
+            tokens, targets, mask, qmax = rest
+            s, c = M.lut_nll(cfg, params, lut_params, tokens, targets, mask, qmax)
+        return (s.reshape(1), c.reshape(1))
+
+    em.emit(
+        f"lut_nll_{cfg.name}",
+        lut_nll_fn,
+        nl_in + lut_in + d_in + [("qmax", (1,), F32)],
+        ["sum_nll", "count"],
+    )
+
+
+def emit_kernels(em: Emitter):
+    b, k, n = 64, 128, 256
+
+    def k_lut(q, idx, c):
+        return (lut_gemm(q, idx, c),)
+
+    em.emit(
+        "k_lut_gemm",
+        k_lut,
+        [("q", (b, k), I32), ("idx", (k, n), I32), ("centroids", (M.MAX_CENTROIDS,), F32)],
+        ["y"],
+    )
+
+    def k_sq(x, inv_s, qmax):
+        return (smooth_quant(x, inv_s, qmax),)
+
+    em.emit(
+        "k_smooth_quant",
+        k_sq,
+        [("x", (512, 128), F32), ("inv_s", (1,), F32), ("qmax", (1,), F32)],
+        ["q"],
+    )
+
+    def k_hd(x):
+        return (hessian_diag(x),)
+
+    em.emit("k_hessian_diag", k_hd, [("x", (512, 128), F32)], ["h"])
+
+    def k_ca(w, c):
+        return (cluster_assign(w, c),)
+
+    em.emit(
+        "k_cluster_assign",
+        k_ca,
+        [("w", (4096,), F32), ("centroids", (M.MAX_CENTROIDS,), F32)],
+        ["idx"],
+    )
+
+
+def model_manifest(cfg):
+    return {
+        "kind": cfg.kind,
+        "config": {
+            "batch": cfg.batch,
+            "seq": cfg.seq,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layer": cfg.n_layer,
+            "n_head": cfg.n_head,
+            "d_ff": cfg.d_ff,
+            "n_classes": cfg.n_classes,
+        },
+        "params": [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "init_std": s.init_std,
+                "init_one": s.init_one,
+                "linear": s.linear,
+            }
+            for s in M.param_specs(cfg)
+        ],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output dir")
+    ap.add_argument(
+        "--models", default="gpt_mini,llama_mini,bert_mini", help="comma-separated model list"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out)
+
+    models = {}
+    for name in args.models.split(","):
+        cfg = M.CONFIGS[name]
+        print(f"model {name}:")
+        emit_model(em, cfg)
+        models[name] = model_manifest(cfg)
+    print("kernels:")
+    emit_kernels(em)
+
+    manifest = {"version": 1, "models": models, "artifacts": em.artifacts}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(em.artifacts)} artifacts to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels (interpret mode) + pure-jnp oracles."""
+
+from .cluster_assign import cluster_assign
+from .hessian_diag import hessian_diag
+from .lut_gemm import lut_gemm
+from .smooth_quant import smooth_quant
+from . import ref
+
+__all__ = ["cluster_assign", "hessian_diag", "lut_gemm", "smooth_quant", "ref"]

@@ -1,0 +1,50 @@
+"""Pallas nearest-centroid assignment kernel.
+
+Used by the distillation inner loop (reclassification checks) and by the
+LUT compiler to index weights against a centroid table. Unused table
+slots must be padded with a large sentinel so they never win the argmin.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MAX_CENTROIDS
+
+BLOCK = 1024
+
+
+def _assign_kernel(w_ref, c_ref, o_ref):
+    w = w_ref[...]  # [BLOCK]
+    c = c_ref[...]  # [16]
+    d = jnp.abs(w[:, None] - c[None, :])
+    o_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cluster_assign(w, centroids):
+    """Nearest-centroid index per weight.
+
+    Args:
+      w: f32[N] flat weights (N padded to a BLOCK multiple by the caller
+        or handled by the grid's final partial tile).
+      centroids: f32[16], unused slots = 1e30.
+
+    Returns:
+      int32[N].
+    """
+    (n,) = w.shape
+    grid = (pl.cdiv(n, BLOCK),)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((MAX_CENTROIDS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(w, centroids)

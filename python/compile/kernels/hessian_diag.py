@@ -1,0 +1,55 @@
+"""Pallas diagonal-Hessian accumulation kernel.
+
+Computes ``h[c] = 2 · mean_r x[r, c]²`` over calibration activations —
+the per-input-feature diagonal of the layer-reconstruction Hessian
+(paper §3.2). Tiled over rows with an accumulating output block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+
+
+def _hessian_kernel(x_ref, o_ref, *, n_rows):
+    step = pl.program_id(0)
+    x = x_ref[...]
+    partial = jnp.sum(x * x, axis=0) * (2.0 / n_rows)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(step > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hessian_diag(x):
+    """Diagonal Hessian estimate.
+
+    Args:
+      x: f32[R, C] calibration activations.
+
+    Returns:
+      f32[C]: ``2 · mean_r x²``.
+    """
+    r, c = x.shape
+    # Pad rows to a BLOCK_R multiple: interpret-mode partial tiles are
+    # not masked, and zero rows don't perturb the sum (the mean divides
+    # by the true row count).
+    pad = (-r) % BLOCK_R
+    x_padded = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = (pl.cdiv(r, BLOCK_R),)
+    return pl.pallas_call(
+        functools.partial(_hessian_kernel, n_rows=r),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_R, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((c,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(x_padded)

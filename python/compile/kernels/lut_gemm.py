@@ -1,0 +1,89 @@
+"""Pallas bucket-LUT GEMM kernel (paper §4, TPU adaptation).
+
+The GPU paper gathers precomputed ``centroid × activation`` products from
+a lookup table. On TPU the same contraction maps onto the MXU as a pair of
+matmuls (DESIGN.md §Hardware-Adaptation):
+
+    bucket[b, n, j] = Σ_k q[b, k] · onehot(idx[k, n] == j)
+    y[b, n]         = Σ_j bucket[b, n, j] · c[j]
+
+i.e. the one-hot selector *is* the lookup, and the systolic array plays
+the role of the LUT tensor core. The kernel tiles N with a BlockSpec so
+each grid step holds one ``[K, BN, 16]`` selector slab in VMEM.
+
+Always lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU numbers are estimated analytically in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MAX_CENTROIDS
+
+# N-dimension tile. Chosen so the f32 selector slab K×BN×16 stays well
+# under VMEM for the K values the models use (≤ 512): 512·128·16·4B = 4 MiB
+# would be too large on real TPU; the slab is built in chunks of BK rows.
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _lut_gemm_kernel(q_ref, idx_ref, c_ref, o_ref):
+    """One grid step: full B and K, one N tile."""
+    q = q_ref[...].astype(jnp.float32)  # [B, K]
+    idx = idx_ref[...]  # [K, BN]
+    c = c_ref[...]  # [16]
+    k_total = idx.shape[0]
+
+    acc = jnp.zeros((q.shape[0], idx.shape[1]), jnp.float32)
+    # Chunk K so the one-hot selector slab stays VMEM-sized.
+    for k0 in range(0, k_total, BLOCK_K):
+        k1 = min(k0 + BLOCK_K, k_total)
+        idx_blk = idx[k0:k1]  # [bk, BN]
+        q_blk = q[:, k0:k1]  # [B, bk]
+        # Selector: [bk, BN, 16] one-hot over centroid ids.
+        sel = (idx_blk[:, :, None] == jnp.arange(MAX_CENTROIDS)[None, None, :]).astype(
+            jnp.float32
+        )
+        # Bucket sums via MXU: [B, bk] × [bk, BN·16] -> [B, BN, 16].
+        bucket = jax.lax.dot_general(
+            q_blk,
+            sel.reshape(idx_blk.shape[0], -1),
+            (((1,), (0,)), ((), ())),
+        ).reshape(q.shape[0], idx_blk.shape[1], MAX_CENTROIDS)
+        # Centroid contraction: [B, BN, 16] × [16] -> [B, BN].
+        acc = acc + jnp.einsum("bnj,j->bn", bucket, c)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lut_gemm(q, idx, centroids):
+    """Bucket-LUT GEMM: ``y[b,n] = Σ_k centroids[idx[k,n]] · q[b,k]``.
+
+    Args:
+      q: int32[B, K] quantized activations.
+      idx: int32[K, N] centroid indices (0..15).
+      centroids: f32[16].
+
+    Returns:
+      f32[B, N].
+    """
+    b, k = q.shape
+    k2, n = idx.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    grid = (pl.cdiv(n, BLOCK_N),)
+    return pl.pallas_call(
+        _lut_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),  # q: replicated per tile
+            pl.BlockSpec((k, BLOCK_N), lambda i: (0, i)),  # idx: N tiles
+            pl.BlockSpec((MAX_CENTROIDS,), lambda i: (0,)),  # centroids
+        ],
+        out_specs=pl.BlockSpec((b, BLOCK_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(q, idx, centroids)

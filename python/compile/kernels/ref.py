@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness anchors: every Pallas kernel in this
+package must match its oracle bit-for-bit (integer ops) or to float32
+tolerance (accumulations) across the hypothesis sweeps in
+``python/tests/test_kernels.py``.
+"""
+
+import jax.numpy as jnp
+
+MAX_CENTROIDS = 16
+
+
+def lut_gemm_ref(q, idx, centroids):
+    """Bucket-LUT GEMM reference.
+
+    Args:
+      q: int32[B, K] quantized activations (symmetric INT8 range).
+      idx: int32[K, N] centroid index per weight (0..15).
+      centroids: f32[16] centroid table (padded with zeros).
+
+    Returns:
+      f32[B, N]: ``y[b, n] = sum_k centroids[idx[k, n]] * q[b, k]``.
+    """
+    w = centroids[idx]  # [K, N] dense reconstruction
+    return q.astype(jnp.float32) @ w
+
+
+def smooth_quant_ref(x, inv_scale, qmax):
+    """Fused smooth+quantize (paper Eq. 11).
+
+    ``q = clip(round(x * inv_scale), -qmax-1, qmax)`` as int32.
+    ``inv_scale`` folds ``1/(s_m * s_q)`` into one multiplier.
+    """
+    q = jnp.round(x * inv_scale)
+    return jnp.clip(q, -qmax - 1.0, qmax).astype(jnp.int32)
+
+
+def cluster_assign_ref(w, centroids):
+    """Nearest-centroid assignment.
+
+    Args:
+      w: f32[N] weights.
+      centroids: f32[16] table; unused tail entries must be padded with
+        a large sentinel (1e30) by the caller so they never win.
+
+    Returns:
+      int32[N] index of the nearest centroid (ties -> lowest index).
+    """
+    d = jnp.abs(w[:, None] - centroids[None, :])
+    return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def hessian_diag_ref(x):
+    """Diagonal Hessian estimate from calibration activations.
+
+    Args:
+      x: f32[R, C] inputs to a linear layer (rows = samples).
+
+    Returns:
+      f32[C]: ``h[c] = 2 * mean_r x[r, c]^2``.
+    """
+    return 2.0 * jnp.mean(x * x, axis=0)

@@ -1,0 +1,51 @@
+"""Pallas fused smooth+quantize kernel (paper Eq. 11).
+
+The input-transformation stage of the LUT inference system: the smoothing
+division and the quantization step collapse into a single multiply by
+``inv_scale = 1/(s_m · s_q)`` followed by round + clip. One elementwise
+pass, tiled over rows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 128
+
+
+def _smooth_quant_kernel(x_ref, s_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    inv_scale = s_ref[0]
+    qmax = qmax_ref[0]
+    q = jnp.round(x * inv_scale)
+    o_ref[...] = jnp.clip(q, -qmax - 1.0, qmax).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def smooth_quant(x, inv_scale, qmax):
+    """Quantize ``x`` (f32[R, C]) to int32 codes with the fused multiplier.
+
+    Args:
+      x: f32[R, C].
+      inv_scale: f32[1] — ``1/(s_m · s_q)``.
+      qmax: f32[1] — clip ceiling (127 for INT8, 7 for INT4).
+
+    Returns:
+      int32[R, C] codes in ``[-qmax-1, qmax]``.
+    """
+    r, c = x.shape
+    grid = (pl.cdiv(r, BLOCK_R),)
+    return pl.pallas_call(
+        _smooth_quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, c), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        interpret=True,
+    )(x, inv_scale, qmax)

@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/values; integer kernels must match exactly,
+accumulating kernels to f32 tolerance. This is the build-time gate that
+makes the AOT artifacts trustworthy.
+"""
+
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.kernels import cluster_assign, hessian_diag, lut_gemm, smooth_quant  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- lut_gemm
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 9),
+    k=st.integers(1, 200),
+    n=st.integers(1, 300),
+    k_used=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_lut_gemm_matches_ref(b, k, n, k_used, seed):
+    rng = rng_for(seed)
+    q = rng.integers(-128, 128, (b, k)).astype(np.int32)
+    idx = rng.integers(0, k_used, (k, n)).astype(np.int32)
+    c = np.zeros(16, np.float32)
+    c[:k_used] = rng.normal(0, 0.1, k_used).astype(np.float32)
+    y = lut_gemm(jnp.array(q), jnp.array(idx), jnp.array(c))
+    y_ref = ref.lut_gemm_ref(jnp.array(q), jnp.array(idx), jnp.array(c))
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), rtol=1e-4, atol=1e-3)
+
+
+def test_lut_gemm_zero_centroids_gives_zero():
+    q = np.full((2, 8), 100, np.int32)
+    idx = np.zeros((8, 4), np.int32)
+    y = lut_gemm(jnp.array(q), jnp.array(idx), jnp.zeros(16, jnp.float32))
+    assert np.all(np.array(y) == 0.0)
+
+
+def test_lut_gemm_bucket_semantics():
+    # Two centroids; output = c0 * (sum of q where idx==0) + c1 * (...).
+    q = np.array([[1, 2, 3, 4]], np.int32)
+    idx = np.array([[0], [1], [0], [1]], np.int32)  # K=4, N=1
+    c = np.zeros(16, np.float32)
+    c[0], c[1] = 10.0, -1.0
+    y = np.array(lut_gemm(jnp.array(q), jnp.array(idx), jnp.array(c)))
+    assert y.shape == (1, 1)
+    assert y[0, 0] == 10.0 * (1 + 3) - 1.0 * (2 + 4)
+
+
+# ------------------------------------------------------------ smooth_quant
+
+
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 300),
+    c=st.integers(1, 64),
+    inv_scale=st.floats(1e-3, 1e3),
+    qmax=st.sampled_from([7.0, 127.0]),
+    seed=st.integers(0, 2**31),
+)
+def test_smooth_quant_matches_ref(r, c, inv_scale, qmax, seed):
+    rng = rng_for(seed)
+    x = rng.normal(0, 2.0, (r, c)).astype(np.float32)
+    q = smooth_quant(jnp.array(x), jnp.array([inv_scale], jnp.float32), jnp.array([qmax], jnp.float32))
+    q_ref = ref.smooth_quant_ref(jnp.array(x), inv_scale, qmax)
+    np.testing.assert_array_equal(np.array(q), np.array(q_ref))
+
+
+def test_smooth_quant_clips_to_range():
+    x = np.array([[1e9, -1e9, 0.0, 0.4, -0.6]], np.float32)
+    q = np.array(
+        smooth_quant(jnp.array(x), jnp.array([1.0], jnp.float32), jnp.array([127.0], jnp.float32))
+    )
+    assert q.max() == 127 and q.min() == -128
+    assert q[0, 2] == 0 and q[0, 3] == 0 and q[0, 4] == -1
+
+
+# ---------------------------------------------------------- cluster_assign
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 5000), k=st.integers(1, 16), seed=st.integers(0, 2**31))
+def test_cluster_assign_matches_ref(n, k, seed):
+    rng = rng_for(seed)
+    w = rng.normal(0, 0.1, n).astype(np.float32)
+    c = np.full(16, 1e30, np.float32)
+    c[:k] = np.sort(rng.normal(0, 0.1, k)).astype(np.float32)
+    a = cluster_assign(jnp.array(w), jnp.array(c))
+    a_ref = ref.cluster_assign_ref(jnp.array(w), jnp.array(c))
+    np.testing.assert_array_equal(np.array(a), np.array(a_ref))
+    assert np.array(a).max() < k
+
+
+def test_cluster_assign_is_nearest():
+    w = np.array([-1.0, -0.1, 0.05, 2.0], np.float32)
+    c = np.full(16, 1e30, np.float32)
+    c[:3] = [-1.0, 0.0, 1.0]
+    a = np.array(cluster_assign(jnp.array(w), jnp.array(c)))
+    np.testing.assert_array_equal(a, [0, 1, 1, 2])
+
+
+# ----------------------------------------------------------- hessian_diag
+
+
+@settings(**SETTINGS)
+@given(r=st.integers(1, 1200), c=st.integers(1, 96), seed=st.integers(0, 2**31))
+def test_hessian_diag_matches_ref(r, c, seed):
+    rng = rng_for(seed)
+    x = rng.normal(0, 1.0, (r, c)).astype(np.float32)
+    h = hessian_diag(jnp.array(x))
+    h_ref = ref.hessian_diag_ref(jnp.array(x))
+    np.testing.assert_allclose(np.array(h), np.array(h_ref), rtol=1e-4, atol=1e-5)
+
+
+def test_hessian_diag_known_values():
+    x = np.array([[1.0, 2.0], [3.0, 4.0]], np.float32)
+    h = np.array(hessian_diag(jnp.array(x)))
+    np.testing.assert_allclose(h, [10.0, 20.0], rtol=1e-6)
+
+
+def test_hessian_diag_nonnegative():
+    rng = rng_for(7)
+    x = rng.normal(0, 3.0, (333, 17)).astype(np.float32)
+    h = np.array(hessian_diag(jnp.array(x)))
+    assert (h >= 0).all()

@@ -1,0 +1,40 @@
+//! Clustering substrate benchmarks: DBCI vs k-means(++) vs plain DBSCAN
+//! over layer-sized weight vectors.
+
+use lcd::clustering::{dbci_init, dbscan_1d, kmeans_1d, DbciParams};
+use lcd::util::bench::Bencher;
+use lcd::util::Rng;
+
+fn llm_like(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if rng.uniform() < 0.01 {
+                rng.normal_scaled(0.0, 0.4)
+            } else {
+                rng.normal_scaled(0.0, 0.05)
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rng = Rng::new(2);
+    for n in [16_384usize, 65_536, 262_144] {
+        let w = llm_like(&mut rng, n);
+        let mut sorted = w.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        b.bench(&format!("dbci/{n}"), || {
+            let (cl, _) = dbci_init(&w, &DbciParams::default());
+            cl.k() as f64
+        });
+        b.bench(&format!("kmeans16/{n}"), || {
+            let mut r = Rng::new(3);
+            kmeans_1d(&w, 16, 25, &mut r).clustering.k() as f64
+        });
+        b.bench(&format!("dbscan/{n}"), || {
+            dbscan_1d(&sorted, 0.01, 8).n_clusters as f64
+        });
+    }
+    b.finish("clustering");
+}

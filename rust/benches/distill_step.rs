@@ -1,0 +1,32 @@
+//! Distillation throughput: cost of one Hessian-guided step and of a full
+//! layer distillation at gpt-mini layer sizes (the paper's Limitations
+//! section concedes training-time cost — this quantifies ours).
+
+use lcd::distill::{DistillConfig, Distiller};
+use lcd::util::bench::Bencher;
+use lcd::util::Rng;
+
+fn layer(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let w = rng.normal_vec(n, 0.0, 0.05);
+    let h: Vec<f32> = (0..n).map(|_| 0.5 + rng.uniform() as f32).collect();
+    (w, h)
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rng = Rng::new(4);
+    for n in [16_384usize, 49_152, 131_072] {
+        let (w, h) = layer(&mut rng, n);
+        b.bench(&format!("step_once/{n}"), || {
+            let mut d = Distiller::new(&w, &h, DistillConfig::default());
+            d.step_once();
+            d.loss_per_weight()
+        });
+        b.bench(&format!("full_distill_100steps/{n}"), || {
+            let cfg = DistillConfig { max_steps: 100, ..Default::default() };
+            let out = Distiller::new(&w, &h, cfg).run(None);
+            out.clustering.k() as f64
+        });
+    }
+    b.finish("distill_step");
+}

@@ -1,0 +1,16 @@
+//! Fig. 6 as a bench target: end-to-end linear-stack speedup of LCD's
+//! bucket-LUT engine vs TVM-style FP, QServe-style W4A8 and LUT-NN, on
+//! the three model families. Delegates to the repro harness so
+//! `cargo bench --bench fig6_speedup` and `lcd repro --exp fig6` print
+//! identical series. Requires `make artifacts` + trained checkpoints
+//! (trains them on first run).
+
+use lcd::config::LcdConfig;
+
+fn main() {
+    let cfg = LcdConfig::default();
+    if let Err(e) = lcd::repro::fig6::run(&cfg) {
+        eprintln!("fig6 bench requires artifacts (`make artifacts`): {e:#}");
+        std::process::exit(0); // don't fail `cargo bench` in lib-only setups
+    }
+}

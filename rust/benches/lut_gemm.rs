@@ -1,0 +1,72 @@
+//! LUT-GEMM kernel microbenchmarks (the §5.2 kernel-level speedup claim).
+//!
+//! Races the three LUT execution strategies against the FP baselines over
+//! an (m, k, n) sweep and a centroid-count sweep — the latter reproduces
+//! the paper's observation that more centroids reduce lookup efficiency.
+
+use lcd::baselines::{qserve_gemm, QserveLayer};
+use lcd::clustering::kmeans_1d;
+use lcd::lut::{
+    lut_gemm_bucket, lut_gemm_table, lut_gemm_table_sym, LutLayer, ProductTable, SimdLutLayer,
+    SimdScratch,
+};
+use lcd::tensor::{gemm_blocked, gemm_naive, Matrix};
+use lcd::util::bench::Bencher;
+use lcd::util::Rng;
+
+fn make(rng: &mut Rng, d_in: usize, d_out: usize, k: usize) -> (LutLayer, Vec<i8>, Matrix, Matrix) {
+    let w = rng.normal_vec(d_in * d_out, 0.0, 0.05);
+    let km = kmeans_1d(&w, k, 25, rng);
+    let layer = LutLayer::compile(&km.clustering, d_in, d_out, 1.0, 0.02).unwrap();
+    let batch = 64usize;
+    let x = Matrix { rows: batch, cols: d_in, data: rng.normal_vec(batch * d_in, 0.0, 0.5) };
+    let q = lcd::lut::quantize_input(&x.data, layer.input_inv_scale);
+    let wm = Matrix { rows: d_in, cols: d_out, data: w };
+    (layer, q, x, wm)
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut b = Bencher::from_env();
+    println!("== lut_gemm: strategy race (batch 64) ==");
+    for &(d_in, d_out) in &[(256usize, 256usize), (512, 512), (1024, 1024)] {
+        let (layer, q, x, wm) = make(&mut rng, d_in, d_out, 8);
+        let table = ProductTable::build(&layer.centroids);
+        let batch = 64;
+        b.bench(&format!("fp_naive/{d_in}x{d_out}"), || {
+            gemm_naive(&x, &wm).data[0] as f64
+        });
+        b.bench(&format!("fp_blocked/{d_in}x{d_out}"), || {
+            gemm_blocked(&x, &wm).data[0] as f64
+        });
+        let qs = QserveLayer::compile(&wm, 64, 0.02);
+        b.bench(&format!("qserve_w4a8/{d_in}x{d_out}"), || {
+            qserve_gemm(&q, batch, &qs).data[0] as f64
+        });
+        b.bench(&format!("lut_table/{d_in}x{d_out}"), || {
+            lut_gemm_table(&q, batch, &layer, &table).data[0] as f64
+        });
+        b.bench(&format!("lut_table_sym/{d_in}x{d_out}"), || {
+            lut_gemm_table_sym(&q, batch, &layer, &table).data[0] as f64
+        });
+        b.bench(&format!("lut_bucket/{d_in}x{d_out}"), || {
+            lut_gemm_bucket(&q, batch, &layer).data[0] as f64
+        });
+        let simd = SimdLutLayer::compile(&layer);
+        let mut scratch = SimdScratch::default();
+        b.bench(&format!("lut_simd/{d_in}x{d_out}"), || {
+            simd.gemm(&q, batch, &mut scratch).data[0] as f64
+        });
+        b.speedup(&format!("lut_bucket/{d_in}x{d_out}"), &format!("fp_naive/{d_in}x{d_out}"));
+        b.speedup(&format!("lut_simd/{d_in}x{d_out}"), &format!("fp_blocked/{d_in}x{d_out}"));
+    }
+
+    println!("== lut_gemm: centroid-count sweep (512x512) ==");
+    for k in [2usize, 4, 8, 16] {
+        let (layer, q, _, _) = make(&mut rng, 512, 512, k);
+        b.bench(&format!("lut_bucket/k{k}"), || {
+            lut_gemm_bucket(&q, 64, &layer).data[0] as f64
+        });
+    }
+    b.finish("lut_gemm");
+}

@@ -1,0 +1,90 @@
+//! Coordinator benchmarks: batcher admission throughput and end-to-end
+//! decode-loop latency with a host mock engine (isolates scheduling
+//! overhead from model math; the artifact-backed numbers live in
+//! `examples/serve_bench.rs`).
+
+use lcd::coordinator::server::{serve_blocking, Engine};
+use lcd::coordinator::Batcher;
+use lcd::coordinator::GenRequest;
+use lcd::util::bench::Bencher;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+/// Fixed-cost mock engine: simulates a forward pass with a configurable
+/// busy-wait so batching efficiency shows up in tokens/sec.
+struct MockEngine {
+    b: usize,
+    s: usize,
+    v: usize,
+    cost_us: u64,
+}
+
+impl Engine for MockEngine {
+    fn batch(&self) -> usize {
+        self.b
+    }
+    fn seq(&self) -> usize {
+        self.s
+    }
+    fn vocab(&self) -> usize {
+        self.v
+    }
+    fn name(&self) -> &str {
+        "mock"
+    }
+    fn forward(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        let t0 = Instant::now();
+        while t0.elapsed().as_micros() < self.cost_us as u128 {
+            std::hint::spin_loop();
+        }
+        let mut logits = vec![0.0f32; self.b * self.s * self.v];
+        for (i, &t) in tokens.iter().enumerate() {
+            logits[i * self.v + ((t as usize + 1) % self.v)] = 1.0;
+        }
+        Ok(logits)
+    }
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    // Batcher admission: submissions + slot fills per second.
+    b.bench("batcher_submit_fill/1024", || {
+        let mut batcher = Batcher::new(8, 2048);
+        let (tx, _rx) = channel();
+        for i in 0..1024u64 {
+            let ok = batcher.submit(GenRequest {
+                id: i,
+                prompt: vec![1, 2, 3],
+                gen_tokens: 4,
+                reply: tx.clone(),
+                t_submit: Instant::now(),
+            });
+            debug_assert!(ok);
+        }
+        let mut filled = 0usize;
+        while batcher.pending() > 0 {
+            filled += batcher.fill_slots(64);
+            for (_, s) in batcher.sessions_mut() {
+                for _ in 0..4 {
+                    s.push_token(1, 64);
+                }
+            }
+            batcher.take_done();
+        }
+        filled as f64
+    });
+
+    // End-to-end decode loop at two simulated forward costs.
+    for cost_us in [50u64, 500] {
+        b.bench(&format!("serve_64reqs_cost{cost_us}us"), || {
+            let engine = MockEngine { b: 8, s: 64, v: 96, cost_us };
+            let reqs: Vec<(Vec<i32>, usize)> =
+                (0..64).map(|i| (vec![(i % 90) as i32 + 1; 8], 8)).collect();
+            let (resps, snap) = serve_blocking(engine, reqs, 8).unwrap();
+            debug_assert_eq!(resps.len(), 64);
+            snap.tokens_per_sec
+        });
+    }
+    b.finish("serving");
+}

@@ -1,0 +1,31 @@
+//! Smoothing + activation quantization benchmarks: the adaptive search
+//! (offline cost) and the fused Eq. 11 input transform (request-path
+//! cost).
+
+use lcd::quant::{quant_act_i8, ActBits};
+use lcd::smooth::{adaptive_smooth, SmoothSearch};
+use lcd::util::bench::Bencher;
+use lcd::util::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rng = Rng::new(5);
+    for n in [32_768usize, 131_072] {
+        let mut x = rng.normal_vec(n, 0.0, 0.1);
+        for i in 0..n / 200 {
+            x[i * 200] = rng.normal_scaled(0.0, 4.0);
+        }
+        b.bench(&format!("adaptive_search/{n}"), || {
+            adaptive_smooth(&x, &SmoothSearch::default()).s_m as f64
+        });
+        b.bench(&format!("fused_quant_int8/{n}"), || {
+            let q = quant_act_i8(&x, 12.5, ActBits::Int8);
+            q[0] as f64
+        });
+        b.bench(&format!("fused_quant_int4/{n}"), || {
+            let q = quant_act_i8(&x, 0.8, ActBits::Int4);
+            q[0] as f64
+        });
+    }
+    b.finish("smooth_quant");
+}

@@ -1,0 +1,186 @@
+//! LUT-NN-style baseline (Tang et al. 2023).
+//!
+//! LUT-NN learns centroids over *input sub-vectors* (product quantization)
+//! and replaces inference with table lookups indexed by the nearest
+//! centroid of each activation sub-vector. Compared to LCD it (a) clusters
+//! activations rather than weights, so the lookup index must be computed
+//! online with a nearest-centroid search, and (b) keeps a large per-layer
+//! table (out_features × n_subvectors × n_centroids). Both costs are what
+//! Fig. 6 shows LCD beating; this module reproduces them faithfully at
+//! small scale.
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// LUT-NN layer: product-quantized activations against dense weights.
+#[derive(Clone, Debug)]
+pub struct LutNnLayer {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Sub-vector length (v). d_in must be divisible by v.
+    pub subvec: usize,
+    /// Number of activation centroids per sub-space (k).
+    pub k: usize,
+    /// Centroids: `[n_sub][k][subvec]`.
+    centroids: Vec<f32>,
+    /// Precomputed tables: `[n_sub][k][d_out]` — the dot product of every
+    /// centroid with every output's weight slice.
+    table: Vec<f32>,
+}
+
+impl LutNnLayer {
+    /// Build from dense weights `w` (d_in × d_out) and calibration
+    /// activations (rows × d_in), learning activation centroids per
+    /// sub-space with a short k-means.
+    pub fn compile(w: &Matrix, calib: &Matrix, subvec: usize, k: usize, rng: &mut Rng) -> LutNnLayer {
+        assert_eq!(w.rows % subvec, 0, "d_in must be divisible by subvec");
+        assert_eq!(calib.cols, w.rows);
+        let d_in = w.rows;
+        let d_out = w.cols;
+        let n_sub = d_in / subvec;
+
+        // k-means over sub-vectors of the calibration activations.
+        let mut centroids = vec![0.0f32; n_sub * k * subvec];
+        for s in 0..n_sub {
+            // Collect this subspace's vectors.
+            let vecs: Vec<Vec<f32>> = (0..calib.rows)
+                .map(|r| calib.row(r)[s * subvec..(s + 1) * subvec].to_vec())
+                .collect();
+            let mut cents: Vec<Vec<f32>> =
+                (0..k).map(|_| vecs[rng.below(vecs.len())].clone()).collect();
+            for _ in 0..15 {
+                let mut sums = vec![vec![0.0f64; subvec]; k];
+                let mut counts = vec![0usize; k];
+                for v in &vecs {
+                    let a = nearest_vec(&cents, v);
+                    counts[a] += 1;
+                    for (j, &x) in v.iter().enumerate() {
+                        sums[a][j] += x as f64;
+                    }
+                }
+                for c in 0..k {
+                    if counts[c] > 0 {
+                        for j in 0..subvec {
+                            cents[c][j] = (sums[c][j] / counts[c] as f64) as f32;
+                        }
+                    }
+                }
+            }
+            for c in 0..k {
+                centroids[(s * k + c) * subvec..(s * k + c + 1) * subvec]
+                    .copy_from_slice(&cents[c]);
+            }
+        }
+
+        // Precompute table[s][c][o] = centroid_sc · W[s*subvec..][o].
+        let mut table = vec![0.0f32; n_sub * k * d_out];
+        for s in 0..n_sub {
+            for c in 0..k {
+                let cent = &centroids[(s * k + c) * subvec..(s * k + c + 1) * subvec];
+                for o in 0..d_out {
+                    let mut acc = 0.0f32;
+                    for (j, &cv) in cent.iter().enumerate() {
+                        acc += cv * w.at(s * subvec + j, o);
+                    }
+                    table[(s * k + c) * d_out + o] = acc;
+                }
+            }
+        }
+        LutNnLayer { d_in, d_out, subvec, k, centroids, table }
+    }
+
+    /// Table memory in bytes (Fig. 6 memory comparison).
+    pub fn bytes(&self) -> usize {
+        (self.table.len() + self.centroids.len()) * std::mem::size_of::<f32>()
+    }
+
+    fn centroid(&self, s: usize, c: usize) -> &[f32] {
+        &self.centroids[(s * self.k + c) * self.subvec..(s * self.k + c + 1) * self.subvec]
+    }
+}
+
+fn nearest_vec(cents: &[Vec<f32>], v: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for (i, c) in cents.iter().enumerate() {
+        let mut d = 0.0f32;
+        for (a, b) in c.iter().zip(v) {
+            d += (a - b) * (a - b);
+        }
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// LUT-NN inference: per input row, find the nearest centroid in each
+/// sub-space (the online cost LCD avoids) and accumulate table rows.
+pub fn lutnn_gemm(x: &Matrix, layer: &LutNnLayer) -> Matrix {
+    assert_eq!(x.cols, layer.d_in);
+    let n_sub = layer.d_in / layer.subvec;
+    let mut y = Matrix::zeros(x.rows, layer.d_out);
+    for b in 0..x.rows {
+        let row = x.row(b);
+        let yrow = &mut y.data[b * layer.d_out..(b + 1) * layer.d_out];
+        for s in 0..n_sub {
+            let v = &row[s * layer.subvec..(s + 1) * layer.subvec];
+            // Online nearest-centroid search.
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..layer.k {
+                let cent = layer.centroid(s, c);
+                let mut d = 0.0f32;
+                for (a, bv) in cent.iter().zip(v) {
+                    d += (a - bv) * (a - bv);
+                }
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            let trow = &layer.table[(s * layer.k + best) * layer.d_out
+                ..(s * layer.k + best + 1) * layer.d_out];
+            for (o, t) in trow.iter().enumerate() {
+                yrow[o] += t;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm_naive;
+    use crate::util::Rng;
+
+    #[test]
+    fn approximates_dense_gemm() {
+        let mut rng = Rng::new(160);
+        let d_in = 32;
+        let d_out = 8;
+        let w = Matrix { rows: d_in, cols: d_out, data: rng.normal_vec(d_in * d_out, 0.0, 0.1) };
+        // Calibration drawn from the same distribution as eval inputs.
+        let calib = Matrix { rows: 256, cols: d_in, data: rng.normal_vec(256 * d_in, 0.0, 1.0) };
+        let layer = LutNnLayer::compile(&w, &calib, 4, 16, &mut rng);
+        let x = Matrix { rows: 8, cols: d_in, data: rng.normal_vec(8 * d_in, 0.0, 1.0) };
+        let y = lutnn_gemm(&x, &layer);
+        let y_ref = gemm_naive(&x, &w);
+        // PQ approximation: correlated, not exact. Check relative error.
+        let num = crate::util::mse(&y.data, &y_ref.data);
+        let den = crate::util::variance(&y_ref.data) as f64;
+        assert!(num / den < 0.75, "relative err {}", num / den);
+    }
+
+    #[test]
+    fn table_grows_with_k_and_dout() {
+        let mut rng = Rng::new(161);
+        let w = Matrix { rows: 16, cols: 4, data: rng.normal_vec(64, 0.0, 0.1) };
+        let calib = Matrix { rows: 64, cols: 16, data: rng.normal_vec(1024, 0.0, 1.0) };
+        let small = LutNnLayer::compile(&w, &calib, 4, 4, &mut rng);
+        let big = LutNnLayer::compile(&w, &calib, 4, 16, &mut rng);
+        assert!(big.bytes() > small.bytes());
+    }
+}

@@ -1,0 +1,20 @@
+//! Comparator implementations for the paper's evaluation section.
+//!
+//! Accuracy baselines (Table 2): RTN / GPTQ live in [`crate::quant`];
+//! SKIM (scaled k-means with mixed precision) is here. Inference
+//! baselines (Fig. 6): a QServe-style W4A8 integer GEMM, a TVM-style
+//! optimized FP GEMM (re-exported from [`crate::tensor`]), and a
+//! LUT-NN-style per-pair table lookup without LCD's centroid-stationary
+//! bucket layout.
+
+pub mod lutnn;
+pub mod qserve;
+pub mod skim;
+
+pub use lutnn::{lutnn_gemm, LutNnLayer};
+pub use qserve::{qserve_gemm, QserveLayer};
+pub use skim::{skim_quantize, SkimConfig, SkimResult};
+
+/// TVM-style optimized FP baseline — alias so Fig. 6 harness code reads
+/// like the paper's comparator list.
+pub use crate::tensor::gemm_blocked as tvm_gemm;

@@ -1,0 +1,181 @@
+//! QServe-style W4A8 integer GEMM baseline (Lin et al. 2024b).
+//!
+//! QServe computes INT8-activation × INT4-weight products with per-group
+//! weight scales and progressive dequantization. This reproduction keeps
+//! the data format (packed 4-bit weights with per-group scale/zero-point,
+//! INT8 activations) and the integer inner loop, providing the Fig. 6
+//! "quantized GEMM" comparator on this CPU.
+
+use crate::tensor::Matrix;
+
+/// Group size for weight scales (QServe uses 128; configurable here so
+/// small test layers work too).
+pub const DEFAULT_GROUP: usize = 64;
+
+/// A linear layer in W4A8 format. Weights are stored output-stationary
+/// (like [`crate::lut::LutLayer`]) as unsigned 4-bit codes with per-group
+/// affine params.
+#[derive(Clone, Debug)]
+pub struct QserveLayer {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub group: usize,
+    /// Packed codes: two per byte, row `i` = output `i`.
+    packed: Vec<u8>,
+    row_stride: usize,
+    /// Per (row, group): scale and integer zero-point.
+    scales: Vec<f32>,
+    zeros: Vec<i32>,
+    /// Activation dequant scale.
+    pub act_scale: f32,
+}
+
+impl QserveLayer {
+    /// Quantize dense weights `w` (d_in × d_out) into W4A8 format.
+    pub fn compile(w: &Matrix, group: usize, act_scale: f32) -> QserveLayer {
+        let d_in = w.rows;
+        let d_out = w.cols;
+        let group = group.min(d_in.max(1));
+        let n_groups = d_in.div_ceil(group);
+        let row_stride = d_in.div_ceil(2);
+        let mut packed = vec![0u8; d_out * row_stride];
+        let mut scales = vec![0.0f32; d_out * n_groups];
+        let mut zeros = vec![0i32; d_out * n_groups];
+
+        for i in 0..d_out {
+            for g in 0..n_groups {
+                let k0 = g * group;
+                let k1 = (k0 + group).min(d_in);
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for k in k0..k1 {
+                    let v = w.at(k, i);
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let scale = if hi > lo { (hi - lo) / 15.0 } else { 1.0 };
+                let zero = (-lo / scale).round() as i32;
+                scales[i * n_groups + g] = scale;
+                zeros[i * n_groups + g] = zero.clamp(0, 15);
+                for k in k0..k1 {
+                    let v = w.at(k, i);
+                    let code = ((v / scale).round() as i32 + zeros[i * n_groups + g]).clamp(0, 15)
+                        as u8;
+                    let slot = &mut packed[i * row_stride + k / 2];
+                    if k % 2 == 0 {
+                        *slot = (*slot & 0xF0) | code;
+                    } else {
+                        *slot = (*slot & 0x0F) | (code << 4);
+                    }
+                }
+            }
+        }
+        QserveLayer { d_in, d_out, group, packed, row_stride, scales, zeros, act_scale }
+    }
+
+    #[inline]
+    fn code(&self, i: usize, k: usize) -> i32 {
+        let byte = self.packed[i * self.row_stride + k / 2];
+        (if k % 2 == 0 { byte & 0x0F } else { byte >> 4 }) as i32
+    }
+
+    /// Dequantized dense weights (test path).
+    pub fn dense_weights(&self) -> Matrix {
+        let n_groups = self.d_in.div_ceil(self.group);
+        let mut w = Matrix::zeros(self.d_in, self.d_out);
+        for i in 0..self.d_out {
+            for k in 0..self.d_in {
+                let g = k / self.group;
+                let scale = self.scales[i * n_groups + g];
+                let zero = self.zeros[i * n_groups + g];
+                w.data[k * self.d_out + i] = (self.code(i, k) - zero) as f32 * scale;
+            }
+        }
+        w
+    }
+
+    /// Packed weight bytes (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4 + self.zeros.len() * 4
+    }
+}
+
+/// W4A8 GEMM: INT8 activations × packed INT4 weights with per-group
+/// integer accumulation and group-level dequantization — the QServe-style
+/// "progressive dequant" loop structure.
+pub fn qserve_gemm(q: &[i8], batch: usize, layer: &QserveLayer) -> Matrix {
+    assert_eq!(q.len(), batch * layer.d_in);
+    let d_in = layer.d_in;
+    let d_out = layer.d_out;
+    let n_groups = d_in.div_ceil(layer.group);
+    let mut y = Matrix::zeros(batch, d_out);
+    for b in 0..batch {
+        let qrow = &q[b * d_in..(b + 1) * d_in];
+        // Per-group activation sums are shared across outputs (zero-point
+        // correction term), computed once per batch row.
+        let mut group_sums = vec![0i32; n_groups];
+        for (k, &qa) in qrow.iter().enumerate() {
+            group_sums[k / layer.group] += qa as i32;
+        }
+        for i in 0..d_out {
+            let mut acc = 0.0f32;
+            for g in 0..n_groups {
+                let k0 = g * layer.group;
+                let k1 = (k0 + layer.group).min(d_in);
+                let mut iacc = 0i32;
+                for k in k0..k1 {
+                    iacc += layer.code(i, k) * qrow[k] as i32;
+                }
+                let scale = layer.scales[i * n_groups + g];
+                let zero = layer.zeros[i * n_groups + g];
+                acc += scale * (iacc - zero * group_sums[g]) as f32;
+            }
+            y.data[b * d_out + i] = acc * layer.act_scale;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm_naive;
+    use crate::util::{mse, Rng};
+
+    #[test]
+    fn w4a8_matches_dequant_reference() {
+        let mut rng = Rng::new(150);
+        for &(b, d_in, d_out) in &[(2usize, 32usize, 16usize), (1, 65, 7), (3, 128, 24)] {
+            let w = Matrix { rows: d_in, cols: d_out, data: rng.normal_vec(d_in * d_out, 0.0, 0.05) };
+            let layer = QserveLayer::compile(&w, 32, 0.01);
+            let q: Vec<i8> = (0..b * d_in).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let y = qserve_gemm(&q, b, &layer);
+            // Reference: dequantized weights × dequantized acts.
+            let x = Matrix {
+                rows: b,
+                cols: d_in,
+                data: q.iter().map(|&v| v as f32 * layer.act_scale).collect(),
+            };
+            let y_ref = gemm_naive(&x, &layer.dense_weights());
+            assert!(mse(&y.data, &y_ref.data) < 1e-6, "({b},{d_in},{d_out})");
+        }
+    }
+
+    #[test]
+    fn quantization_error_small_at_4bit_groups() {
+        let mut rng = Rng::new(151);
+        let w = Matrix { rows: 256, cols: 8, data: rng.normal_vec(2048, 0.0, 0.05) };
+        let layer = QserveLayer::compile(&w, 64, 1.0);
+        let deq = layer.dense_weights();
+        let rel = mse(&w.data, &deq.data) / crate::util::variance(&w.data) as f64;
+        assert!(rel < 0.01, "relative mse {rel}");
+    }
+
+    #[test]
+    fn memory_is_roughly_half_byte_per_weight() {
+        let w = Matrix::zeros(256, 128);
+        let layer = QserveLayer::compile(&w, 64, 1.0);
+        let per_weight = layer.bytes() as f64 / (256.0 * 128.0);
+        assert!(per_weight < 0.75, "bytes/weight {per_weight}");
+    }
+}

@@ -1,0 +1,188 @@
+//! SKIM baseline (Bai et al. 2024): scaled k-means with per-row scales
+//! and greedy mixed-precision bit allocation.
+//!
+//! SKIM pushes PTQ clustering by (a) normalizing each output channel by a
+//! learned scale before a shared k-means, and (b) distributing a global
+//! bit budget non-uniformly across rows by reconstruction-error greedy
+//! allocation ("any-bit"). This reproduction keeps both mechanisms at the
+//! granularity we evaluate (per linear layer) so Table 2's SKIM rows have
+//! a faithful stand-in.
+
+use crate::clustering::{kmeans_weighted, Clustering};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// SKIM configuration.
+#[derive(Clone, Debug)]
+pub struct SkimConfig {
+    /// Average bits per weight (the paper reports 3 and 3.2).
+    pub avg_bits: f64,
+    /// Bit choices available to the mixed-precision allocator.
+    pub bit_choices: Vec<u32>,
+    pub kmeans_iters: usize,
+}
+
+impl Default for SkimConfig {
+    fn default() -> Self {
+        SkimConfig { avg_bits: 3.0, bit_choices: vec![2, 3, 4], kmeans_iters: 25 }
+    }
+}
+
+/// Result of SKIM quantization of one layer.
+#[derive(Clone, Debug)]
+pub struct SkimResult {
+    /// Reconstructed weights (d_in × d_out, row-major like the input).
+    pub weights: Vec<f32>,
+    /// Bits allocated to each output column.
+    pub col_bits: Vec<u32>,
+    pub avg_bits: f64,
+    pub mse: f64,
+}
+
+/// Quantize `w` (d_in × d_out) with SKIM-style scaled clustering under an
+/// average bit budget. `importance` (len d_in) weights the k-means, which
+/// is SKIM's "scaled" ingredient (activation-aware scaling).
+pub fn skim_quantize(w: &Matrix, importance: &[f32], cfg: &SkimConfig, rng: &mut Rng) -> SkimResult {
+    assert_eq!(w.rows, importance.len());
+    let d_in = w.rows;
+    let d_out = w.cols;
+    let n_cols = d_out.max(1);
+
+    // Per-column scale: normalize each output channel to unit abs-max so
+    // one shared codebook fits all columns.
+    let mut col_scale = vec![1e-8f32; d_out];
+    for r in 0..d_in {
+        for c in 0..d_out {
+            col_scale[c] = col_scale[c].max(w.at(r, c).abs());
+        }
+    }
+
+    // Column-major scaled copies with importance expanded per element.
+    let mut scaled_cols: Vec<Vec<f32>> = vec![Vec::with_capacity(d_in); d_out];
+    for r in 0..d_in {
+        for c in 0..d_out {
+            scaled_cols[c].push(w.at(r, c) / col_scale[c]);
+        }
+    }
+
+    // Start everyone at the floor bits, then greedily upgrade the column
+    // with the largest error reduction per bit until the budget is spent.
+    let floor = *cfg.bit_choices.iter().min().unwrap();
+    let ceil = *cfg.bit_choices.iter().max().unwrap();
+    let budget = (cfg.avg_bits * n_cols as f64).round() as i64;
+    let mut col_bits = vec![floor; d_out];
+    let mut spent: i64 = (floor as i64) * n_cols as i64;
+
+    // Cache per-column clusterings at each bit width lazily.
+    let cluster_col = |col: &Vec<f32>, bits: u32, rng: &mut Rng| -> (Clustering, f64) {
+        let k = 1usize << bits;
+        let r = kmeans_weighted(col, Some(importance), k, cfg.kmeans_iters, rng);
+        let e = r.clustering.mse(col);
+        (r.clustering, e)
+    };
+
+    let mut current: Vec<(Clustering, f64)> =
+        scaled_cols.iter().map(|col| cluster_col(col, floor, rng)).collect();
+
+    while spent < budget {
+        // Find the best upgrade.
+        let mut best: Option<(usize, u32, Clustering, f64, f64)> = None;
+        for c in 0..d_out {
+            let cur_bits = col_bits[c];
+            if cur_bits >= ceil {
+                continue;
+            }
+            let next_bits = *cfg
+                .bit_choices
+                .iter()
+                .filter(|&&b| b > cur_bits)
+                .min()
+                .unwrap_or(&ceil);
+            let (cl, err) = cluster_col(&scaled_cols[c], next_bits, rng);
+            let gain = (current[c].1 - err) / (next_bits - cur_bits) as f64;
+            if best.as_ref().map(|b| gain > b.4).unwrap_or(true) {
+                best = Some((c, next_bits, cl, err, gain));
+            }
+        }
+        match best {
+            Some((c, bits, cl, err, _)) if spent + (bits - col_bits[c]) as i64 <= budget => {
+                spent += (bits - col_bits[c]) as i64;
+                col_bits[c] = bits;
+                current[c] = (cl, err);
+            }
+            _ => break,
+        }
+    }
+
+    // Reconstruct.
+    let mut out = vec![0.0f32; d_in * d_out];
+    for c in 0..d_out {
+        let cl = &current[c].0;
+        for r in 0..d_in {
+            out[r * d_out + c] = cl.value(r) * col_scale[c];
+        }
+    }
+    let mse = crate::util::mse(&w.data, &out);
+    let avg_bits = col_bits.iter().map(|&b| b as f64).sum::<f64>() / n_cols as f64;
+    SkimResult { weights: out, col_bits, avg_bits, mse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(rng: &mut Rng, d_in: usize, d_out: usize) -> (Matrix, Vec<f32>) {
+        let mut w = Matrix {
+            rows: d_in,
+            cols: d_out,
+            data: rng.normal_vec(d_in * d_out, 0.0, 0.05),
+        };
+        // Column 0 has a much larger range — per-column scaling must cope.
+        for r in 0..d_in {
+            *w.at_mut(r, 0) *= 10.0;
+        }
+        let imp: Vec<f32> = (0..d_in).map(|_| 0.5 + rng.uniform() as f32).collect();
+        (w, imp)
+    }
+
+    #[test]
+    fn budget_respected() {
+        let mut rng = Rng::new(140);
+        let (w, imp) = layer(&mut rng, 32, 16);
+        let r = skim_quantize(&w, &imp, &SkimConfig::default(), &mut rng);
+        assert!(r.avg_bits <= 3.0 + 1e-9, "avg {}", r.avg_bits);
+        assert!(r.col_bits.iter().all(|&b| (2..=4).contains(&b)));
+    }
+
+    #[test]
+    fn higher_budget_lower_error() {
+        let mut rng = Rng::new(141);
+        let (w, imp) = layer(&mut rng, 48, 12);
+        let r3 = skim_quantize(&w, &imp, &SkimConfig { avg_bits: 3.0, ..Default::default() }, &mut rng);
+        let r4 = skim_quantize(&w, &imp, &SkimConfig { avg_bits: 4.0, ..Default::default() }, &mut rng);
+        assert!(r4.mse <= r3.mse, "4-bit {} vs 3-bit {}", r4.mse, r3.mse);
+    }
+
+    #[test]
+    fn per_column_scaling_handles_hot_column() {
+        let mut rng = Rng::new(142);
+        let (w, imp) = layer(&mut rng, 64, 8);
+        let r = skim_quantize(&w, &imp, &SkimConfig::default(), &mut rng);
+        // Column 0's relative error must stay comparable to the others
+        // (without per-column scale it would dominate the shared codebook).
+        let col_err = |c: usize| -> f64 {
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for r_ in 0..w.rows {
+                let orig = w.at(r_, c) as f64;
+                let rec = r.weights[r_ * w.cols + c] as f64;
+                num += (orig - rec) * (orig - rec);
+                den += orig * orig;
+            }
+            num / den.max(1e-12)
+        };
+        let hot = col_err(0);
+        let cold: f64 = (1..w.cols).map(col_err).sum::<f64>() / (w.cols - 1) as f64;
+        assert!(hot < cold * 10.0, "hot {hot} vs cold {cold}");
+    }
+}

@@ -1,0 +1,203 @@
+//! 1-D DBSCAN.
+//!
+//! LCD clusters scalar weights, so the general DBSCAN neighborhood query
+//! collapses to a range query over sorted values: the eps-neighborhood of
+//! `xs[i]` is a contiguous index range. This gives an O(n log n) exact
+//! DBSCAN (sort + two-pointer sweep) — the same trick the "fast DBSCAN"
+//! literature cited by the paper uses for low dimensions.
+
+/// Label for points not assigned to any cluster.
+pub const NOISE: i32 = -1;
+
+/// DBSCAN output over the *sorted* input order.
+#[derive(Clone, Debug)]
+pub struct DbscanResult {
+    /// Cluster label per (sorted) point; `NOISE` for outliers.
+    pub labels: Vec<i32>,
+    pub n_clusters: usize,
+}
+
+/// Run DBSCAN over pre-sorted 1-D data.
+///
+/// `eps` is the neighborhood radius, `min_pts` the core-point density
+/// threshold (including the point itself, per the classic definition).
+pub fn dbscan_1d(sorted: &[f32], eps: f32, min_pts: usize) -> DbscanResult {
+    let n = sorted.len();
+    let mut labels = vec![NOISE; n];
+    if n == 0 {
+        return DbscanResult { labels, n_clusters: 0 };
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "dbscan_1d needs sorted input");
+
+    // Precompute neighborhood ranges [lo[i], hi[i]) with two pointers.
+    let mut lo = vec![0usize; n];
+    let mut hi = vec![0usize; n];
+    let mut l = 0usize;
+    let mut h = 0usize;
+    for i in 0..n {
+        while sorted[i] - sorted[l] > eps {
+            l += 1;
+        }
+        if h < i {
+            h = i;
+        }
+        while h < n && sorted[h] - sorted[i] <= eps {
+            h += 1;
+        }
+        lo[i] = l;
+        hi[i] = h;
+    }
+
+    let is_core = |i: usize| hi[i] - lo[i] >= min_pts;
+
+    let mut cluster = 0i32;
+    let mut i = 0usize;
+    while i < n {
+        if labels[i] != NOISE || !is_core(i) {
+            i += 1;
+            continue;
+        }
+        // BFS expansion. In 1-D the reachable set of a core point is a
+        // contiguous interval, so expansion is a left+right sweep.
+        let mut left = i;
+        let mut right = i;
+        labels[i] = cluster;
+        // Expand right.
+        let mut frontier = i;
+        loop {
+            let mut advanced = false;
+            // Everything in the eps-neighborhood of a core point joins.
+            if is_core(frontier) {
+                while right + 1 < hi[frontier] {
+                    right += 1;
+                    labels[right] = cluster;
+                    if is_core(right) {
+                        frontier = right;
+                        advanced = true;
+                    }
+                }
+                // Move the frontier to the right-most core point found.
+                let mut f = frontier;
+                for j in (frontier + 1)..=right {
+                    if is_core(j) {
+                        f = j;
+                    }
+                }
+                if f != frontier {
+                    frontier = f;
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+        // Expand left symmetrically.
+        let mut frontier = i;
+        loop {
+            let mut advanced = false;
+            if is_core(frontier) {
+                while left > lo[frontier] {
+                    left -= 1;
+                    labels[left] = cluster;
+                    if is_core(left) {
+                        frontier = left;
+                        advanced = true;
+                    }
+                }
+                let mut f = frontier;
+                for j in (left..frontier).rev() {
+                    if is_core(j) {
+                        f = j;
+                    }
+                }
+                if f != frontier {
+                    frontier = f;
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+        cluster += 1;
+        i = right + 1;
+    }
+
+    DbscanResult { labels, n_clusters: cluster as usize }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sorted_vec(mut v: Vec<f32>) -> Vec<f32> {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    #[test]
+    fn empty_input() {
+        let r = dbscan_1d(&[], 1.0, 2);
+        assert_eq!(r.n_clusters, 0);
+    }
+
+    #[test]
+    fn two_separated_blobs() {
+        let mut rng = Rng::new(10);
+        let mut xs = rng.normal_vec(200, -5.0, 0.1);
+        xs.extend(rng.normal_vec(200, 5.0, 0.1));
+        let xs = sorted_vec(xs);
+        let r = dbscan_1d(&xs, 0.2, 5);
+        assert_eq!(r.n_clusters, 2, "labels: {:?}", &r.labels[..10]);
+        // No point in the left blob shares a label with the right blob.
+        assert_ne!(r.labels[0], r.labels[399]);
+        assert!(r.labels.iter().all(|&l| l != NOISE));
+    }
+
+    #[test]
+    fn isolated_points_are_noise() {
+        let xs = sorted_vec(vec![-100.0, 0.0, 0.01, 0.02, 0.03, 0.04, 100.0]);
+        let r = dbscan_1d(&xs, 0.05, 3);
+        assert_eq!(r.labels[0], NOISE);
+        assert_eq!(r.labels[6], NOISE);
+        assert_eq!(r.n_clusters, 1);
+        assert!(r.labels[1..6].iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn labels_are_contiguous_intervals() {
+        // 1-D DBSCAN clusters must be intervals in sorted order.
+        let mut rng = Rng::new(11);
+        let xs = sorted_vec(rng.normal_vec(800, 0.0, 1.0));
+        let r = dbscan_1d(&xs, 0.05, 4);
+        let mut seen_end = vec![false; r.n_clusters];
+        let mut prev = NOISE;
+        for &l in &r.labels {
+            if l != NOISE && l != prev {
+                assert!(!seen_end[l as usize], "cluster {l} is not contiguous");
+            }
+            if prev != NOISE && prev != l {
+                seen_end[prev as usize] = true;
+            }
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn min_pts_one_makes_everything_core() {
+        let xs = sorted_vec(vec![0.0, 10.0, 20.0]);
+        let r = dbscan_1d(&xs, 1.0, 1);
+        assert_eq!(r.n_clusters, 3);
+    }
+
+    #[test]
+    fn dense_gaussian_is_one_cluster() {
+        let mut rng = Rng::new(12);
+        let xs = sorted_vec(rng.normal_vec(5000, 0.0, 1.0));
+        // eps generous relative to spacing -> single bulk cluster.
+        let r = dbscan_1d(&xs, 0.5, 5);
+        assert_eq!(r.n_clusters, 1);
+    }
+}

@@ -1,0 +1,158 @@
+//! 1-D k-means (Lloyd) with k-means++ seeding, plus the
+//! importance-weighted variant used by the SKIM baseline (scaled k-means
+//! with per-weight importance, e.g. activation- or Hessian-derived).
+
+use super::Clustering;
+use crate::util::Rng;
+
+/// Outcome of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub clustering: Clustering,
+    pub iterations: usize,
+    pub converged: bool,
+    pub inertia: f64,
+}
+
+/// k-means++ seeding over scalars.
+fn kmeanspp_seed(xs: &[f32], k: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(!xs.is_empty() && k >= 1);
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(xs[rng.below(xs.len())]);
+    let mut d2: Vec<f64> = xs.iter().map(|&x| sq(x - centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // All points coincide with a centroid; any point works.
+            xs[rng.below(xs.len())]
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut chosen = xs[xs.len() - 1];
+            for (i, &w) in d2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    chosen = xs[i];
+                    break;
+                }
+            }
+            chosen
+        };
+        centroids.push(next);
+        for (i, &x) in xs.iter().enumerate() {
+            d2[i] = d2[i].min(sq(x - next));
+        }
+    }
+    centroids
+}
+
+#[inline]
+fn sq(x: f32) -> f64 {
+    (x as f64) * (x as f64)
+}
+
+/// Standard 1-D k-means.
+pub fn kmeans_1d(xs: &[f32], k: usize, max_iters: usize, rng: &mut Rng) -> KmeansResult {
+    kmeans_weighted(xs, None, k, max_iters, rng)
+}
+
+/// Importance-weighted 1-D k-means: minimizes `Σ imp_i (x_i − c_{a(i)})²`.
+/// `importance = None` means uniform weights.
+pub fn kmeans_weighted(
+    xs: &[f32],
+    importance: Option<&[f32]>,
+    k: usize,
+    max_iters: usize,
+    rng: &mut Rng,
+) -> KmeansResult {
+    assert!(!xs.is_empty(), "kmeans on empty input");
+    let k = k.min(xs.len()).min(256);
+    let seeds = kmeanspp_seed(xs, k, rng);
+    let mut clustering = Clustering::assign_nearest(xs, &seeds);
+    let mut converged = false;
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        iters += 1;
+        let before = clustering.assignment.clone();
+        clustering.refit_centroids(xs, importance);
+        let after = Clustering::assign_nearest(xs, &clustering.centroids);
+        let changed = before.len() != after.assignment.len()
+            || before.iter().zip(&after.assignment).any(|(a, b)| a != b);
+        clustering = after;
+        if !changed {
+            converged = true;
+            break;
+        }
+    }
+    let inertia = match importance {
+        None => clustering.mse(xs) * xs.len() as f64,
+        Some(imp) => xs
+            .iter()
+            .zip(&clustering.assignment)
+            .zip(imp)
+            .map(|((&x, &a), &w)| w as f64 * sq(x - clustering.centroids[a as usize]))
+            .sum(),
+    };
+    KmeansResult { clustering, iterations: iters, converged, inertia }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall_vec, gen, PropConfig};
+
+    #[test]
+    fn recovers_separated_modes() {
+        let mut rng = Rng::new(1);
+        let mut xs = rng.normal_vec(500, -1.0, 0.02);
+        xs.extend(rng.normal_vec(500, 1.0, 0.02));
+        let r = kmeans_1d(&xs, 2, 50, &mut rng);
+        assert!(r.converged);
+        assert!((r.clustering.centroids[0] + 1.0).abs() < 0.05, "{:?}", r.clustering.centroids);
+        assert!((r.clustering.centroids[1] - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Rng::new(2);
+        let xs = vec![1.0, 2.0];
+        let r = kmeans_1d(&xs, 16, 10, &mut rng);
+        assert!(r.clustering.k() <= 2);
+    }
+
+    #[test]
+    fn weighted_pulls_centroid_toward_heavy_points() {
+        let mut rng = Rng::new(3);
+        let xs = vec![0.0f32, 1.0];
+        let imp = vec![1.0f32, 100.0];
+        let r = kmeans_weighted(&xs, Some(&imp), 1, 10, &mut rng);
+        // Weighted mean = 100/101 ≈ 0.9901
+        assert!((r.clustering.centroids[0] - 0.9901).abs() < 1e-3, "{:?}", r.clustering.centroids);
+    }
+
+    #[test]
+    fn inertia_nonincreasing_in_k() {
+        let mut rng = Rng::new(4);
+        let xs = rng.normal_vec(1500, 0.0, 0.3);
+        let mut prev = f64::INFINITY;
+        for k in [2usize, 4, 8, 16] {
+            let r = kmeans_1d(&xs, k, 60, &mut rng);
+            // k-means++ is stochastic; allow tiny non-monotonicity.
+            assert!(r.inertia <= prev * 1.05, "k={k}: {} vs {}", r.inertia, prev);
+            prev = r.inertia;
+        }
+    }
+
+    #[test]
+    fn prop_converged_assignment_is_stable() {
+        forall_vec(
+            &PropConfig { cases: 12, ..Default::default() },
+            gen::normal_vec(32, 300, 0.2),
+            |xs| {
+                let mut rng = Rng::new(9);
+                let r = kmeans_1d(xs, 4, 100, &mut rng);
+                let re = Clustering::assign_nearest(xs, &r.clustering.centroids);
+                !r.converged || re.assignment == r.clustering.assignment
+            },
+        );
+    }
+}

@@ -1,0 +1,295 @@
+//! Weight clustering substrate.
+//!
+//! LCD clusters each linear layer's scalar weights by value (1-D
+//! clustering): a weight matrix becomes a short table of centroids plus a
+//! low-bit index per weight. This module provides:
+//!
+//! * [`kmeans`] — Lloyd's algorithm with k-means++ seeding, plus the
+//!   importance-weighted variant used by the SKIM baseline.
+//! * [`dbscan`] — 1-D DBSCAN over sorted values (neighborhoods are
+//!   contiguous ranges, so the scan is O(n log n)).
+//! * [`dbci`] — the paper's Density-Based Centroid Initialization (§3.1):
+//!   σ derived from ±1/2/3σ percentiles (Eq. 1), extreme-point seeding,
+//!   `MinPts`/`eps` derived from the seed clusters, DBSCAN over the rest,
+//!   and L1-median centroids.
+
+pub mod dbci;
+pub mod dbscan;
+pub mod kmeans;
+
+pub use dbci::{dbci_init, DbciParams, DbciReport};
+pub use dbscan::{dbscan_1d, DbscanResult, NOISE};
+pub use kmeans::{kmeans_1d, kmeans_weighted, KmeansResult};
+
+use crate::util::argmin;
+
+/// A clustering of a flat weight vector: sorted centroids + per-weight
+/// centroid index. Index type is u8 — LCD never needs more than 256
+/// clusters, and after distillation ≤ 16 (4-bit packable).
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// Centroid values, sorted ascending. Invariant maintained by all
+    /// constructors and update steps.
+    pub centroids: Vec<f32>,
+    /// `assignment[i]` is the centroid index for weight `i`.
+    pub assignment: Vec<u8>,
+}
+
+impl Clustering {
+    /// Build from centroids by nearest-centroid assignment.
+    pub fn assign_nearest(weights: &[f32], centroids: &[f32]) -> Clustering {
+        assert!(!centroids.is_empty() && centroids.len() <= 256);
+        let mut cs = centroids.to_vec();
+        cs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        cs.dedup();
+        let assignment = weights.iter().map(|&w| nearest_sorted(&cs, w) as u8).collect();
+        Clustering { centroids: cs, assignment }
+    }
+
+    pub fn k(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Reconstruct the (lossy) weight vector.
+    pub fn reconstruct(&self) -> Vec<f32> {
+        self.assignment.iter().map(|&a| self.centroids[a as usize]).collect()
+    }
+
+    /// Reconstruction value for weight `i`.
+    #[inline]
+    pub fn value(&self, i: usize) -> f32 {
+        self.centroids[self.assignment[i] as usize]
+    }
+
+    /// Per-cluster population counts.
+    pub fn counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.centroids.len()];
+        for &a in &self.assignment {
+            counts[a as usize] += 1;
+        }
+        counts
+    }
+
+    /// Plain reconstruction MSE against the original weights.
+    pub fn mse(&self, weights: &[f32]) -> f64 {
+        assert_eq!(weights.len(), self.assignment.len());
+        if weights.is_empty() {
+            return 0.0;
+        }
+        weights
+            .iter()
+            .zip(&self.assignment)
+            .map(|(&w, &a)| {
+                let d = w as f64 - self.centroids[a as usize] as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / weights.len() as f64
+    }
+
+    /// Hessian-weighted clustering loss (paper Eq. 4):
+    /// `ΔL = Σ_i h_i · (w_i − c_{a(i)})² / 2`, with `h_i` the diagonal
+    /// Hessian entry for weight `i`.
+    pub fn hessian_loss(&self, weights: &[f32], hdiag: &[f32]) -> f64 {
+        assert_eq!(weights.len(), self.assignment.len());
+        assert_eq!(weights.len(), hdiag.len());
+        weights
+            .iter()
+            .zip(&self.assignment)
+            .zip(hdiag)
+            .map(|((&w, &a), &h)| {
+                let d = w as f64 - self.centroids[a as usize] as f64;
+                0.5 * h as f64 * d * d
+            })
+            .sum::<f64>()
+    }
+
+    /// Recompute each centroid as the (optionally importance-weighted)
+    /// mean of its members. Empty clusters are dropped. Returns the number
+    /// of dropped clusters. Assignments are remapped.
+    pub fn refit_centroids(&mut self, weights: &[f32], importance: Option<&[f32]>) -> usize {
+        let k = self.centroids.len();
+        let mut sums = vec![0.0f64; k];
+        let mut mass = vec![0.0f64; k];
+        for (i, &a) in self.assignment.iter().enumerate() {
+            let wgt = importance.map(|im| im[i] as f64).unwrap_or(1.0).max(1e-12);
+            sums[a as usize] += weights[i] as f64 * wgt;
+            mass[a as usize] += wgt;
+        }
+        let mut new_centroids = Vec::with_capacity(k);
+        let mut remap = vec![u8::MAX; k];
+        for j in 0..k {
+            if mass[j] > 0.0 {
+                remap[j] = new_centroids.len() as u8;
+                new_centroids.push((sums[j] / mass[j]) as f32);
+            }
+        }
+        let dropped = k - new_centroids.len();
+        for a in &mut self.assignment {
+            *a = remap[*a as usize];
+        }
+        self.centroids = new_centroids;
+        self.ensure_sorted();
+        dropped
+    }
+
+    /// Restore the sorted-centroid invariant after in-place centroid edits,
+    /// remapping assignments accordingly.
+    pub fn ensure_sorted(&mut self) {
+        let k = self.centroids.len();
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| self.centroids[a].partial_cmp(&self.centroids[b]).unwrap());
+        if order.iter().enumerate().all(|(i, &o)| i == o) {
+            return;
+        }
+        let mut remap = vec![0u8; k];
+        let mut sorted = vec![0.0f32; k];
+        for (new_idx, &old_idx) in order.iter().enumerate() {
+            remap[old_idx] = new_idx as u8;
+            sorted[new_idx] = self.centroids[old_idx];
+        }
+        self.centroids = sorted;
+        for a in &mut self.assignment {
+            *a = remap[*a as usize];
+        }
+    }
+
+    /// Equivalent bit-width of the index representation: `log2(k)`.
+    pub fn bits_per_weight(&self) -> f64 {
+        (self.k() as f64).log2()
+    }
+}
+
+/// Index of the nearest value in a sorted slice.
+pub fn nearest_sorted(sorted: &[f32], x: f32) -> usize {
+    debug_assert!(!sorted.is_empty());
+    match sorted.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+        Ok(i) => i,
+        Err(i) => {
+            if i == 0 {
+                0
+            } else if i == sorted.len() {
+                sorted.len() - 1
+            } else if (x - sorted[i - 1]).abs() <= (sorted[i] - x).abs() {
+                i - 1
+            } else {
+                i
+            }
+        }
+    }
+}
+
+/// Nearest centroid via linear scan (reference for tests).
+pub fn nearest_linear(centroids: &[f32], x: f32) -> usize {
+    let dists: Vec<f32> = centroids.iter().map(|&c| (c - x).abs()).collect();
+    argmin(&dists)
+}
+
+/// Median of a slice (L1-norm minimizer, used for DBCI centroids).
+pub fn median(xs: &[f32]) -> f32 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall_vec, gen, PropConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn nearest_sorted_matches_linear() {
+        let mut rng = Rng::new(77);
+        let mut cs = rng.normal_vec(9, 0.0, 1.0);
+        cs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for _ in 0..500 {
+            let x = rng.normal_scaled(0.0, 2.0);
+            let a = nearest_sorted(&cs, x);
+            let b = nearest_linear(&cs, x);
+            assert!((cs[a] - x).abs() <= (cs[b] - x).abs() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn assign_nearest_and_reconstruct() {
+        let weights = vec![-1.0, -0.9, 0.0, 0.1, 1.0];
+        let cl = Clustering::assign_nearest(&weights, &[1.0, -1.0, 0.0]);
+        assert_eq!(cl.centroids, vec![-1.0, 0.0, 1.0]);
+        assert_eq!(cl.reconstruct(), vec![-1.0, -1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(cl.counts(), vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn mse_decreases_with_refit() {
+        let mut rng = Rng::new(3);
+        let weights = rng.normal_vec(2000, 0.0, 0.1);
+        let mut cl = Clustering::assign_nearest(&weights, &[-0.2, -0.05, 0.05, 0.2]);
+        let before = cl.mse(&weights);
+        cl.refit_centroids(&weights, None);
+        let after = cl.mse(&weights);
+        assert!(after <= before + 1e-12, "{after} vs {before}");
+    }
+
+    #[test]
+    fn refit_drops_empty_clusters() {
+        let weights = vec![0.0, 0.01, -0.01];
+        let mut cl = Clustering::assign_nearest(&weights, &[0.0, 5.0]);
+        let dropped = cl.refit_centroids(&weights, None);
+        assert_eq!(dropped, 1);
+        assert_eq!(cl.k(), 1);
+        assert!(cl.assignment.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn ensure_sorted_remaps_assignments() {
+        let weights = vec![-1.0, 1.0];
+        let mut cl = Clustering { centroids: vec![1.0, -1.0], assignment: vec![1, 0] };
+        cl.ensure_sorted();
+        assert_eq!(cl.centroids, vec![-1.0, 1.0]);
+        assert_eq!(cl.reconstruct(), weights);
+    }
+
+    #[test]
+    fn hessian_loss_zero_when_exact() {
+        let weights = vec![0.5f32; 16];
+        let cl = Clustering::assign_nearest(&weights, &[0.5]);
+        let h = vec![3.0f32; 16];
+        assert_eq!(cl.hessian_loss(&weights, &h), 0.0);
+    }
+
+    #[test]
+    fn prop_assignment_is_nearest() {
+        forall_vec(
+            &PropConfig { cases: 24, ..Default::default() },
+            gen::llm_like_weights(16, 512),
+            |weights| {
+                let cl = Clustering::assign_nearest(weights, &[-0.1, -0.02, 0.0, 0.03, 0.15]);
+                weights.iter().zip(&cl.assignment).all(|(&w, &a)| {
+                    let d_assigned = (cl.centroids[a as usize] - w).abs();
+                    cl.centroids.iter().all(|&c| d_assigned <= (c - w).abs() + 1e-6)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn median_is_l1_minimizer() {
+        let mut rng = Rng::new(15);
+        for _ in 0..20 {
+            let xs = rng.normal_vec(31, 0.0, 1.0);
+            let m = median(&xs);
+            let l1 = |c: f32| xs.iter().map(|&x| (x - c).abs()).sum::<f32>();
+            let base = l1(m);
+            for dv in [-0.05f32, 0.05] {
+                assert!(base <= l1(m + dv) + 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Typed configuration system.
+//!
+//! Experiments are driven by JSON config files (or built-in presets) that
+//! fully determine a run: model, corpus, distillation hyper-parameters,
+//! smoothing, serving knobs and seeds. `lcd repro --exp <id>` resolves a
+//! preset; `--config <path>` loads a file; individual `--set k=v`
+//! overrides apply on top.
+
+use crate::distill::{DistillConfig, InitStrategy, Strategy};
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+
+/// Transformer family of a model artifact set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Decoder LM with LayerNorm + GELU (GPT-2 analogue).
+    Gpt,
+    /// Decoder LM with RMSNorm + SwiGLU + RoPE (LLaMA analogue).
+    Llama,
+    /// Encoder + classifier head (BERT analogue).
+    Bert,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<ModelKind> {
+        Ok(match s {
+            "gpt" | "gpt_mini" => ModelKind::Gpt,
+            "llama" | "llama_mini" => ModelKind::Llama,
+            "bert" | "bert_mini" => ModelKind::Bert,
+            other => bail!("unknown model kind '{other}'"),
+        })
+    }
+
+    /// Artifact-name stem (`fwd_<stem>`, `train_step_<stem>`, ...).
+    pub fn stem(&self) -> &'static str {
+        match self {
+            ModelKind::Gpt => "gpt_mini",
+            ModelKind::Llama => "llama_mini",
+            ModelKind::Bert => "bert_mini",
+        }
+    }
+}
+
+/// Serving-side knobs for the coordinator.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max requests folded into one executed batch (also the artifact's
+    /// compiled batch dimension).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub max_wait_us: u64,
+    /// Generation length per request.
+    pub gen_tokens: usize,
+    /// Queue capacity before backpressure rejects.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, max_wait_us: 2_000, gen_tokens: 16, queue_cap: 256 }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug)]
+pub struct LcdConfig {
+    pub model: ModelKind,
+    pub seed: u64,
+    /// Training steps for the end-to-end driver.
+    pub train_steps: usize,
+    pub train_lr: f32,
+    /// Calibration batches for Hessian/smoothing estimation.
+    pub calib_batches: usize,
+    pub distill: DistillConfig,
+    /// Activation bits after smoothing (8 or 4).
+    pub act_bits: u32,
+    /// Use the adaptive smoothing search (vs fixed factor).
+    pub adaptive_smooth: bool,
+    /// Fixed smoothing factor when `adaptive_smooth` is false.
+    pub fixed_smooth: f32,
+    pub serve: ServeConfig,
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: String,
+}
+
+impl Default for LcdConfig {
+    fn default() -> Self {
+        LcdConfig {
+            model: ModelKind::Gpt,
+            seed: 42,
+            train_steps: 1500,
+            train_lr: 0.08,
+            calib_batches: 4,
+            distill: DistillConfig::default(),
+            act_bits: 8,
+            adaptive_smooth: true,
+            fixed_smooth: 1.0,
+            serve: ServeConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl LcdConfig {
+    /// Parse from a JSON document; missing fields keep defaults.
+    pub fn from_json(doc: &Json) -> Result<LcdConfig> {
+        let mut cfg = LcdConfig::default();
+        if let Some(v) = doc.get("model") {
+            cfg.model = ModelKind::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.get("seed") {
+            cfg.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = doc.get("train_steps") {
+            cfg.train_steps = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("train_lr") {
+            cfg.train_lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = doc.get("calib_batches") {
+            cfg.calib_batches = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("act_bits") {
+            cfg.act_bits = v.as_usize()? as u32;
+            if cfg.act_bits != 4 && cfg.act_bits != 8 {
+                bail!("act_bits must be 4 or 8");
+            }
+        }
+        if let Some(v) = doc.get("adaptive_smooth") {
+            cfg.adaptive_smooth = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("fixed_smooth") {
+            cfg.fixed_smooth = v.as_f64()? as f32;
+        }
+        if let Some(v) = doc.get("artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(d) = doc.get("distill") {
+            cfg.distill = distill_from_json(d, cfg.distill)?;
+        }
+        if let Some(s) = doc.get("serve") {
+            if let Some(v) = s.get("max_batch") {
+                cfg.serve.max_batch = v.as_usize()?;
+            }
+            if let Some(v) = s.get("max_wait_us") {
+                cfg.serve.max_wait_us = v.as_f64()? as u64;
+            }
+            if let Some(v) = s.get("gen_tokens") {
+                cfg.serve.gen_tokens = v.as_usize()?;
+            }
+            if let Some(v) = s.get("queue_cap") {
+                cfg.serve.queue_cap = v.as_usize()?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<LcdConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        Self::from_json(&doc)
+    }
+
+    /// Apply a `key=value` override (dotted paths for nested fields).
+    pub fn set_override(&mut self, kv: &str) -> Result<()> {
+        let (key, value) = kv
+            .split_once('=')
+            .with_context(|| format!("override '{kv}' is not key=value"))?;
+        match key {
+            "model" => self.model = ModelKind::parse(value)?,
+            "seed" => self.seed = value.parse()?,
+            "train_steps" => self.train_steps = value.parse()?,
+            "train_lr" => self.train_lr = value.parse()?,
+            "calib_batches" => self.calib_batches = value.parse()?,
+            "act_bits" => self.act_bits = value.parse()?,
+            "adaptive_smooth" => self.adaptive_smooth = value.parse()?,
+            "fixed_smooth" => self.fixed_smooth = value.parse()?,
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "distill.lr" => self.distill.lr = value.parse()?,
+            "distill.anchor" => self.distill.anchor = value.parse()?,
+            "distill.theta_rel" => self.distill.theta_rel = value.parse()?,
+            "distill.max_steps" => self.distill.max_steps = value.parse()?,
+            "distill.min_k" => self.distill.min_k = value.parse()?,
+            "distill.strategy" => {
+                self.distill.strategy = match value {
+                    "full" => Strategy::Full,
+                    "progressive" => Strategy::ProgressiveOnly,
+                    "speculative" => Strategy::SpeculativeOnly,
+                    other => bail!("unknown strategy '{other}'"),
+                }
+            }
+            "distill.init" => {
+                self.distill.init = match value {
+                    "dbci" => InitStrategy::Dbci,
+                    "naive4bit" => InitStrategy::Naive4Bit,
+                    other => bail!("unknown init '{other}'"),
+                }
+            }
+            "serve.max_batch" => self.serve.max_batch = value.parse()?,
+            "serve.max_wait_us" => self.serve.max_wait_us = value.parse()?,
+            "serve.gen_tokens" => self.serve.gen_tokens = value.parse()?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+}
+
+fn distill_from_json(d: &Json, mut cfg: DistillConfig) -> Result<DistillConfig> {
+    if let Some(v) = d.get("lr") {
+        cfg.lr = v.as_f64()? as f32;
+    }
+    if let Some(v) = d.get("anchor") {
+        cfg.anchor = v.as_f64()? as f32;
+    }
+    if let Some(v) = d.get("theta_rel") {
+        cfg.theta_rel = v.as_f64()?;
+    }
+    if let Some(v) = d.get("max_steps") {
+        cfg.max_steps = v.as_usize()?;
+    }
+    if let Some(v) = d.get("min_k") {
+        cfg.min_k = v.as_usize()?;
+    }
+    if let Some(v) = d.get("spec_p") {
+        cfg.spec_p = v.as_usize()?;
+    }
+    if let Some(v) = d.get("spec_theta") {
+        cfg.spec_theta = v.as_f64()?;
+    }
+    if let Some(v) = d.get("strategy") {
+        cfg.strategy = match v.as_str()? {
+            "full" => Strategy::Full,
+            "progressive" => Strategy::ProgressiveOnly,
+            "speculative" => Strategy::SpeculativeOnly,
+            other => bail!("unknown strategy '{other}'"),
+        };
+    }
+    if let Some(v) = d.get("init") {
+        cfg.init = match v.as_str()? {
+            "dbci" => InitStrategy::Dbci,
+            "naive4bit" => InitStrategy::Naive4Bit,
+            other => bail!("unknown init '{other}'"),
+        };
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_json_overlay() {
+        let doc = Json::parse(
+            r#"{"model": "llama", "seed": 7, "act_bits": 4,
+                "distill": {"lr": 0.1, "strategy": "progressive"},
+                "serve": {"max_batch": 4}}"#,
+        )
+        .unwrap();
+        let cfg = LcdConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.model, ModelKind::Llama);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.act_bits, 4);
+        assert_eq!(cfg.distill.lr, 0.1);
+        assert_eq!(cfg.distill.strategy, Strategy::ProgressiveOnly);
+        assert_eq!(cfg.serve.max_batch, 4);
+        // Untouched fields keep defaults.
+        assert_eq!(cfg.train_steps, 1500);
+    }
+
+    #[test]
+    fn rejects_bad_bits() {
+        let doc = Json::parse(r#"{"act_bits": 5}"#).unwrap();
+        assert!(LcdConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = LcdConfig::default();
+        cfg.set_override("distill.min_k=5").unwrap();
+        assert_eq!(cfg.distill.min_k, 5);
+        cfg.set_override("model=bert").unwrap();
+        assert_eq!(cfg.model, ModelKind::Bert);
+        assert!(cfg.set_override("nope=1").is_err());
+        assert!(cfg.set_override("garbage").is_err());
+    }
+
+    #[test]
+    fn model_kind_stems() {
+        assert_eq!(ModelKind::Gpt.stem(), "gpt_mini");
+        assert_eq!(ModelKind::parse("llama_mini").unwrap(), ModelKind::Llama);
+        assert!(ModelKind::parse("gpt5").is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! Continuous-batching slot scheduler.
+//!
+//! The compiled artifacts have a fixed batch dimension `B`. The batcher
+//! maintains `B` slots; between decode iterations it admits queued
+//! requests into free slots (no draining barrier — new requests join
+//! while others are mid-generation, the Orca/vLLM "iteration-level
+//! scheduling"). A queue capacity bound provides backpressure: submits
+//! beyond it are rejected immediately rather than growing latency
+//! unboundedly.
+
+use super::request::{GenRequest, GenResponse};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One in-flight generation bound to a batch slot.
+pub struct Session {
+    pub request: GenRequest,
+    /// Token window (prompt + generated so far), clipped to the model seq.
+    pub tokens: Vec<i32>,
+    /// Prompt length after clipping (first generated position).
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+    pub t_first_token: Option<Instant>,
+}
+
+impl Session {
+    fn new(request: GenRequest, seq: usize) -> Session {
+        let mut tokens = request.prompt.clone();
+        // Keep room for at least one generated token inside the window;
+        // long prompts keep their suffix (sliding-window semantics).
+        if tokens.len() > seq - 1 {
+            tokens = tokens[tokens.len() - (seq - 1)..].to_vec();
+        }
+        let prompt_len = tokens.len();
+        Session { request, tokens, prompt_len, generated: Vec::new(), t_first_token: None }
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.request.gen_tokens
+    }
+
+    /// Position (within the padded window) whose logits predict the next
+    /// token.
+    pub fn logit_pos(&self, seq: usize) -> usize {
+        self.tokens.len().min(seq) - 1
+    }
+
+    /// Append a generated token, sliding the window if full.
+    pub fn push_token(&mut self, t: i32, seq: usize) {
+        if self.t_first_token.is_none() {
+            self.t_first_token = Some(Instant::now());
+        }
+        self.generated.push(t);
+        if self.tokens.len() == seq {
+            self.tokens.remove(0);
+        }
+        self.tokens.push(t);
+    }
+
+    pub fn finish(self) -> GenResponse {
+        let now = Instant::now();
+        let ttft = self
+            .t_first_token
+            .map(|t| t - self.request.t_submit)
+            .unwrap_or_else(|| now - self.request.t_submit);
+        GenResponse {
+            id: self.request.id,
+            tokens: self.generated,
+            ttft,
+            latency: now - self.request.t_submit,
+        }
+    }
+}
+
+/// Slot scheduler over a bounded queue.
+pub struct Batcher {
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    queue: VecDeque<GenRequest>,
+    slots: Vec<Option<Session>>,
+    rejected: u64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, queue_cap: usize) -> Batcher {
+        Batcher {
+            max_batch,
+            queue_cap,
+            queue: VecDeque::new(),
+            slots: (0..max_batch).map(|_| None).collect(),
+            rejected: 0,
+        }
+    }
+
+    /// Try to enqueue; false = rejected by backpressure.
+    pub fn submit(&mut self, req: GenRequest) -> bool {
+        if self.queue.len() >= self.queue_cap {
+            self.rejected += 1;
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    /// Admit queued requests into free slots. Returns #admitted.
+    pub fn fill_slots(&mut self, seq: usize) -> usize {
+        let mut admitted = 0;
+        for slot in self.slots.iter_mut() {
+            if slot.is_none() {
+                if let Some(req) = self.queue.pop_front() {
+                    *slot = Some(Session::new(req, seq));
+                    admitted += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        admitted
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active() == 0 && self.queue.is_empty()
+    }
+
+    /// Iterate occupied slots mutably as (slot_index, session).
+    pub fn sessions_mut(&mut self) -> impl Iterator<Item = (usize, &mut Session)> {
+        self.slots.iter_mut().enumerate().filter_map(|(i, s)| s.as_mut().map(|sess| (i, sess)))
+    }
+
+    /// Remove and return finished sessions.
+    pub fn take_done(&mut self) -> Vec<Session> {
+        let mut done = Vec::new();
+        for slot in self.slots.iter_mut() {
+            if slot.as_ref().map(|s| s.done()).unwrap_or(false) {
+                done.push(slot.take().unwrap());
+            }
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, prompt_len: usize, gen: usize) -> (GenRequest, std::sync::mpsc::Receiver<GenResponse>) {
+        let (tx, rx) = channel();
+        (
+            GenRequest {
+                id,
+                prompt: vec![1; prompt_len],
+                gen_tokens: gen,
+                reply: tx,
+                t_submit: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn backpressure_rejects_over_capacity() {
+        let mut b = Batcher::new(2, 3);
+        for i in 0..3 {
+            let (r, _rx) = req(i, 4, 2);
+            assert!(b.submit(r));
+        }
+        let (r, _rx) = req(9, 4, 2);
+        assert!(!b.submit(r));
+        assert_eq!(b.rejected(), 1);
+    }
+
+    #[test]
+    fn continuous_admission() {
+        let mut b = Batcher::new(2, 10);
+        for i in 0..4 {
+            let (r, _rx) = req(i, 4, 1);
+            assert!(b.submit(r));
+        }
+        assert_eq!(b.fill_slots(16), 2);
+        assert_eq!(b.active(), 2);
+        assert_eq!(b.pending(), 2);
+        // Finish one session, a new one takes the slot.
+        for (_, s) in b.sessions_mut() {
+            s.push_token(7, 16);
+        }
+        let done = b.take_done();
+        assert_eq!(done.len(), 2);
+        assert_eq!(b.fill_slots(16), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn session_window_slides() {
+        let (r, _rx) = req(1, 4, 8);
+        let mut s = Session::new(r, 6);
+        assert_eq!(s.prompt_len, 4);
+        for t in 0..8 {
+            s.push_token(t, 6);
+        }
+        assert!(s.done());
+        assert_eq!(s.tokens.len(), 6);
+        assert_eq!(s.tokens, vec![2, 3, 4, 5, 6, 7]);
+        let resp = s.finish();
+        assert_eq!(resp.tokens, (0..8).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn long_prompt_clipped_to_window() {
+        let (r, _rx) = req(1, 100, 2);
+        let s = Session::new(r, 16);
+        assert_eq!(s.tokens.len(), 15);
+        assert_eq!(s.logit_pos(16), 14);
+    }
+}

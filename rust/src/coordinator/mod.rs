@@ -1,0 +1,26 @@
+//! Serving coordinator — the L3 runtime contribution.
+//!
+//! A continuous-batching generation server in the vLLM/Orca mold, sized
+//! for the fixed-shape AOT artifacts:
+//!
+//! * [`request`] — request/response types and latency metrics;
+//! * [`batcher`] — slot scheduler: admits queued requests into free batch
+//!   slots between decode iterations (continuous batching), applies
+//!   queue-capacity backpressure, and tracks per-slot sessions;
+//! * [`server`] — the worker loop: owns the PJRT runtime (artifacts are
+//!   not `Send`, so the runtime lives entirely inside the worker thread),
+//!   executes one batched forward per decode step, greedy-samples, and
+//!   completes sessions.
+//!
+//! The engine behind the forward pass is pluggable ([`server::Engine`]):
+//! the FP artifact, the LUT artifact (the paper's §4 system), or a mock
+//! for tests — which is how the Fig. 6 serving comparison swaps
+//! implementations without touching scheduling.
+
+pub mod batcher;
+pub mod request;
+pub mod server;
+
+pub use batcher::{Batcher, Session};
+pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
+pub use server::{serve_blocking, Engine, ServerHandle};

@@ -1,0 +1,153 @@
+//! Request/response types and serving metrics.
+
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+/// A generation request submitted to the coordinator.
+pub struct GenRequest {
+    pub id: u64,
+    /// Prompt token ids (will be truncated to the model window).
+    pub prompt: Vec<i32>,
+    /// Number of tokens to generate.
+    pub gen_tokens: usize,
+    /// Where the response is delivered.
+    pub reply: Sender<GenResponse>,
+    /// Enqueue timestamp (set by the submitter).
+    pub t_submit: Instant,
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Generated token ids (length = requested gen_tokens).
+    pub tokens: Vec<i32>,
+    /// Queue + prefill latency until the first generated token.
+    pub ttft: Duration,
+    /// Total latency (submit -> complete).
+    pub latency: Duration,
+}
+
+/// Online latency/throughput metrics kept by the worker.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub completed: u64,
+    pub rejected: u64,
+    pub generated_tokens: u64,
+    pub decode_steps: u64,
+    latencies_us: Vec<u64>,
+    ttfts_us: Vec<u64>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// Immutable view of the metrics for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub generated_tokens: u64,
+    pub decode_steps: u64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub p50_ttft_us: u64,
+    pub tokens_per_sec: f64,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn record_start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn record_completion(&mut self, resp: &GenResponse) {
+        self.completed += 1;
+        self.generated_tokens += resp.tokens.len() as u64;
+        self.latencies_us.push(resp.latency.as_micros() as u64);
+        self.ttfts_us.push(resp.ttft.as_micros() as u64);
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let pct = |v: &[u64], p: f64| -> u64 {
+            if v.is_empty() {
+                return 0;
+            }
+            let mut s = v.to_vec();
+            s.sort_unstable();
+            s[((s.len() - 1) as f64 * p) as usize]
+        };
+        let wall = match (self.started, self.finished) {
+            (Some(a), Some(b)) if b > a => b - a,
+            _ => Duration::ZERO,
+        };
+        let tokens_per_sec = if wall.as_secs_f64() > 0.0 {
+            self.generated_tokens as f64 / wall.as_secs_f64()
+        } else {
+            0.0
+        };
+        MetricsSnapshot {
+            completed: self.completed,
+            rejected: self.rejected,
+            generated_tokens: self.generated_tokens,
+            decode_steps: self.decode_steps,
+            p50_latency_us: pct(&self.latencies_us, 0.5),
+            p99_latency_us: pct(&self.latencies_us, 0.99),
+            p50_ttft_us: pct(&self.ttfts_us, 0.5),
+            tokens_per_sec,
+            wall,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "completed {:>5}  rejected {:>3}  tokens {:>6}  steps {:>5}  \
+             p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s",
+            self.completed,
+            self.rejected,
+            self.generated_tokens,
+            self.decode_steps,
+            self.p50_latency_us as f64 / 1e3,
+            self.p99_latency_us as f64 / 1e3,
+            self.p50_ttft_us as f64 / 1e3,
+            self.tokens_per_sec,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_snapshot_percentiles() {
+        let mut m = Metrics::default();
+        m.record_start();
+        for i in 1..=100u64 {
+            let resp = GenResponse {
+                id: i,
+                tokens: vec![0; 4],
+                ttft: Duration::from_micros(i * 10),
+                latency: Duration::from_micros(i * 100),
+            };
+            m.record_completion(&resp);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.generated_tokens, 400);
+        assert_eq!(s.p50_latency_us, 5000);
+        assert!(s.p99_latency_us >= 9900);
+        assert!(s.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.p50_latency_us, 0);
+        assert_eq!(s.tokens_per_sec, 0.0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Synthetic evaluation task suites.
+//!
+//! Four multiple-choice suites mirror the paper's zero-shot QA benchmarks
+//! (PIQA / HellaSwag / WinoGrande / ARC-challenge) at char-LM scale, each
+//! built from the corpus grammar so a trained model scores above chance
+//! and a damaged model drops toward chance — exactly the sensitivity the
+//! Table 2 accuracy columns need. A sentiment-style classification set
+//! plays SST-2 for the BERT analogue (Table 1).
+
+use super::corpus::{ADJS, ADVS, DETS, NEG_ADJS, NOUNS, NUMBERS, POS_ADJS, PREPS, VERBS};
+use crate::util::{Rng, ZipfTable};
+
+/// Which paper benchmark a suite stands in for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// PIQA analogue: plausible vs word-order-corrupted continuation.
+    PiqaSim,
+    /// HellaSwag analogue: true ending vs ending of a different sentence.
+    HellaSim,
+    /// WinoGrande analogue: referent must be one of the earlier nouns.
+    WinoSim,
+    /// ARC analogue: correct vs incorrect arithmetic answer.
+    ArcSim,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::PiqaSim => "piqa_sim",
+            TaskKind::HellaSim => "hella_sim",
+            TaskKind::WinoSim => "wino_sim",
+            TaskKind::ArcSim => "arc_sim",
+        }
+    }
+}
+
+/// One multiple-choice question: a shared prompt and N full continuations
+/// (scored as prompt+option log-likelihood, option positions only).
+#[derive(Clone, Debug)]
+pub struct McQuestion {
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub correct: usize,
+}
+
+/// A suite of MC questions.
+#[derive(Clone, Debug)]
+pub struct McSuite {
+    pub kind: TaskKind,
+    pub questions: Vec<McQuestion>,
+}
+
+impl McSuite {
+    pub fn generate(kind: TaskKind, n: usize, seed: u64) -> McSuite {
+        let mut rng = Rng::new(seed ^ kind.name().len() as u64);
+        let zipf = ZipfTable::new(24, 1.1);
+        let questions = (0..n)
+            .map(|_| match kind {
+                TaskKind::PiqaSim => piqa_q(&mut rng, &zipf),
+                TaskKind::HellaSim => hella_q(&mut rng, &zipf),
+                TaskKind::WinoSim => wino_q(&mut rng, &zipf),
+                TaskKind::ArcSim => arc_q(&mut rng),
+            })
+            .collect();
+        McSuite { kind, questions }
+    }
+}
+
+fn pick<'a>(rng: &mut Rng, z: &ZipfTable, words: &[&'a str]) -> &'a str {
+    words[z.sample(rng).min(words.len() - 1)]
+}
+
+/// PIQA-sim: grammatical continuation vs the same words shuffled into an
+/// implausible order (tests whether the LM prefers well-formed "physics"
+/// of the grammar).
+fn piqa_q(rng: &mut Rng, z: &ZipfTable) -> McQuestion {
+    let det = pick(rng, z, DETS);
+    let noun = pick(rng, z, NOUNS);
+    let verb = pick(rng, z, VERBS);
+    let adv = pick(rng, z, ADVS);
+    let prep = pick(rng, z, PREPS);
+    let det2 = pick(rng, z, DETS);
+    let noun2 = pick(rng, z, NOUNS);
+    let prompt = format!("{det} {noun} ");
+    let good = format!("{verb} {adv} {prep} {det2} {noun2} .");
+    let bad = format!("{prep} {verb} {noun2} {adv} {det2} .");
+    let correct = rng.below(2);
+    // Keep `good` at index `correct`.
+    let options = if correct == 0 { vec![good, bad] } else { vec![bad, good] };
+    McQuestion { prompt, options, correct }
+}
+
+/// Hella-sim: true grammar ending vs an ending drawn from a different
+/// sentence family (mismatched continuation).
+fn hella_q(rng: &mut Rng, z: &ZipfTable) -> McQuestion {
+    let det = pick(rng, z, DETS);
+    let noun = pick(rng, z, NOUNS);
+    let prompt = format!("{det} {noun} is ");
+    let good = format!("{} .", pick(rng, z, ADJS));
+    let bad = format!("{} {} .", pick(rng, z, VERBS), pick(rng, z, NUMBERS));
+    let correct = rng.below(2);
+    let (a, b) = if correct == 0 { (good, bad) } else { (bad, good) };
+    McQuestion { prompt, options: vec![a, b], correct }
+}
+
+/// Wino-sim: "the N1 V the N2 because the ___ was ADJ" — the referent must
+/// be N1 or N2 (correct) vs a noun not in the sentence (incorrect).
+fn wino_q(rng: &mut Rng, z: &ZipfTable) -> McQuestion {
+    let n1 = pick(rng, z, NOUNS);
+    let mut n2 = pick(rng, z, NOUNS);
+    while n2 == n1 {
+        n2 = pick(rng, z, NOUNS);
+    }
+    let mut n3 = pick(rng, z, NOUNS);
+    while n3 == n1 || n3 == n2 {
+        n3 = pick(rng, z, NOUNS);
+    }
+    let verb = pick(rng, z, VERBS);
+    let adj = pick(rng, z, ADJS);
+    let prompt = format!("the {n1} {verb} the {n2} because the ");
+    let referent = if rng.uniform() < 0.5 { n1 } else { n2 };
+    let good = format!("{referent} was {adj} .");
+    let bad = format!("{n3} was {adj} .");
+    let correct = rng.below(2);
+    let (a, b) = if correct == 0 { (good, bad) } else { (bad, good) };
+    McQuestion { prompt, options: vec![a, b], correct }
+}
+
+/// ARC-sim: memorized arithmetic — correct sum vs an off-by-k distractor.
+fn arc_q(rng: &mut Rng) -> McQuestion {
+    let a = rng.below(10);
+    let b = rng.below(10);
+    let sum = (a + b) % 10;
+    let mut wrong = (sum + 1 + rng.below(8)) % 10;
+    if wrong == sum {
+        wrong = (sum + 1) % 10;
+    }
+    let prompt = format!("{} plus {} is ", NUMBERS[a], NUMBERS[b]);
+    let good = format!("{} .", NUMBERS[sum]);
+    let bad = format!("{} .", NUMBERS[wrong]);
+    let correct = rng.below(2);
+    let (x, y) = if correct == 0 { (good, bad) } else { (bad, good) };
+    McQuestion { prompt, options: vec![x, y], correct }
+}
+
+/// Sentiment classification set (SST-2 analogue): texts from the
+/// sentiment grammar, label 1 = positive.
+#[derive(Clone, Debug)]
+pub struct ClassificationSet {
+    pub texts: Vec<String>,
+    pub labels: Vec<i32>,
+}
+
+impl ClassificationSet {
+    pub fn generate(n: usize, seed: u64) -> ClassificationSet {
+        let mut rng = Rng::new(seed);
+        let zipf = ZipfTable::new(24, 1.1);
+        let mut texts = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let positive = rng.uniform() < 0.5;
+            let list = if positive { POS_ADJS } else { NEG_ADJS };
+            let noun = pick(&mut rng, &zipf, NOUNS);
+            let a1 = pick(&mut rng, &zipf, list);
+            let a2 = pick(&mut rng, &zipf, list);
+            // Mix in a neutral clause so the classifier must find the
+            // sentiment words rather than memorize positions.
+            let neutral = format!(
+                "{} {} {}",
+                pick(&mut rng, &zipf, DETS),
+                pick(&mut rng, &zipf, NOUNS),
+                pick(&mut rng, &zipf, VERBS)
+            );
+            texts.push(format!("the {noun} was {a1} and {a2} . {neutral} ."));
+            labels.push(positive as i32);
+        }
+        ClassificationSet { texts, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_generate_requested_size() {
+        for kind in [TaskKind::PiqaSim, TaskKind::HellaSim, TaskKind::WinoSim, TaskKind::ArcSim] {
+            let s = McSuite::generate(kind, 40, 7);
+            assert_eq!(s.questions.len(), 40);
+            for q in &s.questions {
+                assert_eq!(q.options.len(), 2);
+                assert!(q.correct < 2);
+                assert!(!q.prompt.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn correct_option_positions_balanced() {
+        let s = McSuite::generate(TaskKind::ArcSim, 200, 9);
+        let zeros = s.questions.iter().filter(|q| q.correct == 0).count();
+        assert!((60..=140).contains(&zeros), "positions should be shuffled: {zeros}");
+    }
+
+    #[test]
+    fn wino_correct_option_uses_seen_noun() {
+        let s = McSuite::generate(TaskKind::WinoSim, 50, 11);
+        for q in &s.questions {
+            let words: Vec<&str> = q.prompt.split(' ').collect();
+            let n1 = words[1];
+            let n2 = words[4];
+            let good = &q.options[q.correct];
+            let ref_noun = good.split(' ').next().unwrap();
+            assert!(ref_noun == n1 || ref_noun == n2, "{q:?}");
+            let bad = &q.options[1 - q.correct];
+            let bad_noun = bad.split(' ').next().unwrap();
+            assert!(bad_noun != n1 && bad_noun != n2);
+        }
+    }
+
+    #[test]
+    fn arc_correct_option_is_true_sum() {
+        let s = McSuite::generate(TaskKind::ArcSim, 50, 13);
+        let idx = |w: &str| NUMBERS.iter().position(|&n| n == w).unwrap();
+        for q in &s.questions {
+            let words: Vec<&str> = q.prompt.split(' ').collect();
+            let expect = (idx(words[0]) + idx(words[2])) % 10;
+            let good_word = q.options[q.correct].split(' ').next().unwrap();
+            assert_eq!(idx(good_word), expect);
+        }
+    }
+
+    #[test]
+    fn classification_balanced_and_consistent() {
+        let c = ClassificationSet::generate(200, 3);
+        let pos = c.labels.iter().filter(|&&l| l == 1).count();
+        assert!((60..=140).contains(&pos));
+        for (text, &label) in c.texts.iter().zip(&c.labels) {
+            let has_pos = POS_ADJS.iter().any(|a| text.contains(a));
+            assert_eq!(has_pos, label == 1, "{text}");
+        }
+    }
+}

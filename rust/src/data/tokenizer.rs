@@ -1,0 +1,91 @@
+//! Character-level tokenizer over the printable-ASCII alphabet.
+//!
+//! The synthetic corpora are plain ASCII; a char vocabulary of 96
+//! printable characters (space..tilde) plus a BOS/pad id keeps the
+//! model's embedding table tiny and the pipeline dependency-free.
+
+/// Vocabulary: id 0 = BOS/pad, ids 1..=95 = ASCII 32..=126.
+#[derive(Clone, Debug)]
+pub struct CharTokenizer;
+
+/// Number of token ids (0 is BOS/pad).
+pub const VOCAB_SIZE: usize = 96;
+
+impl CharTokenizer {
+    pub fn new() -> CharTokenizer {
+        CharTokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+
+    pub const BOS: i32 = 0;
+
+    /// Encode text; non-printable chars map to space.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .map(|c| {
+                let b = c as u32;
+                if (32..=126).contains(&b) {
+                    (b - 31) as i32
+                } else {
+                    1 // space
+                }
+            })
+            .collect()
+    }
+
+    /// Decode ids; BOS/pad renders as nothing, invalid ids as '?'.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter_map(|&id| {
+                if id == Self::BOS {
+                    None
+                } else if (1..VOCAB_SIZE as i32).contains(&id) {
+                    char::from_u32((id + 31) as u32)
+                } else {
+                    Some('?')
+                }
+            })
+            .collect()
+    }
+}
+
+impl Default for CharTokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_printable() {
+        let t = CharTokenizer::new();
+        let text = "the Quick-brown_fox! 42~";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn nonprintable_maps_to_space() {
+        let t = CharTokenizer::new();
+        assert_eq!(t.decode(&t.encode("a\nb")), "a b");
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let t = CharTokenizer::new();
+        for id in t.encode(" ~azAZ09") {
+            assert!((1..96).contains(&id), "{id}");
+        }
+    }
+
+    #[test]
+    fn bos_decodes_empty() {
+        let t = CharTokenizer::new();
+        assert_eq!(t.decode(&[0, 0, 34, 0]), "A");
+    }
+}

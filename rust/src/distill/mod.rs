@@ -1,0 +1,580 @@
+//! Hessian-guided clustering distillation (paper §3.2–§3.3).
+//!
+//! The full-precision layer weights act as their own teacher. Starting
+//! from a DBCI initialization, each distillation step:
+//!
+//! 1. updates the student weights down the Hessian-preconditioned gradient
+//!    of the clustering loss (Eq. 4/5), anchored to the teacher weights
+//!    (the knowledge-distillation term);
+//! 2. reclassifies weights whose update crossed the half-way point to a
+//!    neighboring centroid (Eq. 6);
+//! 3. updates centroid values from the accumulated member increments
+//!    (Eq. 7 — implemented as the equivalent Hessian-weighted refit);
+//! 4. tracks the Hessian-weighted loss; when it falls below θ, the
+//!    **progressive** optimizer merges the two closest centroids (Eq. 8);
+//!    when it stabilizes without shrinking and stops decreasing
+//!    monotonically, the **speculative** optimizer re-initializes with a
+//!    widened eps and keeps the result only if quality stays within Θ.
+//!
+//! The whole trajectory is logged (`TracePoint`) — the Fig. 7 harness
+//! replays it directly.
+
+pub mod progressive;
+pub mod speculative;
+
+pub use progressive::merge_closest;
+pub use speculative::{SpecConfig, SpecState};
+
+use crate::clustering::{dbci_init, Clustering, DbciParams};
+use crate::hessian::TraceTracker;
+
+/// Initialization strategy (Fig. 7b ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitStrategy {
+    /// DBCI (paper default).
+    Dbci,
+    /// Naive 4-bit init: 16 uniform grid levels over the weight range.
+    Naive4Bit,
+}
+
+/// Which centroid-count optimizers run (Fig. 7b ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Progressive + speculative (paper default, "LCD").
+    Full,
+    /// Progressive merges only.
+    ProgressiveOnly,
+    /// Speculative restarts only.
+    SpeculativeOnly,
+}
+
+/// Distillation hyper-parameters. Defaults follow the paper's described
+/// behaviour; they are exposed through the config system.
+#[derive(Clone, Debug)]
+pub struct DistillConfig {
+    pub init: InitStrategy,
+    pub strategy: Strategy,
+    /// Learning rate η of Eq. 5.
+    pub lr: f32,
+    /// Weight of the teacher-anchor (KD) term.
+    pub anchor: f32,
+    /// Progressive threshold θ, *relative* to the per-weight loss at
+    /// initialization (the paper's "near-zero threshold"). Gated on the
+    /// *teacher-side* loss (Eq. 4 against the original weights): the
+    /// student-side loss collapses as weights co-adapt to the centroids
+    /// and would permit merging all the way down regardless of quality.
+    /// Merging halts once the k-centroid floor exceeds θ·loss₀ — since
+    /// the floor grows ≈4× per halving of k, values of a few × 1.0 land
+    /// in the paper's 5–8 centroid range.
+    pub theta_rel: f64,
+    /// Steps between progressive checks.
+    pub check_every: usize,
+    /// Stability window / tolerance for the speculative trigger.
+    pub stability_window: usize,
+    pub stability_tol: f64,
+    /// Speculative: iterations per probe (p) and accept threshold Θ as a
+    /// multiplier over the best loss so far.
+    pub spec_p: usize,
+    pub spec_theta: f64,
+    /// Max speculative rounds (T).
+    pub spec_max_rounds: usize,
+    /// Total step budget.
+    pub max_steps: usize,
+    /// Stop merging below this many centroids.
+    pub min_k: usize,
+    /// Absolute progressive threshold shared across a model's layers
+    /// (water-filling allocation: sensitive layers keep more centroids).
+    /// When `None`, θ is per-layer-relative (`theta_rel · init_loss`).
+    /// Set by `pipeline::compress_model` from the median layer init loss.
+    pub theta_abs: Option<f64>,
+    pub dbci: DbciParams,
+}
+
+impl Default for DistillConfig {
+    fn default() -> Self {
+        DistillConfig {
+            init: InitStrategy::Dbci,
+            strategy: Strategy::Full,
+            lr: 0.35,
+            anchor: 0.15,
+            theta_rel: 3.0,
+            check_every: 4,
+            stability_window: 6,
+            stability_tol: 0.01,
+            spec_p: 12,
+            spec_theta: 1.25,
+            spec_max_rounds: 4,
+            max_steps: 400,
+            min_k: 2,
+            theta_abs: None,
+            dbci: DbciParams::default(),
+        }
+    }
+}
+
+/// Events recorded along the distillation trajectory (Fig. 7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    Init,
+    Step,
+    ProgressiveMerge,
+    SpeculativeAccept,
+    SpeculativeRevert,
+}
+
+/// One point of the Fig. 7 trajectory.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub step: usize,
+    pub k: usize,
+    /// Hessian-weighted per-weight loss (Eq. 4 / |W|).
+    pub loss: f64,
+    pub event: TraceEvent,
+}
+
+/// Outcome of distilling one layer.
+#[derive(Clone, Debug)]
+pub struct DistillOutcome {
+    pub clustering: Clustering,
+    pub trace: Vec<TracePoint>,
+    pub steps: usize,
+    /// Final Eq.4 loss per weight.
+    pub final_loss: f64,
+}
+
+/// Layer distiller: owns the student weights and the clustering state.
+pub struct Distiller<'a> {
+    /// Teacher (original, possibly smoothed) weights — fixed.
+    teacher: &'a [f32],
+    /// Per-weight diagonal Hessian.
+    hdiag: &'a [f32],
+    /// Student weights — drift toward quantizable configurations.
+    student: Vec<f32>,
+    pub clustering: Clustering,
+    cfg: DistillConfig,
+    tracker: TraceTracker,
+    trace: Vec<TracePoint>,
+    step: usize,
+    init_loss: f64,
+    merges_since_check: usize,
+}
+
+impl<'a> Distiller<'a> {
+    pub fn new(teacher: &'a [f32], hdiag: &'a [f32], cfg: DistillConfig) -> Distiller<'a> {
+        assert_eq!(teacher.len(), hdiag.len());
+        assert!(!teacher.is_empty());
+        let clustering = match cfg.init {
+            InitStrategy::Dbci => dbci_init(teacher, &cfg.dbci).0,
+            InitStrategy::Naive4Bit => {
+                let lo = teacher.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = teacher.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let levels = crate::quant::uniform_grid_levels(lo, hi, 4);
+                Clustering::assign_nearest(teacher, &levels)
+            }
+        };
+        let tracker = TraceTracker::new(cfg.stability_window);
+        let mut d = Distiller {
+            teacher,
+            hdiag,
+            student: teacher.to_vec(),
+            clustering,
+            cfg,
+            tracker,
+            trace: Vec::new(),
+            step: 0,
+            init_loss: 0.0,
+            merges_since_check: 0,
+        };
+        // The tracked quantity is always the teacher-side loss: the
+        // approximation quality of the current table against the original
+        // weights (see `theta_rel`).
+        let loss = d.teacher_loss_per_weight();
+        d.init_loss = loss.max(1e-30);
+        d.tracker.push(loss);
+        d.trace.push(TracePoint { step: 0, k: d.clustering.k(), loss, event: TraceEvent::Init });
+        d
+    }
+
+    /// Eq. 4 loss of the *student* weights against the current centroids,
+    /// normalized per weight.
+    pub fn loss_per_weight(&self) -> f64 {
+        self.clustering.hessian_loss(&self.student, self.hdiag) / self.student.len() as f64
+    }
+
+    /// Quality of the final clustered approximation vs the *teacher* — the
+    /// quantity the speculative accept test (Θ) and the caller care about.
+    pub fn teacher_loss_per_weight(&self) -> f64 {
+        self.clustering.hessian_loss(self.teacher, self.hdiag) / self.teacher.len() as f64
+    }
+
+    pub fn k(&self) -> usize {
+        self.clustering.k()
+    }
+
+    pub fn trace(&self) -> &[TracePoint] {
+        &self.trace
+    }
+
+    /// One distillation step: weight update (Eq. 5), reclassification
+    /// (Eq. 6), centroid update (Eq. 7).
+    pub fn step_once(&mut self) {
+        self.step += 1;
+        let k = self.clustering.k();
+
+        // --- Eq. 5: Hessian-preconditioned update with teacher anchor.
+        // ∇L = h·(w − c) + anchor·h·(w − w_teacher); preconditioning by
+        // diag(H) cancels h, leaving a curvature-independent step toward
+        // the centroid, softened toward the teacher.
+        let lr = self.cfg.lr;
+        let anchor = self.cfg.anchor;
+        for i in 0..self.student.len() {
+            let c = self.clustering.value(i);
+            let w = self.student[i];
+            let g = (w - c) + anchor * (w - self.teacher[i]);
+            self.student[i] = w - lr * g;
+        }
+
+        // --- Eq. 6: reclassification. A weight moves to the neighboring
+        // cluster when it crossed the half-midpoint between centroids.
+        if k > 1 {
+            let cs = &self.clustering.centroids;
+            for i in 0..self.student.len() {
+                let a = self.clustering.assignment[i] as usize;
+                let w = self.student[i];
+                if a > 0 {
+                    let mid = 0.5 * (cs[a] + cs[a - 1]);
+                    if w < mid {
+                        self.clustering.assignment[i] = (a - 1) as u8;
+                        continue;
+                    }
+                }
+                if a + 1 < k {
+                    let mid = 0.5 * (cs[a] + cs[a + 1]);
+                    if w > mid {
+                        self.clustering.assignment[i] = (a + 1) as u8;
+                    }
+                }
+            }
+        }
+
+        // --- Eq. 7: centroid update. The paper accumulates member
+        // increments (own members + reclassified arrivals); summing those
+        // increments around the current centroid is exactly a
+        // Hessian-weighted refit over the post-reclassification members.
+        self.clustering.refit_centroids(&self.student, Some(self.hdiag));
+
+        let loss = self.teacher_loss_per_weight();
+        self.tracker.push(loss);
+        self.trace.push(TracePoint {
+            step: self.step,
+            k: self.clustering.k(),
+            loss,
+            event: TraceEvent::Step,
+        });
+    }
+
+    /// Progressive check (Eq. 8): merge the two closest centroids when the
+    /// tracked loss is below θ. Returns true if a merge happened.
+    pub fn try_progressive_merge(&mut self) -> bool {
+        if self.clustering.k() <= self.cfg.min_k {
+            return false;
+        }
+        let theta = self.cfg.theta_abs.unwrap_or(self.cfg.theta_rel * self.init_loss);
+        if !self.tracker.below_threshold(theta) {
+            return false;
+        }
+        let counts = self.clustering.counts();
+        if !merge_closest(&mut self.clustering, &counts) {
+            return false;
+        }
+        // Re-assign students to the merged table and refit once.
+        self.clustering = Clustering::assign_nearest(&self.student, &self.clustering.centroids);
+        self.clustering.refit_centroids(&self.student, Some(self.hdiag));
+        let loss = self.teacher_loss_per_weight();
+        self.tracker.push(loss);
+        self.trace.push(TracePoint {
+            step: self.step,
+            k: self.clustering.k(),
+            loss,
+            event: TraceEvent::ProgressiveMerge,
+        });
+        self.merges_since_check += 1;
+        true
+    }
+
+    /// Full distillation loop for one layer. `eval` optionally scores a
+    /// candidate clustering end-to-end (e.g. model loss through the AOT
+    /// artifact); when absent, the teacher-side Eq. 4 loss is used for the
+    /// speculative accept test.
+    pub fn run(mut self, mut eval: Option<&mut dyn FnMut(&Clustering) -> f64>) -> DistillOutcome {
+        let use_progressive =
+            matches!(self.cfg.strategy, Strategy::Full | Strategy::ProgressiveOnly);
+        let use_speculative =
+            matches!(self.cfg.strategy, Strategy::Full | Strategy::SpeculativeOnly);
+
+        let mut spec = SpecState::new(SpecConfig {
+            p: self.cfg.spec_p,
+            theta: self.cfg.spec_theta,
+            max_rounds: self.cfg.spec_max_rounds,
+        });
+
+        while self.step < self.cfg.max_steps {
+            self.step_once();
+
+            if use_progressive && self.step % self.cfg.check_every == 0 {
+                self.merges_since_check = 0;
+                self.try_progressive_merge();
+            }
+
+            if use_speculative
+                && spec.rounds_left()
+                && self.clustering.k() > self.cfg.min_k
+                && self.tracker.is_stable(self.cfg.stability_tol)
+                && (self.tracker.non_monotone() || !use_progressive)
+                && self.merges_since_check == 0
+            {
+                self.speculative_round(&mut spec, &mut eval);
+            }
+        }
+
+        // Hard cap for the 4-bit LUT budget: a layer whose loss never
+        // drops below θ (highly sensitive under a shared absolute θ) may
+        // still hold its DBCI-sized table; force-merge to 16.
+        while self.clustering.k() > crate::lut::MAX_CENTROIDS {
+            let counts = self.clustering.counts();
+            if !merge_closest(&mut self.clustering, &counts) {
+                break;
+            }
+            self.clustering.refit_centroids(&self.student, Some(self.hdiag));
+        }
+
+        // Final snap: with the centroid count found by the distillation
+        // dynamics, refine (assignments, centroids) against the *teacher*
+        // weights with Hessian-weighted Lloyd steps until stable — every
+        // step strictly reduces the Eq. 4 loss, so the distilled k keeps
+        // k-means-quality values.
+        for _ in 0..30 {
+            let before = self.clustering.assignment.clone();
+            self.clustering = Clustering::assign_nearest(self.teacher, &self.clustering.centroids);
+            self.clustering.refit_centroids(self.teacher, Some(self.hdiag));
+            if self.clustering.assignment == before {
+                break;
+            }
+        }
+
+        let final_loss = self.teacher_loss_per_weight();
+        DistillOutcome {
+            clustering: self.clustering,
+            trace: self.trace,
+            steps: self.step,
+            final_loss,
+        }
+    }
+
+    /// One speculative probe (§3.3): re-initialize with widened eps, run p
+    /// steps, accept if the quality criterion holds, else revert + back
+    /// off eps.
+    fn speculative_round(
+        &mut self,
+        spec: &mut SpecState,
+        eval: &mut Option<&mut dyn FnMut(&Clustering) -> f64>,
+    ) {
+        let score = |cl: &Clustering, teacher: &[f32], hdiag: &[f32],
+                     eval: &mut Option<&mut dyn FnMut(&Clustering) -> f64>| {
+            match eval {
+                Some(f) => f(cl),
+                None => cl.hessian_loss(teacher, hdiag) / teacher.len() as f64,
+            }
+        };
+
+        let snapshot_cl = self.clustering.clone();
+        let snapshot_student = self.student.clone();
+        let baseline = score(&self.clustering, self.teacher, self.hdiag, eval);
+
+        // Widened-eps re-initialization: larger eps ⇒ wider DBCI segments
+        // ⇒ fewer centroids.
+        let mut params = self.cfg.dbci.clone();
+        params.segment_width_sigma *= spec.eps_multiplier();
+        params.max_centroids = (self.clustering.k().saturating_sub(1)).max(self.cfg.min_k);
+        let (reinit, _) = dbci_init(self.teacher, &params);
+        if reinit.k() >= self.clustering.k() {
+            spec.fail();
+            return;
+        }
+        self.student = self.teacher.to_vec();
+        self.clustering = Clustering::assign_nearest(&self.student, &reinit.centroids);
+        for _ in 0..spec.cfg.p {
+            if self.step >= self.cfg.max_steps {
+                break;
+            }
+            self.step_once();
+        }
+
+        let probe = score(&self.clustering, self.teacher, self.hdiag, eval);
+        if probe <= baseline * spec.cfg.theta {
+            spec.accept();
+            self.tracker.reset();
+            let loss = self.teacher_loss_per_weight();
+            self.tracker.push(loss);
+            self.trace.push(TracePoint {
+                step: self.step,
+                k: self.clustering.k(),
+                loss,
+                event: TraceEvent::SpeculativeAccept,
+            });
+        } else {
+            self.clustering = snapshot_cl;
+            self.student = snapshot_student;
+            spec.fail();
+            let loss = self.teacher_loss_per_weight();
+            self.tracker.push(loss);
+            self.trace.push(TracePoint {
+                step: self.step,
+                k: self.clustering.k(),
+                loss,
+                event: TraceEvent::SpeculativeRevert,
+            });
+        }
+    }
+}
+
+/// Convenience: distill a layer with the given config (no external eval).
+pub fn distill_layer(weights: &[f32], hdiag: &[f32], cfg: &DistillConfig) -> DistillOutcome {
+    Distiller::new(weights, hdiag, cfg.clone()).run(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn layer(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let w: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.uniform() < 0.01 {
+                    rng.normal_scaled(0.0, 0.4)
+                } else {
+                    rng.normal_scaled(0.0, 0.05)
+                }
+            })
+            .collect();
+        let h: Vec<f32> = (0..n).map(|_| 0.5 + rng.uniform() as f32).collect();
+        (w, h)
+    }
+
+    #[test]
+    fn distillation_reduces_centroids() {
+        let mut rng = Rng::new(80);
+        let (w, h) = layer(&mut rng, 8000);
+        let cfg = DistillConfig { max_steps: 200, ..Default::default() };
+        let out = distill_layer(&w, &h, &cfg);
+        let k0 = out.trace[0].k;
+        let kf = out.clustering.k();
+        assert!(kf < k0, "k went {k0} -> {kf}");
+        assert!(kf <= 16, "paper: below 16 centroids, got {kf}");
+        assert!(kf >= cfg.min_k);
+    }
+
+    #[test]
+    fn final_loss_reasonable_vs_init() {
+        // Fewer centroids must not explode the teacher-side loss: the
+        // distilled k-centroid table should beat a naive k-level grid.
+        let mut rng = Rng::new(81);
+        let (w, h) = layer(&mut rng, 6000);
+        let out = distill_layer(&w, &h, &DistillConfig::default());
+        let k = out.clustering.k();
+        let lo = w.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let grid: Vec<f32> =
+            (0..k).map(|i| lo + (hi - lo) * (i as f32 + 0.5) / k as f32).collect();
+        let grid_cl = Clustering::assign_nearest(&w, &grid);
+        assert!(
+            out.final_loss < grid_cl.hessian_loss(&w, &h) / w.len() as f64,
+            "distilled {} vs grid {}",
+            out.final_loss,
+            grid_cl.hessian_loss(&w, &h) / w.len() as f64
+        );
+    }
+
+    #[test]
+    fn trace_is_monotone_in_steps_and_k_changes_logged() {
+        let mut rng = Rng::new(82);
+        let (w, h) = layer(&mut rng, 4000);
+        let out = distill_layer(&w, &h, &DistillConfig { max_steps: 120, ..Default::default() });
+        let mut prev_step = 0;
+        for p in &out.trace {
+            assert!(p.step >= prev_step);
+            prev_step = p.step;
+        }
+        // Every k decrease coincides with a merge/speculative event.
+        for w2 in out.trace.windows(2) {
+            if w2[1].k < w2[0].k {
+                assert_ne!(w2[1].event, TraceEvent::Step, "silent k change: {:?}", w2[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn progressive_only_stops_earlier() {
+        // Fig. 7b: progressive-only converges prematurely (higher k than
+        // the full strategy).
+        let mut rng = Rng::new(83);
+        let (w, h) = layer(&mut rng, 8000);
+        let full = distill_layer(&w, &h, &DistillConfig::default());
+        let po = distill_layer(
+            &w,
+            &h,
+            &DistillConfig { strategy: Strategy::ProgressiveOnly, ..Default::default() },
+        );
+        assert!(po.clustering.k() >= full.clustering.k(), "po {} full {}", po.clustering.k(), full.clustering.k());
+    }
+
+    #[test]
+    fn min_k_respected() {
+        let mut rng = Rng::new(84);
+        let (w, h) = layer(&mut rng, 2000);
+        let cfg = DistillConfig { min_k: 6, theta_rel: 10.0, max_steps: 300, ..Default::default() };
+        let out = distill_layer(&w, &h, &cfg);
+        assert!(out.clustering.k() >= 6);
+    }
+
+    #[test]
+    fn student_update_moves_toward_centroids() {
+        let mut rng = Rng::new(85);
+        let (w, h) = layer(&mut rng, 1000);
+        let mut d = Distiller::new(&w, &h, DistillConfig::default());
+        let before = d.loss_per_weight();
+        for _ in 0..10 {
+            d.step_once();
+        }
+        let after = d.loss_per_weight();
+        assert!(after < before, "loss {before} -> {after}");
+    }
+
+    #[test]
+    fn external_eval_gates_speculative() {
+        // An eval that hates every candidate forces reverts: k stays at
+        // whatever progressive alone reaches, and every speculative event
+        // in the trace is a revert.
+        let mut rng = Rng::new(86);
+        let (w, h) = layer(&mut rng, 4000);
+        let cfg = DistillConfig { strategy: Strategy::SpeculativeOnly, ..Default::default() };
+        let d = Distiller::new(&w, &h, cfg);
+        let k_init = d.k();
+        let mut harsh = |cl: &Clustering| {
+            if cl.k() < k_init {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        };
+        let out = d.run(Some(&mut harsh));
+        // The 4-bit hard cap may still merge down to 16; everything above
+        // that must be protected by the reverting eval.
+        assert_eq!(out.clustering.k(), k_init.min(crate::lut::MAX_CENTROIDS));
+        assert!(out
+            .trace
+            .iter()
+            .all(|p| p.event != TraceEvent::SpeculativeAccept));
+    }
+}

@@ -1,0 +1,101 @@
+//! Progressive centroid optimization (paper §3.3, Eq. 8).
+//!
+//! When the tracked Hessian loss indicates the current table already
+//! approximates the weight distribution well, the two closest centroids
+//! are merged into their population-weighted average:
+//! `C_new = (n_b·C_a + n_a·C_b) / (n_a + n_b)`.
+//!
+//! (Note the paper's cross-weighting: the *other* cluster's count scales
+//! each centroid. We follow the standard population-weighted mean
+//! `(n_a·C_a + n_b·C_b)/(n_a+n_b)` — the literal Eq. 8 moves the merged
+//! centroid *away* from the heavier cluster, which measurably hurts MSE;
+//! this is flagged in DESIGN.md as a presumed typo.)
+
+use crate::clustering::Clustering;
+
+/// Merge the two closest centroids in-place. `counts` must be the current
+/// per-cluster populations. Returns false when fewer than 2 centroids.
+pub fn merge_closest(cl: &mut Clustering, counts: &[usize]) -> bool {
+    let k = cl.centroids.len();
+    if k < 2 {
+        return false;
+    }
+    debug_assert_eq!(counts.len(), k);
+
+    // Centroids are sorted: the closest pair is adjacent.
+    let mut best = 0usize;
+    let mut best_gap = f32::INFINITY;
+    for i in 0..k - 1 {
+        let gap = cl.centroids[i + 1] - cl.centroids[i];
+        if gap < best_gap {
+            best_gap = gap;
+            best = i;
+        }
+    }
+    let (a, b) = (best, best + 1);
+    let (n_a, n_b) = (counts[a] as f64, counts[b] as f64);
+    let merged = if n_a + n_b > 0.0 {
+        ((n_a * cl.centroids[a] as f64 + n_b * cl.centroids[b] as f64) / (n_a + n_b)) as f32
+    } else {
+        0.5 * (cl.centroids[a] + cl.centroids[b])
+    };
+
+    cl.centroids[a] = merged;
+    cl.centroids.remove(b);
+    for asg in &mut cl.assignment {
+        let v = *asg as usize;
+        if v == b {
+            *asg = a as u8;
+        } else if v > b {
+            *asg = (v - 1) as u8;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn merges_closest_pair() {
+        let weights = vec![-1.0f32, -0.98, 0.0, 1.0];
+        let mut cl = Clustering::assign_nearest(&weights, &[-1.0, -0.98, 0.0, 1.0]);
+        let counts = cl.counts();
+        assert!(merge_closest(&mut cl, &counts));
+        assert_eq!(cl.k(), 3);
+        // The -1.0/-0.98 pair merged to their weighted mean -0.99.
+        assert!((cl.centroids[0] + 0.99).abs() < 1e-6, "{:?}", cl.centroids);
+    }
+
+    #[test]
+    fn weighted_mean_respects_populations() {
+        // Cluster a has 3 members at -0.1, cluster b has 1 member at 0.1.
+        let weights = vec![-0.1f32, -0.1, -0.1, 0.1];
+        let mut cl = Clustering::assign_nearest(&weights, &[-0.1, 0.1]);
+        let counts = cl.counts();
+        merge_closest(&mut cl, &counts);
+        // (3·-0.1 + 1·0.1)/4 = -0.05
+        assert!((cl.centroids[0] + 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn assignment_remap_valid_after_merge() {
+        let mut rng = Rng::new(90);
+        let weights = rng.normal_vec(500, 0.0, 1.0);
+        let cs: Vec<f32> = (0..10).map(|i| -1.0 + i as f32 * 0.22).collect();
+        let mut cl = Clustering::assign_nearest(&weights, &cs);
+        while cl.k() > 1 {
+            let counts = cl.counts();
+            assert!(merge_closest(&mut cl, &counts));
+            for &a in &cl.assignment {
+                assert!((a as usize) < cl.k());
+            }
+            // Sorted invariant survives merging.
+            assert!(cl.centroids.windows(2).all(|w| w[0] <= w[1]));
+        }
+        let counts = cl.counts();
+        assert!(!merge_closest(&mut cl, &counts));
+    }
+}

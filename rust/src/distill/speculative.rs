@@ -1,0 +1,92 @@
+//! Speculative centroid optimization state (paper §3.3).
+//!
+//! Progressive merging is greedy and can stall in a local optimum seeded
+//! by the initialization. The speculative phase escapes it: double the
+//! DBCI eps, re-initialize, optimize for `p` iterations, and accept the
+//! probe only if quality stays within the threshold Θ; otherwise revert
+//! and back off the multiplier from 2× toward 1.5×. At most `max_rounds`
+//! probes run (the paper's training-round limit T).
+
+/// Speculative-phase configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecConfig {
+    /// Iterations per probe (p).
+    pub p: usize,
+    /// Accept threshold Θ: probe loss ≤ Θ × baseline loss.
+    pub theta: f64,
+    /// Max probes (T).
+    pub max_rounds: usize,
+}
+
+/// Mutable state of the speculative search across probes.
+#[derive(Clone, Debug)]
+pub struct SpecState {
+    pub cfg: SpecConfig,
+    rounds_used: usize,
+    /// Current eps multiplier: 2.0 on the first probe; 1.5 after a failed
+    /// probe (paper: "reduces eps from 2eps to 1.5eps").
+    multiplier: f32,
+}
+
+impl SpecState {
+    pub fn new(cfg: SpecConfig) -> SpecState {
+        SpecState { cfg, rounds_used: 0, multiplier: 2.0 }
+    }
+
+    pub fn rounds_left(&self) -> bool {
+        self.rounds_used < self.cfg.max_rounds
+    }
+
+    pub fn eps_multiplier(&self) -> f32 {
+        self.multiplier
+    }
+
+    /// A probe was accepted: reset the multiplier for the next escape.
+    pub fn accept(&mut self) {
+        self.rounds_used += 1;
+        self.multiplier = 2.0;
+    }
+
+    /// A probe failed: back off toward 1.5× (and keep shrinking mildly on
+    /// repeated failures so successive probes differ).
+    pub fn fail(&mut self) {
+        self.rounds_used += 1;
+        self.multiplier = if self.multiplier > 1.75 { 1.5 } else { (self.multiplier * 0.9).max(1.1) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_budget() {
+        let mut s = SpecState::new(SpecConfig { p: 5, theta: 1.2, max_rounds: 2 });
+        assert!(s.rounds_left());
+        s.fail();
+        assert!(s.rounds_left());
+        s.accept();
+        assert!(!s.rounds_left());
+    }
+
+    #[test]
+    fn multiplier_schedule() {
+        let mut s = SpecState::new(SpecConfig { p: 5, theta: 1.2, max_rounds: 10 });
+        assert_eq!(s.eps_multiplier(), 2.0);
+        s.fail();
+        assert_eq!(s.eps_multiplier(), 1.5);
+        s.fail();
+        assert!(s.eps_multiplier() < 1.5);
+        s.accept();
+        assert_eq!(s.eps_multiplier(), 2.0);
+    }
+
+    #[test]
+    fn multiplier_never_below_floor() {
+        let mut s = SpecState::new(SpecConfig { p: 1, theta: 1.0, max_rounds: 100 });
+        for _ in 0..50 {
+            s.fail();
+        }
+        assert!(s.eps_multiplier() >= 1.1);
+    }
+}

@@ -1,0 +1,236 @@
+//! Evaluation harness: perplexity, classification accuracy, and
+//! multiple-choice scoring by option log-likelihood (the zero-shot QA
+//! protocol of Table 2).
+//!
+//! The harness is runtime-agnostic: model math is injected as an
+//! [`NllFn`] closure so the same code scores the FP artifact, the
+//! clustered artifact, and pure-host mock models in tests.
+
+use crate::data::{CharTokenizer, LmBatch, McSuite};
+use anyhow::Result;
+
+/// Batched NLL oracle: given fixed-shape `(tokens, targets, mask)` of the
+/// compiled `(batch, seq)`, return `(sum_nll, token_count)` over the
+/// masked positions.
+pub type NllFn<'a> = dyn FnMut(&LmBatch) -> Result<(f64, f64)> + 'a;
+
+/// Perplexity over a list of eval batches: `exp(Σ nll / Σ count)`.
+pub fn perplexity(batches: &[LmBatch], nll: &mut NllFn) -> Result<f64> {
+    let mut total_nll = 0.0;
+    let mut total_count = 0.0;
+    for b in batches {
+        let (s, c) = nll(b)?;
+        total_nll += s;
+        total_count += c;
+    }
+    anyhow::ensure!(total_count > 0.0, "no unmasked tokens in eval set");
+    Ok((total_nll / total_count).exp())
+}
+
+/// Score one multiple-choice suite: each option is appended to the prompt,
+/// the model's NLL is measured on the *option positions only* (mask), and
+/// the lowest-NLL option wins. Returns accuracy in [0, 1].
+///
+/// `batch`/`seq` are the compiled artifact dims; questions are packed one
+/// per batch row, padded/truncated to `seq`.
+pub fn mc_accuracy(
+    suite: &McSuite,
+    batch: usize,
+    seq: usize,
+    nll: &mut NllFn,
+) -> Result<f64> {
+    let tok = CharTokenizer::new();
+    // Flatten to (question, option) jobs.
+    struct Job {
+        q: usize,
+        opt: usize,
+        tokens: Vec<i32>,
+        targets: Vec<i32>,
+        mask: Vec<f32>,
+    }
+    let mut jobs = Vec::new();
+    for (qi, q) in suite.questions.iter().enumerate() {
+        for (oi, opt) in q.options.iter().enumerate() {
+            let prompt_ids = tok.encode(&q.prompt);
+            let opt_ids = tok.encode(opt);
+            // Sequence: BOS + prompt + option, truncated to seq+1 then
+            // split into (tokens, targets).
+            let mut ids = vec![CharTokenizer::BOS];
+            ids.extend(&prompt_ids);
+            let opt_start = ids.len(); // first option token position
+            ids.extend(&opt_ids);
+            ids.truncate(seq + 1);
+            let mut tokens: Vec<i32> = ids[..ids.len() - 1].to_vec();
+            let mut targets: Vec<i32> = ids[1..].to_vec();
+            // Mask: 1 only where the *target* is an option token, i.e.
+            // target position j predicts ids[j+1], option tokens are at
+            // ids[opt_start..].
+            let mut mask: Vec<f32> = (0..targets.len())
+                .map(|j| if j + 1 >= opt_start { 1.0 } else { 0.0 })
+                .collect();
+            // Pad to seq.
+            while tokens.len() < seq {
+                tokens.push(0);
+                targets.push(0);
+                mask.push(0.0);
+            }
+            jobs.push(Job { q: qi, opt: oi, tokens, targets, mask });
+        }
+    }
+
+    // Execute in fixed-size batches; NLL is per-job because each row's
+    // mask isolates it (the oracle returns the masked sum, so jobs must be
+    // scored row-by-row: we pack `batch` jobs per call and rely on the
+    // per-row decomposition below).
+    let mut scores = vec![vec![f64::INFINITY; 2]; suite.questions.len()];
+    for chunk in jobs.chunks(batch) {
+        // To get per-row NLLs out of a sum-reducing oracle, run each row
+        // with only its own mask active, batching identical token data.
+        // One call per row keeps the oracle interface minimal; the serving
+        // path (which needs throughput) uses the batched fwd artifact
+        // instead.
+        for job in chunk {
+            let mut tokens = Vec::with_capacity(batch * seq);
+            let mut targets = Vec::with_capacity(batch * seq);
+            let mut mask = Vec::with_capacity(batch * seq);
+            tokens.extend(&job.tokens);
+            targets.extend(&job.targets);
+            mask.extend(&job.mask);
+            for _ in 1..batch {
+                tokens.extend(std::iter::repeat(0).take(seq));
+                targets.extend(std::iter::repeat(0).take(seq));
+                mask.extend(std::iter::repeat(0.0).take(seq));
+            }
+            let b = LmBatch { batch, seq, tokens, targets, mask };
+            let (s, c) = nll(&b)?;
+            scores[job.q][job.opt] = if c > 0.0 { s / c } else { f64::INFINITY };
+        }
+    }
+
+    let mut correct = 0usize;
+    for (qi, q) in suite.questions.iter().enumerate() {
+        let pick = if scores[qi][0] <= scores[qi][1] { 0 } else { 1 };
+        if pick == q.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / suite.questions.len().max(1) as f64)
+}
+
+/// Classification accuracy given per-example predicted labels.
+pub fn classification_accuracy(predicted: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(predicted.len(), labels.len());
+    if predicted.is_empty() {
+        return 0.0;
+    }
+    let hits = predicted.iter().zip(labels).filter(|(p, l)| p == l).count();
+    hits as f64 / predicted.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::TaskKind;
+    use crate::data::{eval_lm_batches, McQuestion};
+
+    #[test]
+    fn perplexity_of_uniform_model() {
+        // An oracle assigning ln(V) nats per token yields PPL = V.
+        let stream: Vec<i32> = (0..500).map(|i| (i % 96) as i32).collect();
+        let batches = eval_lm_batches(&stream, 4, 16);
+        let v = 96.0f64;
+        let mut oracle = |b: &LmBatch| -> Result<(f64, f64)> {
+            let count: f64 = b.mask.iter().map(|&m| m as f64).sum();
+            Ok((count * v.ln(), count))
+        };
+        let ppl = perplexity(&batches, &mut oracle).unwrap();
+        assert!((ppl - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mc_accuracy_perfect_oracle() {
+        // Oracle that scores the correct option with lower NLL by peeking
+        // at a magic token planted in targets.
+        let suite = McSuite::generate(TaskKind::ArcSim, 30, 3);
+        // Build a lookup of correct option text per question to fake
+        // perfect knowledge: NLL = 0 when the masked target decodes to the
+        // correct option, 10 otherwise.
+        let tok = CharTokenizer::new();
+        let correct_texts: Vec<String> =
+            suite.questions.iter().map(|q| q.options[q.correct].clone()).collect();
+        let mut qi = 0usize;
+        let mut oi = 0usize;
+        let mut oracle = |b: &LmBatch| -> Result<(f64, f64)> {
+            // Reconstruct the masked option text from row 0.
+            let opt_ids: Vec<i32> = b
+                .targets
+                .iter()
+                .zip(&b.mask)
+                .take(b.seq)
+                .filter(|(_, &m)| m > 0.0)
+                .map(|(&t, _)| t)
+                .collect();
+            let text = tok.decode(&opt_ids);
+            let is_correct = text == correct_texts[qi];
+            let score = if is_correct { 1.0 } else { 10.0 };
+            oi += 1;
+            if oi == 2 {
+                oi = 0;
+                qi += 1;
+            }
+            let count: f64 = b.mask.iter().map(|&m| m as f64).sum();
+            Ok((score * count, count))
+        };
+        let acc = mc_accuracy(&suite, 4, 64, &mut oracle).unwrap();
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn mc_accuracy_random_oracle_near_half() {
+        let suite = McSuite::generate(TaskKind::HellaSim, 200, 5);
+        let mut flip = 0u64;
+        let mut oracle = |b: &LmBatch| -> Result<(f64, f64)> {
+            flip = flip.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let count: f64 = b.mask.iter().map(|&m| m as f64).sum();
+            Ok(((flip >> 33) as f64 / 2e9 * count, count))
+        };
+        let acc = mc_accuracy(&suite, 4, 64, &mut oracle).unwrap();
+        assert!((0.35..=0.65).contains(&acc), "acc {acc}");
+    }
+
+    #[test]
+    fn mc_mask_covers_option_only() {
+        let suite = McSuite {
+            kind: TaskKind::ArcSim,
+            questions: vec![McQuestion {
+                prompt: "ab ".into(),
+                options: vec!["cd .".into(), "ef .".into()],
+                correct: 0,
+            }],
+        };
+        let tok = CharTokenizer::new();
+        let seen = std::cell::RefCell::new(Vec::new());
+        let mut oracle = |b: &LmBatch| -> Result<(f64, f64)> {
+            let opt_ids: Vec<i32> = b
+                .targets
+                .iter()
+                .zip(&b.mask)
+                .take(b.seq)
+                .filter(|(_, &m)| m > 0.0)
+                .map(|(&t, _)| t)
+                .collect();
+            seen.borrow_mut().push(tok.decode(&opt_ids));
+            let count: f64 = b.mask.iter().map(|&m| m as f64).sum();
+            Ok((count, count))
+        };
+        mc_accuracy(&suite, 2, 32, &mut oracle).unwrap();
+        let seen = seen.into_inner();
+        assert_eq!(seen, vec!["cd .".to_string(), "ef .".to_string()]);
+    }
+
+    #[test]
+    fn classification_accuracy_basics() {
+        assert_eq!(classification_accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(classification_accuracy(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Diagonal Hessian estimation (paper §3.2).
+//!
+//! For a linear layer `y = x·W` with the layer-wise reconstruction loss
+//! `‖x·ΔW‖²`, the Hessian w.r.t. the weights is block-diagonal with
+//! `H = 2·XᵀX` per output column; its diagonal for weight `w_ij` is
+//! `H_jj = 2·Σ_n x_nj²` — a per-input-feature vector. The calibration
+//! activations come from the AOT `calib_<model>` artifact (inputs to each
+//! linear layer over a calibration batch); this module turns them into
+//! per-weight diagonal Hessians, tracks the Hessian trace over the
+//! distillation trajectory, and provides the stability detector that
+//! triggers the speculative phase (§3.3).
+
+use crate::tensor::Matrix;
+
+/// Per-layer diagonal Hessian over input features.
+#[derive(Clone, Debug)]
+pub struct HessianDiag {
+    /// `h[j] = 2·Σ_n x_nj² / N` — mean, so magnitudes are batch-size
+    /// independent. Length = `d_in`.
+    pub per_input: Vec<f32>,
+}
+
+impl HessianDiag {
+    /// Estimate from calibration activations `x` (rows = samples,
+    /// cols = d_in). A small damping floor keeps later divisions sane
+    /// for dead input channels.
+    pub fn from_activations(x: &Matrix, damping: f32) -> HessianDiag {
+        let n = x.rows.max(1) as f64;
+        let mut h = vec![0.0f64; x.cols];
+        for r in 0..x.rows {
+            let row = x.row(r);
+            for (j, &v) in row.iter().enumerate() {
+                h[j] += (v as f64) * (v as f64);
+            }
+        }
+        let mean_h: f64 = if x.cols > 0 { h.iter().sum::<f64>() / x.cols as f64 } else { 0.0 };
+        let floor = (damping as f64 * (2.0 * mean_h / n)).max(1e-10);
+        let per_input =
+            h.into_iter().map(|s| ((2.0 * s / n).max(floor)) as f32).collect();
+        HessianDiag { per_input }
+    }
+
+    /// Uniform Hessian (ablation: "no Hessian guidance").
+    pub fn uniform(d_in: usize) -> HessianDiag {
+        HessianDiag { per_input: vec![1.0; d_in] }
+    }
+
+    /// Expand to a per-weight diagonal for a weight matrix stored
+    /// row-major as `(d_in, d_out)`: every weight in input-row `j` shares
+    /// `h[j]`.
+    pub fn per_weight(&self, d_out: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.per_input.len() * d_out);
+        for &h in &self.per_input {
+            out.extend(std::iter::repeat(h).take(d_out));
+        }
+        out
+    }
+
+    /// Trace of the per-weight diagonal Hessian.
+    pub fn trace(&self, d_out: usize) -> f64 {
+        self.per_input.iter().map(|&h| h as f64).sum::<f64>() * d_out as f64
+    }
+}
+
+/// Sliding-window tracker over a scalar series (the Hessian-weighted
+/// clustering loss, §3.3). Detects (a) proximity to the near-zero
+/// threshold θ that triggers a progressive merge and (b) loss of
+/// monotonicity + stability that triggers the speculative phase.
+#[derive(Clone, Debug)]
+pub struct TraceTracker {
+    window: usize,
+    history: Vec<f64>,
+}
+
+impl TraceTracker {
+    pub fn new(window: usize) -> TraceTracker {
+        TraceTracker { window: window.max(2), history: Vec::new() }
+    }
+
+    pub fn push(&mut self, value: f64) {
+        self.history.push(value);
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.history.last().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+
+    /// True when the most recent value is below `theta` (progressive
+    /// trigger: current centroids approximate the distribution well).
+    pub fn below_threshold(&self, theta: f64) -> bool {
+        self.history.last().map(|&v| v <= theta).unwrap_or(false)
+    }
+
+    /// Relative change across the trailing window.
+    pub fn relative_change(&self) -> Option<f64> {
+        if self.history.len() < self.window {
+            return None;
+        }
+        let tail = &self.history[self.history.len() - self.window..];
+        let first = tail[0];
+        let last = tail[tail.len() - 1];
+        if first.abs() < 1e-30 {
+            return Some(0.0);
+        }
+        Some(((last - first) / first).abs())
+    }
+
+    /// True when the trailing window is flat (below `tol` relative change)
+    /// — "the progressive search stabilizes".
+    pub fn is_stable(&self, tol: f64) -> bool {
+        self.relative_change().map(|c| c < tol).unwrap_or(false)
+    }
+
+    /// True when the trailing window is NOT monotonically decreasing —
+    /// "the Hessian trace no longer changes monotonically" (§3.3).
+    pub fn non_monotone(&self) -> bool {
+        if self.history.len() < self.window {
+            return false;
+        }
+        let tail = &self.history[self.history.len() - self.window..];
+        tail.windows(2).any(|w| w[1] > w[0] * (1.0 + 1e-12))
+    }
+
+    /// Reset history (used when the speculative phase re-initializes).
+    pub fn reset(&mut self) {
+        self.history.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn hessian_from_activations_matches_formula() {
+        let x = Matrix::new(2, 3, vec![1.0, 2.0, 0.0, 3.0, 4.0, 0.0]).unwrap();
+        let h = HessianDiag::from_activations(&x, 0.0);
+        // h_j = 2 * mean(x_j^2): [2*(1+9)/2, 2*(4+16)/2, floor]
+        assert!((h.per_input[0] - 10.0).abs() < 1e-5);
+        assert!((h.per_input[1] - 20.0).abs() < 1e-5);
+        assert!(h.per_input[2] > 0.0, "damped floor for dead channel");
+    }
+
+    #[test]
+    fn per_weight_expansion() {
+        let h = HessianDiag { per_input: vec![1.0, 3.0] };
+        assert_eq!(h.per_weight(2), vec![1.0, 1.0, 3.0, 3.0]);
+        assert_eq!(h.trace(2), 8.0);
+    }
+
+    #[test]
+    fn hessian_scale_invariant_to_batch() {
+        let mut rng = Rng::new(8);
+        let data: Vec<f32> = rng.normal_vec(64 * 4, 0.0, 1.0);
+        let x1 = Matrix::new(64, 4, data.clone()).unwrap();
+        let mut doubled = data.clone();
+        doubled.extend(data);
+        let x2 = Matrix::new(128, 4, doubled).unwrap();
+        let h1 = HessianDiag::from_activations(&x1, 0.01);
+        let h2 = HessianDiag::from_activations(&x2, 0.01);
+        for (a, b) in h1.per_input.iter().zip(&h2.per_input) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tracker_threshold_and_stability() {
+        let mut t = TraceTracker::new(3);
+        for v in [10.0, 5.0, 2.0, 1.0] {
+            t.push(v);
+        }
+        assert!(!t.below_threshold(0.5));
+        assert!(t.below_threshold(1.0));
+        assert!(!t.is_stable(0.05));
+        for _ in 0..3 {
+            t.push(1.0);
+        }
+        assert!(t.is_stable(0.05));
+        assert!(!t.non_monotone());
+        t.push(1.5);
+        assert!(t.non_monotone());
+    }
+
+    #[test]
+    fn tracker_needs_window() {
+        let mut t = TraceTracker::new(4);
+        t.push(1.0);
+        assert_eq!(t.relative_change(), None);
+        assert!(!t.is_stable(0.1));
+        assert!(!t.non_monotone());
+    }
+}

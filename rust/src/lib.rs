@@ -1,0 +1,44 @@
+//! # LCD — extreme Low-bit Clustering via knowledge Distillation
+//!
+//! Production-style reproduction of *"LCD: Advancing Extreme Low-Bit
+//! Clustering for Large Language Models via Knowledge Distillation"*
+//! (CS.LG 2025).
+//!
+//! The crate is the Layer-3 rust coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the bucket-LUT
+//!   GEMM, fused smooth+quantize, centroid assignment and Hessian-diagonal
+//!   accumulation; lowered with `interpret=True` and validated against a
+//!   pure-`jnp` oracle.
+//! * **L2** — JAX model definitions (`python/compile/model.py`): gpt-mini /
+//!   llama-mini / bert-mini forward, loss and SGD train step, AOT-lowered to
+//!   HLO text by `python/compile/aot.py` into `artifacts/`.
+//! * **L3** — this crate: the LCD compression pipeline (DBCI clustering,
+//!   Hessian-guided distillation, progressive + speculative centroid-count
+//!   optimization, adaptive smoothing), the bucket-LUT inference engine, and
+//!   a batched serving coordinator. Python never runs on the request path;
+//!   the binary only loads `artifacts/*.hlo.txt` through PJRT.
+//!
+//! See `DESIGN.md` for the experiment index mapping every table and figure
+//! of the paper to a module and a `lcd repro --exp <id>` command.
+
+pub mod baselines;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod distill;
+pub mod eval;
+pub mod hessian;
+pub mod lut;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod repro;
+pub mod runtime;
+pub mod smooth;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

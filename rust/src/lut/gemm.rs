@@ -1,0 +1,255 @@
+//! LUT GEMM kernels — the serving hot path.
+//!
+//! All kernels compute `Y(B×d_out) = dequant( Q(B×d_in) ⊛ LutLayer )`
+//! where `Q` holds symmetric INT8 activation codes. Cross-validated
+//! against [`lut_gemm_fp_ref`] (dense reconstruction + FP GEMM).
+
+use super::{LutLayer, ProductTable, MAX_CENTROIDS};
+use crate::tensor::Matrix;
+
+/// Reference: reconstruct dense weights, run FP GEMM over the dequantized
+/// activations. Semantics anchor for the optimized kernels.
+pub fn lut_gemm_fp_ref(q: &[i8], batch: usize, layer: &LutLayer) -> Matrix {
+    assert_eq!(q.len(), batch * layer.d_in);
+    let x = Matrix {
+        rows: batch,
+        cols: layer.d_in,
+        data: q.iter().map(|&v| v as f32).collect(),
+    };
+    let w = layer.dense_weights();
+    let mut y = crate::tensor::gemm_naive(&x, &w);
+    for v in &mut y.data {
+        *v *= layer.output_scale;
+    }
+    y
+}
+
+/// Paper-literal table lookup: one gather + FP add per weight from the
+/// full 16×256 product table.
+pub fn lut_gemm_table(q: &[i8], batch: usize, layer: &LutLayer, table: &ProductTable) -> Matrix {
+    assert_eq!(q.len(), batch * layer.d_in);
+    let mut y = Matrix::zeros(batch, layer.d_out);
+    for b in 0..batch {
+        let qrow = &q[b * layer.d_in..(b + 1) * layer.d_in];
+        for i in 0..layer.d_out {
+            let mut acc = 0.0f32;
+            for (k, &qk) in qrow.iter().enumerate() {
+                acc += table.lookup(layer.indices.get(i, k), qk);
+            }
+            y.data[b * layer.d_out + i] = acc * layer.output_scale;
+        }
+    }
+    y
+}
+
+/// Symmetric-table variant: half-size table, sign applied at accumulate
+/// (paper: "store results only for non-negative input indices and apply
+/// sign adjustments during accumulation").
+pub fn lut_gemm_table_sym(
+    q: &[i8],
+    batch: usize,
+    layer: &LutLayer,
+    table: &ProductTable,
+) -> Matrix {
+    assert_eq!(q.len(), batch * layer.d_in);
+    let mut y = Matrix::zeros(batch, layer.d_out);
+    for b in 0..batch {
+        let qrow = &q[b * layer.d_in..(b + 1) * layer.d_in];
+        for i in 0..layer.d_out {
+            let mut acc = 0.0f32;
+            for (k, &qk) in qrow.iter().enumerate() {
+                acc += table.lookup_sym(layer.indices.get(i, k), qk);
+            }
+            y.data[b * layer.d_out + i] = acc * layer.output_scale;
+        }
+    }
+    y
+}
+
+/// Centroid-stationary bucket accumulation — the optimized hot path.
+///
+/// Per output row: walk the packed nibble row once, adding each INT8
+/// activation into one of ≤16 i32 bucket sums; finish with ≤16 FP
+/// multiply-adds against the centroid table. No FP multiply inside the
+/// inner loop and no gather — the bucket arrays live in L1.
+///
+/// Perf notes (see EXPERIMENTS.md §Perf): the indexed adds defeat
+/// auto-vectorization, so throughput comes from ILP — two independent
+/// bucket arrays (low/high nibble streams) break the store-to-load
+/// dependency chain when neighbouring weights share a centroid, and a
+/// 4-byte unroll with unchecked indexing keeps 8 adds in flight.
+///
+/// Overflow: |q| ≤ 128 and d_in ≤ 2²³ keeps every bucket within i32.
+pub fn lut_gemm_bucket(q: &[i8], batch: usize, layer: &LutLayer) -> Matrix {
+    assert_eq!(q.len(), batch * layer.d_in);
+    debug_assert!(layer.d_in < (1 << 23));
+    let d_in = layer.d_in;
+    let d_out = layer.d_out;
+    let mut y = Matrix::zeros(batch, d_out);
+    let pairs = d_in / 2;
+    let unroll = pairs / 4 * 4;
+    for b in 0..batch {
+        let qrow = &q[b * d_in..(b + 1) * d_in];
+        let yrow = &mut y.data[b * d_out..(b + 1) * d_out];
+        for i in 0..d_out {
+            let row = layer.indices.row_bytes(i);
+            // Two independent accumulator arrays (low/high nibbles).
+            let mut blo = [0i32; MAX_CENTROIDS];
+            let mut bhi = [0i32; MAX_CENTROIDS];
+            // SAFETY: row has >= pairs bytes and qrow >= 2*pairs elems by
+            // construction (PackedIndices stride / assert above); nibble
+            // values are < 16 = MAX_CENTROIDS.
+            unsafe {
+                let mut p = 0usize;
+                while p < unroll {
+                    let b0 = *row.get_unchecked(p);
+                    let b1 = *row.get_unchecked(p + 1);
+                    let b2 = *row.get_unchecked(p + 2);
+                    let b3 = *row.get_unchecked(p + 3);
+                    let qp = qrow.as_ptr().add(2 * p);
+                    *blo.get_unchecked_mut((b0 & 0x0F) as usize) += *qp as i32;
+                    *bhi.get_unchecked_mut((b0 >> 4) as usize) += *qp.add(1) as i32;
+                    *blo.get_unchecked_mut((b1 & 0x0F) as usize) += *qp.add(2) as i32;
+                    *bhi.get_unchecked_mut((b1 >> 4) as usize) += *qp.add(3) as i32;
+                    *blo.get_unchecked_mut((b2 & 0x0F) as usize) += *qp.add(4) as i32;
+                    *bhi.get_unchecked_mut((b2 >> 4) as usize) += *qp.add(5) as i32;
+                    *blo.get_unchecked_mut((b3 & 0x0F) as usize) += *qp.add(6) as i32;
+                    *bhi.get_unchecked_mut((b3 >> 4) as usize) += *qp.add(7) as i32;
+                    p += 4;
+                }
+                while p < pairs {
+                    let byte = *row.get_unchecked(p);
+                    *blo.get_unchecked_mut((byte & 0x0F) as usize) +=
+                        *qrow.get_unchecked(2 * p) as i32;
+                    *bhi.get_unchecked_mut((byte >> 4) as usize) +=
+                        *qrow.get_unchecked(2 * p + 1) as i32;
+                    p += 1;
+                }
+            }
+            if d_in % 2 == 1 {
+                let byte = row[pairs];
+                blo[(byte & 0x0F) as usize] += qrow[d_in - 1] as i32;
+            }
+            let mut acc = 0.0f32;
+            for j in 0..layer.n_centroids {
+                acc += layer.centroids[j] * (blo[j] + bhi[j]) as f32;
+            }
+            yrow[i] = acc * layer.output_scale;
+        }
+    }
+    y
+}
+
+/// End-to-end LUT linear: smooth+quantize the FP input (Eq. 11 fused
+/// multiplier), then bucket-GEMM.
+pub fn lut_linear(x: &[f32], batch: usize, layer: &LutLayer) -> Matrix {
+    let q = super::quantize_input(x, layer.input_inv_scale);
+    lut_gemm_bucket(&q, batch, layer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::kmeans_1d;
+    use crate::util::{mse, Rng};
+
+    fn make_layer(rng: &mut Rng, d_in: usize, d_out: usize, k: usize) -> LutLayer {
+        let w = rng.normal_vec(d_in * d_out, 0.0, 0.05);
+        let kr = kmeans_1d(&w, k, 30, rng);
+        // s_q sized so unit-normal inputs stay inside the INT8 range
+        // after the s_m division (3.5σ / 1.3 / 0.025 ≈ 108 < 127).
+        LutLayer::compile(&kr.clustering, d_in, d_out, 1.3, 0.025).unwrap()
+    }
+
+    fn random_q(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(256) as i32 - 128) as i8).collect()
+    }
+
+    #[test]
+    fn all_kernels_agree() {
+        let mut rng = Rng::new(130);
+        for &(b, d_in, d_out, k) in
+            &[(1usize, 8usize, 4usize, 3usize), (3, 17, 9, 8), (2, 64, 32, 16), (4, 33, 7, 5)]
+        {
+            let layer = make_layer(&mut rng, d_in, d_out, k);
+            let table = ProductTable::build(&layer.centroids);
+            let q = random_q(&mut rng, b * d_in);
+            let y_ref = lut_gemm_fp_ref(&q, b, &layer);
+            let y_t = lut_gemm_table(&q, b, &layer, &table);
+            let y_s = lut_gemm_table_sym(&q, b, &layer, &table);
+            let y_b = lut_gemm_bucket(&q, b, &layer);
+            assert!(mse(&y_ref.data, &y_t.data) < 1e-8, "table ({b},{d_in},{d_out},{k})");
+            assert!(mse(&y_ref.data, &y_s.data) < 1e-8, "sym ({b},{d_in},{d_out},{k})");
+            assert!(mse(&y_ref.data, &y_b.data) < 1e-8, "bucket ({b},{d_in},{d_out},{k})");
+        }
+    }
+
+    #[test]
+    fn extreme_activation_values() {
+        let mut rng = Rng::new(131);
+        let layer = make_layer(&mut rng, 10, 6, 4);
+        let table = ProductTable::build(&layer.centroids);
+        let q: Vec<i8> = vec![-128, 127, -128, 127, 0, 0, 1, -1, 127, -128];
+        let y_ref = lut_gemm_fp_ref(&q, 1, &layer);
+        for y in [
+            lut_gemm_table(&q, 1, &layer, &table),
+            lut_gemm_table_sym(&q, 1, &layer, &table),
+            lut_gemm_bucket(&q, 1, &layer),
+        ] {
+            assert!(mse(&y_ref.data, &y.data) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn lut_linear_approximates_fp_linear() {
+        // End-to-end: FP input -> quantize -> LUT GEMM should be close to
+        // the clustered-FP product (the only error is INT8 rounding).
+        // `dense_weights` holds the *smoothed* weights W·s_m, so the FP
+        // reference divides the product back by s_m.
+        let mut rng = Rng::new(132);
+        let d_in = 48;
+        let d_out = 24;
+        let batch = 4;
+        let s_m = 1.3f32;
+        let layer = make_layer(&mut rng, d_in, d_out, 8);
+        let x = rng.normal_vec(batch * d_in, 0.0, 1.0);
+        let y = lut_linear(&x, batch, &layer);
+
+        let xm = Matrix { rows: batch, cols: d_in, data: x.iter().map(|v| v / s_m).collect() };
+        let w = layer.dense_weights();
+        let y_fp = crate::tensor::gemm_naive(&xm, &w);
+        // Relative error bounded by the quantization step.
+        let scale = crate::util::mean(&y_fp.data.iter().map(|v| v.abs()).collect::<Vec<_>>());
+        let err = crate::util::max_abs_diff(&y.data, &y_fp.data);
+        assert!(err < scale.max(0.1) * 0.2, "err {err}, scale {scale}");
+    }
+
+    #[test]
+    fn odd_d_in_tail_handled() {
+        let mut rng = Rng::new(133);
+        let layer = make_layer(&mut rng, 7, 5, 4);
+        let q = random_q(&mut rng, 2 * 7);
+        let y_ref = lut_gemm_fp_ref(&q, 2, &layer);
+        let y_b = lut_gemm_bucket(&q, 2, &layer);
+        assert!(mse(&y_ref.data, &y_b.data) < 1e-8);
+    }
+
+    #[test]
+    fn prop_bucket_matches_ref_random_shapes() {
+        let mut rng = Rng::new(134);
+        for _ in 0..20 {
+            let d_in = 1 + rng.below(40);
+            let d_out = 1 + rng.below(20);
+            let k = 2 + rng.below(15);
+            let b = 1 + rng.below(4);
+            let layer = make_layer(&mut rng, d_in, d_out, k);
+            let q = random_q(&mut rng, b * d_in);
+            let y_ref = lut_gemm_fp_ref(&q, b, &layer);
+            let y_b = lut_gemm_bucket(&q, b, &layer);
+            assert!(
+                mse(&y_ref.data, &y_b.data) < 1e-8,
+                "shape ({b},{d_in},{d_out},{k})"
+            );
+        }
+    }
+}

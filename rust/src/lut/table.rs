@@ -1,0 +1,116 @@
+//! Precomputed product tables (paper §4.2, "Bucket Table Lookup").
+//!
+//! For centroid `c_j` and quantized activation value `q`, the product
+//! `c_j · q` is precomputed. The full table is 16 × 256 f32 (16 KiB —
+//! fits L1); the symmetric variant stores only the non-negative half and
+//! applies the sign during accumulation, exactly the storage trick the
+//! paper describes for symmetric quantization.
+
+use super::MAX_CENTROIDS;
+
+/// Full product table: `table[j][q + 128] = c_j · q`.
+#[derive(Clone, Debug)]
+pub struct ProductTable {
+    /// Row-major `[MAX_CENTROIDS][256]`.
+    full: Vec<f32>,
+    /// Symmetric half: `[MAX_CENTROIDS][128]`, entry `q in 0..128`.
+    half: Vec<f32>,
+}
+
+impl ProductTable {
+    pub fn build(centroids: &[f32; MAX_CENTROIDS]) -> ProductTable {
+        let mut full = vec![0.0f32; MAX_CENTROIDS * 256];
+        let mut half = vec![0.0f32; MAX_CENTROIDS * 128];
+        for j in 0..MAX_CENTROIDS {
+            let c = centroids[j];
+            for q in -128i32..128 {
+                full[j * 256 + (q + 128) as usize] = c * q as f32;
+            }
+            for q in 0i32..128 {
+                half[j * 128 + q as usize] = c * q as f32;
+            }
+        }
+        ProductTable { full, half }
+    }
+
+    /// Full-table lookup: `c_j · q`.
+    #[inline]
+    pub fn lookup(&self, j: u8, q: i8) -> f32 {
+        self.full[j as usize * 256 + (q as i32 + 128) as usize]
+    }
+
+    /// Half-table lookup with explicit sign handling (symmetric trick).
+    /// `q = -128` saturates to `-c_j·127 - c_j` = handled by widening.
+    #[inline]
+    pub fn lookup_sym(&self, j: u8, q: i8) -> f32 {
+        let qi = q as i32;
+        let mag = qi.unsigned_abs().min(127) as usize;
+        let v = self.half[j as usize * 128 + mag];
+        if qi < 0 {
+            // -128 magnitude-saturates to 127 in the table; add the
+            // residual step explicitly so the lookup stays exact.
+            let extra = if qi == -128 { self.half[j as usize * 128 + 1] } else { 0.0 };
+            -(v + extra)
+        } else {
+            v
+        }
+    }
+
+    /// Bytes of the full table (memory accounting for benches).
+    pub fn bytes_full(&self) -> usize {
+        self.full.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes of the symmetric half table.
+    pub fn bytes_sym(&self) -> usize {
+        self.half.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn table_with(rng: &mut Rng) -> ([f32; MAX_CENTROIDS], ProductTable) {
+        let mut cs = [0.0f32; MAX_CENTROIDS];
+        for c in cs.iter_mut() {
+            *c = rng.normal_scaled(0.0, 0.1);
+        }
+        let t = ProductTable::build(&cs);
+        (cs, t)
+    }
+
+    #[test]
+    fn full_lookup_exact() {
+        let mut rng = Rng::new(120);
+        let (cs, t) = table_with(&mut rng);
+        for j in 0..MAX_CENTROIDS as u8 {
+            for q in [-128i8, -127, -1, 0, 1, 63, 127] {
+                let expect = cs[j as usize] * q as f32;
+                assert_eq!(t.lookup(j, q), expect, "j={j} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn sym_lookup_matches_full() {
+        let mut rng = Rng::new(121);
+        let (_, t) = table_with(&mut rng);
+        for j in 0..MAX_CENTROIDS as u8 {
+            for qi in -128i32..128 {
+                let q = qi as i8;
+                let a = t.lookup(j, q);
+                let b = t.lookup_sym(j, q);
+                assert!((a - b).abs() < 1e-5, "j={j} q={q}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_table_is_half_size() {
+        let mut rng = Rng::new(122);
+        let (_, t) = table_with(&mut rng);
+        assert_eq!(t.bytes_sym() * 2, t.bytes_full());
+    }
+}

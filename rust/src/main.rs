@@ -1,0 +1,199 @@
+//! `lcd` — the coordinator CLI.
+//!
+//! ```text
+//! lcd train     --model gpt [--steps N]        train a model, save checkpoint
+//! lcd compress  --model gpt [--min-k K]        LCD-compress, print per-layer report
+//! lcd eval      --model gpt                    FP vs LCD perplexity / accuracy
+//! lcd serve     --model gpt [--engine lut|fp]  run the batched generation server
+//! lcd repro     --exp table1|...|all           regenerate a paper table/figure
+//! ```
+//!
+//! Global flags: `--config <file.json>`, `--set key=value` (repeatable),
+//! `--artifacts <dir>`.
+
+use anyhow::{bail, Context, Result};
+use lcd::config::LcdConfig;
+use lcd::coordinator::server;
+use lcd::data::CharTokenizer;
+use lcd::repro;
+use lcd::repro::shared::{open_runtime, train_or_load};
+use lcd::util::Rng;
+
+struct Args {
+    command: String,
+    exp: Option<String>,
+    engine: String,
+    requests: usize,
+    cfg: LcdConfig,
+}
+
+fn parse_args() -> Result<Args> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        bail!("usage: lcd <train|compress|eval|serve|repro> [flags]\n{}", HELP);
+    }
+    let command = argv[0].clone();
+    let mut cfg = LcdConfig::default();
+    let mut exp = None;
+    let mut engine = "lut".to_string();
+    let mut requests = 32usize;
+    let mut i = 1;
+    // --config applies first so --set/--model can override it.
+    let mut sets: Vec<String> = Vec::new();
+    while i < argv.len() {
+        let flag = argv[i].clone();
+        let take = |i: &mut usize| -> Result<String> {
+            *i += 1;
+            argv.get(*i).cloned().with_context(|| format!("flag {flag} needs a value"))
+        };
+        match flag.as_str() {
+            "--config" => {
+                let path = take(&mut i)?;
+                cfg = LcdConfig::load(&path)?;
+            }
+            "--set" => sets.push(take(&mut i)?),
+            "--model" => sets.push(format!("model={}", take(&mut i)?)),
+            "--steps" => sets.push(format!("train_steps={}", take(&mut i)?)),
+            "--min-k" => sets.push(format!("distill.min_k={}", take(&mut i)?)),
+            "--act-bits" => sets.push(format!("act_bits={}", take(&mut i)?)),
+            "--seed" => sets.push(format!("seed={}", take(&mut i)?)),
+            "--artifacts" => sets.push(format!("artifacts_dir={}", take(&mut i)?)),
+            "--exp" => exp = Some(take(&mut i)?),
+            "--engine" => engine = take(&mut i)?,
+            "--requests" => requests = take(&mut i)?.parse()?,
+            "--help" | "-h" => bail!("{}", HELP),
+            other => bail!("unknown flag '{other}'\n{}", HELP),
+        }
+        i += 1;
+    }
+    for kv in &sets {
+        cfg.set_override(kv)?;
+    }
+    Ok(Args { command, exp, engine, requests, cfg })
+}
+
+const HELP: &str = "\
+lcd — LCD: extreme low-bit clustering via knowledge distillation
+commands:
+  train      train a model via the AOT train_step artifact
+  compress   run the LCD pipeline, print the per-layer report
+  eval       compare FP vs LCD quality
+  serve      run the batched generation server on a synthetic request mix
+  repro      regenerate a paper experiment (--exp table1|table2|table3|fig2|fig6|fig7|fig8|all)
+flags:
+  --config <file>  --set k=v  --model gpt|llama|bert  --steps N  --min-k K
+  --act-bits 8|4   --seed N   --artifacts <dir>  --engine lut|fp  --requests N";
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args.cfg),
+        "compress" => cmd_compress(&args.cfg),
+        "eval" => cmd_eval(&args.cfg),
+        "serve" => cmd_serve(&args.cfg, &args.engine, args.requests),
+        "repro" => {
+            let exp = args.exp.context("repro needs --exp <id>")?;
+            repro::run(&exp, &args.cfg)
+        }
+        other => bail!("unknown command '{other}'\n{HELP}"),
+    }
+}
+
+fn cmd_train(cfg: &LcdConfig) -> Result<()> {
+    let rt = open_runtime(cfg)?;
+    let tm = train_or_load(&rt, cfg)?;
+    if tm.losses.is_empty() {
+        println!("checkpoint already trained (delete artifacts/checkpoints to retrain)");
+    } else {
+        println!(
+            "trained {}: loss {:.3} -> {:.3} over {} steps",
+            tm.runner.stem,
+            tm.losses[0],
+            tm.losses[tm.losses.len() - 1],
+            tm.losses.len()
+        );
+    }
+    if !tm.runner.is_bert() {
+        println!("eval ppl: {:.3}", tm.ppl_fp(&tm.eval_stream)?);
+    }
+    Ok(())
+}
+
+fn cmd_compress(cfg: &LcdConfig) -> Result<()> {
+    let rt = open_runtime(cfg)?;
+    let tm = train_or_load(&rt, cfg)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xc0);
+    let cm = tm.compress(cfg, &mut rng)?;
+    println!(
+        "{:<16} {:>4} {:>12} {:>12} {:>8} {:>8}",
+        "layer", "k", "mse", "hess loss", "s_m", "steps"
+    );
+    for r in &cm.reports {
+        println!(
+            "{:<16} {:>4} {:>12.3e} {:>12.3e} {:>8.4} {:>8}",
+            r.name, r.k, r.mse, r.hessian_loss, r.s_m, r.steps
+        );
+    }
+    println!(
+        "avg centroids {:.2} (= {:.2} bits), compressed weights {} KiB, acts INT{}",
+        cm.avg_centroids(),
+        cm.avg_bits(),
+        cm.weight_bytes() / 1024,
+        cm.act_bits
+    );
+    Ok(())
+}
+
+fn cmd_eval(cfg: &LcdConfig) -> Result<()> {
+    let rt = open_runtime(cfg)?;
+    let tm = train_or_load(&rt, cfg)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xe0);
+    let cm = tm.compress(cfg, &mut rng)?;
+    if tm.runner.is_bert() {
+        let set = repro::shared::bert_eval_set(cfg.seed);
+        println!(
+            "bert acc: fp {:.3}  lcd {:.3}",
+            tm.bert_accuracy(&tm.store, &set)?,
+            tm.bert_accuracy_lut(&cm, &set)?
+        );
+    } else {
+        println!(
+            "ppl: fp {:.3}  lcd {:.3}",
+            tm.ppl_fp(&tm.eval_stream)?,
+            tm.ppl_lut(&cm, &tm.eval_stream)?
+        );
+    }
+    println!("avg centroids {:.2}", cm.avg_centroids());
+    Ok(())
+}
+
+fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize) -> Result<()> {
+    // The engine (and its PJRT runtime) is built inside the worker thread.
+    let cfg2 = cfg.clone();
+    let engine_kind2 = engine_kind.to_string();
+    let handle = server::start(cfg.serve.max_batch, cfg.serve.queue_cap, move || {
+        lcd::repro::shared::build_engine(&cfg2, &engine_kind2)
+    });
+
+    let tok = CharTokenizer::new();
+    let prompts = ["the cat ", "a bird moves ", "two plus three is ", "the river is "];
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let p = tok.encode(prompts[i % prompts.len()]);
+        rxs.push(handle.submit(p, cfg.serve.gen_tokens));
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        if i < 4 {
+            println!(
+                "req {:>3}: '{}' ({:.1} ms)",
+                resp.id,
+                tok.decode(&resp.tokens),
+                resp.latency.as_secs_f64() * 1e3
+            );
+        }
+    }
+    let snap = handle.shutdown();
+    println!("engine {engine_kind}: {}", snap.report());
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! `.lcdw` — tiny binary checkpoint format shared with build-time python.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  b"LCDW"        4 bytes
+//! version u32           (currently 1)
+//! n_tensors u32
+//! per tensor:
+//!   name_len u32, name bytes (utf-8)
+//!   ndim u32, dims u32 × ndim
+//!   data f32 × prod(dims)
+//! ```
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"LCDW";
+const VERSION: u32 = 1;
+
+/// Write tensors to a `.lcdw` file.
+pub fn write_lcdw<'a>(
+    path: &str,
+    tensors: impl Iterator<Item = (&'a str, &'a Tensor)>,
+) -> Result<()> {
+    let items: Vec<(&str, &Tensor)> = tensors.collect();
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+    for (name, t) in items {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+        for &d in t.shape() {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in t.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+/// Read all tensors from a `.lcdw` file.
+pub fn read_lcdw(path: &str) -> Result<Vec<(String, Tensor)>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {path}"))?
+        .read_to_end(&mut bytes)?;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("truncated lcdw file at byte {}", *pos);
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let u32_at = |pos: &mut usize| -> Result<u32> {
+        let b = take(pos, 4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    };
+
+    if take(&mut pos, 4)? != MAGIC {
+        bail!("bad magic (not an lcdw file)");
+    }
+    let version = u32_at(&mut pos)?;
+    if version != VERSION {
+        bail!("unsupported lcdw version {version}");
+    }
+    let n = u32_at(&mut pos)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = u32_at(&mut pos)? as usize;
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+        let ndim = u32_at(&mut pos)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32_at(&mut pos)? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let raw = take(&mut pos, count * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((name, Tensor::new(shape, data)?));
+    }
+    if pos != bytes.len() {
+        bail!("trailing bytes in lcdw file");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(210);
+        let a = Tensor::randn(vec![3, 5], 1.0, &mut rng);
+        let b = Tensor::randn(vec![7], 0.5, &mut rng);
+        let path = std::env::temp_dir().join("lcdw_rt.lcdw");
+        let path = path.to_str().unwrap();
+        write_lcdw(path, vec![("alpha", &a), ("beta.gamma", &b)].into_iter()).unwrap();
+        let back = read_lcdw(path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "alpha");
+        assert_eq!(&back[0].1, &a);
+        assert_eq!(back[1].0, "beta.gamma");
+        assert_eq!(&back[1].1, &b);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let path = std::env::temp_dir().join("lcdw_bad.lcdw");
+        let path = path.to_str().unwrap();
+        std::fs::write(path, b"NOPE").unwrap();
+        assert!(read_lcdw(path).is_err());
+        std::fs::write(path, b"LCDW\x01\x00\x00\x00\x05\x00\x00\x00").unwrap();
+        assert!(read_lcdw(path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

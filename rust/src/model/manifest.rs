@@ -1,0 +1,237 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.json` is written by `python/compile/aot.py` and is
+//! the single source of truth binding the layers together: parameter
+//! order (= artifact input order), tensor shapes/dtypes, model dims, and
+//! which parameters are clusterable linear layers (plus the index of the
+//! matching calibration output).
+
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+
+/// Dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" | "float32" => Dtype::F32,
+            "i32" | "int32" => Dtype::I32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+}
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_usize_vec()?,
+            dtype: Dtype::parse(v.req("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One model parameter as declared by the python model definition.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Gaussian init std (0 ⇒ constant init).
+    pub init_std: f32,
+    /// Constant-ones init (norm gains).
+    pub init_one: bool,
+    /// `Some(i)` when this is a clusterable linear weight whose inputs are
+    /// the `i`-th output of the `calib_<model>` artifact.
+    pub linear: Option<usize>,
+}
+
+/// A model's static description.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub kind: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelSpec {
+    /// Names of clusterable linear parameters, in calibration-output order.
+    pub fn linear_params(&self) -> Vec<&ParamSpec> {
+        let mut ls: Vec<&ParamSpec> = self.params.iter().filter(|p| p.linear.is_some()).collect();
+        ls.sort_by_key(|p| p.linear.unwrap());
+        ls
+    }
+}
+
+/// One AOT artifact (an HLO-text file plus its I/O contract).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub models: Vec<ModelSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        Self::from_json(dir, &doc)
+    }
+
+    pub fn from_json(dir: &str, doc: &Json) -> Result<Manifest> {
+        let mut models = Vec::new();
+        for (name, m) in doc.req("models")?.as_obj()? {
+            let cfg = m.req("config")?;
+            let mut params = Vec::new();
+            for p in m.req("params")?.as_arr()? {
+                params.push(ParamSpec {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p.req("shape")?.as_usize_vec()?,
+                    init_std: p.req("init_std")?.as_f64()? as f32,
+                    init_one: p.get("init_one").map(|v| v.as_bool()).transpose()?.unwrap_or(false),
+                    linear: match p.get("linear") {
+                        None | Some(Json::Null) => None,
+                        Some(v) => Some(v.as_usize()?),
+                    },
+                });
+            }
+            models.push(ModelSpec {
+                name: name.clone(),
+                kind: m.req("kind")?.as_str()?.to_string(),
+                batch: cfg.req("batch")?.as_usize()?,
+                seq: cfg.req("seq")?.as_usize()?,
+                vocab: cfg.req("vocab")?.as_usize()?,
+                d_model: cfg.req("d_model")?.as_usize()?,
+                params,
+            });
+        }
+        let mut artifacts = Vec::new();
+        for (name, a) in doc.req("artifacts")?.as_obj()? {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                file: a.req("file")?.as_str()?.to_string(),
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { dir: dir.to_string(), models, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("model '{name}' not in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<String> {
+        Ok(format!("{}/{}", self.dir, self.artifact(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub const SAMPLE: &str = r#"{
+      "models": {
+        "gpt_mini": {
+          "kind": "gpt",
+          "config": {"batch": 8, "seq": 64, "vocab": 96, "d_model": 128},
+          "params": [
+            {"name": "wte", "shape": [96, 128], "init_std": 0.02},
+            {"name": "ln_g", "shape": [128], "init_std": 0, "init_one": true},
+            {"name": "h0.wqkv", "shape": [128, 384], "init_std": 0.02, "linear": 0}
+          ]
+        }
+      },
+      "artifacts": {
+        "fwd_gpt_mini": {
+          "file": "fwd_gpt_mini.hlo.txt",
+          "inputs": [
+            {"name": "wte", "shape": [96, 128], "dtype": "f32"},
+            {"name": "tokens", "shape": [8, 64], "dtype": "i32"}
+          ],
+          "outputs": [{"name": "logits", "shape": [8, 64, 96], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json("artifacts", &doc).unwrap();
+        let model = m.model("gpt_mini").unwrap();
+        assert_eq!(model.batch, 8);
+        assert_eq!(model.params.len(), 3);
+        assert!(model.params[1].init_one);
+        let linears = model.linear_params();
+        assert_eq!(linears.len(), 1);
+        assert_eq!(linears[0].name, "h0.wqkv");
+
+        let a = m.artifact("fwd_gpt_mini").unwrap();
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].count(), 8 * 64 * 96);
+        assert_eq!(m.artifact_path("fwd_gpt_mini").unwrap(), "artifacts/fwd_gpt_mini.hlo.txt");
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let doc = Json::parse(r#"{"models": {}}"#).unwrap();
+        assert!(Manifest::from_json("x", &doc).is_err());
+        let doc2 = Json::parse(r#"{"models": {}, "artifacts": {}}"#).unwrap();
+        let m = Manifest::from_json("x", &doc2).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+}

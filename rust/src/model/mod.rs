@@ -1,0 +1,209 @@
+//! Model metadata and weight storage.
+//!
+//! The JAX side (`python/compile/aot.py`) emits `artifacts/manifest.json`
+//! describing every model (parameter names/shapes/init-stds, which
+//! parameters are clusterable linear weights, compiled batch/seq dims)
+//! and every artifact (file + ordered input/output specs). This module
+//! parses the manifest, owns the host-side [`WeightStore`], and
+//! serializes checkpoints in the tiny `.lcdw` binary format shared with
+//! the build-time python (see `python/compile/lcdw.py`).
+
+pub mod lcdw;
+pub mod manifest;
+
+pub use lcdw::{read_lcdw, write_lcdw};
+pub use manifest::{ArtifactSpec, Manifest, ModelSpec, ParamSpec, TensorSpec};
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+
+/// Ordered named parameter set for one model. Order always matches the
+/// manifest's `params` list — which is the order every AOT artifact
+/// expects its parameter inputs in.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+}
+
+impl WeightStore {
+    /// Random-initialize from the manifest parameter specs (the same
+    /// shapes/stds the python model definitions declare).
+    pub fn init(spec: &ModelSpec, rng: &mut Rng) -> WeightStore {
+        let mut names = Vec::with_capacity(spec.params.len());
+        let mut tensors = Vec::with_capacity(spec.params.len());
+        for p in &spec.params {
+            names.push(p.name.clone());
+            let t = if p.init_std > 0.0 {
+                Tensor::randn(p.shape.clone(), p.init_std, rng)
+            } else if p.init_one {
+                Tensor::full(p.shape.clone(), 1.0)
+            } else {
+                Tensor::zeros(p.shape.clone())
+            };
+            tensors.push(t);
+        }
+        WeightStore { names, tensors }
+    }
+
+    pub fn from_pairs(pairs: Vec<(String, Tensor)>) -> WeightStore {
+        let (names, tensors) = pairs.into_iter().unzip();
+        WeightStore { names, tensors }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        let idx = self.index_of(name)?;
+        Ok(&self.tensors[idx])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        let idx = self.index_of(name)?;
+        Ok(&mut self.tensors[idx])
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let idx = self.index_of(name)?;
+        let expect = self.tensors[idx].shape().to_vec();
+        anyhow::ensure!(
+            t.shape() == &expect[..],
+            "shape mismatch for '{name}': {:?} vs {:?}",
+            t.shape(),
+            expect
+        );
+        self.tensors[idx] = t;
+        Ok(())
+    }
+
+    fn index_of(&self, name: &str) -> Result<usize> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow!("no parameter named '{name}'"))
+    }
+
+    /// Total scalar parameter count.
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Iterate (name, tensor).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names.iter().map(|s| s.as_str()).zip(self.tensors.iter())
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        write_lcdw(path, self.iter())
+    }
+
+    pub fn load(path: &str, spec: &ModelSpec) -> Result<WeightStore> {
+        let pairs = read_lcdw(path)?;
+        let mut store = WeightStore::from_pairs(pairs);
+        // Reorder to manifest order and validate shapes.
+        let mut names = Vec::with_capacity(spec.params.len());
+        let mut tensors = Vec::with_capacity(spec.params.len());
+        for p in &spec.params {
+            let t = store.get(&p.name)?.clone();
+            anyhow::ensure!(
+                t.shape() == &p.shape[..],
+                "checkpoint shape mismatch for '{}': {:?} vs {:?}",
+                p.name,
+                t.shape(),
+                p.shape
+            );
+            names.push(p.name.clone());
+            tensors.push(t);
+        }
+        store = WeightStore { names, tensors };
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            kind: "gpt".into(),
+            batch: 2,
+            seq: 4,
+            vocab: 8,
+            d_model: 4,
+            params: vec![
+                ParamSpec {
+                    name: "wte".into(),
+                    shape: vec![8, 4],
+                    init_std: 0.02,
+                    init_one: false,
+                    linear: None,
+                },
+                ParamSpec {
+                    name: "ln_g".into(),
+                    shape: vec![4],
+                    init_std: 0.0,
+                    init_one: true,
+                    linear: None,
+                },
+                ParamSpec {
+                    name: "w1".into(),
+                    shape: vec![4, 4],
+                    init_std: 0.02,
+                    init_one: false,
+                    linear: Some(0),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_follows_spec() {
+        let mut rng = Rng::new(200);
+        let ws = WeightStore::init(&toy_spec(), &mut rng);
+        assert_eq!(ws.len(), 3);
+        assert_eq!(ws.get("wte").unwrap().shape(), &[8, 4]);
+        assert!(ws.get("ln_g").unwrap().data().iter().all(|&v| v == 1.0));
+        assert!(ws.n_params() > 0);
+    }
+
+    #[test]
+    fn set_validates_shape() {
+        let mut rng = Rng::new(201);
+        let mut ws = WeightStore::init(&toy_spec(), &mut rng);
+        assert!(ws.set("w1", Tensor::zeros(vec![4, 4])).is_ok());
+        assert!(ws.set("w1", Tensor::zeros(vec![2, 2])).is_err());
+        assert!(ws.set("missing", Tensor::zeros(vec![1])).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(202);
+        let spec = toy_spec();
+        let ws = WeightStore::init(&spec, &mut rng);
+        let path = std::env::temp_dir().join("lcd_test_ws.lcdw");
+        let path = path.to_str().unwrap();
+        ws.save(path).unwrap();
+        let back = WeightStore::load(path, &spec).unwrap();
+        for (a, b) in ws.tensors().iter().zip(back.tensors()) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,341 @@
+//! Model compression: calibration → smoothing → distillation → LUT.
+
+use crate::clustering::Clustering;
+use crate::config::LcdConfig;
+use crate::distill::{DistillConfig, Distiller, TracePoint};
+use crate::hessian::HessianDiag;
+use crate::lut::LutLayer;
+use crate::model::WeightStore;
+use crate::quant::ActBits;
+use crate::smooth::{adaptive_smooth, clipped_smoothing_mse, SmoothSearch};
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+use super::ModelRunner;
+
+/// One compressed linear layer.
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    pub name: String,
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Clustering over the *smoothed* weights `W·s_m` (row-major d_in×d_out).
+    pub clustering: Clustering,
+    /// Smoothing factor (activations divided by it).
+    pub s_m: f32,
+    /// Activation quantization step after smoothing.
+    pub s_q: f32,
+    /// Compiled LUT for the rust serving engine.
+    pub lut: LutLayer,
+}
+
+/// Per-layer compression diagnostics (Table/Fig harness food).
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub k: usize,
+    pub mse: f64,
+    pub hessian_loss: f64,
+    pub s_m: f32,
+    pub smooth_mse: f64,
+    pub smooth_mse_unsmoothed: f64,
+    pub steps: usize,
+}
+
+/// A fully compressed model.
+#[derive(Clone, Debug)]
+pub struct CompressedModel {
+    /// Original FP weights (all params, unsmoothed).
+    pub store: WeightStore,
+    pub layers: Vec<CompressedLayer>,
+    pub reports: Vec<LayerReport>,
+    pub traces: Vec<Vec<TracePoint>>,
+    pub act_bits: u32,
+}
+
+impl CompressedModel {
+    pub fn qmax(&self) -> i32 {
+        if self.act_bits == 4 {
+            7
+        } else {
+            127
+        }
+    }
+
+    pub fn act_bits_enum(&self) -> ActBits {
+        if self.act_bits == 4 {
+            ActBits::Int4
+        } else {
+            ActBits::Int8
+        }
+    }
+
+    /// Average centroid count across layers (the paper's layer-wise
+    /// dynamic allocation metric, Fig. 8).
+    pub fn avg_centroids(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.clustering.k() as f64).sum::<f64>() / self.layers.len() as f64
+    }
+
+    /// Equivalent weight bit-width: log2(avg centroids).
+    pub fn avg_bits(&self) -> f64 {
+        self.avg_centroids().log2()
+    }
+
+    /// Total compressed weight bytes (packed indices + tables).
+    pub fn weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.lut.bytes()).sum()
+    }
+}
+
+/// Compress every clusterable linear layer of `store`.
+///
+/// `calib_tokens` supplies the calibration batches (token buffers of the
+/// compiled shape). `eval_gate` optionally provides an end-to-end quality
+/// score used by the speculative accept test (lower is better).
+pub fn compress_model(
+    runner: &ModelRunner,
+    cfg: &LcdConfig,
+    store: &WeightStore,
+    calib_tokens: &[Vec<i32>],
+) -> Result<CompressedModel> {
+    anyhow::ensure!(!calib_tokens.is_empty(), "need at least one calibration batch");
+    let bits = if cfg.act_bits == 4 { ActBits::Int4 } else { ActBits::Int8 };
+
+    // ---- 1. Calibration: gather per-linear activations over batches.
+    let linears = runner.spec.linear_params();
+    let linears: Vec<(String, Vec<usize>)> =
+        linears.iter().map(|p| (p.name.clone(), p.shape.clone())).collect();
+    let mut acts: Vec<Vec<f32>> = vec![Vec::new(); linears.len()];
+    for tokens in calib_tokens {
+        let batch_acts = runner.calib(store, tokens)?;
+        anyhow::ensure!(batch_acts.len() == linears.len(), "calib output count mismatch");
+        for (i, a) in batch_acts.into_iter().enumerate() {
+            acts[i].extend(a);
+        }
+    }
+
+    let mut layers = Vec::with_capacity(linears.len());
+    let mut reports = Vec::with_capacity(linears.len());
+    let mut traces = Vec::with_capacity(linears.len());
+
+    // Pass 1: per-layer smoothing + Hessians + DBCI init losses. The
+    // shared progressive threshold θ = theta_rel × median(init losses)
+    // water-fills centroids toward sensitive layers (Fig. 8's dynamic
+    // allocation), instead of degrading every layer by the same ratio.
+    struct Prep {
+        s_m: f32,
+        smooth_mse: f64,
+        smooth_mse_unsmoothed: f64,
+        h_per_weight: Vec<f32>,
+        w_smoothed: Vec<f32>,
+        init_loss: f64,
+    }
+    let mut preps: Vec<Prep> = Vec::with_capacity(linears.len());
+    for (li, (name, shape)) in linears.iter().enumerate() {
+        let (d_in, d_out) = (shape[0], shape[1]);
+        let x = Matrix::new(acts[li].len() / d_in, d_in, acts[li].clone())?;
+        let (s_m, smooth_mse, smooth_mse_unsmoothed) = if cfg.adaptive_smooth {
+            let r = adaptive_smooth(&x.data, &SmoothSearch { grid: 20, bits });
+            (r.s_m, r.mse, r.mse_unsmoothed)
+        } else {
+            let absmax = x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
+            let full = absmax / bits.qmax() as f32;
+            let s = full.powf(cfg.fixed_smooth);
+            (
+                s,
+                clipped_smoothing_mse(&x.data, s, bits),
+                clipped_smoothing_mse(&x.data, 1.0, bits),
+            )
+        };
+        let x_smoothed = Matrix {
+            rows: x.rows,
+            cols: x.cols,
+            data: x.data.iter().map(|v| v / s_m).collect(),
+        };
+        let hdiag = HessianDiag::from_activations(&x_smoothed, 0.01);
+        let h_per_weight = hdiag.per_weight(d_out);
+        let w = store.get(name)?;
+        anyhow::ensure!(w.shape() == &shape[..], "weight shape mismatch for {name}");
+        let w_smoothed: Vec<f32> = w.data().iter().map(|v| v * s_m).collect();
+        let (init_cl, _) = crate::clustering::dbci_init(&w_smoothed, &cfg.distill.dbci);
+        let init_loss =
+            init_cl.hessian_loss(&w_smoothed, &h_per_weight) / w_smoothed.len() as f64;
+        preps.push(Prep { s_m, smooth_mse, smooth_mse_unsmoothed, h_per_weight, w_smoothed, init_loss });
+    }
+    let mut init_losses: Vec<f64> = preps.iter().map(|p| p.init_loss.max(1e-30)).collect();
+    init_losses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_init = init_losses[init_losses.len() / 2];
+    let theta_abs = Some(cfg.distill.theta_rel * median_init);
+
+    for (li, (name, shape)) in linears.iter().enumerate() {
+        let (d_in, d_out) = (shape[0], shape[1]);
+        let prep = &preps[li];
+        // Activation quant step: after division by s_m the codes are
+        // produced by round(x / (s_m·s_q)); the adaptive search already
+        // folded the quantizer grid into s_m, so s_q = 1 there. (Eq. 11's
+        // two factors collapse into one fused multiplier either way.)
+        let s_q = 1.0f32;
+        let s_m = prep.s_m;
+
+        // ---- Distillation over smoothed weights W·s_m, gated by the
+        // shared θ (water-filling across layers).
+        let dcfg = DistillConfig { theta_abs, ..cfg.distill.clone() };
+        let distiller = Distiller::new(&prep.w_smoothed, &prep.h_per_weight, dcfg);
+        let out = distiller.run(None);
+
+        let mse = out.clustering.mse(&prep.w_smoothed);
+        let report = LayerReport {
+            name: name.clone(),
+            k: out.clustering.k(),
+            mse,
+            hessian_loss: out.final_loss,
+            s_m,
+            smooth_mse: prep.smooth_mse,
+            smooth_mse_unsmoothed: prep.smooth_mse_unsmoothed,
+            steps: out.steps,
+        };
+
+        // ---- LUT compile.
+        let lut = LutLayer::compile(&out.clustering, d_in, d_out, s_m, s_q)?;
+        layers.push(CompressedLayer {
+            name: name.clone(),
+            d_in,
+            d_out,
+            clustering: out.clustering,
+            s_m,
+            s_q,
+            lut,
+        });
+        reports.push(report);
+        traces.push(out.trace);
+        acts[li].clear();
+        acts[li].shrink_to_fit();
+    }
+
+    Ok(CompressedModel {
+        store: store.clone(),
+        layers,
+        reports,
+        traces,
+        act_bits: cfg.act_bits,
+    })
+}
+
+/// Compress with a *host-side* pipeline only (no runtime): used by unit
+/// tests and by table harnesses that operate on synthetic weight matrices
+/// rather than full models.
+pub fn compress_layer_host(
+    weights: &[f32],
+    acts: &Matrix,
+    d_in: usize,
+    d_out: usize,
+    cfg: &LcdConfig,
+) -> Result<(CompressedLayer, LayerReport, Vec<TracePoint>)> {
+    let bits = if cfg.act_bits == 4 { ActBits::Int4 } else { ActBits::Int8 };
+    let (s_m, smooth_mse, smooth_mse_unsmoothed) = if cfg.adaptive_smooth {
+        let r = adaptive_smooth(&acts.data, &SmoothSearch { grid: 20, bits });
+        (r.s_m, r.mse, r.mse_unsmoothed)
+    } else {
+        let absmax = acts.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
+        let full = absmax / bits.qmax() as f32;
+        let s = full.powf(cfg.fixed_smooth);
+        (s, clipped_smoothing_mse(&acts.data, s, bits), clipped_smoothing_mse(&acts.data, 1.0, bits))
+    };
+    let s_q = 1.0f32;
+    let x_smoothed = Matrix {
+        rows: acts.rows,
+        cols: acts.cols,
+        data: acts.data.iter().map(|v| v / s_m).collect(),
+    };
+    let hdiag = HessianDiag::from_activations(&x_smoothed, 0.01);
+    let h_per_weight = hdiag.per_weight(d_out);
+    let w_smoothed: Vec<f32> = weights.iter().map(|v| v * s_m).collect();
+    let out = Distiller::new(&w_smoothed, &h_per_weight, cfg.distill.clone()).run(None);
+    let mse = out.clustering.mse(&w_smoothed);
+    let lut = LutLayer::compile(&out.clustering, d_in, d_out, s_m, s_q)?;
+    let layer = CompressedLayer {
+        name: "host".into(),
+        d_in,
+        d_out,
+        clustering: out.clustering,
+        s_m,
+        s_q,
+        lut,
+    };
+    let report = LayerReport {
+        name: "host".into(),
+        k: layer.clustering.k(),
+        mse,
+        hessian_loss: out.final_loss,
+        s_m,
+        smooth_mse,
+        smooth_mse_unsmoothed,
+        steps: out.steps,
+    };
+    Ok((layer, report, out.trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_layer(rng: &mut Rng, d_in: usize, d_out: usize) -> (Vec<f32>, Matrix) {
+        let w: Vec<f32> = (0..d_in * d_out)
+            .map(|_| {
+                if rng.uniform() < 0.01 {
+                    rng.normal_scaled(0.0, 0.3)
+                } else {
+                    rng.normal_scaled(0.0, 0.04)
+                }
+            })
+            .collect();
+        let mut x = rng.normal_vec(64 * d_in, 0.0, 0.5);
+        for i in 0..x.len() / 100 {
+            x[i * 100] *= 20.0; // activation outliers
+        }
+        (w, Matrix::new(64, d_in, x).unwrap())
+    }
+
+    #[test]
+    fn host_compression_end_to_end() {
+        let mut rng = Rng::new(220);
+        let (w, x) = toy_layer(&mut rng, 32, 16);
+        let cfg = LcdConfig::default();
+        let (layer, report, trace) = compress_layer_host(&w, &x, 32, 16, &cfg).unwrap();
+        assert!(layer.clustering.k() <= 16, "k = {}", layer.clustering.k());
+        assert!(!trace.is_empty());
+        assert!(report.smooth_mse <= report.smooth_mse_unsmoothed * 1.01);
+        // Reconstruction must be sane for an extreme-low-k table:
+        // relative MSE well under the all-to-mean baseline (1.0).
+        let w_smoothed: Vec<f32> = w.iter().map(|v| v * layer.s_m).collect();
+        let rel = layer.clustering.mse(&w_smoothed) / crate::util::variance(&w_smoothed) as f64;
+        assert!(rel < 0.25, "relative mse {rel} at k={}", layer.clustering.k());
+    }
+
+    #[test]
+    fn lut_layer_consistent_with_clustering() {
+        let mut rng = Rng::new(221);
+        let (w, x) = toy_layer(&mut rng, 24, 8);
+        let cfg = LcdConfig::default();
+        let (layer, _, _) = compress_layer_host(&w, &x, 24, 8, &cfg).unwrap();
+        // LUT dense weights == clustering reconstruction (transposed).
+        let dense = layer.lut.dense_weights();
+        let rec = layer.clustering.reconstruct();
+        assert_eq!(dense.data, rec);
+    }
+
+    #[test]
+    fn int4_config_coarser_quant() {
+        let mut rng = Rng::new(222);
+        let (w, x) = toy_layer(&mut rng, 16, 8);
+        let cfg8 = LcdConfig { act_bits: 8, ..Default::default() };
+        let cfg4 = LcdConfig { act_bits: 4, ..Default::default() };
+        let (_, r8, _) = compress_layer_host(&w, &x, 16, 8, &cfg8).unwrap();
+        let (_, r4, _) = compress_layer_host(&w, &x, 16, 8, &cfg4).unwrap();
+        assert!(r4.smooth_mse >= r8.smooth_mse, "int4 {} vs int8 {}", r4.smooth_mse, r8.smooth_mse);
+    }
+}

@@ -1,0 +1,183 @@
+//! End-to-end LCD pipeline (the paper's Fig. 3 flow):
+//!
+//! ```text
+//! train (AOT train_step)                     — e2e driver only
+//!   └─ calibrate (AOT calib → Hessians + activation samples)
+//!        └─ adaptive smoothing search (Eq. 9, per layer)
+//!             └─ DBCI init + Hessian distillation
+//!                  + progressive/speculative centroid optimization
+//!                  └─ LUT compile (4-bit indices + ≤16 centroids)
+//!                       └─ eval: FP nll artifact vs lut_nll artifact
+//! ```
+//!
+//! Everything below runs in rust; the heavy model math executes inside
+//! the AOT artifacts through PJRT.
+
+pub mod compress;
+pub mod train;
+
+pub use compress::{compress_model, CompressedLayer, CompressedModel, LayerReport};
+pub use train::{train_model, TrainLog};
+
+use crate::config::LcdConfig;
+use crate::data::LmBatch;
+use crate::model::{ModelSpec, WeightStore};
+use crate::runtime::{HostTensor, Runtime};
+use anyhow::Result;
+
+/// Thin helper binding a runtime to one model's artifact set.
+pub struct ModelRunner<'rt> {
+    pub rt: &'rt Runtime,
+    pub spec: ModelSpec,
+    pub stem: String,
+}
+
+impl<'rt> ModelRunner<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: &LcdConfig) -> Result<ModelRunner<'rt>> {
+        let stem = cfg.model.stem().to_string();
+        let spec = rt.manifest().model(&stem)?.clone();
+        Ok(ModelRunner { rt, spec, stem })
+    }
+
+    pub fn is_bert(&self) -> bool {
+        self.spec.kind == "bert"
+    }
+
+    fn param_inputs(&self, store: &WeightStore) -> Vec<HostTensor> {
+        store.tensors().iter().map(|t| HostTensor::F32(t.data().to_vec())).collect()
+    }
+
+    /// Masked NLL through the FP artifact: returns (sum_nll, count).
+    pub fn nll(&self, store: &WeightStore, b: &LmBatch) -> Result<(f64, f64)> {
+        let mut inputs = self.param_inputs(store);
+        inputs.push(HostTensor::I32(b.tokens.clone()));
+        inputs.push(HostTensor::I32(b.targets.clone()));
+        inputs.push(HostTensor::F32(b.mask.clone()));
+        let out = self.rt.exec(&format!("nll_{}", self.stem), &inputs)?;
+        Ok((out[0].scalar_f32()? as f64, out[1].scalar_f32()? as f64))
+    }
+
+    /// Classification NLL (bert): `labels` has length batch.
+    pub fn nll_bert(&self, store: &WeightStore, tokens: &[i32], labels: &[i32]) -> Result<(f64, f64)> {
+        let mut inputs = self.param_inputs(store);
+        inputs.push(HostTensor::I32(tokens.to_vec()));
+        inputs.push(HostTensor::I32(labels.to_vec()));
+        let out = self.rt.exec(&format!("nll_{}", self.stem), &inputs)?;
+        Ok((out[0].scalar_f32()? as f64, out[1].scalar_f32()? as f64))
+    }
+
+    /// Logits through the FP artifact.
+    pub fn fwd(&self, store: &WeightStore, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut inputs = self.param_inputs(store);
+        inputs.push(HostTensor::I32(tokens.to_vec()));
+        let out = self.rt.exec(&format!("fwd_{}", self.stem), &inputs)?;
+        out.into_iter().next().unwrap().into_f32()
+    }
+
+    /// Per-linear calibration activations (row-major `[rows, d_in]`).
+    /// The artifact's trailing checksum output (an anti-DCE guard, see
+    /// `model.calib`) is dropped here.
+    pub fn calib(&self, store: &WeightStore, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let mut inputs = self.param_inputs(store);
+        inputs.push(HostTensor::I32(tokens.to_vec()));
+        let mut out = self.rt.exec(&format!("calib_{}", self.stem), &inputs)?;
+        out.pop();
+        out.into_iter().map(|t| t.into_f32()).collect()
+    }
+
+    /// One SGD step; `momenta` is updated in place. Returns the loss.
+    pub fn train_step(
+        &self,
+        store: &mut WeightStore,
+        momenta: &mut Vec<Vec<f32>>,
+        b: &LmBatch,
+        labels: Option<&[i32]>,
+        lr: f32,
+    ) -> Result<f32> {
+        if momenta.is_empty() {
+            *momenta = store.tensors().iter().map(|t| vec![0.0; t.len()]).collect();
+        }
+        let mut inputs = self.param_inputs(store);
+        for m in momenta.iter() {
+            inputs.push(HostTensor::F32(m.clone()));
+        }
+        inputs.push(HostTensor::I32(b.tokens.clone()));
+        match labels {
+            Some(l) => inputs.push(HostTensor::I32(l.to_vec())),
+            None => {
+                inputs.push(HostTensor::I32(b.targets.clone()));
+                inputs.push(HostTensor::F32(b.mask.clone()));
+            }
+        }
+        inputs.push(HostTensor::F32(vec![lr]));
+        let out = self.rt.exec(&format!("train_step_{}", self.stem), &inputs)?;
+        let n = store.len();
+        let names: Vec<String> = store.names().to_vec();
+        for (i, name) in names.iter().enumerate() {
+            let shape = store.get(name)?.shape().to_vec();
+            let data = out[i].as_f32()?.to_vec();
+            store.set(name, crate::tensor::Tensor::new(shape, data)?)?;
+        }
+        for (i, m) in momenta.iter_mut().enumerate() {
+            *m = out[n + i].as_f32()?.to_vec();
+        }
+        out[2 * n].scalar_f32()
+    }
+
+    /// Masked NLL through the LUT artifact for a compressed model.
+    pub fn lut_nll(
+        &self,
+        cm: &CompressedModel,
+        b: &LmBatch,
+        labels: Option<&[i32]>,
+    ) -> Result<(f64, f64)> {
+        let mut inputs = self.lut_param_inputs(cm);
+        inputs.push(HostTensor::I32(b.tokens.clone()));
+        match labels {
+            Some(l) => inputs.push(HostTensor::I32(l.to_vec())),
+            None => {
+                inputs.push(HostTensor::I32(b.targets.clone()));
+                inputs.push(HostTensor::F32(b.mask.clone()));
+            }
+        }
+        inputs.push(HostTensor::F32(vec![cm.qmax() as f32]));
+        let out = self.rt.exec(&format!("lut_nll_{}", self.stem), &inputs)?;
+        Ok((out[0].scalar_f32()? as f64, out[1].scalar_f32()? as f64))
+    }
+
+    /// Logits through the LUT artifact.
+    pub fn lut_fwd(&self, cm: &CompressedModel, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut inputs = self.lut_param_inputs(cm);
+        inputs.push(HostTensor::I32(tokens.to_vec()));
+        inputs.push(HostTensor::F32(vec![cm.qmax() as f32]));
+        let out = self.rt.exec(&format!("lut_fwd_{}", self.stem), &inputs)?;
+        out.into_iter().next().unwrap().into_f32()
+    }
+
+    fn lut_param_inputs(&self, cm: &CompressedModel) -> Vec<HostTensor> {
+        // Non-linear params in spec order, then per-linear LUT tuples.
+        let mut inputs = Vec::new();
+        for p in &self.spec.params {
+            if p.linear.is_none() {
+                inputs.push(HostTensor::F32(cm.store.get(&p.name).unwrap().data().to_vec()));
+            }
+        }
+        for layer in &cm.layers {
+            let mut cents = vec![0.0f32; crate::lut::MAX_CENTROIDS];
+            cents[..layer.clustering.k()].copy_from_slice(&layer.clustering.centroids);
+            inputs.push(HostTensor::F32(cents));
+            let idx: Vec<i32> = layer.clustering.assignment.iter().map(|&a| a as i32).collect();
+            inputs.push(HostTensor::I32(idx));
+            inputs.push(HostTensor::F32(vec![1.0 / (layer.s_m * layer.s_q)]));
+            inputs.push(HostTensor::F32(vec![layer.s_q]));
+        }
+        inputs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // ModelRunner is integration-tested against real artifacts in
+    // rust/tests/pipeline_e2e.rs; unit coverage of the pieces lives in
+    // compress.rs / train.rs.
+}

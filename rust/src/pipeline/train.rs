@@ -1,0 +1,119 @@
+//! Training driver: loops the AOT `train_step` artifact from rust.
+//!
+//! Used by the end-to-end example to produce a real (small) language
+//! model before compression — the paper's teacher. Fwd+bwd+SGD run fused
+//! inside one XLA executable; rust owns the data order, LR schedule and
+//! loss logging.
+
+use crate::data::{sample_lm_batch, LmBatch};
+use crate::model::WeightStore;
+use crate::util::Rng;
+use anyhow::Result;
+
+use super::ModelRunner;
+
+/// Loss trajectory of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+}
+
+impl TrainLog {
+    /// Mean of the last `n` recorded losses.
+    pub fn tail_mean(&self, n: usize) -> f32 {
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().sum::<f32>() / tail.len() as f32
+    }
+}
+
+/// Train an LM on a token stream for `steps` steps. Returns the loss log.
+///
+/// Cosine LR decay from `lr` to `lr/10` with a short linear warmup —
+/// enough schedule realism for the loss curve in EXPERIMENTS.md without
+/// extra knobs.
+pub fn train_model(
+    runner: &ModelRunner,
+    store: &mut WeightStore,
+    stream: &[i32],
+    steps: usize,
+    lr: f32,
+    rng: &mut Rng,
+) -> Result<TrainLog> {
+    let batch = runner.spec.batch;
+    let seq = runner.spec.seq;
+    let mut momenta: Vec<Vec<f32>> = Vec::new();
+    let mut log = TrainLog::default();
+    let warmup = (steps / 20).max(1);
+    for step in 0..steps {
+        let b = sample_lm_batch(stream, batch, seq, rng);
+        let lr_t = if step < warmup {
+            lr * (step + 1) as f32 / warmup as f32
+        } else {
+            let t = (step - warmup) as f32 / (steps - warmup).max(1) as f32;
+            let floor = lr * 0.1;
+            floor + 0.5 * (lr - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+        };
+        let loss = runner.train_step(store, &mut momenta, &b, None, lr_t)?;
+        log.losses.push(loss);
+    }
+    Ok(log)
+}
+
+/// Train the BERT classifier on (tokens, labels) examples.
+pub fn train_bert(
+    runner: &ModelRunner,
+    store: &mut WeightStore,
+    examples: &[(Vec<i32>, i32)],
+    steps: usize,
+    lr: f32,
+    rng: &mut Rng,
+) -> Result<TrainLog> {
+    let batch = runner.spec.batch;
+    let seq = runner.spec.seq;
+    let mut momenta: Vec<Vec<f32>> = Vec::new();
+    let mut log = TrainLog::default();
+    for _ in 0..steps {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (t, l) = &examples[rng.below(examples.len())];
+            tokens.extend_from_slice(t);
+            labels.push(*l);
+        }
+        let b = LmBatch { batch, seq, tokens, targets: vec![0; batch * seq], mask: vec![0.0; batch * seq] };
+        let loss = runner.train_step(store, &mut momenta, &b, Some(&labels), lr)?;
+        log.losses.push(loss);
+    }
+    Ok(log)
+}
+
+/// Pad or truncate a token list to exactly `seq` entries (BERT inputs).
+pub fn pad_to_seq(mut ids: Vec<i32>, seq: usize) -> Vec<i32> {
+    ids.truncate(seq);
+    while ids.len() < seq {
+        ids.push(0);
+    }
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_mean() {
+        let log = TrainLog { losses: vec![5.0, 4.0, 3.0, 2.0] };
+        assert_eq!(log.tail_mean(2), 2.5);
+        assert_eq!(log.tail_mean(100), 3.5);
+        assert!(TrainLog::default().tail_mean(3).is_nan());
+    }
+
+    #[test]
+    fn pad_to_seq_works() {
+        assert_eq!(pad_to_seq(vec![1, 2], 4), vec![1, 2, 0, 0]);
+        assert_eq!(pad_to_seq(vec![1, 2, 3, 4, 5], 3), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,122 @@
+//! Quantization substrate.
+//!
+//! * [`rtn`] — round-to-nearest uniform quantizers (symmetric and
+//!   asymmetric), the "conventional quantization" comparator of Fig. 2 and
+//!   the activation quantizer of the LUT path (Eq. 10/11).
+//! * [`gptq`] — a diagonal-Hessian ordered-quantization baseline in the
+//!   spirit of GPTQ (Frantar et al. 2022), used for Table 2.
+//! * Activation INT8/INT4 helpers shared by the smoothing search (§3.4).
+
+pub mod gptq;
+pub mod rtn;
+
+pub use gptq::{gptq_quantize, GptqResult};
+pub use rtn::{
+    dequant_i8, quant_act_i8, quant_symmetric, uniform_grid_levels, QuantSpec, QuantizedTensor,
+};
+
+/// Integer bit-width used across the activation path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActBits {
+    Int8,
+    Int4,
+}
+
+impl ActBits {
+    /// Symmetric clip range `[-2^b, 2^b - 1]` per Eq. 10 (b = bits-1 for
+    /// the magnitude, sign separate).
+    pub fn qmax(self) -> i32 {
+        match self {
+            ActBits::Int8 => 127,
+            ActBits::Int4 => 7,
+        }
+    }
+
+    pub fn qmin(self) -> i32 {
+        match self {
+            ActBits::Int8 => -128,
+            ActBits::Int4 => -8,
+        }
+    }
+
+    pub fn bits(self) -> u32 {
+        match self {
+            ActBits::Int8 => 8,
+            ActBits::Int4 => 4,
+        }
+    }
+}
+
+/// Quantize activations symmetrically at the given bit-width with scale
+/// chosen from the abs-max: `s = absmax / qmax`. Returns (q, scale).
+pub fn quantize_activations(x: &[f32], bits: ActBits) -> (Vec<i8>, f32) {
+    let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = if absmax > 0.0 { absmax / bits.qmax() as f32 } else { 1.0 };
+    let q = x
+        .iter()
+        .map(|&v| {
+            let q = (v / scale).round() as i32;
+            q.clamp(bits.qmin(), bits.qmax()) as i8
+        })
+        .collect();
+    (q, scale)
+}
+
+/// Round-trip error of quantizing `x` at `bits` (used by the adaptive
+/// smoothing objective, Eq. 9).
+pub fn roundtrip_mse(x: &[f32], bits: ActBits) -> f64 {
+    let (q, scale) = quantize_activations(x, bits);
+    x.iter()
+        .zip(&q)
+        .map(|(&v, &qi)| {
+            let d = v as f64 - qi as f64 * scale as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / x.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn act_quant_roundtrip_small_error() {
+        let mut rng = Rng::new(40);
+        let x = rng.normal_vec(1000, 0.0, 1.0);
+        let (q, s) = quantize_activations(&x, ActBits::Int8);
+        let err: f32 = x
+            .iter()
+            .zip(&q)
+            .map(|(&v, &qi)| (v - qi as f32 * s).abs())
+            .fold(0.0, f32::max);
+        // Max rounding error is scale/2.
+        assert!(err <= s * 0.5 + 1e-6, "err {err}, scale {s}");
+    }
+
+    #[test]
+    fn int4_coarser_than_int8() {
+        let mut rng = Rng::new(41);
+        let x = rng.normal_vec(4000, 0.0, 1.0);
+        assert!(roundtrip_mse(&x, ActBits::Int4) > roundtrip_mse(&x, ActBits::Int8));
+    }
+
+    #[test]
+    fn outliers_blow_up_int8_mse() {
+        // The §3.4 motivation: one outlier stretches the dynamic range.
+        let mut rng = Rng::new(42);
+        let mut x = rng.normal_vec(4000, 0.0, 0.05);
+        let clean = roundtrip_mse(&x, ActBits::Int8);
+        x[0] = 30.0;
+        let dirty = roundtrip_mse(&x, ActBits::Int8);
+        assert!(dirty > clean * 50.0, "clean {clean}, dirty {dirty}");
+    }
+
+    #[test]
+    fn zero_input_is_safe() {
+        let (q, s) = quantize_activations(&[0.0; 8], ActBits::Int8);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(s, 1.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Round-to-nearest uniform quantization (the Fig. 2 comparator and the
+//! activation quantizer of the LUT inference path).
+
+use super::ActBits;
+
+/// Uniform quantization spec for a weight tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantSpec {
+    pub bits: u32,
+    /// Symmetric (zero-point 0) or asymmetric (min/max affine).
+    pub symmetric: bool,
+}
+
+/// A uniformly quantized tensor (weights): stored codes + affine params.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub codes: Vec<i32>,
+    pub scale: f32,
+    pub zero_point: f32,
+    pub spec: QuantSpec,
+}
+
+impl QuantizedTensor {
+    pub fn dequant(&self) -> Vec<f32> {
+        self.codes.iter().map(|&c| c as f32 * self.scale + self.zero_point).collect()
+    }
+
+    pub fn mse(&self, original: &[f32]) -> f64 {
+        let deq = self.dequant();
+        crate::util::mse(original, &deq)
+    }
+}
+
+/// The representable levels of a `bits`-wide uniform grid over `[lo, hi]`
+/// (asymmetric) — used by Fig. 2 to compare "16 centroids vs 4-bit grid".
+pub fn uniform_grid_levels(lo: f32, hi: f32, bits: u32) -> Vec<f32> {
+    let n = 1usize << bits;
+    if n == 1 || hi <= lo {
+        return vec![(lo + hi) * 0.5];
+    }
+    (0..n).map(|i| lo + (hi - lo) * i as f32 / (n - 1) as f32).collect()
+}
+
+/// Quantize weights with RTN under `spec`.
+pub fn quant_symmetric(w: &[f32], spec: QuantSpec) -> QuantizedTensor {
+    assert!(spec.bits >= 1 && spec.bits <= 16);
+    if spec.symmetric {
+        let qmax = ((1i32 << (spec.bits - 1)) - 1).max(1);
+        let absmax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax / qmax as f32 } else { 1.0 };
+        let codes = w
+            .iter()
+            .map(|&v| ((v / scale).round() as i32).clamp(-qmax - 1, qmax))
+            .collect();
+        QuantizedTensor { codes, scale, zero_point: 0.0, spec }
+    } else {
+        let lo = w.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let levels = ((1u32 << spec.bits) - 1).max(1);
+        let scale = if hi > lo { (hi - lo) / levels as f32 } else { 1.0 };
+        let codes = w
+            .iter()
+            .map(|&v| (((v - lo) / scale).round() as i32).clamp(0, levels as i32))
+            .collect();
+        QuantizedTensor { codes, scale, zero_point: lo, spec }
+    }
+}
+
+/// Quantize a full activation tensor to INT8 with a single symmetric
+/// scale (Eq. 10), returning the fused multiplier form of Eq. 11:
+/// `q = clip(round(x · inv_scale))` where `inv_scale = 1/(s_m·s_q)`.
+pub fn quant_act_i8(x: &[f32], inv_scale: f32, bits: ActBits) -> Vec<i8> {
+    x.iter()
+        .map(|&v| {
+            ((v * inv_scale).round() as i32).clamp(bits.qmin(), bits.qmax()) as i8
+        })
+        .collect()
+}
+
+/// Dequantize INT8 codes by `scale`.
+pub fn dequant_i8(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn symmetric_roundtrip_bounded() {
+        let mut rng = Rng::new(50);
+        let w = rng.normal_vec(4096, 0.0, 0.1);
+        let q = quant_symmetric(&w, QuantSpec { bits: 8, symmetric: true });
+        assert!(q.mse(&w) < 1e-6);
+        let q4 = quant_symmetric(&w, QuantSpec { bits: 4, symmetric: true });
+        assert!(q4.mse(&w) > q.mse(&w));
+    }
+
+    #[test]
+    fn asymmetric_handles_shifted_range() {
+        let w: Vec<f32> = (0..256).map(|i| 1.0 + i as f32 / 256.0).collect();
+        let sym = quant_symmetric(&w, QuantSpec { bits: 4, symmetric: true });
+        let asym = quant_symmetric(&w, QuantSpec { bits: 4, symmetric: false });
+        assert!(asym.mse(&w) < sym.mse(&w), "asym {} sym {}", asym.mse(&w), sym.mse(&w));
+    }
+
+    #[test]
+    fn grid_levels_count() {
+        let g = uniform_grid_levels(-1.0, 1.0, 4);
+        assert_eq!(g.len(), 16);
+        assert_eq!(g[0], -1.0);
+        assert_eq!(*g.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn fused_act_quant_matches_two_step() {
+        let x = [0.5f32, -0.25, 3.0, -3.0];
+        let s_m = 2.0f32;
+        let s_q = 0.05f32;
+        let fused = quant_act_i8(&x, 1.0 / (s_m * s_q), super::super::ActBits::Int8);
+        for (i, &v) in x.iter().enumerate() {
+            let two_step = (((v / s_m) / s_q).round() as i32).clamp(-128, 127) as i8;
+            assert_eq!(fused[i], two_step);
+        }
+    }
+}

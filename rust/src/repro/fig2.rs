@@ -1,0 +1,51 @@
+//! Fig. 2 — clustering vs uniform quantization MSE at equal bit-width
+//! (16 centroids vs the 4-bit uniform grid), on real trained weight
+//! tensors from the gpt-mini checkpoint.
+
+use crate::clustering::kmeans_1d;
+use crate::config::{LcdConfig, ModelKind};
+use crate::quant::{quant_symmetric, QuantSpec};
+use crate::util::Rng;
+use anyhow::Result;
+
+use super::shared::{open_runtime, train_or_load};
+
+pub fn run(cfg: &LcdConfig) -> Result<()> {
+    let rt = open_runtime(cfg)?;
+    let mut mcfg = cfg.clone();
+    mcfg.model = ModelKind::Gpt;
+    let tm = train_or_load(&rt, &mcfg)?;
+    let mut rng = Rng::new(mcfg.seed ^ 0xf162);
+
+    println!("Fig 2: clustering (16 centroids) vs 4-bit uniform quantization, per layer");
+    println!(
+        "{:<16} {:>14} {:>14} {:>14} {:>8}",
+        "layer", "quant mse", "cluster mse", "ratio q/c", "winner"
+    );
+    let mut total_q = 0.0f64;
+    let mut total_c = 0.0f64;
+    for p in tm.runner.spec.linear_params() {
+        let w = tm.store.get(&p.name)?.data();
+        let q = quant_symmetric(w, QuantSpec { bits: 4, symmetric: true });
+        let q_mse = q.mse(w);
+        let km = kmeans_1d(w, 16, 50, &mut rng);
+        let c_mse = km.clustering.mse(w);
+        total_q += q_mse;
+        total_c += c_mse;
+        println!(
+            "{:<16} {:>14.3e} {:>14.3e} {:>14.2} {:>8}",
+            p.name,
+            q_mse,
+            c_mse,
+            q_mse / c_mse.max(1e-30),
+            if c_mse < q_mse { "cluster" } else { "quant" }
+        );
+    }
+    println!(
+        "TOTAL: quant {:.3e}  cluster {:.3e}  (clustering {:.1}x lower MSE)",
+        total_q,
+        total_c,
+        total_q / total_c.max(1e-30)
+    );
+    Ok(())
+}

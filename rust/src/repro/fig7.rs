@@ -1,0 +1,124 @@
+//! Fig. 7 — centroid-count trajectories during distillation.
+//!
+//! (a) the LCD trajectory on a representative gpt-mini layer: DBCI init
+//!     (~15), progressive reduction, speculative drop, convergence;
+//! (b) strategy ablation: naive 4-bit init / progressive-only /
+//!     speculative-only / full LCD.
+
+use crate::config::{LcdConfig, ModelKind};
+use crate::distill::{DistillConfig, InitStrategy, Strategy, TraceEvent, TracePoint};
+use crate::hessian::HessianDiag;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+use super::shared::{open_runtime, train_or_load};
+
+fn sparkline(trace: &[TracePoint], width: usize) -> String {
+    if trace.is_empty() {
+        return String::new();
+    }
+    let max_step = trace.last().unwrap().step.max(1);
+    let mut out = String::new();
+    let mut ti = 0;
+    for col in 0..width {
+        let step = col * max_step / width.max(1);
+        while ti + 1 < trace.len() && trace[ti + 1].step <= step {
+            ti += 1;
+        }
+        let k = trace[ti].k;
+        out.push(match k {
+            0..=4 => '_',
+            5..=6 => '.',
+            7..=8 => ':',
+            9..=11 => '+',
+            12..=14 => '#',
+            _ => '@',
+        });
+    }
+    out
+}
+
+fn describe(trace: &[TracePoint]) -> String {
+    let k0 = trace.first().map(|p| p.k).unwrap_or(0);
+    let kf = trace.last().map(|p| p.k).unwrap_or(0);
+    let merges = trace.iter().filter(|p| p.event == TraceEvent::ProgressiveMerge).count();
+    let accepts = trace.iter().filter(|p| p.event == TraceEvent::SpeculativeAccept).count();
+    let reverts = trace.iter().filter(|p| p.event == TraceEvent::SpeculativeRevert).count();
+    format!("k {k0} -> {kf} ({merges} merges, {accepts} spec-accepts, {reverts} spec-reverts)")
+}
+
+pub fn run(cfg: &LcdConfig) -> Result<()> {
+    let rt = open_runtime(cfg)?;
+    let mut mcfg = cfg.clone();
+    mcfg.model = ModelKind::Gpt;
+    let tm = train_or_load(&rt, &mcfg)?;
+    let mut rng = crate::util::Rng::new(mcfg.seed ^ 0xf167);
+
+    // Representative layer: first FFN up-projection.
+    let layer = tm
+        .runner
+        .spec
+        .linear_params()
+        .iter()
+        .find(|p| p.name.contains("wff1"))
+        .map(|p| (p.name.clone(), p.shape.clone()))
+        .unwrap_or_else(|| {
+            let p = tm.runner.spec.linear_params()[0];
+            (p.name.clone(), p.shape.clone())
+        });
+    let w = tm.store.get(&layer.0)?.data().to_vec();
+    let calib = tm.calib_tokens(2, &mut rng);
+    let li = tm
+        .runner
+        .spec
+        .linear_params()
+        .iter()
+        .position(|p| p.name == layer.0)
+        .unwrap();
+    let mut acts = Vec::new();
+    for tokens in &calib {
+        acts.extend(tm.runner.calib(&tm.store, tokens)?[li].clone());
+    }
+    let x = Matrix::new(acts.len() / layer.1[0], layer.1[0], acts)?;
+    let h = HessianDiag::from_activations(&x, 0.01).per_weight(layer.1[1]);
+
+    println!("Fig 7a: LCD centroid trajectory on {} ({}x{})", layer.0, layer.1[0], layer.1[1]);
+    let full = crate::distill::distill_layer(&w, &h, &mcfg.distill);
+    println!("  [{}]", sparkline(&full.trace, 64));
+    println!("  {}", describe(&full.trace));
+    println!("  legend: @>=15 #12-14 +9-11 :7-8 .5-6 _<=4 centroids");
+
+    println!("\nFig 7b: strategy ablation on the same layer");
+    let strategies: Vec<(&str, DistillConfig)> = vec![
+        ("LCD (full)", mcfg.distill.clone()),
+        (
+            "naive init.",
+            DistillConfig { init: InitStrategy::Naive4Bit, ..mcfg.distill.clone() },
+        ),
+        (
+            "PO only",
+            DistillConfig { strategy: Strategy::ProgressiveOnly, ..mcfg.distill.clone() },
+        ),
+        (
+            "SO only",
+            DistillConfig { strategy: Strategy::SpeculativeOnly, ..mcfg.distill.clone() },
+        ),
+    ];
+    println!(
+        "{:<14} {:>8} {:>8} {:>12} {:>8}  trajectory",
+        "strategy", "k init", "k final", "final loss", "steps"
+    );
+    for (name, dcfg) in strategies {
+        let out = crate::distill::distill_layer(&w, &h, &dcfg);
+        println!(
+            "{:<14} {:>8} {:>8} {:>12.4e} {:>8}  [{}]",
+            name,
+            out.trace.first().map(|p| p.k).unwrap_or(0),
+            out.clustering.k(),
+            out.final_loss,
+            out.steps,
+            sparkline(&out.trace, 48),
+        );
+    }
+    Ok(())
+}

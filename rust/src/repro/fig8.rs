@@ -1,0 +1,83 @@
+//! Fig. 8 — layer-wise centroid counts and Hessian-weighted error:
+//! LCD's dynamic per-layer allocation vs a fixed count for every layer
+//! (the rounded mean of the dynamic allocation, so the storage budgets
+//! match). Both sides are scored on the Eq. 4 objective (Hessian-weighted
+//! reconstruction loss), with the fixed baseline given the same
+//! Hessian-weighted k-means refinement.
+
+use crate::clustering::kmeans_weighted;
+use crate::config::{LcdConfig, ModelKind};
+use crate::hessian::HessianDiag;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use anyhow::Result;
+
+use super::shared::{open_runtime, train_or_load};
+
+pub fn run(cfg: &LcdConfig) -> Result<()> {
+    let rt = open_runtime(cfg)?;
+    let mut mcfg = cfg.clone();
+    mcfg.model = ModelKind::Gpt;
+    let tm = train_or_load(&rt, &mcfg)?;
+    let mut rng = Rng::new(mcfg.seed ^ 0xf168);
+
+    // Calibration activations for per-layer Hessians (shared with the
+    // dynamic pipeline's own calibration).
+    let calib = tm.calib_tokens(mcfg.calib_batches, &mut rng);
+    let linears = tm.runner.spec.linear_params();
+    let mut acts: Vec<Vec<f32>> = vec![Vec::new(); linears.len()];
+    for tokens in &calib {
+        for (i, a) in tm.runner.calib(&tm.store, tokens)?.into_iter().enumerate() {
+            acts[i].extend(a);
+        }
+    }
+
+    let cm = tm.compress(&mcfg, &mut rng)?;
+    let avg = cm.avg_centroids();
+    let fixed_k = (avg.round() as usize).max(2);
+
+    println!("Fig 8: layer-wise centroids and Eq.4 loss (gpt_mini)");
+    println!("dynamic average = {avg:.2} centroids; fixed baseline = {fixed_k} for all layers");
+    println!(
+        "{:<16} {:>8} {:>14} {:>8} {:>14}",
+        "layer", "dyn k", "dyn loss", "fix k", "fixed loss"
+    );
+    let mut dyn_total = 0.0;
+    let mut fixed_total = 0.0;
+    for (li, layer) in cm.layers.iter().enumerate() {
+        let w_smoothed: Vec<f32> =
+            tm.store.get(&layer.name)?.data().iter().map(|v| v * layer.s_m).collect();
+        let x = Matrix::new(acts[li].len() / layer.d_in, layer.d_in, acts[li].clone())?;
+        let x_smoothed = Matrix {
+            rows: x.rows,
+            cols: x.cols,
+            data: x.data.iter().map(|v| v / layer.s_m).collect(),
+        };
+        let h = HessianDiag::from_activations(&x_smoothed, 0.01).per_weight(layer.d_out);
+
+        let dyn_loss = layer.clustering.hessian_loss(&w_smoothed, &h) / h.len() as f64;
+        let fixed =
+            kmeans_weighted(&w_smoothed, Some(&h), fixed_k, 40, &mut rng).clustering;
+        let fixed_loss = fixed.hessian_loss(&w_smoothed, &h) / h.len() as f64;
+        dyn_total += dyn_loss;
+        fixed_total += fixed_loss;
+        println!(
+            "{:<16} {:>8} {:>14.3e} {:>8} {:>14.3e}",
+            layer.name,
+            layer.clustering.k(),
+            dyn_loss,
+            fixed_k,
+            fixed_loss
+        );
+    }
+    println!(
+        "TOTAL: dynamic {:.3e} vs fixed {:.3e} ({})",
+        dyn_total,
+        fixed_total,
+        if dyn_total <= fixed_total { "dynamic wins" } else { "fixed wins" }
+    );
+    println!(
+        "(paper: earlier layers keep more centroids; dynamic allocation at equal avg budget wins)"
+    );
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//!
+//! Each submodule prints the same rows/series the paper reports (DESIGN.md
+//! carries the experiment index). Absolute numbers differ — the substrate
+//! is miniature models on synthetic corpora (repro band 0) — but the
+//! *shape* of each result (who wins, direction of ablations, crossovers)
+//! is the reproduction target. `lcd repro --exp <id>` dispatches here.
+
+pub mod fig2;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod shared;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::config::LcdConfig;
+use anyhow::{bail, Result};
+
+/// Run one experiment by id.
+pub fn run(exp: &str, cfg: &LcdConfig) -> Result<()> {
+    match exp {
+        "table1" => table1::run(cfg),
+        "table2" => table2::run(cfg),
+        "table3" => table3::run(cfg),
+        "fig2" => fig2::run(cfg),
+        "fig6" => fig6::run(cfg),
+        "fig7" => fig7::run(cfg),
+        "fig8" => fig8::run(cfg),
+        "all" => {
+            for e in ["fig2", "fig7", "fig8", "table1", "table2", "table3", "fig6"] {
+                println!("\n================ {e} ================");
+                run(e, cfg)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (table1|table2|table3|fig2|fig6|fig7|fig8|all)"),
+    }
+}

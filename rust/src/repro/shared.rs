@@ -1,0 +1,337 @@
+//! Shared experiment plumbing: train-or-load checkpoints, corpora,
+//! evaluation adapters over the AOT artifacts.
+
+use crate::config::LcdConfig;
+use crate::data::tasks::{ClassificationSet, McSuite, TaskKind};
+use crate::data::{eval_lm_batches, CharTokenizer, CorpusSpec, LmBatch, SyntheticCorpus};
+use crate::eval::{classification_accuracy, mc_accuracy, perplexity};
+use crate::model::WeightStore;
+use crate::pipeline::train::{pad_to_seq, train_bert};
+use crate::pipeline::{compress_model, train_model, CompressedModel, ModelRunner};
+use crate::runtime::Runtime;
+use crate::util::{argmax, Rng};
+use anyhow::Result;
+
+/// Everything the experiments need for one model: runtime binding,
+/// trained weights and the corpus split used to train/eval it.
+pub struct TrainedModel<'rt> {
+    pub runner: ModelRunner<'rt>,
+    pub store: WeightStore,
+    pub train_stream: Vec<i32>,
+    pub eval_stream: Vec<i32>,
+    /// Secondary eval stream ("C4" stand-in: same grammar, held-out seed).
+    pub eval_stream2: Vec<i32>,
+    pub losses: Vec<f32>,
+}
+
+/// Train a model (or load the cached checkpoint under
+/// `artifacts/checkpoints/`). Checkpoints key on model + seed + steps so
+/// config changes retrain automatically.
+pub fn train_or_load<'rt>(rt: &'rt Runtime, cfg: &LcdConfig) -> Result<TrainedModel<'rt>> {
+    let runner = ModelRunner::new(rt, cfg)?;
+    let corpus = SyntheticCorpus::generate(CorpusSpec {
+        seed: cfg.seed ^ 0x5eed,
+        sentences: 6000,
+        zipf_s: 1.1,
+    });
+    let (train_stream, eval_stream) = corpus.split(0.08);
+    let corpus2 = SyntheticCorpus::generate(CorpusSpec {
+        seed: cfg.seed ^ 0xc4c4,
+        sentences: 500,
+        zipf_s: 1.1,
+    });
+    let eval_stream2 = corpus2.tokens();
+
+    let ckpt_dir = format!("{}/checkpoints", cfg.artifacts_dir);
+    std::fs::create_dir_all(&ckpt_dir).ok();
+    let ckpt = format!(
+        "{ckpt_dir}/{}_s{}_t{}.lcdw",
+        runner.stem, cfg.seed, cfg.train_steps
+    );
+
+    let mut rng = Rng::new(cfg.seed);
+    if let Ok(store) = WeightStore::load(&ckpt, &runner.spec) {
+        eprintln!("[shared] loaded checkpoint {ckpt}");
+        return Ok(TrainedModel { runner, store, train_stream, eval_stream, eval_stream2, losses: vec![] });
+    }
+
+    let mut store = WeightStore::init(&runner.spec, &mut rng);
+    let losses = if runner.is_bert() {
+        let set = ClassificationSet::generate(2000, cfg.seed ^ 0xbe27);
+        let tok = CharTokenizer::new();
+        let examples: Vec<(Vec<i32>, i32)> = set
+            .texts
+            .iter()
+            .zip(&set.labels)
+            .map(|(t, &l)| (pad_to_seq(tok.encode(t), runner.spec.seq), l))
+            .collect();
+        train_bert(&runner, &mut store, &examples, cfg.train_steps, cfg.train_lr * 0.2, &mut rng)?
+            .losses
+    } else {
+        train_model(&runner, &mut store, &train_stream, cfg.train_steps, cfg.train_lr, &mut rng)?
+            .losses
+    };
+    eprintln!(
+        "[shared] trained {} for {} steps: loss {:.3} -> {:.3}",
+        runner.stem,
+        losses.len(),
+        losses.first().copied().unwrap_or(f32::NAN),
+        losses.iter().rev().take(20).sum::<f32>() / 20f32.min(losses.len() as f32)
+    );
+    store.save(&ckpt)?;
+    Ok(TrainedModel { runner, store, train_stream, eval_stream, eval_stream2, losses })
+}
+
+impl<'rt> TrainedModel<'rt> {
+    /// Perplexity of the FP model on a stream.
+    pub fn ppl_fp(&self, stream: &[i32]) -> Result<f64> {
+        let batches = eval_lm_batches(stream, self.runner.spec.batch, self.runner.spec.seq);
+        let runner = &self.runner;
+        let store = &self.store;
+        let mut nll = |b: &LmBatch| runner.nll(store, b);
+        perplexity(&batches, &mut nll)
+    }
+
+    /// Perplexity with explicitly substituted weights (baseline rows).
+    pub fn ppl_with_store(&self, store: &WeightStore, stream: &[i32]) -> Result<f64> {
+        let batches = eval_lm_batches(stream, self.runner.spec.batch, self.runner.spec.seq);
+        let runner = &self.runner;
+        let mut nll = |b: &LmBatch| runner.nll(store, b);
+        perplexity(&batches, &mut nll)
+    }
+
+    /// Perplexity of a compressed model through the LUT artifact
+    /// (smoothed + clustered weights, quantized activations).
+    pub fn ppl_lut(&self, cm: &CompressedModel, stream: &[i32]) -> Result<f64> {
+        let batches = eval_lm_batches(stream, self.runner.spec.batch, self.runner.spec.seq);
+        let runner = &self.runner;
+        let mut nll = |b: &LmBatch| runner.lut_nll(cm, b, None);
+        perplexity(&batches, &mut nll)
+    }
+
+    /// MC-QA accuracy of the FP model.
+    pub fn mc_fp(&self, suite: &McSuite) -> Result<f64> {
+        let runner = &self.runner;
+        let store = &self.store;
+        let mut nll = |b: &LmBatch| runner.nll(store, b);
+        mc_accuracy(suite, self.runner.spec.batch, self.runner.spec.seq, &mut nll)
+    }
+
+    pub fn mc_with_store(&self, store: &WeightStore, suite: &McSuite) -> Result<f64> {
+        let runner = &self.runner;
+        let mut nll = |b: &LmBatch| runner.nll(store, b);
+        mc_accuracy(suite, self.runner.spec.batch, self.runner.spec.seq, &mut nll)
+    }
+
+    pub fn mc_lut(&self, cm: &CompressedModel, suite: &McSuite) -> Result<f64> {
+        let runner = &self.runner;
+        let mut nll = |b: &LmBatch| runner.lut_nll(cm, b, None);
+        mc_accuracy(suite, self.runner.spec.batch, self.runner.spec.seq, &mut nll)
+    }
+
+    /// Calibration token batches sampled from the train stream.
+    pub fn calib_tokens(&self, n_batches: usize, rng: &mut Rng) -> Vec<Vec<i32>> {
+        let b = self.runner.spec.batch;
+        let s = self.runner.spec.seq;
+        (0..n_batches)
+            .map(|_| crate::data::sample_lm_batch(&self.train_stream, b, s, rng).tokens)
+            .collect()
+    }
+
+    /// BERT classification accuracy through the FP artifact.
+    pub fn bert_accuracy(&self, store: &WeightStore, set: &ClassificationSet) -> Result<f64> {
+        let tok = CharTokenizer::new();
+        let b = self.runner.spec.batch;
+        let s = self.runner.spec.seq;
+        let mut preds = Vec::new();
+        for chunk in set.texts.chunks(b) {
+            let mut tokens = Vec::with_capacity(b * s);
+            for t in chunk {
+                tokens.extend(pad_to_seq(tok.encode(t), s));
+            }
+            for _ in chunk.len()..b {
+                tokens.extend(std::iter::repeat(0).take(s));
+            }
+            let logits = self.runner.fwd(store, &tokens)?; // [b, 2]
+            for (i, _) in chunk.iter().enumerate() {
+                preds.push(argmax(&logits[i * 2..(i + 1) * 2]) as i32);
+            }
+        }
+        Ok(classification_accuracy(&preds, &set.labels))
+    }
+
+    /// BERT accuracy through the LUT artifact.
+    pub fn bert_accuracy_lut(&self, cm: &CompressedModel, set: &ClassificationSet) -> Result<f64> {
+        let tok = CharTokenizer::new();
+        let b = self.runner.spec.batch;
+        let s = self.runner.spec.seq;
+        let mut preds = Vec::new();
+        for chunk in set.texts.chunks(b) {
+            let mut tokens = Vec::with_capacity(b * s);
+            for t in chunk {
+                tokens.extend(pad_to_seq(tok.encode(t), s));
+            }
+            for _ in chunk.len()..b {
+                tokens.extend(std::iter::repeat(0).take(s));
+            }
+            let logits = self.runner.lut_fwd(cm, &tokens)?;
+            for (i, _) in chunk.iter().enumerate() {
+                preds.push(argmax(&logits[i * 2..(i + 1) * 2]) as i32);
+            }
+        }
+        Ok(classification_accuracy(&preds, &set.labels))
+    }
+
+    /// LCD-compress this model.
+    pub fn compress(&self, cfg: &LcdConfig, rng: &mut Rng) -> Result<CompressedModel> {
+        let calib = self.calib_tokens(cfg.calib_batches, rng);
+        compress_model(&self.runner, cfg, &self.store, &calib)
+    }
+}
+
+/// The four QA suites at standard size.
+pub fn qa_suites(seed: u64, n: usize) -> Vec<McSuite> {
+    [TaskKind::PiqaSim, TaskKind::HellaSim, TaskKind::WinoSim, TaskKind::ArcSim]
+        .into_iter()
+        .map(|k| McSuite::generate(k, n, seed))
+        .collect()
+}
+
+/// Substitute a set of reconstructed linear weights into a copy of the
+/// store (baseline evaluation path).
+pub fn store_with_weights(
+    base: &WeightStore,
+    replacements: &[(String, Vec<f32>)],
+) -> Result<WeightStore> {
+    let mut store = base.clone();
+    for (name, data) in replacements {
+        let shape = store.get(name)?.shape().to_vec();
+        store.set(name, crate::tensor::Tensor::new(shape, data.clone())?)?;
+    }
+    Ok(store)
+}
+
+/// Configure the runtime for experiments.
+pub fn open_runtime(cfg: &LcdConfig) -> Result<Runtime> {
+    Runtime::new(&cfg.artifacts_dir)
+}
+
+/// BERT stand-in eval set (SST-2 analogue) — held-out seed.
+pub fn bert_eval_set(seed: u64) -> ClassificationSet {
+    ClassificationSet::generate(400, seed ^ 0xe5a1)
+}
+
+// ---------------------------------------------------------------------------
+// Serving engines over the AOT artifacts.
+// ---------------------------------------------------------------------------
+
+/// A serving engine that owns its PJRT runtime. The parameter inputs are
+/// prebuilt once; each forward only appends the token tensor (plus qmax
+/// on the LUT path).
+pub struct ArtifactEngine {
+    rt: Runtime,
+    artifact: String,
+    prefix: Vec<crate::runtime::HostTensor>,
+    qmax: Option<f32>,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    name: String,
+}
+
+impl crate::coordinator::Engine for ArtifactEngine {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut inputs = self.prefix.clone();
+        inputs.push(crate::runtime::HostTensor::I32(tokens.to_vec()));
+        if let Some(q) = self.qmax {
+            inputs.push(crate::runtime::HostTensor::F32(vec![q]));
+        }
+        let out = self.rt.exec(&self.artifact, &inputs)?;
+        out.into_iter().next().unwrap().into_f32()
+    }
+}
+
+/// Build a serving engine: `kind` = "fp" (dense artifact) or "lut" (the
+/// paper's §4 LUT inference artifact over the LCD-compressed model).
+/// Trains/loads the checkpoint and (for lut) runs the compression
+/// pipeline — all inside the calling thread, which owns the runtime.
+pub fn build_engine(cfg: &LcdConfig, kind: &str) -> Result<ArtifactEngine> {
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let (prefix, artifact, qmax, spec) = {
+        let tm = train_or_load(&rt, cfg)?;
+        anyhow::ensure!(!tm.runner.is_bert(), "serving requires an LM model");
+        let spec = tm.runner.spec.clone();
+        match kind {
+            "fp" => {
+                let prefix: Vec<crate::runtime::HostTensor> = tm
+                    .store
+                    .tensors()
+                    .iter()
+                    .map(|t| crate::runtime::HostTensor::F32(t.data().to_vec()))
+                    .collect();
+                (prefix, format!("fwd_{}", tm.runner.stem), None, spec)
+            }
+            "lut" => {
+                let mut rng = Rng::new(cfg.seed ^ 0x5e12);
+                let cm = tm.compress(cfg, &mut rng)?;
+                eprintln!(
+                    "[engine] lut: avg {:.2} centroids, {} KiB weights",
+                    cm.avg_centroids(),
+                    cm.weight_bytes() / 1024
+                );
+                let prefix = lut_prefix(&tm.runner, &cm);
+                (prefix, format!("lut_fwd_{}", tm.runner.stem), Some(cm.qmax() as f32), spec)
+            }
+            other => anyhow::bail!("unknown engine kind '{other}' (fp|lut)"),
+        }
+    };
+    rt.warmup(&[artifact.as_str()])?; // compile before the first request
+    Ok(ArtifactEngine {
+        rt,
+        artifact,
+        prefix,
+        qmax,
+        batch: spec.batch,
+        seq: spec.seq,
+        vocab: spec.vocab,
+        name: kind.to_string(),
+    })
+}
+
+/// The LUT artifact's parameter prefix (non-linear params + per-linear
+/// centroid/index/scale tuples) for a compressed model.
+pub fn lut_prefix(
+    runner: &ModelRunner,
+    cm: &crate::pipeline::CompressedModel,
+) -> Vec<crate::runtime::HostTensor> {
+    use crate::runtime::HostTensor;
+    let mut inputs = Vec::new();
+    for p in &runner.spec.params {
+        if p.linear.is_none() {
+            inputs.push(HostTensor::F32(cm.store.get(&p.name).unwrap().data().to_vec()));
+        }
+    }
+    for layer in &cm.layers {
+        let mut cents = vec![0.0f32; crate::lut::MAX_CENTROIDS];
+        cents[..layer.clustering.k()].copy_from_slice(&layer.clustering.centroids);
+        inputs.push(HostTensor::F32(cents));
+        inputs.push(HostTensor::I32(
+            layer.clustering.assignment.iter().map(|&a| a as i32).collect(),
+        ));
+        inputs.push(HostTensor::F32(vec![1.0 / (layer.s_m * layer.s_q)]));
+        inputs.push(HostTensor::F32(vec![layer.s_q]));
+    }
+    inputs
+}

@@ -1,0 +1,51 @@
+//! Table 1 — accuracy & clustering performance across the three model
+//! families: BERT (classification acc), GPT2 (PPL), LLaMA (PPL), baseline
+//! vs LCD-compressed, with the converged centroid count per model.
+
+use crate::config::{LcdConfig, ModelKind};
+use crate::util::Rng;
+use anyhow::Result;
+
+use super::shared::{bert_eval_set, open_runtime, train_or_load};
+
+pub fn run(cfg: &LcdConfig) -> Result<()> {
+    let rt = open_runtime(cfg)?;
+    println!("Table 1: accuracy and clustering performance");
+    println!(
+        "{:<14} {:>14} {:>14} {:>10} {:>10}",
+        "model", "baseline", "LCD", "centroids", "avg bits"
+    );
+
+    for kind in [ModelKind::Bert, ModelKind::Gpt, ModelKind::Llama] {
+        let mut mcfg = cfg.clone();
+        mcfg.model = kind;
+        let tm = train_or_load(&rt, &mcfg)?;
+        let mut rng = Rng::new(mcfg.seed ^ 0x7ab1e1);
+        let cm = tm.compress(&mcfg, &mut rng)?;
+        let (base, lcd, metric) = if tm.runner.is_bert() {
+            let set = bert_eval_set(mcfg.seed);
+            (
+                tm.bert_accuracy(&tm.store, &set)? * 100.0,
+                tm.bert_accuracy_lut(&cm, &set)? * 100.0,
+                "acc%",
+            )
+        } else {
+            (
+                tm.ppl_fp(&tm.eval_stream)?,
+                tm.ppl_lut(&cm, &tm.eval_stream)?,
+                "ppl",
+            )
+        };
+        println!(
+            "{:<14} {:>9.3} {:>4} {:>9.3} {:>4} {:>10.1} {:>10.2}",
+            tm.runner.stem,
+            base,
+            metric,
+            lcd,
+            metric,
+            cm.avg_centroids(),
+            cm.avg_bits()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Table 3 — smoothing ablation on llama-mini: original (s_m = 1) vs two
+//! fixed smoothing levels vs LCD's adaptive search, at INT8 and INT4
+//! activations; reports PPL and the centroid count the weight clustering
+//! converges to under each setting.
+
+use crate::config::{LcdConfig, ModelKind};
+use crate::util::Rng;
+use anyhow::Result;
+
+use super::shared::{open_runtime, train_or_load};
+
+pub fn run(cfg: &LcdConfig) -> Result<()> {
+    let rt = open_runtime(cfg)?;
+    let mut mcfg = cfg.clone();
+    mcfg.model = ModelKind::Llama;
+    let tm = train_or_load(&rt, &mcfg)?;
+    let fp = tm.ppl_fp(&tm.eval_stream)?;
+    println!("Table 3: smoothing ablation (llama_mini). FP16 ppl = {fp:.3}");
+    println!(
+        "{:<22} {:>6} {:>10} {:>12} {:>10}",
+        "setting", "acts", "ppl", "#centroids", "avg s_m"
+    );
+
+    // (label, adaptive?, fixed exponent) — fixed_smooth is the exponent t
+    // in s_m = (absmax/qmax)^t, so 0 = "origin" (no smoothing), and
+    // 0.5/0.8 are the partial fixed levels of the paper's table.
+    let settings: Vec<(&str, bool, f32)> = vec![
+        ("origin (s_m = 1)", false, 0.0),
+        ("fixed s_m = 0.5", false, 0.5),
+        ("fixed s_m = 0.8", false, 0.8),
+        ("adaptive (ours)", true, 0.0),
+    ];
+
+    for (label, adaptive, t) in settings {
+        for act_bits in [8u32, 4] {
+            let mut c = mcfg.clone();
+            c.adaptive_smooth = adaptive;
+            c.fixed_smooth = t;
+            c.act_bits = act_bits;
+            let mut rng = Rng::new(c.seed ^ 0x7ab1e3);
+            let cm = tm.compress(&c, &mut rng)?;
+            let ppl = tm.ppl_lut(&cm, &tm.eval_stream)?;
+            let avg_sm =
+                cm.layers.iter().map(|l| l.s_m as f64).sum::<f64>() / cm.layers.len() as f64;
+            println!(
+                "{:<22} {:>6} {:>10.3} {:>12.1} {:>10.4}",
+                label,
+                format!("INT{act_bits}"),
+                ppl,
+                cm.avg_centroids(),
+                avg_sm
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! PJRT runtime — loads and executes the AOT artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** files from
+//! `python/compile/aot.py` are parsed into `HloModuleProto`s, compiled
+//! once per artifact, cached, and executed with host literals marshalled
+//! from/to the manifest's typed specs. Python never runs here — this is
+//! the entire request-path dependency surface.
+//!
+//! Interchange is HLO text rather than serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::model::manifest::{ArtifactSpec, Dtype, Manifest};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// A host-side typed tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(_) => Dtype::F32,
+            HostTensor::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    /// Scalar f32 accessor (loss outputs).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+        Ok(v[0])
+    }
+}
+
+/// The artifact runtime: one PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (must contain
+    /// `manifest.json`; artifacts compile lazily on first use).
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact executable.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile a set of artifacts (serving startup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host inputs, returning host outputs.
+    ///
+    /// Inputs must match the manifest spec in count, dtype and element
+    /// count; outputs are validated the same way.
+    pub fn exec(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        validate_inputs(&spec, inputs)?;
+        self.ensure_compiled(name)?;
+
+        let literals = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(t, s)| {
+                let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+                let lit = match t {
+                    HostTensor::F32(v) => xla::Literal::vec1(v),
+                    HostTensor::I32(v) => xla::Literal::vec1(v),
+                };
+                lit.reshape(&dims).with_context(|| format!("reshaping input '{}'", s.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact '{name}'"))?;
+        drop(literals);
+        let root = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{name}'"))?;
+
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple().context("decomposing output tuple")?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "artifact '{name}' returned {} outputs, manifest says {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, out)| {
+                let host = match out.dtype {
+                    Dtype::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+                    Dtype::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+                };
+                anyhow::ensure!(
+                    host.len() == out.count(),
+                    "output '{}' of '{name}': {} elems, expected {}",
+                    out.name,
+                    host.len(),
+                    out.count()
+                );
+                Ok(host)
+            })
+            .collect()
+    }
+}
+
+fn validate_inputs(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+    anyhow::ensure!(
+        inputs.len() == spec.inputs.len(),
+        "artifact '{}' takes {} inputs, got {}",
+        spec.name,
+        spec.inputs.len(),
+        inputs.len()
+    );
+    for (t, s) in inputs.iter().zip(&spec.inputs) {
+        anyhow::ensure!(
+            t.dtype() == s.dtype,
+            "input '{}' of '{}': dtype {:?} expected {:?}",
+            s.name,
+            spec.name,
+            t.dtype(),
+            s.dtype
+        );
+        anyhow::ensure!(
+            t.len() == s.count(),
+            "input '{}' of '{}': {} elems, expected {} (shape {:?})",
+            s.name,
+            spec.name,
+            t.len(),
+            s.count(),
+            s.shape
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let f = HostTensor::F32(vec![1.0]);
+        assert_eq!(f.scalar_f32().unwrap(), 1.0);
+        assert!(f.as_i32().is_err());
+        let i = HostTensor::I32(vec![1, 2]);
+        assert_eq!(i.dtype(), Dtype::I32);
+        assert!(i.scalar_f32().is_err());
+        assert_eq!(i.len(), 2);
+    }
+
+    // Full artifact execution is covered by `rust/tests/runtime_artifacts.rs`
+    // (requires `make artifacts`).
+}

@@ -1,0 +1,259 @@
+//! Adaptive smoothing (paper §3.4).
+//!
+//! Activations of LLM layers contain outliers that wreck low-bit uniform
+//! quantization. LCD migrates the difficulty into the weights: divide the
+//! activations by a per-layer smoothing factor `s_m` and multiply the
+//! weights by it. The factor is chosen *offline* on a calibration set by
+//! minimizing the INT8 round-trip MSE of the smoothed activations
+//! (Eq. 9); weights are re-clustered afterwards (clustering is robust to
+//! the distribution change — Fig. 4).
+//!
+//! We support both the paper's scalar per-layer factor and a per-channel
+//! variant (SmoothQuant-style `s_j = max|X_j|^α / max|W_j|^(1-α)`) used in
+//! the Table 3 ablation.
+
+use crate::quant::{quantize_activations, ActBits};
+use crate::tensor::Matrix;
+
+/// Search space for the adaptive factor.
+#[derive(Clone, Debug)]
+pub struct SmoothSearch {
+    /// Candidate factors are `absmax^t` for t in a grid over [0, 1],
+    /// i.e. from "no smoothing" (s=1) to "full range normalization".
+    pub grid: usize,
+    pub bits: ActBits,
+}
+
+impl Default for SmoothSearch {
+    fn default() -> Self {
+        SmoothSearch { grid: 20, bits: ActBits::Int8 }
+    }
+}
+
+/// Result of the per-layer smoothing calibration.
+#[derive(Clone, Debug)]
+pub struct SmoothResult {
+    /// Chosen scalar factor s_m (activations are divided by it).
+    pub s_m: f32,
+    /// Round-trip MSE at the chosen factor.
+    pub mse: f64,
+    /// MSE without smoothing (s_m = 1), for reporting.
+    pub mse_unsmoothed: f64,
+}
+
+/// Round-trip MSE of Eq. 9 for a fixed s_m:
+/// `MSE(X, Q(X/s_m)·s_m)` at the given bit-width.
+pub fn smoothing_mse(x: &[f32], s_m: f32, bits: ActBits) -> f64 {
+    assert!(s_m > 0.0);
+    let scaled: Vec<f32> = x.iter().map(|&v| v / s_m).collect();
+    let (q, s_q) = quantize_activations(&scaled, bits);
+    x.iter()
+        .zip(&q)
+        .map(|(&v, &qi)| {
+            let rec = qi as f64 * s_q as f64 * s_m as f64;
+            let d = v as f64 - rec;
+            d * d
+        })
+        .sum::<f64>()
+        / x.len().max(1) as f64
+}
+
+/// Adaptive per-layer smoothing factor search (Eq. 9). `x` holds the
+/// calibration activations for one layer (flattened).
+///
+/// Note: with a *single* shared scale per tensor, the quantizer itself is
+/// scale-invariant, so the benefit of a scalar s_m shows when combined
+/// with clipping of the outlier tail: each candidate also evaluates an
+/// outlier-clipped variant (clip at s_m·qmax after scaling), which is what
+/// makes the search non-trivial — exactly the "smoothing tames outliers"
+/// mechanism of the paper at per-tensor granularity.
+pub fn adaptive_smooth(x: &[f32], search: &SmoothSearch) -> SmoothResult {
+    assert!(!x.is_empty());
+    let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
+    // Reference: robust scale (99th percentile) — candidates interpolate
+    // between "scale by absmax" (s covers outliers) and "scale by p99"
+    // (outliers saturate).
+    let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = mags[((mags.len() - 1) as f64 * 0.99) as usize].max(1e-12);
+
+    let qmax = search.bits.qmax() as f32;
+    let mse_unsmoothed = smoothing_mse(x, 1.0, search.bits);
+    let mut best = SmoothResult { s_m: 1.0, mse: mse_unsmoothed, mse_unsmoothed };
+    for g in 0..=search.grid {
+        let t = g as f32 / search.grid as f32;
+        // Interpolate in log space between p99-based and absmax-based
+        // effective ranges; s_m normalizes that range to the int grid.
+        let range = p99.powf(1.0 - t) * absmax.powf(t);
+        let s_m = range / qmax;
+        let mse = clipped_smoothing_mse(x, s_m, search.bits);
+        if mse < best.mse {
+            best = SmoothResult { s_m, mse, mse_unsmoothed };
+        }
+    }
+    best
+}
+
+/// Round-trip MSE when the quantizer step is *fixed* at 1 after smoothing
+/// (the deployed Eq. 11 path: `q = clip(round(x / s_m))`, dequant by s_m).
+/// Outliers beyond s_m·qmax clip — the trade-off the search balances.
+pub fn clipped_smoothing_mse(x: &[f32], s_m: f32, bits: ActBits) -> f64 {
+    assert!(s_m > 0.0);
+    let (qmin, qmax) = (bits.qmin() as f32, bits.qmax() as f32);
+    x.iter()
+        .map(|&v| {
+            let q = (v / s_m).round().clamp(qmin, qmax);
+            let d = v as f64 - (q * s_m) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / x.len().max(1) as f64
+}
+
+/// Apply smoothing to a weight matrix: `W ← W · s_m` (scalar form).
+/// The layer computes `y = (x/s_m)·(W·s_m)`, preserving the product.
+pub fn smooth_weights_scalar(w: &mut Matrix, s_m: f32) {
+    for v in &mut w.data {
+        *v *= s_m;
+    }
+}
+
+/// Per-channel smoothing factors, SmoothQuant-style:
+/// `s_j = max|X_j|^alpha / max|W_j|^(1-alpha)` (used in ablations).
+pub fn per_channel_factors(x: &Matrix, w: &Matrix, alpha: f32) -> Vec<f32> {
+    assert_eq!(x.cols, w.rows, "x cols (d_in) must equal w rows");
+    let mut x_max = vec![1e-8f32; x.cols];
+    for r in 0..x.rows {
+        for (j, &v) in x.row(r).iter().enumerate() {
+            x_max[j] = x_max[j].max(v.abs());
+        }
+    }
+    let mut w_max = vec![1e-8f32; w.rows];
+    for (j, wm) in w_max.iter_mut().enumerate() {
+        for c in 0..w.cols {
+            *wm = wm.max(w.at(j, c).abs());
+        }
+    }
+    x_max
+        .iter()
+        .zip(&w_max)
+        .map(|(&xm, &wm)| (xm.powf(alpha) / wm.powf(1.0 - alpha)).max(1e-6))
+        .collect()
+}
+
+/// Apply per-channel smoothing: `X_j ← X_j / s_j`, `W_j· ← W_j· · s_j`.
+pub fn smooth_per_channel(x: &mut Matrix, w: &mut Matrix, s: &[f32]) {
+    assert_eq!(x.cols, s.len());
+    assert_eq!(w.rows, s.len());
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v /= s[j];
+        }
+    }
+    for (j, &sj) in s.iter().enumerate() {
+        for c in 0..w.cols {
+            *w.at_mut(j, c) *= sj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm_naive;
+    use crate::util::Rng;
+
+    fn outlier_acts(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut x = rng.normal_vec(n, 0.0, 0.1);
+        for i in 0..n / 200 {
+            x[i * 200] = rng.normal_scaled(0.0, 8.0); // heavy outliers
+        }
+        x
+    }
+
+    #[test]
+    fn adaptive_beats_unsmoothed_on_outliers() {
+        let mut rng = Rng::new(70);
+        let x = outlier_acts(&mut rng, 8000);
+        let r = adaptive_smooth(&x, &SmoothSearch::default());
+        assert!(
+            r.mse < r.mse_unsmoothed,
+            "adaptive {} vs unsmoothed {}",
+            r.mse,
+            r.mse_unsmoothed
+        );
+    }
+
+    #[test]
+    fn gaussian_needs_little_smoothing() {
+        let mut rng = Rng::new(71);
+        let x = rng.normal_vec(8000, 0.0, 0.1);
+        let r = adaptive_smooth(&x, &SmoothSearch::default());
+        // On outlier-free data the chosen MSE is close to the unsmoothed.
+        assert!(r.mse <= r.mse_unsmoothed * 1.01);
+    }
+
+    #[test]
+    fn product_preserved_scalar() {
+        let mut rng = Rng::new(72);
+        let x = Matrix { rows: 4, cols: 8, data: rng.normal_vec(32, 0.0, 1.0) };
+        let mut w = Matrix { rows: 8, cols: 3, data: rng.normal_vec(24, 0.0, 1.0) };
+        let y_ref = gemm_naive(&x, &w);
+        let s_m = 2.5f32;
+        smooth_weights_scalar(&mut w, s_m);
+        let x_s = Matrix {
+            rows: 4,
+            cols: 8,
+            data: x.data.iter().map(|v| v / s_m).collect(),
+        };
+        let y = gemm_naive(&x_s, &w);
+        for (a, b) in y_ref.data.iter().zip(&y.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn product_preserved_per_channel() {
+        let mut rng = Rng::new(73);
+        let mut x = Matrix { rows: 5, cols: 6, data: rng.normal_vec(30, 0.0, 1.0) };
+        let mut w = Matrix { rows: 6, cols: 4, data: rng.normal_vec(24, 0.0, 1.0) };
+        let y_ref = gemm_naive(&x, &w);
+        let s = per_channel_factors(&x, &w, 0.5);
+        smooth_per_channel(&mut x, &mut w, &s);
+        let y = gemm_naive(&x, &w);
+        for (a, b) in y_ref.data.iter().zip(&y.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn per_channel_equalizes_ranges() {
+        let mut rng = Rng::new(74);
+        let mut x = Matrix { rows: 64, cols: 8, data: rng.normal_vec(512, 0.0, 0.1) };
+        // Blow up channel 3.
+        for r in 0..x.rows {
+            *x.at_mut(r, 3) *= 50.0;
+        }
+        let mut w = Matrix { rows: 8, cols: 8, data: rng.normal_vec(64, 0.0, 0.1) };
+        let s = per_channel_factors(&x, &w, 0.5);
+        assert!(s[3] > s[0] * 3.0, "outlier channel gets a bigger factor: {s:?}");
+        let before: f32 = x.data.iter().fold(0.0, |m, &v| m.max(v.abs()));
+        smooth_per_channel(&mut x, &mut w, &s);
+        let after: f32 = x.data.iter().fold(0.0, |m, &v| m.max(v.abs()));
+        assert!(after < before, "range shrinks: {after} < {before}");
+    }
+
+    #[test]
+    fn clipped_mse_monotone_tails() {
+        // Very small s_m clips everything (huge error); very large s_m
+        // rounds everything to zero (also huge error) — minimum inside.
+        let mut rng = Rng::new(75);
+        let x = outlier_acts(&mut rng, 4000);
+        let tiny = clipped_smoothing_mse(&x, 1e-6, ActBits::Int8);
+        let huge = clipped_smoothing_mse(&x, 1e6, ActBits::Int8);
+        let r = adaptive_smooth(&x, &SmoothSearch::default());
+        assert!(r.mse < tiny);
+        assert!(r.mse < huge);
+    }
+}

@@ -1,0 +1,149 @@
+//! f32 GEMM baselines.
+//!
+//! These are the FP comparison points for the LUT engine benchmarks
+//! (paper Fig. 6): `gemm_naive` is the textbook triple loop; `gemm_blocked`
+//! is a cache-blocked, unrolled implementation standing in for the
+//! "TVM"-style optimized FP baseline on this CPU.
+
+use super::Matrix;
+
+/// C = A(m×k) · B(k×n), textbook ijk loop. Reference semantics.
+pub fn gemm_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "gemm dims: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a.data[i * k + p] * b.data[p * n + j];
+            }
+            c.data[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// C = A(m×k) · Bᵀ where `bt` is stored as (n×k): contiguous dot products.
+/// This is the layout the LUT engine also uses (weights are stored
+/// per-output-row), so FP-vs-LUT comparisons are traffic-fair.
+pub fn gemm_transb(a: &Matrix, bt: &Matrix) -> Matrix {
+    assert_eq!(a.cols, bt.cols, "gemm_transb dims");
+    let (m, k, n) = (a.rows, a.cols, bt.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bt.data[j * k..(j + 1) * k];
+            c.data[i * n + j] = dot(arow, brow);
+        }
+    }
+    c
+}
+
+/// Unrolled dot product; the compiler auto-vectorizes the 4-wide lanes.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc0 += a[i] * b[i];
+        acc1 += a[i + 1] * b[i + 1];
+        acc2 += a[i + 2] * b[i + 2];
+        acc3 += a[i + 3] * b[i + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for i in chunks * 4..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Cache-blocked GEMM: C = A(m×k) · B(k×n). Blocks sized for a ~32 KiB L1.
+pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    const MB: usize = 32;
+    const KB: usize = 64;
+    const NB: usize = 64;
+    for i0 in (0..m).step_by(MB) {
+        let i1 = (i0 + MB).min(m);
+        for p0 in (0..k).step_by(KB) {
+            let p1 = (p0 + KB).min(k);
+            for j0 in (0..n).step_by(NB) {
+                let j1 = (j0 + NB).min(n);
+                for i in i0..i1 {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    for p in p0..p1 {
+                        let av = arow[p];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[p * n..(p + 1) * n];
+                        for j in j0..j1 {
+                            crow[j] += av * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{mse, Rng};
+
+    fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols, 0.0, 1.0) }
+    }
+
+    #[test]
+    fn naive_known_values() {
+        let a = Matrix::new(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = Matrix::new(2, 2, vec![1., 1., 1., 1.]).unwrap();
+        let c = gemm_naive(&a, &b);
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in &[(1, 1, 1), (7, 13, 5), (33, 65, 40), (64, 64, 64)] {
+            let a = random_matrix(&mut rng, m, k);
+            let b = random_matrix(&mut rng, k, n);
+            let c1 = gemm_naive(&a, &b);
+            let c2 = gemm_blocked(&a, &b);
+            assert!(mse(&c1.data, &c2.data) < 1e-8, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn transb_matches_naive() {
+        let mut rng = Rng::new(22);
+        let a = random_matrix(&mut rng, 9, 17);
+        let b = random_matrix(&mut rng, 17, 11);
+        let c1 = gemm_naive(&a, &b);
+        let c2 = gemm_transb(&a, &b.transpose());
+        assert!(mse(&c1.data, &c2.data) < 1e-8);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for len in 0..9 {
+            let a: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let b = vec![2.0f32; len];
+            let expect: f32 = a.iter().sum::<f32>() * 2.0;
+            assert_eq!(dot(&a, &b), expect);
+        }
+    }
+}

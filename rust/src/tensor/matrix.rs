@@ -1,0 +1,86 @@
+//! 2-D matrix view helpers over row-major f32 storage.
+
+use anyhow::{bail, Result};
+
+/// Owned row-major matrix. Thin wrapper used by the GEMM kernels and the
+/// LUT engine where explicit (rows, cols) typing keeps index math honest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Result<Matrix> {
+        if rows * cols != data.len() {
+            bail!("matrix {}x{} != data len {}", rows, cols, data.len());
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::new(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(0, 1), 4.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn row_access() {
+        let m = Matrix::new(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        assert_eq!(m.row(1), &[3., 4.]);
+    }
+
+    #[test]
+    fn bad_dims_rejected() {
+        assert!(Matrix::new(2, 3, vec![0.0; 5]).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Minimal dense tensor substrate.
+//!
+//! The coordinator needs a small amount of host-side linear algebra
+//! (weight matrices, activation buffers, GEMM baselines). This module
+//! implements exactly that: a row-major `Tensor` over f32 plus typed
+//! integer buffers used by the quantized paths. Heavy model math runs in
+//! the AOT XLA artifacts; this is the substrate for the compression
+//! pipeline and the LUT engine.
+
+mod gemm;
+mod matrix;
+
+pub use gemm::{gemm_blocked, gemm_naive, gemm_transb};
+pub use matrix::Matrix;
+
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 tensor with explicit shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} ({n}) does not match data len {}", shape, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, value: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![value; n] }
+    }
+
+    /// Gaussian init, used for model parameter initialization (the shapes
+    /// and init stds come from the artifact manifest).
+    pub fn randn(shape: Vec<usize>, std: f32, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: rng.normal_vec(n, 0.0, std) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows when viewed as 2-D (product of all but last dim).
+    pub fn rows_2d(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+
+    /// Last-dimension size.
+    pub fn cols_2d(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {} elements to {:?}", self.data.len(), shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// Quantized INT8 activation buffer with its scale (symmetric).
+#[derive(Clone, Debug)]
+pub struct QuantBuf {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    pub scale: f32,
+}
+
+impl QuantBuf {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Dequantize back to f32 (testing / reference path).
+    pub fn dequant(&self) -> Vec<f32> {
+        self.data.iter().map(|&q| q as f32 * self.scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::zeros(vec![4, 6]);
+        let t = t.reshape(vec![2, 12]).unwrap();
+        assert_eq!(t.shape(), &[2, 12]);
+        assert!(t.reshape(vec![5, 5]).is_err());
+    }
+
+    #[test]
+    fn rows_cols_2d() {
+        let t = Tensor::zeros(vec![2, 3, 4]);
+        assert_eq!(t.rows_2d(), 6);
+        assert_eq!(t.cols_2d(), 4);
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = Tensor::randn(vec![8, 8], 0.1, &mut r1);
+        let b = Tensor::randn(vec![8, 8], 0.1, &mut r2);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,208 @@
+//! Minimal benchmarking harness used by `rust/benches/*` (no external
+//! criterion dependency is available in this environment; this module
+//! provides the same workflow: warmup, repeated timed samples, and robust
+//! median / MAD statistics, with machine-readable one-line output).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    /// An accumulated value from the benched closure, printed to defeat
+    /// dead-code elimination.
+    pub sink: f64,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn p10_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 10.0)
+    }
+
+    pub fn p90_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 90.0)
+    }
+
+    /// Median absolute deviation.
+    pub fn mad_ns(&self) -> f64 {
+        let med = self.median_ns();
+        let devs: Vec<f64> = self.samples_ns.iter().map(|s| (s - med).abs()).collect();
+        percentile(&devs, 50.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  p10 {:>12}  p90 {:>12}  mad {:>10}  n={}",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.p10_ns()),
+            fmt_ns(self.p90_ns()),
+            fmt_ns(self.mad_ns()),
+            self.samples_ns.len(),
+        )
+    }
+}
+
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{:.0} ns", ns)
+    }
+}
+
+/// Bench runner: warms up, then collects timed samples until both the
+/// minimum sample count and the time budget are met.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_samples: 10,
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode bencher for CI-ish runs (honours `LCD_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if std::env::var("LCD_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+            b.warmup = Duration::from_millis(20);
+            b.budget = Duration::from_millis(300);
+            b.min_samples = 5;
+        }
+        b
+    }
+
+    /// Time `f`, which must return an f64 "sink" value that depends on the
+    /// computation (prevents the optimizer from deleting the body).
+    pub fn bench<F: FnMut() -> f64>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        let mut sink = 0.0;
+        while start.elapsed() < self.warmup {
+            sink += f();
+        }
+        // Sampling.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (samples.len() < self.min_samples || start.elapsed() < self.budget)
+            && samples.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            sink += f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let result = BenchResult { name: name.to_string(), samples_ns: samples, sink };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a ratio line ("A is Nx faster than B") for two completed cases.
+    pub fn speedup(&self, fast: &str, slow: &str) {
+        let f = self.results.iter().find(|r| r.name == fast);
+        let s = self.results.iter().find(|r| r.name == slow);
+        if let (Some(f), Some(s)) = (f, s) {
+            println!(
+                "  >> speedup {} vs {}: {:.2}x",
+                fast,
+                slow,
+                s.median_ns() / f.median_ns()
+            );
+        }
+    }
+
+    /// Final summary trailer (also makes `cargo bench` output greppable).
+    pub fn finish(&self, suite: &str) {
+        println!("---- bench suite '{suite}': {} cases ----", self.results.len());
+        let total_sink: f64 = self.results.iter().map(|r| r.sink).sum();
+        println!("(sink {total_sink:e})");
+    }
+}
+
+/// Time a single closure once, returning (elapsed, value).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (Duration, T) {
+    let t0 = Instant::now();
+    let v = f();
+    (t0.elapsed(), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 4.0);
+        assert_eq!(percentile(&s, 50.0), 2.5);
+    }
+
+    #[test]
+    fn bencher_collects_samples() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(10),
+            min_samples: 3,
+            max_samples: 50,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop", || 1.0);
+        assert!(r.samples_ns.len() >= 3);
+        assert!(r.median_ns() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("us"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,101 @@
+//! Shared utilities: deterministic PRNG, a dependency-free JSON
+//! parser/serializer (used for the artifact manifest and config files),
+//! wall-clock helpers for the bench harnesses, and a miniature
+//! property-based-testing framework used across the test suite.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::{Rng, ZipfTable};
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() as f32 / xs.len() as f32
+}
+
+/// Population variance of a slice (0.0 for empty input).
+pub fn variance(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    (xs.iter().map(|&x| (x as f64 - m) * (x as f64 - m)).sum::<f64>() / xs.len() as f64) as f32
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "mse: length mismatch {} vs {}", a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Max absolute difference between two equal-length slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// `argmin` over f32s; returns index of the smallest element.
+pub fn argmin(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty());
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// `argmax` over f32s; returns index of the largest element.
+pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty());
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((variance(&[1.0, 3.0]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = [1.0f32, -2.5, 3.25];
+        assert_eq!(mse(&a, &a), 0.0);
+        assert!((mse(&[0.0], &[2.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argminmax() {
+        let xs = [3.0f32, -1.0, 7.0, -1.5];
+        assert_eq!(argmin(&xs), 3);
+        assert_eq!(argmax(&xs), 2);
+    }
+}

@@ -1,0 +1,160 @@
+//! Miniature property-based-testing framework.
+//!
+//! The environment has no `proptest` crate, so this module provides the
+//! subset the test suite needs: seeded generators, a `forall` runner with
+//! failure-case reporting, and greedy input shrinking for vector inputs.
+//! Used by the clustering / distillation / LUT invariant tests.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` against `cases` random inputs produced by `gen`.
+/// Panics with the (shrunk, if shrinkable) counterexample on failure.
+pub fn forall<T: std::fmt::Debug + Clone>(
+    cfg: &PropConfig,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property failed on case {case}: {input:#?}");
+        }
+    }
+}
+
+/// Like `forall`, but for `Vec<f32>` inputs: on failure, greedily shrinks
+/// the counterexample by removing chunks and zeroing elements while the
+/// property still fails, then panics with the minimal input found.
+pub fn forall_vec(
+    cfg: &PropConfig,
+    gen: impl Fn(&mut Rng) -> Vec<f32>,
+    prop: impl Fn(&[f32]) -> bool,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let shrunk = shrink_vec(&input, &prop, cfg.max_shrink_steps);
+            panic!(
+                "property failed on case {case}; shrunk from len {} to len {}: {shrunk:?}",
+                input.len(),
+                shrunk.len()
+            );
+        }
+    }
+}
+
+fn shrink_vec(input: &[f32], prop: &impl Fn(&[f32]) -> bool, max_steps: usize) -> Vec<f32> {
+    let mut best = input.to_vec();
+    let mut steps = 0;
+    // Phase 1: remove halves/quarters while still failing.
+    let mut chunk = best.len() / 2;
+    while chunk >= 1 && steps < max_steps {
+        let mut i = 0;
+        while i + chunk <= best.len() && steps < max_steps {
+            let mut candidate = best.clone();
+            candidate.drain(i..i + chunk);
+            steps += 1;
+            if !candidate.is_empty() && !prop(&candidate) {
+                best = candidate;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    // Phase 2: zero individual elements.
+    for i in 0..best.len() {
+        if steps >= max_steps {
+            break;
+        }
+        if best[i] != 0.0 {
+            let mut candidate = best.clone();
+            candidate[i] = 0.0;
+            steps += 1;
+            if !prop(&candidate) {
+                best = candidate;
+            }
+        }
+    }
+    best
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    /// Vec of normals with random length in `[lo_len, hi_len]`.
+    pub fn normal_vec(lo_len: usize, hi_len: usize, std: f32) -> impl Fn(&mut Rng) -> Vec<f32> {
+        move |rng| {
+            let n = lo_len + rng.below(hi_len - lo_len + 1);
+            rng.normal_vec(n, 0.0, std)
+        }
+    }
+
+    /// Gaussian-mixture weights mimicking an LLM layer (bulk + outliers).
+    pub fn llm_like_weights(lo_len: usize, hi_len: usize) -> impl Fn(&mut Rng) -> Vec<f32> {
+        move |rng| {
+            let n = lo_len + rng.below(hi_len - lo_len + 1);
+            (0..n)
+                .map(|_| {
+                    if rng.uniform() < 0.01 {
+                        rng.normal_scaled(0.0, 0.5) // outlier tail
+                    } else {
+                        rng.normal_scaled(0.0, 0.05)
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(&PropConfig::default(), |rng| rng.normal_vec(8, 0.0, 1.0), |v| v.len() == 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(&PropConfig { cases: 10, ..Default::default() }, |rng| rng.below(100), |&n| n < 5);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: no element above 10. Generator plants one violation.
+        let result = std::panic::catch_unwind(|| {
+            forall_vec(
+                &PropConfig { cases: 1, ..Default::default() },
+                |rng| {
+                    let mut v = rng.normal_vec(64, 0.0, 1.0);
+                    v[33] = 100.0;
+                    v
+                },
+                |v| v.iter().all(|&x| x < 10.0),
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Shrinker should reduce 64 elements to very few.
+        assert!(msg.contains("to len 1"), "{msg}");
+    }
+}

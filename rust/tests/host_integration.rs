@@ -1,0 +1,205 @@
+//! Cross-module host-only integration tests (no artifacts needed):
+//! the compression pipeline against the LUT engine and the baselines,
+//! and the coordinator under churn, failure injection and backpressure.
+
+use lcd::baselines::{skim_quantize, SkimConfig};
+use lcd::config::LcdConfig;
+use lcd::coordinator::server::{serve_blocking, Engine};
+use lcd::lut::{lut_gemm_bucket, quantize_input};
+use lcd::pipeline::compress::compress_layer_host;
+use lcd::quant::{quant_symmetric, QuantSpec};
+use lcd::tensor::{gemm_naive, Matrix};
+use lcd::util::proptest::{forall, PropConfig};
+use lcd::util::Rng;
+
+fn toy_layer(rng: &mut Rng, d_in: usize, d_out: usize) -> (Vec<f32>, Matrix) {
+    let w: Vec<f32> = (0..d_in * d_out)
+        .map(|_| {
+            if rng.uniform() < 0.01 {
+                rng.normal_scaled(0.0, 0.3)
+            } else {
+                rng.normal_scaled(0.0, 0.04)
+            }
+        })
+        .collect();
+    let mut x = rng.normal_vec(128 * d_in, 0.0, 0.4);
+    for i in 0..x.len() / 150 {
+        x[i * 150] *= 15.0;
+    }
+    (w, Matrix::new(128, d_in, x).unwrap())
+}
+
+/// The whole point of LCD: compressed linear ≈ FP linear.
+#[test]
+fn compressed_layer_tracks_fp_linear_end_to_end() {
+    let mut rng = Rng::new(20);
+    let (w, acts) = toy_layer(&mut rng, 64, 32);
+    let mut cfg = LcdConfig::default();
+    cfg.distill.min_k = 6; // paper's operating range (5-8 centroids)
+    let (layer, _, _) = compress_layer_host(&w, &acts, 64, 32, &cfg).unwrap();
+
+    // Fresh inputs from the calibration distribution.
+    let x = rng.normal_vec(16 * 64, 0.0, 0.4);
+    let q = quantize_input(&x, layer.lut.input_inv_scale);
+    let y_lut = lut_gemm_bucket(&q, 16, &layer.lut);
+
+    let xm = Matrix::new(16, 64, x).unwrap();
+    let wm = Matrix::new(64, 32, w).unwrap();
+    let y_fp = gemm_naive(&xm, &wm);
+
+    // Relative error of the full compressed path vs FP. At ~6 centroids
+    // on heavy-tailed weights plus INT8 activations the residual sits
+    // around 20% of output variance on this synthetic layer; bound well
+    // below the 100% an uncorrelated output would show.
+    let num = lcd::util::mse(&y_lut.data, &y_fp.data);
+    let den = lcd::util::variance(&y_fp.data) as f64;
+    assert!(num / den < 0.3, "relative error {}", num / den);
+}
+
+/// LCD at ~3 bits should beat RTN-3 and be competitive with SKIM-3 on
+/// reconstruction MSE (the Table 2 ordering).
+#[test]
+fn lcd_beats_rtn_at_equal_bits() {
+    let mut rng = Rng::new(21);
+    let (w, acts) = toy_layer(&mut rng, 96, 48);
+    let mut cfg = LcdConfig::default();
+    cfg.distill.min_k = 8;
+    let (layer, _, _) = compress_layer_host(&w, &acts, 96, 48, &cfg).unwrap();
+    let rec: Vec<f32> = layer.clustering.reconstruct().iter().map(|v| v / layer.s_m).collect();
+    let lcd_mse = lcd::util::mse(&w, &rec);
+
+    let rtn = quant_symmetric(&w, QuantSpec { bits: 3, symmetric: true });
+    assert!(
+        lcd_mse < rtn.mse(&w),
+        "lcd {} (k={}) vs rtn3 {}",
+        lcd_mse,
+        layer.clustering.k(),
+        rtn.mse(&w)
+    );
+
+    // SKIM keeps a *per-column* codebook (d_out × 2^bits effective levels
+    // vs LCD's single ≤16-entry table per layer), so its raw MSE is lower
+    // by construction; LCD's storage is ~d_out× smaller. Sanity-bound the
+    // gap rather than the ordering.
+    let wm = Matrix::new(96, 48, w.clone()).unwrap();
+    let imp = vec![1.0f32; 96];
+    let skim = skim_quantize(&wm, &imp, &SkimConfig::default(), &mut rng);
+    assert!(
+        lcd_mse < skim.mse * 50.0,
+        "lcd {} impossibly far from SKIM {}",
+        lcd_mse,
+        skim.mse
+    );
+}
+
+/// Property: compression never produces more than 16 centroids and the
+/// packed LUT always round-trips the clustering.
+#[test]
+fn prop_compression_invariants() {
+    forall(
+        &PropConfig { cases: 8, ..Default::default() },
+        |rng| {
+            let d_in = 8 + rng.below(48);
+            let d_out = 4 + rng.below(24);
+            let (w, acts) = toy_layer(rng, d_in, d_out);
+            (w, acts, d_in, d_out)
+        },
+        |(w, acts, d_in, d_out)| {
+            let cfg = LcdConfig { ..Default::default() };
+            let Ok((layer, report, trace)) = compress_layer_host(w, acts, *d_in, *d_out, &cfg)
+            else {
+                return false;
+            };
+            layer.clustering.k() <= 16
+                && layer.lut.dense_weights().data == layer.clustering.reconstruct()
+                && report.k == layer.clustering.k()
+                && !trace.is_empty()
+        },
+    );
+}
+
+/// Engine whose forward fails after N calls — the worker must surface the
+/// error without hanging submitted requests forever (they get dropped,
+/// which the client sees as a disconnected channel).
+struct FlakyEngine {
+    calls: usize,
+    fail_after: usize,
+}
+
+impl Engine for FlakyEngine {
+    fn batch(&self) -> usize {
+        2
+    }
+    fn seq(&self) -> usize {
+        8
+    }
+    fn vocab(&self) -> usize {
+        16
+    }
+    fn name(&self) -> &str {
+        "flaky"
+    }
+    fn forward(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        self.calls += 1;
+        if self.calls > self.fail_after {
+            anyhow::bail!("injected failure at call {}", self.calls);
+        }
+        let mut logits = vec![0.0f32; 2 * 8 * 16];
+        for (i, &t) in tokens.iter().enumerate() {
+            logits[i * 16 + ((t as usize + 1) % 16)] = 1.0;
+        }
+        Ok(logits)
+    }
+}
+
+#[test]
+fn serve_blocking_propagates_engine_failure() {
+    let engine = FlakyEngine { calls: 0, fail_after: 2 };
+    let reqs: Vec<(Vec<i32>, usize)> = (0..8).map(|i| (vec![i as i32], 4)).collect();
+    let result = serve_blocking(engine, reqs, 2);
+    assert!(result.is_err(), "failure must propagate");
+}
+
+#[test]
+fn threaded_server_survives_engine_failure() {
+    use lcd::coordinator::server::start;
+    let handle = start(2, 16, || Ok(FlakyEngine { calls: 0, fail_after: 3 }));
+    let rxs: Vec<_> = (0..6).map(|i| handle.submit(vec![i as i32], 4)).collect();
+    // Some requests complete, later ones see a dropped channel; neither
+    // case may hang.
+    let mut completed = 0;
+    let mut dropped = 0;
+    for rx in rxs {
+        match rx.recv_timeout(std::time::Duration::from_secs(10)) {
+            Ok(_) => completed += 1,
+            Err(_) => dropped += 1,
+        }
+    }
+    assert!(completed + dropped == 6);
+    assert!(dropped > 0, "failure injected, some must drop");
+}
+
+/// Backpressure: an engine slower than the arrival rate with a tiny queue
+/// must reject rather than grow unboundedly.
+#[test]
+fn batcher_backpressure_under_load() {
+    use lcd::coordinator::Batcher;
+    use lcd::coordinator::GenRequest;
+    use std::sync::mpsc::channel;
+    let mut b = Batcher::new(2, 4);
+    let (tx, _rx) = channel();
+    let mut accepted = 0;
+    for i in 0..100u64 {
+        if b.submit(GenRequest {
+            id: i,
+            prompt: vec![1],
+            gen_tokens: 1,
+            reply: tx.clone(),
+            t_submit: std::time::Instant::now(),
+        }) {
+            accepted += 1;
+        }
+    }
+    assert_eq!(accepted, 4);
+    assert_eq!(b.rejected(), 96);
+}

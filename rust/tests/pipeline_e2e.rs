@@ -1,0 +1,132 @@
+//! Integration: the full pipeline over real artifacts — train a few
+//! steps, calibrate, compress, and check FP vs LUT evaluation coherence.
+//! Short budgets keep this in CI range; the full-scale run lives in
+//! `examples/e2e_lcd.rs`. Skips when artifacts are missing.
+
+use lcd::config::{LcdConfig, ModelKind};
+use lcd::data::{eval_lm_batches, sample_lm_batch, CorpusSpec, SyntheticCorpus};
+use lcd::model::WeightStore;
+use lcd::pipeline::{compress_model, train_model, ModelRunner};
+use lcd::runtime::Runtime;
+use lcd::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+fn quick_cfg() -> LcdConfig {
+    let mut cfg = LcdConfig::default();
+    cfg.train_steps = 30;
+    cfg.train_lr = 0.1;
+    cfg.calib_batches = 2;
+    cfg.distill.max_steps = 60;
+    cfg
+}
+
+#[test]
+fn train_reduces_loss_through_artifact() {
+    let Some(rt) = runtime() else { return };
+    let cfg = quick_cfg();
+    let runner = ModelRunner::new(&rt, &cfg).unwrap();
+    let corpus = SyntheticCorpus::generate(CorpusSpec { seed: 1, sentences: 800, zipf_s: 1.1 });
+    let (stream, _) = corpus.split(0.1);
+    let mut rng = Rng::new(2);
+    let mut store = WeightStore::init(&runner.spec, &mut rng);
+    let log = train_model(&runner, &mut store, &stream, 30, 0.1, &mut rng).unwrap();
+    let head: f32 = log.losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = log.losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "loss {head} -> {tail}");
+}
+
+#[test]
+fn compress_then_lut_eval_is_coherent() {
+    let Some(rt) = runtime() else { return };
+    let cfg = quick_cfg();
+    let runner = ModelRunner::new(&rt, &cfg).unwrap();
+    let corpus = SyntheticCorpus::generate(CorpusSpec { seed: 3, sentences: 1200, zipf_s: 1.1 });
+    let (train, eval) = corpus.split(0.15);
+    let mut rng = Rng::new(4);
+    let mut store = WeightStore::init(&runner.spec, &mut rng);
+    train_model(&runner, &mut store, &train, 30, 0.1, &mut rng).unwrap();
+
+    let calib: Vec<Vec<i32>> = (0..2)
+        .map(|_| sample_lm_batch(&train, runner.spec.batch, runner.spec.seq, &mut rng).tokens)
+        .collect();
+    let cm = compress_model(&runner, &cfg, &store, &calib).unwrap();
+    assert_eq!(cm.layers.len(), runner.spec.linear_params().len());
+    assert!(cm.avg_centroids() <= 16.0);
+
+    let batches = eval_lm_batches(&eval, runner.spec.batch, runner.spec.seq);
+    let mut nll_fp = |b: &lcd::data::LmBatch| runner.nll(&store, b);
+    let ppl_fp = lcd::eval::perplexity(&batches[..2.min(batches.len())], &mut nll_fp).unwrap();
+    let mut nll_lut = |b: &lcd::data::LmBatch| runner.lut_nll(&cm, b, None);
+    let ppl_lut = lcd::eval::perplexity(&batches[..2.min(batches.len())], &mut nll_lut).unwrap();
+    // Under-trained model: both around vocab-ish ppl; LUT must stay within
+    // a small factor of FP (catches scale/ordering bugs loudly).
+    assert!(ppl_fp.is_finite() && ppl_lut.is_finite());
+    assert!(
+        ppl_lut < ppl_fp * 3.0 + 10.0,
+        "lut ppl {ppl_lut} vs fp {ppl_fp}: LUT path broken?"
+    );
+}
+
+#[test]
+fn fwd_and_nll_agree() {
+    // NLL computed host-side from fwd logits must match the nll artifact.
+    let Some(rt) = runtime() else { return };
+    let cfg = quick_cfg();
+    let runner = ModelRunner::new(&rt, &cfg).unwrap();
+    let mut rng = Rng::new(5);
+    let store = WeightStore::init(&runner.spec, &mut rng);
+    let (b, s, v) = (runner.spec.batch, runner.spec.seq, runner.spec.vocab);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(v) as i32).collect();
+    let mut targets = tokens.clone();
+    targets.rotate_left(1);
+    let mask = vec![1.0f32; b * s];
+
+    let logits = runner.fwd(&store, &tokens).unwrap();
+    let mut host_nll = 0.0f64;
+    for i in 0..b * s {
+        let row = &logits[i * v..(i + 1) * v];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+        host_nll += (lse - row[targets[i] as usize]) as f64;
+    }
+
+    let batch = lcd::data::LmBatch { batch: b, seq: s, tokens, targets, mask };
+    let (sum_nll, count) = runner.nll(&store, &batch).unwrap();
+    assert_eq!(count as usize, b * s);
+    assert!(
+        (sum_nll - host_nll).abs() < 1e-2 * host_nll.abs().max(1.0),
+        "artifact {sum_nll} vs host {host_nll}"
+    );
+}
+
+#[test]
+fn bert_train_and_eval_path() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick_cfg();
+    cfg.model = ModelKind::Bert;
+    let runner = ModelRunner::new(&rt, &cfg).unwrap();
+    assert!(runner.is_bert());
+    let mut rng = Rng::new(6);
+    let mut store = WeightStore::init(&runner.spec, &mut rng);
+    let set = lcd::data::tasks::ClassificationSet::generate(200, 7);
+    let tok = lcd::data::CharTokenizer::new();
+    let examples: Vec<(Vec<i32>, i32)> = set
+        .texts
+        .iter()
+        .zip(&set.labels)
+        .map(|(t, &l)| (lcd::pipeline::train::pad_to_seq(tok.encode(t), runner.spec.seq), l))
+        .collect();
+    let log =
+        lcd::pipeline::train::train_bert(&runner, &mut store, &examples, 40, 0.02, &mut rng)
+            .unwrap();
+    let head: f32 = log.losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = log.losses[35..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "bert loss {head} -> {tail}");
+}

@@ -1,0 +1,158 @@
+//! Integration: rust host implementations vs the AOT kernel artifacts.
+//!
+//! Each standalone kernel artifact (`k_*`) is executed through PJRT and
+//! cross-checked against the independent rust implementation of the same
+//! math — the L1↔L3 consistency contract. Skips (with a notice) when
+//! `make artifacts` hasn't run.
+
+use lcd::clustering::nearest_sorted;
+use lcd::runtime::{HostTensor, Runtime};
+use lcd::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime"))
+}
+
+#[test]
+fn k_lut_gemm_matches_host_engine() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(10);
+    let (b, k, n) = (64usize, 128usize, 256usize);
+    let q: Vec<i32> = (0..b * k).map(|_| rng.below(256) as i32 - 128).collect();
+    let idx: Vec<i32> = (0..k * n).map(|_| rng.below(8) as i32).collect();
+    let mut cents = vec![0.0f32; 16];
+    for c in cents.iter_mut().take(8) {
+        *c = rng.normal_scaled(0.0, 0.1);
+    }
+    let out = rt
+        .exec(
+            "k_lut_gemm",
+            &[
+                HostTensor::I32(q.clone()),
+                HostTensor::I32(idx.clone()),
+                HostTensor::F32(cents.clone()),
+            ],
+        )
+        .unwrap();
+    let y = out[0].as_f32().unwrap();
+
+    // Host reference: dense reconstruction.
+    let mut expect = vec![0.0f32; b * n];
+    for bi in 0..b {
+        for ni in 0..n {
+            let mut acc = 0.0f32;
+            for ki in 0..k {
+                acc += cents[idx[ki * n + ni] as usize] * q[bi * k + ki] as f32;
+            }
+            expect[bi * n + ni] = acc;
+        }
+    }
+    let err = lcd::util::max_abs_diff(y, &expect);
+    assert!(err < 1e-2, "artifact vs host err {err}");
+}
+
+#[test]
+fn k_smooth_quant_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = rng.normal_vec(512 * 128, 0.0, 2.0);
+    let inv_s = 13.7f32;
+    let out = rt
+        .exec(
+            "k_smooth_quant",
+            &[
+                HostTensor::F32(x.clone()),
+                HostTensor::F32(vec![inv_s]),
+                HostTensor::F32(vec![127.0]),
+            ],
+        )
+        .unwrap();
+    let q = out[0].as_i32().unwrap();
+    let host = lcd::quant::quant_act_i8(&x, inv_s, lcd::quant::ActBits::Int8);
+    let mut mismatches = 0usize;
+    for (a, &b) in q.iter().zip(&host) {
+        // f32 round-half banker's vs ties: jnp.round is half-to-even,
+        // rust f32::round is half-away — only exact .5 boundaries differ.
+        if *a != b as i32 {
+            mismatches += 1;
+            assert!((*a - b as i32).abs() <= 1, "{a} vs {b}");
+        }
+    }
+    assert!(mismatches < x.len() / 1000, "{mismatches} tie-break mismatches");
+}
+
+#[test]
+fn k_hessian_diag_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(12);
+    let (r, c) = (512usize, 128usize);
+    let x: Vec<f32> = rng.normal_vec(r * c, 0.0, 1.0);
+    let out = rt.exec("k_hessian_diag", &[HostTensor::F32(x.clone())]).unwrap();
+    let h = out[0].as_f32().unwrap();
+    let xm = lcd::tensor::Matrix::new(r, c, x).unwrap();
+    let host = lcd::hessian::HessianDiag::from_activations(&xm, 0.0);
+    for (a, b) in h.iter().zip(&host.per_input) {
+        assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn k_cluster_assign_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(13);
+    let w: Vec<f32> = rng.normal_vec(4096, 0.0, 0.1);
+    let mut cents = vec![1e30f32; 16];
+    let mut sorted: Vec<f32> = (0..6).map(|_| rng.normal_scaled(0.0, 0.1)).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cents[..6].copy_from_slice(&sorted);
+    let out = rt
+        .exec(
+            "k_cluster_assign",
+            &[HostTensor::F32(w.clone()), HostTensor::F32(cents.clone())],
+        )
+        .unwrap();
+    let idx = out[0].as_i32().unwrap();
+    for (i, &wv) in w.iter().enumerate() {
+        let host = nearest_sorted(&sorted, wv);
+        let art = idx[i] as usize;
+        // Equal-distance ties may resolve differently; distances must match.
+        let d_host = (sorted[host] - wv).abs();
+        let d_art = (sorted[art.min(5)] - wv).abs();
+        assert!((d_host - d_art).abs() < 1e-6, "weight {i}: {art} vs {host}");
+    }
+}
+
+#[test]
+fn manifest_covers_all_models_and_kernels() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest();
+    for model in ["gpt_mini", "llama_mini", "bert_mini"] {
+        let spec = m.model(model).unwrap();
+        assert!(!spec.linear_params().is_empty());
+        for art in ["fwd", "nll", "train_step", "calib", "lut_fwd", "lut_nll"] {
+            assert!(
+                m.artifact(&format!("{art}_{model}")).is_ok(),
+                "missing {art}_{model}"
+            );
+        }
+    }
+    for k in ["k_lut_gemm", "k_smooth_quant", "k_hessian_diag", "k_cluster_assign"] {
+        assert!(m.artifact(k).is_ok(), "missing {k}");
+    }
+}
+
+#[test]
+fn exec_validates_inputs() {
+    let Some(rt) = runtime() else { return };
+    // Wrong arity.
+    assert!(rt.exec("k_hessian_diag", &[]).is_err());
+    // Wrong dtype.
+    let x = vec![0i32; 512 * 128];
+    assert!(rt.exec("k_hessian_diag", &[HostTensor::I32(x)]).is_err());
+    // Wrong element count.
+    assert!(rt.exec("k_hessian_diag", &[HostTensor::F32(vec![0.0; 7])]).is_err());
+}
