@@ -1,51 +1,99 @@
 //! Serving benchmark: drive the coordinator with a Poisson-ish open-loop
-//! request stream against the FP and LUT engines, reporting the paper's
-//! serving metrics (p50/p99 latency, TTFT, throughput, rejects).
+//! request stream, reporting the paper's serving metrics (p50/p99
+//! latency, TTFT, throughput, rejects) per worker and in aggregate.
 //!
-//! Requires `make artifacts`. Run:
-//! `cargo run --release --example serve_bench [requests] [gen_tokens]`
+//! Engines:
+//! * `host` — the artifact-free parallel bucket-LUT stack; always runs,
+//!   and is swept across coordinator worker counts {1, 2, 4} to show the
+//!   multi-worker scale-up.
+//! * `fp` / `lut` — the AOT artifact engines; included only when
+//!   `artifacts/manifest.json` exists (run `make artifacts`).
+//!
+//! Run: `cargo run --release --example serve_bench [requests] [gen_tokens]`
 
 use lcd::config::LcdConfig;
 use lcd::coordinator::server;
-use lcd::data::CharTokenizer;
+use lcd::coordinator::{HostLutEngine, HostLutSpec};
+use lcd::data::{eval_lm_batches, CharTokenizer, CorpusSpec, SyntheticCorpus};
 use lcd::repro::shared::build_engine;
 use lcd::util::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let n_requests: usize =
-        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
-    let gen_tokens: usize =
-        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(12);
-    let cfg = LcdConfig::default();
-    let tok = CharTokenizer::new();
-    let prompts =
-        ["the cat ", "a bird moves ", "two plus three is ", "the river is ", "every lamp "];
-
-    for engine in ["fp", "lut"] {
-        let cfg2 = cfg.clone();
-        let engine_name = engine.to_string();
-        let handle = server::start(cfg.serve.max_batch, cfg.serve.queue_cap, move || {
+fn drive(cfg: &LcdConfig, engine: &str, workers: usize, n_requests: usize, gen_tokens: usize) {
+    let cfg2 = cfg.clone();
+    let engine_name = engine.to_string();
+    let handle =
+        server::start_pool(workers, cfg.serve.max_batch, cfg.serve.queue_cap, move |_worker| {
             build_engine(&cfg2, &engine_name)
         });
 
-        // Open-loop arrivals: exponential inter-arrival times at a rate
-        // the single-core engine can sustain (~50 req/s for fp).
-        let mut rng = Rng::new(99);
-        let mut rxs = Vec::new();
-        for i in 0..n_requests {
-            let p = tok.encode(prompts[i % prompts.len()]);
-            rxs.push(handle.submit(p, gen_tokens));
-            let wait_us = (-(rng.uniform().max(1e-9)).ln() * 20_000.0) as u64;
-            std::thread::sleep(std::time::Duration::from_micros(wait_us.min(100_000)));
+    // Open-loop arrivals: exponential inter-arrival times at a rate a
+    // single-core engine can sustain (~50 req/s).
+    let tok = CharTokenizer::new();
+    let prompts =
+        ["the cat ", "a bird moves ", "two plus three is ", "the river is ", "every lamp "];
+    let mut rng = Rng::new(99);
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let p = tok.encode(prompts[i % prompts.len()]);
+        rxs.push(handle.submit(p, gen_tokens));
+        let wait_us = (-(rng.uniform().max(1e-9)).ln() * 20_000.0) as u64;
+        std::thread::sleep(std::time::Duration::from_micros(wait_us.min(100_000)));
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().is_ok() {
+            ok += 1;
         }
-        let mut ok = 0usize;
-        for rx in rxs {
-            if rx.recv().is_ok() {
-                ok += 1;
-            }
+    }
+    let report = handle.shutdown_report();
+    if report.per_worker.len() > 1 {
+        for (w, snap) in report.per_worker.iter().enumerate() {
+            println!("    worker {w}: {}", snap.report());
         }
-        let snap = handle.shutdown();
-        println!("engine {engine:<4} ({ok}/{n_requests} ok): {}", snap.report());
+    }
+    println!(
+        "engine {engine:<4} x{workers} worker(s) ({ok}/{n_requests} ok): {}",
+        report.aggregate.report()
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let gen_tokens: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let cfg = LcdConfig::default();
+
+    // Quality gate before timing anything: perplexity measured *through*
+    // the serving engine's forward path (parallel LUT kernels included).
+    // Bit-identical GEMM means this number is independent of gemm_threads.
+    let spec = HostLutSpec::from_cfg(&cfg);
+    let mut probe = HostLutEngine::build(spec.clone())?;
+    let stream = SyntheticCorpus::generate(CorpusSpec {
+        seed: cfg.seed ^ 0xc4c4,
+        sentences: 400,
+        zipf_s: 1.1,
+    })
+    .tokens();
+    let batches = eval_lm_batches(&stream, spec.batch, spec.seq);
+    let ppl = lcd::eval::engine_perplexity(&mut probe, &batches[..batches.len().min(4)])?;
+    println!(
+        "host engine sanity: ppl {ppl:.2} through the LUT stack ({} KiB packed, t{})",
+        probe.weight_bytes() / 1024,
+        cfg.gemm_threads
+    );
+    drop(probe);
+
+    // Artifact-free host engine: sweep the coordinator worker pool.
+    for workers in [1usize, 2, 4] {
+        drive(&cfg, "host", workers, n_requests, gen_tokens);
+    }
+
+    // Artifact engines need `make artifacts`.
+    if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
+        for engine in ["fp", "lut"] {
+            drive(&cfg, engine, cfg.serve.workers, n_requests, gen_tokens);
+        }
+    } else {
+        println!("(skipping fp/lut engines: {}/manifest.json missing)", cfg.artifacts_dir);
     }
     Ok(())
 }

@@ -7,8 +7,8 @@
 use lcd::baselines::{qserve_gemm, QserveLayer};
 use lcd::clustering::kmeans_1d;
 use lcd::lut::{
-    lut_gemm_bucket, lut_gemm_table, lut_gemm_table_sym, LutLayer, ProductTable, SimdLutLayer,
-    SimdScratch,
+    lut_gemm_bucket, lut_gemm_table, lut_gemm_table_sym, LutLayer, ParallelLut, ProductTable,
+    SimdLutLayer, SimdScratch,
 };
 use lcd::tensor::{gemm_blocked, gemm_naive, Matrix};
 use lcd::util::bench::Bencher;
@@ -68,5 +68,24 @@ fn main() {
             lut_gemm_bucket(&q, 64, &layer).data[0] as f64
         });
     }
+
+    // Thread sweep of the parallel engine (batch 64 ≥ the serving batch;
+    // outputs are bit-identical to the single-thread kernels at every
+    // width — see rust/tests/parallel_determinism.rs).
+    println!("== lut_gemm: thread sweep (1024x1024, k=8, batch 64) ==");
+    let (layer, q, _, _) = make(&mut rng, 1024, 1024, 8);
+    let simd = SimdLutLayer::compile(&layer);
+    for threads in [1usize, 2, 4, 8] {
+        let par = ParallelLut::new(threads, 0);
+        b.bench(&format!("lut_bucket_par/t{threads}"), || {
+            par.gemm_bucket(&q, 64, &layer).data[0] as f64
+        });
+        let mut scratch = SimdScratch::default();
+        b.bench(&format!("lut_simd_par/t{threads}"), || {
+            par.gemm_simd(&simd, &q, 64, &mut scratch).data[0] as f64
+        });
+    }
+    b.speedup("lut_bucket_par/t4", "lut_bucket_par/t1");
+    b.speedup("lut_simd_par/t4", "lut_simd_par/t1");
     b.finish("lut_gemm");
 }

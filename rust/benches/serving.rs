@@ -86,5 +86,28 @@ fn main() {
             snap.tokens_per_sec
         });
     }
+
+    // Multi-worker coordinator sweep: N workers drain the same closed
+    // request set through the shared queue; tokens/sec should scale until
+    // the per-forward cost stops dominating.
+    for workers in [1usize, 2, 4] {
+        b.bench(&format!("pool_serve_64reqs_cost500us_w{workers}"), || {
+            let handle = lcd::coordinator::start_pool(workers, 8, 2048, |_w| {
+                Ok(MockEngine { b: 8, s: 64, v: 96, cost_us: 500 })
+            });
+            let rxs: Vec<_> =
+                (0..64).map(|i| handle.submit(vec![(i % 90) as i32 + 1; 8], 8)).collect();
+            let mut ok = 0usize;
+            for rx in rxs {
+                if rx.recv().is_ok() {
+                    ok += 1;
+                }
+            }
+            debug_assert_eq!(ok, 64);
+            let snap = handle.shutdown();
+            snap.tokens_per_sec + ok as f64
+        });
+    }
+    b.speedup("pool_serve_64reqs_cost500us_w4", "pool_serve_64reqs_cost500us_w1");
     b.finish("serving");
 }

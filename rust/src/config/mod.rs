@@ -53,11 +53,13 @@ pub struct ServeConfig {
     pub gen_tokens: usize,
     /// Queue capacity before backpressure rejects.
     pub queue_cap: usize,
+    /// Worker threads behind the `ServerHandle` (each owns an engine).
+    pub workers: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, max_wait_us: 2_000, gen_tokens: 16, queue_cap: 256 }
+        ServeConfig { max_batch: 8, max_wait_us: 2_000, gen_tokens: 16, queue_cap: 256, workers: 1 }
     }
 }
 
@@ -79,6 +81,11 @@ pub struct LcdConfig {
     /// Fixed smoothing factor when `adaptive_smooth` is false.
     pub fixed_smooth: f32,
     pub serve: ServeConfig,
+    /// Compute threads for the parallel LUT GEMM engine (`lut::parallel`);
+    /// 1 = fully serial. Output is bit-identical at every setting.
+    pub gemm_threads: usize,
+    /// Output rows per GEMM shard (0 = automatic granularity).
+    pub gemm_shard_rows: usize,
     /// Directory holding `manifest.json` + `*.hlo.txt`.
     pub artifacts_dir: String,
 }
@@ -96,6 +103,8 @@ impl Default for LcdConfig {
             adaptive_smooth: true,
             fixed_smooth: 1.0,
             serve: ServeConfig::default(),
+            gemm_threads: 1,
+            gemm_shard_rows: 0,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -132,6 +141,12 @@ impl LcdConfig {
         if let Some(v) = doc.get("fixed_smooth") {
             cfg.fixed_smooth = v.as_f64()? as f32;
         }
+        if let Some(v) = doc.get("gemm_threads") {
+            cfg.gemm_threads = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("gemm_shard_rows") {
+            cfg.gemm_shard_rows = v.as_usize()?;
+        }
         if let Some(v) = doc.get("artifacts_dir") {
             cfg.artifacts_dir = v.as_str()?.to_string();
         }
@@ -150,6 +165,9 @@ impl LcdConfig {
             }
             if let Some(v) = s.get("queue_cap") {
                 cfg.serve.queue_cap = v.as_usize()?;
+            }
+            if let Some(v) = s.get("workers") {
+                cfg.serve.workers = v.as_usize()?;
             }
         }
         Ok(cfg)
@@ -196,9 +214,13 @@ impl LcdConfig {
                     other => bail!("unknown init '{other}'"),
                 }
             }
+            "gemm_threads" => self.gemm_threads = value.parse()?,
+            "gemm_shard_rows" => self.gemm_shard_rows = value.parse()?,
             "serve.max_batch" => self.serve.max_batch = value.parse()?,
             "serve.max_wait_us" => self.serve.max_wait_us = value.parse()?,
             "serve.gen_tokens" => self.serve.gen_tokens = value.parse()?,
+            "serve.queue_cap" => self.serve.queue_cap = value.parse()?,
+            "serve.workers" => self.serve.workers = value.parse()?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -253,8 +275,9 @@ mod tests {
     fn defaults_and_json_overlay() {
         let doc = Json::parse(
             r#"{"model": "llama", "seed": 7, "act_bits": 4,
+                "gemm_threads": 4, "gemm_shard_rows": 32,
                 "distill": {"lr": 0.1, "strategy": "progressive"},
-                "serve": {"max_batch": 4}}"#,
+                "serve": {"max_batch": 4, "workers": 3}}"#,
         )
         .unwrap();
         let cfg = LcdConfig::from_json(&doc).unwrap();
@@ -264,8 +287,12 @@ mod tests {
         assert_eq!(cfg.distill.lr, 0.1);
         assert_eq!(cfg.distill.strategy, Strategy::ProgressiveOnly);
         assert_eq!(cfg.serve.max_batch, 4);
+        assert_eq!(cfg.serve.workers, 3);
+        assert_eq!(cfg.gemm_threads, 4);
+        assert_eq!(cfg.gemm_shard_rows, 32);
         // Untouched fields keep defaults.
         assert_eq!(cfg.train_steps, 1500);
+        assert_eq!(cfg.serve.queue_cap, 256);
     }
 
     #[test]
@@ -281,6 +308,14 @@ mod tests {
         assert_eq!(cfg.distill.min_k, 5);
         cfg.set_override("model=bert").unwrap();
         assert_eq!(cfg.model, ModelKind::Bert);
+        cfg.set_override("gemm_threads=8").unwrap();
+        assert_eq!(cfg.gemm_threads, 8);
+        cfg.set_override("gemm_shard_rows=64").unwrap();
+        assert_eq!(cfg.gemm_shard_rows, 64);
+        cfg.set_override("serve.workers=4").unwrap();
+        assert_eq!(cfg.serve.workers, 4);
+        cfg.set_override("serve.queue_cap=99").unwrap();
+        assert_eq!(cfg.serve.queue_cap, 99);
         assert!(cfg.set_override("nope=1").is_err());
         assert!(cfg.set_override("garbage").is_err());
     }

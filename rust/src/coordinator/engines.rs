@@ -1,0 +1,204 @@
+//! Artifact-free serving engines.
+//!
+//! [`HostLutEngine`] is a deterministic proxy LM whose forward pass is the
+//! *real* parallel bucket-LUT linear stack: seeded random weights are
+//! k-means clustered, compiled to [`SimdLutLayer`]s, and executed through
+//! [`LutStack`] (the `lut::parallel` engine) with a tanh nonlinearity
+//! between layers and a final projection to vocab logits. It exists so the
+//! serving coordinator can be driven at production shapes — multi-worker,
+//! continuous batching, INT8 LUT kernels on every decode step — on any
+//! host, without PJRT or `make artifacts`.
+//!
+//! Determinism: weights depend only on the seed, and the parallel GEMM is
+//! bit-identical across thread counts, so two engines built from the same
+//! spec produce identical logits — the property the serving determinism
+//! suite leans on.
+
+use super::server::Engine;
+use crate::clustering::kmeans_1d;
+use crate::lut::parallel::LutStack;
+use crate::lut::{LutLayer, SimdLutLayer, SimdScratch};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Shape/seed spec for a [`HostLutEngine`].
+#[derive(Clone, Debug)]
+pub struct HostLutSpec {
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// Hidden width of the intermediate LUT layers.
+    pub hidden: usize,
+    /// Number of hidden→hidden LUT layers before the vocab projection.
+    pub depth: usize,
+    /// Centroids per layer (≤ 16).
+    pub centroids: usize,
+    pub seed: u64,
+    /// `lut::parallel` threads for the GEMM pool.
+    pub gemm_threads: usize,
+    /// Output rows per shard (0 = automatic).
+    pub gemm_shard_rows: usize,
+}
+
+impl Default for HostLutSpec {
+    fn default() -> Self {
+        HostLutSpec {
+            batch: 8,
+            seq: 64,
+            vocab: 96,
+            hidden: 128,
+            depth: 4,
+            centroids: 8,
+            seed: 42,
+            gemm_threads: 1,
+            gemm_shard_rows: 0,
+        }
+    }
+}
+
+impl HostLutSpec {
+    /// Spec derived from an experiment config: serving batch, seed and
+    /// the parallel-engine knobs come from the config; model shape keeps
+    /// the defaults. The single source of truth for every `--engine host`
+    /// consumer, so config knobs can't silently diverge between them.
+    pub fn from_cfg(cfg: &crate::config::LcdConfig) -> HostLutSpec {
+        HostLutSpec {
+            batch: cfg.serve.max_batch.max(1),
+            seed: cfg.seed,
+            gemm_threads: cfg.gemm_threads,
+            gemm_shard_rows: cfg.gemm_shard_rows,
+            ..HostLutSpec::default()
+        }
+    }
+}
+
+/// Deterministic LUT-stack LM serving engine (no artifacts required).
+pub struct HostLutEngine {
+    spec: HostLutSpec,
+    /// Token embedding table, `vocab × hidden` row-major.
+    emb: Vec<f32>,
+    /// `depth` hidden→hidden layers plus one hidden→vocab projection.
+    stack: LutStack,
+    scratch: SimdScratch,
+    name: String,
+}
+
+impl HostLutEngine {
+    pub fn build(spec: HostLutSpec) -> Result<HostLutEngine> {
+        anyhow::ensure!(spec.batch > 0 && spec.seq > 0, "batch/seq must be positive");
+        anyhow::ensure!(spec.vocab > 1 && spec.hidden > 0, "vocab/hidden must be positive");
+        let mut rng = Rng::new(spec.seed ^ 0x4057_1075);
+        let emb = rng.normal_vec(spec.vocab * spec.hidden, 0.0, 0.5);
+        let std = 1.0 / (spec.hidden as f32).sqrt();
+        let mut layers = Vec::with_capacity(spec.depth + 1);
+        for l in 0..=spec.depth {
+            let (d_in, d_out) =
+                if l == spec.depth { (spec.hidden, spec.vocab) } else { (spec.hidden, spec.hidden) };
+            let w = rng.normal_vec(d_in * d_out, 0.0, std);
+            let km = kmeans_1d(&w, spec.centroids.clamp(2, 16), 20, &mut rng);
+            // Inputs are tanh-bounded (|x| ≤ 1 after the first layer; the
+            // embedding is clipped by the quantizer), so an inv-scale of
+            // 127 uses the full INT8 range: s_m = 1, s_q = 1/127.
+            let layer = LutLayer::compile(&km.clustering, d_in, d_out, 1.0, 1.0 / 127.0)?;
+            layers.push(SimdLutLayer::compile(&layer));
+        }
+        let name = format!("host-lut-w{}xd{}-t{}", spec.hidden, spec.depth, spec.gemm_threads);
+        let stack = LutStack::new(layers, spec.gemm_threads, spec.gemm_shard_rows);
+        Ok(HostLutEngine { spec, emb, stack, scratch: SimdScratch::default(), name })
+    }
+
+    /// Packed LUT bytes across the stack.
+    pub fn weight_bytes(&self) -> usize {
+        self.stack.bytes()
+    }
+}
+
+impl Engine for HostLutEngine {
+    fn batch(&self) -> usize {
+        self.spec.batch
+    }
+    fn seq(&self) -> usize {
+        self.spec.seq
+    }
+    fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let rows = self.spec.batch * self.spec.seq;
+        anyhow::ensure!(tokens.len() == rows, "token batch shape mismatch");
+        let hidden = self.spec.hidden;
+        let mut x = vec![0.0f32; rows * hidden];
+        for (r, &t) in tokens.iter().enumerate() {
+            let tid = (t.max(0) as usize) % self.spec.vocab;
+            x[r * hidden..(r + 1) * hidden]
+                .copy_from_slice(&self.emb[tid * hidden..(tid + 1) * hidden]);
+        }
+        let n = self.stack.len();
+        for li in 0..n - 1 {
+            let y = self.stack.linear(li, &x, rows, &mut self.scratch);
+            x = y.data;
+            for v in &mut x {
+                *v = v.tanh();
+            }
+        }
+        let logits = self.stack.linear(n - 1, &x, rows, &mut self.scratch);
+        Ok(logits.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(threads: usize) -> HostLutSpec {
+        HostLutSpec {
+            batch: 2,
+            seq: 8,
+            vocab: 16,
+            hidden: 24,
+            depth: 2,
+            centroids: 6,
+            seed: 7,
+            gemm_threads: threads,
+            gemm_shard_rows: 0,
+        }
+    }
+
+    #[test]
+    fn forward_shape_and_determinism() {
+        let mut a = HostLutEngine::build(tiny_spec(1)).unwrap();
+        let mut b = HostLutEngine::build(tiny_spec(1)).unwrap();
+        let tokens: Vec<i32> = (0..16).map(|i| i % 16).collect();
+        let la = a.forward(&tokens).unwrap();
+        let lb = b.forward(&tokens).unwrap();
+        assert_eq!(la.len(), 2 * 8 * 16);
+        assert_eq!(la, lb, "same seed must give identical logits");
+        assert!(la.iter().any(|&v| v != 0.0), "logits must not be all-zero");
+    }
+
+    #[test]
+    fn thread_count_does_not_change_logits() {
+        let mut one = HostLutEngine::build(tiny_spec(1)).unwrap();
+        let mut four = HostLutEngine::build(tiny_spec(4)).unwrap();
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 5) % 16).collect();
+        assert_eq!(
+            one.forward(&tokens).unwrap(),
+            four.forward(&tokens).unwrap(),
+            "parallel LUT stack must be bit-identical across thread counts"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut spec = tiny_spec(1);
+        spec.batch = 0;
+        assert!(HostLutEngine::build(spec).is_err());
+        let mut e = HostLutEngine::build(tiny_spec(1)).unwrap();
+        assert!(e.forward(&[0i32; 3]).is_err(), "wrong token count must fail");
+        assert!(e.weight_bytes() > 0);
+    }
+}

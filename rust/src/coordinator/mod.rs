@@ -3,24 +3,32 @@
 //! A continuous-batching generation server in the vLLM/Orca mold, sized
 //! for the fixed-shape AOT artifacts:
 //!
-//! * [`request`] — request/response types and latency metrics;
+//! * [`request`] — request/response types and latency metrics (mergeable
+//!   across workers for aggregate reporting);
 //! * [`batcher`] — slot scheduler: admits queued requests into free batch
 //!   slots between decode iterations (continuous batching), applies
 //!   queue-capacity backpressure, and tracks per-slot sessions;
-//! * [`server`] — the worker loop: owns the PJRT runtime (artifacts are
-//!   not `Send`, so the runtime lives entirely inside the worker thread),
-//!   executes one batched forward per decode step, greedy-samples, and
-//!   completes sessions.
+//! * [`server`] — the worker pool: one shared bounded queue feeding N
+//!   worker threads behind a single [`ServerHandle`]. Each worker owns
+//!   its engine end to end (PJRT state is not `Send`, so engines are
+//!   built inside their worker thread) and its own batcher; shutdown
+//!   returns per-worker and aggregate [`MetricsSnapshot`]s;
+//! * [`engines`] — artifact-free engines, notably [`HostLutEngine`]: a
+//!   deterministic proxy LM whose forward pass is the parallel bucket-LUT
+//!   linear stack (`lut::parallel`), so serving scales can be exercised
+//!   on any host.
 //!
 //! The engine behind the forward pass is pluggable ([`server::Engine`]):
-//! the FP artifact, the LUT artifact (the paper's §4 system), or a mock
-//! for tests — which is how the Fig. 6 serving comparison swaps
-//! implementations without touching scheduling.
+//! the FP artifact, the LUT artifact (the paper's §4 system), the host
+//! LUT stack, or a mock for tests — which is how the Fig. 6 serving
+//! comparison swaps implementations without touching scheduling.
 
 pub mod batcher;
+pub mod engines;
 pub mod request;
 pub mod server;
 
 pub use batcher::{Batcher, Session};
+pub use engines::{HostLutEngine, HostLutSpec};
 pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
-pub use server::{serve_blocking, Engine, ServerHandle};
+pub use server::{serve_blocking, start, start_pool, Engine, ServerHandle, ServerReport};

@@ -70,6 +70,26 @@ impl Metrics {
         self.finished = Some(Instant::now());
     }
 
+    /// Fold another worker's metrics into this one (aggregate reporting
+    /// for the multi-worker coordinator): counters add, latency samples
+    /// concatenate, and the wall-clock window is the union of both.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.generated_tokens += other.generated_tokens;
+        self.decode_steps += other.decode_steps;
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.ttfts_us.extend_from_slice(&other.ttfts_us);
+        self.started = match (self.started, other.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.finished = match (self.finished, other.finished) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let pct = |v: &[u64], p: f64| -> u64 {
             if v.is_empty() {
@@ -149,5 +169,33 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.p50_latency_us, 0);
         assert_eq!(s.tokens_per_sec, 0.0);
+    }
+
+    #[test]
+    fn merge_aggregates_workers() {
+        let mk = |n: u64, base_us: u64| {
+            let mut m = Metrics::default();
+            m.record_start();
+            for i in 1..=n {
+                m.record_completion(&GenResponse {
+                    id: i,
+                    tokens: vec![0; 2],
+                    ttft: Duration::from_micros(base_us * i),
+                    latency: Duration::from_micros(base_us * i * 2),
+                });
+            }
+            m
+        };
+        let mut agg = Metrics::default();
+        agg.merge(&mk(10, 100));
+        agg.merge(&mk(5, 500));
+        let s = agg.snapshot();
+        assert_eq!(s.completed, 15);
+        assert_eq!(s.generated_tokens, 30);
+        assert!(s.p99_latency_us >= s.p50_latency_us);
+        // Merging an empty worker changes nothing.
+        let before = agg.snapshot();
+        agg.merge(&Metrics::default());
+        assert_eq!(agg.snapshot().completed, before.completed);
     }
 }

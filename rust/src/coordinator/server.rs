@@ -1,13 +1,24 @@
-//! Serving worker: decode loop over a pluggable batched-forward engine.
+//! Serving workers: decode loops over a pluggable batched-forward engine.
 //!
-//! The worker thread owns everything PJRT (artifacts are not `Send`), so
-//! the public handle only moves plain data: requests in, responses out.
+//! The coordinator runs **N worker threads behind one [`ServerHandle`]**.
+//! Each worker owns its engine end to end (PJRT state is not `Send`, so
+//! engines are built *inside* their worker thread) and its own
+//! continuous-batching [`Batcher`]; a shared bounded queue feeds all of
+//! them. The public handle only moves plain data: requests in, responses
+//! out, per-worker and aggregate [`MetricsSnapshot`]s at shutdown.
+//!
+//! [`start`] keeps the original single-worker API; [`start_pool`] is the
+//! general form. [`serve_blocking`] remains the thread-free bench path.
 
 use super::batcher::Batcher;
 use super::request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
 use crate::util::argmax;
 use anyhow::Result;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batched-forward engine: given a padded token batch `[batch × seq]`,
@@ -21,71 +32,288 @@ pub trait Engine {
     fn name(&self) -> &str;
 }
 
-/// Control messages to the worker.
-enum Ctl {
-    Request(GenRequest),
-    /// Drain remaining work and stop.
-    Shutdown(Sender<MetricsSnapshot>),
+impl<E: Engine + ?Sized> Engine for Box<E> {
+    fn batch(&self) -> usize {
+        (**self).batch()
+    }
+    fn seq(&self) -> usize {
+        (**self).seq()
+    }
+    fn vocab(&self) -> usize {
+        (**self).vocab()
+    }
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        (**self).forward(tokens)
+    }
+    fn name(&self) -> &str {
+        (**self).name()
+    }
 }
 
-/// Client handle to a running server.
+/// Queue state shared between the handle and every worker.
+struct QueueState {
+    queue: VecDeque<GenRequest>,
+    shutting_down: bool,
+    /// Submissions rejected by backpressure (or after worker death).
+    rejected: u64,
+    /// Workers that have exited (cleanly or not).
+    exited: usize,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cond: Condvar,
+    queue_cap: usize,
+    workers: usize,
+}
+
+/// Aggregate + per-worker metrics returned by [`ServerHandle::shutdown_report`].
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    pub aggregate: MetricsSnapshot,
+    /// One snapshot per worker, ordered by worker index.
+    pub per_worker: Vec<MetricsSnapshot>,
+}
+
+/// Client handle to a running server (any number of workers).
 pub struct ServerHandle {
-    tx: Sender<Ctl>,
-    next_id: std::sync::atomic::AtomicU64,
-    join: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    results: Receiver<(usize, Metrics)>,
 }
 
 impl ServerHandle {
-    /// Submit a prompt; returns the receiver for the response.
+    /// Submit a prompt; returns the receiver for the response. Requests
+    /// rejected by backpressure are dropped, which the caller observes as
+    /// a disconnected receiver.
     pub fn submit(&self, prompt: Vec<i32>, gen_tokens: usize) -> Receiver<GenResponse> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let req =
-            GenRequest { id, prompt, gen_tokens, reply: tx, t_submit: Instant::now() };
-        // A dropped worker means shutdown already happened; the caller
-        // sees the disconnected receiver.
-        let _ = self.tx.send(Ctl::Request(req));
+        let req = GenRequest { id, prompt, gen_tokens, reply: tx, t_submit: Instant::now() };
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutting_down || st.exited == self.shared.workers || st.queue.len() >= self.shared.queue_cap
+        {
+            st.rejected += 1; // dropping `req` disconnects the receiver
+        } else {
+            st.queue.push_back(req);
+            self.shared.cond.notify_one();
+        }
         rx
     }
 
-    /// Drain + stop; returns final metrics.
-    pub fn shutdown(mut self) -> MetricsSnapshot {
-        let (tx, rx) = channel();
-        let _ = self.tx.send(Ctl::Shutdown(tx));
-        let snap = rx.recv().unwrap_or_else(|_| Metrics::default().snapshot());
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+    /// Number of worker threads behind this handle.
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Drain + stop; returns the aggregate metrics.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        self.shutdown_report().aggregate
+    }
+
+    /// Drain + stop; returns aggregate and per-worker metrics.
+    pub fn shutdown_report(mut self) -> ServerReport {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutting_down = true;
         }
-        snap
+        self.shared.cond.notify_all();
+        let mut per: Vec<(usize, Metrics)> = Vec::new();
+        for _ in 0..self.shared.workers {
+            match self.results.recv() {
+                Ok(entry) => per.push(entry),
+                Err(_) => break,
+            }
+        }
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
+        let shared_rejected = {
+            let mut st = self.shared.state.lock().unwrap();
+            // Every worker is gone; disconnect stragglers and count them.
+            st.rejected += st.queue.len() as u64;
+            st.queue.clear();
+            st.rejected
+        };
+        per.sort_by_key(|(w, _)| *w);
+        let mut aggregate = Metrics::default();
+        for (_, m) in &per {
+            aggregate.merge(m);
+        }
+        aggregate.rejected += shared_rejected;
+        ServerReport {
+            aggregate: aggregate.snapshot(),
+            per_worker: per.into_iter().map(|(_, m)| m.snapshot()).collect(),
+        }
     }
 }
 
-/// Start a server around an engine builder. The builder runs inside the
-/// worker thread (PJRT state never crosses threads).
+impl Drop for ServerHandle {
+    /// Dropping the handle without an explicit shutdown still drains and
+    /// stops every worker (mirrors the channel-disconnect behaviour of
+    /// the original single-worker server).
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutting_down = true;
+        }
+        self.shared.cond.notify_all();
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Start a single-worker server around an engine builder (original API).
+/// The builder runs inside the worker thread (PJRT state never crosses
+/// threads).
 pub fn start<F, E>(max_batch: usize, queue_cap: usize, build: F) -> ServerHandle
 where
     F: FnOnce() -> Result<E> + Send + 'static,
     E: Engine,
 {
-    let (tx, rx) = channel::<Ctl>();
-    let join = std::thread::spawn(move || {
-        let engine = match build() {
-            Ok(e) => e,
-            Err(err) => {
-                eprintln!("engine build failed: {err:#}");
-                // Drain and drop all requests (their reply channels close).
-                while let Ok(ctl) = rx.recv() {
-                    if let Ctl::Shutdown(tx) = ctl {
-                        let _ = tx.send(Metrics::default().snapshot());
-                        return;
-                    }
-                }
-                return;
-            }
-        };
-        worker_loop(engine, rx, max_batch, queue_cap);
+    let once = Mutex::new(Some(build));
+    start_pool(1, max_batch, queue_cap, move |_worker| {
+        let b = once.lock().unwrap().take().expect("single-worker engine builder runs once");
+        b()
+    })
+}
+
+/// Start `workers` worker threads sharing one bounded request queue. The
+/// builder is invoked once per worker, inside that worker's thread, with
+/// the worker index — each call must produce an independent engine.
+pub fn start_pool<F, E>(workers: usize, max_batch: usize, queue_cap: usize, build: F) -> ServerHandle
+where
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    E: Engine,
+{
+    let workers = workers.max(1);
+    let shared = Arc::new(Shared {
+        state: Mutex::new(QueueState {
+            queue: VecDeque::new(),
+            shutting_down: false,
+            rejected: 0,
+            exited: 0,
+        }),
+        cond: Condvar::new(),
+        queue_cap: queue_cap.max(1),
+        workers,
     });
-    ServerHandle { tx, next_id: std::sync::atomic::AtomicU64::new(1), join: Some(join) }
+    let build = Arc::new(build);
+    let (res_tx, res_rx) = channel();
+    let mut joins = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let shared2 = Arc::clone(&shared);
+        let build2 = Arc::clone(&build);
+        let tx2 = res_tx.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("lcd-serve-{w}"))
+            .spawn(move || pool_worker(w, shared2, max_batch, build2, tx2))
+            .expect("spawning serve worker");
+        joins.push(join);
+    }
+    drop(res_tx);
+    ServerHandle { shared, next_id: AtomicU64::new(1), joins, results: res_rx }
+}
+
+fn pool_worker<F, E>(
+    worker: usize,
+    shared: Arc<Shared>,
+    max_batch: usize,
+    build: Arc<F>,
+    results: Sender<(usize, Metrics)>,
+) where
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    E: Engine,
+{
+    let mut metrics = Metrics::default();
+    // Catch panics (engine build or decode) so the exit bookkeeping below
+    // always runs — otherwise queued requests would keep their reply
+    // senders alive forever and clients would hang in recv().
+    let outcome = catch_unwind(AssertUnwindSafe(|| match (build.as_ref())(worker) {
+        Ok(mut engine) => run_worker(&mut engine, &shared, max_batch, &mut metrics),
+        Err(err) => eprintln!("engine build failed on worker {worker}: {err:#}"),
+    }));
+    if outcome.is_err() {
+        eprintln!("serve worker {worker} panicked; draining its queue share");
+    }
+    // Exit bookkeeping: once the LAST worker leaves, queued requests are
+    // dropped so clients see disconnected channels instead of hanging.
+    {
+        let mut st = shared.state.lock().unwrap();
+        st.exited += 1;
+        if st.exited == shared.workers {
+            // Dropped requests count as rejected so the final report still
+            // accounts for every submission (completed + rejected).
+            st.rejected += st.queue.len() as u64;
+            st.queue.clear();
+        }
+    }
+    let _ = results.send((worker, metrics));
+}
+
+/// One worker's decode loop: admit from the shared queue into the local
+/// batcher, run batched decode steps, complete sessions.
+fn run_worker<E: Engine>(
+    engine: &mut E,
+    shared: &Arc<Shared>,
+    max_batch: usize,
+    metrics: &mut Metrics,
+) {
+    let slots = max_batch.min(engine.batch()).max(1);
+    let mut batcher = Batcher::new(slots, slots);
+    loop {
+        // Admission: block while fully idle, otherwise just top up free
+        // slots so decode iterations aren't delayed.
+        {
+            let mut st = shared.state.lock().unwrap();
+            while batcher.is_idle() && st.queue.is_empty() {
+                if st.shutting_down {
+                    return; // clean drain: nothing queued, nothing in flight
+                }
+                let (guard, _timeout) =
+                    shared.cond.wait_timeout(st, Duration::from_millis(50)).unwrap();
+                st = guard;
+            }
+            let free = slots.saturating_sub(batcher.active() + batcher.pending());
+            for _ in 0..free {
+                match st.queue.pop_front() {
+                    Some(req) => {
+                        metrics.record_start();
+                        let admitted = batcher.submit(req);
+                        debug_assert!(admitted, "local batcher sized to its slot count");
+                    }
+                    None => break,
+                }
+            }
+        }
+        if batcher.is_idle() {
+            continue;
+        }
+        batcher.fill_slots(engine.seq());
+        // Catch decode panics locally so the requests this worker holds
+        // are still counted; errors and panics both end the worker.
+        let step = catch_unwind(AssertUnwindSafe(|| decode_step(engine, &mut batcher, metrics)));
+        let failed = match step {
+            Ok(Ok(())) => None,
+            Ok(Err(e)) => Some(format!("decode step failed: {e:#}")),
+            Err(_) => Some("decode step panicked".to_string()),
+        };
+        if let Some(msg) = failed {
+            eprintln!("{msg}");
+            // In-flight sessions drop here; their receivers disconnect.
+            // Count them so the report accounts for every submission.
+            metrics.rejected += (batcher.active() + batcher.pending()) as u64;
+            return;
+        }
+        for sess in batcher.take_done() {
+            let reply = sess.request.reply.clone();
+            let resp = sess.finish();
+            metrics.record_completion(&resp);
+            let _ = reply.send(resp);
+        }
+    }
 }
 
 /// Run a server to completion on the current thread with a pre-built
@@ -124,62 +352,6 @@ pub fn serve_blocking<E: Engine>(
     // Drain the channel copies.
     while rx.try_recv().is_ok() {}
     Ok((responses, metrics.snapshot()))
-}
-
-fn worker_loop<E: Engine>(mut engine: E, rx: Receiver<Ctl>, max_batch: usize, queue_cap: usize) {
-    let mut batcher = Batcher::new(max_batch.min(engine.batch()), queue_cap);
-    let mut metrics = Metrics::default();
-    let mut shutdown_reply: Option<Sender<MetricsSnapshot>> = None;
-
-    loop {
-        // Admission: block briefly when idle, otherwise just drain what's
-        // queued so decode iterations aren't delayed.
-        if batcher.is_idle() && shutdown_reply.is_none() {
-            match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(Ctl::Request(req)) => {
-                    metrics.record_start();
-                    if !batcher.submit(req) {
-                        metrics.rejected += 1;
-                    }
-                }
-                Ok(Ctl::Shutdown(tx)) => shutdown_reply = Some(tx),
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        loop {
-            match rx.try_recv() {
-                Ok(Ctl::Request(req)) => {
-                    metrics.record_start();
-                    if !batcher.submit(req) {
-                        metrics.rejected += 1;
-                    }
-                }
-                Ok(Ctl::Shutdown(tx)) => shutdown_reply = Some(tx),
-                Err(_) => break,
-            }
-        }
-
-        if batcher.is_idle() {
-            if let Some(tx) = shutdown_reply.take() {
-                let _ = tx.send(metrics.snapshot());
-                break;
-            }
-            continue;
-        }
-
-        batcher.fill_slots(engine.seq());
-        if let Err(e) = decode_step(&mut engine, &mut batcher, &mut metrics) {
-            eprintln!("decode step failed: {e:#}");
-            break;
-        }
-        for sess in batcher.take_done() {
-            let reply = sess.request.reply.clone();
-            let resp = sess.finish();
-            metrics.record_completion(&resp);
-            let _ = reply.send(resp);
-        }
-    }
 }
 
 /// One batched forward + greedy sample for every active session.
@@ -282,9 +454,7 @@ mod tests {
 
     #[test]
     fn threaded_server_round_trip() {
-        let handle = start(2, 16, || {
-            Ok(MockEngine { b: 2, s: 8, v: 16, calls: 0 })
-        });
+        let handle = start(2, 16, || Ok(MockEngine { b: 2, s: 8, v: 16, calls: 0 }));
         let rx1 = handle.submit(vec![3], 3);
         let rx2 = handle.submit(vec![7], 2);
         let r1 = rx1.recv().unwrap();
@@ -293,5 +463,55 @@ mod tests {
         assert_eq!(r2.tokens, vec![8, 9]);
         let snap = handle.shutdown();
         assert_eq!(snap.completed, 2);
+    }
+
+    #[test]
+    fn pool_drains_closed_request_set() {
+        let handle = start_pool(4, 2, 64, |_w| Ok(MockEngine { b: 2, s: 8, v: 16, calls: 0 }));
+        assert_eq!(handle.workers(), 4);
+        let rxs: Vec<_> = (0..12).map(|i| handle.submit(vec![i % 14], 3)).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            let t0 = (i as i32 % 14) + 1;
+            assert_eq!(r.tokens, vec![t0, t0 + 1, t0 + 2]);
+        }
+        let report = handle.shutdown_report();
+        assert_eq!(report.aggregate.completed, 12);
+        assert_eq!(report.per_worker.len(), 4);
+        let sum: u64 = report.per_worker.iter().map(|m| m.completed).sum();
+        assert_eq!(sum, 12);
+    }
+
+    #[test]
+    fn pool_backpressure_rejects_over_capacity() {
+        // One slow-ish setup: tiny queue, requests submitted before workers
+        // can drain — overflow must disconnect, not hang.
+        let handle = start_pool(1, 1, 2, |_w| Ok(MockEngine { b: 1, s: 8, v: 16, calls: 0 }));
+        let rxs: Vec<_> = (0..40).map(|i| handle.submit(vec![i % 14], 2)).collect();
+        let mut completed = 0;
+        let mut rejected = 0;
+        for rx in rxs {
+            match rx.recv() {
+                Ok(_) => completed += 1,
+                Err(_) => rejected += 1,
+            }
+        }
+        let snap = handle.shutdown();
+        assert_eq!(completed, snap.completed as usize);
+        assert_eq!(completed + rejected, 40);
+        assert!(rejected > 0, "queue_cap 2 with 40 instant submissions must reject");
+        assert_eq!(snap.rejected as usize, rejected);
+    }
+
+    #[test]
+    fn submissions_after_shutdown_are_rejected() {
+        let handle = start_pool(2, 2, 16, |_w| Ok(MockEngine { b: 2, s: 8, v: 16, calls: 0 }));
+        let rx = handle.submit(vec![1], 1);
+        assert!(rx.recv().is_ok());
+        let shared = Arc::clone(&handle.shared);
+        let snap = handle.shutdown();
+        assert_eq!(snap.completed, 1);
+        // After shutdown the state says so; a late handle would reject.
+        assert!(shared.state.lock().unwrap().shutting_down);
     }
 }

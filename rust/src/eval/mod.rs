@@ -117,6 +117,49 @@ pub fn mc_accuracy(
     Ok(correct as f64 / suite.questions.len().max(1) as f64)
 }
 
+/// Perplexity measured *through a serving engine*: run the engine's
+/// batched forward on fixed-shape batches and score masked NLL host-side
+/// from the logits. This exercises exactly the tensor path a deployed
+/// server executes (parallel LUT kernels included), so serving-engine
+/// quality regressions surface even where the artifact-side `nll` path is
+/// unavailable — and since the parallel GEMM is bit-identical across
+/// thread counts, the result is independent of `gemm_threads`.
+pub fn engine_perplexity<E: crate::coordinator::Engine>(
+    engine: &mut E,
+    batches: &[LmBatch],
+) -> Result<f64> {
+    let (b, s, v) = (engine.batch(), engine.seq(), engine.vocab());
+    let mut total_nll = 0.0f64;
+    let mut total_count = 0.0f64;
+    for batch in batches {
+        anyhow::ensure!(
+            batch.batch == b && batch.seq == s,
+            "batch shape ({}, {}) does not match engine ({b}, {s})",
+            batch.batch,
+            batch.seq
+        );
+        let logits = engine.forward(&batch.tokens)?;
+        anyhow::ensure!(logits.len() == b * s * v, "engine returned wrong logits size");
+        for i in 0..b * s {
+            if batch.mask[i] == 0.0 {
+                continue;
+            }
+            let target = batch.targets[i];
+            anyhow::ensure!(
+                target >= 0 && (target as usize) < v,
+                "target id {target} outside the engine vocab ({v})"
+            );
+            let row = &logits[i * v..(i + 1) * v];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+            total_nll += (lse - row[target as usize]) as f64;
+            total_count += 1.0;
+        }
+    }
+    anyhow::ensure!(total_count > 0.0, "no unmasked tokens in eval set");
+    Ok((total_nll / total_count).exp())
+}
+
 /// Classification accuracy given per-example predicted labels.
 pub fn classification_accuracy(predicted: &[i32], labels: &[i32]) -> f64 {
     assert_eq!(predicted.len(), labels.len());
@@ -232,5 +275,35 @@ mod tests {
     fn classification_accuracy_basics() {
         assert_eq!(classification_accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
         assert_eq!(classification_accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn engine_perplexity_of_uniform_engine() {
+        // An engine emitting constant logits is a uniform model: PPL = V.
+        struct Uniform;
+        impl crate::coordinator::Engine for Uniform {
+            fn batch(&self) -> usize {
+                4
+            }
+            fn seq(&self) -> usize {
+                16
+            }
+            fn vocab(&self) -> usize {
+                32
+            }
+            fn name(&self) -> &str {
+                "uniform"
+            }
+            fn forward(&mut self, _tokens: &[i32]) -> Result<Vec<f32>> {
+                Ok(vec![0.0; 4 * 16 * 32])
+            }
+        }
+        let stream: Vec<i32> = (0..400).map(|i| (i % 32) as i32).collect();
+        let batches = eval_lm_batches(&stream, 4, 16);
+        let ppl = engine_perplexity(&mut Uniform, &batches).unwrap();
+        assert!((ppl - 32.0).abs() < 1e-3, "ppl {ppl}");
+        // Shape mismatch is rejected.
+        let bad = eval_lm_batches(&stream, 2, 16);
+        assert!(engine_perplexity(&mut Uniform, &bad).is_err());
     }
 }

@@ -19,6 +19,33 @@
 //!   a batched serving coordinator. Python never runs on the request path;
 //!   the binary only loads `artifacts/*.hlo.txt` through PJRT.
 //!
+//! ## Parallel serving engine
+//!
+//! The inference hot path scales across cores at two levels, both
+//! deterministic by construction:
+//!
+//! * **Kernel level** — [`lut::parallel`] shards the output rows of the
+//!   bucket/SIMD LUT GEMM over a persistent thread pool
+//!   ([`lut::ParallelLut`]). Results are **bit-identical** to the serial
+//!   kernels for every thread count and shard granularity (each output
+//!   element runs the unmodified serial arithmetic exactly once).
+//!   Config: `LcdConfig::gemm_threads`, `LcdConfig::gemm_shard_rows`
+//!   (0 = automatic).
+//! * **Coordinator level** — [`coordinator::server::start_pool`] runs N
+//!   worker threads behind one `ServerHandle`: a shared bounded queue
+//!   feeds per-worker engines (PJRT state stays thread-local), and
+//!   shutdown reports per-worker plus aggregate `MetricsSnapshot`s.
+//!   Config: `ServeConfig::workers`.
+//!
+//! The test matrix backing this: `rust/tests/lut_properties.rs` (every
+//! GEMM strategy against the FP reference on random layers, plus
+//! `PackedIndices` round-trip properties) and
+//! `rust/tests/parallel_determinism.rs` (bit-equality across
+//! `gemm_threads` ∈ {1, 2, 4} and repeated runs; multi-worker serving
+//! drains a closed request set with responses identical to the
+//! single-worker path). `benches/lut_gemm.rs` and `benches/serving.rs`
+//! carry the matching thread/worker sweeps.
+//!
 //! See `DESIGN.md` for the experiment index mapping every table and figure
 //! of the paper to a module and a `lcd repro --exp <id>` command.
 

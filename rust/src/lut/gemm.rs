@@ -81,17 +81,38 @@ pub fn lut_gemm_table_sym(
 ///
 /// Overflow: |q| ≤ 128 and d_in ≤ 2²³ keeps every bucket within i32.
 pub fn lut_gemm_bucket(q: &[i8], batch: usize, layer: &LutLayer) -> Matrix {
+    let mut y = Matrix::zeros(batch, layer.d_out);
+    lut_gemm_bucket_range(q, batch, layer, 0, layer.d_out, &mut y.data);
+    y
+}
+
+/// Shard kernel behind [`lut_gemm_bucket`]: compute outputs `i0..i1` only,
+/// writing a dense `batch × (i1-i0)` row-major block into `dst`.
+///
+/// Each output element is produced by exactly the same serial arithmetic
+/// regardless of the `[i0, i1)` split, so any sharding of the output rows
+/// (in particular `lut::parallel`'s) is bit-identical to the full-range
+/// call — the contract the determinism suite pins down.
+pub fn lut_gemm_bucket_range(
+    q: &[i8],
+    batch: usize,
+    layer: &LutLayer,
+    i0: usize,
+    i1: usize,
+    dst: &mut [f32],
+) {
+    assert!(i0 <= i1 && i1 <= layer.d_out, "bad shard range {i0}..{i1}");
     assert_eq!(q.len(), batch * layer.d_in);
+    let width = i1 - i0;
+    assert_eq!(dst.len(), batch * width);
     debug_assert!(layer.d_in < (1 << 23));
     let d_in = layer.d_in;
-    let d_out = layer.d_out;
-    let mut y = Matrix::zeros(batch, d_out);
     let pairs = d_in / 2;
     let unroll = pairs / 4 * 4;
     for b in 0..batch {
         let qrow = &q[b * d_in..(b + 1) * d_in];
-        let yrow = &mut y.data[b * d_out..(b + 1) * d_out];
-        for i in 0..d_out {
+        let yrow = &mut dst[b * width..(b + 1) * width];
+        for i in i0..i1 {
             let row = layer.indices.row_bytes(i);
             // Two independent accumulator arrays (low/high nibbles).
             let mut blo = [0i32; MAX_CENTROIDS];
@@ -134,10 +155,9 @@ pub fn lut_gemm_bucket(q: &[i8], batch: usize, layer: &LutLayer) -> Matrix {
             for j in 0..layer.n_centroids {
                 acc += layer.centroids[j] * (blo[j] + bhi[j]) as f32;
             }
-            yrow[i] = acc * layer.output_scale;
+            yrow[i - i0] = acc * layer.output_scale;
         }
     }
-    y
 }
 
 /// End-to-end LUT linear: smooth+quantize the FP input (Eq. 11 fused
@@ -232,6 +252,26 @@ mod tests {
         let y_ref = lut_gemm_fp_ref(&q, 2, &layer);
         let y_b = lut_gemm_bucket(&q, 2, &layer);
         assert!(mse(&y_ref.data, &y_b.data) < 1e-8);
+    }
+
+    #[test]
+    fn range_kernel_reassembles_full_kernel_bit_exact() {
+        let mut rng = Rng::new(135);
+        let layer = make_layer(&mut rng, 21, 13, 7);
+        let q = random_q(&mut rng, 3 * 21);
+        let full = lut_gemm_bucket(&q, 3, &layer);
+        // Glue uneven shards back together; must be bit-identical.
+        let ranges = [(0usize, 5usize), (5, 6), (6, 13)];
+        let mut glued = vec![0.0f32; 3 * 13];
+        for &(i0, i1) in &ranges {
+            let w = i1 - i0;
+            let mut block = vec![0.0f32; 3 * w];
+            lut_gemm_bucket_range(&q, 3, &layer, i0, i1, &mut block);
+            for b in 0..3 {
+                glued[b * 13 + i0..b * 13 + i1].copy_from_slice(&block[b * w..(b + 1) * w]);
+            }
+        }
+        assert_eq!(full.data, glued);
     }
 
     #[test]

@@ -22,16 +22,26 @@
 //!   "centroid-stationary bucket LUT" (see DESIGN.md §Hardware-Adaptation)
 //!   and the production hot path.
 //!
-//! All three are exhaustively cross-checked against the FP reference in
-//! tests and raced in `benches/lut_gemm.rs`.
+//! [`parallel`] scales the bucket and SIMD kernels across cores by
+//! sharding output rows over a persistent thread pool ([`ParallelLut`]);
+//! results are bit-identical to the serial kernels for every thread
+//! count and shard granularity.
+//!
+//! All strategies are exhaustively cross-checked against the FP reference
+//! in tests (`rust/tests/lut_properties.rs` adds the property suite) and
+//! raced in `benches/lut_gemm.rs`, including a thread-count sweep.
 
 pub mod gemm;
 pub mod pack;
+pub mod parallel;
 pub mod simd;
 pub mod table;
 
-pub use gemm::{lut_gemm_bucket, lut_gemm_fp_ref, lut_gemm_table, lut_gemm_table_sym};
+pub use gemm::{
+    lut_gemm_bucket, lut_gemm_bucket_range, lut_gemm_fp_ref, lut_gemm_table, lut_gemm_table_sym,
+};
 pub use pack::PackedIndices;
+pub use parallel::{GemmPool, LutStack, ParallelLut};
 pub use simd::{SimdLutLayer, SimdScratch};
 pub use table::ProductTable;
 

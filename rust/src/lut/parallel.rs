@@ -1,0 +1,482 @@
+//! Row-parallel bucket-LUT execution — the serving-scale engine.
+//!
+//! The paper's §5.2 speedup is a single-core kernel result; serving heavy
+//! traffic needs the same contraction spread across cores. This module
+//! shards the **output rows** of a LUT layer over a persistent thread
+//! pool:
+//!
+//! * [`GemmPool`] — a deterministic worker pool. Each worker owns a
+//!   long-lived [`SimdScratch`]; shard indices are handed out through an
+//!   atomic counter so scheduling is work-stealing-free and allocationless
+//!   on the steady state. The **caller participates**: `threads = n`
+//!   means `n` compute threads total (`n - 1` spawned), and `n <= 1` runs
+//!   fully inline with zero synchronization.
+//! * [`ParallelLut`] — parallel drivers for the two production kernels,
+//!   [`lut_gemm_bucket`](super::lut_gemm_bucket) and
+//!   [`SimdLutLayer::gemm`]. Outputs are **bit-identical** to the serial
+//!   kernels for every thread count and shard granularity: each output
+//!   element is computed by exactly one shard using the unmodified serial
+//!   arithmetic, and shards write disjoint column blocks of the result.
+//! * [`LutStack`] — a compressed model's linear layers compiled for the
+//!   SIMD engine and bound to one pool (what `pipeline` hands to the
+//!   serving coordinator).
+//!
+//! Determinism is the design constraint throughout: the parallel path is
+//! a pure re-bracketing of the serial loop, never a re-association of
+//! floating-point accumulation. `rust/tests/parallel_determinism.rs` pins
+//! this down across thread counts and repeated runs.
+
+use super::gemm::lut_gemm_bucket_range;
+use super::simd::{SimdLutLayer, SimdScratch};
+use super::LutLayer;
+use crate::tensor::Matrix;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Shard task signature: `(shard_index, worker_scratch)`.
+type ShardFn = dyn Fn(usize, &mut SimdScratch) + Sync;
+
+/// One fan-out: a lifetime-erased task plus completion bookkeeping.
+///
+/// `task` is a borrow erased to a raw pointer; `GemmPool::run` blocks
+/// until `remaining == 0`, so the pointee strictly outlives every
+/// dereference. A worker may hold the `Arc<Job>` a moment longer, but
+/// only to observe the exhausted shard counter — the pointer is never
+/// touched again.
+struct Job {
+    task: *const ShardFn,
+    next: AtomicUsize,
+    total: usize,
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+// SAFETY: `task` points at a `Sync` closure that `run` keeps alive until
+// every shard completed; all other fields are thread-safe primitives.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Pull shard indices until exhausted, running the task for each.
+    fn work(&self, scratch: &mut SimdScratch) {
+        loop {
+            let shard = self.next.fetch_add(1, Ordering::Relaxed);
+            if shard >= self.total {
+                return;
+            }
+            // SAFETY: a claimed in-range shard means `remaining > 0`, so
+            // `run` is still blocked and the task borrow is live.
+            let task = unsafe { &*self.task };
+            if catch_unwind(AssertUnwindSafe(|| task(shard, scratch))).is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            let mut rem = self.remaining.lock().unwrap();
+            *rem -= 1;
+            if *rem == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+}
+
+/// Persistent, deterministic thread pool for sharded LUT GEMM.
+pub struct GemmPool {
+    senders: Vec<Sender<Arc<Job>>>,
+    joins: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Reusable scratch for the caller's share of the shards, so the
+    /// steady state allocates nothing. Concurrent `run` callers fall back
+    /// to a fresh scratch instead of serializing on this lock.
+    caller_scratch: Mutex<SimdScratch>,
+}
+
+impl GemmPool {
+    /// Pool with `threads` compute threads total (the caller counts as
+    /// one; `threads <= 1` spawns nothing and runs inline).
+    pub fn new(threads: usize) -> GemmPool {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads - 1);
+        let mut joins = Vec::with_capacity(threads - 1);
+        for w in 0..threads - 1 {
+            let (tx, rx) = channel::<Arc<Job>>();
+            let join = std::thread::Builder::new()
+                .name(format!("lcd-gemm-{w}"))
+                .spawn(move || {
+                    // Worker-owned scratch, reused across every job.
+                    let mut scratch = SimdScratch::default();
+                    while let Ok(job) = rx.recv() {
+                        job.work(&mut scratch);
+                    }
+                })
+                .expect("spawning gemm worker");
+            senders.push(tx);
+            joins.push(join);
+        }
+        GemmPool { senders, joins, threads, caller_scratch: Mutex::new(SimdScratch::default()) }
+    }
+
+    /// Total compute threads (callers included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task` for every shard index in `0..shards`, blocking until all
+    /// complete. Panics (after all shards settle) if any shard panicked.
+    pub fn run(&self, shards: usize, task: &(dyn Fn(usize, &mut SimdScratch) + Sync)) {
+        if shards == 0 {
+            return;
+        }
+        // SAFETY: see `Job::task` — this function does not return until
+        // every shard has completed, so the erased borrow outlives every
+        // dereference. The transmute only erases the trait-object lifetime.
+        let task: *const ShardFn = unsafe { std::mem::transmute(task) };
+        let job = Arc::new(Job {
+            task,
+            next: AtomicUsize::new(0),
+            total: shards,
+            remaining: Mutex::new(shards),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for tx in &self.senders {
+            // A worker that already exited is unreachable; the caller and
+            // remaining workers still drain every shard.
+            let _ = tx.send(job.clone());
+        }
+        match self.caller_scratch.try_lock() {
+            Ok(mut scratch) => job.work(&mut scratch),
+            // Another thread is mid-run on this pool; don't serialize.
+            Err(_) => job.work(&mut SimdScratch::default()),
+        }
+        let mut rem = job.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = job.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("parallel LUT shard panicked");
+        }
+    }
+}
+
+impl Drop for GemmPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // disconnect; workers exit their recv loop
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Raw output cursor shared across shards. Writes are disjoint by
+/// construction (each shard owns columns `i0..i1` of every row).
+struct OutPtr(*mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Parallel drivers for the LUT GEMM kernels.
+pub struct ParallelLut {
+    pool: GemmPool,
+    shard_rows: usize,
+}
+
+impl ParallelLut {
+    /// `threads` compute threads; `shard_rows` fixes the output rows per
+    /// shard (`0` = automatic: ~4 shards per thread, ≥16 rows each).
+    pub fn new(threads: usize, shard_rows: usize) -> ParallelLut {
+        ParallelLut { pool: GemmPool::new(threads), shard_rows }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Configured shard granularity (0 = automatic).
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    /// Shard plan for `d_out` output rows: `(width, shard_count)`.
+    fn plan(&self, d_out: usize) -> (usize, usize) {
+        let width = if self.shard_rows > 0 {
+            self.shard_rows
+        } else {
+            d_out.div_ceil(self.pool.threads() * 4).max(16)
+        };
+        let width = width.clamp(1, d_out.max(1));
+        (width, d_out.div_ceil(width))
+    }
+
+    /// Parallel [`super::lut_gemm_bucket`]; bit-identical to the serial
+    /// kernel for any thread count / granularity.
+    pub fn gemm_bucket(&self, q: &[i8], batch: usize, layer: &LutLayer) -> Matrix {
+        assert_eq!(q.len(), batch * layer.d_in);
+        let d_out = layer.d_out;
+        let mut y = Matrix::zeros(batch, d_out);
+        if batch == 0 || d_out == 0 {
+            return y;
+        }
+        let (width, shards) = self.plan(d_out);
+        if self.pool.threads() <= 1 || shards == 1 {
+            // Serial path: write the output directly, no staging copy.
+            lut_gemm_bucket_range(q, batch, layer, 0, d_out, &mut y.data);
+            return y;
+        }
+        let out = OutPtr(y.data.as_mut_ptr());
+        let task = |shard: usize, scratch: &mut SimdScratch| {
+            let i0 = shard * width;
+            let i1 = (i0 + width).min(d_out);
+            let w = i1 - i0;
+            scratch.shard_out.resize(batch * w, 0.0);
+            lut_gemm_bucket_range(q, batch, layer, i0, i1, &mut scratch.shard_out);
+            scatter_shard(&out, &scratch.shard_out, batch, d_out, i0, w);
+        };
+        self.pool.run(shards, &task);
+        y
+    }
+
+    /// Parallel [`SimdLutLayer::gemm`]: pack once into `scratch`, then
+    /// shard the row loop. Bit-identical to the serial SIMD path.
+    pub fn gemm_simd(
+        &self,
+        layer: &SimdLutLayer,
+        q: &[i8],
+        batch: usize,
+        scratch: &mut SimdScratch,
+    ) -> Matrix {
+        layer.pack_q(q, batch, scratch);
+        let d_out = layer.d_out;
+        let mut y = Matrix::zeros(batch, d_out);
+        if batch == 0 || d_out == 0 {
+            return y;
+        }
+        let (width, shards) = self.plan(d_out);
+        if self.pool.threads() <= 1 || shards == 1 {
+            // Serial path: write the output directly, no staging copy.
+            layer.gemm_range(scratch.planar(), batch, 0, d_out, &mut y.data);
+            return y;
+        }
+        let out = OutPtr(y.data.as_mut_ptr());
+        let planar = scratch.planar();
+        let task = |shard: usize, wscratch: &mut SimdScratch| {
+            let i0 = shard * width;
+            let i1 = (i0 + width).min(d_out);
+            let w = i1 - i0;
+            wscratch.shard_out.resize(batch * w, 0.0);
+            layer.gemm_range(planar, batch, i0, i1, &mut wscratch.shard_out);
+            scatter_shard(&out, &wscratch.shard_out, batch, d_out, i0, w);
+        };
+        self.pool.run(shards, &task);
+        y
+    }
+}
+
+/// Copy a dense `batch × w` shard block into columns `i0..i0+w` of the
+/// `batch × d_out` output.
+///
+/// SAFETY: callers guarantee `out` points at a live `batch × d_out`
+/// buffer that outlives the call and that no two concurrent shards share
+/// a column range.
+fn scatter_shard(out: &OutPtr, block: &[f32], batch: usize, d_out: usize, i0: usize, w: usize) {
+    debug_assert_eq!(block.len(), batch * w);
+    for b in 0..batch {
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                block.as_ptr().add(b * w),
+                out.0.add(b * d_out + i0),
+                w,
+            );
+        }
+    }
+}
+
+/// A compressed model's linear stack compiled for the parallel SIMD
+/// engine: one [`SimdLutLayer`] per linear parameter plus the shared pool.
+pub struct LutStack {
+    layers: Vec<SimdLutLayer>,
+    par: ParallelLut,
+}
+
+impl LutStack {
+    pub fn new(layers: Vec<SimdLutLayer>, threads: usize, shard_rows: usize) -> LutStack {
+        LutStack { layers, par: ParallelLut::new(threads, shard_rows) }
+    }
+
+    pub fn layers(&self) -> &[SimdLutLayer] {
+        &self.layers
+    }
+
+    pub fn par(&self) -> &ParallelLut {
+        &self.par
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Packed bytes across the stack (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bytes()).sum()
+    }
+
+    /// Parallel GEMM through layer `li` on pre-quantized activations.
+    pub fn gemm(&self, li: usize, q: &[i8], batch: usize, scratch: &mut SimdScratch) -> Matrix {
+        self.par.gemm_simd(&self.layers[li], q, batch, scratch)
+    }
+
+    /// FP input → quantize (layer's fused multiplier) → parallel GEMM.
+    pub fn linear(&self, li: usize, x: &[f32], batch: usize, scratch: &mut SimdScratch) -> Matrix {
+        let q = super::quantize_input(x, self.layers[li].input_inv_scale);
+        self.gemm(li, &q, batch, scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::kmeans_1d;
+    use crate::lut::lut_gemm_bucket;
+    use crate::util::Rng;
+
+    fn make(rng: &mut Rng, d_in: usize, d_out: usize, k: usize) -> LutLayer {
+        let w = rng.normal_vec(d_in * d_out, 0.0, 0.05);
+        let km = kmeans_1d(&w, k, 25, rng);
+        LutLayer::compile(&km.clustering, d_in, d_out, 1.0, 0.02).unwrap()
+    }
+
+    fn random_q(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(256) as i32 - 128) as i8).collect()
+    }
+
+    #[test]
+    fn pool_runs_every_shard_exactly_once() {
+        use std::sync::atomic::AtomicU32;
+        let pool = GemmPool::new(4);
+        let hits: Vec<AtomicU32> = (0..97).map(|_| AtomicU32::new(0)).collect();
+        for _ in 0..3 {
+            pool.run(hits.len(), &|s: usize, _scratch: &mut SimdScratch| {
+                hits[s].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 3, "shard {i}");
+        }
+    }
+
+    #[test]
+    fn pool_inline_when_single_threaded() {
+        let pool = GemmPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let count = AtomicUsize::new(0);
+        pool.run(5, &|_s: usize, _scratch: &mut SimdScratch| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel LUT shard panicked")]
+    fn pool_propagates_shard_panics() {
+        let pool = GemmPool::new(2);
+        pool.run(8, &|s: usize, _scratch: &mut SimdScratch| {
+            assert!(s != 5, "injected shard failure");
+        });
+    }
+
+    #[test]
+    fn parallel_bucket_bit_identical_to_serial() {
+        let mut rng = Rng::new(400);
+        for &(b, d_in, d_out, k) in
+            &[(1usize, 8usize, 4usize, 3usize), (3, 17, 9, 8), (2, 64, 70, 16), (33, 33, 7, 5)]
+        {
+            let layer = make(&mut rng, d_in, d_out, k);
+            let q = random_q(&mut rng, b * d_in);
+            let serial = lut_gemm_bucket(&q, b, &layer);
+            for threads in [1usize, 2, 4] {
+                for shard_rows in [0usize, 1, 3] {
+                    let par = ParallelLut::new(threads, shard_rows);
+                    let y = par.gemm_bucket(&q, b, &layer);
+                    assert_eq!(
+                        serial.data, y.data,
+                        "t{threads}/s{shard_rows} ({b},{d_in},{d_out},{k})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_simd_bit_identical_to_serial() {
+        let mut rng = Rng::new(401);
+        for &(b, d_in, d_out, k) in
+            &[(2usize, 64usize, 37usize, 8usize), (4, 100, 65, 16), (1, 7, 3, 2)]
+        {
+            let layer = make(&mut rng, d_in, d_out, k);
+            let simd = SimdLutLayer::compile(&layer);
+            let q = random_q(&mut rng, b * d_in);
+            let mut scratch = SimdScratch::default();
+            let serial = simd.gemm(&q, b, &mut scratch);
+            for threads in [1usize, 2, 4] {
+                let par = ParallelLut::new(threads, 0);
+                let mut ps = SimdScratch::default();
+                let y = par.gemm_simd(&simd, &q, b, &mut ps);
+                assert_eq!(serial.data, y.data, "t{threads} ({b},{d_in},{d_out},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reuse_is_stable_across_calls() {
+        let mut rng = Rng::new(402);
+        let layer = make(&mut rng, 48, 31, 8);
+        let q = random_q(&mut rng, 4 * 48);
+        let par = ParallelLut::new(3, 0);
+        let first = par.gemm_bucket(&q, 4, &layer);
+        for _ in 0..10 {
+            assert_eq!(first.data, par.gemm_bucket(&q, 4, &layer).data);
+        }
+    }
+
+    #[test]
+    fn plan_respects_explicit_granularity() {
+        let par = ParallelLut::new(4, 8);
+        let (w, n) = par.plan(30);
+        assert_eq!((w, n), (8, 4));
+        // Oversized request clamps to one shard.
+        let par = ParallelLut::new(2, 1000);
+        let (w, n) = par.plan(30);
+        assert_eq!((w, n), (30, 1));
+        // Auto mode covers everything.
+        let par = ParallelLut::new(4, 0);
+        let (w, n) = par.plan(1024);
+        assert!(w * n >= 1024 && w * (n - 1) < 1024, "w {w} n {n}");
+    }
+
+    #[test]
+    fn lut_stack_linear_matches_direct_simd() {
+        let mut rng = Rng::new(403);
+        let layer = make(&mut rng, 32, 24, 6);
+        let simd = SimdLutLayer::compile(&layer);
+        let inv = simd.input_inv_scale;
+        let stack = LutStack::new(vec![SimdLutLayer::compile(&layer)], 2, 0);
+        let x = rng.normal_vec(5 * 32, 0.0, 0.5);
+        let mut s1 = SimdScratch::default();
+        let mut s2 = SimdScratch::default();
+        let q = crate::lut::quantize_input(&x, inv);
+        let direct = simd.gemm(&q, 5, &mut s1);
+        let via_stack = stack.linear(0, &x, 5, &mut s2);
+        assert_eq!(direct.data, via_stack.data);
+        assert_eq!(stack.len(), 1);
+        assert!(!stack.is_empty());
+        assert!(stack.bytes() > 0);
+        assert_eq!(stack.par().threads(), 2);
+    }
+}

@@ -49,10 +49,21 @@ pub struct SimdLutLayer {
     pub input_inv_scale: f32,
 }
 
-/// Reusable scratch: planar, zero-padded, bias-adjusted activations.
+/// Reusable scratch: planar, zero-padded, bias-adjusted activations, plus
+/// the per-worker shard staging buffer used by `lut::parallel`.
 #[derive(Default)]
 pub struct SimdScratch {
     q_planar: Vec<u8>,
+    /// Dense `batch × shard_width` output staging for one shard; each
+    /// parallel worker owns one scratch and reuses this across shards.
+    pub(crate) shard_out: Vec<f32>,
+}
+
+impl SimdScratch {
+    /// Packed planar activations of the last [`SimdLutLayer::pack_q`] call.
+    pub fn planar(&self) -> &[u8] {
+        &self.q_planar
+    }
 }
 
 impl SimdLutLayer {
@@ -103,8 +114,11 @@ impl SimdLutLayer {
         }
     }
 
-    /// Pack one batch of activations into the planar biased layout.
-    fn pack_q(&self, q: &[i8], batch: usize, scratch: &mut SimdScratch) {
+    /// Pack one batch of activations into the planar biased layout. The
+    /// packed buffer (`scratch.planar()`) is read-only afterwards, so one
+    /// packing can feed any number of [`Self::gemm_range`] shards.
+    pub fn pack_q(&self, q: &[i8], batch: usize, scratch: &mut SimdScratch) {
+        assert_eq!(q.len(), batch * self.d_in);
         let half = self.d_in.div_ceil(2);
         let row_len = 2 * self.d2;
         scratch.q_planar.clear();
@@ -127,15 +141,36 @@ impl SimdLutLayer {
         assert_eq!(q.len(), batch * self.d_in);
         self.pack_q(q, batch, scratch);
         let mut y = Matrix::zeros(batch, self.d_out);
+        self.gemm_range(&scratch.q_planar, batch, 0, self.d_out, &mut y.data);
+        y
+    }
+
+    /// Shard kernel over pre-packed planar activations (see
+    /// [`Self::pack_q`]): compute outputs `i0..i1` only, writing a dense
+    /// `batch × (i1-i0)` row-major block into `dst`. Per-output math is
+    /// independent of the split, so shard results are bit-identical to the
+    /// full-range call — the contract `lut::parallel` relies on.
+    pub fn gemm_range(
+        &self,
+        q_planar: &[u8],
+        batch: usize,
+        i0: usize,
+        i1: usize,
+        dst: &mut [f32],
+    ) {
+        assert!(i0 <= i1 && i1 <= self.d_out, "bad shard range {i0}..{i1}");
+        let width = i1 - i0;
         let row_len = 2 * self.d2;
+        assert_eq!(q_planar.len(), batch * row_len, "activations not packed for this layer");
+        assert_eq!(dst.len(), batch * width);
         #[cfg(target_arch = "x86_64")]
         let use_avx2 = std::arch::is_x86_feature_detected!("avx2");
         #[cfg(not(target_arch = "x86_64"))]
         let use_avx2 = false;
         for b in 0..batch {
-            let qrow = &scratch.q_planar[b * row_len..(b + 1) * row_len];
-            let yrow = &mut y.data[b * self.d_out..(b + 1) * self.d_out];
-            for i in 0..self.d_out {
+            let qrow = &q_planar[b * row_len..(b + 1) * row_len];
+            let yrow = &mut dst[b * width..(b + 1) * width];
+            for i in i0..i1 {
                 let row = &self.rows[i * self.d2..(i + 1) * self.d2];
                 let acc = if use_avx2 {
                     #[cfg(target_arch = "x86_64")]
@@ -149,10 +184,9 @@ impl SimdLutLayer {
                 } else {
                     self.row_dot_scalar(row, qrow)
                 };
-                yrow[i] = (acc - self.corrections[i]) as f32 * self.out_scale;
+                yrow[i - i0] = (acc - self.corrections[i]) as f32 * self.out_scale;
             }
         }
-        y
     }
 
     /// Scalar mirror of the SIMD math (bit-identical result).

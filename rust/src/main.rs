@@ -61,6 +61,8 @@ fn parse_args() -> Result<Args> {
             "--exp" => exp = Some(take(&mut i)?),
             "--engine" => engine = take(&mut i)?,
             "--requests" => requests = take(&mut i)?.parse()?,
+            "--workers" => sets.push(format!("serve.workers={}", take(&mut i)?)),
+            "--gemm-threads" => sets.push(format!("gemm_threads={}", take(&mut i)?)),
             "--help" | "-h" => bail!("{}", HELP),
             other => bail!("unknown flag '{other}'\n{}", HELP),
         }
@@ -82,7 +84,9 @@ commands:
   repro      regenerate a paper experiment (--exp table1|table2|table3|fig2|fig6|fig7|fig8|all)
 flags:
   --config <file>  --set k=v  --model gpt|llama|bert  --steps N  --min-k K
-  --act-bits 8|4   --seed N   --artifacts <dir>  --engine lut|fp  --requests N";
+  --act-bits 8|4   --seed N   --artifacts <dir>  --engine lut|fp|host
+  --requests N     --workers N (serve worker threads)
+  --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)";
 
 fn main() -> Result<()> {
     let args = parse_args()?;
@@ -141,6 +145,15 @@ fn cmd_compress(cfg: &LcdConfig) -> Result<()> {
         cm.weight_bytes() / 1024,
         cm.act_bits
     );
+    // Compile for the parallel SIMD serving engine so the packed serving
+    // footprint (planar nibbles + corrections) is part of the report.
+    let stack = tm.runner.host_stack(&cm);
+    println!(
+        "serving stack: {} SIMD layers, {} KiB packed, {} gemm thread(s)",
+        stack.len(),
+        stack.bytes() / 1024,
+        stack.par().threads()
+    );
     Ok(())
 }
 
@@ -168,12 +181,23 @@ fn cmd_eval(cfg: &LcdConfig) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize) -> Result<()> {
-    // The engine (and its PJRT runtime) is built inside the worker thread.
+    // Artifact engines train-or-load a checkpoint inside build_engine;
+    // materialize it once up front so N workers load instead of racing
+    // N concurrent trainings onto the same checkpoint file.
+    if engine_kind != "host" && cfg.serve.workers > 1 {
+        let rt = open_runtime(cfg)?;
+        let _ = train_or_load(&rt, cfg)?;
+    }
+    // Each worker builds its own engine (and PJRT runtime) inside its
+    // worker thread; `serve.workers` controls the pool width.
     let cfg2 = cfg.clone();
     let engine_kind2 = engine_kind.to_string();
-    let handle = server::start(cfg.serve.max_batch, cfg.serve.queue_cap, move || {
-        lcd::repro::shared::build_engine(&cfg2, &engine_kind2)
-    });
+    let handle = server::start_pool(
+        cfg.serve.workers,
+        cfg.serve.max_batch,
+        cfg.serve.queue_cap,
+        move |_worker| lcd::repro::shared::build_engine(&cfg2, &engine_kind2),
+    );
 
     let tok = CharTokenizer::new();
     let prompts = ["the cat ", "a bird moves ", "two plus three is ", "the river is "];
@@ -193,7 +217,12 @@ fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize) -> Result<()
             );
         }
     }
-    let snap = handle.shutdown();
-    println!("engine {engine_kind}: {}", snap.report());
+    let report = handle.shutdown_report();
+    if report.per_worker.len() > 1 {
+        for (w, snap) in report.per_worker.iter().enumerate() {
+            println!("  worker {w}: {}", snap.report());
+        }
+    }
+    println!("engine {engine_kind}: {}", report.aggregate.report());
     Ok(())
 }

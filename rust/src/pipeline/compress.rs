@@ -88,6 +88,16 @@ impl CompressedModel {
     pub fn weight_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.lut.bytes()).sum()
     }
+
+    /// Compile every compressed linear layer for the parallel SIMD
+    /// serving engine (`lut::parallel`): one `SimdLutLayer` per layer
+    /// bound to a `threads`-wide GEMM pool with the given shard
+    /// granularity (0 = automatic).
+    pub fn host_stack(&self, threads: usize, shard_rows: usize) -> crate::lut::LutStack {
+        let layers =
+            self.layers.iter().map(|l| crate::lut::SimdLutLayer::compile(&l.lut)).collect();
+        crate::lut::LutStack::new(layers, threads, shard_rows)
+    }
 }
 
 /// Compress every clusterable linear layer of `store`.

@@ -30,13 +30,30 @@ pub struct ModelRunner<'rt> {
     pub rt: &'rt Runtime,
     pub spec: ModelSpec,
     pub stem: String,
+    /// Parallel-LUT engine width for host-side serving stacks built from
+    /// this runner's compressed models (`LcdConfig::gemm_threads`).
+    pub gemm_threads: usize,
+    /// Shard granularity for the parallel engine (0 = automatic).
+    pub gemm_shard_rows: usize,
 }
 
 impl<'rt> ModelRunner<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: &LcdConfig) -> Result<ModelRunner<'rt>> {
         let stem = cfg.model.stem().to_string();
         let spec = rt.manifest().model(&stem)?.clone();
-        Ok(ModelRunner { rt, spec, stem })
+        Ok(ModelRunner {
+            rt,
+            spec,
+            stem,
+            gemm_threads: cfg.gemm_threads,
+            gemm_shard_rows: cfg.gemm_shard_rows,
+        })
+    }
+
+    /// Host-side parallel LUT stack for a compressed model, using this
+    /// runner's configured GEMM thread count and shard granularity.
+    pub fn host_stack(&self, cm: &CompressedModel) -> crate::lut::LutStack {
+        cm.host_stack(self.gemm_threads, self.gemm_shard_rows)
     }
 
     pub fn is_bert(&self) -> bool {

@@ -9,7 +9,7 @@
 use crate::baselines::{lutnn_gemm, qserve_gemm, tvm_gemm, LutNnLayer, QserveLayer};
 use crate::clustering::kmeans_1d;
 use crate::config::{LcdConfig, ModelKind};
-use crate::lut::{LutLayer, SimdLutLayer, SimdScratch};
+use crate::lut::{LutLayer, ParallelLut, SimdLutLayer, SimdScratch};
 use crate::tensor::Matrix;
 use crate::util::bench::Bencher;
 use crate::util::Rng;
@@ -151,6 +151,29 @@ pub fn run(cfg: &LcdConfig) -> Result<()> {
             r_tvm / r_lutnn,
             r_tvm / r_lcd,
         );
+
+        // Thread sweep of the same stack through the parallel engine
+        // (`lut::parallel`); output is bit-identical at every width.
+        for threads in [1usize, 2, 4] {
+            let par = ParallelLut::new(threads, cfg.gemm_shard_rows);
+            let mut sweep_scratch = SimdScratch::default();
+            let r_par = bench
+                .bench(&format!("{}|lcd_par_t{threads}", prep.name), || {
+                    let mut sink = 0.0f64;
+                    for (i, layer) in prep.lut_layers.iter().enumerate() {
+                        let y = par.gemm_simd(layer, &prep.lut_q[i], prep.rows, &mut sweep_scratch);
+                        sink += y.data[0] as f64;
+                    }
+                    sink
+                })
+                .median_ns();
+            println!(
+                "{:<12} parallel t{threads}: {:>10.2}ms ({:.2}x vs 1-thread LCD)",
+                prep.name,
+                r_par / 1e6,
+                r_lcd / r_par,
+            );
+        }
     }
     println!("(paper: LCD 6.2x / 4.8x / 4.7x on BERT / GPT2 / LLaMA vs framework baselines)");
     Ok(())

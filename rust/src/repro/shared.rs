@@ -8,6 +8,7 @@ use crate::eval::{classification_accuracy, mc_accuracy, perplexity};
 use crate::model::WeightStore;
 use crate::pipeline::train::{pad_to_seq, train_bert};
 use crate::pipeline::{compress_model, train_model, CompressedModel, ModelRunner};
+use crate::coordinator::Engine;
 use crate::runtime::Runtime;
 use crate::util::{argmax, Rng};
 use anyhow::Result;
@@ -263,11 +264,24 @@ impl crate::coordinator::Engine for ArtifactEngine {
     }
 }
 
-/// Build a serving engine: `kind` = "fp" (dense artifact) or "lut" (the
-/// paper's §4 LUT inference artifact over the LCD-compressed model).
-/// Trains/loads the checkpoint and (for lut) runs the compression
-/// pipeline — all inside the calling thread, which owns the runtime.
-pub fn build_engine(cfg: &LcdConfig, kind: &str) -> Result<ArtifactEngine> {
+/// Build a serving engine: `kind` = "fp" (dense artifact), "lut" (the
+/// paper's §4 LUT inference artifact over the LCD-compressed model), or
+/// "host" (the artifact-free [`crate::coordinator::HostLutEngine`]
+/// running the parallel bucket-LUT stack — works without `make
+/// artifacts`). Trains/loads the checkpoint and (for lut) runs the
+/// compression pipeline — all inside the calling thread, which owns the
+/// runtime; the multi-worker coordinator calls this once per worker.
+pub fn build_engine(cfg: &LcdConfig, kind: &str) -> Result<Box<dyn Engine>> {
+    if kind == "host" {
+        let spec = crate::coordinator::HostLutSpec::from_cfg(cfg);
+        let engine = crate::coordinator::HostLutEngine::build(spec)?;
+        eprintln!(
+            "[engine] host: {} ({} KiB packed LUT weights)",
+            engine.name(),
+            engine.weight_bytes() / 1024
+        );
+        return Ok(Box::new(engine));
+    }
     let rt = Runtime::new(&cfg.artifacts_dir)?;
     let (prefix, artifact, qmax, spec) = {
         let tm = train_or_load(&rt, cfg)?;
@@ -294,11 +308,11 @@ pub fn build_engine(cfg: &LcdConfig, kind: &str) -> Result<ArtifactEngine> {
                 let prefix = lut_prefix(&tm.runner, &cm);
                 (prefix, format!("lut_fwd_{}", tm.runner.stem), Some(cm.qmax() as f32), spec)
             }
-            other => anyhow::bail!("unknown engine kind '{other}' (fp|lut)"),
+            other => anyhow::bail!("unknown engine kind '{other}' (fp|lut|host)"),
         }
     };
     rt.warmup(&[artifact.as_str()])?; // compile before the first request
-    Ok(ArtifactEngine {
+    Ok(Box::new(ArtifactEngine {
         rt,
         artifact,
         prefix,
@@ -307,7 +321,7 @@ pub fn build_engine(cfg: &LcdConfig, kind: &str) -> Result<ArtifactEngine> {
         seq: spec.seq,
         vocab: spec.vocab,
         name: kind.to_string(),
-    })
+    }))
 }
 
 /// The LUT artifact's parameter prefix (non-linear params + per-linear

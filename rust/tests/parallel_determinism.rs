@@ -1,0 +1,128 @@
+//! Determinism suite for the parallel engine and the multi-worker
+//! coordinator (the ISSUE-1 acceptance contract):
+//!
+//! * parallel LUT GEMM output is **bit-identical** across
+//!   `gemm_threads ∈ {1, 2, 4}`, across shard granularities, and across
+//!   repeated runs with a fixed seed;
+//! * a multi-worker `ServerHandle` drains a closed request set with
+//!   exactly the same responses as the single-worker path, including when
+//!   the engine is the real parallel bucket-LUT stack.
+
+use lcd::clustering::kmeans_1d;
+use lcd::coordinator::server::start_pool;
+use lcd::coordinator::{Engine, HostLutEngine, HostLutSpec};
+use lcd::lut::{lut_gemm_bucket, LutLayer, ParallelLut, SimdLutLayer, SimdScratch};
+use lcd::util::Rng;
+
+fn make_layer(rng: &mut Rng, d_in: usize, d_out: usize, k: usize) -> LutLayer {
+    let w = rng.normal_vec(d_in * d_out, 0.0, 0.05);
+    let km = kmeans_1d(&w, k, 25, rng);
+    LutLayer::compile(&km.clustering, d_in, d_out, 1.0, 0.02).unwrap()
+}
+
+#[test]
+fn gemm_bit_identical_across_thread_counts_and_runs() {
+    let mut rng = Rng::new(0xdee7);
+    // Shapes chosen to exercise ragged shards: primes, one narrow layer,
+    // one wide batch.
+    for &(batch, d_in, d_out, k) in
+        &[(32usize, 128usize, 257usize, 8usize), (1, 64, 33, 16), (7, 31, 5, 4)]
+    {
+        let layer = make_layer(&mut rng, d_in, d_out, k);
+        let simd = SimdLutLayer::compile(&layer);
+        let q: Vec<i8> =
+            (0..batch * d_in).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+        let reference_bucket = lut_gemm_bucket(&q, batch, &layer);
+        let mut scratch = SimdScratch::default();
+        let reference_simd = simd.gemm(&q, batch, &mut scratch);
+        for threads in [1usize, 2, 4] {
+            for shard_rows in [0usize, 7] {
+                let par = ParallelLut::new(threads, shard_rows);
+                // Repeated runs on the same pool must also be stable.
+                for run in 0..3 {
+                    let yb = par.gemm_bucket(&q, batch, &layer);
+                    assert_eq!(
+                        reference_bucket.data, yb.data,
+                        "bucket t{threads}/s{shard_rows} run {run} ({batch},{d_in},{d_out})"
+                    );
+                    let mut ps = SimdScratch::default();
+                    let ys = par.gemm_simd(&simd, &q, batch, &mut ps);
+                    assert_eq!(
+                        reference_simd.data, ys.data,
+                        "simd t{threads}/s{shard_rows} run {run} ({batch},{d_in},{d_out})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn host_engine_logits_identical_across_gemm_threads() {
+    let spec = |threads: usize| HostLutSpec {
+        batch: 4,
+        seq: 16,
+        vocab: 48,
+        hidden: 64,
+        depth: 3,
+        centroids: 8,
+        seed: 1234,
+        gemm_threads: threads,
+        gemm_shard_rows: 0,
+    };
+    let mut rng = Rng::new(5);
+    let tokens: Vec<i32> = (0..4 * 16).map(|_| rng.below(48) as i32).collect();
+    let mut base = HostLutEngine::build(spec(1)).unwrap();
+    let want = base.forward(&tokens).unwrap();
+    for threads in [2usize, 4] {
+        let mut engine = HostLutEngine::build(spec(threads)).unwrap();
+        assert_eq!(
+            want,
+            engine.forward(&tokens).unwrap(),
+            "gemm_threads={threads} changed the logits"
+        );
+    }
+    // Repeated forwards with identical input are stable too.
+    assert_eq!(want, base.forward(&tokens).unwrap());
+}
+
+/// Drain a closed request set through a server with `workers` workers and
+/// return `(id, tokens)` pairs sorted by request id.
+fn drain_closed_set(workers: usize) -> Vec<(u64, Vec<i32>)> {
+    let handle = start_pool(workers, 4, 256, |_w| {
+        HostLutEngine::build(HostLutSpec {
+            batch: 4,
+            seq: 16,
+            vocab: 48,
+            hidden: 48,
+            depth: 2,
+            centroids: 8,
+            seed: 99,
+            gemm_threads: 1,
+            gemm_shard_rows: 0,
+        })
+    });
+    let mut rxs = Vec::new();
+    let mut rng = Rng::new(0xc105ed);
+    for i in 0..20usize {
+        let len = 1 + rng.below(6);
+        let prompt: Vec<i32> = (0..len).map(|j| ((i * 7 + j * 3) % 48) as i32).collect();
+        rxs.push(handle.submit(prompt, 2 + i % 3));
+    }
+    let mut out: Vec<(u64, Vec<i32>)> =
+        rxs.into_iter().map(|rx| rx.recv().map(|r| (r.id, r.tokens)).expect("response")).collect();
+    let report = handle.shutdown_report();
+    assert_eq!(report.aggregate.completed, 20, "all requests must complete");
+    assert_eq!(report.per_worker.len(), workers);
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+#[test]
+fn multi_worker_server_matches_single_worker_responses() {
+    let single = drain_closed_set(1);
+    for workers in [2usize, 4] {
+        let multi = drain_closed_set(workers);
+        assert_eq!(single, multi, "worker count {workers} changed the served responses");
+    }
+}

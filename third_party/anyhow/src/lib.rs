@@ -1,0 +1,259 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this path
+//! dependency provides the subset of the real `anyhow` API the workspace
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait for
+//! `Result` and `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Semantics mirror the real crate where it matters:
+//!
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole context chain joined by `": "`;
+//! * `Debug` prints the anyhow-style "Caused by:" report (what `fn main`
+//!   shows on error);
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`] via the blanket `From` impl.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with a chain of human-readable context messages.
+pub struct Error {
+    /// Context messages, outermost first.
+    chain: Vec<String>,
+    /// The underlying typed error, if the chain wraps one.
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()], source: None }
+    }
+
+    /// Wrap a typed error.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Error {
+        Error { chain: Vec::new(), source: Some(Box::new(error)) }
+    }
+
+    /// Prepend a context message (outermost position).
+    fn push_context(mut self, message: String) -> Error {
+        self.chain.insert(0, message);
+        self
+    }
+
+    /// Every message in the chain, outermost first, including the wrapped
+    /// error and its own source chain.
+    fn messages(&self) -> Vec<String> {
+        let mut msgs = self.chain.clone();
+        if let Some(src) = &self.source {
+            msgs.push(src.to_string());
+            let mut cur = src.source();
+            while let Some(e) = cur {
+                msgs.push(e.to_string());
+                cur = e.source();
+            }
+        }
+        if msgs.is_empty() {
+            msgs.push("unknown error".to_string());
+        }
+        msgs
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.messages();
+        if f.alternate() {
+            write!(f, "{}", msgs.join(": "))
+        } else {
+            write!(f, "{}", msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.messages();
+        write!(f, "{}", msgs[0])?;
+        if msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait attaching context to failures.
+pub trait Context<T, E> {
+    /// Attach a context message to the error, if any.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Attach a lazily-evaluated context message to the error, if any.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).push_context(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.push_context(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path")
+            .with_context(|| "reading config".to_string())?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chain_renders() {
+        let err = io_fail().unwrap_err();
+        let plain = format!("{err}");
+        let full = format!("{err:#}");
+        assert_eq!(plain, "reading config");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert!(format!("{err:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("x too large: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(5).unwrap(), 5);
+        assert_eq!(format!("{}", inner(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", inner(101).unwrap_err()), "x too large: 101");
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<i32> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(format!("{err}"), "missing value");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn anyhow_context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root failure");
+        }
+        let err = inner().context("outer step").unwrap_err();
+        assert_eq!(format!("{err:#}"), "outer step: root failure");
+    }
+}
