@@ -1,30 +1,51 @@
 //! Serving benchmark: drive the coordinator with a Poisson-ish open-loop
 //! request stream, reporting the paper's serving metrics (p50/p99
-//! latency, TTFT, throughput, rejects) per worker and in aggregate.
+//! latency, TTFT, throughput, prefill/decode token counts, rejects) per
+//! worker and in aggregate.
 //!
 //! Engines:
-//! * `host` — the artifact-free parallel bucket-LUT stack; always runs,
-//!   and is swept across coordinator worker counts {1, 2, 4} to show the
-//!   multi-worker scale-up.
+//! * `host` — the artifact-free parallel bucket-LUT stack, recomputing
+//!   the full window each step (the incremental subsystem's baseline);
+//! * `cached` — the incremental decode engine (per-slot activation
+//!   cache): bit-identical logits, per-step cost independent of seq;
 //! * `fp` / `lut` — the AOT artifact engines; included only when
 //!   `artifacts/manifest.json` exists (run `make artifacts`).
 //!
-//! Run: `cargo run --release --example serve_bench [requests] [gen_tokens]`
+//! Model shape comes from `serve.{seq,vocab,hidden,depth}` in the config;
+//! admission policy from `serve.admission`.
+//!
+//! Run: `cargo run --release --example serve_bench -- \
+//!       [requests] [gen_tokens] [--engine host|cached|fp|lut] \
+//!       [--admission fifo|spf|token_budget]`
+//! Without `--engine`, sweeps host and cached across worker counts.
 
 use lcd::config::LcdConfig;
 use lcd::coordinator::server;
-use lcd::coordinator::{HostLutEngine, HostLutSpec};
+use lcd::coordinator::{CachedLutEngine, HostLutSpec};
 use lcd::data::{eval_lm_batches, CharTokenizer, CorpusSpec, SyntheticCorpus};
-use lcd::repro::shared::build_engine;
+use lcd::repro::shared::build_step_engine;
 use lcd::util::Rng;
 
-fn drive(cfg: &LcdConfig, engine: &str, workers: usize, n_requests: usize, gen_tokens: usize) {
+/// Drive one engine/worker configuration; returns the number of
+/// completed requests so callers can fail loudly when the serving path
+/// is broken (a 0-ok run must not look green in CI).
+fn drive(
+    cfg: &LcdConfig,
+    engine: &str,
+    workers: usize,
+    n_requests: usize,
+    gen_tokens: usize,
+) -> anyhow::Result<usize> {
+    let policy = cfg.serve.admission_policy().expect("admission policy validated on load");
     let cfg2 = cfg.clone();
     let engine_name = engine.to_string();
-    let handle =
-        server::start_pool(workers, cfg.serve.max_batch, cfg.serve.queue_cap, move |_worker| {
-            build_engine(&cfg2, &engine_name)
-        });
+    let handle = server::start_pool_step(
+        workers,
+        cfg.serve.max_batch,
+        cfg.serve.queue_cap,
+        policy,
+        move |_worker| build_step_engine(&cfg2, &engine_name),
+    );
 
     // Open-loop arrivals: exponential inter-arrival times at a rate a
     // single-core engine can sustain (~50 req/s).
@@ -52,21 +73,55 @@ fn drive(cfg: &LcdConfig, engine: &str, workers: usize, n_requests: usize, gen_t
         }
     }
     println!(
-        "engine {engine:<4} x{workers} worker(s) ({ok}/{n_requests} ok): {}",
+        "engine {engine:<6} x{workers} worker(s) ({ok}/{n_requests} ok): {}",
         report.aggregate.report()
     );
+    anyhow::ensure!(ok > 0, "engine {engine} completed 0/{n_requests} requests");
+    Ok(ok)
 }
 
 fn main() -> anyhow::Result<()> {
-    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
-    let gen_tokens: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(12);
-    let cfg = LcdConfig::default();
+    let mut cfg = LcdConfig::default();
+    let mut positional: Vec<usize> = Vec::new();
+    let mut engine: Option<String> = None;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--engine" => {
+                i += 1;
+                engine = Some(argv.get(i).cloned().ok_or_else(|| {
+                    anyhow::anyhow!("--engine needs a value (host|cached|fp|lut)")
+                })?);
+            }
+            "--admission" => {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("--admission needs a value"))?;
+                cfg.set_override(&format!("serve.admission={v}"))?;
+            }
+            other if other.starts_with("--") => {
+                anyhow::bail!(
+                    "unknown flag '{other}'\nusage: serve_bench [requests] [gen_tokens] \
+                     [--engine host|cached|fp|lut] [--admission fifo|spf|token_budget]"
+                );
+            }
+            other => positional.push(other.parse()?),
+        }
+        i += 1;
+    }
+    let n_requests = positional.first().copied().unwrap_or(48);
+    let gen_tokens = positional.get(1).copied().unwrap_or(12);
 
     // Quality gate before timing anything: perplexity measured *through*
     // the serving engine's forward path (parallel LUT kernels included).
-    // Bit-identical GEMM means this number is independent of gemm_threads.
+    // Probed on the CACHED engine — its full-window Engine impl shares
+    // weights with the host engine, so this number is bit-identical for
+    // both, and independent of gemm_threads.
     let spec = HostLutSpec::from_cfg(&cfg);
-    let mut probe = HostLutEngine::build(spec.clone())?;
+    let mut probe = CachedLutEngine::build(spec.clone())?;
     let stream = SyntheticCorpus::generate(CorpusSpec {
         seed: cfg.seed ^ 0xc4c4,
         sentences: 400,
@@ -76,24 +131,39 @@ fn main() -> anyhow::Result<()> {
     let batches = eval_lm_batches(&stream, spec.batch, spec.seq);
     let ppl = lcd::eval::engine_perplexity(&mut probe, &batches[..batches.len().min(4)])?;
     println!(
-        "host engine sanity: ppl {ppl:.2} through the LUT stack ({} KiB packed, t{})",
+        "cached engine sanity: ppl {ppl:.2} through the LUT stack \
+         ({} KiB packed, {} KiB cache, t{}, admission {})",
         probe.weight_bytes() / 1024,
-        cfg.gemm_threads
+        probe.cache_bytes() / 1024,
+        cfg.gemm_threads,
+        cfg.serve.admission
     );
     drop(probe);
 
-    // Artifact-free host engine: sweep the coordinator worker pool.
-    for workers in [1usize, 2, 4] {
-        drive(&cfg, "host", workers, n_requests, gen_tokens);
-    }
-
-    // Artifact engines need `make artifacts`.
-    if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
-        for engine in ["fp", "lut"] {
-            drive(&cfg, engine, cfg.serve.workers, n_requests, gen_tokens);
+    match engine.as_deref() {
+        // Explicit engine: one run at the configured worker count (the
+        // CI smoke path uses `--engine cached`).
+        Some(kind) => {
+            drive(&cfg, kind, cfg.serve.workers, n_requests, gen_tokens)?;
         }
-    } else {
-        println!("(skipping fp/lut engines: {}/manifest.json missing)", cfg.artifacts_dir);
+        None => {
+            // Full-recompute baseline vs incremental decode, swept across
+            // coordinator worker counts.
+            for workers in [1usize, 2, 4] {
+                drive(&cfg, "host", workers, n_requests, gen_tokens)?;
+            }
+            for workers in [1usize, 2, 4] {
+                drive(&cfg, "cached", workers, n_requests, gen_tokens)?;
+            }
+            // Artifact engines need `make artifacts`.
+            if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
+                for kind in ["fp", "lut"] {
+                    drive(&cfg, kind, cfg.serve.workers, n_requests, gen_tokens)?;
+                }
+            } else {
+                println!("(skipping fp/lut engines: {}/manifest.json missing)", cfg.artifacts_dir);
+            }
+        }
     }
     Ok(())
 }

@@ -87,5 +87,30 @@ fn main() {
     }
     b.speedup("lut_bucket_par/t4", "lut_bucket_par/t1");
     b.speedup("lut_simd_par/t4", "lut_simd_par/t1");
+
+    // Incremental-decode building blocks: a single-row GEMM (the cached
+    // engine's per-slot decode cost) vs the 64-row batch above, and the
+    // SlotCache ring push in its sliding steady state — O(1) in the
+    // window length, so the two window sizes should time identically.
+    println!("== lut_gemm: incremental decode row + SlotCache push ==");
+    b.bench("lut_simd/1024x1024/batch1", || {
+        let mut scratch = SimdScratch::default();
+        simd.gemm(&q[..1024], 1, &mut scratch).data[0] as f64
+    });
+    for window in [64usize, 1024] {
+        let mut cache = lcd::lut::SlotCache::new(8, window, 1024);
+        let row = vec![0.5f32; 1024];
+        // Fill past the boundary so every benched push slides the ring.
+        for _ in 0..=window {
+            cache.push(0, &row);
+        }
+        b.bench(&format!("slot_cache_push/w{window}"), || {
+            for _ in 0..64 {
+                cache.push(0, &row);
+            }
+            cache.len(0) as f64
+        });
+    }
+    b.speedup("slot_cache_push/w64", "slot_cache_push/w1024");
     b.finish("lut_gemm");
 }

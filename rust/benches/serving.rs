@@ -1,11 +1,15 @@
-//! Coordinator benchmarks: batcher admission throughput and end-to-end
+//! Coordinator benchmarks: batcher admission throughput, end-to-end
 //! decode-loop latency with a host mock engine (isolates scheduling
 //! overhead from model math; the artifact-backed numbers live in
-//! `examples/serve_bench.rs`).
+//! `examples/serve_bench.rs`), and the incremental-decode headline:
+//! per-step cost of `CachedLutEngine` vs full-window recompute across
+//! seq ∈ {64, 256, 1024} — cached decode must NOT scale with seq.
 
 use lcd::coordinator::server::{serve_blocking, Engine};
-use lcd::coordinator::Batcher;
-use lcd::coordinator::GenRequest;
+use lcd::coordinator::{
+    AdmissionPolicy, Batcher, CachedLutEngine, FullRecomputeStep, GenRequest, HostLutEngine,
+    HostLutSpec, StepEngine,
+};
 use lcd::util::bench::Bencher;
 use std::sync::mpsc::channel;
 use std::time::Instant;
@@ -45,6 +49,33 @@ impl Engine for MockEngine {
     }
 }
 
+/// Real-engine spec for the decode-step scaling race (small hidden so
+/// the full-recompute side stays benchable at seq 1024).
+fn scaling_spec(seq: usize) -> HostLutSpec {
+    HostLutSpec {
+        batch: 4,
+        seq,
+        vocab: 64,
+        hidden: 64,
+        depth: 2,
+        centroids: 8,
+        seed: 77,
+        gemm_threads: 1,
+        gemm_shard_rows: 0,
+    }
+}
+
+/// Prefill every slot with a near-full window so decode steps run in the
+/// sliding steady state, then return the per-slot decode jobs.
+fn warm_slots<S: StepEngine>(engine: &mut S, seq: usize) -> Vec<(usize, i32)> {
+    let prompt: Vec<i32> = (0..seq - 1).map(|i| (i % 60) as i32).collect();
+    let slots = engine.slots();
+    let jobs: Vec<(usize, Vec<i32>)> =
+        (0..slots).map(|slot| (slot, prompt.clone())).collect();
+    engine.prefill_many(&jobs).expect("prefill");
+    (0..slots).map(|slot| (slot, (slot % 60) as i32)).collect()
+}
+
 fn main() {
     let mut b = Bencher::from_env();
 
@@ -64,7 +95,7 @@ fn main() {
         }
         let mut filled = 0usize;
         while batcher.pending() > 0 {
-            filled += batcher.fill_slots(64);
+            filled += batcher.fill_slots(64).len();
             for (_, s) in batcher.sessions_mut() {
                 for _ in 0..4 {
                     s.push_token(1, 64);
@@ -74,6 +105,36 @@ fn main() {
         }
         filled as f64
     });
+
+    // Admission-policy overhead at the scheduler level (no engine).
+    for (name, policy) in [
+        ("fifo", AdmissionPolicy::Fifo),
+        ("spf", AdmissionPolicy::ShortestPromptFirst),
+        ("budget", AdmissionPolicy::TokenBudget { max_prefill_tokens: 64 }),
+    ] {
+        b.bench(&format!("batcher_admit_{name}/512"), || {
+            let mut batcher = Batcher::with_policy(8, 1024, policy);
+            let (tx, _rx) = channel();
+            for i in 0..512u64 {
+                batcher.submit(GenRequest {
+                    id: i,
+                    prompt: vec![1; 1 + (i as usize % 13)],
+                    gen_tokens: 1,
+                    reply: tx.clone(),
+                    t_submit: Instant::now(),
+                });
+            }
+            let mut admitted = 0usize;
+            while batcher.pending() > 0 {
+                admitted += batcher.fill_slots(64).len();
+                for (_, s) in batcher.sessions_mut() {
+                    s.push_token(1, 64);
+                }
+                batcher.take_done();
+            }
+            admitted as f64
+        });
+    }
 
     // End-to-end decode loop at two simulated forward costs.
     for cost_us in [50u64, 500] {
@@ -109,5 +170,31 @@ fn main() {
         });
     }
     b.speedup("pool_serve_64reqs_cost500us_w4", "pool_serve_64reqs_cost500us_w1");
+
+    // Incremental decode headline: one decode iteration (4 active slots)
+    // on the REAL LUT stack, cached vs full-window recompute. The full
+    // engine's per-step cost grows with seq (it recomputes batch × seq
+    // rows); the cached engine computes 4 rows regardless, so its three
+    // medians should sit on top of each other.
+    println!("== serving: decode-step cost vs seq (batch 4, hidden 64, depth 2) ==");
+    for seq in [64usize, 256, 1024] {
+        let mut full = FullRecomputeStep::new(HostLutEngine::build(scaling_spec(seq)).unwrap())
+            .unwrap();
+        let jobs = warm_slots(&mut full, seq);
+        b.bench(&format!("decode_step_full/seq{seq}"), || {
+            let rows = full.decode_many(&jobs).unwrap();
+            rows[0][0] as f64
+        });
+
+        let mut cached = CachedLutEngine::build(scaling_spec(seq)).unwrap();
+        let jobs = warm_slots(&mut cached, seq);
+        b.bench(&format!("decode_step_cached/seq{seq}"), || {
+            let rows = cached.decode_many(&jobs).unwrap();
+            rows[0][0] as f64
+        });
+        b.speedup(&format!("decode_step_cached/seq{seq}"), &format!("decode_step_full/seq{seq}"));
+    }
+    // Flatness check across seq for the cached engine (should be ~1x).
+    b.speedup("decode_step_cached/seq64", "decode_step_cached/seq1024");
     b.finish("serving");
 }

@@ -55,11 +55,45 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Worker threads behind the `ServerHandle` (each owns an engine).
     pub workers: usize,
+    /// Admission policy name: `fifo`, `spf` (shortest prompt first) or
+    /// `token_budget` (validated on load; resolved by
+    /// [`ServeConfig::admission_policy`]).
+    pub admission: String,
+    /// Prompt-token budget per admission wave under `token_budget`.
+    pub max_prefill_tokens: usize,
+    /// Model window of the host/cached LUT engines (≥ 2).
+    pub seq: usize,
+    /// Vocab size of the host/cached LUT engines.
+    pub vocab: usize,
+    /// Hidden width of the host/cached LUT engines.
+    pub hidden: usize,
+    /// Hidden→hidden LUT layers before the vocab projection.
+    pub depth: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, max_wait_us: 2_000, gen_tokens: 16, queue_cap: 256, workers: 1 }
+        ServeConfig {
+            max_batch: 8,
+            max_wait_us: 2_000,
+            gen_tokens: 16,
+            queue_cap: 256,
+            workers: 1,
+            admission: "fifo".to_string(),
+            max_prefill_tokens: 128,
+            seq: 64,
+            vocab: 96,
+            hidden: 128,
+            depth: 4,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Resolve the typed admission policy (`max_prefill_tokens` supplies
+    /// the token-budget cap).
+    pub fn admission_policy(&self) -> Result<crate::coordinator::AdmissionPolicy> {
+        crate::coordinator::AdmissionPolicy::parse(&self.admission, self.max_prefill_tokens)
     }
 }
 
@@ -169,7 +203,31 @@ impl LcdConfig {
             if let Some(v) = s.get("workers") {
                 cfg.serve.workers = v.as_usize()?;
             }
+            if let Some(v) = s.get("admission") {
+                cfg.serve.admission = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("max_prefill_tokens") {
+                cfg.serve.max_prefill_tokens = v.as_usize()?;
+            }
+            if let Some(v) = s.get("seq") {
+                cfg.serve.seq = v.as_usize()?;
+                if cfg.serve.seq < 2 {
+                    bail!("serve.seq must be >= 2");
+                }
+            }
+            if let Some(v) = s.get("vocab") {
+                cfg.serve.vocab = v.as_usize()?;
+            }
+            if let Some(v) = s.get("hidden") {
+                cfg.serve.hidden = v.as_usize()?;
+            }
+            if let Some(v) = s.get("depth") {
+                cfg.serve.depth = v.as_usize()?;
+            }
         }
+        // Fail on unknown admission policies at load time, not at serve
+        // time.
+        cfg.serve.admission_policy()?;
         Ok(cfg)
     }
 
@@ -221,6 +279,29 @@ impl LcdConfig {
             "serve.gen_tokens" => self.serve.gen_tokens = value.parse()?,
             "serve.queue_cap" => self.serve.queue_cap = value.parse()?,
             "serve.workers" => self.serve.workers = value.parse()?,
+            "serve.admission" => {
+                // Validate before assigning so a bad override leaves the
+                // config untouched.
+                crate::coordinator::AdmissionPolicy::parse(value, self.serve.max_prefill_tokens)?;
+                self.serve.admission = value.to_string();
+            }
+            "serve.max_prefill_tokens" => {
+                // Validate the combination before assigning so `--set`
+                // order can't smuggle in a budget the admission policy
+                // would reject at load time.
+                let v: usize = value.parse()?;
+                crate::coordinator::AdmissionPolicy::parse(&self.serve.admission, v)?;
+                self.serve.max_prefill_tokens = v;
+            }
+            "serve.seq" => {
+                self.serve.seq = value.parse()?;
+                if self.serve.seq < 2 {
+                    bail!("serve.seq must be >= 2");
+                }
+            }
+            "serve.vocab" => self.serve.vocab = value.parse()?,
+            "serve.hidden" => self.serve.hidden = value.parse()?,
+            "serve.depth" => self.serve.depth = value.parse()?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -302,6 +383,30 @@ mod tests {
     }
 
     #[test]
+    fn serve_admission_and_shape_knobs() {
+        let doc = Json::parse(
+            r#"{"serve": {"admission": "token_budget", "max_prefill_tokens": 48,
+                "seq": 32, "vocab": 64, "hidden": 80, "depth": 2}}"#,
+        )
+        .unwrap();
+        let cfg = LcdConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serve.admission, "token_budget");
+        assert_eq!(
+            cfg.serve.admission_policy().unwrap(),
+            crate::coordinator::AdmissionPolicy::TokenBudget { max_prefill_tokens: 48 }
+        );
+        assert_eq!((cfg.serve.seq, cfg.serve.vocab), (32, 64));
+        assert_eq!((cfg.serve.hidden, cfg.serve.depth), (80, 2));
+        // The engine spec picks the shape up from the config.
+        let spec = crate::coordinator::HostLutSpec::from_cfg(&cfg);
+        assert_eq!((spec.seq, spec.vocab, spec.hidden, spec.depth), (32, 64, 80, 2));
+        // Unknown policies and degenerate windows fail at load time.
+        assert!(LcdConfig::from_json(&Json::parse(r#"{"serve": {"admission": "lifo"}}"#).unwrap())
+            .is_err());
+        assert!(LcdConfig::from_json(&Json::parse(r#"{"serve": {"seq": 1}}"#).unwrap()).is_err());
+    }
+
+    #[test]
     fn overrides_apply() {
         let mut cfg = LcdConfig::default();
         cfg.set_override("distill.min_k=5").unwrap();
@@ -316,6 +421,24 @@ mod tests {
         assert_eq!(cfg.serve.workers, 4);
         cfg.set_override("serve.queue_cap=99").unwrap();
         assert_eq!(cfg.serve.queue_cap, 99);
+        cfg.set_override("serve.admission=spf").unwrap();
+        assert_eq!(
+            cfg.serve.admission_policy().unwrap(),
+            crate::coordinator::AdmissionPolicy::ShortestPromptFirst
+        );
+        assert!(cfg.set_override("serve.admission=lifo").is_err());
+        cfg.set_override("serve.max_prefill_tokens=64").unwrap();
+        assert_eq!(cfg.serve.max_prefill_tokens, 64);
+        // Order-independent validation: a zero budget is rejected under
+        // token_budget whichever override comes last, leaving the config
+        // untouched.
+        cfg.set_override("serve.admission=token_budget").unwrap();
+        assert!(cfg.set_override("serve.max_prefill_tokens=0").is_err());
+        assert_eq!(cfg.serve.max_prefill_tokens, 64);
+        cfg.set_override("serve.hidden=72").unwrap();
+        cfg.set_override("serve.seq=48").unwrap();
+        assert_eq!((cfg.serve.hidden, cfg.serve.seq), (72, 48));
+        assert!(cfg.set_override("serve.seq=1").is_err());
         assert!(cfg.set_override("nope=1").is_err());
         assert!(cfg.set_override("garbage").is_err());
     }

@@ -1,4 +1,4 @@
-//! Continuous-batching slot scheduler.
+//! Continuous-batching slot scheduler with pluggable admission policies.
 //!
 //! The compiled artifacts have a fixed batch dimension `B`. The batcher
 //! maintains `B` slots; between decode iterations it admits queued
@@ -7,10 +7,64 @@
 //! scheduling"). A queue capacity bound provides backpressure: submits
 //! beyond it are rejected immediately rather than growing latency
 //! unboundedly.
+//!
+//! Admission is policy-driven ([`AdmissionPolicy`]): FIFO, shortest
+//! prompt first (SPF reduces mean TTFT under mixed prompt lengths), or a
+//! token budget that caps the prompt tokens admitted per iteration so one
+//! admission wave's prefill GEMM can't stall in-flight decodes.
 
 use super::request::{GenRequest, GenResponse};
+use anyhow::{bail, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
+
+/// Policy deciding which queued requests enter free slots each iteration.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Strict arrival order.
+    #[default]
+    Fifo,
+    /// Shortest prompt first (ties broken by arrival order).
+    ShortestPromptFirst,
+    /// Arrival order, but stop once the admitted (window-clipped) prompt
+    /// tokens for this iteration would exceed `max_prefill_tokens`. At
+    /// least one request is always admitted per iteration, so an
+    /// over-budget prompt delays others but never starves itself.
+    TokenBudget { max_prefill_tokens: usize },
+}
+
+impl AdmissionPolicy {
+    /// Parse a config string (`serve.admission`); `budget` supplies
+    /// `max_prefill_tokens` for the token-budget policy.
+    pub fn parse(s: &str, budget: usize) -> Result<AdmissionPolicy> {
+        Ok(match s {
+            "fifo" => AdmissionPolicy::Fifo,
+            "spf" | "shortest" | "sjf" => AdmissionPolicy::ShortestPromptFirst,
+            "token_budget" | "budget" => {
+                if budget == 0 {
+                    bail!("token_budget admission needs serve.max_prefill_tokens >= 1");
+                }
+                AdmissionPolicy::TokenBudget { max_prefill_tokens: budget }
+            }
+            other => bail!("unknown admission policy '{other}' (fifo|spf|token_budget)"),
+        })
+    }
+}
+
+/// Window-clip a prompt to the model window, keeping the suffix and
+/// leaving room for at least one generated token — THE clip rule. Both
+/// `Session::new` and every `StepEngine` prefill path call this one
+/// helper, so the session token window and the engine activation caches
+/// can never disagree about which prompt suffix entered the model (the
+/// alignment the incremental-decode exactness argument rests on).
+pub fn window_clip(tokens: &[i32], seq: usize) -> &[i32] {
+    let keep = seq.saturating_sub(1).max(1);
+    if tokens.len() > keep {
+        &tokens[tokens.len() - keep..]
+    } else {
+        tokens
+    }
+}
 
 /// One in-flight generation bound to a batch slot.
 pub struct Session {
@@ -25,14 +79,23 @@ pub struct Session {
 
 impl Session {
     fn new(request: GenRequest, seq: usize) -> Session {
+        debug_assert!(seq >= 2, "session windows need seq >= 2 (validated at engine build)");
         let mut tokens = request.prompt.clone();
+        // An empty prompt still needs one position to sample from; pad
+        // with token 0 (BOS analogue) instead of underflowing logit_pos.
+        if tokens.is_empty() {
+            tokens.push(0);
+        }
         // Keep room for at least one generated token inside the window;
         // long prompts keep their suffix (sliding-window semantics).
-        if tokens.len() > seq - 1 {
-            tokens = tokens[tokens.len() - (seq - 1)..].to_vec();
-        }
+        tokens = window_clip(&tokens, seq).to_vec();
         let prompt_len = tokens.len();
         Session { request, tokens, prompt_len, generated: Vec::new(), t_first_token: None }
+    }
+
+    /// Window-clipped prompt cost used by token-budget admission.
+    fn prefill_cost(prompt_len: usize, seq: usize) -> usize {
+        prompt_len.max(1).min(seq.saturating_sub(1).max(1))
     }
 
     pub fn done(&self) -> bool {
@@ -42,7 +105,7 @@ impl Session {
     /// Position (within the padded window) whose logits predict the next
     /// token.
     pub fn logit_pos(&self, seq: usize) -> usize {
-        self.tokens.len().min(seq) - 1
+        self.tokens.len().min(seq).saturating_sub(1)
     }
 
     /// Append a generated token, sliding the window if full.
@@ -51,7 +114,7 @@ impl Session {
             self.t_first_token = Some(Instant::now());
         }
         self.generated.push(t);
-        if self.tokens.len() == seq {
+        if self.tokens.len() >= seq {
             self.tokens.remove(0);
         }
         self.tokens.push(t);
@@ -76,20 +139,31 @@ impl Session {
 pub struct Batcher {
     pub max_batch: usize,
     pub queue_cap: usize,
+    policy: AdmissionPolicy,
     queue: VecDeque<GenRequest>,
     slots: Vec<Option<Session>>,
     rejected: u64,
 }
 
 impl Batcher {
+    /// FIFO batcher (the original API).
     pub fn new(max_batch: usize, queue_cap: usize) -> Batcher {
+        Batcher::with_policy(max_batch, queue_cap, AdmissionPolicy::Fifo)
+    }
+
+    pub fn with_policy(max_batch: usize, queue_cap: usize, policy: AdmissionPolicy) -> Batcher {
         Batcher {
             max_batch,
             queue_cap,
+            policy,
             queue: VecDeque::new(),
             slots: (0..max_batch).map(|_| None).collect(),
             rejected: 0,
         }
+    }
+
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
     }
 
     /// Try to enqueue; false = rejected by backpressure.
@@ -102,18 +176,50 @@ impl Batcher {
         true
     }
 
-    /// Admit queued requests into free slots. Returns #admitted.
-    pub fn fill_slots(&mut self, seq: usize) -> usize {
-        let mut admitted = 0;
-        for slot in self.slots.iter_mut() {
-            if slot.is_none() {
-                if let Some(req) = self.queue.pop_front() {
-                    *slot = Some(Session::new(req, seq));
-                    admitted += 1;
+    /// Pick the queue index to admit next under the current policy, given
+    /// the prompt tokens already admitted this iteration. `None` = stop
+    /// admitting for this iteration.
+    fn pick_next(&self, seq: usize, admitted_cost: usize, admitted_count: usize) -> Option<usize> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        match self.policy {
+            AdmissionPolicy::Fifo => Some(0),
+            AdmissionPolicy::ShortestPromptFirst => self
+                .queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, r)| (r.prompt.len(), *i))
+                .map(|(i, _)| i),
+            AdmissionPolicy::TokenBudget { max_prefill_tokens } => {
+                let cost = Session::prefill_cost(self.queue[0].prompt.len(), seq);
+                if admitted_count > 0 && admitted_cost + cost > max_prefill_tokens {
+                    None
                 } else {
-                    break;
+                    Some(0)
                 }
             }
+        }
+    }
+
+    /// Admit queued requests into free slots under the admission policy.
+    /// Returns the admitted slot indices (in admission order) so the
+    /// server can prefill exactly those sessions without re-scanning all
+    /// slots.
+    pub fn fill_slots(&mut self, seq: usize) -> Vec<usize> {
+        let mut admitted = Vec::new();
+        let mut cost = 0usize;
+        for slot_idx in 0..self.slots.len() {
+            if self.slots[slot_idx].is_some() {
+                continue;
+            }
+            let Some(qidx) = self.pick_next(seq, cost, admitted.len()) else {
+                break;
+            };
+            let req = self.queue.remove(qidx).expect("pick_next returned a valid index");
+            cost += Session::prefill_cost(req.prompt.len(), seq);
+            self.slots[slot_idx] = Some(Session::new(req, seq));
+            admitted.push(slot_idx);
         }
         admitted
     }
@@ -139,15 +245,26 @@ impl Batcher {
         self.slots.iter_mut().enumerate().filter_map(|(i, s)| s.as_mut().map(|sess| (i, sess)))
     }
 
-    /// Remove and return finished sessions.
-    pub fn take_done(&mut self) -> Vec<Session> {
+    /// The session bound to `slot`, if any.
+    pub fn session_mut(&mut self, slot: usize) -> Option<&mut Session> {
+        self.slots.get_mut(slot).and_then(|s| s.as_mut())
+    }
+
+    /// Remove and return finished sessions with their slot indices, so
+    /// the server can release per-slot engine state (activation caches).
+    pub fn take_done_slots(&mut self) -> Vec<(usize, Session)> {
         let mut done = Vec::new();
-        for slot in self.slots.iter_mut() {
+        for (i, slot) in self.slots.iter_mut().enumerate() {
             if slot.as_ref().map(|s| s.done()).unwrap_or(false) {
-                done.push(slot.take().unwrap());
+                done.push((i, slot.take().unwrap()));
             }
         }
         done
+    }
+
+    /// Remove and return finished sessions.
+    pub fn take_done(&mut self) -> Vec<Session> {
+        self.take_done_slots().into_iter().map(|(_, s)| s).collect()
     }
 }
 
@@ -170,6 +287,20 @@ mod tests {
         )
     }
 
+    /// Submit requests with the given prompt lengths, fill once, and
+    /// return the admitted request ids in admission order.
+    fn admitted_ids(policy: AdmissionPolicy, prompt_lens: &[usize], slots: usize, seq: usize) -> Vec<u64> {
+        let mut b = Batcher::with_policy(slots, 64, policy);
+        let mut rxs = Vec::new();
+        for (i, &len) in prompt_lens.iter().enumerate() {
+            let (r, rx) = req(i as u64, len, 1);
+            assert!(b.submit(r));
+            rxs.push(rx);
+        }
+        let order = b.fill_slots(seq);
+        order.iter().map(|&slot| b.session_mut(slot).unwrap().request.id).collect()
+    }
+
     #[test]
     fn backpressure_rejects_over_capacity() {
         let mut b = Batcher::new(2, 3);
@@ -189,7 +320,7 @@ mod tests {
             let (r, _rx) = req(i, 4, 1);
             assert!(b.submit(r));
         }
-        assert_eq!(b.fill_slots(16), 2);
+        assert_eq!(b.fill_slots(16), vec![0, 1]);
         assert_eq!(b.active(), 2);
         assert_eq!(b.pending(), 2);
         // Finish one session, a new one takes the slot.
@@ -198,8 +329,69 @@ mod tests {
         }
         let done = b.take_done();
         assert_eq!(done.len(), 2);
-        assert_eq!(b.fill_slots(16), 2);
+        assert_eq!(b.fill_slots(16).len(), 2);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn fifo_admits_in_arrival_order() {
+        assert_eq!(admitted_ids(AdmissionPolicy::Fifo, &[9, 1, 5, 2], 3, 16), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn shortest_prompt_first_admits_by_length_then_arrival() {
+        // Lengths [9, 1, 5, 1]: the two len-1 prompts go first in arrival
+        // order (ids 1, 3), then len-5 (id 2); id 0 waits.
+        assert_eq!(
+            admitted_ids(AdmissionPolicy::ShortestPromptFirst, &[9, 1, 5, 1], 3, 16),
+            vec![1, 3, 2]
+        );
+    }
+
+    #[test]
+    fn token_budget_caps_admitted_prompt_tokens_per_wave() {
+        // Budget 8, prompts 4+4 fit; the third (4) would exceed.
+        let policy = AdmissionPolicy::TokenBudget { max_prefill_tokens: 8 };
+        assert_eq!(admitted_ids(policy, &[4, 4, 4], 3, 16), vec![0, 1]);
+        // An over-budget single prompt is still admitted (no starvation).
+        let tight = AdmissionPolicy::TokenBudget { max_prefill_tokens: 2 };
+        assert_eq!(admitted_ids(tight, &[10, 10], 2, 16), vec![0]);
+        // Budget counts the *window-clipped* cost: seq 8 clips a 100-token
+        // prompt to 7 tokens, so two fit in a 14-token budget.
+        let clipped = AdmissionPolicy::TokenBudget { max_prefill_tokens: 14 };
+        assert_eq!(admitted_ids(clipped, &[100, 100], 2, 8), vec![0, 1]);
+    }
+
+    #[test]
+    fn token_budget_resumes_next_wave() {
+        let mut b =
+            Batcher::with_policy(4, 64, AdmissionPolicy::TokenBudget { max_prefill_tokens: 5 });
+        for i in 0..3 {
+            let (r, _rx) = req(i, 4, 1);
+            assert!(b.submit(r));
+        }
+        assert_eq!(b.fill_slots(16).len(), 1, "wave 1: one 4-token prompt fits a 5 budget");
+        assert_eq!(b.fill_slots(16).len(), 1, "wave 2 admits the next");
+        assert_eq!(b.fill_slots(16).len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        assert_eq!(AdmissionPolicy::parse("fifo", 0).unwrap(), AdmissionPolicy::Fifo);
+        assert_eq!(
+            AdmissionPolicy::parse("spf", 0).unwrap(),
+            AdmissionPolicy::ShortestPromptFirst
+        );
+        assert_eq!(
+            AdmissionPolicy::parse("token_budget", 96).unwrap(),
+            AdmissionPolicy::TokenBudget { max_prefill_tokens: 96 }
+        );
+        assert!(
+            AdmissionPolicy::parse("token_budget", 0).is_err(),
+            "a zero budget would silently collapse prefill batching"
+        );
+        assert!(AdmissionPolicy::parse("lifo", 0).is_err());
     }
 
     #[test]
@@ -223,5 +415,31 @@ mod tests {
         let s = Session::new(r, 16);
         assert_eq!(s.tokens.len(), 15);
         assert_eq!(s.logit_pos(16), 14);
+    }
+
+    #[test]
+    fn empty_prompt_gets_bos_pad() {
+        let (r, _rx) = req(1, 0, 2);
+        let s = Session::new(r, 8);
+        assert_eq!(s.tokens, vec![0], "empty prompts are padded, not underflowed");
+        assert_eq!(s.prompt_len, 1);
+        assert_eq!(s.logit_pos(8), 0);
+    }
+
+    #[test]
+    fn take_done_slots_reports_freed_indices() {
+        let mut b = Batcher::new(3, 8);
+        for i in 0..3 {
+            let (r, _rx) = req(i, 2, if i == 1 { 5 } else { 1 });
+            assert!(b.submit(r));
+        }
+        assert_eq!(b.fill_slots(16), vec![0, 1, 2]);
+        for (_, s) in b.sessions_mut() {
+            s.push_token(3, 16);
+        }
+        let done = b.take_done_slots();
+        let freed: Vec<usize> = done.iter().map(|(slot, _)| *slot).collect();
+        assert_eq!(freed, vec![0, 2], "slot 1 still generating");
+        assert_eq!(b.active(), 1);
     }
 }

@@ -1,6 +1,6 @@
 //! Artifact-free serving engines.
 //!
-//! [`HostLutEngine`] is a deterministic proxy LM whose forward pass is the
+//! [`HostLutModel`] is a deterministic proxy LM whose forward pass is the
 //! *real* parallel bucket-LUT linear stack: seeded random weights are
 //! k-means clustered, compiled to [`SimdLutLayer`]s, and executed through
 //! [`LutStack`] (the `lut::parallel` engine) with a tanh nonlinearity
@@ -9,10 +9,21 @@
 //! continuous batching, INT8 LUT kernels on every decode step — on any
 //! host, without PJRT or `make artifacts`.
 //!
+//! Two engines share the model:
+//!
+//! * [`HostLutEngine`] — the full-window [`Engine`]: every forward
+//!   recomputes all `batch × seq` rows (the baseline the incremental
+//!   subsystem is measured against);
+//! * [`super::incremental::CachedLutEngine`] — the incremental
+//!   `StepEngine`: per-slot activation cache, new rows only.
+//!
 //! Determinism: weights depend only on the seed, and the parallel GEMM is
 //! bit-identical across thread counts, so two engines built from the same
 //! spec produce identical logits — the property the serving determinism
-//! suite leans on.
+//! suite leans on. The model is **position-wise** (no attention, no
+//! cross-position mixing), which is what makes exact incremental decode
+//! possible: any subset of rows computes to the same bits as the full
+//! batch.
 
 use super::server::Engine;
 use crate::clustering::kmeans_1d;
@@ -21,7 +32,7 @@ use crate::lut::{LutLayer, SimdLutLayer, SimdScratch};
 use crate::util::Rng;
 use anyhow::Result;
 
-/// Shape/seed spec for a [`HostLutEngine`].
+/// Shape/seed spec for a [`HostLutModel`]-backed engine.
 #[derive(Clone, Debug)]
 pub struct HostLutSpec {
     pub batch: usize,
@@ -57,13 +68,18 @@ impl Default for HostLutSpec {
 }
 
 impl HostLutSpec {
-    /// Spec derived from an experiment config: serving batch, seed and
-    /// the parallel-engine knobs come from the config; model shape keeps
-    /// the defaults. The single source of truth for every `--engine host`
-    /// consumer, so config knobs can't silently diverge between them.
+    /// Spec derived from an experiment config: serving batch, seed, the
+    /// parallel-engine knobs AND the model shape (`serve.hidden/depth/
+    /// vocab/seq`) all come from the config. The single source of truth
+    /// for every `--engine host|cached` consumer, so config knobs can't
+    /// silently diverge between them.
     pub fn from_cfg(cfg: &crate::config::LcdConfig) -> HostLutSpec {
         HostLutSpec {
             batch: cfg.serve.max_batch.max(1),
+            seq: cfg.serve.seq,
+            vocab: cfg.serve.vocab,
+            hidden: cfg.serve.hidden,
+            depth: cfg.serve.depth,
             seed: cfg.seed,
             gemm_threads: cfg.gemm_threads,
             gemm_shard_rows: cfg.gemm_shard_rows,
@@ -72,20 +88,25 @@ impl HostLutSpec {
     }
 }
 
-/// Deterministic LUT-stack LM serving engine (no artifacts required).
-pub struct HostLutEngine {
+/// The deterministic LUT-stack LM itself: embedding table + compiled
+/// linear stack. Positions are independent (no attention), so every
+/// entry point below operates on "rows" — flat lists of token positions
+/// — and computes bit-identical values for a row regardless of which
+/// other rows share the call.
+pub struct HostLutModel {
     spec: HostLutSpec,
     /// Token embedding table, `vocab × hidden` row-major.
     emb: Vec<f32>,
     /// `depth` hidden→hidden layers plus one hidden→vocab projection.
     stack: LutStack,
-    scratch: SimdScratch,
-    name: String,
 }
 
-impl HostLutEngine {
-    pub fn build(spec: HostLutSpec) -> Result<HostLutEngine> {
-        anyhow::ensure!(spec.batch > 0 && spec.seq > 0, "batch/seq must be positive");
+impl HostLutModel {
+    pub fn build(spec: HostLutSpec) -> Result<HostLutModel> {
+        anyhow::ensure!(spec.batch > 0, "batch must be positive");
+        // seq >= 2 keeps room for at least one generated token next to a
+        // prompt token; Session window arithmetic relies on it.
+        anyhow::ensure!(spec.seq >= 2, "seq must be >= 2 (got {})", spec.seq);
         anyhow::ensure!(spec.vocab > 1 && spec.hidden > 0, "vocab/hidden must be positive");
         let mut rng = Rng::new(spec.seed ^ 0x4057_1075);
         let emb = rng.normal_vec(spec.vocab * spec.hidden, 0.0, 0.5);
@@ -102,51 +123,111 @@ impl HostLutEngine {
             let layer = LutLayer::compile(&km.clustering, d_in, d_out, 1.0, 1.0 / 127.0)?;
             layers.push(SimdLutLayer::compile(&layer));
         }
-        let name = format!("host-lut-w{}xd{}-t{}", spec.hidden, spec.depth, spec.gemm_threads);
         let stack = LutStack::new(layers, spec.gemm_threads, spec.gemm_shard_rows);
-        Ok(HostLutEngine { spec, emb, stack, scratch: SimdScratch::default(), name })
+        Ok(HostLutModel { spec, emb, stack })
+    }
+
+    pub fn spec(&self) -> &HostLutSpec {
+        &self.spec
     }
 
     /// Packed LUT bytes across the stack.
     pub fn weight_bytes(&self) -> usize {
         self.stack.bytes()
     }
+
+    /// Embed token ids into `rows × hidden` activations.
+    pub fn embed(&self, tokens: &[i32]) -> Vec<f32> {
+        let hidden = self.spec.hidden;
+        let mut x = vec![0.0f32; tokens.len() * hidden];
+        for (r, &t) in tokens.iter().enumerate() {
+            let tid = (t.max(0) as usize) % self.spec.vocab;
+            x[r * hidden..(r + 1) * hidden]
+                .copy_from_slice(&self.emb[tid * hidden..(tid + 1) * hidden]);
+        }
+        x
+    }
+
+    /// Run the hidden LUT layers (everything but the vocab projection)
+    /// over `rows` embedded rows; returns the `rows × hidden` projection
+    /// inputs (post-tanh of the last hidden layer) — exactly what
+    /// [`crate::lut::SlotCache`] stores per position.
+    pub fn hidden(&self, mut x: Vec<f32>, rows: usize, scratch: &mut SimdScratch) -> Vec<f32> {
+        debug_assert_eq!(x.len(), rows * self.spec.hidden);
+        let n = self.stack.len();
+        for li in 0..n - 1 {
+            let y = self.stack.linear(li, &x, rows, scratch);
+            x = y.data;
+            for v in &mut x {
+                *v = v.tanh();
+            }
+        }
+        x
+    }
+
+    /// Project `rows × hidden` hidden states to `rows × vocab` logits.
+    pub fn project(&self, h: &[f32], rows: usize, scratch: &mut SimdScratch) -> Vec<f32> {
+        debug_assert_eq!(h.len(), rows * self.spec.hidden);
+        let n = self.stack.len();
+        self.stack.linear(n - 1, h, rows, scratch).data
+    }
+
+    /// Full forward over independent token rows: embed → hidden stack →
+    /// projection. `rows × vocab` logits out.
+    pub fn forward_rows(&self, tokens: &[i32], scratch: &mut SimdScratch) -> Vec<f32> {
+        let x = self.embed(tokens);
+        let h = self.hidden(x, tokens.len(), scratch);
+        self.project(&h, tokens.len(), scratch)
+    }
+}
+
+/// Deterministic LUT-stack LM serving engine (no artifacts required):
+/// the full-window [`Engine`], recomputing every `batch × seq` row per
+/// forward.
+pub struct HostLutEngine {
+    model: HostLutModel,
+    scratch: SimdScratch,
+    name: String,
+}
+
+impl HostLutEngine {
+    pub fn build(spec: HostLutSpec) -> Result<HostLutEngine> {
+        let model = HostLutModel::build(spec)?;
+        let s = model.spec();
+        let name = format!("host-lut-w{}xd{}-t{}", s.hidden, s.depth, s.gemm_threads);
+        Ok(HostLutEngine { model, scratch: SimdScratch::default(), name })
+    }
+
+    /// Packed LUT bytes across the stack.
+    pub fn weight_bytes(&self) -> usize {
+        self.model.weight_bytes()
+    }
+
+    /// The shared model (spec access for callers sizing batches).
+    pub fn model(&self) -> &HostLutModel {
+        &self.model
+    }
 }
 
 impl Engine for HostLutEngine {
     fn batch(&self) -> usize {
-        self.spec.batch
+        self.model.spec().batch
     }
     fn seq(&self) -> usize {
-        self.spec.seq
+        self.model.spec().seq
     }
     fn vocab(&self) -> usize {
-        self.spec.vocab
+        self.model.spec().vocab
     }
     fn name(&self) -> &str {
         &self.name
     }
 
     fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let rows = self.spec.batch * self.spec.seq;
+        let spec = self.model.spec();
+        let rows = spec.batch * spec.seq;
         anyhow::ensure!(tokens.len() == rows, "token batch shape mismatch");
-        let hidden = self.spec.hidden;
-        let mut x = vec![0.0f32; rows * hidden];
-        for (r, &t) in tokens.iter().enumerate() {
-            let tid = (t.max(0) as usize) % self.spec.vocab;
-            x[r * hidden..(r + 1) * hidden]
-                .copy_from_slice(&self.emb[tid * hidden..(tid + 1) * hidden]);
-        }
-        let n = self.stack.len();
-        for li in 0..n - 1 {
-            let y = self.stack.linear(li, &x, rows, &mut self.scratch);
-            x = y.data;
-            for v in &mut x {
-                *v = v.tanh();
-            }
-        }
-        let logits = self.stack.linear(n - 1, &x, rows, &mut self.scratch);
-        Ok(logits.data)
+        Ok(self.model.forward_rows(tokens, &mut self.scratch))
     }
 }
 
@@ -197,8 +278,28 @@ mod tests {
         let mut spec = tiny_spec(1);
         spec.batch = 0;
         assert!(HostLutEngine::build(spec).is_err());
+        // seq < 2 leaves no room for a generated token next to a prompt
+        // token and would underflow the Session window arithmetic.
+        let mut spec = tiny_spec(1);
+        spec.seq = 1;
+        assert!(HostLutEngine::build(spec).is_err());
         let mut e = HostLutEngine::build(tiny_spec(1)).unwrap();
         assert!(e.forward(&[0i32; 3]).is_err(), "wrong token count must fail");
         assert!(e.weight_bytes() > 0);
+    }
+
+    #[test]
+    fn row_subsets_compute_identical_bits() {
+        // The position-wise property incremental decode rests on: any
+        // subset of rows computes the same values as the full batch.
+        let mut full = HostLutEngine::build(tiny_spec(1)).unwrap();
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 3 + 1) % 16).collect();
+        let all = full.forward(&tokens).unwrap();
+        let model = HostLutModel::build(tiny_spec(1)).unwrap();
+        let mut scratch = SimdScratch::default();
+        for r in [0usize, 5, 15] {
+            let one = model.forward_rows(&tokens[r..r + 1], &mut scratch);
+            assert_eq!(one, all[r * 16..(r + 1) * 16].to_vec(), "row {r}");
+        }
     }
 }

@@ -4,31 +4,49 @@
 //! for the fixed-shape AOT artifacts:
 //!
 //! * [`request`] — request/response types and latency metrics (mergeable
-//!   across workers for aggregate reporting);
+//!   across workers for aggregate reporting, with per-phase prefill /
+//!   decode token counts);
 //! * [`batcher`] — slot scheduler: admits queued requests into free batch
-//!   slots between decode iterations (continuous batching), applies
-//!   queue-capacity backpressure, and tracks per-slot sessions;
+//!   slots between decode iterations (continuous batching) under a
+//!   pluggable [`AdmissionPolicy`] (FIFO, shortest-prompt-first, token
+//!   budget), applies queue-capacity backpressure, and tracks per-slot
+//!   sessions;
 //! * [`server`] — the worker pool: one shared bounded queue feeding N
 //!   worker threads behind a single [`ServerHandle`]. Each worker owns
 //!   its engine end to end (PJRT state is not `Send`, so engines are
-//!   built inside their worker thread) and its own batcher; shutdown
-//!   returns per-worker and aggregate [`MetricsSnapshot`]s;
-//! * [`engines`] — artifact-free engines, notably [`HostLutEngine`]: a
-//!   deterministic proxy LM whose forward pass is the parallel bucket-LUT
-//!   linear stack (`lut::parallel`), so serving scales can be exercised
-//!   on any host.
+//!   built inside their worker thread) and its own batcher, and runs an
+//!   explicit **prefill phase** (one cross-request GEMM over all newly
+//!   admitted prompts) followed by a **decode phase** (one incremental
+//!   step across active slots); shutdown returns per-worker and
+//!   aggregate [`MetricsSnapshot`]s;
+//! * [`incremental`] — the incremental decode subsystem: the
+//!   [`StepEngine`] contract (`prefill` / `decode_step`),
+//!   [`CachedLutEngine`] (per-slot activation cache over the LUT stack —
+//!   per-step cost independent of `seq`, bit-identical to full-window
+//!   recompute), and [`FullRecomputeStep`] (adapts any [`Engine`] to the
+//!   same loop);
+//! * [`engines`] — artifact-free engines, notably [`HostLutModel`] /
+//!   [`HostLutEngine`]: a deterministic proxy LM whose forward pass is
+//!   the parallel bucket-LUT linear stack (`lut::parallel`), so serving
+//!   scales can be exercised on any host.
 //!
-//! The engine behind the forward pass is pluggable ([`server::Engine`]):
-//! the FP artifact, the LUT artifact (the paper's §4 system), the host
-//! LUT stack, or a mock for tests — which is how the Fig. 6 serving
-//! comparison swaps implementations without touching scheduling.
+//! The engine behind the forward pass is pluggable ([`server::Engine`] /
+//! [`StepEngine`]): the FP artifact, the LUT artifact (the paper's §4
+//! system), the host LUT stack (full or cached), or a mock for tests —
+//! which is how the Fig. 6 serving comparison swaps implementations
+//! without touching scheduling.
 
 pub mod batcher;
 pub mod engines;
+pub mod incremental;
 pub mod request;
 pub mod server;
 
-pub use batcher::{Batcher, Session};
-pub use engines::{HostLutEngine, HostLutSpec};
+pub use batcher::{window_clip, AdmissionPolicy, Batcher, Session};
+pub use engines::{HostLutEngine, HostLutModel, HostLutSpec};
+pub use incremental::{CachedLutEngine, FullRecomputeStep, StepEngine};
 pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
-pub use server::{serve_blocking, start, start_pool, Engine, ServerHandle, ServerReport};
+pub use server::{
+    serve_blocking, serve_blocking_step, start, start_pool, start_pool_step, Engine, ServerHandle,
+    ServerReport,
+};

@@ -35,6 +35,11 @@ pub struct Metrics {
     pub rejected: u64,
     pub generated_tokens: u64,
     pub decode_steps: u64,
+    /// Prompt tokens absorbed through the prefill phase (window-clipped).
+    pub prefill_tokens: u64,
+    /// Tokens generated through incremental decode steps (the first token
+    /// of each request comes from prefill, not decode).
+    pub decode_tokens: u64,
     latencies_us: Vec<u64>,
     ttfts_us: Vec<u64>,
     started: Option<Instant>,
@@ -48,6 +53,8 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub generated_tokens: u64,
     pub decode_steps: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
     pub p50_ttft_us: u64,
@@ -78,6 +85,8 @@ impl Metrics {
         self.rejected += other.rejected;
         self.generated_tokens += other.generated_tokens;
         self.decode_steps += other.decode_steps;
+        self.prefill_tokens += other.prefill_tokens;
+        self.decode_tokens += other.decode_tokens;
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.ttfts_us.extend_from_slice(&other.ttfts_us);
         self.started = match (self.started, other.started) {
@@ -113,6 +122,8 @@ impl Metrics {
             rejected: self.rejected,
             generated_tokens: self.generated_tokens,
             decode_steps: self.decode_steps,
+            prefill_tokens: self.prefill_tokens,
+            decode_tokens: self.decode_tokens,
             p50_latency_us: pct(&self.latencies_us, 0.5),
             p99_latency_us: pct(&self.latencies_us, 0.99),
             p50_ttft_us: pct(&self.ttfts_us, 0.5),
@@ -126,11 +137,14 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "completed {:>5}  rejected {:>3}  tokens {:>6}  steps {:>5}  \
+             prefill {:>6}  decode {:>6}  \
              p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s",
             self.completed,
             self.rejected,
             self.generated_tokens,
             self.decode_steps,
+            self.prefill_tokens,
+            self.decode_tokens,
             self.p50_latency_us as f64 / 1e3,
             self.p99_latency_us as f64 / 1e3,
             self.p50_ttft_us as f64 / 1e3,
@@ -176,6 +190,8 @@ mod tests {
         let mk = |n: u64, base_us: u64| {
             let mut m = Metrics::default();
             m.record_start();
+            m.prefill_tokens = n * 3;
+            m.decode_tokens = n;
             for i in 1..=n {
                 m.record_completion(&GenResponse {
                     id: i,
@@ -192,6 +208,8 @@ mod tests {
         let s = agg.snapshot();
         assert_eq!(s.completed, 15);
         assert_eq!(s.generated_tokens, 30);
+        assert_eq!(s.prefill_tokens, 45);
+        assert_eq!(s.decode_tokens, 15);
         assert!(s.p99_latency_us >= s.p50_latency_us);
         // Merging an empty worker changes nothing.
         let before = agg.snapshot();

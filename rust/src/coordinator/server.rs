@@ -1,4 +1,4 @@
-//! Serving workers: decode loops over a pluggable batched-forward engine.
+//! Serving workers: prefill/decode loops over a pluggable engine.
 //!
 //! The coordinator runs **N worker threads behind one [`ServerHandle`]**.
 //! Each worker owns its engine end to end (PJRT state is not `Send`, so
@@ -7,10 +7,24 @@
 //! them. The public handle only moves plain data: requests in, responses
 //! out, per-worker and aggregate [`MetricsSnapshot`]s at shutdown.
 //!
-//! [`start`] keeps the original single-worker API; [`start_pool`] is the
-//! general form. [`serve_blocking`] remains the thread-free bench path.
+//! Each worker iteration has two explicit phases:
+//!
+//! 1. **Prefill** — newly admitted sessions (chosen by the batcher's
+//!    [`AdmissionPolicy`]) are batched into one cross-request
+//!    [`StepEngine::prefill_many`] call: `rows = Σ prompt lengths`
+//!    through the LUT stack in a single sharded GEMM, producing each
+//!    session's first token.
+//! 2. **Decode** — every in-flight session advances by exactly one token
+//!    through one [`StepEngine::decode_many`] call; incremental engines
+//!    compute `rows = active_slots`, not `batch × seq`.
+//!
+//! Full-window [`Engine`]s (AOT artifacts, mocks) ride the same loop via
+//! [`FullRecomputeStep`], so [`start`], [`start_pool`] and
+//! [`serve_blocking`] keep their original signatures; [`start_pool_step`]
+//! and [`serve_blocking_step`] are the incremental-native entry points.
 
-use super::batcher::Batcher;
+use super::batcher::{AdmissionPolicy, Batcher};
+use super::incremental::{FullRecomputeStep, StepEngine};
 use super::request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
 use crate::util::argmax;
 use anyhow::Result;
@@ -165,9 +179,9 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Start a single-worker server around an engine builder (original API).
-/// The builder runs inside the worker thread (PJRT state never crosses
-/// threads).
+/// Start a single-worker server around a full-window engine builder
+/// (original API). The builder runs inside the worker thread (PJRT state
+/// never crosses threads).
 pub fn start<F, E>(max_batch: usize, queue_cap: usize, build: F) -> ServerHandle
 where
     F: FnOnce() -> Result<E> + Send + 'static,
@@ -180,13 +194,32 @@ where
     })
 }
 
-/// Start `workers` worker threads sharing one bounded request queue. The
-/// builder is invoked once per worker, inside that worker's thread, with
-/// the worker index — each call must produce an independent engine.
+/// Start `workers` worker threads over full-window [`Engine`]s (adapted
+/// through [`FullRecomputeStep`]), FIFO admission — the original API.
 pub fn start_pool<F, E>(workers: usize, max_batch: usize, queue_cap: usize, build: F) -> ServerHandle
 where
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     E: Engine,
+{
+    start_pool_step(workers, max_batch, queue_cap, AdmissionPolicy::Fifo, move |worker| {
+        FullRecomputeStep::new(build(worker)?)
+    })
+}
+
+/// General form: start `workers` worker threads sharing one bounded
+/// request queue, serving [`StepEngine`]s under `policy`. The builder is
+/// invoked once per worker, inside that worker's thread, with the worker
+/// index — each call must produce an independent engine.
+pub fn start_pool_step<F, S>(
+    workers: usize,
+    max_batch: usize,
+    queue_cap: usize,
+    policy: AdmissionPolicy,
+    build: F,
+) -> ServerHandle
+where
+    F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    S: StepEngine,
 {
     let workers = workers.max(1);
     let shared = Arc::new(Shared {
@@ -209,7 +242,7 @@ where
         let tx2 = res_tx.clone();
         let join = std::thread::Builder::new()
             .name(format!("lcd-serve-{w}"))
-            .spawn(move || pool_worker(w, shared2, max_batch, build2, tx2))
+            .spawn(move || pool_worker(w, shared2, max_batch, policy, build2, tx2))
             .expect("spawning serve worker");
         joins.push(join);
     }
@@ -217,22 +250,23 @@ where
     ServerHandle { shared, next_id: AtomicU64::new(1), joins, results: res_rx }
 }
 
-fn pool_worker<F, E>(
+fn pool_worker<F, S>(
     worker: usize,
     shared: Arc<Shared>,
     max_batch: usize,
+    policy: AdmissionPolicy,
     build: Arc<F>,
     results: Sender<(usize, Metrics)>,
 ) where
-    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
-    E: Engine,
+    F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    S: StepEngine,
 {
     let mut metrics = Metrics::default();
     // Catch panics (engine build or decode) so the exit bookkeeping below
     // always runs — otherwise queued requests would keep their reply
     // senders alive forever and clients would hang in recv().
     let outcome = catch_unwind(AssertUnwindSafe(|| match (build.as_ref())(worker) {
-        Ok(mut engine) => run_worker(&mut engine, &shared, max_batch, &mut metrics),
+        Ok(mut engine) => run_worker(&mut engine, &shared, max_batch, policy, &mut metrics),
         Err(err) => eprintln!("engine build failed on worker {worker}: {err:#}"),
     }));
     if outcome.is_err() {
@@ -253,16 +287,21 @@ fn pool_worker<F, E>(
     let _ = results.send((worker, metrics));
 }
 
-/// One worker's decode loop: admit from the shared queue into the local
-/// batcher, run batched decode steps, complete sessions.
-fn run_worker<E: Engine>(
-    engine: &mut E,
+/// One worker's serve loop: admit from the shared queue into the local
+/// batcher, run prefill + decode phases, complete sessions.
+fn run_worker<S: StepEngine>(
+    engine: &mut S,
     shared: &Arc<Shared>,
     max_batch: usize,
+    policy: AdmissionPolicy,
     metrics: &mut Metrics,
 ) {
-    let slots = max_batch.min(engine.batch()).max(1);
-    let mut batcher = Batcher::new(slots, slots);
+    if engine.seq() < 2 {
+        eprintln!("engine '{}' has seq {} < 2; refusing to serve", engine.name(), engine.seq());
+        return;
+    }
+    let slots = max_batch.min(engine.slots()).max(1);
+    let mut batcher = Batcher::with_policy(slots, slots, policy);
     loop {
         // Admission: block while fully idle, otherwise just top up free
         // slots so decode iterations aren't delayed.
@@ -291,40 +330,153 @@ fn run_worker<E: Engine>(
         if batcher.is_idle() {
             continue;
         }
-        batcher.fill_slots(engine.seq());
-        // Catch decode panics locally so the requests this worker holds
+        // Catch phase panics locally so the requests this worker holds
         // are still counted; errors and panics both end the worker.
-        let step = catch_unwind(AssertUnwindSafe(|| decode_step(engine, &mut batcher, metrics)));
-        let failed = match step {
-            Ok(Ok(())) => None,
-            Ok(Err(e)) => Some(format!("decode step failed: {e:#}")),
-            Err(_) => Some("decode step panicked".to_string()),
+        let step = catch_unwind(AssertUnwindSafe(|| serve_iteration(engine, &mut batcher, metrics)));
+        let outcome = match step {
+            Ok(Ok(responses)) => Ok(responses),
+            Ok(Err(e)) => Err(format!("serve iteration failed: {e:#}")),
+            Err(_) => Err("serve iteration panicked".to_string()),
         };
-        if let Some(msg) = failed {
-            eprintln!("{msg}");
-            // In-flight sessions drop here; their receivers disconnect.
-            // Count them so the report accounts for every submission.
-            metrics.rejected += (batcher.active() + batcher.pending()) as u64;
-            return;
-        }
-        for sess in batcher.take_done() {
-            let reply = sess.request.reply.clone();
-            let resp = sess.finish();
-            metrics.record_completion(&resp);
-            let _ = reply.send(resp);
+        match outcome {
+            Ok(responses) => {
+                for (reply, resp) in responses {
+                    let _ = reply.send(resp);
+                }
+            }
+            Err(msg) => {
+                eprintln!("{msg}");
+                // In-flight sessions drop here; their receivers disconnect.
+                // Count them so the report accounts for every submission.
+                metrics.rejected += (batcher.active() + batcher.pending()) as u64;
+                return;
+            }
         }
     }
 }
 
+/// Responses produced by one serve iteration, paired with their reply
+/// channels (plain data, so callers decide how to deliver).
+type IterationResponses = Vec<(Sender<GenResponse>, GenResponse)>;
+
+/// One full serve iteration: prefill phase over newly admitted sessions,
+/// then one decode step for every in-flight session, collecting finished
+/// responses after each phase.
+fn serve_iteration<S: StepEngine>(
+    engine: &mut S,
+    batcher: &mut Batcher,
+    metrics: &mut Metrics,
+) -> Result<IterationResponses> {
+    let mut responses = Vec::new();
+    prefill_phase(engine, batcher, metrics)?;
+    collect_done(engine, batcher, metrics, &mut responses);
+    decode_phase(engine, batcher, metrics)?;
+    collect_done(engine, batcher, metrics, &mut responses);
+    Ok(responses)
+}
+
+/// Admit queued requests and absorb their prompts through one batched
+/// cross-request prefill, sampling each new session's first token.
+fn prefill_phase<S: StepEngine>(
+    engine: &mut S,
+    batcher: &mut Batcher,
+    metrics: &mut Metrics,
+) -> Result<()> {
+    let seq = engine.seq();
+    let admitted = batcher.fill_slots(seq);
+    // Sessions that need no tokens (gen_tokens == 0) are completed by the
+    // caller's collect pass without ever touching the engine.
+    let jobs: Vec<(usize, Vec<i32>)> = admitted
+        .iter()
+        .filter_map(|&slot| {
+            let sess = batcher.session_mut(slot).expect("admitted slot holds a session");
+            if sess.done() {
+                None
+            } else {
+                Some((slot, sess.tokens.clone()))
+            }
+        })
+        .collect();
+    if jobs.is_empty() {
+        return Ok(());
+    }
+    let rows = engine.prefill_many(&jobs)?;
+    anyhow::ensure!(rows.len() == jobs.len(), "prefill returned {} of {} rows", rows.len(), jobs.len());
+    for ((slot, tokens), row) in jobs.iter().zip(rows) {
+        metrics.prefill_tokens += tokens.len() as u64;
+        let next = argmax(&row) as i32;
+        batcher.session_mut(*slot).expect("prefilled slot holds a session").push_token(next, seq);
+    }
+    Ok(())
+}
+
+/// Advance every unfinished session by one token through one batched
+/// decode step. Each session's newest window token (sampled last
+/// iteration, or by prefill) is fed to the engine exactly once here.
+fn decode_phase<S: StepEngine>(
+    engine: &mut S,
+    batcher: &mut Batcher,
+    metrics: &mut Metrics,
+) -> Result<()> {
+    let seq = engine.seq();
+    let jobs: Vec<(usize, i32)> = batcher
+        .sessions_mut()
+        .filter(|(_, sess)| !sess.done())
+        .map(|(slot, sess)| (slot, *sess.tokens.last().expect("sessions are never empty")))
+        .collect();
+    if jobs.is_empty() {
+        return Ok(());
+    }
+    let rows = engine.decode_many(&jobs)?;
+    anyhow::ensure!(rows.len() == jobs.len(), "decode returned {} of {} rows", rows.len(), jobs.len());
+    metrics.decode_steps += 1;
+    for ((slot, _), row) in jobs.iter().zip(rows) {
+        metrics.decode_tokens += 1;
+        let next = argmax(&row) as i32;
+        batcher.session_mut(*slot).expect("decoded slot holds a session").push_token(next, seq);
+    }
+    Ok(())
+}
+
+/// Move finished sessions out of the batcher, releasing their engine
+/// slots (clearing activation caches) and recording completions.
+fn collect_done<S: StepEngine>(
+    engine: &mut S,
+    batcher: &mut Batcher,
+    metrics: &mut Metrics,
+    responses: &mut IterationResponses,
+) {
+    for (slot, sess) in batcher.take_done_slots() {
+        engine.free_slot(slot);
+        let reply = sess.request.reply.clone();
+        let resp = sess.finish();
+        metrics.record_completion(&resp);
+        responses.push((reply, resp));
+    }
+}
+
 /// Run a server to completion on the current thread with a pre-built
-/// engine and a closed request list (bench harness path — avoids thread
-/// plumbing in timing loops).
+/// full-window engine and a closed request list (bench harness path —
+/// avoids thread plumbing in timing loops).
 pub fn serve_blocking<E: Engine>(
-    mut engine: E,
+    engine: E,
     requests: Vec<(Vec<i32>, usize)>,
     max_batch: usize,
 ) -> Result<(Vec<GenResponse>, MetricsSnapshot)> {
-    let mut batcher = Batcher::new(max_batch.min(engine.batch()), requests.len().max(1));
+    serve_blocking_step(FullRecomputeStep::new(engine)?, requests, max_batch, AdmissionPolicy::Fifo)
+}
+
+/// [`serve_blocking`] over a [`StepEngine`] with an explicit admission
+/// policy — the incremental-native bench path.
+pub fn serve_blocking_step<S: StepEngine>(
+    mut engine: S,
+    requests: Vec<(Vec<i32>, usize)>,
+    max_batch: usize,
+    policy: AdmissionPolicy,
+) -> Result<(Vec<GenResponse>, MetricsSnapshot)> {
+    anyhow::ensure!(engine.seq() >= 2, "engine seq must be >= 2 (got {})", engine.seq());
+    let mut batcher =
+        Batcher::with_policy(max_batch.min(engine.slots()).max(1), requests.len().max(1), policy);
     let mut metrics = Metrics::default();
     metrics.record_start();
     let (tx, rx) = channel();
@@ -341,49 +493,13 @@ pub fn serve_blocking<E: Engine>(
     drop(tx);
     let mut responses = Vec::new();
     while !batcher.is_idle() {
-        batcher.fill_slots(engine.seq());
-        decode_step(&mut engine, &mut batcher, &mut metrics)?;
-        for sess in batcher.take_done() {
-            let resp = sess.finish();
-            metrics.record_completion(&resp);
+        for (_reply, resp) in serve_iteration(&mut engine, &mut batcher, &mut metrics)? {
             responses.push(resp);
         }
     }
     // Drain the channel copies.
     while rx.try_recv().is_ok() {}
     Ok((responses, metrics.snapshot()))
-}
-
-/// One batched forward + greedy sample for every active session.
-fn decode_step<E: Engine>(
-    engine: &mut E,
-    batcher: &mut Batcher,
-    metrics: &mut Metrics,
-) -> Result<()> {
-    let b = engine.batch();
-    let s = engine.seq();
-    let v = engine.vocab();
-    let mut tokens = vec![0i32; b * s];
-    let mut rows: Vec<(usize, usize)> = Vec::new(); // (slot, logit_pos)
-    for (slot, sess) in batcher.sessions_mut() {
-        let row = &mut tokens[slot * s..(slot + 1) * s];
-        for (j, &t) in sess.tokens.iter().take(s).enumerate() {
-            row[j] = t;
-        }
-        rows.push((slot, sess.logit_pos(s)));
-    }
-    if rows.is_empty() {
-        return Ok(());
-    }
-    let logits = engine.forward(&tokens)?;
-    metrics.decode_steps += 1;
-    for (slot, sess) in batcher.sessions_mut() {
-        let pos = rows.iter().find(|(sl, _)| *sl == slot).map(|(_, p)| *p).unwrap();
-        let base = (slot * s + pos) * v;
-        let next = argmax(&logits[base..base + v]) as i32;
-        sess.push_token(next, s);
-    }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -436,9 +552,14 @@ mod tests {
         assert_eq!(responses[2].tokens, vec![2, 3]);
         assert_eq!(snap.completed, 3);
         assert_eq!(snap.generated_tokens, 9);
-        // Continuous batching: 4 decode steps max (longest request),
-        // not 4+3+2 sequential.
-        assert!(snap.decode_steps <= 4, "steps {}", snap.decode_steps);
+        // The prompts entered through the prefill phase...
+        assert_eq!(snap.prefill_tokens, 4);
+        // ...which also produced each request's first token, so decode
+        // only supplies the rest.
+        assert_eq!(snap.decode_tokens, 6);
+        // Continuous batching: all requests run in lock-step, bounded by
+        // the longest request, not the sum.
+        assert!(snap.decode_steps <= 3, "steps {}", snap.decode_steps);
     }
 
     #[test]
@@ -448,8 +569,23 @@ mod tests {
         let (responses, snap) = serve_blocking(engine, requests, 2).unwrap();
         assert_eq!(responses.len(), 5);
         assert_eq!(snap.completed, 5);
-        // 5 requests × 2 tokens on 2 slots -> ≥ 5 steps.
-        assert!(snap.decode_steps >= 5);
+        assert_eq!(snap.prefill_tokens, 5);
+        // 2 tokens per request: one from prefill, one from decode.
+        assert_eq!(snap.decode_tokens, 5);
+        // 5 requests over 2 slots need at least 3 admission waves.
+        assert!(snap.decode_steps >= 3);
+    }
+
+    #[test]
+    fn zero_gen_tokens_completes_without_touching_the_engine() {
+        let engine = MockEngine { b: 2, s: 8, v: 16, calls: 0 };
+        let requests = vec![(vec![3, 4], 0), (vec![5], 2)];
+        let (mut responses, snap) = serve_blocking(engine, requests, 2).unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses[0].tokens, Vec::<i32>::new());
+        assert_eq!(responses[1].tokens, vec![6, 7]);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.prefill_tokens, 1, "only the generating request prefills");
     }
 
     #[test]
@@ -513,5 +649,21 @@ mod tests {
         assert_eq!(snap.completed, 1);
         // After shutdown the state says so; a late handle would reject.
         assert!(shared.state.lock().unwrap().shutting_down);
+    }
+
+    #[test]
+    fn admission_policies_drain_identically_on_uniform_prompts() {
+        // With equal prompt lengths every policy degenerates to FIFO, so
+        // the served token streams must be identical.
+        let run = |policy: AdmissionPolicy| {
+            let engine = FullRecomputeStep::new(MockEngine { b: 2, s: 8, v: 16, calls: 0 }).unwrap();
+            let requests: Vec<_> = (0..6).map(|i| (vec![i as i32], 2)).collect();
+            let (mut responses, _) = serve_blocking_step(engine, requests, 2, policy).unwrap();
+            responses.sort_by_key(|r| r.id);
+            responses.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let fifo = run(AdmissionPolicy::Fifo);
+        assert_eq!(fifo, run(AdmissionPolicy::ShortestPromptFirst));
+        assert_eq!(fifo, run(AdmissionPolicy::TokenBudget { max_prefill_tokens: 1 }));
     }
 }

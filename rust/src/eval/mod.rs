@@ -306,4 +306,31 @@ mod tests {
         let bad = eval_lm_batches(&stream, 2, 16);
         assert!(engine_perplexity(&mut Uniform, &bad).is_err());
     }
+
+    #[test]
+    fn engine_perplexity_identical_on_cached_and_full_engines() {
+        // The cached engine's full-window Engine path recomputes through
+        // the same weights as the host engine, so eval quality numbers
+        // are bit-for-bit independent of which serving engine is probed.
+        use crate::coordinator::{CachedLutEngine, HostLutEngine, HostLutSpec};
+        let spec = HostLutSpec {
+            batch: 2,
+            seq: 12,
+            vocab: 24,
+            hidden: 16,
+            depth: 1,
+            centroids: 6,
+            seed: 321,
+            gemm_threads: 1,
+            gemm_shard_rows: 0,
+        };
+        let mut host = HostLutEngine::build(spec.clone()).unwrap();
+        let mut cached = CachedLutEngine::build(spec).unwrap();
+        let stream: Vec<i32> = (0..300).map(|i| ((i * 5) % 24) as i32).collect();
+        let batches = eval_lm_batches(&stream, 2, 12);
+        let p_host = engine_perplexity(&mut host, &batches).unwrap();
+        let p_cached = engine_perplexity(&mut cached, &batches).unwrap();
+        assert_eq!(p_host.to_bits(), p_cached.to_bits(), "{p_host} vs {p_cached}");
+        assert!(p_host.is_finite() && p_host > 1.0);
+    }
 }

@@ -37,6 +37,20 @@
 //!   shutdown reports per-worker plus aggregate `MetricsSnapshot`s.
 //!   Config: `ServeConfig::workers`.
 //!
+//! ## Incremental decode subsystem
+//!
+//! Each worker iteration splits into an explicit **prefill phase** (all
+//! newly admitted prompts fold into one cross-request GEMM; admission is
+//! policy-driven — FIFO, shortest-prompt-first or token-budget via
+//! `ServeConfig::admission`) and a **decode phase** advancing every
+//! in-flight session by one token. [`coordinator::CachedLutEngine`]
+//! backs the decode phase with a per-slot activation ring
+//! ([`lut::SlotCache`]): the LUT stack is position-wise, so computing
+//! only the new rows is *exact* — bit-identical to full-window
+//! recompute (`rust/tests/incremental_decode.rs` pins this across
+//! admission policies and thread counts), while per-step cost drops
+//! from `batch × seq` rows to `active_slots` rows.
+//!
 //! The test matrix backing this: `rust/tests/lut_properties.rs` (every
 //! GEMM strategy against the FP reference on random layers, plus
 //! `PackedIndices` round-trip properties) and

@@ -1,0 +1,257 @@
+//! Per-slot activation cache for incremental decode.
+//!
+//! [`SlotCache`] stores, for each serving slot, the per-position hidden
+//! states of the LUT stack (the inputs to the final vocab projection).
+//! It is the state backing `coordinator::incremental::CachedLutEngine`:
+//! prefill writes one row per prompt position, every decode step appends
+//! exactly one new row, and the full-window recompute disappears from the
+//! steady-state decode path.
+//!
+//! Design points:
+//!
+//! * **Ring storage.** Each slot is a ring over `window` positions, so a
+//!   window slide (evicting the oldest position once `len == window`) is
+//!   an O(1) index rotation — never an O(window × width) memmove. The
+//!   per-step cache cost is therefore independent of the model `seq`.
+//! * **Clear-on-free contract.** [`SlotCache::clear`] zeroes the slot's
+//!   storage and resets its ring. A freed slot is indistinguishable from
+//!   a never-used one; stale activations from a previous request can
+//!   never leak into a new session (pinned by a poison-value test).
+//! * **Logical addressing.** Positions are exposed in window order
+//!   (`0` = oldest cached position). Row `p` corresponds to token `p` of
+//!   the **engine-fed** window — the prompt plus every token fed through
+//!   a decode step, sliding at the same `seq` capacity. Note the fed
+//!   window trails `coordinator::batcher::Session::tokens` by exactly
+//!   the newest *sampled-but-not-yet-fed* token between decode
+//!   iterations; the two coincide right after prefill and whenever the
+//!   latest sample has been fed back.
+
+/// Slot-indexed ring cache of per-position activation rows.
+pub struct SlotCache {
+    slots: usize,
+    window: usize,
+    width: usize,
+    /// `slots × window × width`, slot-major.
+    data: Vec<f32>,
+    /// Ring start (physical index of logical position 0) per slot.
+    start: Vec<usize>,
+    /// Filled positions per slot.
+    len: Vec<usize>,
+}
+
+impl SlotCache {
+    /// Cache for `slots` slots of at most `window` positions of `width`
+    /// values each. Storage is allocated up front (zeroed) so the steady
+    /// state never allocates.
+    pub fn new(slots: usize, window: usize, width: usize) -> SlotCache {
+        assert!(window > 0 && width > 0, "SlotCache needs window > 0 and width > 0");
+        SlotCache {
+            slots,
+            window,
+            width,
+            data: vec![0.0; slots * window * width],
+            start: vec![0; slots],
+            len: vec![0; slots],
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Cached positions in `slot` (≤ `window`).
+    pub fn len(&self, slot: usize) -> usize {
+        self.len[slot]
+    }
+
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.len[slot] == 0
+    }
+
+    /// Allocated bytes (capacity accounting for serving reports).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Physical row index of logical position `pos` in `slot`.
+    fn phys(&self, slot: usize, pos: usize) -> usize {
+        slot * self.window + (self.start[slot] + pos) % self.window
+    }
+
+    /// Activation row at logical position `pos` (0 = oldest cached).
+    pub fn row(&self, slot: usize, pos: usize) -> &[f32] {
+        assert!(pos < self.len[slot], "position {pos} beyond cached len {}", self.len[slot]);
+        let r = self.phys(slot, pos) * self.width;
+        &self.data[r..r + self.width]
+    }
+
+    /// Newest cached row, if any.
+    pub fn last_row(&self, slot: usize) -> Option<&[f32]> {
+        let n = self.len[slot];
+        if n == 0 {
+            None
+        } else {
+            Some(self.row(slot, n - 1))
+        }
+    }
+
+    /// Append one position's activation row to `slot`. When the window is
+    /// full the oldest position is evicted (O(1) ring advance).
+    pub fn push(&mut self, slot: usize, row: &[f32]) {
+        assert_eq!(row.len(), self.width, "activation row width mismatch");
+        let (dst, evict) = if self.len[slot] == self.window {
+            // Full: the newest row replaces the oldest, then the ring
+            // start advances past it.
+            (self.phys(slot, 0), true)
+        } else {
+            (self.phys(slot, self.len[slot]), false)
+        };
+        self.data[dst * self.width..(dst + 1) * self.width].copy_from_slice(row);
+        if evict {
+            self.start[slot] = (self.start[slot] + 1) % self.window;
+        } else {
+            self.len[slot] += 1;
+        }
+    }
+
+    /// Append `n` rows (`rows.len() == n × width`), oldest first — the
+    /// prefill entry point. Equivalent to `n` pushes; when `n` exceeds the
+    /// window only the last `window` rows are kept.
+    pub fn extend(&mut self, slot: usize, rows: &[f32]) {
+        assert_eq!(rows.len() % self.width, 0, "rows not a multiple of width");
+        let n = rows.len() / self.width;
+        let skip = n.saturating_sub(self.window);
+        for p in skip..n {
+            self.push(slot, &rows[p * self.width..(p + 1) * self.width]);
+        }
+    }
+
+    /// Copy the whole logical window of `slot` into `dst` (resized to
+    /// `len × width`), oldest position first — the range-row entry point
+    /// for whole-window scoring through one projection GEMM.
+    pub fn gather(&self, slot: usize, dst: &mut Vec<f32>) {
+        let n = self.len[slot];
+        dst.clear();
+        dst.reserve(n * self.width);
+        for p in 0..n {
+            dst.extend_from_slice(self.row(slot, p));
+        }
+    }
+
+    /// Clear-on-free: zero `slot`'s storage and reset its ring so a
+    /// reused slot starts from a state identical to a fresh cache.
+    pub fn clear(&mut self, slot: usize) {
+        let base = slot * self.window * self.width;
+        self.data[base..base + self.window * self.width].fill(0.0);
+        self.start[slot] = 0;
+        self.len[slot] = 0;
+    }
+
+    /// Clear every slot.
+    pub fn clear_all(&mut self) {
+        for s in 0..self.slots {
+            self.clear(s);
+        }
+    }
+
+    /// Raw backing storage of one slot (tests poke poison values through
+    /// this to pin the clear-on-free contract).
+    #[doc(hidden)]
+    pub fn raw_slot_mut(&mut self, slot: usize) -> &mut [f32] {
+        let base = slot * self.window * self.width;
+        &mut self.data[base..base + self.window * self.width]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: f32, w: usize) -> Vec<f32> {
+        vec![v; w]
+    }
+
+    #[test]
+    fn push_and_addressing_before_overflow() {
+        let mut c = SlotCache::new(2, 4, 3);
+        assert!(c.is_empty(0));
+        c.push(0, &row(1.0, 3));
+        c.push(0, &row(2.0, 3));
+        c.push(1, &row(9.0, 3));
+        assert_eq!(c.len(0), 2);
+        assert_eq!(c.len(1), 1);
+        assert_eq!(c.row(0, 0), &[1.0, 1.0, 1.0]);
+        assert_eq!(c.row(0, 1), &[2.0, 2.0, 2.0]);
+        assert_eq!(c.last_row(0).unwrap(), &[2.0, 2.0, 2.0]);
+        assert_eq!(c.row(1, 0), &[9.0, 9.0, 9.0]);
+        assert_eq!(c.bytes(), 2 * 4 * 3 * 4);
+    }
+
+    #[test]
+    fn window_slides_at_boundary_like_a_vec() {
+        // Reference model: a plain Vec window with remove(0) on overflow.
+        let (window, width) = (5usize, 2usize);
+        let mut c = SlotCache::new(1, window, width);
+        let mut model: Vec<f32> = Vec::new();
+        for t in 0..17 {
+            let r = row(t as f32, width);
+            c.push(0, &r);
+            model.push(t as f32);
+            if model.len() > window {
+                model.remove(0);
+            }
+            assert_eq!(c.len(0), model.len());
+            for (p, &want) in model.iter().enumerate() {
+                assert_eq!(c.row(0, p), &vec![want; width][..], "t {t} pos {p}");
+            }
+        }
+        let mut gathered = Vec::new();
+        c.gather(0, &mut gathered);
+        let want: Vec<f32> = model.iter().flat_map(|&v| vec![v; width]).collect();
+        assert_eq!(gathered, want);
+    }
+
+    #[test]
+    fn extend_keeps_only_the_window_suffix() {
+        let mut c = SlotCache::new(1, 3, 1);
+        c.extend(0, &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(c.len(0), 3);
+        assert_eq!(c.row(0, 0), &[3.0]);
+        assert_eq!(c.row(0, 2), &[5.0]);
+    }
+
+    #[test]
+    fn clear_on_free_erases_poison() {
+        let mut c = SlotCache::new(2, 3, 2);
+        c.extend(0, &[1.0; 6]);
+        c.extend(1, &[2.0; 6]);
+        // Poison the raw storage beyond what the API wrote.
+        for v in c.raw_slot_mut(0).iter_mut() {
+            *v = f32::NAN;
+        }
+        c.clear(0);
+        assert!(c.is_empty(0));
+        assert!(c.raw_slot_mut(0).iter().all(|&v| v == 0.0), "clear must zero the storage");
+        // The other slot is untouched.
+        assert_eq!(c.row(1, 0), &[2.0, 2.0]);
+        // Reuse after clear behaves like a fresh slot.
+        c.push(0, &[7.0, 8.0]);
+        assert_eq!(c.row(0, 0), &[7.0, 8.0]);
+        assert_eq!(c.len(0), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond cached len")]
+    fn out_of_range_position_panics() {
+        let c = SlotCache::new(1, 2, 1);
+        let _ = c.row(0, 0);
+    }
+}

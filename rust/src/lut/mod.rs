@@ -25,18 +25,23 @@
 //! [`parallel`] scales the bucket and SIMD kernels across cores by
 //! sharding output rows over a persistent thread pool ([`ParallelLut`]);
 //! results are bit-identical to the serial kernels for every thread
-//! count and shard granularity.
+//! count and shard granularity. [`cache`] adds the per-slot activation
+//! ring ([`SlotCache`]) backing the incremental decode engine — every
+//! kernel here is position-wise, so cached rows are exact, never an
+//! approximation.
 //!
 //! All strategies are exhaustively cross-checked against the FP reference
 //! in tests (`rust/tests/lut_properties.rs` adds the property suite) and
 //! raced in `benches/lut_gemm.rs`, including a thread-count sweep.
 
+pub mod cache;
 pub mod gemm;
 pub mod pack;
 pub mod parallel;
 pub mod simd;
 pub mod table;
 
+pub use cache::SlotCache;
 pub use gemm::{
     lut_gemm_bucket, lut_gemm_bucket_range, lut_gemm_fp_ref, lut_gemm_table, lut_gemm_table_sym,
 };

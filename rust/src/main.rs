@@ -4,7 +4,7 @@
 //! lcd train     --model gpt [--steps N]        train a model, save checkpoint
 //! lcd compress  --model gpt [--min-k K]        LCD-compress, print per-layer report
 //! lcd eval      --model gpt                    FP vs LCD perplexity / accuracy
-//! lcd serve     --model gpt [--engine lut|fp]  run the batched generation server
+//! lcd serve     --model gpt [--engine lut|fp|host|cached]  run the batched generation server
 //! lcd repro     --exp table1|...|all           regenerate a paper table/figure
 //! ```
 //!
@@ -63,6 +63,7 @@ fn parse_args() -> Result<Args> {
             "--requests" => requests = take(&mut i)?.parse()?,
             "--workers" => sets.push(format!("serve.workers={}", take(&mut i)?)),
             "--gemm-threads" => sets.push(format!("gemm_threads={}", take(&mut i)?)),
+            "--admission" => sets.push(format!("serve.admission={}", take(&mut i)?)),
             "--help" | "-h" => bail!("{}", HELP),
             other => bail!("unknown flag '{other}'\n{}", HELP),
         }
@@ -84,9 +85,12 @@ commands:
   repro      regenerate a paper experiment (--exp table1|table2|table3|fig2|fig6|fig7|fig8|all)
 flags:
   --config <file>  --set k=v  --model gpt|llama|bert  --steps N  --min-k K
-  --act-bits 8|4   --seed N   --artifacts <dir>  --engine lut|fp|host
+  --act-bits 8|4   --seed N   --artifacts <dir>  --engine lut|fp|host|cached
   --requests N     --workers N (serve worker threads)
-  --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)";
+  --admission fifo|spf|token_budget (serve admission policy)
+  --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)
+(cached = incremental decode: per-slot activation cache, per-step cost
+independent of seq, bit-identical logits to the full host engine)";
 
 fn main() -> Result<()> {
     let args = parse_args()?;
@@ -184,19 +188,23 @@ fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize) -> Result<()
     // Artifact engines train-or-load a checkpoint inside build_engine;
     // materialize it once up front so N workers load instead of racing
     // N concurrent trainings onto the same checkpoint file.
-    if engine_kind != "host" && cfg.serve.workers > 1 {
+    if engine_kind != "host" && engine_kind != "cached" && cfg.serve.workers > 1 {
         let rt = open_runtime(cfg)?;
         let _ = train_or_load(&rt, cfg)?;
     }
     // Each worker builds its own engine (and PJRT runtime) inside its
-    // worker thread; `serve.workers` controls the pool width.
+    // worker thread; `serve.workers` controls the pool width. Every
+    // engine kind rides the prefill/decode split loop: "cached" serves
+    // incrementally, the rest recompute behind the same interface.
+    let policy = cfg.serve.admission_policy()?;
     let cfg2 = cfg.clone();
     let engine_kind2 = engine_kind.to_string();
-    let handle = server::start_pool(
+    let handle = server::start_pool_step(
         cfg.serve.workers,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
-        move |_worker| lcd::repro::shared::build_engine(&cfg2, &engine_kind2),
+        policy,
+        move |_worker| lcd::repro::shared::build_step_engine(&cfg2, &engine_kind2),
     );
 
     let tok = CharTokenizer::new();

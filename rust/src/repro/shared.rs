@@ -308,7 +308,7 @@ pub fn build_engine(cfg: &LcdConfig, kind: &str) -> Result<Box<dyn Engine>> {
                 let prefix = lut_prefix(&tm.runner, &cm);
                 (prefix, format!("lut_fwd_{}", tm.runner.stem), Some(cm.qmax() as f32), spec)
             }
-            other => anyhow::bail!("unknown engine kind '{other}' (fp|lut|host)"),
+            other => anyhow::bail!("unknown engine kind '{other}' (fp|lut|host|cached)"),
         }
     };
     rt.warmup(&[artifact.as_str()])?; // compile before the first request
@@ -322,6 +322,30 @@ pub fn build_engine(cfg: &LcdConfig, kind: &str) -> Result<Box<dyn Engine>> {
         vocab: spec.vocab,
         name: kind.to_string(),
     }))
+}
+
+/// Build an incremental serving engine for the prefill/decode server
+/// loop: `kind` = "cached" (the [`crate::coordinator::CachedLutEngine`]
+/// incremental decode subsystem — per-slot activation cache, per-step
+/// cost independent of `seq`) or any [`build_engine`] kind adapted
+/// through [`crate::coordinator::FullRecomputeStep`].
+pub fn build_step_engine(
+    cfg: &LcdConfig,
+    kind: &str,
+) -> Result<Box<dyn crate::coordinator::StepEngine>> {
+    if kind == "cached" {
+        let spec = crate::coordinator::HostLutSpec::from_cfg(cfg);
+        let engine = crate::coordinator::CachedLutEngine::build(spec)?;
+        eprintln!(
+            "[engine] cached: {} ({} KiB packed LUT weights, {} KiB activation cache)",
+            crate::coordinator::StepEngine::name(&engine),
+            engine.weight_bytes() / 1024,
+            engine.cache_bytes() / 1024
+        );
+        return Ok(Box::new(engine));
+    }
+    let full = build_engine(cfg, kind)?;
+    Ok(Box::new(crate::coordinator::FullRecomputeStep::new(full)?))
 }
 
 /// The LUT artifact's parameter prefix (non-linear params + per-linear

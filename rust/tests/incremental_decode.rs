@@ -1,0 +1,206 @@
+//! Acceptance suite for the incremental decode subsystem (ISSUE-2):
+//!
+//! * **Property**: `CachedLutEngine::decode_step` logits are bit-identical
+//!   to full-window `HostLutEngine::forward` at the sampled logit
+//!   position — across random prompts/generation lengths (sliding well
+//!   past the window), `gemm_threads ∈ {1, 4}`, and slot reuse.
+//! * The full serving loop (prefill phase + decode phase) produces
+//!   identical token streams on the cached engine and the full-recompute
+//!   baseline under **every admission policy** and both thread counts.
+//! * Phase metrics account for every token: one prefill token stream per
+//!   prompt, first generated token from prefill, the rest from decode.
+
+use std::cell::RefCell;
+
+use lcd::coordinator::server::Engine;
+use lcd::coordinator::{
+    serve_blocking_step, AdmissionPolicy, CachedLutEngine, FullRecomputeStep, HostLutEngine,
+    HostLutSpec, StepEngine,
+};
+use lcd::util::proptest::{forall, PropConfig};
+use lcd::util::{argmax, Rng};
+
+const BATCH: usize = 4;
+const SEQ: usize = 10;
+const VOCAB: usize = 24;
+
+fn spec(threads: usize) -> HostLutSpec {
+    HostLutSpec {
+        batch: BATCH,
+        seq: SEQ,
+        vocab: VOCAB,
+        hidden: 24,
+        depth: 2,
+        centroids: 6,
+        seed: 2024,
+        gemm_threads: threads,
+        gemm_shard_rows: 0,
+    }
+}
+
+/// Full-window reference: pad every slot's window into a `batch × seq`
+/// token grid, run the full forward, and slice the logits row at
+/// `slot`'s last window position (exactly what the pre-incremental
+/// server sampled from).
+fn full_window_row(host: &mut HostLutEngine, windows: &[Vec<i32>], slot: usize) -> Vec<f32> {
+    let (b, s, v) = (host.batch(), host.seq(), host.vocab());
+    let mut tokens = vec![0i32; b * s];
+    for (sl, w) in windows.iter().enumerate() {
+        for (j, &t) in w.iter().take(s).enumerate() {
+            tokens[sl * s + j] = t;
+        }
+    }
+    let logits = host.forward(&tokens).unwrap();
+    let pos = windows[slot].len().min(s) - 1;
+    logits[(slot * s + pos) * v..(slot * s + pos + 1) * v].to_vec()
+}
+
+#[test]
+fn prop_decode_step_bit_identical_to_full_window_forward() {
+    for threads in [1usize, 4] {
+        let cached = RefCell::new(CachedLutEngine::build(spec(threads)).unwrap());
+        let host = RefCell::new(HostLutEngine::build(spec(threads)).unwrap());
+        forall(
+            &PropConfig { cases: 12, seed: 0xD00D + threads as u64, ..Default::default() },
+            |rng: &mut Rng| {
+                let slot = rng.below(BATCH);
+                let prompt_len = 1 + rng.below(2 * SEQ); // up to 2× the window
+                let prompt: Vec<i32> =
+                    (0..prompt_len).map(|_| rng.below(VOCAB) as i32).collect();
+                let gen_len = 1 + rng.below(2 * SEQ); // slides well past seq
+                (slot, prompt, gen_len)
+            },
+            |(slot, prompt, gen_len)| {
+                let mut cached = cached.borrow_mut();
+                let mut host = host.borrow_mut();
+                let slot = *slot;
+                // Mirror of the session token window (Session::new clip +
+                // push_token slide semantics).
+                let keep = SEQ - 1;
+                let clipped: Vec<i32> = if prompt.len() > keep {
+                    prompt[prompt.len() - keep..].to_vec()
+                } else {
+                    prompt.clone()
+                };
+                let mut windows: Vec<Vec<i32>> = (0..BATCH).map(|_| Vec::new()).collect();
+                windows[slot] = clipped;
+
+                let rc = cached.prefill(slot, prompt).unwrap();
+                if rc != full_window_row(&mut host, &windows, slot) {
+                    return false;
+                }
+                let mut tok = argmax(&rc) as i32;
+                for _ in 0..*gen_len {
+                    if windows[slot].len() == SEQ {
+                        windows[slot].remove(0);
+                    }
+                    windows[slot].push(tok);
+                    let rc = cached.decode_step(slot, tok).unwrap();
+                    if rc != full_window_row(&mut host, &windows, slot) {
+                        return false;
+                    }
+                    tok = argmax(&rc) as i32;
+                }
+                // Free between cases: the next case reuses this slot, so a
+                // clear-on-free violation would surface as a mismatch.
+                cached.free_slot(slot);
+                true
+            },
+        );
+    }
+}
+
+/// Deterministic mixed request set: varied prompt lengths (some beyond
+/// the window) and generation lengths (some sliding past seq), more
+/// requests than slots so freed slots are reused.
+fn request_set() -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Rng::new(0x5eed_cafe);
+    (0..10)
+        .map(|i| {
+            let plen = 1 + rng.below(15);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(VOCAB) as i32).collect();
+            (prompt, 1 + (i % 5) * 3) // gen ∈ {1, 4, 7, 10, 13}
+        })
+        .collect()
+}
+
+fn streams_cached(policy: AdmissionPolicy, threads: usize) -> Vec<(u64, Vec<i32>)> {
+    let engine = CachedLutEngine::build(spec(threads)).unwrap();
+    let (mut responses, snap) = serve_blocking_step(engine, request_set(), BATCH, policy).unwrap();
+    assert_eq!(snap.completed, 10);
+    responses.sort_by_key(|r| r.id);
+    responses.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+fn streams_full(policy: AdmissionPolicy, threads: usize) -> Vec<(u64, Vec<i32>)> {
+    let engine = FullRecomputeStep::new(HostLutEngine::build(spec(threads)).unwrap()).unwrap();
+    let (mut responses, snap) = serve_blocking_step(engine, request_set(), BATCH, policy).unwrap();
+    assert_eq!(snap.completed, 10);
+    responses.sort_by_key(|r| r.id);
+    responses.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+#[test]
+fn serving_loop_identical_across_engines_policies_and_threads() {
+    for policy in [
+        AdmissionPolicy::Fifo,
+        AdmissionPolicy::ShortestPromptFirst,
+        AdmissionPolicy::TokenBudget { max_prefill_tokens: 6 },
+    ] {
+        let reference = streams_full(policy, 1);
+        for threads in [1usize, 4] {
+            assert_eq!(
+                reference,
+                streams_cached(policy, threads),
+                "cached engine diverged under {policy:?} t{threads}"
+            );
+            assert_eq!(
+                reference,
+                streams_full(policy, threads),
+                "full engine thread-dependent under {policy:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn greedy_streams_independent_of_admission_policy() {
+    // Greedy decoding depends only on each request's own window, so the
+    // per-request token streams must not depend on admission ORDER either
+    // — a strong end-to-end check that slot reuse and caching never leak
+    // state across sessions.
+    let fifo = streams_cached(AdmissionPolicy::Fifo, 1);
+    for policy in [
+        AdmissionPolicy::ShortestPromptFirst,
+        AdmissionPolicy::TokenBudget { max_prefill_tokens: 4 },
+    ] {
+        assert_eq!(fifo, streams_cached(policy, 1), "{policy:?} changed a token stream");
+    }
+}
+
+#[test]
+fn phase_metrics_account_for_every_token() {
+    let engine = CachedLutEngine::build(spec(1)).unwrap();
+    let requests = request_set();
+    let total_gen: u64 = requests.iter().map(|(_, g)| *g as u64).sum();
+    let total_prefill: u64 =
+        requests.iter().map(|(p, _)| p.len().min(SEQ - 1) as u64).sum();
+    let (responses, snap) =
+        serve_blocking_step(engine, requests, BATCH, AdmissionPolicy::Fifo).unwrap();
+    assert_eq!(responses.len(), 10);
+    assert_eq!(snap.generated_tokens, total_gen);
+    assert_eq!(snap.prefill_tokens, total_prefill, "window-clipped prompt tokens");
+    // Every request's first token comes from its prefill; the rest from
+    // incremental decode steps.
+    assert_eq!(snap.decode_tokens, total_gen - 10);
+    assert!(snap.decode_steps > 0);
+}
+
+#[test]
+fn cached_engine_survives_slot_churn_with_token_budget() {
+    // Tight budget forces many small admission waves over few slots:
+    // maximal slot churn. Streams must still match the unconstrained run.
+    let relaxed = streams_cached(AdmissionPolicy::TokenBudget { max_prefill_tokens: 1000 }, 1);
+    let tight = streams_cached(AdmissionPolicy::TokenBudget { max_prefill_tokens: 1 }, 1);
+    assert_eq!(relaxed, tight);
+}
