@@ -8,16 +8,22 @@
 //!   the full window each step (the incremental subsystem's baseline);
 //! * `cached` — the incremental decode engine (per-slot activation
 //!   cache): bit-identical logits, per-step cost independent of seq;
+//! * `speculative` — the cached engine behind draft-and-verify: a cheap
+//!   draft (`--draft narrow|oracle`) proposes `--draft-k` tokens per
+//!   pass and the target bulk-verifies them in one window pass; the
+//!   report gains accepted/drafted token counts;
 //! * `fp` / `lut` — the AOT artifact engines; included only when
 //!   `artifacts/manifest.json` exists (run `make artifacts`).
 //!
 //! Model shape comes from `serve.{seq,vocab,hidden,depth}` in the config;
-//! admission policy from `serve.admission`.
+//! admission policy from `serve.admission`; draft shape from
+//! `serve.draft_{hidden,depth}`.
 //!
 //! Run: `cargo run --release --example serve_bench -- \
-//!       [requests] [gen_tokens] [--engine host|cached|fp|lut] \
-//!       [--admission fifo|spf|token_budget]`
-//! Without `--engine`, sweeps host and cached across worker counts.
+//!       [requests] [gen_tokens] [--engine host|cached|speculative|fp|lut] \
+//!       [--admission fifo|spf|token_budget] [--draft-k N] [--draft narrow|oracle]`
+//! Without `--engine`, sweeps host and cached across worker counts, then
+//! the speculative engine across draft kinds.
 
 use lcd::config::LcdConfig;
 use lcd::coordinator::server;
@@ -102,10 +108,25 @@ fn main() -> anyhow::Result<()> {
                     .ok_or_else(|| anyhow::anyhow!("--admission needs a value"))?;
                 cfg.set_override(&format!("serve.admission={v}"))?;
             }
+            "--draft-k" => {
+                i += 1;
+                let v =
+                    argv.get(i).cloned().ok_or_else(|| anyhow::anyhow!("--draft-k needs a value"))?;
+                cfg.set_override(&format!("serve.draft_k={v}"))?;
+            }
+            "--draft" => {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("--draft needs a value (narrow|oracle)"))?;
+                cfg.set_override(&format!("serve.draft={v}"))?;
+            }
             other if other.starts_with("--") => {
                 anyhow::bail!(
                     "unknown flag '{other}'\nusage: serve_bench [requests] [gen_tokens] \
-                     [--engine host|cached|fp|lut] [--admission fifo|spf|token_budget]"
+                     [--engine host|cached|speculative|fp|lut] \
+                     [--admission fifo|spf|token_budget] [--draft-k N] [--draft narrow|oracle]"
                 );
             }
             other => positional.push(other.parse()?),
@@ -154,6 +175,14 @@ fn main() -> anyhow::Result<()> {
             }
             for workers in [1usize, 2, 4] {
                 drive(&cfg, "cached", workers, n_requests, gen_tokens)?;
+            }
+            // Speculative decode on top of the cached engine: the oracle
+            // draft shows the acceptance-rate-1 upper bound, the narrow
+            // draft a real cheap model (acceptance shows in the report).
+            for draft in ["oracle", "narrow"] {
+                let mut cfg2 = cfg.clone();
+                cfg2.set_override(&format!("serve.draft={draft}"))?;
+                drive(&cfg2, "speculative", 1, n_requests, gen_tokens)?;
             }
             // Artifact engines need `make artifacts`.
             if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {

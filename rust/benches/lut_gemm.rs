@@ -112,5 +112,26 @@ fn main() {
         });
     }
     b.speedup("slot_cache_push/w64", "slot_cache_push/w1024");
+
+    // Speculative rollback: push a draft window's worth of rows then
+    // truncate them back out. Cost is proportional to the rows retracted
+    // (each dropped row is poison-zeroed), independent of the window
+    // size, so the two widths should time identically.
+    for window in [64usize, 1024] {
+        let mut cache = lcd::lut::SlotCache::new(8, window, 1024);
+        let row = vec![0.5f32; 1024];
+        for _ in 0..window {
+            cache.push(0, &row);
+        }
+        b.bench(&format!("slot_cache_spec_rollback8/w{window}"), || {
+            for _ in 0..8 {
+                cache.push(0, &row);
+            }
+            let len = cache.len(0);
+            cache.truncate(0, len - 8);
+            cache.len(0) as f64
+        });
+    }
+    b.speedup("slot_cache_spec_rollback8/w64", "slot_cache_spec_rollback8/w1024");
     b.finish("lut_gemm");
 }

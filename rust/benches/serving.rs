@@ -1,15 +1,23 @@
 //! Coordinator benchmarks: batcher admission throughput, end-to-end
 //! decode-loop latency with a host mock engine (isolates scheduling
 //! overhead from model math; the artifact-backed numbers live in
-//! `examples/serve_bench.rs`), and the incremental-decode headline:
+//! `examples/serve_bench.rs`), the incremental-decode headline:
 //! per-step cost of `CachedLutEngine` vs full-window recompute across
-//! seq ∈ {64, 256, 1024} — cached decode must NOT scale with seq.
+//! seq ∈ {64, 256, 1024} — cached decode must NOT scale with seq — and
+//! the speculative-decode acceptance sweep (oracle + narrow drafts vs
+//! plain cached decode, per-token cost and accepted-token rate).
+//!
+//! Emits machine-checkable `PERF_GATE <name> ... PASS|FAIL` lines the CI
+//! smoke job enforces: cached decode must stay flat across seq (the PR 2
+//! invariant) and the speculative engine must not be slower than plain
+//! cached decode at acceptance rate ≈ 1.
 
 use lcd::coordinator::server::{serve_blocking, Engine};
 use lcd::coordinator::{
-    AdmissionPolicy, Batcher, CachedLutEngine, FullRecomputeStep, GenRequest, HostLutEngine,
-    HostLutSpec, StepEngine,
+    AdmissionPolicy, Batcher, CachedLutEngine, FullRecomputeStep, GenRequest, GreedyTableDraft,
+    HostLutEngine, HostLutSpec, SpeculativeEngine, StepEngine,
 };
+use lcd::util::argmax;
 use lcd::util::bench::Bencher;
 use std::sync::mpsc::channel;
 use std::time::Instant;
@@ -196,5 +204,111 @@ fn main() {
     }
     // Flatness check across seq for the cached engine (should be ~1x).
     b.speedup("decode_step_cached/seq64", "decode_step_cached/seq1024");
+
+    // Speculative decode vs plain cached decode at seq 64: one bench
+    // iteration = k + 1 emitted tokens, so medians compare directly.
+    // The oracle draft replays the target's greedy table (acceptance
+    // exactly 1 — speculation's upper bound); the narrow draft is a real
+    // cheap model whose acceptance rate is printed alongside.
+    println!("== serving: speculative vs cached decode (seq 64, single slot) ==");
+    let spec = scaling_spec(64);
+    for draft_k in [2usize, 4, 8] {
+        let mut plain = CachedLutEngine::build(spec.clone()).unwrap();
+        let _ = warm_slots(&mut plain, 64);
+        let mut tok = 3i32;
+        b.bench(&format!("spec_baseline_cached/k{draft_k}"), || {
+            // The k + 1 sequential decode steps one accepted speculative
+            // pass replaces.
+            for _ in 0..draft_k + 1 {
+                let row = plain.decode_step(0, tok).unwrap();
+                tok = argmax(&row) as i32;
+            }
+            tok as f64
+        });
+
+        let mut accepted = 0u64;
+        let mut drafted = 0u64;
+        let mut eng = SpeculativeEngine::new(
+            CachedLutEngine::build(spec.clone()).unwrap(),
+            GreedyTableDraft::oracle_for(&spec).unwrap(),
+            draft_k,
+        )
+        .unwrap();
+        let _ = warm_slots(&mut eng, 64);
+        let mut pending = 3i32;
+        b.bench(&format!("spec_decode_oracle/k{draft_k}"), || {
+            let draft = eng.draft(0, pending, draft_k).unwrap();
+            let emitted = eng.decode_speculative(0, pending, &draft).unwrap();
+            drafted += draft.len() as u64;
+            accepted += (emitted.len() - 1) as u64;
+            pending = *emitted.last().unwrap();
+            emitted.len() as f64
+        });
+        let rate = accepted as f64 / drafted.max(1) as f64;
+        println!("  spec_decode_oracle/k{draft_k}: acceptance {rate:.3} ({accepted}/{drafted})");
+        if draft_k == 4 {
+            let ok = rate >= 0.999;
+            println!(
+                "PERF_GATE oracle_acceptance_k4 rate {rate:.4} min 1.00 {}",
+                if ok { "PASS" } else { "FAIL" }
+            );
+        }
+
+        let mut accepted = 0u64;
+        let mut drafted = 0u64;
+        let narrow = HostLutSpec { hidden: 16, depth: 1, seed: spec.seed ^ 0xd4af, ..spec.clone() };
+        let mut eng = SpeculativeEngine::new(
+            CachedLutEngine::build(spec.clone()).unwrap(),
+            CachedLutEngine::build(narrow).unwrap(),
+            draft_k,
+        )
+        .unwrap();
+        let _ = warm_slots(&mut eng, 64);
+        let mut pending = 3i32;
+        b.bench(&format!("spec_decode_narrow/k{draft_k}"), || {
+            let draft = eng.draft(0, pending, draft_k).unwrap();
+            let emitted = eng.decode_speculative(0, pending, &draft).unwrap();
+            drafted += draft.len() as u64;
+            accepted += (emitted.len() - 1) as u64;
+            pending = *emitted.last().unwrap();
+            emitted.len() as f64
+        });
+        let rate = accepted as f64 / drafted.max(1) as f64;
+        println!("  spec_decode_narrow/k{draft_k}: acceptance {rate:.3} ({accepted}/{drafted})");
+        b.speedup(
+            &format!("spec_decode_oracle/k{draft_k}"),
+            &format!("spec_baseline_cached/k{draft_k}"),
+        );
+    }
+
+    // Machine-checkable perf gates (enforced by the CI smoke job).
+    perf_gate(
+        &b,
+        "cached_decode_flat_vs_seq",
+        "decode_step_cached/seq1024",
+        "decode_step_cached/seq64",
+        1.60,
+    );
+    perf_gate(
+        &b,
+        "speculative_not_slower_at_accept1",
+        "spec_decode_oracle/k4",
+        "spec_baseline_cached/k4",
+        1.15,
+    );
     b.finish("serving");
+}
+
+/// Print a `PERF_GATE` verdict: FAIL when `fast`'s median exceeds
+/// `limit` × `slow`'s median (or either case is missing).
+fn perf_gate(b: &Bencher, name: &str, fast: &str, slow: &str, limit: f64) {
+    let median = |n: &str| b.results().iter().find(|r| r.name == n).map(|r| r.median_ns());
+    match (median(fast), median(slow)) {
+        (Some(f), Some(s)) if s > 0.0 => {
+            let ratio = f / s;
+            let verdict = if ratio <= limit { "PASS" } else { "FAIL" };
+            println!("PERF_GATE {name} ratio {ratio:.3} limit {limit:.2} {verdict}");
+        }
+        _ => println!("PERF_GATE {name} ratio NaN limit {limit:.2} FAIL"),
+    }
 }

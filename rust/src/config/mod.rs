@@ -69,6 +69,22 @@ pub struct ServeConfig {
     pub hidden: usize,
     /// Hidden→hidden LUT layers before the vocab projection.
     pub depth: usize,
+    /// Wrap the serving engine in draft-and-verify speculative decoding
+    /// (`--engine speculative` is shorthand for the cached engine with
+    /// this flag set).
+    pub speculative: bool,
+    /// Draft tokens proposed per speculative verify pass (≥ 1, < seq).
+    pub draft_k: usize,
+    /// Draft engine kind: `narrow` (a cheaper host LUT model shaped by
+    /// `draft_hidden`/`draft_depth`) or `oracle` (the precomputed greedy
+    /// table of the target — acceptance rate exactly 1, the speculation
+    /// upper bound used by the CI perf gate).
+    pub draft: String,
+    /// Hidden width of the narrow draft model.
+    pub draft_hidden: usize,
+    /// Hidden→hidden layers of the narrow draft model (0 = projection
+    /// only).
+    pub draft_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -85,6 +101,11 @@ impl Default for ServeConfig {
             vocab: 96,
             hidden: 128,
             depth: 4,
+            speculative: false,
+            draft_k: 4,
+            draft: "narrow".to_string(),
+            draft_hidden: 32,
+            draft_depth: 1,
         }
     }
 }
@@ -224,10 +245,31 @@ impl LcdConfig {
             if let Some(v) = s.get("depth") {
                 cfg.serve.depth = v.as_usize()?;
             }
+            if let Some(v) = s.get("speculative") {
+                cfg.serve.speculative = v.as_bool()?;
+            }
+            if let Some(v) = s.get("draft_k") {
+                cfg.serve.draft_k = v.as_usize()?;
+            }
+            if let Some(v) = s.get("draft") {
+                cfg.serve.draft = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("draft_hidden") {
+                cfg.serve.draft_hidden = v.as_usize()?;
+            }
+            if let Some(v) = s.get("draft_depth") {
+                cfg.serve.draft_depth = v.as_usize()?;
+            }
         }
-        // Fail on unknown admission policies at load time, not at serve
-        // time.
+        // Fail on bad serving knobs at load time, not at serve time.
         cfg.serve.admission_policy()?;
+        // A zero budget under TokenBudget would admit nothing useful and
+        // is always a config mistake — reject it regardless of the
+        // currently selected admission policy.
+        if cfg.serve.max_prefill_tokens == 0 {
+            bail!("serve.max_prefill_tokens must be >= 1");
+        }
+        validate_draft_knobs(&cfg.serve)?;
         Ok(cfg)
     }
 
@@ -286,13 +328,39 @@ impl LcdConfig {
                 self.serve.admission = value.to_string();
             }
             "serve.max_prefill_tokens" => {
-                // Validate the combination before assigning so `--set`
-                // order can't smuggle in a budget the admission policy
-                // would reject at load time.
                 let v: usize = value.parse()?;
-                crate::coordinator::AdmissionPolicy::parse(&self.serve.admission, v)?;
+                // A zero budget admits (at most) one request per wave
+                // forever and is always a mistake — reject it here
+                // rather than letting the server degenerate at runtime.
+                if v == 0 {
+                    bail!("serve.max_prefill_tokens must be >= 1");
+                }
                 self.serve.max_prefill_tokens = v;
             }
+            "serve.speculative" => self.serve.speculative = value.parse()?,
+            "serve.draft_k" => {
+                // Validate before assigning so a bad override leaves the
+                // config untouched (same discipline as the other knobs).
+                let v: usize = value.parse()?;
+                if v == 0 {
+                    bail!("serve.draft_k must be >= 1");
+                }
+                self.serve.draft_k = v;
+            }
+            "serve.draft" => {
+                if value != "narrow" && value != "oracle" {
+                    bail!("unknown serve.draft '{value}' (narrow|oracle)");
+                }
+                self.serve.draft = value.to_string();
+            }
+            "serve.draft_hidden" => {
+                let v: usize = value.parse()?;
+                if v == 0 {
+                    bail!("serve.draft_hidden must be >= 1");
+                }
+                self.serve.draft_hidden = v;
+            }
+            "serve.draft_depth" => self.serve.draft_depth = value.parse()?,
             "serve.seq" => {
                 self.serve.seq = value.parse()?;
                 if self.serve.seq < 2 {
@@ -306,6 +374,29 @@ impl LcdConfig {
         }
         Ok(())
     }
+}
+
+/// Draft-engine knob validation for the JSON load path (per-key
+/// overrides validate as they apply; the cross-field seq check runs only
+/// when speculation is actually enabled).
+fn validate_draft_knobs(serve: &ServeConfig) -> Result<()> {
+    if serve.draft_k == 0 {
+        bail!("serve.draft_k must be >= 1");
+    }
+    if serve.draft_hidden == 0 {
+        bail!("serve.draft_hidden must be >= 1");
+    }
+    if serve.draft != "narrow" && serve.draft != "oracle" {
+        bail!("unknown serve.draft '{}' (narrow|oracle)", serve.draft);
+    }
+    if serve.speculative && serve.draft_k + 1 > serve.seq {
+        bail!(
+            "serve.draft_k {} must be < serve.seq {} (one verify pass must fit the window)",
+            serve.draft_k,
+            serve.seq
+        );
+    }
+    Ok(())
 }
 
 fn distill_from_json(d: &Json, mut cfg: DistillConfig) -> Result<DistillConfig> {
@@ -407,6 +498,40 @@ mod tests {
     }
 
     #[test]
+    fn speculative_knobs_parse_and_validate() {
+        let doc = Json::parse(
+            r#"{"serve": {"speculative": true, "draft_k": 6, "draft": "oracle",
+                "draft_hidden": 24, "draft_depth": 0}}"#,
+        )
+        .unwrap();
+        let cfg = LcdConfig::from_json(&doc).unwrap();
+        assert!(cfg.serve.speculative);
+        assert_eq!(cfg.serve.draft_k, 6);
+        assert_eq!(cfg.serve.draft, "oracle");
+        assert_eq!((cfg.serve.draft_hidden, cfg.serve.draft_depth), (24, 0));
+        // Degenerate knobs fail at load time.
+        let bad = |s: &str| LcdConfig::from_json(&Json::parse(s).unwrap()).is_err();
+        assert!(bad(r#"{"serve": {"draft_k": 0}}"#));
+        assert!(bad(r#"{"serve": {"draft": "psychic"}}"#));
+        assert!(bad(r#"{"serve": {"draft_hidden": 0}}"#));
+        // draft_k must leave room in the window — but only when
+        // speculation is actually on.
+        assert!(bad(r#"{"serve": {"speculative": true, "draft_k": 8, "seq": 8}}"#));
+        assert!(!bad(r#"{"serve": {"draft_k": 8, "seq": 8}}"#));
+    }
+
+    #[test]
+    fn zero_prefill_budget_rejected_at_load_time() {
+        // TokenBudget { max_prefill_tokens: 0 } degenerates admission;
+        // the config layer rejects it regardless of the active policy.
+        let doc = Json::parse(r#"{"serve": {"max_prefill_tokens": 0}}"#).unwrap();
+        assert!(LcdConfig::from_json(&doc).is_err());
+        let mut cfg = LcdConfig::default();
+        assert!(cfg.set_override("serve.max_prefill_tokens=0").is_err());
+        assert_eq!(cfg.serve.max_prefill_tokens, 128, "failed override leaves config untouched");
+    }
+
+    #[test]
     fn overrides_apply() {
         let mut cfg = LcdConfig::default();
         cfg.set_override("distill.min_k=5").unwrap();
@@ -438,6 +563,17 @@ mod tests {
         cfg.set_override("serve.hidden=72").unwrap();
         cfg.set_override("serve.seq=48").unwrap();
         assert_eq!((cfg.serve.hidden, cfg.serve.seq), (72, 48));
+        cfg.set_override("serve.speculative=true").unwrap();
+        cfg.set_override("serve.draft_k=8").unwrap();
+        cfg.set_override("serve.draft=oracle").unwrap();
+        cfg.set_override("serve.draft_hidden=16").unwrap();
+        cfg.set_override("serve.draft_depth=0").unwrap();
+        assert!(cfg.serve.speculative);
+        assert_eq!((cfg.serve.draft_k, cfg.serve.draft_hidden, cfg.serve.draft_depth), (8, 16, 0));
+        assert!(cfg.set_override("serve.draft_k=0").is_err());
+        assert_eq!(cfg.serve.draft_k, 8, "failed override leaves config untouched");
+        assert!(cfg.set_override("serve.draft=psychic").is_err());
+        assert_eq!(cfg.serve.draft, "oracle");
         assert!(cfg.set_override("serve.seq=1").is_err());
         assert!(cfg.set_override("nope=1").is_err());
         assert!(cfg.set_override("garbage").is_err());

@@ -74,6 +74,10 @@ pub struct Session {
     /// Prompt length after clipping (first generated position).
     pub prompt_len: usize,
     pub generated: Vec<i32>,
+    /// Draft tokens proposed for this slot by its most recent speculative
+    /// verify pass (0 until the first pass) — lets introspection/debug
+    /// tooling see how deep the last speculation wave went per slot.
+    pub draft_depth: usize,
     pub t_first_token: Option<Instant>,
 }
 
@@ -90,7 +94,14 @@ impl Session {
         // long prompts keep their suffix (sliding-window semantics).
         tokens = window_clip(&tokens, seq).to_vec();
         let prompt_len = tokens.len();
-        Session { request, tokens, prompt_len, generated: Vec::new(), t_first_token: None }
+        Session {
+            request,
+            tokens,
+            prompt_len,
+            generated: Vec::new(),
+            draft_depth: 0,
+            t_first_token: None,
+        }
     }
 
     /// Window-clipped prompt cost used by token-budget admission.
@@ -399,6 +410,7 @@ mod tests {
         let (r, _rx) = req(1, 4, 8);
         let mut s = Session::new(r, 6);
         assert_eq!(s.prompt_len, 4);
+        assert_eq!(s.draft_depth, 0, "sessions start with no draft in flight");
         for t in 0..8 {
             s.push_token(t, 6);
         }

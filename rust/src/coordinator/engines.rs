@@ -86,6 +86,21 @@ impl HostLutSpec {
             ..HostLutSpec::default()
         }
     }
+
+    /// Narrow draft-engine spec for speculative decoding: the same
+    /// serving shape (batch/seq/vocab) as [`HostLutSpec::from_cfg`] so
+    /// slots and windows line up, but the cheaper stack from
+    /// `serve.draft_{hidden,depth}` and an independent seed — the draft
+    /// is a standalone cheap model whose proposals the target verifies,
+    /// not a scaled copy of the target's weights.
+    pub fn draft_from_cfg(cfg: &crate::config::LcdConfig) -> HostLutSpec {
+        HostLutSpec {
+            hidden: cfg.serve.draft_hidden,
+            depth: cfg.serve.draft_depth,
+            seed: cfg.seed ^ 0xd4af,
+            ..HostLutSpec::from_cfg(cfg)
+        }
+    }
 }
 
 /// The deterministic LUT-stack LM itself: embedding table + compiled

@@ -20,6 +20,13 @@
 //! * [`FullRecomputeStep`] — adapts any full-window [`Engine`] (AOT
 //!   artifacts, mocks) to the [`StepEngine`] interface by recomputing,
 //!   so the coordinator's prefill/decode loop is written exactly once.
+//! * Speculative decoding rides the same contract:
+//!   [`StepEngine::decode_speculative`] verifies a draft token run
+//!   against this engine's own greedy stream (default: a sequential
+//!   accept loop that needs no rollback; [`CachedLutEngine`]: one bulk
+//!   window pass over all rows plus [`SlotCache::truncate`] poison
+//!   rollback of rejections) — `coordinator::speculative` supplies the
+//!   draft side and the exactness argument.
 //!
 //! # Exactness argument for position-wise caching
 //!
@@ -56,6 +63,7 @@ use super::batcher::window_clip;
 use super::engines::{HostLutModel, HostLutSpec};
 use super::server::Engine;
 use crate::lut::{SimdScratch, SlotCache};
+use crate::util::argmax;
 use anyhow::Result;
 
 /// Incremental serving contract: prompts enter through `prefill`, every
@@ -94,6 +102,65 @@ pub trait StepEngine {
     fn decode_many(&mut self, jobs: &[(usize, i32)]) -> Result<Vec<Vec<f32>>> {
         jobs.iter().map(|&(slot, token)| self.decode_step(slot, token)).collect()
     }
+
+    /// Draft depth this engine speculates at (0 = no speculation: the
+    /// server's decode phase emits one token per iteration through
+    /// [`StepEngine::decode_many`]; > 0 routes it through
+    /// [`StepEngine::draft`] + [`StepEngine::decode_speculative`]).
+    fn speculation(&self) -> usize {
+        0
+    }
+
+    /// Propose up to `k` greedy draft continuations of `pending` for
+    /// `slot`. Plain engines carry no draft model and propose nothing;
+    /// [`super::speculative::SpeculativeEngine`] runs its cheap draft
+    /// engine here.
+    fn draft(&mut self, _slot: usize, _pending: i32, _k: usize) -> Result<Vec<i32>> {
+        Ok(Vec::new())
+    }
+
+    /// Speculative decode: feed `pending` (the newest sampled-but-not-fed
+    /// token of `slot`), then verify `draft` against this engine's own
+    /// greedy stream. Returns the emitted greedy tokens — always
+    /// `accepted + 1` of them (the confirmations of the accepted draft
+    /// prefix plus one correction/bonus token), each bit-identical to what
+    /// that many plain `decode_step` + argmax iterations would sample.
+    ///
+    /// The default implementation is the sequential accept loop: a draft
+    /// token is fed only *after* its confirmation, so no rollback support
+    /// is needed and any engine — including [`FullRecomputeStep`]
+    /// adapters over AOT artifacts — serves speculative traffic exactly
+    /// (without the bulk-verification speedup). [`CachedLutEngine`]
+    /// overrides this with one batched window pass over all
+    /// `draft.len() + 1` rows.
+    fn decode_speculative(&mut self, slot: usize, pending: i32, draft: &[i32]) -> Result<Vec<i32>> {
+        let mut emitted = Vec::with_capacity(draft.len() + 1);
+        let mut feed = pending;
+        loop {
+            let row = self.decode_step(slot, feed)?;
+            let next = argmax(&row) as i32;
+            emitted.push(next);
+            let i = emitted.len() - 1;
+            if i < draft.len() && draft[i] == next {
+                feed = next;
+            } else {
+                return Ok(emitted);
+            }
+        }
+    }
+
+    /// Retract the newest `n` engine-fed tokens of `slot` after a
+    /// speculative rejection, so the slot's state matches the accepted
+    /// token stream. Engines without retractable state accept only
+    /// `n == 0` (the default accept-loop verification never rolls back).
+    fn rollback(&mut self, slot: usize, n: usize) -> Result<()> {
+        anyhow::ensure!(
+            n == 0,
+            "engine '{}' cannot roll back {n} tokens (slot {slot})",
+            self.name()
+        );
+        Ok(())
+    }
 }
 
 impl<S: StepEngine + ?Sized> StepEngine for Box<S> {
@@ -123,6 +190,18 @@ impl<S: StepEngine + ?Sized> StepEngine for Box<S> {
     }
     fn decode_many(&mut self, jobs: &[(usize, i32)]) -> Result<Vec<Vec<f32>>> {
         (**self).decode_many(jobs)
+    }
+    fn speculation(&self) -> usize {
+        (**self).speculation()
+    }
+    fn draft(&mut self, slot: usize, pending: i32, k: usize) -> Result<Vec<i32>> {
+        (**self).draft(slot, pending, k)
+    }
+    fn decode_speculative(&mut self, slot: usize, pending: i32, draft: &[i32]) -> Result<Vec<i32>> {
+        (**self).decode_speculative(slot, pending, draft)
+    }
+    fn rollback(&mut self, slot: usize, n: usize) -> Result<()> {
+        (**self).rollback(slot, n)
     }
 }
 
@@ -268,6 +347,74 @@ impl StepEngine for CachedLutEngine {
         }
         let logits = self.model.project(&h, jobs.len(), &mut self.scratch);
         Ok(logits.chunks(vocab).map(|c| c.to_vec()).collect())
+    }
+
+    /// Bulk speculative verification — the `window_logits`-style
+    /// primitive the speculative coordinator leans on: embeds
+    /// `[pending, draft…]` and runs ONE hidden-stack pass plus ONE
+    /// projection GEMM over all `draft.len() + 1` rows (instead of one
+    /// engine call per token), pushes every row into the slot cache
+    /// optimistically, then retracts the rows of rejected draft tokens
+    /// through [`SlotCache::truncate`]'s poison rollback.
+    ///
+    /// Emitted tokens are bit-identical to the default sequential accept
+    /// loop by row independence: each logits row depends only on its own
+    /// token, so scoring `pending` and the draft together changes no
+    /// bits, and rows past the first mismatch are simply discarded.
+    fn decode_speculative(&mut self, slot: usize, pending: i32, draft: &[i32]) -> Result<Vec<i32>> {
+        if draft.is_empty() {
+            let row = self.decode_step(slot, pending)?;
+            return Ok(vec![argmax(&row) as i32]);
+        }
+        let slots = self.slots();
+        anyhow::ensure!(slot < slots, "slot {slot} out of range ({slots} slots)");
+        anyhow::ensure!(
+            draft.len() < self.model.spec().seq,
+            "draft of {} tokens cannot fit a seq-{} window in one verify pass",
+            draft.len(),
+            self.model.spec().seq
+        );
+        let hidden = self.model.spec().hidden;
+        let vocab = self.model.spec().vocab;
+        let mut tokens = Vec::with_capacity(draft.len() + 1);
+        tokens.push(pending);
+        tokens.extend_from_slice(draft);
+        let rows = tokens.len();
+        let x = self.model.embed(&tokens);
+        let h = self.model.hidden(x, rows, &mut self.scratch);
+        for row in h.chunks_exact(hidden) {
+            self.cache.push(slot, row);
+        }
+        let logits = self.model.project(&h, rows, &mut self.scratch);
+        // Greedy acceptance: emitted token r must equal draft[r] for row
+        // r + 1 to have been scored in the right context; stop at the
+        // first divergence (that emission is the correction token).
+        let mut emitted = Vec::with_capacity(rows);
+        for (r, row) in logits.chunks_exact(vocab).enumerate() {
+            let next = argmax(row) as i32;
+            emitted.push(next);
+            if r < draft.len() && draft[r] != next {
+                break;
+            }
+        }
+        // Fed rows: pending + every draft token; confirmed rows: pending
+        // + the accepted prefix (emitted.len() - 1 tokens). Retract the
+        // rest so the cache tracks only the accepted stream.
+        let rejected = rows - emitted.len();
+        if rejected > 0 {
+            let keep = self.cache.len(slot) - rejected;
+            self.cache.truncate(slot, keep);
+        }
+        Ok(emitted)
+    }
+
+    /// Speculative rollback: retract the newest `n` cached rows (the
+    /// poison-zeroing [`SlotCache::truncate`]).
+    fn rollback(&mut self, slot: usize, n: usize) -> Result<()> {
+        let len = self.cache.len(slot);
+        anyhow::ensure!(n <= len, "cannot roll back {n} of {len} cached rows (slot {slot})");
+        self.cache.truncate(slot, len - n);
+        Ok(())
     }
 
     fn free_slot(&mut self, slot: usize) {
@@ -421,6 +568,19 @@ impl<E: Engine> StepEngine for FullRecomputeStep<E> {
         self.forward_rows_at(&slots_only)
     }
 
+    /// Retract the newest `n` window tokens. Exact for any wrapped model
+    /// when the pushes being retracted did not slide the window; after a
+    /// slide the window holds a shorter (still newest-contiguous) suffix,
+    /// which is harmless for position-wise models and, when this adapter
+    /// drafts for an attention model, can only lower the acceptance rate
+    /// — never the emitted stream, which the target verification fixes.
+    fn rollback(&mut self, slot: usize, n: usize) -> Result<()> {
+        let len = self.windows[slot].len();
+        anyhow::ensure!(n <= len, "cannot roll back {n} of {len} window tokens (slot {slot})");
+        self.windows[slot].truncate(len - n);
+        Ok(())
+    }
+
     fn free_slot(&mut self, slot: usize) {
         self.windows[slot].clear();
     }
@@ -563,6 +723,101 @@ mod tests {
         let win = e.window_logits(0).unwrap();
         let want = model.forward_rows(&fed, &mut scratch);
         assert_eq!(win, want, "post-slide window_logits must score the fed window");
+    }
+
+    /// Greedy next-token function of the position-wise model: logits (and
+    /// hence the argmax) depend only on the newest fed token.
+    fn greedy_table(threads: usize) -> Vec<i32> {
+        let model = HostLutModel::build(spec(threads)).unwrap();
+        let mut scratch = SimdScratch::default();
+        let tokens: Vec<i32> = (0..spec(threads).vocab as i32).collect();
+        let logits = model.forward_rows(&tokens, &mut scratch);
+        logits.chunks(spec(threads).vocab).map(|row| argmax(row) as i32).collect()
+    }
+
+    #[test]
+    fn bulk_decode_speculative_matches_default_loop_and_greedy_chain() {
+        let table = greedy_table(1);
+        let mut bulk = CachedLutEngine::build(spec(1)).unwrap();
+        let mut loopy =
+            FullRecomputeStep::new(HostLutEngine::build(spec(1)).unwrap()).unwrap();
+        let prompt = [3i32, 7, 1];
+        let rb = bulk.prefill(0, &prompt).unwrap();
+        let rl = loopy.prefill(0, &prompt).unwrap();
+        assert_eq!(rb, rl);
+        let mut pending = argmax(&rb) as i32;
+        // Alternate fully-correct drafts (all accepted + bonus) with
+        // corrupted ones (partial acceptance + correction).
+        for (pass, corrupt_at) in [(0usize, None), (1, Some(0usize)), (2, Some(2)), (3, None)] {
+            let k = 3usize;
+            let mut draft = Vec::with_capacity(k);
+            let mut feed = pending;
+            for i in 0..k {
+                feed = table[feed as usize];
+                if corrupt_at == Some(i) {
+                    feed = (feed + 1) % spec(1).vocab as i32;
+                }
+                draft.push(feed);
+            }
+            let eb = bulk.decode_speculative(0, pending, &draft).unwrap();
+            let el = loopy.decode_speculative(0, pending, &draft).unwrap();
+            assert_eq!(eb, el, "pass {pass}: bulk and loop verification diverge");
+            // Emitted tokens are the pure greedy chain from `pending`.
+            let mut want = Vec::new();
+            let mut f = pending;
+            for _ in 0..eb.len() {
+                f = table[f as usize];
+                want.push(f);
+            }
+            assert_eq!(eb, want, "pass {pass}: emissions are not the greedy chain");
+            match corrupt_at {
+                // All k drafts accepted + one bonus token.
+                None => assert_eq!(eb.len(), k + 1, "pass {pass}"),
+                // Accept the prefix before the corruption + correction.
+                Some(i) => assert_eq!(eb.len(), i + 1, "pass {pass}"),
+            }
+            pending = *eb.last().unwrap();
+        }
+    }
+
+    #[test]
+    fn decode_speculative_with_empty_draft_is_one_plain_step() {
+        let mut a = CachedLutEngine::build(spec(1)).unwrap();
+        let mut b = CachedLutEngine::build(spec(1)).unwrap();
+        a.prefill(1, &[2, 4]).unwrap();
+        b.prefill(1, &[2, 4]).unwrap();
+        let emitted = a.decode_speculative(1, 5, &[]).unwrap();
+        let row = b.decode_step(1, 5).unwrap();
+        assert_eq!(emitted, vec![argmax(&row) as i32]);
+        assert_eq!(a.cached_len(1), b.cached_len(1));
+    }
+
+    #[test]
+    fn rejected_rows_roll_back_to_the_unspeculated_state() {
+        // No window slide in this scenario (prompt + pass fits seq 8), so
+        // rollback must restore the cache bit-identically: window_logits
+        // — which reads every cached row — must agree with a twin engine
+        // that never speculated.
+        let mut spec_eng = CachedLutEngine::build(spec(1)).unwrap();
+        let mut twin = CachedLutEngine::build(spec(1)).unwrap();
+        spec_eng.prefill(2, &[1, 2]).unwrap();
+        twin.prefill(2, &[1, 2]).unwrap();
+        // A draft the target is guaranteed to reject at token 0: verify
+        // feeds [pending] + rejects everything behind the mismatch.
+        let table = greedy_table(1);
+        let pending = 6i32;
+        let wrong = (table[pending as usize] + 1) % spec(1).vocab as i32;
+        let emitted = spec_eng.decode_speculative(2, pending, &[wrong, wrong, wrong]).unwrap();
+        assert_eq!(emitted.len(), 1, "first draft token must be rejected");
+        let t = twin.decode_step(2, pending).unwrap();
+        assert_eq!(emitted[0], argmax(&t) as i32);
+        assert_eq!(spec_eng.cached_len(2), twin.cached_len(2));
+        assert_eq!(spec_eng.window_logits(2).unwrap(), twin.window_logits(2).unwrap());
+        // rollback() is the same truncate exposed directly.
+        spec_eng.decode_step(2, 9).unwrap();
+        spec_eng.rollback(2, 1).unwrap();
+        assert_eq!(spec_eng.window_logits(2).unwrap(), twin.window_logits(2).unwrap());
+        assert!(spec_eng.rollback(2, 99).is_err(), "over-rollback must fail");
     }
 
     #[test]

@@ -28,7 +28,13 @@
 //! * [`engines`] — artifact-free engines, notably [`HostLutModel`] /
 //!   [`HostLutEngine`]: a deterministic proxy LM whose forward pass is
 //!   the parallel bucket-LUT linear stack (`lut::parallel`), so serving
-//!   scales can be exercised on any host.
+//!   scales can be exercised on any host;
+//! * [`speculative`] — draft-then-verify decoding over any
+//!   target/draft [`StepEngine`] pair: [`SpeculativeEngine`] drafts `k`
+//!   tokens with a cheap engine and bulk-verifies them on the target in
+//!   one batched window pass, with greedy acceptance keeping the emitted
+//!   stream bit-identical to the target decoding alone
+//!   ([`GreedyTableDraft`] is the acceptance-rate-1 oracle draft).
 //!
 //! The engine behind the forward pass is pluggable ([`server::Engine`] /
 //! [`StepEngine`]): the FP artifact, the LUT artifact (the paper's §4
@@ -41,6 +47,7 @@ pub mod engines;
 pub mod incremental;
 pub mod request;
 pub mod server;
+pub mod speculative;
 
 pub use batcher::{window_clip, AdmissionPolicy, Batcher, Session};
 pub use engines::{HostLutEngine, HostLutModel, HostLutSpec};
@@ -50,3 +57,4 @@ pub use server::{
     serve_blocking, serve_blocking_step, start, start_pool, start_pool_step, Engine, ServerHandle,
     ServerReport,
 };
+pub use speculative::{GreedyTableDraft, SpeculativeEngine};

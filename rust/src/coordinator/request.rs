@@ -40,6 +40,11 @@ pub struct Metrics {
     /// Tokens generated through incremental decode steps (the first token
     /// of each request comes from prefill, not decode).
     pub decode_tokens: u64,
+    /// Draft tokens proposed during speculative decode phases.
+    pub drafted_tokens: u64,
+    /// Draft tokens the target's bulk verification accepted
+    /// (`drafted_tokens - accepted_tokens` were rejected and rolled back).
+    pub accepted_tokens: u64,
     latencies_us: Vec<u64>,
     ttfts_us: Vec<u64>,
     started: Option<Instant>,
@@ -55,6 +60,8 @@ pub struct MetricsSnapshot {
     pub decode_steps: u64,
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
+    pub drafted_tokens: u64,
+    pub accepted_tokens: u64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
     pub p50_ttft_us: u64,
@@ -87,6 +94,8 @@ impl Metrics {
         self.decode_steps += other.decode_steps;
         self.prefill_tokens += other.prefill_tokens;
         self.decode_tokens += other.decode_tokens;
+        self.drafted_tokens += other.drafted_tokens;
+        self.accepted_tokens += other.accepted_tokens;
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.ttfts_us.extend_from_slice(&other.ttfts_us);
         self.started = match (self.started, other.started) {
@@ -124,6 +133,8 @@ impl Metrics {
             decode_steps: self.decode_steps,
             prefill_tokens: self.prefill_tokens,
             decode_tokens: self.decode_tokens,
+            drafted_tokens: self.drafted_tokens,
+            accepted_tokens: self.accepted_tokens,
             p50_latency_us: pct(&self.latencies_us, 0.5),
             p99_latency_us: pct(&self.latencies_us, 0.99),
             p50_ttft_us: pct(&self.ttfts_us, 0.5),
@@ -134,11 +145,29 @@ impl Metrics {
 }
 
 impl MetricsSnapshot {
+    /// Draft-token acceptance rate of the speculative phases, if any ran.
+    pub fn acceptance_rate(&self) -> Option<f64> {
+        if self.drafted_tokens == 0 {
+            None
+        } else {
+            Some(self.accepted_tokens as f64 / self.drafted_tokens as f64)
+        }
+    }
+
     pub fn report(&self) -> String {
+        let spec = match self.acceptance_rate() {
+            Some(rate) => format!(
+                "  spec {}/{} accepted ({:.0}%)",
+                self.accepted_tokens,
+                self.drafted_tokens,
+                rate * 100.0
+            ),
+            None => String::new(),
+        };
         format!(
             "completed {:>5}  rejected {:>3}  tokens {:>6}  steps {:>5}  \
              prefill {:>6}  decode {:>6}  \
-             p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s",
+             p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s{spec}",
             self.completed,
             self.rejected,
             self.generated_tokens,
@@ -183,6 +212,18 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.p50_latency_us, 0);
         assert_eq!(s.tokens_per_sec, 0.0);
+        assert_eq!(s.acceptance_rate(), None, "no speculation → no rate");
+    }
+
+    #[test]
+    fn speculative_counters_merge_and_rate() {
+        let mut a = Metrics { drafted_tokens: 8, accepted_tokens: 6, ..Default::default() };
+        let b = Metrics { drafted_tokens: 2, accepted_tokens: 2, ..Default::default() };
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!((s.drafted_tokens, s.accepted_tokens), (10, 8));
+        assert_eq!(s.acceptance_rate(), Some(0.8));
+        assert!(s.report().contains("spec 8/10 accepted"));
     }
 
     #[test]

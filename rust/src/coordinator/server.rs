@@ -16,7 +16,12 @@
 //!    session's first token.
 //! 2. **Decode** — every in-flight session advances by exactly one token
 //!    through one [`StepEngine::decode_many`] call; incremental engines
-//!    compute `rows = active_slots`, not `batch × seq`.
+//!    compute `rows = active_slots`, not `batch × seq`. Engines that
+//!    speculate (`StepEngine::speculation() > 0`, e.g.
+//!    [`super::speculative::SpeculativeEngine`]) instead advance each
+//!    session by up to `draft_k + 1` tokens through a draft +
+//!    bulk-verify pass, with accepted/rejected draft counts reported in
+//!    the metrics — emitted streams stay bit-identical to plain decode.
 //!
 //! Full-window [`Engine`]s (AOT artifacts, mocks) ride the same loop via
 //! [`FullRecomputeStep`], so [`start`], [`start_pool`] and
@@ -411,13 +416,18 @@ fn prefill_phase<S: StepEngine>(
 }
 
 /// Advance every unfinished session by one token through one batched
-/// decode step. Each session's newest window token (sampled last
+/// decode step — or, when the engine speculates (`speculation() > 0`),
+/// by up to `speculation() + 1` tokens through a draft + bulk-verify
+/// pass per session. Each session's newest window token (sampled last
 /// iteration, or by prefill) is fed to the engine exactly once here.
 fn decode_phase<S: StepEngine>(
     engine: &mut S,
     batcher: &mut Batcher,
     metrics: &mut Metrics,
 ) -> Result<()> {
+    if engine.speculation() > 0 {
+        return speculative_phase(engine, batcher, metrics);
+    }
     let seq = engine.seq();
     let jobs: Vec<(usize, i32)> = batcher
         .sessions_mut()
@@ -434,6 +444,62 @@ fn decode_phase<S: StepEngine>(
         metrics.decode_tokens += 1;
         let next = argmax(&row) as i32;
         batcher.session_mut(*slot).expect("decoded slot holds a session").push_token(next, seq);
+    }
+    Ok(())
+}
+
+/// Speculative decode phase: each unfinished session advances through
+/// one draft + bulk-verify pass. The draft depth is capped at
+/// `remaining - 1` so a pass (which emits up to `draft + 1` tokens) can
+/// never overshoot the request; greedy acceptance keeps every emitted
+/// token bit-identical to the plain decode phase, so this changes only
+/// how many engine iterations a request costs.
+fn speculative_phase<S: StepEngine>(
+    engine: &mut S,
+    batcher: &mut Batcher,
+    metrics: &mut Metrics,
+) -> Result<()> {
+    let seq = engine.seq();
+    let jobs: Vec<(usize, i32, usize)> = batcher
+        .sessions_mut()
+        .filter(|(_, sess)| !sess.done())
+        .map(|(slot, sess)| {
+            let pending = *sess.tokens.last().expect("sessions are never empty");
+            let remaining = sess.request.gen_tokens - sess.generated.len();
+            (slot, pending, remaining)
+        })
+        .collect();
+    if jobs.is_empty() {
+        return Ok(());
+    }
+    metrics.decode_steps += 1;
+    for (slot, pending, remaining) in jobs {
+        let k = engine.speculation().min(remaining.saturating_sub(1));
+        let draft = engine.draft(slot, pending, k)?;
+        anyhow::ensure!(
+            draft.len() <= k,
+            "draft proposed {} tokens for a depth-{k} request",
+            draft.len()
+        );
+        batcher
+            .session_mut(slot)
+            .expect("decoded slot holds a session")
+            .draft_depth = draft.len();
+        let emitted = engine.decode_speculative(slot, pending, &draft)?;
+        anyhow::ensure!(
+            !emitted.is_empty() && emitted.len() <= draft.len() + 1,
+            "speculative pass emitted {} tokens for a {}-token draft",
+            emitted.len(),
+            draft.len()
+        );
+        metrics.drafted_tokens += draft.len() as u64;
+        metrics.accepted_tokens += (emitted.len() - 1) as u64;
+        let sess = batcher.session_mut(slot).expect("decoded slot holds a session");
+        for t in emitted {
+            debug_assert!(!sess.done(), "the draft cap bounds emissions to the request");
+            sess.push_token(t, seq);
+            metrics.decode_tokens += 1;
+        }
     }
     Ok(())
 }
@@ -649,6 +715,35 @@ mod tests {
         assert_eq!(snap.completed, 1);
         // After shutdown the state says so; a late handle would reject.
         assert!(shared.state.lock().unwrap().shutting_down);
+    }
+
+    #[test]
+    fn speculative_serve_matches_plain_and_counts_acceptance() {
+        // Draft == target (both the counting mock), so every draft token
+        // is accepted: streams must match plain decode bit-for-bit while
+        // the iteration count drops.
+        let mk = || FullRecomputeStep::new(MockEngine { b: 2, s: 8, v: 16, calls: 0 }).unwrap();
+        let requests = vec![(vec![5i32], 6usize), (vec![9], 4), (vec![1, 2], 1)];
+        let (mut plain, psnap) =
+            serve_blocking_step(mk(), requests.clone(), 2, AdmissionPolicy::Fifo).unwrap();
+        let spec_engine = crate::coordinator::SpeculativeEngine::new(mk(), mk(), 3).unwrap();
+        let (mut spec, ssnap) =
+            serve_blocking_step(spec_engine, requests, 2, AdmissionPolicy::Fifo).unwrap();
+        plain.sort_by_key(|r| r.id);
+        spec.sort_by_key(|r| r.id);
+        let p: Vec<_> = plain.into_iter().map(|r| r.tokens).collect();
+        let s: Vec<_> = spec.into_iter().map(|r| r.tokens).collect();
+        assert_eq!(p, s, "speculation changed a served stream");
+        assert_eq!(psnap.drafted_tokens, 0, "plain decode never drafts");
+        assert!(ssnap.drafted_tokens > 0, "speculative phase never ran");
+        assert_eq!(ssnap.accepted_tokens, ssnap.drafted_tokens, "oracle-grade draft");
+        assert_eq!(ssnap.decode_tokens, psnap.decode_tokens, "same token accounting");
+        assert!(
+            ssnap.decode_steps < psnap.decode_steps,
+            "speculation must cut decode iterations ({} vs {})",
+            ssnap.decode_steps,
+            psnap.decode_steps
+        );
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Speculative decoding on top of [`StepEngine`]: draft cheap, verify in
+//! bulk, emit only target-greedy tokens.
+//!
+//! # Why speculation, and why it is exact here
+//!
+//! The incremental subsystem (PR 2) made one decode step cost one row
+//! through the LUT stack — but the serving loop still pays one engine
+//! iteration (scheduler pass, embed/GEMM dispatch, per-call allocation)
+//! *per generated token*. Speculative decoding converts that sequential
+//! overhead into batched work: a cheap **draft** engine proposes `k`
+//! continuations, and the **target** engine scores the whole proposal in
+//! one batched window pass ([`StepEngine::decode_speculative`] — on
+//! [`CachedLutEngine`] a single hidden-stack GEMM plus a single
+//! projection GEMM over all `k + 1` rows, the same shape of bulk scoring
+//! as `CachedLutEngine::window_logits`).
+//!
+//! # Greedy-acceptance exactness argument
+//!
+//! The emitted stream is **bit-identical** to the target engine decoding
+//! alone, mirroring the PR 2 exactness docs in `incremental.rs`:
+//!
+//! 1. **Only target logits are ever sampled.** A verify pass scores rows
+//!    for `[pending, d1 .. dk]` through the *target* stack and emits
+//!    `argmax` of those target rows — draft logits never reach a sampled
+//!    token. (`v1 = argmax f(pending)`, `v2 = argmax f(d1)`, …)
+//! 2. **A draft token is kept only when it equals the target's greedy
+//!    choice** (`di == vi`). Under greedy sampling the target would have
+//!    produced exactly `vi` at that position, so the context for every
+//!    later accepted row is the context plain decode would have built.
+//!    The first divergence emits the target's correction `v(m+1)` and
+//!    discards everything behind it; a fully accepted draft emits the
+//!    free bonus token `v(k+1)`.
+//! 3. **Row independence makes bulk scoring safe.** The host LUT stack
+//!    is position-wise (see `incremental.rs`): each logits row depends
+//!    only on its own token, so scoring the `k + 1` rows together — some
+//!    of which will be rejected — changes no bits in the accepted rows.
+//! 4. **Rejections roll state back.** The target retracts the cached
+//!    rows of rejected tokens ([`crate::lut::SlotCache::truncate`] with
+//!    poison-zero semantics); [`SpeculativeEngine`] retracts the draft
+//!    engine's in-flight rows the same way. Draft-side state can only
+//!    influence *future proposals* (the acceptance rate), never an
+//!    emitted token, so even a lossy draft rollback (a window that slid
+//!    during the pass) preserves exactness.
+//!
+//! Hence for any draft engine — narrow model, stale model, or the
+//! [`GreedyTableDraft`] oracle — the served token streams equal plain
+//! [`CachedLutEngine`] decode, the property `rust/tests/
+//! speculative_decode.rs` pins down across `draft_k`, admission policies
+//! and GEMM thread counts. The draft quality moves only the
+//! accepted-token rate (and therefore throughput).
+
+use super::batcher::window_clip;
+use super::engines::{HostLutModel, HostLutSpec};
+use super::incremental::StepEngine;
+use crate::util::argmax;
+use anyhow::Result;
+
+/// Draft-then-verify wrapper: any target [`StepEngine`] plus any cheap
+/// draft [`StepEngine`]. Implements [`StepEngine`] itself, so the
+/// serving stack (workers, batcher, benches) is reused unchanged; the
+/// server's decode phase sees `speculation() > 0` and routes through
+/// [`StepEngine::draft`] + [`StepEngine::decode_speculative`].
+pub struct SpeculativeEngine<T: StepEngine, D: StepEngine> {
+    target: T,
+    draft: D,
+    draft_k: usize,
+    /// Rows the draft engine fed during the most recent `draft()` call,
+    /// per slot — how much draft state a rejection must retract.
+    inflight: Vec<usize>,
+    name: String,
+}
+
+impl<T: StepEngine, D: StepEngine> SpeculativeEngine<T, D> {
+    pub fn new(target: T, draft: D, draft_k: usize) -> Result<SpeculativeEngine<T, D>> {
+        anyhow::ensure!(draft_k >= 1, "speculative decoding needs draft_k >= 1");
+        anyhow::ensure!(
+            draft_k < target.seq(),
+            "draft_k {draft_k} must be < target seq {} (one verify pass must fit the window)",
+            target.seq()
+        );
+        anyhow::ensure!(
+            draft.vocab() == target.vocab(),
+            "draft vocab {} != target vocab {}",
+            draft.vocab(),
+            target.vocab()
+        );
+        anyhow::ensure!(
+            draft.slots() >= target.slots(),
+            "draft engine has {} slots, target serves {}",
+            draft.slots(),
+            target.slots()
+        );
+        let name = format!("spec-k{draft_k}[{}+{}]", target.name(), draft.name());
+        let inflight = vec![0; target.slots()];
+        Ok(SpeculativeEngine { target, draft, draft_k, inflight, name })
+    }
+
+    /// The verifying engine.
+    pub fn target(&self) -> &T {
+        &self.target
+    }
+
+    /// The proposing engine.
+    pub fn draft_engine(&self) -> &D {
+        &self.draft
+    }
+
+    pub fn draft_k(&self) -> usize {
+        self.draft_k
+    }
+}
+
+impl<T: StepEngine, D: StepEngine> StepEngine for SpeculativeEngine<T, D> {
+    fn slots(&self) -> usize {
+        self.target.slots()
+    }
+    fn seq(&self) -> usize {
+        self.target.seq()
+    }
+    fn vocab(&self) -> usize {
+        self.target.vocab()
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        let jobs = [(slot, tokens.to_vec())];
+        Ok(self.prefill_many(&jobs)?.pop().expect("one prefill job yields one row"))
+    }
+
+    /// Prefill both engines with the same prompts; the returned logits
+    /// (and thus the sampled first token) come from the target.
+    fn prefill_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
+        for &(slot, _) in jobs {
+            anyhow::ensure!(slot < self.inflight.len(), "slot {slot} out of range");
+            self.inflight[slot] = 0;
+        }
+        let _ = self.draft.prefill_many(jobs)?;
+        self.target.prefill_many(jobs)
+    }
+
+    fn decode_step(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
+        let _ = self.draft.decode_step(slot, token)?;
+        self.target.decode_step(slot, token)
+    }
+
+    /// Plain (non-speculative) decode keeps both engines fed so a later
+    /// speculative pass drafts from the right context.
+    fn decode_many(&mut self, jobs: &[(usize, i32)]) -> Result<Vec<Vec<f32>>> {
+        let _ = self.draft.decode_many(jobs)?;
+        self.target.decode_many(jobs)
+    }
+
+    fn free_slot(&mut self, slot: usize) {
+        if let Some(f) = self.inflight.get_mut(slot) {
+            *f = 0;
+        }
+        self.draft.free_slot(slot);
+        self.target.free_slot(slot);
+    }
+
+    fn speculation(&self) -> usize {
+        self.draft_k
+    }
+
+    /// Greedy draft chain: feed `pending` to the draft engine, then each
+    /// proposal back into it, `min(k, draft_k)` times.
+    fn draft(&mut self, slot: usize, pending: i32, k: usize) -> Result<Vec<i32>> {
+        anyhow::ensure!(slot < self.inflight.len(), "slot {slot} out of range");
+        let k = k.min(self.draft_k);
+        let mut proposals = Vec::with_capacity(k);
+        let mut feed = pending;
+        for _ in 0..k {
+            let row = self.draft.decode_step(slot, feed)?;
+            feed = argmax(&row) as i32;
+            proposals.push(feed);
+        }
+        // The draft engine fed `pending` plus all but the last proposal —
+        // k rows in flight until the verify pass confirms them.
+        self.inflight[slot] = k;
+        Ok(proposals)
+    }
+
+    /// Verify on the target (bulk pass when the target supports it), then
+    /// retract the draft engine's rejected in-flight rows.
+    fn decode_speculative(&mut self, slot: usize, pending: i32, draft: &[i32]) -> Result<Vec<i32>> {
+        anyhow::ensure!(slot < self.inflight.len(), "slot {slot} out of range");
+        let emitted = self.target.decode_speculative(slot, pending, draft)?;
+        anyhow::ensure!(!emitted.is_empty(), "verification must emit at least one token");
+        let fed = std::mem::take(&mut self.inflight[slot]);
+        if fed > 0 {
+            // Of the `fed` rows (`pending` + draft[..fed-1]) the draft
+            // engine holds, the first `1 + accepted` are confirmed.
+            let accepted = emitted.len() - 1;
+            let valid = (1 + accepted).min(fed);
+            self.draft.rollback(slot, fed - valid)?;
+        }
+        Ok(emitted)
+    }
+
+    /// Retract `n` tokens from both engines. The draft's fed stream is a
+    /// subsequence of the target's (a fully accepted pass never feeds
+    /// the final draft token to the draft engine), so draft-side
+    /// retraction is best-effort — harmless, because draft state only
+    /// ever moves the acceptance rate, never an emitted token.
+    fn rollback(&mut self, slot: usize, n: usize) -> Result<()> {
+        // Best-effort on the draft (its shorter stream may not cover n);
+        // exact on the target, whose state decides every emitted token.
+        let _ = self.draft.rollback(slot, n);
+        self.target.rollback(slot, n)
+    }
+}
+
+/// Oracle draft for position-wise models: a precomputed `vocab`-sized
+/// next-token table. Because host LUT logits at a position depend only on
+/// that position's token, the target's entire greedy behaviour is the
+/// function `next = table[token]` — so this draft proposes *exactly* the
+/// target's own stream (acceptance rate 1.0) at a per-token cost of one
+/// table lookup. It is the upper bound of what speculation can deliver
+/// and the acceptance-rate ≈ 1 reference the CI perf gate runs against.
+pub struct GreedyTableDraft {
+    table: Vec<i32>,
+    slots: usize,
+    seq: usize,
+    name: String,
+}
+
+impl GreedyTableDraft {
+    /// Wrap an explicit next-token table (`table[t]` = greedy successor
+    /// of token `t`; length = vocab).
+    pub fn new(table: Vec<i32>, slots: usize, seq: usize) -> Result<GreedyTableDraft> {
+        anyhow::ensure!(!table.is_empty(), "next-token table must be non-empty");
+        anyhow::ensure!(seq >= 2, "seq must be >= 2 (got {seq})");
+        let vocab = table.len();
+        for (t, &n) in table.iter().enumerate() {
+            anyhow::ensure!(
+                n >= 0 && (n as usize) < vocab,
+                "table[{t}] = {n} outside vocab {vocab}"
+            );
+        }
+        Ok(GreedyTableDraft { table, slots, seq, name: format!("oracle-v{vocab}") })
+    }
+
+    /// Precompute the greedy table of the host model `spec` describes:
+    /// one `vocab`-row forward scores every token id at once.
+    pub fn oracle_for(spec: &HostLutSpec) -> Result<GreedyTableDraft> {
+        let model = HostLutModel::build(spec.clone())?;
+        let mut scratch = crate::lut::SimdScratch::default();
+        let tokens: Vec<i32> = (0..spec.vocab as i32).collect();
+        let logits = model.forward_rows(&tokens, &mut scratch);
+        let table = logits.chunks(spec.vocab).map(|row| argmax(row) as i32).collect();
+        GreedyTableDraft::new(table, spec.batch, spec.seq)
+    }
+
+    /// One-hot logits row voting for `table[token]`.
+    fn row(&self, token: i32) -> Vec<f32> {
+        let vocab = self.table.len();
+        let t = (token.max(0) as usize) % vocab;
+        let mut row = vec![0.0f32; vocab];
+        row[self.table[t] as usize] = 1.0;
+        row
+    }
+}
+
+impl StepEngine for GreedyTableDraft {
+    fn slots(&self) -> usize {
+        self.slots
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn vocab(&self) -> usize {
+        self.table.len()
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(slot < self.slots, "slot {slot} out of range ({} slots)", self.slots);
+        let clipped = window_clip(tokens, self.seq);
+        let last = clipped.last().copied();
+        let last = last.ok_or_else(|| anyhow::anyhow!("prefill needs a non-empty prompt"))?;
+        Ok(self.row(last))
+    }
+
+    fn decode_step(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
+        anyhow::ensure!(slot < self.slots, "slot {slot} out of range ({} slots)", self.slots);
+        Ok(self.row(token))
+    }
+
+    /// Stateless: nothing to clear.
+    fn free_slot(&mut self, _slot: usize) {}
+
+    /// Stateless: any retraction is trivially exact.
+    fn rollback(&mut self, _slot: usize, _n: usize) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CachedLutEngine;
+
+    fn spec(threads: usize) -> HostLutSpec {
+        HostLutSpec {
+            batch: 3,
+            seq: 8,
+            vocab: 20,
+            hidden: 24,
+            depth: 2,
+            centroids: 6,
+            seed: 11,
+            gemm_threads: threads,
+            gemm_shard_rows: 0,
+        }
+    }
+
+    fn narrow_spec(threads: usize) -> HostLutSpec {
+        HostLutSpec { hidden: 12, depth: 1, seed: 11 ^ 0xd4af, ..spec(threads) }
+    }
+
+    #[test]
+    fn constructor_validates_shapes() {
+        let t = || CachedLutEngine::build(spec(1)).unwrap();
+        let d = || CachedLutEngine::build(narrow_spec(1)).unwrap();
+        assert!(SpeculativeEngine::new(t(), d(), 0).is_err(), "draft_k 0");
+        assert!(SpeculativeEngine::new(t(), d(), 8).is_err(), "draft_k == seq");
+        assert!(SpeculativeEngine::new(t(), d(), 4).is_ok());
+        let mut bad_vocab = narrow_spec(1);
+        bad_vocab.vocab = 21;
+        let dv = CachedLutEngine::build(bad_vocab).unwrap();
+        assert!(SpeculativeEngine::new(t(), dv, 4).is_err(), "vocab mismatch");
+        let mut few_slots = narrow_spec(1);
+        few_slots.batch = 2;
+        let ds = CachedLutEngine::build(few_slots).unwrap();
+        assert!(SpeculativeEngine::new(t(), ds, 4).is_err(), "too few draft slots");
+    }
+
+    #[test]
+    fn oracle_draft_proposes_the_target_stream() {
+        let oracle = GreedyTableDraft::oracle_for(&spec(1)).unwrap();
+        let target = CachedLutEngine::build(spec(1)).unwrap();
+        let mut eng = SpeculativeEngine::new(target, oracle, 4).unwrap();
+        let row = eng.prefill(0, &[5, 9]).unwrap();
+        let mut pending = argmax(&row) as i32;
+        for _ in 0..6 {
+            let draft = eng.draft(0, pending, 4).unwrap();
+            assert_eq!(draft.len(), 4);
+            let emitted = eng.decode_speculative(0, pending, &draft).unwrap();
+            // Oracle drafts are always fully accepted: k + 1 emissions.
+            assert_eq!(emitted.len(), 5);
+            assert_eq!(&emitted[..4], &draft[..], "accepted tokens echo the draft");
+            pending = *emitted.last().unwrap();
+        }
+    }
+
+    #[test]
+    fn speculative_stream_matches_plain_target_with_narrow_draft() {
+        // Same target weights, cheap independent draft: every emitted
+        // token must still equal the plain target's greedy stream.
+        let mut plain = CachedLutEngine::build(spec(1)).unwrap();
+        let target = CachedLutEngine::build(spec(1)).unwrap();
+        let draft = CachedLutEngine::build(narrow_spec(1)).unwrap();
+        let mut eng = SpeculativeEngine::new(target, draft, 3).unwrap();
+        let prompt = [2i32, 13, 4];
+        let rp = plain.prefill(1, &prompt).unwrap();
+        let rs = eng.prefill(1, &prompt).unwrap();
+        assert_eq!(rp, rs, "prefill logits come from the target");
+        let mut pending = argmax(&rp) as i32;
+        let mut spec_stream = Vec::new();
+        let mut rejected_any = false;
+        while spec_stream.len() < 24 {
+            let draft = eng.draft(1, pending, 3).unwrap();
+            let emitted = eng.decode_speculative(1, pending, &draft).unwrap();
+            rejected_any |= emitted.len() < draft.len() + 1;
+            pending = *emitted.last().unwrap();
+            spec_stream.extend(emitted);
+        }
+        let mut plain_stream = Vec::new();
+        let mut tok = argmax(&rp) as i32;
+        for _ in 0..spec_stream.len() {
+            let row = plain.decode_step(1, tok).unwrap();
+            tok = argmax(&row) as i32;
+            plain_stream.push(tok);
+        }
+        assert_eq!(spec_stream, plain_stream, "speculation changed the emitted stream");
+        assert!(rejected_any, "narrow draft never rejected — rollback path unexercised");
+    }
+
+    #[test]
+    fn greedy_table_draft_validates_and_scores() {
+        assert!(GreedyTableDraft::new(vec![], 2, 8).is_err());
+        assert!(GreedyTableDraft::new(vec![3], 2, 8).is_err(), "successor outside vocab");
+        let mut d = GreedyTableDraft::new(vec![1, 2, 0], 2, 8).unwrap();
+        assert_eq!(d.vocab(), 3);
+        let row = d.decode_step(0, 1).unwrap();
+        assert_eq!(argmax(&row), 2);
+        let row = d.prefill(1, &[0, 2]).unwrap();
+        assert_eq!(argmax(&row), 0, "prefill scores the last prompt token");
+        assert!(d.prefill(1, &[]).is_err());
+        assert!(d.rollback(0, 17).is_ok(), "stateless rollback always succeeds");
+        d.free_slot(0);
+    }
+}

@@ -13,6 +13,9 @@
 //!   window slide (evicting the oldest position once `len == window`) is
 //!   an O(1) index rotation — never an O(window × width) memmove. The
 //!   per-step cache cost is therefore independent of the model `seq`.
+//! * **Speculative rollback.** [`SlotCache::truncate`] retracts the
+//!   newest rows of a slot (rejected draft tokens) and zeroes their
+//!   storage — same poison discipline as `clear`, scoped to a suffix.
 //! * **Clear-on-free contract.** [`SlotCache::clear`] zeroes the slot's
 //!   storage and resets its ring. A freed slot is indistinguishable from
 //!   a never-used one; stale activations from a previous request can
@@ -146,6 +149,33 @@ impl SlotCache {
         }
     }
 
+    /// Speculative rollback: drop the **newest** rows of `slot` until only
+    /// `len` remain, zeroing the dropped physical rows (poison semantics —
+    /// a rejected draft row can never be observed again, by `gather`, by a
+    /// later `row()` or by raw-storage inspection). A no-op when `len`
+    /// already covers the slot.
+    ///
+    /// Exactness contract: when the pushes being retracted did **not**
+    /// overflow the window (no ring slide evicted an older row while they
+    /// were appended), `truncate` restores the slot to a state
+    /// bit-identical to never having pushed them — the property
+    /// `rust/tests/speculative_decode.rs` pins down. If a slide *did*
+    /// happen, the evicted oldest rows are unrecoverable and the slot
+    /// simply holds a shorter (still correct, newest-first-contiguous)
+    /// suffix of the fed window; incremental decode logits are unaffected
+    /// because they never read the cache.
+    pub fn truncate(&mut self, slot: usize, len: usize) {
+        let cur = self.len[slot];
+        if len >= cur {
+            return;
+        }
+        for pos in len..cur {
+            let r = self.phys(slot, pos) * self.width;
+            self.data[r..r + self.width].fill(0.0);
+        }
+        self.len[slot] = len;
+    }
+
     /// Clear-on-free: zero `slot`'s storage and reset its ring so a
     /// reused slot starts from a state identical to a fresh cache.
     pub fn clear(&mut self, slot: usize) {
@@ -246,6 +276,50 @@ mod tests {
         c.push(0, &[7.0, 8.0]);
         assert_eq!(c.row(0, 0), &[7.0, 8.0]);
         assert_eq!(c.len(0), 1);
+    }
+
+    #[test]
+    fn truncate_drops_newest_rows_and_poisons_them() {
+        let mut c = SlotCache::new(1, 4, 2);
+        c.extend(0, &[1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        c.truncate(0, 1);
+        assert_eq!(c.len(0), 1);
+        assert_eq!(c.row(0, 0), &[1.0, 1.0]);
+        // Dropped physical rows are zeroed, not merely hidden: only the
+        // surviving row may hold non-zero storage.
+        let nonzero = c.raw_slot_mut(0).iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nonzero, 2, "exactly one surviving 2-wide row");
+        // Reuse after truncate behaves like plain pushes.
+        c.push(0, &[9.0, 9.0]);
+        assert_eq!(c.len(0), 2);
+        assert_eq!(c.row(0, 1), &[9.0, 9.0]);
+        // Truncating to the current (or a larger) length is a no-op.
+        c.truncate(0, 2);
+        c.truncate(0, 10);
+        assert_eq!(c.len(0), 2);
+        assert_eq!(c.row(0, 0), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn truncate_after_slide_keeps_correct_suffix() {
+        // Window 3; push 5 rows (two slides), then retract the newest 2.
+        // The evicted oldest rows are gone; what remains must be the
+        // correct contiguous rows 2..3 of the fed stream.
+        let mut c = SlotCache::new(1, 3, 1);
+        for t in 0..5 {
+            c.push(0, &[t as f32]);
+        }
+        assert_eq!(c.len(0), 3); // rows [2, 3, 4]
+        c.truncate(0, 1);
+        assert_eq!(c.len(0), 1);
+        assert_eq!(c.row(0, 0), &[2.0]);
+        // Subsequent pushes continue the ring cleanly.
+        c.push(0, &[7.0]);
+        c.push(0, &[8.0]);
+        c.push(0, &[9.0]);
+        assert_eq!(c.len(0), 3);
+        assert_eq!(c.row(0, 0), &[7.0]);
+        assert_eq!(c.row(0, 2), &[9.0]);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! lcd train     --model gpt [--steps N]        train a model, save checkpoint
 //! lcd compress  --model gpt [--min-k K]        LCD-compress, print per-layer report
 //! lcd eval      --model gpt                    FP vs LCD perplexity / accuracy
-//! lcd serve     --model gpt [--engine lut|fp|host|cached]  run the batched generation server
+//! lcd serve     --model gpt [--engine lut|fp|host|cached|speculative]  run the generation server
 //! lcd repro     --exp table1|...|all           regenerate a paper table/figure
 //! ```
 //!
@@ -64,6 +64,8 @@ fn parse_args() -> Result<Args> {
             "--workers" => sets.push(format!("serve.workers={}", take(&mut i)?)),
             "--gemm-threads" => sets.push(format!("gemm_threads={}", take(&mut i)?)),
             "--admission" => sets.push(format!("serve.admission={}", take(&mut i)?)),
+            "--draft-k" => sets.push(format!("serve.draft_k={}", take(&mut i)?)),
+            "--draft" => sets.push(format!("serve.draft={}", take(&mut i)?)),
             "--help" | "-h" => bail!("{}", HELP),
             other => bail!("unknown flag '{other}'\n{}", HELP),
         }
@@ -85,12 +87,17 @@ commands:
   repro      regenerate a paper experiment (--exp table1|table2|table3|fig2|fig6|fig7|fig8|all)
 flags:
   --config <file>  --set k=v  --model gpt|llama|bert  --steps N  --min-k K
-  --act-bits 8|4   --seed N   --artifacts <dir>  --engine lut|fp|host|cached
+  --act-bits 8|4   --seed N   --artifacts <dir>
+  --engine lut|fp|host|cached|speculative
   --requests N     --workers N (serve worker threads)
   --admission fifo|spf|token_budget (serve admission policy)
+  --draft-k N      --draft narrow|oracle (speculative draft engine)
   --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)
 (cached = incremental decode: per-slot activation cache, per-step cost
-independent of seq, bit-identical logits to the full host engine)";
+independent of seq, bit-identical logits to the full host engine;
+speculative = cached + draft-and-verify: a cheap draft proposes draft_k
+tokens, the target bulk-verifies them in one window pass — greedy
+acceptance keeps the emitted stream bit-identical to cached decode)";
 
 fn main() -> Result<()> {
     let args = parse_args()?;
@@ -188,7 +195,8 @@ fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize) -> Result<()
     // Artifact engines train-or-load a checkpoint inside build_engine;
     // materialize it once up front so N workers load instead of racing
     // N concurrent trainings onto the same checkpoint file.
-    if engine_kind != "host" && engine_kind != "cached" && cfg.serve.workers > 1 {
+    let artifact_free = matches!(engine_kind, "host" | "cached" | "speculative");
+    if !artifact_free && cfg.serve.workers > 1 {
         let rt = open_runtime(cfg)?;
         let _ = train_or_load(&rt, cfg)?;
     }

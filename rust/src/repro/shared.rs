@@ -327,13 +327,21 @@ pub fn build_engine(cfg: &LcdConfig, kind: &str) -> Result<Box<dyn Engine>> {
 /// Build an incremental serving engine for the prefill/decode server
 /// loop: `kind` = "cached" (the [`crate::coordinator::CachedLutEngine`]
 /// incremental decode subsystem — per-slot activation cache, per-step
-/// cost independent of `seq`) or any [`build_engine`] kind adapted
-/// through [`crate::coordinator::FullRecomputeStep`].
+/// cost independent of `seq`), "speculative" (the cached engine wrapped
+/// in [`crate::coordinator::SpeculativeEngine`] draft-and-verify) or any
+/// [`build_engine`] kind adapted through
+/// [`crate::coordinator::FullRecomputeStep`]. Setting
+/// `serve.speculative = true` applies the same speculative wrap to any
+/// kind — emitted streams are bit-identical either way.
 pub fn build_step_engine(
     cfg: &LcdConfig,
     kind: &str,
 ) -> Result<Box<dyn crate::coordinator::StepEngine>> {
-    if kind == "cached" {
+    let (kind, speculate) = match kind {
+        "speculative" => ("cached", true),
+        k => (k, cfg.serve.speculative),
+    };
+    let inner: Box<dyn crate::coordinator::StepEngine> = if kind == "cached" {
         let spec = crate::coordinator::HostLutSpec::from_cfg(cfg);
         let engine = crate::coordinator::CachedLutEngine::build(spec)?;
         eprintln!(
@@ -342,10 +350,41 @@ pub fn build_step_engine(
             engine.weight_bytes() / 1024,
             engine.cache_bytes() / 1024
         );
-        return Ok(Box::new(engine));
+        Box::new(engine)
+    } else {
+        Box::new(crate::coordinator::FullRecomputeStep::new(build_engine(cfg, kind)?)?)
+    };
+    if !speculate {
+        return Ok(inner);
     }
-    let full = build_engine(cfg, kind)?;
-    Ok(Box::new(crate::coordinator::FullRecomputeStep::new(full)?))
+    let draft = build_draft_engine(cfg)?;
+    let engine = crate::coordinator::SpeculativeEngine::new(inner, draft, cfg.serve.draft_k)?;
+    eprintln!(
+        "[engine] speculative: {} (draft_k {}, draft '{}')",
+        crate::coordinator::StepEngine::name(&engine),
+        cfg.serve.draft_k,
+        cfg.serve.draft
+    );
+    Ok(Box::new(engine))
+}
+
+/// The draft side of a speculative engine pair: `serve.draft` selects a
+/// narrow host LUT model (`serve.draft_{hidden,depth}`) or the greedy
+/// oracle table of the target spec (acceptance rate 1 — the speculation
+/// upper bound used by benches and the CI perf gate).
+fn build_draft_engine(cfg: &LcdConfig) -> Result<Box<dyn crate::coordinator::StepEngine>> {
+    let draft: Box<dyn crate::coordinator::StepEngine> = match cfg.serve.draft.as_str() {
+        "narrow" => {
+            let spec = crate::coordinator::HostLutSpec::draft_from_cfg(cfg);
+            Box::new(crate::coordinator::CachedLutEngine::build(spec)?)
+        }
+        "oracle" => {
+            let spec = crate::coordinator::HostLutSpec::from_cfg(cfg);
+            Box::new(crate::coordinator::GreedyTableDraft::oracle_for(&spec)?)
+        }
+        other => anyhow::bail!("unknown serve.draft '{other}' (narrow|oracle)"),
+    };
+    Ok(draft)
 }
 
 /// The LUT artifact's parameter prefix (non-linear params + per-linear
