@@ -19,15 +19,25 @@
 //! admission policy from `serve.admission`; draft shape from
 //! `serve.draft_{hidden,depth}`.
 //!
+//! Multi-turn mode (`--turns N > 1`): every request becomes a resumable
+//! session of N turns driven through the session store. `--resume-rate R`
+//! is the fraction of post-first turns submitted WITH resume info (the
+//! rest simulate clients that lost session affinity and cold-prefill the
+//! whole history). With one worker and R = 1 the run prints a machine-
+//! checkable `PERF_GATE session_warm_resume` line: every resumed turn
+//! must hit its retained slot cache (hit rate 1.0) and warm resumes must
+//! add zero prefill tokens.
+//!
 //! Run: `cargo run --release --example serve_bench -- \
 //!       [requests] [gen_tokens] [--engine host|cached|speculative|fp|lut] \
-//!       [--admission fifo|spf|token_budget] [--draft-k N] [--draft narrow|oracle]`
+//!       [--admission fifo|spf|token_budget] [--draft-k N] [--draft narrow|oracle] \
+//!       [--turns N] [--resume-rate R] [--retained-slots N] [--workers N]`
 //! Without `--engine`, sweeps host and cached across worker counts, then
 //! the speculative engine across draft kinds.
 
 use lcd::config::LcdConfig;
 use lcd::coordinator::server;
-use lcd::coordinator::{CachedLutEngine, HostLutSpec};
+use lcd::coordinator::{CachedLutEngine, HostLutSpec, SessionStore};
 use lcd::data::{eval_lm_batches, CharTokenizer, CorpusSpec, SyntheticCorpus};
 use lcd::repro::shared::build_step_engine;
 use lcd::util::Rng;
@@ -86,10 +96,116 @@ fn drive(
     Ok(ok)
 }
 
+/// Multi-turn session workload: `n_sessions` conversations of `turns`
+/// turns each, submitted round-robin (turn t of every session, then turn
+/// t+1 — sequential per session, batched across sessions). Turns after
+/// the first carry resume info with probability `resume_rate`; the rest
+/// simulate affinity loss and cold-prefill the full history.
+fn drive_sessions(
+    cfg: &LcdConfig,
+    engine: &str,
+    workers: usize,
+    n_sessions: usize,
+    turns: usize,
+    gen_tokens: usize,
+    resume_rate: f64,
+) -> anyhow::Result<()> {
+    let policy = cfg.serve.admission_policy().expect("admission policy validated on load");
+    let cfg2 = cfg.clone();
+    let engine_name = engine.to_string();
+    let handle = server::start_pool_session(
+        workers,
+        cfg.serve.max_batch,
+        cfg.serve.queue_cap,
+        policy,
+        cfg.serve.session_options(),
+        move |_worker| build_step_engine(&cfg2, &engine_name),
+    );
+
+    let tok = CharTokenizer::new();
+    let prompts =
+        ["the cat ", "a bird moves ", "two plus three is ", "the river is ", "every lamp "];
+    let follows = ["and then ", "tell me more ", "why is that ", "so the "];
+    let mut store = SessionStore::new();
+    let mut rng = Rng::new(4242);
+    let ids: Vec<_> = (0..n_sessions).map(|_| store.open()).collect();
+    // Exact prefill accounting: fresh submissions (turn 0 + dropped
+    // resumes) cost their window-clipped prompt (THE clip rule from the
+    // batcher, max(1) for the empty-prompt BOS pad); warm resumes cost
+    // none.
+    let clip =
+        |prompt: &[i32]| lcd::coordinator::window_clip(prompt, cfg.serve.seq).len().max(1) as u64;
+    let mut expected_prefill = 0u64;
+    let mut resumed_submitted = 0u64;
+    for t in 0..turns {
+        let mut rxs = Vec::new();
+        for (s, &id) in ids.iter().enumerate() {
+            let user = if t == 0 {
+                tok.encode(prompts[s % prompts.len()])
+            } else {
+                tok.encode(follows[(s + t) % follows.len()])
+            };
+            let mut turn = store.turn(id, &user)?;
+            if turn.resume.is_some() && rng.uniform() >= resume_rate {
+                turn.resume = None; // simulated session-affinity loss
+            }
+            if turn.resume.is_some() {
+                resumed_submitted += 1;
+            } else {
+                expected_prefill += clip(&turn.prompt);
+            }
+            rxs.push((id, handle.submit_turn(turn, gen_tokens)));
+        }
+        for (id, rx) in rxs {
+            let resp = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("session turn {t} dropped (worker died?)"))?;
+            store.record(id, &resp.tokens)?;
+        }
+    }
+    let report = handle.shutdown_report();
+    if report.per_worker.len() > 1 {
+        for (w, snap) in report.per_worker.iter().enumerate() {
+            println!("    worker {w}: {}", snap.report());
+        }
+    }
+    let agg = &report.aggregate;
+    println!(
+        "engine {engine:<6} x{workers} worker(s), {n_sessions} sessions x {turns} turns: {}",
+        agg.report()
+    );
+    // Machine-checkable warm-resume gate (single worker + full resume
+    // rate make it deterministic): every resumed turn hits its retained
+    // slot and adds zero prefill tokens.
+    if workers == 1 && resume_rate >= 1.0 && turns > 1 {
+        let ok = agg.cache_misses == 0
+            && agg.cache_hits == resumed_submitted
+            && agg.prefill_tokens == expected_prefill;
+        println!(
+            "PERF_GATE session_warm_resume hits {}/{resumed_submitted} misses {} \
+             prefill {} expected {} {}",
+            agg.cache_hits,
+            agg.cache_misses,
+            agg.prefill_tokens,
+            expected_prefill,
+            if ok { "PASS" } else { "FAIL" }
+        );
+    }
+    anyhow::ensure!(
+        agg.completed as usize == n_sessions * turns,
+        "sessions incomplete: {}/{}",
+        agg.completed,
+        n_sessions * turns
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut cfg = LcdConfig::default();
     let mut positional: Vec<usize> = Vec::new();
     let mut engine: Option<String> = None;
+    let mut turns = 1usize;
+    let mut resume_rate = 1.0f64;
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
     while i < argv.len() {
@@ -99,6 +215,36 @@ fn main() -> anyhow::Result<()> {
                 engine = Some(argv.get(i).cloned().ok_or_else(|| {
                     anyhow::anyhow!("--engine needs a value (host|cached|fp|lut)")
                 })?);
+            }
+            "--turns" => {
+                i += 1;
+                turns = argv
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--turns needs a value"))?
+                    .parse()?;
+            }
+            "--resume-rate" => {
+                i += 1;
+                resume_rate = argv
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--resume-rate needs a value in [0, 1]"))?
+                    .parse()?;
+            }
+            "--retained-slots" => {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("--retained-slots needs a value"))?;
+                cfg.set_override(&format!("serve.retained_slots={v}"))?;
+            }
+            "--workers" => {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("--workers needs a value"))?;
+                cfg.set_override(&format!("serve.workers={v}"))?;
             }
             "--admission" => {
                 i += 1;
@@ -126,7 +272,8 @@ fn main() -> anyhow::Result<()> {
                 anyhow::bail!(
                     "unknown flag '{other}'\nusage: serve_bench [requests] [gen_tokens] \
                      [--engine host|cached|speculative|fp|lut] \
-                     [--admission fifo|spf|token_budget] [--draft-k N] [--draft narrow|oracle]"
+                     [--admission fifo|spf|token_budget] [--draft-k N] [--draft narrow|oracle] \
+                     [--turns N] [--resume-rate R] [--retained-slots N] [--workers N]"
                 );
             }
             other => positional.push(other.parse()?),
@@ -160,6 +307,22 @@ fn main() -> anyhow::Result<()> {
         cfg.serve.admission
     );
     drop(probe);
+
+    // Multi-turn session workload (the CI warm-resume smoke path runs
+    // `--engine cached --turns 3`): positional [requests] counts
+    // sessions, each serving `turns` turns.
+    if turns > 1 {
+        let kind = engine.as_deref().unwrap_or("cached");
+        return drive_sessions(
+            &cfg,
+            kind,
+            cfg.serve.workers,
+            n_requests,
+            turns,
+            gen_tokens,
+            resume_rate,
+        );
+    }
 
     match engine.as_deref() {
         // Explicit engine: one run at the configured worker count (the

@@ -98,6 +98,7 @@ fn main() {
                 gen_tokens: 4,
                 reply: tx.clone(),
                 t_submit: Instant::now(),
+                session: None,
             });
             debug_assert!(ok);
         }
@@ -130,6 +131,7 @@ fn main() {
                     gen_tokens: 1,
                     reply: tx.clone(),
                     t_submit: Instant::now(),
+                    session: None,
                 });
             }
             let mut admitted = 0usize;
@@ -281,6 +283,33 @@ fn main() {
         );
     }
 
+    // Session warm-resume vs cold re-prefill: a 5-token follow-up turn
+    // (pending + 4 user tokens) on a conversation whose history fills
+    // the window. Warm resume feeds 5 rows through the stack regardless
+    // of seq; the cold fallback re-prefills the whole clipped history —
+    // the cost the session subsystem's slot leases delete.
+    println!("== serving: warm vs cold session resume (5-token turn) ==");
+    for seq in [64usize, 256, 1024] {
+        let history: Vec<i32> = (0..seq - 1).map(|i| (i % 60) as i32).collect();
+        let feed = vec![7i32, 11, 13, 17, 19];
+        let mut warm = CachedLutEngine::build(scaling_spec(seq)).unwrap();
+        warm.prefill(0, &history).unwrap();
+        assert!(warm.retain_slot(0, 1), "cached engine must retain");
+        b.bench(&format!("resume_warm/seq{seq}"), || {
+            let rows = warm.resume_many(&[(0usize, feed.clone())]).unwrap();
+            rows[0][0] as f64
+        });
+
+        let mut cold = CachedLutEngine::build(scaling_spec(seq)).unwrap();
+        let mut full_history = history.clone();
+        full_history.extend_from_slice(&feed);
+        b.bench(&format!("resume_cold/seq{seq}"), || {
+            let row = cold.prefill(0, &full_history).unwrap();
+            row[0] as f64
+        });
+        b.speedup(&format!("resume_warm/seq{seq}"), &format!("resume_cold/seq{seq}"));
+    }
+
     // Machine-checkable perf gates (enforced by the CI smoke job).
     perf_gate(
         &b,
@@ -289,6 +318,10 @@ fn main() {
         "decode_step_cached/seq64",
         1.60,
     );
+    // Warm-resume cost must not scale with seq (it feeds only the turn's
+    // appended rows), and at seq 1024 it must beat cold re-prefill by 2x+.
+    perf_gate(&b, "warm_resume_flat_vs_seq", "resume_warm/seq1024", "resume_warm/seq64", 1.60);
+    perf_gate(&b, "warm_resume_skips_prefill", "resume_warm/seq1024", "resume_cold/seq1024", 0.50);
     perf_gate(
         &b,
         "speculative_not_slower_at_accept1",

@@ -85,6 +85,14 @@ pub struct ServeConfig {
     /// Hidden→hidden layers of the narrow draft model (0 = projection
     /// only).
     pub draft_depth: usize,
+    /// Finished turns of a resumable session may retain (lease) their
+    /// slot's activation window for warm resume: max retained slots per
+    /// worker (0 = retention off; must be <= max_batch, since every
+    /// lease holds a batch slot).
+    pub retained_slots: usize,
+    /// Retained-slot TTL in worker iterations (0 = leases never age out;
+    /// they still yield to admission pressure LRU-first).
+    pub retain_ttl_iters: u64,
 }
 
 impl Default for ServeConfig {
@@ -106,6 +114,8 @@ impl Default for ServeConfig {
             draft: "narrow".to_string(),
             draft_hidden: 32,
             draft_depth: 1,
+            retained_slots: 4,
+            retain_ttl_iters: 0,
         }
     }
 }
@@ -115,6 +125,14 @@ impl ServeConfig {
     /// the token-budget cap).
     pub fn admission_policy(&self) -> Result<crate::coordinator::AdmissionPolicy> {
         crate::coordinator::AdmissionPolicy::parse(&self.admission, self.max_prefill_tokens)
+    }
+
+    /// Session-retention knobs for `start_pool_session`.
+    pub fn session_options(&self) -> crate::coordinator::SessionOptions {
+        crate::coordinator::SessionOptions {
+            retained_slots: self.retained_slots,
+            retain_ttl_iters: self.retain_ttl_iters,
+        }
     }
 }
 
@@ -260,6 +278,12 @@ impl LcdConfig {
             if let Some(v) = s.get("draft_depth") {
                 cfg.serve.draft_depth = v.as_usize()?;
             }
+            if let Some(v) = s.get("retained_slots") {
+                cfg.serve.retained_slots = v.as_usize()?;
+            }
+            if let Some(v) = s.get("retain_ttl_iters") {
+                cfg.serve.retain_ttl_iters = v.as_f64()? as u64;
+            }
         }
         // Fail on bad serving knobs at load time, not at serve time.
         cfg.serve.admission_policy()?;
@@ -268,6 +292,20 @@ impl LcdConfig {
         // currently selected admission policy.
         if cfg.serve.max_prefill_tokens == 0 {
             bail!("serve.max_prefill_tokens must be >= 1");
+        }
+        // A zero-worker pool would silently clamp to 1 at start time;
+        // reject the contradiction at load time instead.
+        if cfg.serve.workers == 0 {
+            bail!("serve.workers must be >= 1");
+        }
+        // Every retained slot holds a batch slot, so a retention budget
+        // beyond the batch can never be honoured.
+        if cfg.serve.retained_slots > cfg.serve.max_batch {
+            bail!(
+                "serve.retained_slots {} must be <= serve.max_batch {} (a lease holds a batch slot)",
+                cfg.serve.retained_slots,
+                cfg.serve.max_batch
+            );
         }
         validate_draft_knobs(&cfg.serve)?;
         Ok(cfg)
@@ -320,7 +358,25 @@ impl LcdConfig {
             "serve.max_wait_us" => self.serve.max_wait_us = value.parse()?,
             "serve.gen_tokens" => self.serve.gen_tokens = value.parse()?,
             "serve.queue_cap" => self.serve.queue_cap = value.parse()?,
-            "serve.workers" => self.serve.workers = value.parse()?,
+            "serve.workers" => {
+                let v: usize = value.parse()?;
+                if v == 0 {
+                    bail!("serve.workers must be >= 1");
+                }
+                self.serve.workers = v;
+            }
+            "serve.retained_slots" => {
+                let v: usize = value.parse()?;
+                if v > self.serve.max_batch {
+                    bail!(
+                        "serve.retained_slots {v} must be <= serve.max_batch {} \
+                         (a lease holds a batch slot)",
+                        self.serve.max_batch
+                    );
+                }
+                self.serve.retained_slots = v;
+            }
+            "serve.retain_ttl_iters" => self.serve.retain_ttl_iters = value.parse()?,
             "serve.admission" => {
                 // Validate before assigning so a bad override leaves the
                 // config untouched.
@@ -518,6 +574,39 @@ mod tests {
         // speculation is actually on.
         assert!(bad(r#"{"serve": {"speculative": true, "draft_k": 8, "seq": 8}}"#));
         assert!(!bad(r#"{"serve": {"draft_k": 8, "seq": 8}}"#));
+    }
+
+    #[test]
+    fn session_knobs_parse_and_validate() {
+        let doc = Json::parse(
+            r#"{"serve": {"max_batch": 6, "retained_slots": 6, "retain_ttl_iters": 32}}"#,
+        )
+        .unwrap();
+        let cfg = LcdConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serve.retained_slots, 6);
+        assert_eq!(cfg.serve.retain_ttl_iters, 32);
+        let opts = cfg.serve.session_options();
+        assert_eq!((opts.retained_slots, opts.retain_ttl_iters), (6, 32));
+        // Defaults: retention on within the batch, no TTL.
+        let d = LcdConfig::default();
+        assert_eq!(d.serve.retained_slots, 4);
+        assert_eq!(d.serve.retain_ttl_iters, 0);
+        let bad = |s: &str| LcdConfig::from_json(&Json::parse(s).unwrap()).is_err();
+        // A lease budget beyond the batch can never be honoured.
+        assert!(bad(r#"{"serve": {"max_batch": 4, "retained_slots": 5}}"#));
+        // A zero-worker pool is a contradiction, not a clamp.
+        assert!(bad(r#"{"serve": {"workers": 0}}"#));
+        // Overrides mirror the load-time checks and leave the config
+        // untouched on failure.
+        let mut cfg = LcdConfig::default();
+        cfg.set_override("serve.retained_slots=8").unwrap();
+        assert_eq!(cfg.serve.retained_slots, 8);
+        assert!(cfg.set_override("serve.retained_slots=9").is_err());
+        assert_eq!(cfg.serve.retained_slots, 8);
+        assert!(cfg.set_override("serve.workers=0").is_err());
+        assert_eq!(cfg.serve.workers, 1);
+        cfg.set_override("serve.retain_ttl_iters=16").unwrap();
+        assert_eq!(cfg.serve.retain_ttl_iters, 16);
     }
 
     #[test]

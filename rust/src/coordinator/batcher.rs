@@ -153,6 +153,10 @@ pub struct Batcher {
     policy: AdmissionPolicy,
     queue: VecDeque<GenRequest>,
     slots: Vec<Option<Session>>,
+    /// Reserved (leased) slots: empty, but holding a retained activation
+    /// window for a resumable session — skipped by `fill_slots` until
+    /// `unreserve` (lease evicted) or `place` (session resumed).
+    reserved: Vec<bool>,
     rejected: u64,
 }
 
@@ -169,6 +173,7 @@ impl Batcher {
             policy,
             queue: VecDeque::new(),
             slots: (0..max_batch).map(|_| None).collect(),
+            reserved: vec![false; max_batch],
             rejected: 0,
         }
     }
@@ -221,7 +226,7 @@ impl Batcher {
         let mut admitted = Vec::new();
         let mut cost = 0usize;
         for slot_idx in 0..self.slots.len() {
-            if self.slots[slot_idx].is_some() {
+            if self.slots[slot_idx].is_some() || self.reserved[slot_idx] {
                 continue;
             }
             let Some(qidx) = self.pick_next(seq, cost, admitted.len()) else {
@@ -233,6 +238,37 @@ impl Batcher {
             admitted.push(slot_idx);
         }
         admitted
+    }
+
+    /// Mark an empty slot as reserved (a leased activation window):
+    /// `fill_slots` skips it until it is unreserved or a resumed session
+    /// is `place`d into it.
+    pub fn reserve(&mut self, slot: usize) {
+        debug_assert!(self.slots[slot].is_none(), "cannot reserve an occupied slot");
+        self.reserved[slot] = true;
+    }
+
+    /// Drop a slot reservation (its lease was evicted).
+    pub fn unreserve(&mut self, slot: usize) {
+        self.reserved[slot] = false;
+    }
+
+    /// Reserved (leased) slots unavailable to normal admission.
+    pub fn reserved(&self) -> usize {
+        self.reserved.iter().filter(|&&r| r).count()
+    }
+
+    /// Bind a resumed session directly to `slot` (the slot its retained
+    /// activation window lives in), clearing any reservation — the
+    /// warm-resume path around policy admission. Gives the request back
+    /// when the slot is occupied or out of range.
+    pub fn place(&mut self, slot: usize, req: GenRequest, seq: usize) -> Result<(), GenRequest> {
+        if slot >= self.slots.len() || self.slots[slot].is_some() {
+            return Err(req);
+        }
+        self.reserved[slot] = false;
+        self.slots[slot] = Some(Session::new(req, seq));
+        Ok(())
     }
 
     pub fn active(&self) -> usize {
@@ -293,6 +329,7 @@ mod tests {
                 gen_tokens: gen,
                 reply: tx,
                 t_submit: Instant::now(),
+                session: None,
             },
             rx,
         )
@@ -436,6 +473,63 @@ mod tests {
         assert_eq!(s.tokens, vec![0], "empty prompts are padded, not underflowed");
         assert_eq!(s.prompt_len, 1);
         assert_eq!(s.logit_pos(8), 0);
+    }
+
+    #[test]
+    fn shortest_prompt_first_tie_break_is_deterministic_fifo() {
+        // Equal-length prompts degenerate SPF to FIFO; the tie-break
+        // (min_by_key on (len, queue index)) must be stable across
+        // repeated runs — admission order is part of the serving
+        // determinism contract.
+        let first = admitted_ids(AdmissionPolicy::ShortestPromptFirst, &[4, 4, 4, 4], 4, 16);
+        assert_eq!(first, vec![0, 1, 2, 3], "equal lengths admit in arrival order");
+        for run in 0..32 {
+            let again = admitted_ids(AdmissionPolicy::ShortestPromptFirst, &[4, 4, 4, 4], 4, 16);
+            assert_eq!(again, first, "run {run} broke the stable FIFO tie-break");
+        }
+        // Mixed lengths with ties: both len-2 prompts keep arrival order
+        // between themselves, ahead of the longer ones.
+        let mixed = admitted_ids(AdmissionPolicy::ShortestPromptFirst, &[7, 2, 7, 2], 4, 16);
+        assert_eq!(mixed, vec![1, 3, 0, 2]);
+        for _ in 0..8 {
+            assert_eq!(
+                admitted_ids(AdmissionPolicy::ShortestPromptFirst, &[7, 2, 7, 2], 4, 16),
+                mixed
+            );
+        }
+    }
+
+    #[test]
+    fn reserved_slots_are_skipped_and_placement_reclaims_them() {
+        let mut b = Batcher::new(3, 8);
+        b.reserve(1);
+        assert_eq!(b.reserved(), 1);
+        for i in 0..3 {
+            let (r, _rx) = req(i, 2, 1);
+            assert!(b.submit(r));
+        }
+        // fill_slots must route around the leased slot.
+        assert_eq!(b.fill_slots(16), vec![0, 2], "reserved slot 1 must stay empty");
+        assert_eq!(b.active(), 2);
+        assert_eq!(b.pending(), 1);
+        // A resumed session reclaims the reserved slot directly.
+        let (r, _rx) = req(9, 4, 1);
+        assert!(b.place(1, r, 16).is_ok());
+        assert_eq!(b.reserved(), 0);
+        assert_eq!(b.session_mut(1).unwrap().request.id, 9);
+        // Occupied or out-of-range slots give the request back.
+        let (r, _rx) = req(10, 1, 1);
+        let r = b.place(1, r, 16).expect_err("occupied slot rejects placement");
+        assert_eq!(r.id, 10);
+        assert!(b.place(99, r, 16).is_err());
+        // Unreserve without placement re-opens the slot to admission.
+        let mut b = Batcher::new(1, 8);
+        b.reserve(0);
+        let (r, _rx) = req(1, 2, 1);
+        assert!(b.submit(r));
+        assert!(b.fill_slots(16).is_empty());
+        b.unreserve(0);
+        assert_eq!(b.fill_slots(16), vec![0]);
     }
 
     #[test]

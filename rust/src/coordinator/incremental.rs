@@ -91,6 +91,41 @@ pub trait StepEngine {
     /// slot can never observe a previous request's state.
     fn free_slot(&mut self, slot: usize);
 
+    /// Retain `slot`'s state under a session lease (warm multi-turn
+    /// resume) instead of clearing it. Returns true when the engine kept
+    /// the state — the caller then owns the lease and must eventually
+    /// either continue the slot through [`StepEngine::resume_many`] or
+    /// evict it via [`StepEngine::free_slot`] (poison-clear). Engines
+    /// without retainable per-slot state clear and decline (default).
+    fn retain_slot(&mut self, slot: usize, _session: u64) -> bool {
+        self.free_slot(slot);
+        false
+    }
+
+    /// Warm-resume: append each job's tokens (`[pending] + user tokens`
+    /// of a retained conversation) to its slot's state and return the
+    /// logits row at the LAST appended position — the row predicting the
+    /// resumed turn's first token. No prefill happens; the retained
+    /// window simply extends (sliding at `seq`). Default: a sequential
+    /// loop of [`StepEngine::decode_step`]s, correct for any engine;
+    /// [`CachedLutEngine`] overrides with one batched hidden-stack pass
+    /// over all appended rows.
+    fn resume_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
+        jobs.iter()
+            .map(|(slot, tokens)| {
+                anyhow::ensure!(
+                    !tokens.is_empty(),
+                    "resume needs at least the pending token (slot {slot})"
+                );
+                let mut row = Vec::new();
+                for &t in tokens {
+                    row = self.decode_step(*slot, t)?;
+                }
+                Ok(row)
+            })
+            .collect()
+    }
+
     /// Batched cross-request prefill; implementations fold all prompt
     /// rows into as few GEMMs as possible. Default: sequential.
     fn prefill_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
@@ -184,6 +219,12 @@ impl<S: StepEngine + ?Sized> StepEngine for Box<S> {
     }
     fn free_slot(&mut self, slot: usize) {
         (**self).free_slot(slot)
+    }
+    fn retain_slot(&mut self, slot: usize, session: u64) -> bool {
+        (**self).retain_slot(slot, session)
+    }
+    fn resume_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
+        (**self).resume_many(jobs)
     }
     fn prefill_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
         (**self).prefill_many(jobs)
@@ -417,8 +458,66 @@ impl StepEngine for CachedLutEngine {
         Ok(())
     }
 
+    /// Session retention: keep the slot's activation window and mark it
+    /// leased in the [`SlotCache`] (retained-slot accounting). A later
+    /// [`StepEngine::resume_many`] reclaims it; [`StepEngine::free_slot`]
+    /// evicts it with poison-zero semantics.
+    fn retain_slot(&mut self, slot: usize, session: u64) -> bool {
+        if slot >= self.slots() {
+            return false;
+        }
+        self.cache.lease(slot, session);
+        true
+    }
+
+    /// Warm multi-turn resume — the zero-re-prefill hot path: all jobs'
+    /// appended tokens (`[pending] + user tokens` each) run through ONE
+    /// batched hidden-stack GEMM (`rows = Σ appended lengths`), every
+    /// row extends its slot's retained ring (sliding at `seq`, never
+    /// clearing), and a second small GEMM projects just each job's last
+    /// row. Bit-identical to the sequential decode-step loop by row
+    /// independence — which is also why the emitted stream matches a
+    /// cold prefill of the full history (each row depends only on its
+    /// own token).
+    fn resume_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let hidden = self.model.spec().hidden;
+        let vocab = self.model.spec().vocab;
+        let slots = self.slots();
+        let mut flat: Vec<i32> = Vec::new();
+        let mut lens: Vec<usize> = Vec::with_capacity(jobs.len());
+        for (slot, tokens) in jobs {
+            anyhow::ensure!(*slot < slots, "slot {slot} out of range ({slots} slots)");
+            anyhow::ensure!(
+                !tokens.is_empty(),
+                "resume needs at least the pending token (slot {slot})"
+            );
+            // The resumed session owns the window again.
+            self.cache.release_lease(*slot);
+            flat.extend_from_slice(tokens);
+            lens.push(tokens.len());
+        }
+        let rows = flat.len();
+        let x = self.model.embed(&flat);
+        let h = self.model.hidden(x, rows, &mut self.scratch);
+        let mut lasts = Vec::with_capacity(jobs.len() * hidden);
+        let mut off = 0usize;
+        for ((slot, _), &len) in jobs.iter().zip(&lens) {
+            // Unlike prefill, resume EXTENDS the retained window.
+            self.cache.extend(*slot, &h[off * hidden..(off + len) * hidden]);
+            lasts.extend_from_slice(&h[(off + len - 1) * hidden..(off + len) * hidden]);
+            off += len;
+        }
+        let logits = self.model.project(&lasts, jobs.len(), &mut self.scratch);
+        Ok(logits.chunks(vocab).map(|c| c.to_vec()).collect())
+    }
+
     fn free_slot(&mut self, slot: usize) {
-        self.cache.clear(slot);
+        // Lease-aware clear: drops any retention mark AND poison-zeroes
+        // the rows (the eviction path of the session subsystem).
+        self.cache.evict(slot);
     }
 }
 
@@ -579,6 +678,14 @@ impl<E: Engine> StepEngine for FullRecomputeStep<E> {
         anyhow::ensure!(n <= len, "cannot roll back {n} of {len} window tokens (slot {slot})");
         self.windows[slot].truncate(len - n);
         Ok(())
+    }
+
+    /// Session retention: the per-slot token window IS this adapter's
+    /// state, so retaining is free — the window stays put for a later
+    /// `resume_many` (the default decode-step loop, replayed through
+    /// full-window recompute: no speedup, but the same emitted bits).
+    fn retain_slot(&mut self, slot: usize, _session: u64) -> bool {
+        slot < self.windows.len()
     }
 
     fn free_slot(&mut self, slot: usize) {
@@ -818,6 +925,107 @@ mod tests {
         spec_eng.rollback(2, 1).unwrap();
         assert_eq!(spec_eng.window_logits(2).unwrap(), twin.window_logits(2).unwrap());
         assert!(spec_eng.rollback(2, 99).is_err(), "over-rollback must fail");
+    }
+
+    #[test]
+    fn bulk_resume_matches_decode_step_loop_bitwise() {
+        // One batched warm-resume pass must equal feeding the same
+        // tokens one decode step at a time — including across a window
+        // slide — and leave the caches identical.
+        let mut bulk = CachedLutEngine::build(spec(1)).unwrap();
+        let mut loopy = CachedLutEngine::build(spec(1)).unwrap();
+        let prompt = vec![3, 1, 4, 1, 5];
+        bulk.prefill(0, &prompt).unwrap();
+        loopy.prefill(0, &prompt).unwrap();
+        assert!(bulk.retain_slot(0, 17));
+        assert_eq!(bulk.cache_mut().lease_of(0), Some(17));
+        // Feed slides past seq 8: 5 prompt rows + 6 resumed rows.
+        let feed = vec![7i32, 2, 9, 11, 13, 4];
+        let row_bulk = bulk.resume_many(&[(0, feed.clone())]).unwrap().pop().unwrap();
+        let mut row_loop = Vec::new();
+        for &t in &feed {
+            row_loop = loopy.decode_step(0, t).unwrap();
+        }
+        assert_eq!(row_bulk, row_loop, "bulk resume diverged from the step loop");
+        assert_eq!(bulk.cache_mut().lease_of(0), None, "resume reclaims the lease");
+        assert_eq!(bulk.cached_len(0), loopy.cached_len(0));
+        assert_eq!(bulk.window_logits(0).unwrap(), loopy.window_logits(0).unwrap());
+        // Decode continues identically after the resume.
+        assert_eq!(bulk.decode_step(0, 6).unwrap(), loopy.decode_step(0, 6).unwrap());
+        // Batched multi-slot resume equals per-slot resumes.
+        let mut a = CachedLutEngine::build(spec(1)).unwrap();
+        let mut b = CachedLutEngine::build(spec(1)).unwrap();
+        for slot in 0..2usize {
+            a.prefill(slot, &[2, slot as i32 + 3]).unwrap();
+            b.prefill(slot, &[2, slot as i32 + 3]).unwrap();
+        }
+        let jobs = vec![(0usize, vec![5i32, 6]), (1usize, vec![8i32])];
+        let batched = a.resume_many(&jobs).unwrap();
+        let sequential: Vec<Vec<f32>> = jobs
+            .iter()
+            .map(|(s, t)| b.resume_many(&[(*s, t.clone())]).unwrap().pop().unwrap())
+            .collect();
+        assert_eq!(batched, sequential);
+        assert!(a.resume_many(&[(0, vec![])]).is_err(), "empty resume feed must fail");
+    }
+
+    #[test]
+    fn retained_slot_evicts_with_poison_semantics() {
+        // retain → free must behave exactly like the clear-on-free
+        // contract: storage zeroed, lease dropped, and a reused slot
+        // indistinguishable from a fresh engine's.
+        let mut e = CachedLutEngine::build(spec(1)).unwrap();
+        e.prefill(1, &[1, 2, 3]).unwrap();
+        assert!(e.retain_slot(1, 7));
+        assert_eq!(e.cache_mut().leased(), 1);
+        for v in e.cache_mut().raw_slot_mut(1).iter_mut() {
+            *v = 1e30;
+        }
+        e.free_slot(1);
+        assert_eq!(e.cache_mut().lease_of(1), None);
+        assert_eq!(e.cache_mut().leased(), 0);
+        assert_eq!(e.cached_len(1), 0);
+        assert!(
+            e.cache_mut().raw_slot_mut(1).iter().all(|&v| v == 0.0),
+            "evicting a retained slot must zero its storage"
+        );
+        let mut fresh = CachedLutEngine::build(spec(1)).unwrap();
+        assert_eq!(
+            e.prefill(1, &[9, 8]).unwrap(),
+            fresh.prefill(1, &[9, 8]).unwrap(),
+            "stale retained activations leaked through eviction"
+        );
+        assert!(!e.retain_slot(99, 1), "out-of-range slots cannot be retained");
+    }
+
+    #[test]
+    fn full_recompute_adapter_retains_and_resumes_its_window() {
+        // The adapter keeps its token window across retain; the default
+        // decode-step-loop resume must continue the stream exactly as a
+        // twin that never paused.
+        let mut paused =
+            FullRecomputeStep::new(HostLutEngine::build(spec(1)).unwrap()).unwrap();
+        let mut steady =
+            FullRecomputeStep::new(HostLutEngine::build(spec(1)).unwrap()).unwrap();
+        let prompt = [4i32, 9];
+        let rp = paused.prefill(0, &prompt).unwrap();
+        let rs = steady.prefill(0, &prompt).unwrap();
+        assert_eq!(rp, rs);
+        assert!(paused.retain_slot(0, 3), "window adapters retain for free");
+        let feed = vec![11i32, 2, 7];
+        let row_resumed = paused.resume_many(&[(0, feed.clone())]).unwrap().pop().unwrap();
+        let mut row_steady = Vec::new();
+        for &t in &feed {
+            row_steady = steady.decode_step(0, t).unwrap();
+        }
+        assert_eq!(row_resumed, row_steady, "resume after retain diverged");
+        // free_slot still clears: a resume on a freed slot starts fresh.
+        paused.free_slot(0);
+        let after_free = paused.resume_many(&[(0, vec![5])]).unwrap().pop().unwrap();
+        let mut fresh =
+            FullRecomputeStep::new(HostLutEngine::build(spec(1)).unwrap()).unwrap();
+        let want = fresh.decode_step(0, 5).unwrap();
+        assert_eq!(after_free, want, "freed window leaked into a later resume");
     }
 
     #[test]

@@ -34,7 +34,19 @@
 //!   tokens with a cheap engine and bulk-verifies them on the target in
 //!   one batched window pass, with greedy acceptance keeping the emitted
 //!   stream bit-identical to the target decoding alone
-//!   ([`GreedyTableDraft`] is the acceptance-rate-1 oracle draft).
+//!   ([`GreedyTableDraft`] is the acceptance-rate-1 oracle draft);
+//! * [`session`] — resumable conversations: [`SessionStore`] keeps each
+//!   [`SessionId`]'s full token history and builds multi-turn
+//!   [`TurnRequest`]s; [`LeaseTable`] is the worker-side retained-slot
+//!   registry (capacity `serve.retained_slots`, TTL by iteration) that
+//!   lets a finished turn keep its activation window for a warm resume
+//!   instead of the clear-on-free path;
+//! * [`router`] — cache-aware placement: the shared [`Router`] maps
+//!   sessions to the worker holding their retained slot, so a resumed
+//!   turn lands warm (zero re-prefill) and everything else — evicted,
+//!   expired, first turns — falls back to cold prefill. Resumed streams
+//!   are **bit-identical** to the same tokens run as one uninterrupted
+//!   request, warm or cold (`rust/tests/session_resume.rs`).
 //!
 //! The engine behind the forward pass is pluggable ([`server::Engine`] /
 //! [`StepEngine`]): the FP artifact, the LUT artifact (the paper's §4
@@ -46,15 +58,22 @@ pub mod batcher;
 pub mod engines;
 pub mod incremental;
 pub mod request;
+pub mod router;
 pub mod server;
+pub mod session;
 pub mod speculative;
 
 pub use batcher::{window_clip, AdmissionPolicy, Batcher, Session};
 pub use engines::{HostLutEngine, HostLutModel, HostLutSpec};
 pub use incremental::{CachedLutEngine, FullRecomputeStep, StepEngine};
 pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
+pub use router::Router;
 pub use server::{
-    serve_blocking, serve_blocking_step, start, start_pool, start_pool_step, Engine, ServerHandle,
-    ServerReport,
+    serve_blocking, serve_blocking_step, start, start_pool, start_pool_session, start_pool_step,
+    Engine, ServerHandle, ServerReport,
+};
+pub use session::{
+    Lease, LeaseTable, ResumeTurn, SessionId, SessionMeta, SessionOptions, SessionStore,
+    TurnRequest,
 };
 pub use speculative::{GreedyTableDraft, SpeculativeEngine};

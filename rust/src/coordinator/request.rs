@@ -1,12 +1,15 @@
 //! Request/response types and serving metrics.
 
+use super::session::SessionMeta;
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
 /// A generation request submitted to the coordinator.
 pub struct GenRequest {
     pub id: u64,
-    /// Prompt token ids (will be truncated to the model window).
+    /// Prompt token ids (will be truncated to the model window). For a
+    /// resumed session turn this is the FULL conversation history, so
+    /// the cold-prefill fallback is a plain fresh request.
     pub prompt: Vec<i32>,
     /// Number of tokens to generate.
     pub gen_tokens: usize,
@@ -14,6 +17,10 @@ pub struct GenRequest {
     pub reply: Sender<GenResponse>,
     /// Enqueue timestamp (set by the submitter).
     pub t_submit: Instant,
+    /// Session identity + warm-resume payload (`None` = one-shot
+    /// request; `Some` with `resume` = a turn that may reattach to a
+    /// retained slot on the worker holding its lease).
+    pub session: Option<SessionMeta>,
 }
 
 /// A completed generation.
@@ -45,6 +52,18 @@ pub struct Metrics {
     /// Draft tokens the target's bulk verification accepted
     /// (`drafted_tokens - accepted_tokens` were rejected and rolled back).
     pub accepted_tokens: u64,
+    /// Resumed turns that reattached to their retained slot cache (warm
+    /// resume: zero re-prefill).
+    pub cache_hits: u64,
+    /// Resumed turns whose lease was gone (evicted, expired, or on a
+    /// dead/cold worker) — served through the cold-prefill fallback.
+    pub cache_misses: u64,
+    /// Retained slots evicted (capacity pressure, TTL expiry, or a stale
+    /// lease replaced) — each eviction poison-clears the slot.
+    pub cache_evictions: u64,
+    /// Tokens fed through warm-resume phases (`pending` + appended user
+    /// tokens); the warm counterpart of `prefill_tokens`.
+    pub resumed_tokens: u64,
     latencies_us: Vec<u64>,
     ttfts_us: Vec<u64>,
     started: Option<Instant>,
@@ -52,7 +71,7 @@ pub struct Metrics {
 }
 
 /// Immutable view of the metrics for reporting.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MetricsSnapshot {
     pub completed: u64,
     pub rejected: u64,
@@ -62,6 +81,10 @@ pub struct MetricsSnapshot {
     pub decode_tokens: u64,
     pub drafted_tokens: u64,
     pub accepted_tokens: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub resumed_tokens: u64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
     pub p50_ttft_us: u64,
@@ -96,6 +119,10 @@ impl Metrics {
         self.decode_tokens += other.decode_tokens;
         self.drafted_tokens += other.drafted_tokens;
         self.accepted_tokens += other.accepted_tokens;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_evictions += other.cache_evictions;
+        self.resumed_tokens += other.resumed_tokens;
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.ttfts_us.extend_from_slice(&other.ttfts_us);
         self.started = match (self.started, other.started) {
@@ -135,6 +162,10 @@ impl Metrics {
             decode_tokens: self.decode_tokens,
             drafted_tokens: self.drafted_tokens,
             accepted_tokens: self.accepted_tokens,
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+            cache_evictions: self.cache_evictions,
+            resumed_tokens: self.resumed_tokens,
             p50_latency_us: pct(&self.latencies_us, 0.5),
             p99_latency_us: pct(&self.latencies_us, 0.99),
             p50_ttft_us: pct(&self.ttfts_us, 0.5),
@@ -154,6 +185,16 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Warm-resume hit rate over resumed turns, if any were served.
+    pub fn cache_hit_rate(&self) -> Option<f64> {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.cache_hits as f64 / total as f64)
+        }
+    }
+
     pub fn report(&self) -> String {
         let spec = match self.acceptance_rate() {
             Some(rate) => format!(
@@ -164,10 +205,18 @@ impl MetricsSnapshot {
             ),
             None => String::new(),
         };
+        let sess = if self.cache_hits + self.cache_misses + self.cache_evictions > 0 {
+            format!(
+                "  sess hit {} miss {} evict {} ({} resumed tok)",
+                self.cache_hits, self.cache_misses, self.cache_evictions, self.resumed_tokens
+            )
+        } else {
+            String::new()
+        };
         format!(
             "completed {:>5}  rejected {:>3}  tokens {:>6}  steps {:>5}  \
              prefill {:>6}  decode {:>6}  \
-             p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s{spec}",
+             p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s{spec}{sess}",
             self.completed,
             self.rejected,
             self.generated_tokens,
@@ -256,5 +305,80 @@ mod tests {
         let before = agg.snapshot();
         agg.merge(&Metrics::default());
         assert_eq!(agg.snapshot().completed, before.completed);
+    }
+
+    #[test]
+    fn session_counters_merge_rate_and_report() {
+        let mut a = Metrics {
+            cache_hits: 3,
+            cache_misses: 1,
+            cache_evictions: 2,
+            resumed_tokens: 24,
+            ..Default::default()
+        };
+        let b = Metrics { cache_hits: 1, resumed_tokens: 8, ..Default::default() };
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!((s.cache_hits, s.cache_misses, s.cache_evictions), (4, 1, 2));
+        assert_eq!(s.resumed_tokens, 32);
+        assert_eq!(s.cache_hit_rate(), Some(0.8));
+        assert!(s.report().contains("sess hit 4 miss 1 evict 2 (32 resumed tok)"));
+        // No session traffic → no rate, and the report stays clean.
+        let quiet = Metrics::default().snapshot();
+        assert_eq!(quiet.cache_hit_rate(), None);
+        assert!(!quiet.report().contains("sess hit"));
+    }
+
+    /// Build a worker-shaped metrics value with distinct counters and
+    /// latency samples (index-seeded so the three workers differ).
+    fn worker_metrics(i: u64) -> Metrics {
+        let mut m = Metrics {
+            rejected: i,
+            decode_steps: 10 + i,
+            prefill_tokens: 100 * (i + 1),
+            decode_tokens: 7 * i,
+            drafted_tokens: 4 * i,
+            accepted_tokens: 3 * i,
+            cache_hits: i,
+            cache_misses: i * 2,
+            cache_evictions: i % 2,
+            resumed_tokens: 5 * i,
+            ..Default::default()
+        };
+        m.record_start();
+        for j in 1..=(3 + i) {
+            m.record_completion(&GenResponse {
+                id: j,
+                tokens: vec![0; (1 + i) as usize],
+                ttft: Duration::from_micros(10 * (i + 1) * j),
+                latency: Duration::from_micros(100 * (i + 1) * j),
+            });
+        }
+        m
+    }
+
+    #[test]
+    fn merge_is_order_independent_across_worker_join_order() {
+        // The aggregate snapshot must not depend on which worker's
+        // metrics fold in first: counters add, latency samples are
+        // sorted before percentiles, and the wall window is min/max of
+        // the start/finish instants.
+        // Build each worker's metrics ONCE (their Instants must be
+        // shared across permutations for the wall-window comparison).
+        let workers: Vec<Metrics> = (0u64..3).map(worker_metrics).collect();
+        let perms: [[usize; 3]; 6] =
+            [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+        let mut snaps = perms.iter().map(|perm| {
+            let mut agg = Metrics::default();
+            for &i in perm {
+                agg.merge(&workers[i]);
+            }
+            agg.snapshot()
+        });
+        let first = snaps.next().unwrap();
+        assert!(first.completed > 0 && first.p99_latency_us > 0);
+        for (k, snap) in snaps.enumerate() {
+            assert_eq!(snap, first, "permutation {} produced a different aggregate", k + 1);
+        }
     }
 }

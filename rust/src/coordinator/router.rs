@@ -1,0 +1,116 @@
+//! Cache-aware request routing across the worker pool.
+//!
+//! Workers retain finished sessions' activation windows under slot
+//! leases (`coordinator::session::LeaseTable`); the [`Router`] is the
+//! shared map from [`SessionId`] to the worker holding that retained
+//! state. Submission consults it so a resumed turn lands on the warm
+//! worker (lease hit → zero re-prefill); sessions with no placement —
+//! first turns, evicted or expired leases, dead workers — take the
+//! shared queue and fall back to normal admission with full cold
+//! prefill. Routing is therefore purely an optimization: it decides
+//! *where* a turn runs and how much it costs, never *what* it emits (the
+//! bit-identity contract in `session.rs`).
+//!
+//! Placements are updated by the workers themselves: registered when a
+//! turn's slot is leased, dropped when the lease is evicted (capacity
+//! pressure, TTL expiry) or the worker exits. A late eviction on one
+//! worker never clobbers a newer placement on another
+//! ([`Router::unregister`] is owner-checked).
+
+use super::session::SessionId;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Shared session→worker placement map. All methods take `&self`; the
+/// map is guarded by an internal mutex (submitters and workers touch it
+/// from different threads).
+#[derive(Default)]
+pub struct Router {
+    map: Mutex<HashMap<SessionId, usize>>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Worker holding `session`'s retained slot, if any.
+    pub fn route(&self, session: SessionId) -> Option<usize> {
+        self.map.lock().unwrap().get(&session).copied()
+    }
+
+    /// Record that `worker` now holds `session`'s retained slot
+    /// (replaces any previous placement).
+    pub fn register(&self, session: SessionId, worker: usize) {
+        self.map.lock().unwrap().insert(session, worker);
+    }
+
+    /// Drop `session`'s placement — only if `worker` still owns it, so a
+    /// late evict on one worker can't clobber a newer lease elsewhere.
+    pub fn unregister(&self, session: SessionId, worker: usize) {
+        let mut map = self.map.lock().unwrap();
+        if map.get(&session) == Some(&worker) {
+            map.remove(&session);
+        }
+    }
+
+    /// Drop every placement owned by `worker` (worker exit — its leases
+    /// die with its engine, so resumes must fall back to cold prefill).
+    pub fn unregister_worker(&self, worker: usize) {
+        self.map.lock().unwrap().retain(|_, w| *w != worker);
+    }
+
+    /// Sessions currently placed.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_route_unregister_round_trip() {
+        let r = Router::new();
+        assert!(r.is_empty());
+        assert_eq!(r.route(SessionId(1)), None);
+        r.register(SessionId(1), 2);
+        r.register(SessionId(9), 0);
+        assert_eq!(r.route(SessionId(1)), Some(2));
+        assert_eq!(r.len(), 2);
+        r.unregister(SessionId(1), 2);
+        assert_eq!(r.route(SessionId(1)), None);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn unregister_is_owner_checked() {
+        let r = Router::new();
+        r.register(SessionId(5), 1);
+        // The session moved to worker 3; worker 1's late evict must not
+        // drop the newer placement.
+        r.register(SessionId(5), 3);
+        r.unregister(SessionId(5), 1);
+        assert_eq!(r.route(SessionId(5)), Some(3));
+        r.unregister(SessionId(5), 3);
+        assert_eq!(r.route(SessionId(5)), None);
+    }
+
+    #[test]
+    fn worker_exit_drops_only_its_placements() {
+        let r = Router::new();
+        r.register(SessionId(1), 0);
+        r.register(SessionId(2), 1);
+        r.register(SessionId(3), 0);
+        r.unregister_worker(0);
+        assert_eq!(r.route(SessionId(1)), None);
+        assert_eq!(r.route(SessionId(3)), None);
+        assert_eq!(r.route(SessionId(2)), Some(1));
+        assert_eq!(r.len(), 1);
+    }
+}

@@ -26,11 +26,36 @@
 //! Full-window [`Engine`]s (AOT artifacts, mocks) ride the same loop via
 //! [`FullRecomputeStep`], so [`start`], [`start_pool`] and
 //! [`serve_blocking`] keep their original signatures; [`start_pool_step`]
-//! and [`serve_blocking_step`] are the incremental-native entry points.
+//! and [`serve_blocking_step`] are the incremental-native entry points,
+//! and [`start_pool_session`] adds resumable-session retention on top.
+//!
+//! # Resumable sessions
+//!
+//! With [`SessionOptions::retained_slots`] > 0, a finishing turn that
+//! carries session metadata *retains* its engine slot under a lease
+//! (state kept, slot reserved) instead of the clear-on-free path, and
+//! registers the placement in the pool's shared [`Router`]. A later
+//! [`ServerHandle::submit_turn`] for that session is routed to the
+//! worker holding the lease through a per-worker routed queue:
+//!
+//! * **hit** — the turn reattaches to its leased slot and a **resume
+//!   phase** feeds `[pending] + appended user tokens` through one
+//!   batched [`StepEngine::resume_many`] call: zero re-prefill, counted
+//!   in `resumed_tokens`/`cache_hits`;
+//! * **miss** — lease evicted (capacity pressure LRU-first, TTL by
+//!   iteration) or expired: the request falls back to normal policy
+//!   admission with full cold prefill of the conversation history
+//!   (`cache_misses`), bit-identical emissions either way.
+//!
+//! Evicted slots are poison-cleared via [`StepEngine::free_slot`]; the
+//! per-worker `cache_hits` / `cache_misses` / `cache_evictions` counters
+//! merge into the aggregate report.
 
 use super::batcher::{AdmissionPolicy, Batcher};
 use super::incremental::{FullRecomputeStep, StepEngine};
 use super::request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
+use super::router::Router;
+use super::session::{Lease, LeaseTable, SessionId, SessionOptions, TurnRequest};
 use crate::util::argmax;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -72,11 +97,23 @@ impl<E: Engine + ?Sized> Engine for Box<E> {
 /// Queue state shared between the handle and every worker.
 struct QueueState {
     queue: VecDeque<GenRequest>,
+    /// Per-worker routed queues: resumed turns headed for the worker
+    /// that holds their session's retained slot.
+    routed: Vec<VecDeque<GenRequest>>,
     shutting_down: bool,
     /// Submissions rejected by backpressure (or after worker death).
     rejected: u64,
     /// Workers that have exited (cleanly or not).
     exited: usize,
+    /// Per-worker exit flags, so routed submissions never target a dead
+    /// worker's queue (they fall back to the shared queue instead).
+    exited_flags: Vec<bool>,
+}
+
+impl QueueState {
+    fn queued(&self) -> usize {
+        self.queue.len() + self.routed.iter().map(|q| q.len()).sum::<usize>()
+    }
 }
 
 struct Shared {
@@ -84,6 +121,8 @@ struct Shared {
     cond: Condvar,
     queue_cap: usize,
     workers: usize,
+    /// Session → worker placements for cache-aware routing.
+    router: Router,
 }
 
 /// Aggregate + per-worker metrics returned by [`ServerHandle::shutdown_report`].
@@ -107,16 +146,54 @@ impl ServerHandle {
     /// rejected by backpressure are dropped, which the caller observes as
     /// a disconnected receiver.
     pub fn submit(&self, prompt: Vec<i32>, gen_tokens: usize) -> Receiver<GenResponse> {
+        self.submit_inner(prompt, gen_tokens, None)
+    }
+
+    /// Submit one conversation turn (built by
+    /// [`super::session::SessionStore::turn`]). Resumable turns are
+    /// routed to the worker holding the session's retained slot cache
+    /// (warm resume, zero re-prefill); first turns and turns whose lease
+    /// is gone take the shared queue and cold-prefill the full history.
+    pub fn submit_turn(&self, turn: TurnRequest, gen_tokens: usize) -> Receiver<GenResponse> {
+        let meta = super::session::SessionMeta { id: turn.session, resume: turn.resume };
+        self.submit_inner(turn.prompt, gen_tokens, Some(meta))
+    }
+
+    fn submit_inner(
+        &self,
+        prompt: Vec<i32>,
+        gen_tokens: usize,
+        session: Option<super::session::SessionMeta>,
+    ) -> Receiver<GenResponse> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let req = GenRequest { id, prompt, gen_tokens, reply: tx, t_submit: Instant::now() };
+        // Cache-aware placement: only turns that can actually resume are
+        // worth pinning to a specific worker.
+        let target = session
+            .as_ref()
+            .filter(|m| m.resume.is_some())
+            .and_then(|m| self.shared.router.route(m.id));
+        let req =
+            GenRequest { id, prompt, gen_tokens, reply: tx, t_submit: Instant::now(), session };
         let mut st = self.shared.state.lock().unwrap();
-        if st.shutting_down || st.exited == self.shared.workers || st.queue.len() >= self.shared.queue_cap
+        if st.shutting_down
+            || st.exited == self.shared.workers
+            || st.queued() >= self.shared.queue_cap
         {
             st.rejected += 1; // dropping `req` disconnects the receiver
         } else {
-            st.queue.push_back(req);
-            self.shared.cond.notify_one();
+            match target {
+                Some(w) if w < st.routed.len() && !st.exited_flags[w] => {
+                    st.routed[w].push_back(req);
+                    // notify_one could wake a different worker that then
+                    // sleeps again without draining w's routed queue.
+                    self.shared.cond.notify_all();
+                }
+                _ => {
+                    st.queue.push_back(req);
+                    self.shared.cond.notify_one();
+                }
+            }
         }
         rx
     }
@@ -151,8 +228,11 @@ impl ServerHandle {
         let shared_rejected = {
             let mut st = self.shared.state.lock().unwrap();
             // Every worker is gone; disconnect stragglers and count them.
-            st.rejected += st.queue.len() as u64;
+            st.rejected += st.queued() as u64;
             st.queue.clear();
+            for q in &mut st.routed {
+                q.clear();
+            }
             st.rejected
         };
         per.sort_by_key(|(w, _)| *w);
@@ -211,10 +291,7 @@ where
     })
 }
 
-/// General form: start `workers` worker threads sharing one bounded
-/// request queue, serving [`StepEngine`]s under `policy`. The builder is
-/// invoked once per worker, inside that worker's thread, with the worker
-/// index — each call must produce an independent engine.
+/// [`start_pool_session`] without retention — the pre-session API.
 pub fn start_pool_step<F, S>(
     workers: usize,
     max_batch: usize,
@@ -226,17 +303,41 @@ where
     F: Fn(usize) -> Result<S> + Send + Sync + 'static,
     S: StepEngine,
 {
+    start_pool_session(workers, max_batch, queue_cap, policy, SessionOptions::default(), build)
+}
+
+/// General form: start `workers` worker threads sharing one bounded
+/// request queue (plus one routed queue per worker for resumed session
+/// turns), serving [`StepEngine`]s under `policy` with session retention
+/// per `opts`. The builder is invoked once per worker, inside that
+/// worker's thread, with the worker index — each call must produce an
+/// independent engine.
+pub fn start_pool_session<F, S>(
+    workers: usize,
+    max_batch: usize,
+    queue_cap: usize,
+    policy: AdmissionPolicy,
+    opts: SessionOptions,
+    build: F,
+) -> ServerHandle
+where
+    F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    S: StepEngine,
+{
     let workers = workers.max(1);
     let shared = Arc::new(Shared {
         state: Mutex::new(QueueState {
             queue: VecDeque::new(),
+            routed: (0..workers).map(|_| VecDeque::new()).collect(),
             shutting_down: false,
             rejected: 0,
             exited: 0,
+            exited_flags: vec![false; workers],
         }),
         cond: Condvar::new(),
         queue_cap: queue_cap.max(1),
         workers,
+        router: Router::new(),
     });
     let build = Arc::new(build);
     let (res_tx, res_rx) = channel();
@@ -247,7 +348,7 @@ where
         let tx2 = res_tx.clone();
         let join = std::thread::Builder::new()
             .name(format!("lcd-serve-{w}"))
-            .spawn(move || pool_worker(w, shared2, max_batch, policy, build2, tx2))
+            .spawn(move || pool_worker(w, shared2, max_batch, policy, opts, build2, tx2))
             .expect("spawning serve worker");
         joins.push(join);
     }
@@ -260,6 +361,7 @@ fn pool_worker<F, S>(
     shared: Arc<Shared>,
     max_batch: usize,
     policy: AdmissionPolicy,
+    opts: SessionOptions,
     build: Arc<F>,
     results: Sender<(usize, Metrics)>,
 ) where
@@ -271,20 +373,29 @@ fn pool_worker<F, S>(
     // always runs — otherwise queued requests would keep their reply
     // senders alive forever and clients would hang in recv().
     let outcome = catch_unwind(AssertUnwindSafe(|| match (build.as_ref())(worker) {
-        Ok(mut engine) => run_worker(&mut engine, &shared, max_batch, policy, &mut metrics),
+        Ok(mut engine) => {
+            run_worker(&mut engine, &shared, max_batch, policy, opts, worker, &mut metrics)
+        }
         Err(err) => eprintln!("engine build failed on worker {worker}: {err:#}"),
     }));
     if outcome.is_err() {
         eprintln!("serve worker {worker} panicked; draining its queue share");
     }
-    // Exit bookkeeping: once the LAST worker leaves, queued requests are
-    // dropped so clients see disconnected channels instead of hanging.
+    // This worker's leases die with its engine: drop its placements so
+    // later resumes fall back to cold prefill instead of routing here.
+    shared.router.unregister_worker(worker);
+    // Exit bookkeeping: drain THIS worker's routed queue (nobody else
+    // pops it), and once the LAST worker leaves, drop the shared queue
+    // too, so clients see disconnected channels instead of hanging.
     {
         let mut st = shared.state.lock().unwrap();
         st.exited += 1;
+        st.exited_flags[worker] = true;
+        // Dropped requests count as rejected so the final report still
+        // accounts for every submission (completed + rejected).
+        st.rejected += st.routed[worker].len() as u64;
+        st.routed[worker].clear();
         if st.exited == shared.workers {
-            // Dropped requests count as rejected so the final report still
-            // accounts for every submission (completed + rejected).
             st.rejected += st.queue.len() as u64;
             st.queue.clear();
         }
@@ -292,13 +403,80 @@ fn pool_worker<F, S>(
     let _ = results.send((worker, metrics));
 }
 
-/// One worker's serve loop: admit from the shared queue into the local
-/// batcher, run prefill + decode phases, complete sessions.
+/// Per-worker session machinery: the lease table plus what eviction and
+/// retention must touch beyond the engine (router placements, metrics).
+struct WorkerSessions<'a> {
+    leases: &'a mut LeaseTable,
+    router: &'a Router,
+    worker: usize,
+    /// Current worker iteration (the TTL clock).
+    iteration: u64,
+}
+
+impl WorkerSessions<'_> {
+    /// Try to retain `slot`'s engine state under a lease for `session`
+    /// after its turn finished. Returns true when the slot is leased —
+    /// the caller must then NOT clear it.
+    fn retain<S: StepEngine>(
+        &mut self,
+        engine: &mut S,
+        batcher: &mut Batcher,
+        metrics: &mut Metrics,
+        slot: usize,
+        session: SessionId,
+    ) -> bool {
+        if self.leases.capacity() == 0 {
+            return false;
+        }
+        // A stale lease for the same session (a client that resubmitted
+        // the conversation fresh) is replaced, not duplicated.
+        if let Some(old) = self.leases.take(session) {
+            evict_slot(engine, batcher, metrics, self.router, self.worker, &old);
+        }
+        if self.leases.len() >= self.leases.capacity() {
+            match self.leases.evict_lru() {
+                Some(old) => evict_slot(engine, batcher, metrics, self.router, self.worker, &old),
+                None => return false,
+            }
+        }
+        if !engine.retain_slot(slot, session.0) {
+            return false;
+        }
+        let granted = self.leases.try_retain(session, slot, self.iteration);
+        debug_assert!(granted, "lease table has a free entry after eviction");
+        batcher.reserve(slot);
+        self.router.register(session, self.worker);
+        true
+    }
+}
+
+/// Evict one retained slot: poison-clear the engine state, re-open the
+/// batch slot, drop the routing placement, count it.
+fn evict_slot<S: StepEngine>(
+    engine: &mut S,
+    batcher: &mut Batcher,
+    metrics: &mut Metrics,
+    router: &Router,
+    worker: usize,
+    lease: &Lease,
+) {
+    engine.free_slot(lease.slot);
+    batcher.unreserve(lease.slot);
+    router.unregister(lease.session, worker);
+    metrics.cache_evictions += 1;
+}
+
+/// One worker's serve loop: admit from the routed + shared queues into
+/// the local batcher (reattaching lease hits to their retained slots),
+/// run resume + prefill + decode phases, complete sessions — retaining
+/// resumable ones under the lease budget.
 fn run_worker<S: StepEngine>(
     engine: &mut S,
     shared: &Arc<Shared>,
     max_batch: usize,
     policy: AdmissionPolicy,
+    opts: SessionOptions,
+    worker: usize,
     metrics: &mut Metrics,
 ) {
     if engine.seq() < 2 {
@@ -306,13 +484,22 @@ fn run_worker<S: StepEngine>(
         return;
     }
     let slots = max_batch.min(engine.slots()).max(1);
+    let seq = engine.seq();
     let mut batcher = Batcher::with_policy(slots, slots, policy);
+    let mut leases = LeaseTable::new(opts.retained_slots.min(slots), opts.retain_ttl_iters);
+    let mut iteration: u64 = 0;
     loop {
+        // Lease TTL sweep (iteration clock): expired windows are poison-
+        // cleared BEFORE admission, so a racing resume misses cleanly.
+        for lease in leases.expired(iteration) {
+            evict_slot(engine, &mut batcher, metrics, &shared.router, worker, &lease);
+        }
         // Admission: block while fully idle, otherwise just top up free
         // slots so decode iterations aren't delayed.
+        let mut resumes: Vec<(usize, Vec<i32>)> = Vec::new();
         {
             let mut st = shared.state.lock().unwrap();
-            while batcher.is_idle() && st.queue.is_empty() {
+            while batcher.is_idle() && st.queue.is_empty() && st.routed[worker].is_empty() {
                 if st.shutting_down {
                     return; // clean drain: nothing queued, nothing in flight
                 }
@@ -320,11 +507,104 @@ fn run_worker<S: StepEngine>(
                     shared.cond.wait_timeout(st, Duration::from_millis(50)).unwrap();
                 st = guard;
             }
-            let free = slots.saturating_sub(batcher.active() + batcher.pending());
+            let mut free =
+                slots.saturating_sub(batcher.active() + batcher.reserved() + batcher.pending());
+            loop {
+                // Routed queue first: lease hits reattach to their
+                // retained slot (consuming no free slot); misses need
+                // normal admission capacity.
+                loop {
+                    let hit = match st.routed[worker].front() {
+                        Some(req) => req
+                            .session
+                            .as_ref()
+                            .map(|m| m.resume.is_some() && leases.contains(m.id))
+                            .unwrap_or(false),
+                        None => break,
+                    };
+                    if !hit && free == 0 {
+                        break;
+                    }
+                    let req = st.routed[worker].pop_front().expect("peeked head");
+                    metrics.record_start();
+                    if hit {
+                        let meta = req.session.clone().expect("hit implies session meta");
+                        let resume = meta.resume.expect("hit implies resume info");
+                        let lease = leases.take(meta.id).expect("hit implies a live lease");
+                        batcher.place(lease.slot, req, seq).unwrap_or_else(|_| {
+                            panic!(
+                                "leased slot {} is occupied or out of range \
+                                 (lease/reserve bookkeeping desynced)",
+                                lease.slot
+                            )
+                        });
+                        metrics.cache_hits += 1;
+                        let mut feed = Vec::with_capacity(resume.append.len() + 1);
+                        feed.push(resume.pending);
+                        feed.extend_from_slice(&resume.append);
+                        resumes.push((lease.slot, feed));
+                    } else {
+                        if req.session.as_ref().map(|m| m.resume.is_some()).unwrap_or(false) {
+                            metrics.cache_misses += 1;
+                        }
+                        free -= 1;
+                        let admitted = batcher.submit(req);
+                        debug_assert!(admitted, "local batcher sized to its slot count");
+                    }
+                }
+                // Waiting traffic must never starve behind retained
+                // windows: evict leases LRU-first while blocked requests
+                // outnumber free slots. The shared queue is drained by
+                // EVERY live worker, so only this worker's fair share of
+                // it counts — otherwise any global backlog would make
+                // all workers wipe their warm leases for requests their
+                // peers are about to take.
+                let alive = (shared.workers - st.exited).max(1);
+                let shared_share = st.queue.len().div_ceil(alive);
+                let waiting = shared_share
+                    + st.routed[worker]
+                        .iter()
+                        .filter(|r| {
+                            !r.session
+                                .as_ref()
+                                .map(|m| m.resume.is_some() && leases.contains(m.id))
+                                .unwrap_or(false)
+                        })
+                        .count();
+                let mut evicted = false;
+                while free < waiting.min(slots) {
+                    match leases.evict_lru() {
+                        Some(lease) => {
+                            evict_slot(
+                                engine,
+                                &mut batcher,
+                                metrics,
+                                &shared.router,
+                                worker,
+                                &lease,
+                            );
+                            free += 1;
+                            evicted = true;
+                        }
+                        None => break,
+                    }
+                }
+                // Freed slots may unblock routed misses (and an eviction
+                // can demote a queued hit): reprocess the routed queue.
+                // Terminates: each pass must evict at least one lease.
+                if !evicted || free == 0 || st.routed[worker].is_empty() {
+                    break;
+                }
+            }
             for _ in 0..free {
                 match st.queue.pop_front() {
                     Some(req) => {
                         metrics.record_start();
+                        // A resumable turn on the shared queue has no
+                        // live lease anywhere: cold-prefill fallback.
+                        if req.session.as_ref().map(|m| m.resume.is_some()).unwrap_or(false) {
+                            metrics.cache_misses += 1;
+                        }
                         let admitted = batcher.submit(req);
                         debug_assert!(admitted, "local batcher sized to its slot count");
                     }
@@ -332,12 +612,17 @@ fn run_worker<S: StepEngine>(
                 }
             }
         }
-        if batcher.is_idle() {
+        if batcher.is_idle() && resumes.is_empty() {
             continue;
         }
+        iteration += 1;
         // Catch phase panics locally so the requests this worker holds
         // are still counted; errors and panics both end the worker.
-        let step = catch_unwind(AssertUnwindSafe(|| serve_iteration(engine, &mut batcher, metrics)));
+        let step = catch_unwind(AssertUnwindSafe(|| {
+            let mut sessions =
+                WorkerSessions { leases: &mut leases, router: &shared.router, worker, iteration };
+            serve_iteration(engine, &mut batcher, metrics, &resumes, Some(&mut sessions))
+        }));
         let outcome = match step {
             Ok(Ok(responses)) => Ok(responses),
             Ok(Err(e)) => Err(format!("serve iteration failed: {e:#}")),
@@ -364,20 +649,59 @@ fn run_worker<S: StepEngine>(
 /// channels (plain data, so callers decide how to deliver).
 type IterationResponses = Vec<(Sender<GenResponse>, GenResponse)>;
 
-/// One full serve iteration: prefill phase over newly admitted sessions,
-/// then one decode step for every in-flight session, collecting finished
-/// responses after each phase.
+/// One full serve iteration: warm-resume phase over reattached sessions
+/// and prefill phase over newly admitted ones, then one decode step for
+/// every in-flight session, collecting finished responses after each
+/// phase.
 fn serve_iteration<S: StepEngine>(
     engine: &mut S,
     batcher: &mut Batcher,
     metrics: &mut Metrics,
+    resumes: &[(usize, Vec<i32>)],
+    mut sessions: Option<&mut WorkerSessions<'_>>,
 ) -> Result<IterationResponses> {
     let mut responses = Vec::new();
+    resume_phase(engine, batcher, metrics, resumes)?;
     prefill_phase(engine, batcher, metrics)?;
-    collect_done(engine, batcher, metrics, &mut responses);
+    collect_done(engine, batcher, metrics, &mut responses, sessions.as_deref_mut());
     decode_phase(engine, batcher, metrics)?;
-    collect_done(engine, batcher, metrics, &mut responses);
+    collect_done(engine, batcher, metrics, &mut responses, sessions);
     Ok(responses)
+}
+
+/// Warm-resume phase: sessions reattached to their retained slot feed
+/// `[pending] + appended user tokens` through one batched
+/// [`StepEngine::resume_many`] call — zero prefill tokens — and sample
+/// the turn's first token from the last appended row. Exactly mirrors
+/// `prefill_phase` otherwise (zero-gen turns skip the engine).
+fn resume_phase<S: StepEngine>(
+    engine: &mut S,
+    batcher: &mut Batcher,
+    metrics: &mut Metrics,
+    resumes: &[(usize, Vec<i32>)],
+) -> Result<()> {
+    if resumes.is_empty() {
+        return Ok(());
+    }
+    let seq = engine.seq();
+    let mut jobs: Vec<(usize, Vec<i32>)> = Vec::with_capacity(resumes.len());
+    for (slot, feed) in resumes {
+        let done = batcher.session_mut(*slot).map(|s| s.done()).unwrap_or(true);
+        if !done {
+            jobs.push((*slot, feed.clone()));
+        }
+    }
+    if jobs.is_empty() {
+        return Ok(());
+    }
+    let rows = engine.resume_many(&jobs)?;
+    anyhow::ensure!(rows.len() == jobs.len(), "resume returned {} of {} rows", rows.len(), jobs.len());
+    for ((slot, feed), row) in jobs.iter().zip(rows) {
+        metrics.resumed_tokens += feed.len() as u64;
+        let next = argmax(&row) as i32;
+        batcher.session_mut(*slot).expect("resumed slot holds a session").push_token(next, seq);
+    }
+    Ok(())
 }
 
 /// Admit queued requests and absorb their prompts through one batched
@@ -505,15 +829,32 @@ fn speculative_phase<S: StepEngine>(
 }
 
 /// Move finished sessions out of the batcher, releasing their engine
-/// slots (clearing activation caches) and recording completions.
+/// slots and recording completions. Resumable turns (session metadata
+/// present, retention configured) retain their slot under a lease —
+/// activation window kept for a warm resume — everything else takes the
+/// clear-on-free path.
 fn collect_done<S: StepEngine>(
     engine: &mut S,
     batcher: &mut Batcher,
     metrics: &mut Metrics,
     responses: &mut IterationResponses,
+    mut sessions: Option<&mut WorkerSessions<'_>>,
 ) {
     for (slot, sess) in batcher.take_done_slots() {
-        engine.free_slot(slot);
+        // Zero-gen turns never touch the engine (resume and prefill both
+        // skip done sessions), so their slot state does NOT reflect this
+        // turn's tokens — retaining it would lease a stale window.
+        // Clear-on-free instead; the next turn cold-prefills exactly.
+        let fed_engine = !sess.generated.is_empty();
+        let retained = match (&mut sessions, &sess.request.session) {
+            (Some(ws), Some(meta)) if fed_engine => {
+                ws.retain(engine, batcher, metrics, slot, meta.id)
+            }
+            _ => false,
+        };
+        if !retained {
+            engine.free_slot(slot);
+        }
         let reply = sess.request.reply.clone();
         let resp = sess.finish();
         metrics.record_completion(&resp);
@@ -553,13 +894,14 @@ pub fn serve_blocking_step<S: StepEngine>(
             gen_tokens: gen,
             reply: tx.clone(),
             t_submit: Instant::now(),
+            session: None,
         };
         assert!(batcher.submit(req));
     }
     drop(tx);
     let mut responses = Vec::new();
     while !batcher.is_idle() {
-        for (_reply, resp) in serve_iteration(&mut engine, &mut batcher, &mut metrics)? {
+        for (_reply, resp) in serve_iteration(&mut engine, &mut batcher, &mut metrics, &[], None)? {
             responses.push(resp);
         }
     }
@@ -744,6 +1086,64 @@ mod tests {
             ssnap.decode_steps,
             psnap.decode_steps
         );
+    }
+
+    #[test]
+    fn resumed_turn_hits_the_retained_slot_and_skips_prefill() {
+        use crate::coordinator::SessionStore;
+        let opts = SessionOptions { retained_slots: 2, retain_ttl_iters: 0 };
+        let handle =
+            start_pool_session(1, 2, 16, AdmissionPolicy::Fifo, opts, |_w| {
+                FullRecomputeStep::new(MockEngine { b: 2, s: 8, v: 16, calls: 0 })
+            });
+        let mut store = SessionStore::new();
+        let id = store.open();
+        // Turn 1: fresh — counting engine continues 3 → 4, 5, 6.
+        let t1 = store.turn(id, &[3]).unwrap();
+        assert!(t1.resume.is_none());
+        let r1 = handle.submit_turn(t1, 3).recv().unwrap();
+        assert_eq!(r1.tokens, vec![4, 5, 6]);
+        store.record(id, &r1.tokens).unwrap();
+        // Turn 2: resumes from pending 6 with appended user token 9 —
+        // the stream continues from 9 exactly as an uninterrupted
+        // request whose prompt is the full history would.
+        let t2 = store.turn(id, &[9]).unwrap();
+        assert_eq!(t2.prompt, vec![3, 4, 5, 6, 9]);
+        assert_eq!(t2.resume.as_ref().unwrap().pending, 6);
+        let r2 = handle.submit_turn(t2, 2).recv().unwrap();
+        assert_eq!(r2.tokens, vec![10, 11]);
+        store.record(id, &r2.tokens).unwrap();
+        let snap = handle.shutdown();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.cache_hits, 1, "the resumed turn must reattach");
+        assert_eq!(snap.cache_misses, 0);
+        assert_eq!(snap.cache_hit_rate(), Some(1.0));
+        assert_eq!(snap.resumed_tokens, 2, "pending + 1 appended token");
+        assert_eq!(snap.prefill_tokens, 1, "only turn 1's prompt prefills");
+    }
+
+    #[test]
+    fn retention_off_serves_resumed_turns_via_cold_prefill() {
+        use crate::coordinator::SessionStore;
+        // start_pool_step = SessionOptions::default() = retention off.
+        let handle = start_pool_step(1, 2, 16, AdmissionPolicy::Fifo, |_w| {
+            FullRecomputeStep::new(MockEngine { b: 2, s: 8, v: 16, calls: 0 })
+        });
+        let mut store = SessionStore::new();
+        let id = store.open();
+        let r1 = handle.submit_turn(store.turn(id, &[3]).unwrap(), 2).recv().unwrap();
+        assert_eq!(r1.tokens, vec![4, 5]);
+        store.record(id, &r1.tokens).unwrap();
+        let t2 = store.turn(id, &[7]).unwrap();
+        assert!(t2.resume.is_some(), "the client still asks to resume");
+        let prefill_len = t2.prompt.len() as u64; // full history re-prefills
+        let r2 = handle.submit_turn(t2, 2).recv().unwrap();
+        assert_eq!(r2.tokens, vec![8, 9], "cold fallback emits the same stream");
+        let snap = handle.shutdown();
+        assert_eq!(snap.cache_hits, 0);
+        assert_eq!(snap.cache_misses, 1);
+        assert_eq!(snap.resumed_tokens, 0);
+        assert_eq!(snap.prefill_tokens, 1 + prefill_len);
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! Resumable sessions: conversation state, turn building and the
+//! slot-lease table behind warm multi-turn serving.
+//!
+//! # Why sessions
+//!
+//! The incremental subsystem (PR 2) made a *single* request cheap to
+//! decode, but its per-slot activation window died with the request —
+//! every follow-up turn of a conversation paid full prefill over the
+//! whole history again. This module makes requests **resumable**:
+//!
+//! * [`SessionStore`] — the client-side conversation ledger. Each
+//!   [`SessionId`] owns the full token history (prompt + every turn's
+//!   user tokens + every turn's generated tokens).
+//!   [`SessionStore::turn`] builds the next [`TurnRequest`]: the full
+//!   history as the cold-prefill `prompt`, plus a [`ResumeTurn`] (the
+//!   newest conversation token `pending` and the turn's appended user
+//!   tokens) that lets a worker holding the session's retained
+//!   activation window skip re-prefill entirely.
+//! * [`LeaseTable`] — the worker-side retained-slot registry. When a
+//!   turn finishes, its engine slot can be *leased* (state kept) instead
+//!   of freed (state poison-cleared); leases are bounded by
+//!   `serve.retained_slots`, expire after `serve.retain_ttl_iters`
+//!   worker iterations (TTL-by-iteration), and yield to admission
+//!   pressure LRU-first.
+//!
+//! # Exactness contract
+//!
+//! A conversation resumed across turns emits a token stream
+//! **bit-identical** to the same token sequence run as one uninterrupted
+//! request, warm or cold:
+//!
+//! * **Cold path** (no lease — evicted, expired, or routed to a cold
+//!   worker): `TurnRequest::prompt` is the *entire* history, so the turn
+//!   is literally a fresh request; nothing distinguishes it from an
+//!   uninterrupted run with that prompt.
+//! * **Warm path** (lease hit): the engine feeds `[pending] + append`
+//!   onto its retained window and samples from the last appended row.
+//!   The host LUT stack is position-wise (see `incremental.rs`): every
+//!   logits row depends only on its own token, so the row sampled after
+//!   the warm feed carries exactly the bits a cold prefill of the full
+//!   clipped history would produce — `rust/tests/session_resume.rs`
+//!   pins this across engines, worker counts and admission policies.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// Stable identifier of one conversation.
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sess-{}", self.0)
+    }
+}
+
+/// Warm-resume payload of a turn: what a worker holding the session's
+/// retained window must feed to continue without re-prefill.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResumeTurn {
+    /// Newest conversation token (the previous turn's last generated
+    /// token) — sampled but never fed to the engine, so the warm feed
+    /// starts with it.
+    pub pending: i32,
+    /// This turn's appended user tokens (may be empty: "keep going").
+    pub append: Vec<i32>,
+}
+
+/// Session routing/resume metadata attached to a `GenRequest`.
+#[derive(Clone, Debug)]
+pub struct SessionMeta {
+    pub id: SessionId,
+    /// `None` on a session's first turn (nothing to resume yet).
+    pub resume: Option<ResumeTurn>,
+}
+
+/// One turn of a conversation, ready to submit.
+#[derive(Clone, Debug)]
+pub struct TurnRequest {
+    pub session: SessionId,
+    /// Full conversation token stream (history + this turn's user
+    /// tokens) — the cold-prefill prompt, making the no-lease fallback a
+    /// plain fresh request.
+    pub prompt: Vec<i32>,
+    /// Warm-resume info; `None` on the first turn.
+    pub resume: Option<ResumeTurn>,
+}
+
+/// Retention knobs for a session-aware worker pool.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionOptions {
+    /// Max leased (retained) slots per worker; 0 disables retention, and
+    /// the effective bound is clamped to the engine's slot count.
+    pub retained_slots: usize,
+    /// Lease TTL in worker iterations (0 = leases never age out; they
+    /// still yield to admission pressure and capacity).
+    pub retain_ttl_iters: u64,
+}
+
+impl Default for SessionOptions {
+    /// Retention off — the pre-session serving behaviour.
+    fn default() -> Self {
+        SessionOptions { retained_slots: 0, retain_ttl_iters: 0 }
+    }
+}
+
+struct Conversation {
+    history: Vec<i32>,
+    turns: u64,
+}
+
+/// Client-side conversation ledger: token histories keyed by
+/// [`SessionId`], and the turn-building rule that keeps warm and cold
+/// serving paths bit-identical.
+#[derive(Default)]
+pub struct SessionStore {
+    next: u64,
+    sessions: HashMap<SessionId, Conversation>,
+}
+
+impl SessionStore {
+    pub fn new() -> SessionStore {
+        SessionStore::default()
+    }
+
+    /// Open a new conversation; the first [`SessionStore::turn`] call
+    /// supplies its prompt.
+    pub fn open(&mut self) -> SessionId {
+        self.next += 1;
+        let id = SessionId(self.next);
+        self.sessions.insert(id, Conversation { history: Vec::new(), turns: 0 });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Full token history of a conversation (prompt + user + generated).
+    pub fn history(&self, id: SessionId) -> Option<&[i32]> {
+        self.sessions.get(&id).map(|c| c.history.as_slice())
+    }
+
+    /// Turns built so far for a conversation.
+    pub fn turns(&self, id: SessionId) -> Option<u64> {
+        self.sessions.get(&id).map(|c| c.turns)
+    }
+
+    /// Build the next turn: append `user` tokens to the history and
+    /// return the request to submit. The caller MUST
+    /// [`SessionStore::record`] the turn's response before building the
+    /// next turn — `pending` is defined as the newest conversation token.
+    pub fn turn(&mut self, id: SessionId, user: &[i32]) -> Result<TurnRequest> {
+        let conv = self.sessions.get_mut(&id).with_context(|| format!("unknown session {id}"))?;
+        let resume = match (conv.turns, conv.history.last()) {
+            (0, _) | (_, None) => None,
+            (_, Some(&pending)) => Some(ResumeTurn { pending, append: user.to_vec() }),
+        };
+        conv.history.extend_from_slice(user);
+        conv.turns += 1;
+        Ok(TurnRequest { session: id, prompt: conv.history.clone(), resume })
+    }
+
+    /// Fold a turn's generated tokens back into the history.
+    pub fn record(&mut self, id: SessionId, generated: &[i32]) -> Result<()> {
+        let conv = self.sessions.get_mut(&id).with_context(|| format!("unknown session {id}"))?;
+        conv.history.extend_from_slice(generated);
+        Ok(())
+    }
+
+    /// Drop a conversation, returning its history. Any server-side lease
+    /// ages out via TTL or admission pressure.
+    pub fn close(&mut self, id: SessionId) -> Option<Vec<i32>> {
+        self.sessions.remove(&id).map(|c| c.history)
+    }
+}
+
+/// One retained slot.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub session: SessionId,
+    pub slot: usize,
+    /// Worker iteration at which the lease was granted (TTL anchor).
+    pub retained_at: u64,
+}
+
+/// Worker-side retained-slot registry: grant order doubles as LRU order,
+/// TTL is measured in worker iterations (deterministic under test, no
+/// wall clock).
+pub struct LeaseTable {
+    capacity: usize,
+    ttl_iters: u64,
+    /// Oldest grant first — eviction pops from the front.
+    leases: Vec<Lease>,
+}
+
+impl LeaseTable {
+    pub fn new(capacity: usize, ttl_iters: u64) -> LeaseTable {
+        LeaseTable { capacity, ttl_iters, leases: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn ttl_iters(&self) -> u64 {
+        self.ttl_iters
+    }
+
+    pub fn len(&self) -> usize {
+        self.leases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leases.is_empty()
+    }
+
+    pub fn contains(&self, session: SessionId) -> bool {
+        self.leases.iter().any(|l| l.session == session)
+    }
+
+    /// Remove and return `session`'s lease (a resumed turn reclaiming its
+    /// slot, or a retention replacing a stale lease).
+    pub fn take(&mut self, session: SessionId) -> Option<Lease> {
+        let idx = self.leases.iter().position(|l| l.session == session)?;
+        Some(self.leases.remove(idx))
+    }
+
+    /// Grant a lease at iteration `now`. Returns false when the table is
+    /// full (or capacity is 0) — the caller evicts LRU first, or gives up
+    /// and clears the slot.
+    pub fn try_retain(&mut self, session: SessionId, slot: usize, now: u64) -> bool {
+        if self.leases.len() >= self.capacity {
+            return false;
+        }
+        debug_assert!(!self.contains(session), "one lease per session");
+        self.leases.push(Lease { session, slot, retained_at: now });
+        true
+    }
+
+    /// Pop the oldest lease (admission-pressure eviction).
+    pub fn evict_lru(&mut self) -> Option<Lease> {
+        if self.leases.is_empty() {
+            None
+        } else {
+            Some(self.leases.remove(0))
+        }
+    }
+
+    /// Remove and return every lease whose age at iteration `now` has
+    /// reached the TTL (no-op when `ttl_iters` is 0).
+    pub fn expired(&mut self, now: u64) -> Vec<Lease> {
+        if self.ttl_iters == 0 {
+            return Vec::new();
+        }
+        let ttl = self.ttl_iters;
+        let mut dead = Vec::new();
+        let mut i = 0;
+        while i < self.leases.len() {
+            if now.saturating_sub(self.leases[i].retained_at) >= ttl {
+                dead.push(self.leases.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        dead
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Lease> {
+        self.leases.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_builds_turns_with_growing_history() {
+        let mut store = SessionStore::new();
+        let id = store.open();
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.turns(id), Some(0));
+
+        // Turn 1: no resume info (nothing to resume yet).
+        let t1 = store.turn(id, &[3, 5]).unwrap();
+        assert_eq!(t1.session, id);
+        assert_eq!(t1.prompt, vec![3, 5]);
+        assert!(t1.resume.is_none());
+        store.record(id, &[7, 9]).unwrap();
+        assert_eq!(store.history(id).unwrap(), &[3, 5, 7, 9]);
+
+        // Turn 2: pending = newest conversation token, prompt = history.
+        let t2 = store.turn(id, &[11]).unwrap();
+        assert_eq!(t2.prompt, vec![3, 5, 7, 9, 11]);
+        let resume = t2.resume.expect("second turn is resumable");
+        assert_eq!(resume.pending, 9);
+        assert_eq!(resume.append, vec![11]);
+        assert_eq!(store.turns(id), Some(2));
+
+        // Turn 3 with an empty append ("keep going") still resumes.
+        store.record(id, &[13]).unwrap();
+        let t3 = store.turn(id, &[]).unwrap();
+        let resume = t3.resume.expect("empty append still resumes");
+        assert_eq!(resume.pending, 13);
+        assert!(resume.append.is_empty());
+
+        assert_eq!(store.close(id).unwrap(), vec![3, 5, 7, 9, 11, 13]);
+        assert!(store.is_empty());
+        assert!(store.turn(id, &[1]).is_err(), "closed sessions reject turns");
+    }
+
+    #[test]
+    fn empty_first_turn_never_resumes() {
+        let mut store = SessionStore::new();
+        let id = store.open();
+        let t1 = store.turn(id, &[]).unwrap();
+        assert!(t1.prompt.is_empty());
+        assert!(t1.resume.is_none());
+        // Nothing recorded, history still empty: the next turn has no
+        // pending token, so it must fall back to a fresh request too.
+        let t2 = store.turn(id, &[4]).unwrap();
+        assert!(t2.resume.is_none());
+        assert_eq!(t2.prompt, vec![4]);
+    }
+
+    #[test]
+    fn lease_table_capacity_and_lru_order() {
+        let mut t = LeaseTable::new(2, 0);
+        assert!(t.try_retain(SessionId(1), 0, 10));
+        assert!(t.try_retain(SessionId(2), 1, 11));
+        assert!(!t.try_retain(SessionId(3), 2, 12), "at capacity");
+        assert_eq!(t.len(), 2);
+        assert!(t.contains(SessionId(1)));
+        // LRU eviction pops the oldest grant.
+        let evicted = t.evict_lru().unwrap();
+        assert_eq!(evicted.session, SessionId(1));
+        assert_eq!(evicted.slot, 0);
+        assert!(t.try_retain(SessionId(3), 2, 12), "eviction freed an entry");
+        // take() removes by session.
+        let lease = t.take(SessionId(3)).unwrap();
+        assert_eq!(lease.slot, 2);
+        assert!(t.take(SessionId(3)).is_none());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_table_never_retains() {
+        let mut t = LeaseTable::new(0, 4);
+        assert!(!t.try_retain(SessionId(1), 0, 1));
+        assert!(t.is_empty());
+        assert!(t.evict_lru().is_none());
+    }
+
+    #[test]
+    fn ttl_expiry_is_iteration_based() {
+        let mut t = LeaseTable::new(4, 3);
+        assert!(t.try_retain(SessionId(1), 0, 10));
+        assert!(t.try_retain(SessionId(2), 1, 12));
+        assert!(t.expired(11).is_empty(), "age 1 < ttl 3");
+        let dead = t.expired(13);
+        assert_eq!(dead.len(), 1, "only the older lease aged out");
+        assert_eq!(dead[0].session, SessionId(1));
+        assert_eq!(t.len(), 1);
+        let dead = t.expired(100);
+        assert_eq!(dead.len(), 1);
+        assert!(t.is_empty());
+        // ttl 0 = never expires.
+        let mut t = LeaseTable::new(4, 0);
+        assert!(t.try_retain(SessionId(7), 0, 1));
+        assert!(t.expired(u64::MAX).is_empty());
+        assert_eq!(t.iter().count(), 1);
+    }
+}

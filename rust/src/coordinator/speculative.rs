@@ -160,6 +160,36 @@ impl<T: StepEngine, D: StepEngine> StepEngine for SpeculativeEngine<T, D> {
         self.target.free_slot(slot);
     }
 
+    /// Session retention: both sides retain so a warm resume drafts from
+    /// the right context. The TARGET decides — if it cannot retain, a
+    /// draft-only lease is useless (and a cleared target with live draft
+    /// state would desync proposals), so the draft is cleared too. A
+    /// declining draft is harmless: draft state only ever moves the
+    /// acceptance rate, never an emitted token.
+    fn retain_slot(&mut self, slot: usize, session: u64) -> bool {
+        if let Some(f) = self.inflight.get_mut(slot) {
+            *f = 0;
+        }
+        let target_kept = self.target.retain_slot(slot, session);
+        let draft_kept = self.draft.retain_slot(slot, session);
+        if !target_kept && draft_kept {
+            self.draft.free_slot(slot);
+        }
+        target_kept
+    }
+
+    /// Warm resume feeds BOTH engines the appended tokens (the returned
+    /// logits — and thus the resumed turn's first sampled token — come
+    /// from the target, exactly as in `prefill_many`).
+    fn resume_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
+        for (slot, _) in jobs {
+            anyhow::ensure!(*slot < self.inflight.len(), "slot {slot} out of range");
+            self.inflight[*slot] = 0;
+        }
+        let _ = self.draft.resume_many(jobs)?;
+        self.target.resume_many(jobs)
+    }
+
     fn speculation(&self) -> usize {
         self.draft_k
     }
@@ -293,6 +323,13 @@ impl StepEngine for GreedyTableDraft {
     /// Stateless: nothing to clear.
     fn free_slot(&mut self, _slot: usize) {}
 
+    /// Stateless: retention is trivially exact (there is nothing to
+    /// retain OR lose), so oracle-draft speculative engines keep their
+    /// warm-resume capability.
+    fn retain_slot(&mut self, slot: usize, _session: u64) -> bool {
+        slot < self.slots
+    }
+
     /// Stateless: any retraction is trivially exact.
     fn rollback(&mut self, _slot: usize, _n: usize) -> Result<()> {
         Ok(())
@@ -388,6 +425,50 @@ mod tests {
         }
         assert_eq!(spec_stream, plain_stream, "speculation changed the emitted stream");
         assert!(rejected_any, "narrow draft never rejected — rollback path unexercised");
+    }
+
+    #[test]
+    fn retained_speculative_slot_resumes_the_exact_stream() {
+        // retain → resume across a "turn boundary" must leave the
+        // speculative engine emitting exactly what a twin that never
+        // paused emits (draft context included, so acceptance behaviour
+        // matches too — narrow draft exercises real rejections).
+        let mk = || {
+            SpeculativeEngine::new(
+                CachedLutEngine::build(spec(1)).unwrap(),
+                CachedLutEngine::build(narrow_spec(1)).unwrap(),
+                3,
+            )
+            .unwrap()
+        };
+        let mut paused = mk();
+        let mut steady = mk();
+        let prompt = [5i32, 2, 8];
+        let rp = paused.prefill(0, &prompt).unwrap();
+        let rs = steady.prefill(0, &prompt).unwrap();
+        assert_eq!(rp, rs);
+        let pending = argmax(&rp) as i32;
+        assert!(paused.retain_slot(0, 21), "cached target + cached draft retain");
+        // "Next turn": pending + two appended user tokens.
+        let feed = vec![pending, 6, 1];
+        let row_p = paused.resume_many(&[(0, feed.clone())]).unwrap().pop().unwrap();
+        let mut row_s = Vec::new();
+        for &t in &feed {
+            row_s = steady.decode_step(0, t).unwrap();
+        }
+        assert_eq!(row_p, row_s, "resume diverged from uninterrupted decode");
+        let mut pend_p = argmax(&row_p) as i32;
+        let mut pend_s = pend_p;
+        for pass in 0..4 {
+            let dp = paused.draft(0, pend_p, 3).unwrap();
+            let ds = steady.draft(0, pend_s, 3).unwrap();
+            assert_eq!(dp, ds, "pass {pass}: draft context diverged after resume");
+            let ep = paused.decode_speculative(0, pend_p, &dp).unwrap();
+            let es = steady.decode_speculative(0, pend_s, &ds).unwrap();
+            assert_eq!(ep, es, "pass {pass}: emissions diverged after resume");
+            pend_p = *ep.last().unwrap();
+            pend_s = *es.last().unwrap();
+        }
     }
 
     #[test]

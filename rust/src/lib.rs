@@ -51,14 +51,34 @@
 //! admission policies and thread counts), while per-step cost drops
 //! from `batch × seq` rows to `active_slots` rows.
 //!
+//! ## Resumable session subsystem
+//!
+//! Multi-turn conversations are first-class: [`coordinator::session`]
+//! keeps per-[`coordinator::SessionId`] token histories and builds turn
+//! requests; finished turns *retain* their slot's activation window
+//! under a lease ([`lut::SlotCache`] lease marks, bounded by
+//! `ServeConfig::retained_slots` with TTL-by-iteration expiry) instead
+//! of the clear-on-free path; [`coordinator::router`] routes a resumed
+//! turn to the worker holding its retained cache. A lease hit feeds only
+//! `[pending] + appended tokens` (`StepEngine::resume_many` — zero
+//! re-prefill); a miss cold-prefills the full history. Either way the
+//! emitted stream is **bit-identical** to the same token sequence run as
+//! one uninterrupted request — the lease/evict contract poison-clears
+//! evicted windows so stale state can never leak. Per-worker
+//! `cache_hits` / `cache_misses` / `cache_evictions` counters merge into
+//! the aggregate serving report.
+//!
 //! The test matrix backing this: `rust/tests/lut_properties.rs` (every
 //! GEMM strategy against the FP reference on random layers, plus
-//! `PackedIndices` round-trip properties) and
+//! `PackedIndices` round-trip properties),
 //! `rust/tests/parallel_determinism.rs` (bit-equality across
 //! `gemm_threads` ∈ {1, 2, 4} and repeated runs; multi-worker serving
 //! drains a closed request set with responses identical to the
-//! single-worker path). `benches/lut_gemm.rs` and `benches/serving.rs`
-//! carry the matching thread/worker sweeps.
+//! single-worker path) and `rust/tests/session_resume.rs` (resumed ≡
+//! uninterrupted streams across engines × workers × admission policies;
+//! eviction falls back to cold prefill). `benches/lut_gemm.rs` and
+//! `benches/serving.rs` carry the matching thread/worker sweeps plus the
+//! warm-vs-cold resume sweep.
 //!
 //! See `DESIGN.md` for the experiment index mapping every table and figure
 //! of the paper to a module and a `lcd repro --exp <id>` command.

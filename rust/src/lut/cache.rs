@@ -20,6 +20,14 @@
 //!   storage and resets its ring. A freed slot is indistinguishable from
 //!   a never-used one; stale activations from a previous request can
 //!   never leak into a new session (pinned by a poison-value test).
+//! * **Lease protocol.** A finished turn of a resumable session may
+//!   *retain* its slot instead of clearing it: [`SlotCache::lease`] marks
+//!   the slot's window as held for a session id (retained-slot
+//!   accounting via [`SlotCache::leased`]), [`SlotCache::release_lease`]
+//!   hands the window back to a resumed turn with the rows intact, and
+//!   [`SlotCache::evict`] ends a lease the hard way — same poison-zero
+//!   discipline as `clear`, so an evicted session's activations can never
+//!   be observed by whatever uses the slot next.
 //! * **Logical addressing.** Positions are exposed in window order
 //!   (`0` = oldest cached position). Row `p` corresponds to token `p` of
 //!   the **engine-fed** window — the prompt plus every token fed through
@@ -40,6 +48,8 @@ pub struct SlotCache {
     start: Vec<usize>,
     /// Filled positions per slot.
     len: Vec<usize>,
+    /// Session lease per slot (`None` = not retained).
+    leases: Vec<Option<u64>>,
 }
 
 impl SlotCache {
@@ -55,6 +65,7 @@ impl SlotCache {
             data: vec![0.0; slots * window * width],
             start: vec![0; slots],
             len: vec![0; slots],
+            leases: vec![None; slots],
         }
     }
 
@@ -176,13 +187,50 @@ impl SlotCache {
         self.len[slot] = len;
     }
 
+    /// Mark `slot`'s window as retained for `session` (warm multi-turn
+    /// resume). The rows stay put; [`SlotCache::release_lease`] hands
+    /// them back to a resumed turn, [`SlotCache::evict`] (or any `clear`)
+    /// drops them with poison-zero semantics.
+    pub fn lease(&mut self, slot: usize, session: u64) {
+        self.leases[slot] = Some(session);
+    }
+
+    /// Session currently leasing `slot`, if any.
+    pub fn lease_of(&self, slot: usize) -> Option<u64> {
+        self.leases[slot]
+    }
+
+    /// Retained (leased) slots — the accounting the serving-side
+    /// `retained_slots` bound audits against.
+    pub fn leased(&self) -> usize {
+        self.leases.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// End `slot`'s lease keeping the rows intact (a resumed turn takes
+    /// the window back). Returns the session that held it, if any.
+    pub fn release_lease(&mut self, slot: usize) -> Option<u64> {
+        self.leases[slot].take()
+    }
+
+    /// Evict a retained slot: drop the lease AND poison-zero the rows —
+    /// an evicted session's activations must be unobservable by whatever
+    /// uses the slot next (the clear-on-free contract, lease-aware).
+    /// Returns the session that held the lease, if any.
+    pub fn evict(&mut self, slot: usize) -> Option<u64> {
+        let lease = self.leases[slot].take();
+        self.clear(slot);
+        lease
+    }
+
     /// Clear-on-free: zero `slot`'s storage and reset its ring so a
-    /// reused slot starts from a state identical to a fresh cache.
+    /// reused slot starts from a state identical to a fresh cache. Also
+    /// drops any lease — cleared state can never back a warm resume.
     pub fn clear(&mut self, slot: usize) {
         let base = slot * self.window * self.width;
         self.data[base..base + self.window * self.width].fill(0.0);
         self.start[slot] = 0;
         self.len[slot] = 0;
+        self.leases[slot] = None;
     }
 
     /// Clear every slot.
@@ -327,5 +375,47 @@ mod tests {
     fn out_of_range_position_panics() {
         let c = SlotCache::new(1, 2, 1);
         let _ = c.row(0, 0);
+    }
+
+    #[test]
+    fn lease_accounting_and_release_keep_rows() {
+        let mut c = SlotCache::new(2, 3, 2);
+        c.extend(0, &[1.0, 1.0, 2.0, 2.0]);
+        assert_eq!(c.lease_of(0), None);
+        assert_eq!(c.leased(), 0);
+        c.lease(0, 42);
+        c.lease(1, 7);
+        assert_eq!(c.lease_of(0), Some(42));
+        assert_eq!(c.leased(), 2);
+        // A resumed turn takes the window back: rows intact, lease gone.
+        assert_eq!(c.release_lease(0), Some(42));
+        assert_eq!(c.lease_of(0), None);
+        assert_eq!(c.leased(), 1);
+        assert_eq!(c.len(0), 2);
+        assert_eq!(c.row(0, 1), &[2.0, 2.0]);
+        assert_eq!(c.release_lease(0), None, "release is idempotent");
+    }
+
+    #[test]
+    fn evict_poisons_rows_and_drops_the_lease() {
+        let mut c = SlotCache::new(2, 3, 2);
+        c.extend(0, &[3.0; 6]);
+        c.lease(0, 9);
+        // Poison beyond what the API wrote, then evict: storage must be
+        // zeroed and the slot indistinguishable from a fresh one.
+        for v in c.raw_slot_mut(0).iter_mut() {
+            *v = f32::NAN;
+        }
+        assert_eq!(c.evict(0), Some(9));
+        assert!(c.is_empty(0));
+        assert_eq!(c.lease_of(0), None);
+        assert!(c.raw_slot_mut(0).iter().all(|&v| v == 0.0), "evict must zero the storage");
+        assert_eq!(c.evict(0), None, "evicting an unleased slot reports no session");
+        // clear() on a leased slot also drops the mark.
+        c.extend(1, &[4.0; 2]);
+        c.lease(1, 11);
+        c.clear(1);
+        assert_eq!(c.lease_of(1), None);
+        assert_eq!(c.leased(), 0);
     }
 }

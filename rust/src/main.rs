@@ -24,6 +24,9 @@ struct Args {
     exp: Option<String>,
     engine: String,
     requests: usize,
+    /// Conversation turns per request in `serve` (1 = one-shot requests;
+    /// > 1 drives resumable sessions through the session store).
+    turns: usize,
     cfg: LcdConfig,
 }
 
@@ -37,6 +40,7 @@ fn parse_args() -> Result<Args> {
     let mut exp = None;
     let mut engine = "lut".to_string();
     let mut requests = 32usize;
+    let mut turns = 1usize;
     let mut i = 1;
     // --config applies first so --set/--model can override it.
     let mut sets: Vec<String> = Vec::new();
@@ -61,7 +65,10 @@ fn parse_args() -> Result<Args> {
             "--exp" => exp = Some(take(&mut i)?),
             "--engine" => engine = take(&mut i)?,
             "--requests" => requests = take(&mut i)?.parse()?,
+            "--turns" => turns = take(&mut i)?.parse()?,
             "--workers" => sets.push(format!("serve.workers={}", take(&mut i)?)),
+            "--retained-slots" => sets.push(format!("serve.retained_slots={}", take(&mut i)?)),
+            "--retain-ttl" => sets.push(format!("serve.retain_ttl_iters={}", take(&mut i)?)),
             "--gemm-threads" => sets.push(format!("gemm_threads={}", take(&mut i)?)),
             "--admission" => sets.push(format!("serve.admission={}", take(&mut i)?)),
             "--draft-k" => sets.push(format!("serve.draft_k={}", take(&mut i)?)),
@@ -74,7 +81,7 @@ fn parse_args() -> Result<Args> {
     for kv in &sets {
         cfg.set_override(kv)?;
     }
-    Ok(Args { command, exp, engine, requests, cfg })
+    Ok(Args { command, exp, engine, requests, turns, cfg })
 }
 
 const HELP: &str = "\
@@ -90,6 +97,10 @@ flags:
   --act-bits 8|4   --seed N   --artifacts <dir>
   --engine lut|fp|host|cached|speculative
   --requests N     --workers N (serve worker threads)
+  --turns N        (conversation turns per session; > 1 = resumable
+                   multi-turn serving through the session store)
+  --retained-slots N  --retain-ttl N (warm-resume slot leases per worker
+                   and their TTL in worker iterations)
   --admission fifo|spf|token_budget (serve admission policy)
   --draft-k N      --draft narrow|oracle (speculative draft engine)
   --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)
@@ -97,7 +108,10 @@ flags:
 independent of seq, bit-identical logits to the full host engine;
 speculative = cached + draft-and-verify: a cheap draft proposes draft_k
 tokens, the target bulk-verifies them in one window pass — greedy
-acceptance keeps the emitted stream bit-identical to cached decode)";
+acceptance keeps the emitted stream bit-identical to cached decode;
+multi-turn sessions resume from retained slot caches where leased, and
+fall back to cold prefill of the full history where not — the emitted
+stream is bit-identical either way)";
 
 fn main() -> Result<()> {
     let args = parse_args()?;
@@ -105,7 +119,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args.cfg),
         "compress" => cmd_compress(&args.cfg),
         "eval" => cmd_eval(&args.cfg),
-        "serve" => cmd_serve(&args.cfg, &args.engine, args.requests),
+        "serve" => cmd_serve(&args.cfg, &args.engine, args.requests, args.turns),
         "repro" => {
             let exp = args.exp.context("repro needs --exp <id>")?;
             repro::run(&exp, &args.cfg)
@@ -191,7 +205,7 @@ fn cmd_eval(cfg: &LcdConfig) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize) -> Result<()> {
+fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize, turns: usize) -> Result<()> {
     // Artifact engines train-or-load a checkpoint inside build_engine;
     // materialize it once up front so N workers load instead of racing
     // N concurrent trainings onto the same checkpoint file.
@@ -202,35 +216,71 @@ fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize) -> Result<()
     }
     // Each worker builds its own engine (and PJRT runtime) inside its
     // worker thread; `serve.workers` controls the pool width. Every
-    // engine kind rides the prefill/decode split loop: "cached" serves
-    // incrementally, the rest recompute behind the same interface.
+    // engine kind rides the resume/prefill/decode split loop: "cached"
+    // serves incrementally, the rest recompute behind the same
+    // interface; finished session turns retain their slot caches under
+    // `serve.retained_slots` leases for warm resume.
     let policy = cfg.serve.admission_policy()?;
     let cfg2 = cfg.clone();
     let engine_kind2 = engine_kind.to_string();
-    let handle = server::start_pool_step(
+    let handle = server::start_pool_session(
         cfg.serve.workers,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
         policy,
+        cfg.serve.session_options(),
         move |_worker| lcd::repro::shared::build_step_engine(&cfg2, &engine_kind2),
     );
 
     let tok = CharTokenizer::new();
     let prompts = ["the cat ", "a bird moves ", "two plus three is ", "the river is "];
-    let mut rxs = Vec::new();
-    for i in 0..n_requests {
-        let p = tok.encode(prompts[i % prompts.len()]);
-        rxs.push(handle.submit(p, cfg.serve.gen_tokens));
-    }
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv()?;
-        if i < 4 {
-            println!(
-                "req {:>3}: '{}' ({:.1} ms)",
-                resp.id,
-                tok.decode(&resp.tokens),
-                resp.latency.as_secs_f64() * 1e3
-            );
+    if turns <= 1 {
+        let mut rxs = Vec::new();
+        for i in 0..n_requests {
+            let p = tok.encode(prompts[i % prompts.len()]);
+            rxs.push(handle.submit(p, cfg.serve.gen_tokens));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv()?;
+            if i < 4 {
+                println!(
+                    "req {:>3}: '{}' ({:.1} ms)",
+                    resp.id,
+                    tok.decode(&resp.tokens),
+                    resp.latency.as_secs_f64() * 1e3
+                );
+            }
+        }
+    } else {
+        // Multi-turn conversations: every "request" becomes a session of
+        // `turns` turns; turn t > 0 resumes from the retained slot cache
+        // of turn t-1 where leased (warm), or cold-prefills the whole
+        // history where not — emitted streams are identical either way.
+        let follows = ["and then ", "so the ", "after that "];
+        let mut store = lcd::coordinator::SessionStore::new();
+        let ids: Vec<_> = (0..n_requests).map(|_| store.open()).collect();
+        for t in 0..turns {
+            let mut rxs = Vec::new();
+            for (i, &id) in ids.iter().enumerate() {
+                let user = if t == 0 {
+                    tok.encode(prompts[i % prompts.len()])
+                } else {
+                    tok.encode(follows[(i + t) % follows.len()])
+                };
+                let turn = store.turn(id, &user)?;
+                rxs.push((id, handle.submit_turn(turn, cfg.serve.gen_tokens)));
+            }
+            for (i, (id, rx)) in rxs.into_iter().enumerate() {
+                let resp = rx.recv()?;
+                store.record(id, &resp.tokens)?;
+                if i < 2 {
+                    println!(
+                        "turn {t} {id}: '{}' ({:.1} ms)",
+                        tok.decode(&resp.tokens),
+                        resp.latency.as_secs_f64() * 1e3
+                    );
+                }
+            }
         }
     }
     let report = handle.shutdown_report();

@@ -196,6 +196,7 @@ fn batcher_backpressure_under_load() {
             gen_tokens: 1,
             reply: tx.clone(),
             t_submit: std::time::Instant::now(),
+            session: None,
         }) {
             accepted += 1;
         }

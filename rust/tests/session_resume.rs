@@ -1,0 +1,327 @@
+//! Acceptance suite for the resumable-session subsystem.
+//!
+//! The anchor property: a conversation resumed across turns emits a
+//! token stream **bit-identical** to the same token sequence run as one
+//! uninterrupted request — across engines {cached, speculative,
+//! full-recompute fallback} × workers {1, 4} × admission policies
+//! {fifo, spf, token_budget}, warm (lease hit, zero re-prefill) and
+//! cold (lease evicted/expired/absent → full-history prefill) alike.
+//!
+//! Plus the eviction properties: after a forced eviction the session
+//! still completes correctly via the cold-prefill fallback (no
+//! stale-cache reuse — poison-tested at the engine level), and TTL
+//! expiry behaves the same way.
+
+use lcd::coordinator::{
+    start_pool_session, AdmissionPolicy, CachedLutEngine, FullRecomputeStep, HostLutEngine,
+    HostLutSpec, ServerHandle, SessionOptions, SessionStore, SpeculativeEngine, StepEngine,
+};
+use lcd::util::argmax;
+
+const SEQ: usize = 16;
+const GEN: usize = 5;
+
+fn spec() -> HostLutSpec {
+    HostLutSpec {
+        batch: 4,
+        seq: SEQ,
+        vocab: 24,
+        hidden: 24,
+        depth: 2,
+        centroids: 6,
+        seed: 31,
+        gemm_threads: 1,
+        gemm_shard_rows: 0,
+    }
+}
+
+fn narrow_spec() -> HostLutSpec {
+    HostLutSpec { hidden: 12, depth: 1, seed: 31 ^ 0xd4af, ..spec() }
+}
+
+/// Build one serving engine of the given kind. All kinds share the same
+/// target weights (seeded spec), so every configuration must emit the
+/// same greedy streams.
+fn mk_engine(kind: &str) -> anyhow::Result<Box<dyn StepEngine>> {
+    Ok(match kind {
+        "cached" => Box::new(CachedLutEngine::build(spec())?),
+        "full" => Box::new(FullRecomputeStep::new(HostLutEngine::build(spec())?)?),
+        "speculative" => Box::new(SpeculativeEngine::new(
+            CachedLutEngine::build(spec())?,
+            // Narrow draft: real rejections, so rollback interleaves
+            // with retention across turn boundaries.
+            CachedLutEngine::build(narrow_spec())?,
+            3,
+        )?),
+        other => anyhow::bail!("unknown test engine '{other}'"),
+    })
+}
+
+/// Greedy stream of a fresh uninterrupted request with this prompt — the
+/// reference every resumed turn must match to the bit.
+fn reference_stream(prompt: &[i32], gen: usize) -> Vec<i32> {
+    let mut e = CachedLutEngine::build(spec()).unwrap();
+    let mut p = prompt.to_vec();
+    if p.is_empty() {
+        p.push(0);
+    }
+    let row = e.prefill(0, &p).unwrap();
+    let mut out = Vec::with_capacity(gen);
+    let mut tok = argmax(&row) as i32;
+    out.push(tok);
+    while out.len() < gen {
+        let row = e.decode_step(0, tok).unwrap();
+        tok = argmax(&row) as i32;
+        out.push(tok);
+    }
+    out
+}
+
+/// Per-session user turns (token ids < vocab 24).
+fn conversations() -> Vec<Vec<Vec<i32>>> {
+    vec![
+        vec![vec![3, 1, 4], vec![2, 7], vec![9]],
+        vec![vec![5, 5, 2, 8], vec![6], vec![1, 3]],
+        vec![vec![10, 11], vec![12, 0, 4], vec![8]],
+    ]
+}
+
+/// Simulate every conversation on the reference engine: per session, per
+/// turn, the (full-history prompt, expected generated tokens) pair.
+fn expected_turns() -> Vec<Vec<(Vec<i32>, Vec<i32>)>> {
+    conversations()
+        .iter()
+        .map(|turns| {
+            let mut history: Vec<i32> = Vec::new();
+            turns
+                .iter()
+                .map(|user| {
+                    history.extend_from_slice(user);
+                    let prompt = history.clone();
+                    let toks = reference_stream(&prompt, GEN);
+                    history.extend_from_slice(&toks);
+                    (prompt, toks)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Drive the conversations through a pool, asserting every turn's stream
+/// against the uninterrupted reference. Returns the aggregate snapshot.
+fn drive_pool(handle: ServerHandle, label: &str) -> lcd::coordinator::MetricsSnapshot {
+    let expected = expected_turns();
+    let mut store = SessionStore::new();
+    let ids: Vec<_> = (0..expected.len()).map(|_| store.open()).collect();
+    let convs = conversations();
+    for t in 0..3 {
+        let mut rxs = Vec::new();
+        for (s, &id) in ids.iter().enumerate() {
+            let turn = store.turn(id, &convs[s][t]).unwrap();
+            assert_eq!(turn.prompt, expected[s][t].0, "{label}: sess {s} turn {t} prompt");
+            assert_eq!(turn.resume.is_some(), t > 0, "{label}: resume info presence");
+            rxs.push((s, id, handle.submit_turn(turn, GEN)));
+        }
+        for (s, id, rx) in rxs {
+            let resp = rx.recv().unwrap_or_else(|_| {
+                panic!("{label}: sess {s} turn {t} dropped (worker died?)")
+            });
+            assert_eq!(
+                resp.tokens, expected[s][t].1,
+                "{label}: sess {s} turn {t} diverged from the uninterrupted reference"
+            );
+            store.record(id, &resp.tokens).unwrap();
+        }
+    }
+    handle.shutdown()
+}
+
+#[test]
+fn resumed_streams_match_uninterrupted_across_engines_workers_policies() {
+    let policies = [
+        ("fifo", AdmissionPolicy::Fifo),
+        ("spf", AdmissionPolicy::ShortestPromptFirst),
+        ("budget", AdmissionPolicy::TokenBudget { max_prefill_tokens: 8 }),
+    ];
+    for kind in ["cached", "full", "speculative"] {
+        for workers in [1usize, 4] {
+            for (pname, policy) in policies {
+                let label = format!("{kind} w{workers} {pname}");
+                let opts = SessionOptions { retained_slots: 4, retain_ttl_iters: 0 };
+                let handle = start_pool_session(workers, 4, 64, policy, opts, move |_w| {
+                    mk_engine(kind)
+                });
+                let snap = drive_pool(handle, &label);
+                assert_eq!(snap.completed, 9, "{label}");
+                // Sequential turns + routed placement: every resumed
+                // turn must land warm, whatever the worker count.
+                assert_eq!(snap.cache_hits, 6, "{label}: resumed turns must all hit");
+                assert_eq!(snap.cache_misses, 0, "{label}");
+                assert_eq!(snap.cache_hit_rate(), Some(1.0), "{label}");
+                assert!(snap.resumed_tokens > 0, "{label}: warm feeds must be counted");
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_resume_adds_zero_prefill_tokens() {
+    let opts = SessionOptions { retained_slots: 4, retain_ttl_iters: 0 };
+    let handle =
+        start_pool_session(1, 4, 64, AdmissionPolicy::Fifo, opts, |_w| mk_engine("cached"));
+    let snap = drive_pool(handle, "warm prefill accounting");
+    // Only first turns prefill (window-clipped); resumed turns feed
+    // pending + append through the resume phase instead.
+    let expected_prefill: u64 = conversations()
+        .iter()
+        .map(|turns| turns[0].len().clamp(1, SEQ - 1) as u64)
+        .sum();
+    assert_eq!(snap.prefill_tokens, expected_prefill, "warm resumes must not prefill");
+    let expected_resumed: u64 = conversations()
+        .iter()
+        .flat_map(|turns| turns[1..].iter())
+        .map(|user| user.len() as u64 + 1)
+        .sum();
+    assert_eq!(snap.resumed_tokens, expected_resumed, "each warm feed = pending + append");
+    assert_eq!(snap.cache_evictions, 0);
+}
+
+#[test]
+fn forced_eviction_falls_back_to_cold_prefill() {
+    // Capacity 1: session B's retention steals A's lease (LRU), so A's
+    // resume must miss and cold-prefill the full history — emitting the
+    // exact reference stream regardless (no stale-cache reuse).
+    let opts = SessionOptions { retained_slots: 1, retain_ttl_iters: 0 };
+    let handle =
+        start_pool_session(1, 4, 64, AdmissionPolicy::Fifo, opts, |_w| mk_engine("cached"));
+    let mut store = SessionStore::new();
+    let a = store.open();
+    let b = store.open();
+
+    let ta1 = store.turn(a, &[3, 1, 4]).unwrap();
+    let ra1 = handle.submit_turn(ta1, GEN).recv().unwrap();
+    assert_eq!(ra1.tokens, reference_stream(&[3, 1, 4], GEN));
+    store.record(a, &ra1.tokens).unwrap();
+
+    // B finishes later: with one lease slot, retaining B evicts A.
+    let tb1 = store.turn(b, &[7, 2]).unwrap();
+    let rb1 = handle.submit_turn(tb1, GEN).recv().unwrap();
+    assert_eq!(rb1.tokens, reference_stream(&[7, 2], GEN));
+    store.record(b, &rb1.tokens).unwrap();
+
+    // A's resume: lease gone → routed nowhere → cold-prefill fallback.
+    let ta2 = store.turn(a, &[9, 6]).unwrap();
+    assert!(ta2.resume.is_some(), "the client still asks to resume");
+    let want = reference_stream(&ta2.prompt, GEN);
+    let ra2 = handle.submit_turn(ta2, GEN).recv().unwrap();
+    assert_eq!(ra2.tokens, want, "evicted session diverged under cold fallback");
+
+    let snap = handle.shutdown();
+    assert_eq!(snap.completed, 3);
+    assert!(snap.cache_evictions >= 1, "B's retention must evict A's lease");
+    assert_eq!(snap.cache_misses, 1, "A's resume must miss");
+    assert_eq!(snap.cache_hits, 0);
+}
+
+#[test]
+fn ttl_expired_lease_evicts_and_resume_misses() {
+    // TTL 1 iteration: any unrelated traffic between A's turns ages the
+    // lease out, so the resume must miss — and still emit the reference.
+    let opts = SessionOptions { retained_slots: 2, retain_ttl_iters: 1 };
+    let handle =
+        start_pool_session(1, 2, 64, AdmissionPolicy::Fifo, opts, |_w| mk_engine("cached"));
+    let mut store = SessionStore::new();
+    let a = store.open();
+    let ta1 = store.turn(a, &[5, 8]).unwrap();
+    let ra1 = handle.submit_turn(ta1, GEN).recv().unwrap();
+    store.record(a, &ra1.tokens).unwrap();
+    // Unrelated one-shot traffic advances the worker's iteration clock.
+    for i in 0..3 {
+        let rx = handle.submit(vec![i + 1, i + 2], 4);
+        assert!(rx.recv().is_ok());
+    }
+    let ta2 = store.turn(a, &[2]).unwrap();
+    assert!(ta2.resume.is_some());
+    let want = reference_stream(&ta2.prompt, GEN);
+    let ra2 = handle.submit_turn(ta2, GEN).recv().unwrap();
+    assert_eq!(ra2.tokens, want, "expired session diverged under cold fallback");
+    let snap = handle.shutdown();
+    assert!(snap.cache_evictions >= 1, "the TTL sweep must evict the idle lease");
+    assert_eq!(snap.cache_misses, 1);
+    assert_eq!(snap.cache_hits, 0);
+}
+
+#[test]
+fn retention_disabled_always_cold_prefills() {
+    let opts = SessionOptions { retained_slots: 0, retain_ttl_iters: 0 };
+    let handle =
+        start_pool_session(1, 4, 64, AdmissionPolicy::Fifo, opts, |_w| mk_engine("cached"));
+    let snap = drive_pool(handle, "retention off");
+    assert_eq!(snap.cache_hits, 0, "no leases → no warm resumes");
+    assert_eq!(snap.cache_misses, 6, "every resumed turn cold-prefills");
+    assert_eq!(snap.resumed_tokens, 0);
+    assert_eq!(snap.cache_evictions, 0);
+}
+
+#[test]
+fn evicted_engine_slot_is_poison_cleared() {
+    // The engine-level half of the eviction property: retain, poison the
+    // raw storage, evict — a reused slot must be indistinguishable from
+    // a fresh engine's, so stale retained activations can never leak
+    // into the cold-prefill fallback.
+    let mut e = CachedLutEngine::build(spec()).unwrap();
+    e.prefill(2, &[4, 9, 1]).unwrap();
+    assert!(e.retain_slot(2, 77));
+    assert_eq!(e.cache_mut().lease_of(2), Some(77));
+    for v in e.cache_mut().raw_slot_mut(2).iter_mut() {
+        *v = f32::NAN;
+    }
+    e.free_slot(2); // the eviction path
+    assert_eq!(e.cache_mut().lease_of(2), None);
+    assert!(e.cache_mut().raw_slot_mut(2).iter().all(|&v| v == 0.0));
+    let mut fresh = CachedLutEngine::build(spec()).unwrap();
+    assert_eq!(
+        e.prefill(2, &[6, 6]).unwrap(),
+        fresh.prefill(2, &[6, 6]).unwrap(),
+        "stale retained activations leaked past eviction"
+    );
+    assert_eq!(e.decode_step(2, 3).unwrap(), fresh.decode_step(2, 3).unwrap());
+}
+
+#[test]
+fn warm_resume_equals_cold_resume_bitwise_at_the_engine() {
+    // Engine-level statement of the warm/cold equivalence the serving
+    // paths rely on: resuming a retained window emits the same logits
+    // argmax chain as cold-prefilling the full history.
+    let mut warm = CachedLutEngine::build(spec()).unwrap();
+    let mut cold = CachedLutEngine::build(spec()).unwrap();
+    let history = vec![3i32, 1, 4, 1, 5, 9, 2, 6];
+    let row = warm.prefill(0, &history).unwrap();
+    let pending = argmax(&row) as i32;
+    assert!(warm.retain_slot(0, 5));
+    let append = vec![7i32, 8];
+    // Warm: feed [pending] + append onto the retained window.
+    let mut feed = vec![pending];
+    feed.extend_from_slice(&append);
+    let warm_row = warm.resume_many(&[(0, feed)]).unwrap().pop().unwrap();
+    // Cold: fresh prefill of history + pending + append.
+    let mut full = history.clone();
+    full.push(pending);
+    full.extend_from_slice(&append);
+    let cold_row = cold.prefill(0, &full).unwrap();
+    assert_eq!(
+        argmax(&warm_row),
+        argmax(&cold_row),
+        "warm and cold resume sampled different first tokens"
+    );
+    // And the decoded continuations stay identical.
+    let mut tw = argmax(&warm_row) as i32;
+    let mut tc = tw;
+    for step in 0..8 {
+        let rw = warm.decode_step(0, tw).unwrap();
+        let rc = cold.decode_step(0, tc).unwrap();
+        tw = argmax(&rw) as i32;
+        tc = argmax(&rc) as i32;
+        assert_eq!(tw, tc, "step {step} diverged between warm and cold continuations");
+    }
+}
