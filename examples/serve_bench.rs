@@ -28,10 +28,21 @@
 //! must hit its retained slot cache (hit rate 1.0) and warm resumes must
 //! add zero prefill tokens.
 //!
+//! Prompts longer than `--prefill-chunk` rows prefill across scheduler
+//! iterations (chunked prefill), so in-flight decodes never wait on one
+//! long prompt; streams are bit-identical at every chunk size.
+//! `--compare-admission` (with `--turns N > 1`) serves the same session
+//! workload under FIFO and then session-aware token-budget admission and
+//! prints a machine-checkable `PERF_GATE session_budget_ttft` line:
+//! budget admission must not regress warm-resume TTFT nor demote warm
+//! hits.
+//!
 //! Run: `cargo run --release --example serve_bench -- \
 //!       [requests] [gen_tokens] [--engine host|cached|speculative|fp|lut] \
-//!       [--admission fifo|spf|token_budget] [--draft-k N] [--draft narrow|oracle] \
-//!       [--turns N] [--resume-rate R] [--retained-slots N] [--workers N]`
+//!       [--admission fifo|spf|token_budget] [--prefill-chunk N] \
+//!       [--draft-k N] [--draft narrow|oracle] \
+//!       [--turns N] [--resume-rate R] [--retained-slots N] [--workers N] \
+//!       [--compare-admission]`
 //! Without `--engine`, sweeps host and cached across worker counts, then
 //! the speculative engine across draft kinds.
 
@@ -52,14 +63,15 @@ fn drive(
     n_requests: usize,
     gen_tokens: usize,
 ) -> anyhow::Result<usize> {
-    let policy = cfg.serve.admission_policy().expect("admission policy validated on load");
+    let sched = cfg.serve.scheduler_config().expect("scheduler config validated on load");
     let cfg2 = cfg.clone();
     let engine_name = engine.to_string();
-    let handle = server::start_pool_step(
+    let handle = server::start_pool_sched(
         workers,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
-        policy,
+        sched,
+        lcd::coordinator::SessionOptions::default(),
         move |_worker| build_step_engine(&cfg2, &engine_name),
     );
 
@@ -109,15 +121,15 @@ fn drive_sessions(
     turns: usize,
     gen_tokens: usize,
     resume_rate: f64,
-) -> anyhow::Result<()> {
-    let policy = cfg.serve.admission_policy().expect("admission policy validated on load");
+) -> anyhow::Result<lcd::coordinator::MetricsSnapshot> {
+    let sched = cfg.serve.scheduler_config().expect("scheduler config validated on load");
     let cfg2 = cfg.clone();
     let engine_name = engine.to_string();
-    let handle = server::start_pool_session(
+    let handle = server::start_pool_sched(
         workers,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
-        policy,
+        sched,
         cfg.serve.session_options(),
         move |_worker| build_step_engine(&cfg2, &engine_name),
     );
@@ -197,7 +209,7 @@ fn drive_sessions(
         agg.completed,
         n_sessions * turns
     );
-    Ok(())
+    Ok(report.aggregate)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -206,6 +218,7 @@ fn main() -> anyhow::Result<()> {
     let mut engine: Option<String> = None;
     let mut turns = 1usize;
     let mut resume_rate = 1.0f64;
+    let mut compare_admission = false;
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
     while i < argv.len() {
@@ -254,6 +267,15 @@ fn main() -> anyhow::Result<()> {
                     .ok_or_else(|| anyhow::anyhow!("--admission needs a value"))?;
                 cfg.set_override(&format!("serve.admission={v}"))?;
             }
+            "--prefill-chunk" => {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("--prefill-chunk needs a value"))?;
+                cfg.set_override(&format!("serve.prefill_chunk={v}"))?;
+            }
+            "--compare-admission" => compare_admission = true,
             "--draft-k" => {
                 i += 1;
                 let v =
@@ -272,8 +294,10 @@ fn main() -> anyhow::Result<()> {
                 anyhow::bail!(
                     "unknown flag '{other}'\nusage: serve_bench [requests] [gen_tokens] \
                      [--engine host|cached|speculative|fp|lut] \
-                     [--admission fifo|spf|token_budget] [--draft-k N] [--draft narrow|oracle] \
-                     [--turns N] [--resume-rate R] [--retained-slots N] [--workers N]"
+                     [--admission fifo|spf|token_budget] [--prefill-chunk N] \
+                     [--draft-k N] [--draft narrow|oracle] \
+                     [--turns N] [--resume-rate R] [--retained-slots N] [--workers N] \
+                     [--compare-admission]"
                 );
             }
             other => positional.push(other.parse()?),
@@ -282,6 +306,13 @@ fn main() -> anyhow::Result<()> {
     }
     let n_requests = positional.first().copied().unwrap_or(48);
     let gen_tokens = positional.get(1).copied().unwrap_or(12);
+    // The admission-compare gate only exists for session workloads; a
+    // silent no-op here would let a misconfigured CI line go green
+    // without ever evaluating the gate.
+    anyhow::ensure!(
+        !compare_admission || turns > 1,
+        "--compare-admission needs a session workload: pass --turns N with N > 1"
+    );
 
     // Quality gate before timing anything: perplexity measured *through*
     // the serving engine's forward path (parallel LUT kernels included).
@@ -310,18 +341,57 @@ fn main() -> anyhow::Result<()> {
 
     // Multi-turn session workload (the CI warm-resume smoke path runs
     // `--engine cached --turns 3`): positional [requests] counts
-    // sessions, each serving `turns` turns.
+    // sessions, each serving `turns` turns. With `--compare-admission`
+    // the same workload runs under FIFO and then session-aware
+    // token-budget admission, gating that budget admission does not
+    // degrade warm-resume TTFT (or demote any warm hit to cold).
     if turns > 1 {
         let kind = engine.as_deref().unwrap_or("cached");
-        return drive_sessions(
-            &cfg,
-            kind,
-            cfg.serve.workers,
-            n_requests,
-            turns,
-            gen_tokens,
-            resume_rate,
-        );
+        if compare_admission {
+            let mut fifo_cfg = cfg.clone();
+            fifo_cfg.set_override("serve.admission=fifo")?;
+            let fifo = drive_sessions(
+                &fifo_cfg,
+                kind,
+                fifo_cfg.serve.workers,
+                n_requests,
+                turns,
+                gen_tokens,
+                resume_rate,
+            )?;
+            let mut budget_cfg = cfg.clone();
+            budget_cfg.set_override("serve.admission=token_budget")?;
+            let budget = drive_sessions(
+                &budget_cfg,
+                kind,
+                budget_cfg.serve.workers,
+                n_requests,
+                turns,
+                gen_tokens,
+                resume_rate,
+            )?;
+            // Session-aware budget admission charges warm resumes their
+            // true row cost and prefers them over cold prefills, so the
+            // warm path must stay warm (same hits) and its TTFT must not
+            // regress beyond timing noise (expected ratio ≈ 1.0; the
+            // 2x limit absorbs CI scheduling jitter on µs-scale runs).
+            let ratio = budget.p50_session_ttft_us.max(1) as f64
+                / fifo.p50_session_ttft_us.max(1) as f64;
+            let limit = 2.0;
+            let ok = ratio <= limit && budget.cache_hits >= fifo.cache_hits;
+            println!(
+                "PERF_GATE session_budget_ttft p50 {}us vs fifo {}us ratio {ratio:.3} \
+                 limit {limit:.2} hits {}/{} {}",
+                budget.p50_session_ttft_us,
+                fifo.p50_session_ttft_us,
+                budget.cache_hits,
+                fifo.cache_hits,
+                if ok { "PASS" } else { "FAIL" }
+            );
+            return Ok(());
+        }
+        drive_sessions(&cfg, kind, cfg.serve.workers, n_requests, turns, gen_tokens, resume_rate)?;
+        return Ok(());
     }
 
     match engine.as_deref() {

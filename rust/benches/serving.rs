@@ -14,8 +14,8 @@
 
 use lcd::coordinator::server::{serve_blocking, Engine};
 use lcd::coordinator::{
-    AdmissionPolicy, Batcher, CachedLutEngine, FullRecomputeStep, GenRequest, GreedyTableDraft,
-    HostLutEngine, HostLutSpec, SpeculativeEngine, StepEngine,
+    AdmissionPolicy, Batcher, CachedLutEngine, ChunkJob, FullRecomputeStep, GenRequest,
+    GreedyTableDraft, HostLutEngine, HostLutSpec, SpeculativeEngine, StepEngine,
 };
 use lcd::util::argmax;
 use lcd::util::bench::Bencher;
@@ -310,6 +310,50 @@ fn main() {
         b.speedup(&format!("resume_warm/seq{seq}"), &format!("resume_cold/seq{seq}"));
     }
 
+    // Chunked prefill: per-iteration cost while a seq-length prompt
+    // prefills ALONGSIDE three in-flight decodes. Unchunked, every such
+    // iteration pays the whole prompt (seq - 1 rows) before the decode
+    // rows; chunked, it pays at most `chunk` prompt rows — so decode
+    // latency under a long prompt must drop by roughly prompt/chunk.
+    println!("== serving: decode latency while a long prompt prefills (seq 256) ==");
+    {
+        let seq = 256usize;
+        let prompt: Vec<i32> = (0..seq - 1).map(|i| (i % 60) as i32).collect();
+        let mut un = CachedLutEngine::build(scaling_spec(seq)).unwrap();
+        let jobs = warm_slots(&mut un, seq);
+        let decode_jobs: Vec<(usize, i32)> =
+            jobs.into_iter().filter(|&(slot, _)| slot != 0).collect();
+        b.bench("long_prompt_iter_unchunked/seq256", || {
+            // One unchunked iteration: the whole prompt replaces slot 0,
+            // then the in-flight slots decode.
+            let rows = un.prefill_many(&[(0usize, prompt.clone())]).unwrap();
+            let d = un.decode_many(&decode_jobs).unwrap();
+            rows[0][0] as f64 + d[0][0] as f64
+        });
+
+        let chunk = 16usize;
+        let mut ch = CachedLutEngine::build(scaling_spec(seq)).unwrap();
+        let _ = warm_slots(&mut ch, seq);
+        let mut off = 0usize;
+        b.bench("long_prompt_iter_chunked16/seq256", || {
+            // One chunked iteration: the next <= 16 prompt rows feed
+            // slot 0 (wrapping back to a fresh first chunk when the
+            // prompt completes), then the same in-flight slots decode.
+            let end = (off + chunk).min(prompt.len());
+            let job = ChunkJob {
+                slot: 0,
+                tokens: prompt[off..end].to_vec(),
+                first: off == 0,
+                last: end == prompt.len(),
+            };
+            let rows = ch.prefill_chunk_many(std::slice::from_ref(&job)).unwrap();
+            off = if end == prompt.len() { 0 } else { end };
+            let d = ch.decode_many(&decode_jobs).unwrap();
+            d[0][0] as f64 + rows.len() as f64
+        });
+        b.speedup("long_prompt_iter_chunked16/seq256", "long_prompt_iter_unchunked/seq256");
+    }
+
     // Machine-checkable perf gates (enforced by the CI smoke job).
     perf_gate(
         &b,
@@ -328,6 +372,16 @@ fn main() {
         "spec_decode_oracle/k4",
         "spec_baseline_cached/k4",
         1.15,
+    );
+    // Chunked prefill must make iterations sharing a seq-length prompt
+    // STRICTLY cheaper than unchunked (16 + 3 rows vs 255 + 3 rows per
+    // iteration; 0.75 leaves wide noise margin over the ~0.1 expected).
+    perf_gate(
+        &b,
+        "chunked_prefill_unblocks_decode",
+        "long_prompt_iter_chunked16/seq256",
+        "long_prompt_iter_unchunked/seq256",
+        0.75,
     );
     b.finish("serving");
 }

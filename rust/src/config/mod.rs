@@ -61,6 +61,15 @@ pub struct ServeConfig {
     pub admission: String,
     /// Prompt-token budget per admission wave under `token_budget`.
     pub max_prefill_tokens: usize,
+    /// Chunked prefill: max prompt rows fed per slot per scheduler
+    /// iteration (>= 1, <= `max_prefill_tokens`). Prompts longer than
+    /// this are split across iterations so in-flight decodes never wait
+    /// on a long prompt. Chunks at or above the clipped prompt length
+    /// behave as one chunk, so chunking is effectively disabled by
+    /// raising this to >= `seq` — lifting `max_prefill_tokens` alongside
+    /// it if needed, since the chunk may never exceed the admission
+    /// budget. Emitted streams are bit-identical at every setting.
+    pub prefill_chunk: usize,
     /// Model window of the host/cached LUT engines (≥ 2).
     pub seq: usize,
     /// Vocab size of the host/cached LUT engines.
@@ -105,6 +114,7 @@ impl Default for ServeConfig {
             workers: 1,
             admission: "fifo".to_string(),
             max_prefill_tokens: 128,
+            prefill_chunk: 32,
             seq: 64,
             vocab: 96,
             hidden: 128,
@@ -125,6 +135,12 @@ impl ServeConfig {
     /// the token-budget cap).
     pub fn admission_policy(&self) -> Result<crate::coordinator::AdmissionPolicy> {
         crate::coordinator::AdmissionPolicy::parse(&self.admission, self.max_prefill_tokens)
+    }
+
+    /// Scheduler configuration (admission policy + chunked-prefill
+    /// bound) for `start_pool_sched`.
+    pub fn scheduler_config(&self) -> Result<crate::coordinator::SchedulerConfig> {
+        crate::coordinator::SchedulerConfig::new(self.admission_policy()?, self.prefill_chunk)
     }
 
     /// Session-retention knobs for `start_pool_session`.
@@ -248,6 +264,9 @@ impl LcdConfig {
             if let Some(v) = s.get("max_prefill_tokens") {
                 cfg.serve.max_prefill_tokens = v.as_usize()?;
             }
+            if let Some(v) = s.get("prefill_chunk") {
+                cfg.serve.prefill_chunk = v.as_usize()?;
+            }
             if let Some(v) = s.get("seq") {
                 cfg.serve.seq = v.as_usize()?;
                 if cfg.serve.seq < 2 {
@@ -292,6 +311,19 @@ impl LcdConfig {
         // currently selected admission policy.
         if cfg.serve.max_prefill_tokens == 0 {
             bail!("serve.max_prefill_tokens must be >= 1");
+        }
+        // Mirroring the guard above: a zero chunk would feed no prompt
+        // rows and stall every prefill forever, and a chunk above the
+        // admission budget could never be exercised within one wave.
+        if cfg.serve.prefill_chunk == 0 {
+            bail!("serve.prefill_chunk must be >= 1 (a zero chunk feeds nothing)");
+        }
+        if cfg.serve.prefill_chunk > cfg.serve.max_prefill_tokens {
+            bail!(
+                "serve.prefill_chunk {} must be <= serve.max_prefill_tokens {}",
+                cfg.serve.prefill_chunk,
+                cfg.serve.max_prefill_tokens
+            );
         }
         // A zero-worker pool would silently clamp to 1 at start time;
         // reject the contradiction at load time instead.
@@ -391,7 +423,30 @@ impl LcdConfig {
                 if v == 0 {
                     bail!("serve.max_prefill_tokens must be >= 1");
                 }
+                if v < self.serve.prefill_chunk {
+                    bail!(
+                        "serve.max_prefill_tokens {v} must be >= serve.prefill_chunk {} \
+                         (lower the chunk first)",
+                        self.serve.prefill_chunk
+                    );
+                }
                 self.serve.max_prefill_tokens = v;
+            }
+            "serve.prefill_chunk" => {
+                let v: usize = value.parse()?;
+                // Mirrors the load-time guards: a zero chunk feeds
+                // nothing, and a chunk above the admission budget can
+                // never be exercised within one wave.
+                if v == 0 {
+                    bail!("serve.prefill_chunk must be >= 1 (a zero chunk feeds nothing)");
+                }
+                if v > self.serve.max_prefill_tokens {
+                    bail!(
+                        "serve.prefill_chunk {v} must be <= serve.max_prefill_tokens {}",
+                        self.serve.max_prefill_tokens
+                    );
+                }
+                self.serve.prefill_chunk = v;
             }
             "serve.speculative" => self.serve.speculative = value.parse()?,
             "serve.draft_k" => {
@@ -607,6 +662,62 @@ mod tests {
         assert_eq!(cfg.serve.workers, 1);
         cfg.set_override("serve.retain_ttl_iters=16").unwrap();
         assert_eq!(cfg.serve.retain_ttl_iters, 16);
+    }
+
+    #[test]
+    fn prefill_chunk_knob_parses_and_validates_on_load() {
+        // The config-file path: a valid chunk parses and reaches the
+        // scheduler configuration.
+        let doc = Json::parse(
+            r#"{"serve": {"prefill_chunk": 16, "admission": "token_budget",
+                "max_prefill_tokens": 48}}"#,
+        )
+        .unwrap();
+        let cfg = LcdConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serve.prefill_chunk, 16);
+        let sched = cfg.serve.scheduler_config().unwrap();
+        assert_eq!(sched.prefill_chunk, 16);
+        assert_eq!(
+            sched.policy,
+            crate::coordinator::AdmissionPolicy::TokenBudget { max_prefill_tokens: 48 }
+        );
+        // Defaults: a chunk within the default budget.
+        let d = LcdConfig::default();
+        assert_eq!(d.serve.prefill_chunk, 32);
+        assert!(d.serve.prefill_chunk <= d.serve.max_prefill_tokens);
+        assert!(d.serve.scheduler_config().is_ok());
+        // Load-time rejections, mirroring the max_prefill_tokens guard:
+        // a zero chunk feeds nothing...
+        let bad = |s: &str| LcdConfig::from_json(&Json::parse(s).unwrap()).is_err();
+        assert!(bad(r#"{"serve": {"prefill_chunk": 0}}"#));
+        // ...and a chunk above the admission budget is unexercisable.
+        assert!(bad(r#"{"serve": {"prefill_chunk": 129}}"#), "129 > default budget 128");
+        assert!(bad(r#"{"serve": {"prefill_chunk": 8, "max_prefill_tokens": 4}}"#));
+        assert!(!bad(r#"{"serve": {"prefill_chunk": 4, "max_prefill_tokens": 4}}"#));
+    }
+
+    #[test]
+    fn prefill_chunk_cli_overrides_validate_and_stay_atomic() {
+        // The CLI-override path mirrors the load-time checks and leaves
+        // the config untouched on failure.
+        let mut cfg = LcdConfig::default();
+        cfg.set_override("serve.prefill_chunk=64").unwrap();
+        assert_eq!(cfg.serve.prefill_chunk, 64);
+        assert!(cfg.set_override("serve.prefill_chunk=0").is_err());
+        assert_eq!(cfg.serve.prefill_chunk, 64, "failed override leaves config untouched");
+        assert!(
+            cfg.set_override("serve.prefill_chunk=200").is_err(),
+            "chunk above the 128 budget must fail"
+        );
+        assert_eq!(cfg.serve.prefill_chunk, 64);
+        // Cross-field order safety: the budget cannot drop below the
+        // chunk in one override...
+        assert!(cfg.set_override("serve.max_prefill_tokens=32").is_err());
+        assert_eq!(cfg.serve.max_prefill_tokens, 128);
+        // ...but lowering the chunk first makes the same budget legal.
+        cfg.set_override("serve.prefill_chunk=16").unwrap();
+        cfg.set_override("serve.max_prefill_tokens=32").unwrap();
+        assert_eq!((cfg.serve.prefill_chunk, cfg.serve.max_prefill_tokens), (16, 32));
     }
 
     #[test]

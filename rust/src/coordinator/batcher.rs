@@ -73,6 +73,11 @@ pub struct Session {
     pub tokens: Vec<i32>,
     /// Prompt length after clipping (first generated position).
     pub prompt_len: usize,
+    /// Prompt tokens fed to the engine so far (chunked-prefill progress):
+    /// the scheduler feeds `tokens[prefilled..]` in `prefill_chunk`-sized
+    /// pieces across iterations, and the session may not decode until
+    /// `prefilled == prompt_len` (see [`Session::prefill_complete`]).
+    pub prefilled: usize,
     pub generated: Vec<i32>,
     /// Draft tokens proposed for this slot by its most recent speculative
     /// verify pass (0 until the first pass) — lets introspection/debug
@@ -98,10 +103,18 @@ impl Session {
             request,
             tokens,
             prompt_len,
+            prefilled: 0,
             generated: Vec::new(),
             draft_depth: 0,
             t_first_token: None,
         }
+    }
+
+    /// Every prompt chunk has been fed: the session may decode. A session
+    /// mid-chunked-prefill has sampled no token yet, so the decode and
+    /// speculation phases must skip it.
+    pub fn prefill_complete(&self) -> bool {
+        self.prefilled >= self.prompt_len
     }
 
     /// Window-clipped prompt cost used by token-budget admission.
@@ -223,8 +236,23 @@ impl Batcher {
     /// server can prefill exactly those sessions without re-scanning all
     /// slots.
     pub fn fill_slots(&mut self, seq: usize) -> Vec<usize> {
+        self.fill_slots_costed(seq, 0)
+    }
+
+    /// Session-aware [`Batcher::fill_slots`]: `carried_cost` prompt-row
+    /// cost was already spent this iteration before policy admission ran
+    /// — the warm resumes the worker reattached, charged their true row
+    /// cost (`append + 1`) under [`AdmissionPolicy::TokenBudget`].
+    /// Resumes are therefore *preferred*: they take budget first, and
+    /// cold prefills only get what remains. The admit-at-least-one rule
+    /// still counts only QUEUED admissions: a steady stream of warm
+    /// resumes may squeeze every wave's leftover budget, and a
+    /// head-of-line prompt that waited a full wave must still be
+    /// admitted — otherwise resume traffic could starve it forever.
+    /// Other policies ignore the carry.
+    pub fn fill_slots_costed(&mut self, seq: usize, carried_cost: usize) -> Vec<usize> {
         let mut admitted = Vec::new();
-        let mut cost = 0usize;
+        let mut cost = carried_cost;
         for slot_idx in 0..self.slots.len() {
             if self.slots[slot_idx].is_some() || self.reserved[slot_idx] {
                 continue;
@@ -267,7 +295,14 @@ impl Batcher {
             return Err(req);
         }
         self.reserved[slot] = false;
-        self.slots[slot] = Some(Session::new(req, seq));
+        let mut sess = Session::new(req, seq);
+        // The retained activation window already covers the whole
+        // history: a warm-resumed session never prefills (the resume
+        // phase feeds `[pending] + append` instead), so the scheduler
+        // must see its prefill as complete or it would re-chunk the
+        // prompt over the retained state.
+        sess.prefilled = sess.prompt_len;
+        self.slots[slot] = Some(sess);
         Ok(())
     }
 
@@ -530,6 +565,52 @@ mod tests {
         assert!(b.fill_slots(16).is_empty());
         b.unreserve(0);
         assert_eq!(b.fill_slots(16), vec![0]);
+    }
+
+    #[test]
+    fn carried_resume_cost_squeezes_token_budget_admission() {
+        // Budget 8 with a warm-resume carry of 5 rows: the first queued
+        // prompt is still admitted (the at-least-one liveness rule — a
+        // steady resume stream must never starve the head of the queue),
+        // but the carry squeezes everything after it out of the wave.
+        let policy = AdmissionPolicy::TokenBudget { max_prefill_tokens: 8 };
+        let mut b = Batcher::with_policy(4, 64, policy);
+        for i in 0..2 {
+            let (r, _rx) = req(i, 4, 1);
+            assert!(b.submit(r));
+        }
+        assert_eq!(
+            b.fill_slots_costed(16, 5).len(),
+            1,
+            "head admits (liveness), second 4-row prompt exceeds the budget with the carry"
+        );
+        // Without the carry the identical wave fits both prompts.
+        let mut b = Batcher::with_policy(4, 64, policy);
+        for i in 0..2 {
+            let (r, _rx) = req(i, 4, 1);
+            assert!(b.submit(r));
+        }
+        assert_eq!(b.fill_slots_costed(16, 0).len(), 2, "4 + 4 rows fit the 8 budget");
+        // Carries are ignored by non-budget policies.
+        let mut b = Batcher::with_policy(2, 64, AdmissionPolicy::Fifo);
+        let (r, _rx) = req(2, 9, 1);
+        assert!(b.submit(r));
+        assert_eq!(b.fill_slots_costed(16, 100).len(), 1);
+    }
+
+    #[test]
+    fn sessions_start_unprefilled_and_placed_resumes_complete() {
+        let (r, _rx) = req(1, 4, 2);
+        let s = Session::new(r, 16);
+        assert_eq!(s.prefilled, 0);
+        assert!(!s.prefill_complete(), "fresh sessions owe their whole prompt");
+        let mut b = Batcher::new(2, 8);
+        b.reserve(1);
+        let (r, _rx) = req(2, 5, 2);
+        assert!(b.place(1, r, 16).is_ok());
+        let sess = b.session_mut(1).unwrap();
+        assert!(sess.prefill_complete(), "warm-resumed sessions never re-prefill");
+        assert_eq!(sess.prefilled, sess.prompt_len);
     }
 
     #[test]

@@ -61,6 +61,7 @@
 
 use super::batcher::window_clip;
 use super::engines::{HostLutModel, HostLutSpec};
+use super::scheduler::ChunkJob;
 use super::server::Engine;
 use crate::lut::{SimdScratch, SlotCache};
 use crate::util::argmax;
@@ -130,6 +131,45 @@ pub trait StepEngine {
     /// rows into as few GEMMs as possible. Default: sequential.
     fn prefill_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
         jobs.iter().map(|(slot, tokens)| self.prefill(*slot, tokens)).collect()
+    }
+
+    /// Chunked prefill: feed one chunk of a (pre-clipped) prompt into
+    /// `slot`, appending rows WITHOUT emitting a token until the final
+    /// chunk. `first` replaces the slot's state (like `prefill`); later
+    /// chunks extend it (like a resume feed). Returns `Some(row)` — the
+    /// logits row predicting the session's first token — only when
+    /// `last` is set.
+    ///
+    /// Exactness: the chunks partition the clipped prompt, every row
+    /// depends only on its own token (position-wise stack), and the ring
+    /// slides identically either way — so the final chunk's row is
+    /// bit-identical to a one-shot `prefill` of the whole prompt. The
+    /// default composes `prefill` + `resume_many`, which is already one
+    /// batched GEMM per chunk on [`CachedLutEngine`].
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        first: bool,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let job =
+            ChunkJob { slot, tokens: tokens.to_vec(), first, last };
+        Ok(self
+            .prefill_chunk_many(std::slice::from_ref(&job))?
+            .pop()
+            .expect("one chunk job yields one entry"))
+    }
+
+    /// Batched [`StepEngine::prefill_chunk`] across slots — one call per
+    /// server iteration. The default groups first chunks through
+    /// `prefill_many` and continuations through `resume_many` (≤ 2
+    /// batched GEMMs per iteration on engines with batched overrides);
+    /// an unchunked plan — every job `first && last` — degenerates to
+    /// exactly the pre-chunking single `prefill_many` call, bit and cost
+    /// identical.
+    fn prefill_chunk_many(&mut self, jobs: &[ChunkJob]) -> Result<Vec<Option<Vec<f32>>>> {
+        prefill_chunks_grouped(self, jobs)
     }
 
     /// Batched decode across active slots (one token each); the server
@@ -229,6 +269,18 @@ impl<S: StepEngine + ?Sized> StepEngine for Box<S> {
     fn prefill_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
         (**self).prefill_many(jobs)
     }
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        first: bool,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        (**self).prefill_chunk(slot, tokens, first, last)
+    }
+    fn prefill_chunk_many(&mut self, jobs: &[ChunkJob]) -> Result<Vec<Option<Vec<f32>>>> {
+        (**self).prefill_chunk_many(jobs)
+    }
     fn decode_many(&mut self, jobs: &[(usize, i32)]) -> Result<Vec<Vec<f32>>> {
         (**self).decode_many(jobs)
     }
@@ -244,6 +296,45 @@ impl<S: StepEngine + ?Sized> StepEngine for Box<S> {
     fn rollback(&mut self, slot: usize, n: usize) -> Result<()> {
         (**self).rollback(slot, n)
     }
+}
+
+/// Shared executor behind [`StepEngine::prefill_chunk_many`]: group
+/// first chunks (state replaced → `prefill_many`) and continuations
+/// (state extended → `resume_many`), then stitch the rows back into job
+/// order. Row independence makes the grouping exact: each returned row
+/// depends only on its own job's tokens.
+fn prefill_chunks_grouped<S: StepEngine + ?Sized>(
+    engine: &mut S,
+    jobs: &[ChunkJob],
+) -> Result<Vec<Option<Vec<f32>>>> {
+    if jobs.is_empty() {
+        return Ok(Vec::new());
+    }
+    for job in jobs {
+        anyhow::ensure!(
+            !job.tokens.is_empty(),
+            "prefill chunk needs tokens (slot {})",
+            job.slot
+        );
+    }
+    let firsts: Vec<(usize, Vec<i32>)> =
+        jobs.iter().filter(|j| j.first).map(|j| (j.slot, j.tokens.clone())).collect();
+    let conts: Vec<(usize, Vec<i32>)> =
+        jobs.iter().filter(|j| !j.first).map(|j| (j.slot, j.tokens.clone())).collect();
+    let first_rows =
+        if firsts.is_empty() { Vec::new() } else { engine.prefill_many(&firsts)? };
+    anyhow::ensure!(first_rows.len() == firsts.len(), "chunk prefill row count mismatch");
+    let cont_rows = if conts.is_empty() { Vec::new() } else { engine.resume_many(&conts)? };
+    anyhow::ensure!(cont_rows.len() == conts.len(), "chunk continuation row count mismatch");
+    let mut first_rows = first_rows.into_iter();
+    let mut cont_rows = cont_rows.into_iter();
+    let mut out = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let row = if job.first { first_rows.next() } else { cont_rows.next() };
+        let row = row.expect("group sizes were checked above");
+        out.push(if job.last { Some(row) } else { None });
+    }
+    Ok(out)
 }
 
 /// Incremental LUT-stack engine: the host model plus a [`SlotCache`] of
@@ -514,6 +605,18 @@ impl StepEngine for CachedLutEngine {
         Ok(logits.chunks(vocab).map(|c| c.to_vec()).collect())
     }
 
+    /// The grouped default, plus [`SlotCache`] partial-prefill marks: a
+    /// slot stays marked `partial` from its first non-final chunk until
+    /// the final chunk lands (or the slot is freed — eviction clears the
+    /// mark with the same poison discipline as everything else).
+    fn prefill_chunk_many(&mut self, jobs: &[ChunkJob]) -> Result<Vec<Option<Vec<f32>>>> {
+        let out = prefill_chunks_grouped(self, jobs)?;
+        for job in jobs {
+            self.cache.set_partial(job.slot, !job.last);
+        }
+        Ok(out)
+    }
+
     fn free_slot(&mut self, slot: usize) {
         // Lease-aware clear: drops any retention mark AND poison-zeroes
         // the rows (the eviction path of the session subsystem).
@@ -664,6 +767,32 @@ impl<E: Engine> StepEngine for FullRecomputeStep<E> {
             self.push(slot, token);
         }
         let slots_only: Vec<usize> = jobs.iter().map(|&(slot, _)| slot).collect();
+        self.forward_rows_at(&slots_only)
+    }
+
+    /// Batched resume (also the chunk-continuation path of
+    /// [`StepEngine::prefill_chunk_many`]): push every job's tokens into
+    /// its window, then ONE full-window forward returns each job's last
+    /// row — bit-identical to the default decode-step loop (same final
+    /// windows, same sampled rows) at a fraction of the forwards.
+    fn resume_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let slots = self.slots();
+        for (slot, tokens) in jobs {
+            anyhow::ensure!(*slot < slots, "slot {slot} out of range ({slots} slots)");
+            anyhow::ensure!(
+                !tokens.is_empty(),
+                "resume needs at least the pending token (slot {slot})"
+            );
+        }
+        for (slot, tokens) in jobs {
+            for &t in tokens {
+                self.push(*slot, t);
+            }
+        }
+        let slots_only: Vec<usize> = jobs.iter().map(|(slot, _)| *slot).collect();
         self.forward_rows_at(&slots_only)
     }
 
@@ -1026,6 +1155,158 @@ mod tests {
             FullRecomputeStep::new(HostLutEngine::build(spec(1)).unwrap()).unwrap();
         let want = fresh.decode_step(0, 5).unwrap();
         assert_eq!(after_free, want, "freed window leaked into a later resume");
+    }
+
+    /// Feed `prompt` through `prefill_chunk` in `chunk`-sized pieces and
+    /// return the final chunk's logits row.
+    fn chunked_prefill<S: StepEngine>(
+        engine: &mut S,
+        slot: usize,
+        prompt: &[i32],
+        chunk: usize,
+    ) -> Vec<f32> {
+        let chunk = chunk.max(1);
+        let mut off = 0usize;
+        let mut out = None;
+        while off < prompt.len() {
+            let end = (off + chunk).min(prompt.len());
+            let row = engine
+                .prefill_chunk(slot, &prompt[off..end], off == 0, end == prompt.len())
+                .unwrap();
+            assert_eq!(row.is_some(), end == prompt.len(), "only the final chunk emits");
+            out = row.or(out);
+            off = end;
+        }
+        out.expect("a non-empty prompt yields a final chunk")
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_shot_bitwise() {
+        // Chunk sizes 1, len-1, len and effectively-disabled must all
+        // produce the one-shot prefill row and an identical decode
+        // continuation, on both the cached engine and the full-recompute
+        // adapter. (Prompts are pre-clipped here, as the scheduler clips
+        // before chunking.)
+        let prompt = [3i32, 7, 1, 9, 4, 2];
+        for chunk in [1usize, prompt.len() - 1, prompt.len(), usize::MAX] {
+            let mut one = CachedLutEngine::build(spec(1)).unwrap();
+            let mut chunked = CachedLutEngine::build(spec(1)).unwrap();
+            let want = one.prefill(0, &prompt).unwrap();
+            let got = chunked_prefill(&mut chunked, 0, &prompt, chunk);
+            assert_eq!(got, want, "cached chunk {chunk} diverged from one-shot prefill");
+            assert_eq!(one.cached_len(0), chunked.cached_len(0));
+            assert!(!chunked.cache_mut().is_partial(0), "final chunk must drop the mark");
+            let mut tok = argmax(&want) as i32;
+            for step in 0..6 {
+                let a = one.decode_step(0, tok).unwrap();
+                let b = chunked.decode_step(0, tok).unwrap();
+                assert_eq!(a, b, "chunk {chunk} decode step {step} diverged");
+                tok = argmax(&a) as i32;
+            }
+
+            let mut one =
+                FullRecomputeStep::new(HostLutEngine::build(spec(1)).unwrap()).unwrap();
+            let mut chunked =
+                FullRecomputeStep::new(HostLutEngine::build(spec(1)).unwrap()).unwrap();
+            let want = one.prefill(1, &prompt).unwrap();
+            let got = chunked_prefill(&mut chunked, 1, &prompt, chunk);
+            assert_eq!(got, want, "full-recompute chunk {chunk} diverged");
+        }
+    }
+
+    #[test]
+    fn batched_chunk_jobs_match_single_slot_chunking() {
+        // One prefill_chunk_many call mixing first chunks, continuations
+        // and final chunks across slots must equal per-slot chunk calls.
+        let mut batched = CachedLutEngine::build(spec(1)).unwrap();
+        let mut single = CachedLutEngine::build(spec(1)).unwrap();
+        // Slot 0 mid-prefill (fed [5, 2] already), slot 1 fresh.
+        for e in [&mut batched, &mut single] {
+            assert!(e.prefill_chunk(0, &[5, 2], true, false).unwrap().is_none());
+        }
+        assert!(batched.cache_mut().is_partial(0));
+        assert_eq!(batched.cache_mut().partial_count(), 1);
+        let jobs = vec![
+            ChunkJob { slot: 0, tokens: vec![8, 1], first: false, last: true },
+            ChunkJob { slot: 1, tokens: vec![4, 4, 6], first: true, last: false },
+        ];
+        let rows = batched.prefill_chunk_many(&jobs).unwrap();
+        let r0 = single.prefill_chunk(0, &[8, 1], false, true).unwrap();
+        let r1 = single.prefill_chunk(1, &[4, 4, 6], true, false).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], r0, "finished slot 0 rows diverged");
+        assert_eq!(rows[1], r1, "mid-prefill slot 1 must emit nothing");
+        assert!(!batched.cache_mut().is_partial(0), "slot 0 finished");
+        assert!(batched.cache_mut().is_partial(1), "slot 1 still mid-prefill");
+        assert!(
+            batched.prefill_chunk_many(&[ChunkJob {
+                slot: 0,
+                tokens: vec![],
+                first: false,
+                last: true
+            }])
+            .is_err(),
+            "empty chunks must fail"
+        );
+    }
+
+    #[test]
+    fn freed_partial_prefill_slot_is_poison_cleared() {
+        // Evicting a slot mid-chunked-prefill must leave it
+        // indistinguishable from a fresh engine's (the clear-on-free
+        // contract extends to partial windows).
+        let mut e = CachedLutEngine::build(spec(1)).unwrap();
+        assert!(e.prefill_chunk(2, &[1, 2, 3], true, false).unwrap().is_none());
+        assert!(e.cache_mut().is_partial(2));
+        for v in e.cache_mut().raw_slot_mut(2).iter_mut() {
+            *v = 1e30;
+        }
+        e.free_slot(2);
+        assert!(!e.cache_mut().is_partial(2), "eviction must drop the partial mark");
+        assert_eq!(e.cached_len(2), 0);
+        assert!(e.cache_mut().raw_slot_mut(2).iter().all(|&v| v == 0.0));
+        let mut fresh = CachedLutEngine::build(spec(1)).unwrap();
+        assert_eq!(
+            e.prefill(2, &[9, 8]).unwrap(),
+            fresh.prefill(2, &[9, 8]).unwrap(),
+            "partial-prefill rows leaked through eviction"
+        );
+    }
+
+    #[test]
+    fn full_recompute_batched_resume_matches_step_loop() {
+        // The new one-forward resume_many override must equal the
+        // sequential decode-step loop bit for bit (including a window
+        // slide) and keep multi-job batches independent.
+        let mut batched =
+            FullRecomputeStep::new(HostLutEngine::build(spec(1)).unwrap()).unwrap();
+        let mut loopy =
+            FullRecomputeStep::new(HostLutEngine::build(spec(1)).unwrap()).unwrap();
+        for slot in 0..2usize {
+            let prompt = vec![slot as i32 + 2, 6, 1];
+            batched.prefill(slot, &prompt).unwrap();
+            loopy.prefill(slot, &prompt).unwrap();
+        }
+        // Slot 0's feed slides past seq 8 (3 prompt + 7 fed rows).
+        let jobs = vec![(0usize, vec![5i32, 9, 2, 8, 3, 1, 7]), (1usize, vec![4i32])];
+        let rows = batched.resume_many(&jobs).unwrap();
+        let sequential: Vec<Vec<f32>> = jobs
+            .iter()
+            .map(|(slot, tokens)| {
+                let mut row = Vec::new();
+                for &t in tokens {
+                    row = loopy.decode_step(*slot, t).unwrap();
+                }
+                row
+            })
+            .collect();
+        assert_eq!(rows, sequential, "batched full-recompute resume diverged");
+        // Decode continues identically after the resume.
+        assert_eq!(
+            batched.decode_step(0, 11).unwrap(),
+            loopy.decode_step(0, 11).unwrap()
+        );
+        assert!(batched.resume_many(&[(0, vec![])]).is_err(), "empty feed must fail");
     }
 
     #[test]

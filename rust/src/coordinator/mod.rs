@@ -46,7 +46,42 @@
 //!   turn lands warm (zero re-prefill) and everything else — evicted,
 //!   expired, first turns — falls back to cold prefill. Resumed streams
 //!   are **bit-identical** to the same tokens run as one uninterrupted
-//!   request, warm or cold (`rust/tests/session_resume.rs`).
+//!   request, warm or cold (`rust/tests/session_resume.rs`);
+//! * [`scheduler`] — the per-iteration planner (see **Scheduler** below).
+//!
+//! # Scheduler
+//!
+//! Every worker iteration executes one [`scheduler::IterationPlan`] in a
+//! fixed phase order:
+//!
+//! 1. **resume** — turns reattached to their retained slot feed
+//!    `[pending] + append` through one batched
+//!    [`StepEngine::resume_many`] call (zero re-prefill);
+//! 2. **chunked prefill** — each mid-prefill session feeds its next
+//!    ≤ `prefill_chunk` prompt rows
+//!    ([`StepEngine::prefill_chunk_many`]: first chunks replace slot
+//!    state, continuations extend it, only the final chunk samples the
+//!    session's first token), so per-iteration prefill work is bounded
+//!    and a seq-length prompt can never stall in-flight decodes;
+//! 3. **decode** — every prefill-complete, unfinished session advances
+//!    one token through one [`StepEngine::decode_many`] call;
+//! 4. **speculate** — engines with `speculation() > 0` run phase 3 as a
+//!    draft + bulk-verify pass instead (up to `draft_k + 1` tokens).
+//!
+//! Admission is session-aware: under [`AdmissionPolicy::TokenBudget`]
+//! the warm resumes of phase 1 charge their true row cost (`append + 1`)
+//! against the wave's budget before cold prefills are admitted, so warm
+//! traffic is preferred exactly when the budget is tight.
+//!
+//! **Bit-identity contract**: phases only re-bracket *when* rows are
+//! fed, never what they contain — the stack is position-wise, chunks
+//! partition the clipped prompt, and greedy acceptance pins speculation
+//! to the target stream. Served token streams are therefore
+//! bit-identical to uninterrupted single-request runs for ANY scheduler
+//! plan: every chunk size × engine {cached, speculative, full-recompute}
+//! × worker count × admission policy × resume rate
+//! (`rust/tests/chunked_prefill.rs` and the shared harness in
+//! `rust/tests/common/`).
 //!
 //! The engine behind the forward pass is pluggable ([`server::Engine`] /
 //! [`StepEngine`]): the FP artifact, the LUT artifact (the paper's §4
@@ -59,6 +94,7 @@ pub mod engines;
 pub mod incremental;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 pub mod session;
 pub mod speculative;
@@ -66,11 +102,12 @@ pub mod speculative;
 pub use batcher::{window_clip, AdmissionPolicy, Batcher, Session};
 pub use engines::{HostLutEngine, HostLutModel, HostLutSpec};
 pub use incremental::{CachedLutEngine, FullRecomputeStep, StepEngine};
-pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
+pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot, TtftDigest};
 pub use router::Router;
+pub use scheduler::{ChunkJob, IterationPlan, Scheduler, SchedulerConfig};
 pub use server::{
-    serve_blocking, serve_blocking_step, start, start_pool, start_pool_session, start_pool_step,
-    Engine, ServerHandle, ServerReport,
+    serve_blocking, serve_blocking_sched, serve_blocking_step, start, start_pool,
+    start_pool_sched, start_pool_session, start_pool_step, Engine, ServerHandle, ServerReport,
 };
 pub use session::{
     Lease, LeaseTable, ResumeTurn, SessionId, SessionMeta, SessionOptions, SessionStore,

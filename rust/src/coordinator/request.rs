@@ -35,6 +35,60 @@ pub struct GenResponse {
     pub latency: Duration,
 }
 
+/// THE nearest-rank percentile rule, shared by every latency/TTFT
+/// digest in the metrics (`sorted` must be ascending; `p` in [0, 1];
+/// empty input reports 0).
+fn nearest_rank(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p.clamp(0.0, 1.0)) as usize]
+}
+
+/// Exact TTFT percentile digest. Samples are stored raw and sorted at
+/// query time, so merging per-worker digests is plain concatenation —
+/// **order-independent by construction**: any merge order of any
+/// partition of the samples yields byte-identical percentiles to one
+/// global digest over the union (the property
+/// `prop_ttft_digest_merge_is_order_independent` pins down).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TtftDigest {
+    samples_us: Vec<u64>,
+}
+
+impl TtftDigest {
+    pub fn record(&mut self, us: u64) {
+        self.samples_us.push(us);
+    }
+
+    /// Fold another worker's digest into this one.
+    pub fn merge(&mut self, other: &TtftDigest) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    /// Nearest-rank percentile in microseconds (`p` in [0, 1]); 0 when
+    /// the digest is empty. Same rank rule as the latency percentiles.
+    pub fn percentile(&self, p: f64) -> u64 {
+        self.percentiles([p])[0]
+    }
+
+    /// Several percentiles over ONE sort of the samples (the snapshot
+    /// path asks for p50/p95/p99 together).
+    pub fn percentiles<const N: usize>(&self, ps: [f64; N]) -> [u64; N] {
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        ps.map(|p| nearest_rank(&s, p))
+    }
+}
+
 /// Online latency/throughput metrics kept by the worker.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -64,6 +118,12 @@ pub struct Metrics {
     /// Tokens fed through warm-resume phases (`pending` + appended user
     /// tokens); the warm counterpart of `prefill_tokens`.
     pub resumed_tokens: u64,
+    /// Prompt chunks fed through chunked-prefill phases (equals the
+    /// number of prefilled prompts when chunking is off/disabled).
+    pub prefill_chunks: u64,
+    /// TTFT samples of completed *session turns* only, kept as an exact
+    /// digest so per-worker percentiles merge order-independently.
+    pub session_ttfts: TtftDigest,
     latencies_us: Vec<u64>,
     ttfts_us: Vec<u64>,
     started: Option<Instant>,
@@ -85,9 +145,18 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     pub cache_evictions: u64,
     pub resumed_tokens: u64,
+    pub prefill_chunks: u64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
     pub p50_ttft_us: u64,
+    pub p95_ttft_us: u64,
+    pub p99_ttft_us: u64,
+    /// Per-session TTFT percentiles (session turns only; 0 when no
+    /// session traffic completed).
+    pub p50_session_ttft_us: u64,
+    pub p95_session_ttft_us: u64,
+    pub p99_session_ttft_us: u64,
+    pub session_ttft_samples: u64,
     pub tokens_per_sec: f64,
     pub wall: Duration,
 }
@@ -99,11 +168,18 @@ impl Metrics {
         }
     }
 
-    pub fn record_completion(&mut self, resp: &GenResponse) {
+    /// Record a finished request. `session` marks a conversation turn
+    /// (carried session metadata): its TTFT also feeds the per-session
+    /// digest behind the `p*_session_ttft_us` percentiles.
+    pub fn record_completion(&mut self, resp: &GenResponse, session: bool) {
         self.completed += 1;
         self.generated_tokens += resp.tokens.len() as u64;
         self.latencies_us.push(resp.latency.as_micros() as u64);
-        self.ttfts_us.push(resp.ttft.as_micros() as u64);
+        let ttft_us = resp.ttft.as_micros() as u64;
+        self.ttfts_us.push(ttft_us);
+        if session {
+            self.session_ttfts.record(ttft_us);
+        }
         self.finished = Some(Instant::now());
     }
 
@@ -123,6 +199,8 @@ impl Metrics {
         self.cache_misses += other.cache_misses;
         self.cache_evictions += other.cache_evictions;
         self.resumed_tokens += other.resumed_tokens;
+        self.prefill_chunks += other.prefill_chunks;
+        self.session_ttfts.merge(&other.session_ttfts);
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.ttfts_us.extend_from_slice(&other.ttfts_us);
         self.started = match (self.started, other.started) {
@@ -136,14 +214,16 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let pct = |v: &[u64], p: f64| -> u64 {
-            if v.is_empty() {
-                return 0;
-            }
+        // One sort per sample set; every percentile reads the shared
+        // nearest-rank rule.
+        let sorted = |v: &[u64]| {
             let mut s = v.to_vec();
             s.sort_unstable();
-            s[((s.len() - 1) as f64 * p) as usize]
+            s
         };
+        let lat = sorted(&self.latencies_us);
+        let ttft = sorted(&self.ttfts_us);
+        let [p50_sess, p95_sess, p99_sess] = self.session_ttfts.percentiles([0.5, 0.95, 0.99]);
         let wall = match (self.started, self.finished) {
             (Some(a), Some(b)) if b > a => b - a,
             _ => Duration::ZERO,
@@ -166,9 +246,16 @@ impl Metrics {
             cache_misses: self.cache_misses,
             cache_evictions: self.cache_evictions,
             resumed_tokens: self.resumed_tokens,
-            p50_latency_us: pct(&self.latencies_us, 0.5),
-            p99_latency_us: pct(&self.latencies_us, 0.99),
-            p50_ttft_us: pct(&self.ttfts_us, 0.5),
+            prefill_chunks: self.prefill_chunks,
+            p50_latency_us: nearest_rank(&lat, 0.5),
+            p99_latency_us: nearest_rank(&lat, 0.99),
+            p50_ttft_us: nearest_rank(&ttft, 0.5),
+            p95_ttft_us: nearest_rank(&ttft, 0.95),
+            p99_ttft_us: nearest_rank(&ttft, 0.99),
+            p50_session_ttft_us: p50_sess,
+            p95_session_ttft_us: p95_sess,
+            p99_session_ttft_us: p99_sess,
+            session_ttft_samples: self.session_ttfts.len() as u64,
             tokens_per_sec,
             wall,
         }
@@ -213,10 +300,20 @@ impl MetricsSnapshot {
         } else {
             String::new()
         };
+        let sess_ttft = if self.session_ttft_samples > 0 {
+            format!(
+                "  sess-ttft p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
+                self.p50_session_ttft_us as f64 / 1e3,
+                self.p95_session_ttft_us as f64 / 1e3,
+                self.p99_session_ttft_us as f64 / 1e3,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "completed {:>5}  rejected {:>3}  tokens {:>6}  steps {:>5}  \
              prefill {:>6}  decode {:>6}  \
-             p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s{spec}{sess}",
+             p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s{spec}{sess}{sess_ttft}",
             self.completed,
             self.rejected,
             self.generated_tokens,
@@ -246,7 +343,9 @@ mod tests {
                 ttft: Duration::from_micros(i * 10),
                 latency: Duration::from_micros(i * 100),
             };
-            m.record_completion(&resp);
+            // Every third completion is a session turn, so the session
+            // digest covers a strict subset of the TTFT samples.
+            m.record_completion(&resp, i % 3 == 0);
         }
         let s = m.snapshot();
         assert_eq!(s.completed, 100);
@@ -254,6 +353,14 @@ mod tests {
         assert_eq!(s.p50_latency_us, 5000);
         assert!(s.p99_latency_us >= 9900);
         assert!(s.tokens_per_sec > 0.0);
+        // TTFT tail percentiles bracket the median.
+        assert!(s.p95_ttft_us >= s.p50_ttft_us);
+        assert!(s.p99_ttft_us >= s.p95_ttft_us);
+        // Session turns i ∈ {3, 6, ..., 99}: 33 samples.
+        assert_eq!(s.session_ttft_samples, 33);
+        assert!(s.p50_session_ttft_us > 0);
+        assert!(s.p99_session_ttft_us <= 1000);
+        assert!(s.report().contains("sess-ttft p50/p95/p99"));
     }
 
     #[test]
@@ -283,12 +390,15 @@ mod tests {
             m.prefill_tokens = n * 3;
             m.decode_tokens = n;
             for i in 1..=n {
-                m.record_completion(&GenResponse {
-                    id: i,
-                    tokens: vec![0; 2],
-                    ttft: Duration::from_micros(base_us * i),
-                    latency: Duration::from_micros(base_us * i * 2),
-                });
+                m.record_completion(
+                    &GenResponse {
+                        id: i,
+                        tokens: vec![0; 2],
+                        ttft: Duration::from_micros(base_us * i),
+                        latency: Duration::from_micros(base_us * i * 2),
+                    },
+                    false,
+                );
             }
             m
         };
@@ -347,14 +457,77 @@ mod tests {
         };
         m.record_start();
         for j in 1..=(3 + i) {
-            m.record_completion(&GenResponse {
-                id: j,
-                tokens: vec![0; (1 + i) as usize],
-                ttft: Duration::from_micros(10 * (i + 1) * j),
-                latency: Duration::from_micros(100 * (i + 1) * j),
-            });
+            // Odd completions are session turns, so the per-session TTFT
+            // digest participates in the order-independence property.
+            m.record_completion(
+                &GenResponse {
+                    id: j,
+                    tokens: vec![0; (1 + i) as usize],
+                    ttft: Duration::from_micros(10 * (i + 1) * j),
+                    latency: Duration::from_micros(100 * (i + 1) * j),
+                },
+                j % 2 == 1,
+            );
         }
         m
+    }
+
+    #[test]
+    fn prop_ttft_digest_merge_is_order_independent() {
+        use crate::util::proptest::{forall, PropConfig};
+        use crate::util::Rng;
+        // Any partition of TTFT samples across workers, merged in any
+        // order, must yield the same p50/p95/p99 as one global digest
+        // over the union.
+        forall(
+            &PropConfig { cases: 64, seed: 0x77f7, ..Default::default() },
+            |rng: &mut Rng| {
+                let workers = 1 + rng.below(5);
+                let shards: Vec<Vec<u64>> = (0..workers)
+                    .map(|_| {
+                        let n = rng.below(40);
+                        (0..n).map(|_| rng.below(1_000_000) as u64).collect()
+                    })
+                    .collect();
+                // A random merge order (permutation drawn by repeated
+                // removal).
+                let mut order: Vec<usize> = (0..workers).collect();
+                for i in (1..workers).rev() {
+                    order.swap(i, rng.below(i + 1));
+                }
+                (shards, order)
+            },
+            |(shards, order)| {
+                let mut global = TtftDigest::default();
+                for shard in shards {
+                    for &us in shard {
+                        global.record(us);
+                    }
+                }
+                let mut merged = TtftDigest::default();
+                for &w in order {
+                    let mut d = TtftDigest::default();
+                    for &us in &shards[w] {
+                        d.record(us);
+                    }
+                    merged.merge(&d);
+                }
+                if merged.len() != global.len() {
+                    return false;
+                }
+                [0.5, 0.95, 0.99]
+                    .iter()
+                    .all(|&p| merged.percentile(p) == global.percentile(p))
+            },
+        );
+        // Edge cases: empty digests are inert and report 0.
+        let empty = TtftDigest::default();
+        assert!(empty.is_empty());
+        assert_eq!(empty.percentile(0.99), 0);
+        let mut d = TtftDigest::default();
+        d.record(7);
+        d.merge(&empty);
+        assert_eq!((d.len(), d.percentile(0.5)), (1, 7));
     }
 
     #[test]

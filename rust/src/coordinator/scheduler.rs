@@ -1,0 +1,282 @@
+//! Iteration scheduler: chunked prefill plans and session-aware
+//! admission on top of the batcher.
+//!
+//! # Why a scheduler
+//!
+//! Before this module the server's iteration logic was ad hoc: admission
+//! (`Batcher::fill_slots`) and prefill were fused — every admitted
+//! prompt was absorbed in full by one prefill GEMM in the iteration it
+//! was admitted. One giant prompt admitted under
+//! [`AdmissionPolicy::TokenBudget`] therefore still monopolized an
+//! entire prefill wave: in-flight decodes shared the iteration with a
+//! `prompt_len`-row GEMM and stalled behind it.
+//!
+//! [`Scheduler`] makes the per-iteration work an explicit
+//! [`IterationPlan`]:
+//!
+//! * **Chunked prefill.** A prompt longer than
+//!   [`SchedulerConfig::prefill_chunk`] is split into chunks fed across
+//!   successive iterations ([`ChunkJob`]; executed through
+//!   [`crate::coordinator::StepEngine::prefill_chunk_many`]). Only the
+//!   final chunk samples the session's first token; until then the
+//!   session sits mid-prefill (`Session::prefill_complete() == false`)
+//!   and the decode/speculation phases skip it. Per-iteration prefill
+//!   rows are thus bounded by `active_prefills × prefill_chunk`, so
+//!   decodes never wait on a long prompt.
+//! * **Session-aware admission.** Warm resumes reattach before policy
+//!   admission runs; under `TokenBudget` the scheduler charges each
+//!   resume its true row cost (`append + 1` rows, not a full prefill)
+//!   against the wave's budget via [`Batcher::fill_slots_costed`] —
+//!   resumes are preferred, cold prefills get the remaining budget.
+//!
+//! # Bit-identity contract
+//!
+//! Chunking never changes an emitted token. The session window is
+//! clipped once (`Session::new`), the chunks partition exactly that
+//! clipped prompt, and each chunk extends the slot's engine state the
+//! same way one whole-prompt prefill would (the host LUT stack is
+//! position-wise — every row depends only on its own token, see
+//! `incremental.rs`). The final chunk's last row is therefore
+//! bit-identical to the one-shot prefill row, and everything after it is
+//! plain decode. `rust/tests/chunked_prefill.rs` pins this across chunk
+//! sizes × engines × workers × admission policies × resume rates.
+
+use super::batcher::{AdmissionPolicy, Batcher};
+use anyhow::Result;
+
+/// Scheduler knobs for a worker pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedulerConfig {
+    /// Which queued requests enter free slots each iteration.
+    pub policy: AdmissionPolicy,
+    /// Max prompt rows fed per slot per iteration (>= 1). Chunks at or
+    /// above the clipped prompt length behave as a single chunk, so
+    /// `usize::MAX` (see [`SchedulerConfig::unchunked`]) reproduces the
+    /// pre-chunking admit-then-prefill behaviour exactly.
+    pub prefill_chunk: usize,
+}
+
+impl SchedulerConfig {
+    /// Validated constructor: a zero chunk would feed no prompt rows and
+    /// stall every prefill forever.
+    pub fn new(policy: AdmissionPolicy, prefill_chunk: usize) -> Result<SchedulerConfig> {
+        anyhow::ensure!(prefill_chunk >= 1, "prefill_chunk must be >= 1 (0 feeds nothing)");
+        Ok(SchedulerConfig { policy, prefill_chunk })
+    }
+
+    /// Chunking disabled: every prompt is absorbed in one chunk, the
+    /// pre-scheduler behaviour.
+    pub fn unchunked(policy: AdmissionPolicy) -> SchedulerConfig {
+        SchedulerConfig { policy, prefill_chunk: usize::MAX }
+    }
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig::unchunked(AdmissionPolicy::Fifo)
+    }
+}
+
+/// One chunk of one session's prompt, to feed this iteration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkJob {
+    pub slot: usize,
+    /// The chunk's tokens (a sub-slice of the clipped session prompt).
+    pub tokens: Vec<i32>,
+    /// First chunk of the prompt: the engine replaces the slot's state
+    /// (later chunks extend it).
+    pub first: bool,
+    /// Final chunk: its last row predicts the session's first token.
+    pub last: bool,
+}
+
+/// What one worker iteration must execute, in phase order: the resume
+/// phase ran before planning (its cost is carried into admission), then
+/// the chunked-prefill jobs below, then decode/speculation over every
+/// prefill-complete session.
+#[derive(Debug, Default)]
+pub struct IterationPlan {
+    /// Slots newly admitted by policy this iteration (admission order).
+    pub admitted: Vec<usize>,
+    /// Prompt chunks to feed this iteration — at most one per
+    /// mid-prefill slot, each at most `prefill_chunk` tokens.
+    pub prefill: Vec<ChunkJob>,
+}
+
+impl IterationPlan {
+    /// Prompt rows this plan feeds (the per-iteration prefill bound).
+    pub fn prefill_rows(&self) -> usize {
+        self.prefill.iter().map(|j| j.tokens.len()).sum()
+    }
+}
+
+/// Per-iteration planner: admission (budget-aware of warm resumes) plus
+/// chunked-prefill progression. The scheduler itself is stateless —
+/// chunk progress lives in each `Session::prefilled`, so a plan can be
+/// recomputed from the batcher alone.
+#[derive(Clone, Copy, Debug)]
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler { cfg }
+    }
+
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.cfg.policy
+    }
+
+    pub fn prefill_chunk(&self) -> usize {
+        self.cfg.prefill_chunk
+    }
+
+    /// Plan one iteration: admit under the policy — charging the warm
+    /// resumes that already ran this iteration as `resume_cost` rows
+    /// against a token budget (the batcher's admit-at-least-one liveness
+    /// rule counts queued admissions only) — then emit the next prompt
+    /// chunk for every mid-prefill session, newly admitted or
+    /// continuing.
+    ///
+    /// Zero-generation sessions (`done()` at admission) never touch the
+    /// engine and get no chunks, mirroring the pre-scheduler prefill
+    /// phase.
+    pub fn plan(&self, batcher: &mut Batcher, seq: usize, resume_cost: usize) -> IterationPlan {
+        let admitted = batcher.fill_slots_costed(seq, resume_cost);
+        let chunk = self.cfg.prefill_chunk.max(1);
+        let mut prefill = Vec::new();
+        for (slot, sess) in batcher.sessions_mut() {
+            if sess.done() || sess.prefill_complete() {
+                continue;
+            }
+            let start = sess.prefilled;
+            let end = (start.saturating_add(chunk)).min(sess.prompt_len);
+            prefill.push(ChunkJob {
+                slot,
+                tokens: sess.tokens[start..end].to_vec(),
+                first: start == 0,
+                last: end == sess.prompt_len,
+            });
+        }
+        IterationPlan { admitted, prefill }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{GenRequest, GenResponse};
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(
+        id: u64,
+        prompt_len: usize,
+        gen: usize,
+    ) -> (GenRequest, std::sync::mpsc::Receiver<GenResponse>) {
+        let (tx, rx) = channel();
+        (
+            GenRequest {
+                id,
+                prompt: vec![(id % 20) as i32; prompt_len],
+                gen_tokens: gen,
+                reply: tx,
+                t_submit: Instant::now(),
+                session: None,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn config_validates_and_unchunked_is_one_chunk() {
+        assert!(SchedulerConfig::new(AdmissionPolicy::Fifo, 0).is_err(), "chunk 0 feeds nothing");
+        let cfg = SchedulerConfig::new(AdmissionPolicy::Fifo, 4).unwrap();
+        assert_eq!(cfg.prefill_chunk, 4);
+        assert_eq!(SchedulerConfig::unchunked(AdmissionPolicy::Fifo).prefill_chunk, usize::MAX);
+        assert_eq!(SchedulerConfig::default().policy, AdmissionPolicy::Fifo);
+    }
+
+    #[test]
+    fn plan_chunks_a_long_prompt_across_iterations() {
+        let sched = Scheduler::new(SchedulerConfig::new(AdmissionPolicy::Fifo, 3).unwrap());
+        let mut b = Batcher::new(2, 8);
+        let (r, _rx) = req(1, 8, 2);
+        assert!(b.submit(r));
+        // Iteration 1: admitted, first 3-token chunk.
+        let plan = sched.plan(&mut b, 16, 0);
+        assert_eq!(plan.admitted, vec![0]);
+        assert_eq!(plan.prefill.len(), 1);
+        let job = &plan.prefill[0];
+        assert!((job.first, job.last) == (true, false) && job.tokens.len() == 3, "{job:?}");
+        assert_eq!(plan.prefill_rows(), 3);
+        // The executor advances progress; simulate it.
+        b.session_mut(0).unwrap().prefilled = 3;
+        // Iteration 2: continuation chunk.
+        let plan = sched.plan(&mut b, 16, 0);
+        let job = &plan.prefill[0];
+        assert!((job.first, job.last) == (false, false) && job.tokens.len() == 3, "{job:?}");
+        b.session_mut(0).unwrap().prefilled = 6;
+        // Iteration 3: final (short) chunk.
+        let plan = sched.plan(&mut b, 16, 0);
+        let job = &plan.prefill[0];
+        assert!((job.first, job.last) == (false, true) && job.tokens.len() == 2, "{job:?}");
+        b.session_mut(0).unwrap().prefilled = 8;
+        // Prefill complete: no more chunks.
+        let plan = sched.plan(&mut b, 16, 0);
+        assert!(plan.prefill.is_empty());
+        assert!(b.session_mut(0).unwrap().prefill_complete());
+    }
+
+    #[test]
+    fn unchunked_plan_is_one_whole_prompt_chunk() {
+        let sched = Scheduler::new(SchedulerConfig::unchunked(AdmissionPolicy::Fifo));
+        let mut b = Batcher::new(2, 8);
+        let (r, _rx) = req(1, 7, 1);
+        assert!(b.submit(r));
+        let plan = sched.plan(&mut b, 16, 0);
+        assert_eq!(plan.prefill.len(), 1);
+        let job = &plan.prefill[0];
+        assert!(job.first && job.last);
+        assert_eq!(job.tokens.len(), 7);
+    }
+
+    #[test]
+    fn zero_gen_sessions_get_no_chunks() {
+        let sched = Scheduler::new(SchedulerConfig::new(AdmissionPolicy::Fifo, 2).unwrap());
+        let mut b = Batcher::new(2, 8);
+        let (r, _rx) = req(1, 6, 0);
+        assert!(b.submit(r));
+        let plan = sched.plan(&mut b, 16, 0);
+        assert_eq!(plan.admitted, vec![0], "the request is still admitted (and completed)");
+        assert!(plan.prefill.is_empty(), "zero-gen sessions never touch the engine");
+    }
+
+    #[test]
+    fn chunks_partition_the_clipped_prompt_exactly() {
+        // A prompt longer than the window chunks over the CLIPPED suffix,
+        // so the fed rows equal what a one-shot prefill would feed.
+        let sched = Scheduler::new(SchedulerConfig::new(AdmissionPolicy::Fifo, 4).unwrap());
+        let mut b = Batcher::new(1, 8);
+        let (r, _rx) = req(1, 30, 1); // clipped to seq - 1 = 9
+        assert!(b.submit(r));
+        let mut fed = Vec::new();
+        loop {
+            let plan = sched.plan(&mut b, 10, 0);
+            if plan.prefill.is_empty() {
+                break;
+            }
+            let job = &plan.prefill[0];
+            fed.extend_from_slice(&job.tokens);
+            let sess = b.session_mut(0).unwrap();
+            sess.prefilled += job.tokens.len();
+            if job.last {
+                assert_eq!(sess.prefilled, sess.prompt_len);
+            }
+        }
+        let sess = b.session_mut(0).unwrap();
+        assert_eq!(sess.prompt_len, 9);
+        assert_eq!(fed, sess.tokens[..9].to_vec(), "chunks must cover the clipped prompt");
+    }
+}

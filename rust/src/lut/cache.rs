@@ -50,6 +50,11 @@ pub struct SlotCache {
     len: Vec<usize>,
     /// Session lease per slot (`None` = not retained).
     leases: Vec<Option<u64>>,
+    /// Mid-chunked-prefill marks: the slot's rows cover only a prefix of
+    /// its prompt, so the window must not be sampled, retained or
+    /// resumed until the final chunk lands (cleared by any clear/evict —
+    /// a freed partial window is poisoned like any other).
+    partial: Vec<bool>,
 }
 
 impl SlotCache {
@@ -66,6 +71,7 @@ impl SlotCache {
             start: vec![0; slots],
             len: vec![0; slots],
             leases: vec![None; slots],
+            partial: vec![false; slots],
         }
     }
 
@@ -187,6 +193,25 @@ impl SlotCache {
         self.len[slot] = len;
     }
 
+    /// Mark (or clear) `slot` as holding a *partial* prefill: its rows
+    /// cover only a prefix of the session's prompt while chunked prefill
+    /// is in flight. Purely an audit/introspection mark — the rows
+    /// themselves are ordinary ring rows — but it lets eviction tests
+    /// pin that a mid-prefill slot poisons exactly like a complete one.
+    pub fn set_partial(&mut self, slot: usize, partial: bool) {
+        self.partial[slot] = partial;
+    }
+
+    /// Is `slot` mid-chunked-prefill?
+    pub fn is_partial(&self, slot: usize) -> bool {
+        self.partial[slot]
+    }
+
+    /// Slots currently mid-chunked-prefill.
+    pub fn partial_count(&self) -> usize {
+        self.partial.iter().filter(|&&p| p).count()
+    }
+
     /// Mark `slot`'s window as retained for `session` (warm multi-turn
     /// resume). The rows stay put; [`SlotCache::release_lease`] hands
     /// them back to a resumed turn, [`SlotCache::evict`] (or any `clear`)
@@ -224,13 +249,15 @@ impl SlotCache {
 
     /// Clear-on-free: zero `slot`'s storage and reset its ring so a
     /// reused slot starts from a state identical to a fresh cache. Also
-    /// drops any lease — cleared state can never back a warm resume.
+    /// drops any lease and any partial-prefill mark — cleared state can
+    /// never back a warm resume or a continuing chunk.
     pub fn clear(&mut self, slot: usize) {
         let base = slot * self.window * self.width;
         self.data[base..base + self.window * self.width].fill(0.0);
         self.start[slot] = 0;
         self.len[slot] = 0;
         self.leases[slot] = None;
+        self.partial[slot] = false;
     }
 
     /// Clear every slot.
@@ -394,6 +421,29 @@ mod tests {
         assert_eq!(c.len(0), 2);
         assert_eq!(c.row(0, 1), &[2.0, 2.0]);
         assert_eq!(c.release_lease(0), None, "release is idempotent");
+    }
+
+    #[test]
+    fn partial_mark_tracks_and_clears_with_the_slot() {
+        let mut c = SlotCache::new(2, 4, 2);
+        assert!(!c.is_partial(0));
+        assert_eq!(c.partial_count(), 0);
+        c.extend(0, &[1.0; 4]); // first chunk of a longer prompt
+        c.set_partial(0, true);
+        c.set_partial(1, true);
+        assert!(c.is_partial(0));
+        assert_eq!(c.partial_count(), 2);
+        // The final chunk lands: mark dropped, rows kept.
+        c.extend(0, &[2.0; 2]);
+        c.set_partial(0, false);
+        assert!(!c.is_partial(0));
+        assert_eq!(c.len(0), 3);
+        // Evicting a mid-prefill slot poisons exactly like a complete
+        // one: storage zeroed, mark gone.
+        c.clear(1);
+        assert!(!c.is_partial(1));
+        assert_eq!(c.partial_count(), 0);
+        assert!(c.raw_slot_mut(1).iter().all(|&v| v == 0.0));
     }
 
     #[test]

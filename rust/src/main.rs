@@ -71,6 +71,7 @@ fn parse_args() -> Result<Args> {
             "--retain-ttl" => sets.push(format!("serve.retain_ttl_iters={}", take(&mut i)?)),
             "--gemm-threads" => sets.push(format!("gemm_threads={}", take(&mut i)?)),
             "--admission" => sets.push(format!("serve.admission={}", take(&mut i)?)),
+            "--prefill-chunk" => sets.push(format!("serve.prefill_chunk={}", take(&mut i)?)),
             "--draft-k" => sets.push(format!("serve.draft_k={}", take(&mut i)?)),
             "--draft" => sets.push(format!("serve.draft={}", take(&mut i)?)),
             "--help" | "-h" => bail!("{}", HELP),
@@ -102,6 +103,9 @@ flags:
   --retained-slots N  --retain-ttl N (warm-resume slot leases per worker
                    and their TTL in worker iterations)
   --admission fifo|spf|token_budget (serve admission policy)
+  --prefill-chunk N (max prompt rows fed per slot per iteration; long
+                   prompts chunk across iterations so decodes never wait
+                   — streams are bit-identical at every setting)
   --draft-k N      --draft narrow|oracle (speculative draft engine)
   --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)
 (cached = incremental decode: per-slot activation cache, per-step cost
@@ -216,18 +220,20 @@ fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize, turns: usize
     }
     // Each worker builds its own engine (and PJRT runtime) inside its
     // worker thread; `serve.workers` controls the pool width. Every
-    // engine kind rides the resume/prefill/decode split loop: "cached"
-    // serves incrementally, the rest recompute behind the same
-    // interface; finished session turns retain their slot caches under
+    // engine kind rides the scheduler's resume → chunked-prefill →
+    // decode loop: "cached" serves incrementally, the rest recompute
+    // behind the same interface; prompts longer than
+    // `serve.prefill_chunk` prefill across iterations, and finished
+    // session turns retain their slot caches under
     // `serve.retained_slots` leases for warm resume.
-    let policy = cfg.serve.admission_policy()?;
+    let sched = cfg.serve.scheduler_config()?;
     let cfg2 = cfg.clone();
     let engine_kind2 = engine_kind.to_string();
-    let handle = server::start_pool_session(
+    let handle = server::start_pool_sched(
         cfg.serve.workers,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
-        policy,
+        sched,
         cfg.serve.session_options(),
         move |_worker| lcd::repro::shared::build_step_engine(&cfg2, &engine_kind2),
     );

@@ -1,0 +1,341 @@
+//! Acceptance suite for the chunked-prefill scheduler (ISSUE-5).
+//!
+//! The anchor property, via the shared harness in `common/`: served
+//! token streams are **bit-identical to uninterrupted single-request
+//! runs for any scheduler plan** — swept across
+//! `prefill_chunk` ∈ {1 row, prompt_len − 1, prompt_len, ∞/disabled} ×
+//! engines {cached, speculative, full-recompute} × workers {1, 4} ×
+//! admission policies {fifo, spf, token_budget} × resume rates.
+//!
+//! Plus the decode-starvation regression (a seq-length prompt may not
+//! delay other slots' decode at all while it chunks in: per-iteration
+//! prefill rows stay ≤ chunk and the other slots decode every
+//! iteration), and the partial-prefill eviction/poison properties.
+
+mod common;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use common::{
+    assert_streams_match_reference, base_spec, blocking_streams, mk_engine, policies,
+    reference_stream, request_set, ENGINE_KINDS,
+};
+use lcd::coordinator::{
+    start_pool_sched, AdmissionPolicy, CachedLutEngine, ChunkJob, SchedulerConfig, SessionOptions,
+    StepEngine,
+};
+use lcd::util::argmax;
+
+const BATCH: usize = 4;
+const SEQ: usize = 16;
+const VOCAB: usize = 24;
+const SEED: u64 = 0x5c4ed;
+
+fn spec(threads: usize) -> lcd::coordinator::HostLutSpec {
+    base_spec(SEED, BATCH, SEQ, VOCAB, threads)
+}
+
+#[test]
+fn chunk_granularity_sweep_is_bit_identical_per_prompt() {
+    // The exact chunk sizes the issue calls out, against a single
+    // known-length prompt: 1 row, prompt_len - 1, prompt_len, disabled.
+    let prompt: Vec<i32> = vec![7, 3, 11, 2, 9, 14, 5, 1];
+    let plen = prompt.len();
+    let want = reference_stream(&spec(1), &prompt, 6);
+    for kind in ENGINE_KINDS {
+        for chunk in [1usize, plen - 1, plen, usize::MAX] {
+            let sched = SchedulerConfig::new(AdmissionPolicy::Fifo, chunk).unwrap();
+            let engine = mk_engine(kind, &spec(1)).unwrap();
+            let (streams, snap) =
+                blocking_streams(engine, vec![(prompt.clone(), 6)], BATCH, sched);
+            assert_eq!(
+                streams[0].1, want,
+                "{kind} chunk {chunk} diverged from the uninterrupted run"
+            );
+            let chunks = plen.div_ceil(chunk.min(plen));
+            assert_eq!(snap.prefill_chunks, chunks as u64, "{kind} chunk {chunk}");
+            assert_eq!(snap.prefill_tokens, plen as u64, "chunking must not change rows");
+        }
+    }
+}
+
+#[test]
+fn chunked_streams_bit_identical_across_engines_policies_and_threads() {
+    // Mixed request set (prompts beyond the window, slot churn) under
+    // every engine × admission policy × gemm-thread count × chunk size:
+    // every stream equals its own uninterrupted reference.
+    let requests = request_set(0x0c4a_11ce, VOCAB, 10);
+    for kind in ENGINE_KINDS {
+        for (pname, policy) in policies(6) {
+            for threads in [1usize, 4] {
+                for chunk in [1usize, 3, usize::MAX] {
+                    let label = format!("{kind} {pname} t{threads} chunk {chunk}");
+                    let sched = SchedulerConfig::new(policy, chunk).unwrap();
+                    let engine = mk_engine(kind, &spec(threads)).unwrap();
+                    let (streams, _) =
+                        blocking_streams(engine, requests.clone(), BATCH, sched);
+                    assert_streams_match_reference(&spec(1), &requests, &streams, &label);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_pool_streams_bit_identical_across_workers() {
+    // The threaded path: worker pools of 1 and 4 serving chunked prefill
+    // (chunk 2) under every engine × policy — every response must equal
+    // its reference, whatever worker it landed on.
+    let requests = request_set(0x9001, VOCAB, 8);
+    for kind in ENGINE_KINDS {
+        for workers in [1usize, 4] {
+            for (pname, policy) in policies(8) {
+                let label = format!("{kind} w{workers} {pname}");
+                let sched = SchedulerConfig::new(policy, 2).unwrap();
+                let handle = start_pool_sched(
+                    workers,
+                    BATCH,
+                    64,
+                    sched,
+                    SessionOptions::default(),
+                    move |_w| mk_engine(kind, &spec(1)),
+                );
+                let rxs: Vec<_> = requests
+                    .iter()
+                    .map(|(prompt, gen)| handle.submit(prompt.clone(), *gen))
+                    .collect();
+                for (i, rx) in rxs.into_iter().enumerate() {
+                    let resp = rx.recv().unwrap_or_else(|_| {
+                        panic!("{label}: request {i} dropped (worker died?)")
+                    });
+                    let (prompt, gen) = &requests[i];
+                    assert_eq!(
+                        resp.tokens,
+                        reference_stream(&spec(1), prompt, *gen),
+                        "{label}: request {i} diverged"
+                    );
+                }
+                let snap = handle.shutdown();
+                assert_eq!(snap.completed as usize, requests.len(), "{label}");
+                assert!(snap.prefill_chunks > 0, "{label}: chunked phase never ran");
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_sessions_bit_identical_across_resume_rates() {
+    // The resume-rate axis: multi-turn conversations served with
+    // chunked prefill (chunk 2) while resume payloads are dropped for
+    // none / half / all of the post-first turns (simulated affinity
+    // loss). Warm resumes skip prefill entirely; dropped ones
+    // cold-prefill the full history in chunks — streams must equal the
+    // uninterrupted reference either way, on every engine.
+    use common::drive_conversations;
+    let drop_half: fn(usize, usize) -> bool = |s, t| (s + t) % 2 == 0;
+    let rates: [(&str, fn(usize, usize) -> bool); 3] =
+        [("warm", |_, _| false), ("half", drop_half), ("cold", |_, _| true)];
+    for kind in ENGINE_KINDS {
+        for (rname, drop_resume) in rates {
+            let label = format!("{kind} resume-{rname}");
+            let sched = SchedulerConfig::new(AdmissionPolicy::Fifo, 2).unwrap();
+            let opts = SessionOptions { retained_slots: 4, retain_ttl_iters: 0 };
+            let handle =
+                start_pool_sched(1, BATCH, 64, sched, opts, move |_w| mk_engine(kind, &spec(1)));
+            let snap = drive_conversations(handle, &spec(1), 5, &label, drop_resume);
+            assert_eq!(snap.completed, 9, "{label}");
+            // A dropped resume payload makes the turn a plain fresh
+            // request (cold chunked prefill of the full history): it
+            // counts neither hit nor miss. Kept resumes must land warm.
+            match rname {
+                "warm" => {
+                    assert_eq!(snap.cache_hits, 6, "{label}: all 6 resumed turns must hit");
+                    assert_eq!(snap.cache_misses, 0, "{label}");
+                    assert!(snap.resumed_tokens > 0, "{label}");
+                }
+                "cold" => {
+                    assert_eq!(snap.cache_hits + snap.cache_misses, 0, "{label}");
+                    assert_eq!(snap.resumed_tokens, 0, "{label}: no warm feeds");
+                    assert!(
+                        snap.cache_evictions > 0,
+                        "{label}: cold re-admission must pressure the stale leases out"
+                    );
+                }
+                _ => {
+                    // 3 of 6 resumes kept; the capacity analysis in this
+                    // workload keeps every kept lease alive, so they all
+                    // reattach warm.
+                    assert_eq!(snap.cache_hits, 3, "{label}: kept resumes must land warm");
+                    assert_eq!(snap.cache_misses, 0, "{label}");
+                }
+            }
+            assert!(snap.prefill_chunks > 0, "{label}: chunked phase never ran");
+        }
+    }
+}
+
+/// Wraps an engine, logging per-iteration chunk-row counts and decode
+/// participation — the instrument behind the decode-starvation
+/// regression test.
+struct Recorder<S> {
+    inner: S,
+    /// Prompt rows fed by each chunked-prefill call (one per iteration
+    /// with prefill work).
+    chunk_rows: Rc<RefCell<Vec<usize>>>,
+    /// Slots advanced by each decode call (one per iteration with
+    /// decode work).
+    decode_slots: Rc<RefCell<Vec<Vec<usize>>>>,
+}
+
+impl<S: StepEngine> StepEngine for Recorder<S> {
+    fn slots(&self) -> usize {
+        self.inner.slots()
+    }
+    fn seq(&self) -> usize {
+        self.inner.seq()
+    }
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn prefill(&mut self, slot: usize, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.prefill(slot, tokens)
+    }
+    fn prefill_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.inner.prefill_many(jobs)
+    }
+    fn prefill_chunk_many(&mut self, jobs: &[ChunkJob]) -> anyhow::Result<Vec<Option<Vec<f32>>>> {
+        self.chunk_rows.borrow_mut().push(jobs.iter().map(|j| j.tokens.len()).sum());
+        self.inner.prefill_chunk_many(jobs)
+    }
+    fn decode_step(&mut self, slot: usize, token: i32) -> anyhow::Result<Vec<f32>> {
+        self.inner.decode_step(slot, token)
+    }
+    fn decode_many(&mut self, jobs: &[(usize, i32)]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.decode_slots.borrow_mut().push(jobs.iter().map(|&(slot, _)| slot).collect());
+        self.inner.decode_many(jobs)
+    }
+    fn resume_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.inner.resume_many(jobs)
+    }
+    fn retain_slot(&mut self, slot: usize, session: u64) -> bool {
+        self.inner.retain_slot(slot, session)
+    }
+    fn rollback(&mut self, slot: usize, n: usize) -> anyhow::Result<()> {
+        self.inner.rollback(slot, n)
+    }
+    fn free_slot(&mut self, slot: usize) {
+        self.inner.free_slot(slot)
+    }
+}
+
+#[test]
+fn seq_length_prompt_never_starves_in_flight_decodes() {
+    // One seq-length prompt (15 rows, chunk 3 → 5 chunk iterations)
+    // rides along three short requests. Regression pins:
+    // * per-iteration prefill rows never exceed the chunk bound;
+    // * every short request decodes in EVERY iteration from its first
+    //   decode to its completion (no gaps → the long prompt delayed
+    //   nobody's decode, and completion takes at most its own gen
+    //   iterations, not gen + ⌈prompt/chunk⌉);
+    // * all streams still match their uninterrupted references.
+    let chunk = 3usize;
+    let long_prompt: Vec<i32> = (0..(SEQ - 1) as i32).collect();
+    let requests: Vec<(Vec<i32>, usize)> = vec![
+        (long_prompt.clone(), 2),
+        (vec![5], 6),
+        (vec![9, 2], 6),
+        (vec![13], 6),
+    ];
+    let chunk_rows = Rc::new(RefCell::new(Vec::new()));
+    let decode_slots = Rc::new(RefCell::new(Vec::new()));
+    let engine = Recorder {
+        inner: CachedLutEngine::build(spec(1)).unwrap(),
+        chunk_rows: Rc::clone(&chunk_rows),
+        decode_slots: Rc::clone(&decode_slots),
+    };
+    let sched = SchedulerConfig::new(AdmissionPolicy::Fifo, chunk).unwrap();
+    let (streams, snap) = blocking_streams(engine, requests.clone(), BATCH, sched);
+    assert_streams_match_reference(&spec(1), &requests, &streams, "starvation run");
+
+    let rows = chunk_rows.borrow();
+    // The long prompt needs ⌈15/3⌉ = 5 chunk iterations; the three short
+    // prompts share iteration 1. No iteration may exceed chunk rows per
+    // mid-prefill slot (here: long chunk + ≤ 3 one-row short prompts).
+    assert_eq!(rows.len(), long_prompt.len().div_ceil(chunk), "chunk iterations");
+    for (i, &r) in rows.iter().enumerate() {
+        let shorts = if i == 0 { 4 } else { 0 }; // short prompts: 1+2+1 rows in wave 1
+        assert!(
+            r <= chunk + shorts,
+            "iteration {i} fed {r} prefill rows (chunk bound {chunk} + {shorts})"
+        );
+    }
+    let decodes = decode_slots.borrow();
+    // Short slots (admitted wave 1, gen 6: one token from prefill + 5
+    // decodes) must appear in 5 CONSECUTIVE decode iterations starting
+    // at the first — the long prompt delayed nothing.
+    for short_slot in 1..=3usize {
+        let hits: Vec<usize> = decodes
+            .iter()
+            .enumerate()
+            .filter(|(_, slots)| slots.contains(&short_slot))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(hits.len(), 5, "slot {short_slot} decode iterations");
+        assert_eq!(hits[0], 0, "slot {short_slot} must start decoding immediately");
+        for w in hits.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "slot {short_slot} decode stalled at iteration {}", w[0]);
+        }
+    }
+    // The long prompt's first decode comes right after its final chunk.
+    let long_hits: Vec<usize> = decodes
+        .iter()
+        .enumerate()
+        .filter(|(_, slots)| slots.contains(&0))
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(long_hits, vec![4], "gen 2 = final-chunk token + one decode at iteration 5");
+    assert_eq!(snap.prefill_chunks as usize, 5 + 3, "5 long chunks + 3 one-chunk prompts");
+}
+
+#[test]
+fn partial_prefill_slot_evicts_with_poison_semantics() {
+    // Mid-chunked-prefill state must honour the clear-on-free contract:
+    // poison the raw storage, free, and the reused slot must be
+    // indistinguishable from a fresh engine's — whether the partial
+    // window is replaced by a new first chunk or freed outright.
+    let mut e = CachedLutEngine::build(spec(1)).unwrap();
+    assert!(e.prefill_chunk(1, &[4, 9, 1], true, false).unwrap().is_none());
+    assert!(e.cache_mut().is_partial(1), "mid-prefill slots carry the partial mark");
+    assert_eq!(e.cached_len(1), 3);
+    for v in e.cache_mut().raw_slot_mut(1).iter_mut() {
+        *v = f32::NAN;
+    }
+    e.free_slot(1);
+    assert!(!e.cache_mut().is_partial(1));
+    assert_eq!(e.cached_len(1), 0);
+    assert!(
+        e.cache_mut().raw_slot_mut(1).iter().all(|&v| v == 0.0),
+        "evicting a partial window must zero its storage"
+    );
+    let mut fresh = CachedLutEngine::build(spec(1)).unwrap();
+    assert_eq!(
+        e.prefill(1, &[6, 6]).unwrap(),
+        fresh.prefill(1, &[6, 6]).unwrap(),
+        "partial-prefill rows leaked through eviction"
+    );
+    // A NEW first chunk also replaces a stale partial window cleanly
+    // (admission reuses slots without an explicit free in between).
+    let mut stale = CachedLutEngine::build(spec(1)).unwrap();
+    assert!(stale.prefill_chunk(2, &[8, 8, 8], true, false).unwrap().is_none());
+    let row = stale.prefill_chunk(2, &[5, 3], true, true).unwrap().unwrap();
+    let want = fresh.prefill(2, &[5, 3]).unwrap();
+    assert_eq!(row, want, "a first chunk must replace stale partial state");
+    assert!(!stale.cache_mut().is_partial(2));
+    // And decode continues from the replaced state identically.
+    let t = argmax(&row) as i32;
+    assert_eq!(stale.decode_step(2, t).unwrap(), fresh.decode_step(2, t).unwrap());
+}

@@ -1,0 +1,226 @@
+//! Shared serving-equivalence harness for the acceptance suites.
+//!
+//! Every serving feature in this repo carries the same anchor property:
+//! **served token streams are bit-identical to uninterrupted
+//! single-request runs** — whatever the scheduler plan. This module
+//! centralises the machinery the suites
+//! (`chunked_prefill.rs`, `session_resume.rs`, `speculative_decode.rs`,
+//! `incremental_decode.rs`) previously duplicated:
+//!
+//! * seeded engine specs and the engine factory over
+//!   {cached, full-recompute, speculative};
+//! * the uninterrupted-reference stream generator;
+//! * "run a server, collect streams" drivers for both the blocking
+//!   single-thread path (with full [`SchedulerConfig`] control — chunk
+//!   sweeps) and the threaded worker pool (worker-count sweeps);
+//! * the multi-turn conversation driver that asserts every turn against
+//!   the uninterrupted reference, with a pluggable resume-drop rule for
+//!   resume-rate sweeps.
+//!
+//! Each integration-test binary compiles its own copy of this module and
+//! uses a different subset, hence the file-wide `dead_code` allowance.
+#![allow(dead_code)]
+
+use lcd::coordinator::{
+    serve_blocking_sched, AdmissionPolicy, CachedLutEngine, FullRecomputeStep, HostLutEngine,
+    HostLutSpec, MetricsSnapshot, SchedulerConfig, ServerHandle, SessionStore, SpeculativeEngine,
+    StepEngine,
+};
+use lcd::util::{argmax, Rng};
+
+/// Engine kinds every sweep covers. All kinds share the same seeded
+/// target weights, so every configuration must emit the same greedy
+/// streams.
+pub const ENGINE_KINDS: [&str; 3] = ["cached", "full", "speculative"];
+
+/// Admission policies every sweep covers (`budget` supplies the
+/// token-budget cap).
+pub fn policies(budget: usize) -> [(&'static str, AdmissionPolicy); 3] {
+    [
+        ("fifo", AdmissionPolicy::Fifo),
+        ("spf", AdmissionPolicy::ShortestPromptFirst),
+        ("budget", AdmissionPolicy::TokenBudget { max_prefill_tokens: budget }),
+    ]
+}
+
+/// A small seeded host-LUT spec: the shared model shape of the
+/// acceptance suites (per-suite `seed` keeps their streams distinct).
+pub fn base_spec(seed: u64, batch: usize, seq: usize, vocab: usize, threads: usize) -> HostLutSpec {
+    HostLutSpec {
+        batch,
+        seq,
+        vocab,
+        hidden: 24,
+        depth: 2,
+        centroids: 6,
+        seed,
+        gemm_threads: threads,
+        gemm_shard_rows: 0,
+    }
+}
+
+/// The cheap independent draft shape for `spec`'s speculative engine
+/// (narrow: real rejections, so rollback is exercised).
+pub fn narrow_of(spec: &HostLutSpec) -> HostLutSpec {
+    HostLutSpec { hidden: 12, depth: 1, seed: spec.seed ^ 0xd4af, ..spec.clone() }
+}
+
+/// Build one serving engine of the given kind over `spec`'s weights.
+pub fn mk_engine(kind: &str, spec: &HostLutSpec) -> anyhow::Result<Box<dyn StepEngine>> {
+    Ok(match kind {
+        "cached" => Box::new(CachedLutEngine::build(spec.clone())?),
+        "full" => Box::new(FullRecomputeStep::new(HostLutEngine::build(spec.clone())?)?),
+        "speculative" => Box::new(SpeculativeEngine::new(
+            CachedLutEngine::build(spec.clone())?,
+            CachedLutEngine::build(narrow_of(spec))?,
+            3,
+        )?),
+        other => anyhow::bail!("unknown test engine '{other}'"),
+    })
+}
+
+/// Greedy stream of a fresh, uninterrupted single request with this
+/// prompt — the bit-identity reference every served stream must match.
+pub fn reference_stream(spec: &HostLutSpec, prompt: &[i32], gen: usize) -> Vec<i32> {
+    let mut e = CachedLutEngine::build(spec.clone()).unwrap();
+    let mut p = prompt.to_vec();
+    if p.is_empty() {
+        p.push(0);
+    }
+    let row = e.prefill(0, &p).unwrap();
+    let mut out = Vec::with_capacity(gen);
+    if gen == 0 {
+        return out;
+    }
+    let mut tok = argmax(&row) as i32;
+    out.push(tok);
+    while out.len() < gen {
+        let row = e.decode_step(0, tok).unwrap();
+        tok = argmax(&row) as i32;
+        out.push(tok);
+    }
+    out
+}
+
+/// Deterministic mixed request set: varied prompt lengths (some beyond
+/// the window) and generation lengths (some sliding past seq), more
+/// requests than slots so freed slots are reused.
+pub fn request_set(seed: u64, vocab: usize, count: usize) -> Vec<(Vec<i32>, usize)> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            let plen = 1 + rng.below(15);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            (prompt, 1 + (i % 5) * 3) // gen ∈ {1, 4, 7, 10, 13}
+        })
+        .collect()
+}
+
+/// Serve a closed request set on the current thread under the given
+/// scheduler configuration; returns the per-request streams sorted by id
+/// plus the metrics snapshot.
+pub fn blocking_streams(
+    engine: impl StepEngine,
+    requests: Vec<(Vec<i32>, usize)>,
+    max_batch: usize,
+    sched: SchedulerConfig,
+) -> (Vec<(u64, Vec<i32>)>, MetricsSnapshot) {
+    let n = requests.len();
+    let (mut responses, snap) = serve_blocking_sched(engine, requests, max_batch, sched).unwrap();
+    assert_eq!(snap.completed as usize, n, "a blocking run must drain its request set");
+    responses.sort_by_key(|r| r.id);
+    (responses.into_iter().map(|r| (r.id, r.tokens)).collect(), snap)
+}
+
+/// Every served stream must equal the uninterrupted reference of its own
+/// prompt — the strongest form of the equivalence property (not just
+/// config-A == config-B, but each == the single-request run).
+pub fn assert_streams_match_reference(
+    spec: &HostLutSpec,
+    requests: &[(Vec<i32>, usize)],
+    streams: &[(u64, Vec<i32>)],
+    label: &str,
+) {
+    assert_eq!(requests.len(), streams.len(), "{label}: stream count");
+    for (i, ((prompt, gen), (id, tokens))) in requests.iter().zip(streams).enumerate() {
+        assert_eq!(*id, i as u64 + 1, "{label}: blocking ids are 1-based submission order");
+        assert_eq!(
+            tokens,
+            &reference_stream(spec, prompt, *gen),
+            "{label}: request {i} diverged from the uninterrupted reference"
+        );
+    }
+}
+
+/// Per-session user turns for the conversation drivers (token ids must
+/// stay below the suite's vocab).
+pub fn conversations() -> Vec<Vec<Vec<i32>>> {
+    vec![
+        vec![vec![3, 1, 4], vec![2, 7], vec![9]],
+        vec![vec![5, 5, 2, 8], vec![6], vec![1, 3]],
+        vec![vec![10, 11], vec![12, 0, 4], vec![8]],
+    ]
+}
+
+/// Simulate every conversation on the reference engine: per session, per
+/// turn, the (full-history prompt, expected generated tokens) pair.
+pub fn expected_turns(spec: &HostLutSpec, gen: usize) -> Vec<Vec<(Vec<i32>, Vec<i32>)>> {
+    conversations()
+        .iter()
+        .map(|turns| {
+            let mut history: Vec<i32> = Vec::new();
+            turns
+                .iter()
+                .map(|user| {
+                    history.extend_from_slice(user);
+                    let prompt = history.clone();
+                    let toks = reference_stream(spec, &prompt, gen);
+                    history.extend_from_slice(&toks);
+                    (prompt, toks)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Drive the conversations through a pool, asserting every turn's stream
+/// against the uninterrupted reference. `drop_resume(session, turn)`
+/// strips the resume payload from that turn before submission (simulated
+/// session-affinity loss — the resume-rate axis of the sweeps; return
+/// `false` everywhere for the always-warm baseline). Returns the
+/// aggregate snapshot.
+pub fn drive_conversations(
+    handle: ServerHandle,
+    spec: &HostLutSpec,
+    gen: usize,
+    label: &str,
+    drop_resume: impl Fn(usize, usize) -> bool,
+) -> MetricsSnapshot {
+    let expected = expected_turns(spec, gen);
+    let mut store = SessionStore::new();
+    let ids: Vec<_> = (0..expected.len()).map(|_| store.open()).collect();
+    let convs = conversations();
+    for t in 0..convs[0].len() {
+        let mut rxs = Vec::new();
+        for (s, &id) in ids.iter().enumerate() {
+            let mut turn = store.turn(id, &convs[s][t]).unwrap();
+            assert_eq!(turn.prompt, expected[s][t].0, "{label}: sess {s} turn {t} prompt");
+            assert_eq!(turn.resume.is_some(), t > 0, "{label}: resume info presence");
+            if turn.resume.is_some() && drop_resume(s, t) {
+                turn.resume = None;
+            }
+            rxs.push((s, id, handle.submit_turn(turn, gen)));
+        }
+        for (s, id, rx) in rxs {
+            let resp = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("{label}: sess {s} turn {t} dropped (worker died?)"));
+            assert_eq!(
+                resp.tokens, expected[s][t].1,
+                "{label}: sess {s} turn {t} diverged from the uninterrupted reference"
+            );
+            store.record(id, &resp.tokens).unwrap();
+        }
+    }
+    handle.shutdown()
+}

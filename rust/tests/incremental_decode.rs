@@ -10,12 +10,15 @@
 //! * Phase metrics account for every token: one prefill token stream per
 //!   prompt, first generated token from prefill, the rest from decode.
 
+mod common;
+
 use std::cell::RefCell;
 
+use common::{base_spec, blocking_streams};
 use lcd::coordinator::server::Engine;
 use lcd::coordinator::{
     serve_blocking_step, AdmissionPolicy, CachedLutEngine, FullRecomputeStep, HostLutEngine,
-    HostLutSpec, StepEngine,
+    HostLutSpec, SchedulerConfig, StepEngine,
 };
 use lcd::util::proptest::{forall, PropConfig};
 use lcd::util::{argmax, Rng};
@@ -25,17 +28,7 @@ const SEQ: usize = 10;
 const VOCAB: usize = 24;
 
 fn spec(threads: usize) -> HostLutSpec {
-    HostLutSpec {
-        batch: BATCH,
-        seq: SEQ,
-        vocab: VOCAB,
-        hidden: 24,
-        depth: 2,
-        centroids: 6,
-        seed: 2024,
-        gemm_threads: threads,
-        gemm_shard_rows: 0,
-    }
+    base_spec(2024, BATCH, SEQ, VOCAB, threads)
 }
 
 /// Full-window reference: pad every slot's window into a `batch × seq`
@@ -110,34 +103,20 @@ fn prop_decode_step_bit_identical_to_full_window_forward() {
     }
 }
 
-/// Deterministic mixed request set: varied prompt lengths (some beyond
-/// the window) and generation lengths (some sliding past seq), more
-/// requests than slots so freed slots are reused.
+/// This suite's deterministic mixed request set (harness helper bound
+/// to its seed).
 fn request_set() -> Vec<(Vec<i32>, usize)> {
-    let mut rng = Rng::new(0x5eed_cafe);
-    (0..10)
-        .map(|i| {
-            let plen = 1 + rng.below(15);
-            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(VOCAB) as i32).collect();
-            (prompt, 1 + (i % 5) * 3) // gen ∈ {1, 4, 7, 10, 13}
-        })
-        .collect()
+    common::request_set(0x5eed_cafe, VOCAB, 10)
 }
 
 fn streams_cached(policy: AdmissionPolicy, threads: usize) -> Vec<(u64, Vec<i32>)> {
     let engine = CachedLutEngine::build(spec(threads)).unwrap();
-    let (mut responses, snap) = serve_blocking_step(engine, request_set(), BATCH, policy).unwrap();
-    assert_eq!(snap.completed, 10);
-    responses.sort_by_key(|r| r.id);
-    responses.into_iter().map(|r| (r.id, r.tokens)).collect()
+    blocking_streams(engine, request_set(), BATCH, SchedulerConfig::unchunked(policy)).0
 }
 
 fn streams_full(policy: AdmissionPolicy, threads: usize) -> Vec<(u64, Vec<i32>)> {
     let engine = FullRecomputeStep::new(HostLutEngine::build(spec(threads)).unwrap()).unwrap();
-    let (mut responses, snap) = serve_blocking_step(engine, request_set(), BATCH, policy).unwrap();
-    assert_eq!(snap.completed, 10);
-    responses.sort_by_key(|r| r.id);
-    responses.into_iter().map(|r| (r.id, r.tokens)).collect()
+    blocking_streams(engine, request_set(), BATCH, SchedulerConfig::unchunked(policy)).0
 }
 
 #[test]

@@ -12,9 +12,12 @@
 //! stale-cache reuse — poison-tested at the engine level), and TTL
 //! expiry behaves the same way.
 
+mod common;
+
+use common::{base_spec, conversations, drive_conversations, mk_engine};
 use lcd::coordinator::{
-    start_pool_session, AdmissionPolicy, CachedLutEngine, FullRecomputeStep, HostLutEngine,
-    HostLutSpec, ServerHandle, SessionOptions, SessionStore, SpeculativeEngine, StepEngine,
+    start_pool_session, AdmissionPolicy, CachedLutEngine, HostLutSpec, ServerHandle,
+    SessionOptions, SessionStore, StepEngine,
 };
 use lcd::util::argmax;
 
@@ -22,118 +25,20 @@ const SEQ: usize = 16;
 const GEN: usize = 5;
 
 fn spec() -> HostLutSpec {
-    HostLutSpec {
-        batch: 4,
-        seq: SEQ,
-        vocab: 24,
-        hidden: 24,
-        depth: 2,
-        centroids: 6,
-        seed: 31,
-        gemm_threads: 1,
-        gemm_shard_rows: 0,
-    }
+    base_spec(31, 4, SEQ, 24, 1)
 }
 
-fn narrow_spec() -> HostLutSpec {
-    HostLutSpec { hidden: 12, depth: 1, seed: 31 ^ 0xd4af, ..spec() }
-}
-
-/// Build one serving engine of the given kind. All kinds share the same
-/// target weights (seeded spec), so every configuration must emit the
-/// same greedy streams.
-fn mk_engine(kind: &str) -> anyhow::Result<Box<dyn StepEngine>> {
-    Ok(match kind {
-        "cached" => Box::new(CachedLutEngine::build(spec())?),
-        "full" => Box::new(FullRecomputeStep::new(HostLutEngine::build(spec())?)?),
-        "speculative" => Box::new(SpeculativeEngine::new(
-            CachedLutEngine::build(spec())?,
-            // Narrow draft: real rejections, so rollback interleaves
-            // with retention across turn boundaries.
-            CachedLutEngine::build(narrow_spec())?,
-            3,
-        )?),
-        other => anyhow::bail!("unknown test engine '{other}'"),
-    })
-}
-
-/// Greedy stream of a fresh uninterrupted request with this prompt — the
-/// reference every resumed turn must match to the bit.
+/// Uninterrupted single-request reference (harness helper bound to this
+/// suite's spec).
 fn reference_stream(prompt: &[i32], gen: usize) -> Vec<i32> {
-    let mut e = CachedLutEngine::build(spec()).unwrap();
-    let mut p = prompt.to_vec();
-    if p.is_empty() {
-        p.push(0);
-    }
-    let row = e.prefill(0, &p).unwrap();
-    let mut out = Vec::with_capacity(gen);
-    let mut tok = argmax(&row) as i32;
-    out.push(tok);
-    while out.len() < gen {
-        let row = e.decode_step(0, tok).unwrap();
-        tok = argmax(&row) as i32;
-        out.push(tok);
-    }
-    out
-}
-
-/// Per-session user turns (token ids < vocab 24).
-fn conversations() -> Vec<Vec<Vec<i32>>> {
-    vec![
-        vec![vec![3, 1, 4], vec![2, 7], vec![9]],
-        vec![vec![5, 5, 2, 8], vec![6], vec![1, 3]],
-        vec![vec![10, 11], vec![12, 0, 4], vec![8]],
-    ]
-}
-
-/// Simulate every conversation on the reference engine: per session, per
-/// turn, the (full-history prompt, expected generated tokens) pair.
-fn expected_turns() -> Vec<Vec<(Vec<i32>, Vec<i32>)>> {
-    conversations()
-        .iter()
-        .map(|turns| {
-            let mut history: Vec<i32> = Vec::new();
-            turns
-                .iter()
-                .map(|user| {
-                    history.extend_from_slice(user);
-                    let prompt = history.clone();
-                    let toks = reference_stream(&prompt, GEN);
-                    history.extend_from_slice(&toks);
-                    (prompt, toks)
-                })
-                .collect()
-        })
-        .collect()
+    common::reference_stream(&spec(), prompt, gen)
 }
 
 /// Drive the conversations through a pool, asserting every turn's stream
-/// against the uninterrupted reference. Returns the aggregate snapshot.
+/// against the uninterrupted reference (all resumes kept). Returns the
+/// aggregate snapshot.
 fn drive_pool(handle: ServerHandle, label: &str) -> lcd::coordinator::MetricsSnapshot {
-    let expected = expected_turns();
-    let mut store = SessionStore::new();
-    let ids: Vec<_> = (0..expected.len()).map(|_| store.open()).collect();
-    let convs = conversations();
-    for t in 0..3 {
-        let mut rxs = Vec::new();
-        for (s, &id) in ids.iter().enumerate() {
-            let turn = store.turn(id, &convs[s][t]).unwrap();
-            assert_eq!(turn.prompt, expected[s][t].0, "{label}: sess {s} turn {t} prompt");
-            assert_eq!(turn.resume.is_some(), t > 0, "{label}: resume info presence");
-            rxs.push((s, id, handle.submit_turn(turn, GEN)));
-        }
-        for (s, id, rx) in rxs {
-            let resp = rx.recv().unwrap_or_else(|_| {
-                panic!("{label}: sess {s} turn {t} dropped (worker died?)")
-            });
-            assert_eq!(
-                resp.tokens, expected[s][t].1,
-                "{label}: sess {s} turn {t} diverged from the uninterrupted reference"
-            );
-            store.record(id, &resp.tokens).unwrap();
-        }
-    }
-    handle.shutdown()
+    drive_conversations(handle, &spec(), GEN, label, |_, _| false)
 }
 
 #[test]
@@ -149,7 +54,7 @@ fn resumed_streams_match_uninterrupted_across_engines_workers_policies() {
                 let label = format!("{kind} w{workers} {pname}");
                 let opts = SessionOptions { retained_slots: 4, retain_ttl_iters: 0 };
                 let handle = start_pool_session(workers, 4, 64, policy, opts, move |_w| {
-                    mk_engine(kind)
+                    mk_engine(kind, &spec())
                 });
                 let snap = drive_pool(handle, &label);
                 assert_eq!(snap.completed, 9, "{label}");
@@ -167,8 +72,9 @@ fn resumed_streams_match_uninterrupted_across_engines_workers_policies() {
 #[test]
 fn warm_resume_adds_zero_prefill_tokens() {
     let opts = SessionOptions { retained_slots: 4, retain_ttl_iters: 0 };
-    let handle =
-        start_pool_session(1, 4, 64, AdmissionPolicy::Fifo, opts, |_w| mk_engine("cached"));
+    let handle = start_pool_session(1, 4, 64, AdmissionPolicy::Fifo, opts, |_w| {
+        mk_engine("cached", &spec())
+    });
     let snap = drive_pool(handle, "warm prefill accounting");
     // Only first turns prefill (window-clipped); resumed turns feed
     // pending + append through the resume phase instead.
@@ -192,8 +98,9 @@ fn forced_eviction_falls_back_to_cold_prefill() {
     // resume must miss and cold-prefill the full history — emitting the
     // exact reference stream regardless (no stale-cache reuse).
     let opts = SessionOptions { retained_slots: 1, retain_ttl_iters: 0 };
-    let handle =
-        start_pool_session(1, 4, 64, AdmissionPolicy::Fifo, opts, |_w| mk_engine("cached"));
+    let handle = start_pool_session(1, 4, 64, AdmissionPolicy::Fifo, opts, |_w| {
+        mk_engine("cached", &spec())
+    });
     let mut store = SessionStore::new();
     let a = store.open();
     let b = store.open();
@@ -228,8 +135,9 @@ fn ttl_expired_lease_evicts_and_resume_misses() {
     // TTL 1 iteration: any unrelated traffic between A's turns ages the
     // lease out, so the resume must miss — and still emit the reference.
     let opts = SessionOptions { retained_slots: 2, retain_ttl_iters: 1 };
-    let handle =
-        start_pool_session(1, 2, 64, AdmissionPolicy::Fifo, opts, |_w| mk_engine("cached"));
+    let handle = start_pool_session(1, 2, 64, AdmissionPolicy::Fifo, opts, |_w| {
+        mk_engine("cached", &spec())
+    });
     let mut store = SessionStore::new();
     let a = store.open();
     let ta1 = store.turn(a, &[5, 8]).unwrap();
@@ -254,8 +162,9 @@ fn ttl_expired_lease_evicts_and_resume_misses() {
 #[test]
 fn retention_disabled_always_cold_prefills() {
     let opts = SessionOptions { retained_slots: 0, retain_ttl_iters: 0 };
-    let handle =
-        start_pool_session(1, 4, 64, AdmissionPolicy::Fifo, opts, |_w| mk_engine("cached"));
+    let handle = start_pool_session(1, 4, 64, AdmissionPolicy::Fifo, opts, |_w| {
+        mk_engine("cached", &spec())
+    });
     let snap = drive_pool(handle, "retention off");
     assert_eq!(snap.cache_hits, 0, "no leases → no warm resumes");
     assert_eq!(snap.cache_misses, 6, "every resumed turn cold-prefills");

@@ -14,11 +14,14 @@
 //!   `CachedLutEngine::decode_speculative` emits the same tokens as the
 //!   default sequential accept loop under randomly corrupted drafts.
 
+mod common;
+
 use std::cell::RefCell;
 
+use common::{base_spec, blocking_streams, narrow_of, request_set};
 use lcd::coordinator::{
-    serve_blocking_step, AdmissionPolicy, CachedLutEngine, FullRecomputeStep, GreedyTableDraft,
-    HostLutEngine, HostLutModel, HostLutSpec, SpeculativeEngine, StepEngine,
+    AdmissionPolicy, CachedLutEngine, FullRecomputeStep, GreedyTableDraft, HostLutEngine,
+    HostLutModel, HostLutSpec, SchedulerConfig, SpeculativeEngine, StepEngine,
 };
 use lcd::lut::{SimdScratch, SlotCache};
 use lcd::util::proptest::{forall, PropConfig};
@@ -29,46 +32,23 @@ const SEQ: usize = 10;
 const VOCAB: usize = 24;
 
 fn target_spec(threads: usize) -> HostLutSpec {
-    HostLutSpec {
-        batch: BATCH,
-        seq: SEQ,
-        vocab: VOCAB,
-        hidden: 24,
-        depth: 2,
-        centroids: 6,
-        seed: 3025,
-        gemm_threads: threads,
-        gemm_shard_rows: 0,
-    }
+    base_spec(3025, BATCH, SEQ, VOCAB, threads)
 }
 
 fn draft_spec(threads: usize) -> HostLutSpec {
-    HostLutSpec { hidden: 12, depth: 1, seed: 3025 ^ 0xd4af, ..target_spec(threads) }
-}
-
-/// Deterministic mixed request set: varied prompt lengths (some beyond
-/// the window) and generation lengths (some sliding past seq), more
-/// requests than slots so freed slots are reused.
-fn request_set() -> Vec<(Vec<i32>, usize)> {
-    let mut rng = Rng::new(0x5bec_cafe);
-    (0..10)
-        .map(|i| {
-            let plen = 1 + rng.below(15);
-            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(VOCAB) as i32).collect();
-            (prompt, 1 + (i % 5) * 3) // gen ∈ {1, 4, 7, 10, 13}
-        })
-        .collect()
+    narrow_of(&target_spec(threads))
 }
 
 fn streams_of(
     engine: impl StepEngine,
     policy: AdmissionPolicy,
 ) -> (Vec<(u64, Vec<i32>)>, lcd::coordinator::MetricsSnapshot) {
-    let (mut responses, snap) =
-        serve_blocking_step(engine, request_set(), BATCH, policy).unwrap();
-    assert_eq!(snap.completed, 10);
-    responses.sort_by_key(|r| r.id);
-    (responses.into_iter().map(|r| (r.id, r.tokens)).collect(), snap)
+    blocking_streams(
+        engine,
+        request_set(0x5bec_cafe, VOCAB, 10),
+        BATCH,
+        SchedulerConfig::unchunked(policy),
+    )
 }
 
 #[test]
