@@ -354,6 +354,30 @@ fn main() {
         b.speedup("long_prompt_iter_chunked16/seq256", "long_prompt_iter_unchunked/seq256");
     }
 
+    // Chunk-budget wave packing: with chunking on, `TokenBudget`
+    // admission used to charge each queued prompt its FULL clipped cost
+    // even though the iteration only feeds its first `chunk` rows, so a
+    // budget that could host budget/chunk concurrent prefills admitted
+    // one prompt per wave. The fix charges `min(clipped, chunk)`.
+    // Deterministic batcher drain (no engine, no timing): 16 × 48-token
+    // prompts, chunk 8, budget 32 — the first wave must pack
+    // budget / chunk = 4 admissions (old charging: 1) without taking
+    // more iterations to drain.
+    println!("== serving: chunk-budget wave packing (budget 32, chunk 8, prompt 48) ==");
+    let (new_wave, new_iters) = drain_chunk_budget(true);
+    let (old_wave, old_iters) = drain_chunk_budget(false);
+    println!(
+        "  chunk_budget_packing: first wave {new_wave} admissions (full-cost charging: \
+         {old_wave}), drain {new_iters} iterations (full-cost charging: {old_iters})"
+    );
+    {
+        let ok = new_wave >= 4 && new_wave > old_wave && new_iters <= old_iters;
+        println!(
+            "PERF_GATE chunk_budget_packing wave {new_wave} min 4 {}",
+            if ok { "PASS" } else { "FAIL" }
+        );
+    }
+
     // Machine-checkable perf gates (enforced by the CI smoke job).
     perf_gate(
         &b,
@@ -384,6 +408,66 @@ fn main() {
         0.75,
     );
     b.finish("serving");
+}
+
+/// Deterministic chunked-prefill drain under `TokenBudget` admission:
+/// 16 prompts of 48 tokens, one generated token each, through an 8-slot
+/// batcher at prefill chunk 8 and budget 32. `budgeted` selects
+/// first-chunk charging (`fill_slots_budgeted`, the chunk-budget fix)
+/// vs full-cost charging (`fill_slots_costed`, the old behaviour); the
+/// feed loop mirrors `Scheduler::plan` — continuations are carried cost,
+/// every mid-prefill session advances one chunk per iteration, and the
+/// final chunk's output row samples the single generated token. Returns
+/// (first-wave admission count, iterations to drain).
+fn drain_chunk_budget(budgeted: bool) -> (usize, usize) {
+    const BUDGET: usize = 32;
+    const CHUNK: usize = 8;
+    const SEQ: usize = 64;
+    let policy = AdmissionPolicy::TokenBudget { max_prefill_tokens: BUDGET };
+    let mut batcher = Batcher::with_policy(8, 64, policy);
+    let (tx, _rx) = channel();
+    for i in 0..16u64 {
+        let ok = batcher.submit(GenRequest {
+            id: i,
+            prompt: vec![(i % 50) as i32 + 1; 48],
+            gen_tokens: 1,
+            reply: tx.clone(),
+            t_submit: Instant::now(),
+            session: None,
+        });
+        assert!(ok, "queue cap must fit the whole request set");
+    }
+    let mut first_wave = 0usize;
+    let mut iters = 0usize;
+    while !batcher.is_idle() {
+        iters += 1;
+        assert!(iters < 1_000, "chunk-budget drain must terminate");
+        let carried: usize = batcher
+            .sessions_mut()
+            .filter(|(_, s)| !s.done() && !s.prefill_complete())
+            .map(|(_, s)| CHUNK.min(s.prompt_len - s.prefilled))
+            .sum();
+        let admitted = if budgeted {
+            batcher.fill_slots_budgeted(SEQ, carried, CHUNK)
+        } else {
+            batcher.fill_slots_costed(SEQ, carried)
+        };
+        if iters == 1 {
+            first_wave = admitted.len();
+        }
+        for (_, s) in batcher.sessions_mut() {
+            if s.done() || s.prefill_complete() {
+                continue;
+            }
+            let n = CHUNK.min(s.prompt_len - s.prefilled);
+            s.prefilled += n;
+            if s.prefilled == s.prompt_len {
+                s.push_token(1, SEQ);
+            }
+        }
+        batcher.take_done();
+    }
+    (first_wave, iters)
 }
 
 /// Print a `PERF_GATE` verdict: FAIL when `fast`'s median exceeds

@@ -122,6 +122,17 @@ impl Session {
         prompt_len.max(1).min(seq.saturating_sub(1).max(1))
     }
 
+    /// Prompt rows this request actually feeds in its admission
+    /// iteration: the window-clipped cost capped at the prefill chunk.
+    /// Under chunked prefill a long prompt feeds at most `chunk` rows
+    /// per wave — charging its full clipped cost up front would leave
+    /// budget idle (the over-charge fixed by
+    /// [`Batcher::fill_slots_budgeted`]); the chunks it feeds in LATER
+    /// iterations are charged by the scheduler as carried cost.
+    fn admission_cost(prompt_len: usize, seq: usize, chunk: usize) -> usize {
+        Session::prefill_cost(prompt_len, seq).min(chunk)
+    }
+
     pub fn done(&self) -> bool {
         self.generated.len() >= self.request.gen_tokens
     }
@@ -206,9 +217,15 @@ impl Batcher {
     }
 
     /// Pick the queue index to admit next under the current policy, given
-    /// the prompt tokens already admitted this iteration. `None` = stop
-    /// admitting for this iteration.
-    fn pick_next(&self, seq: usize, admitted_cost: usize, admitted_count: usize) -> Option<usize> {
+    /// the prompt rows already charged this iteration and the prefill
+    /// chunk bound. `None` = stop admitting for this iteration.
+    fn pick_next(
+        &self,
+        seq: usize,
+        chunk: usize,
+        admitted_cost: usize,
+        admitted_count: usize,
+    ) -> Option<usize> {
         if self.queue.is_empty() {
             return None;
         }
@@ -221,7 +238,7 @@ impl Batcher {
                 .min_by_key(|(i, r)| (r.prompt.len(), *i))
                 .map(|(i, _)| i),
             AdmissionPolicy::TokenBudget { max_prefill_tokens } => {
-                let cost = Session::prefill_cost(self.queue[0].prompt.len(), seq);
+                let cost = Session::admission_cost(self.queue[0].prompt.len(), seq, chunk);
                 if admitted_count > 0 && admitted_cost + cost > max_prefill_tokens {
                     None
                 } else {
@@ -251,17 +268,36 @@ impl Batcher {
     /// admitted — otherwise resume traffic could starve it forever.
     /// Other policies ignore the carry.
     pub fn fill_slots_costed(&mut self, seq: usize, carried_cost: usize) -> Vec<usize> {
+        self.fill_slots_budgeted(seq, carried_cost, usize::MAX)
+    }
+
+    /// Chunk-aware [`Batcher::fill_slots_costed`]: under
+    /// [`AdmissionPolicy::TokenBudget`] each queued prompt is charged the
+    /// rows it actually feeds in THIS iteration —
+    /// `min(clipped_prompt, chunk)` — not its full clipped cost up front.
+    /// Its later chunks are charged by the scheduler as carried cost in
+    /// the iterations that feed them, so waves pack tighter under
+    /// chunking while the per-iteration prefill-row bound is unchanged.
+    /// `chunk = usize::MAX` (unchunked) reproduces full-cost charging
+    /// exactly.
+    pub fn fill_slots_budgeted(
+        &mut self,
+        seq: usize,
+        carried_cost: usize,
+        chunk: usize,
+    ) -> Vec<usize> {
+        let chunk = chunk.max(1);
         let mut admitted = Vec::new();
         let mut cost = carried_cost;
         for slot_idx in 0..self.slots.len() {
             if self.slots[slot_idx].is_some() || self.reserved[slot_idx] {
                 continue;
             }
-            let Some(qidx) = self.pick_next(seq, cost, admitted.len()) else {
+            let Some(qidx) = self.pick_next(seq, chunk, cost, admitted.len()) else {
                 break;
             };
             let req = self.queue.remove(qidx).expect("pick_next returned a valid index");
-            cost += Session::prefill_cost(req.prompt.len(), seq);
+            cost += Session::admission_cost(req.prompt.len(), seq, chunk);
             self.slots[slot_idx] = Some(Session::new(req, seq));
             admitted.push(slot_idx);
         }
@@ -596,6 +632,36 @@ mod tests {
         let (r, _rx) = req(2, 9, 1);
         assert!(b.submit(r));
         assert_eq!(b.fill_slots_costed(16, 100).len(), 1);
+    }
+
+    #[test]
+    fn chunked_budget_charges_fed_rows_not_full_prompts() {
+        // Budget 8, chunk 4, seq 32: a 16-row prompt feeds only 4 rows in
+        // its admission wave, so two prompts pack where full-cost
+        // charging admitted one.
+        let policy = AdmissionPolicy::TokenBudget { max_prefill_tokens: 8 };
+        let mut b = Batcher::with_policy(4, 64, policy);
+        for i in 0..3 {
+            let (r, _rx) = req(i, 16, 1);
+            assert!(b.submit(r));
+        }
+        assert_eq!(b.fill_slots_budgeted(32, 0, 4).len(), 2, "4+4 chunk rows fit the 8 budget");
+        // Unchunked charging (usize::MAX chunk == fill_slots_costed)
+        // still charges the full clipped prompt up front.
+        let mut b = Batcher::with_policy(4, 64, policy);
+        for i in 0..3 {
+            let (r, _rx) = req(i, 16, 1);
+            assert!(b.submit(r));
+        }
+        assert_eq!(b.fill_slots_costed(32, 0).len(), 1, "16 + 16 rows exceed the 8 budget");
+        // The carry squeezes chunked admission the same way it squeezes
+        // unchunked admission (liveness still admits the head).
+        let mut b = Batcher::with_policy(4, 64, policy);
+        for i in 0..3 {
+            let (r, _rx) = req(i, 16, 1);
+            assert!(b.submit(r));
+        }
+        assert_eq!(b.fill_slots_budgeted(32, 6, 4).len(), 1, "carry 6 + 4 + 4 exceeds 8");
     }
 
     #[test]

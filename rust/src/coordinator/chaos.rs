@@ -1,0 +1,429 @@
+//! Fault-injection harness for coordinator chaos tests.
+//!
+//! The failure paths of the serving stack — a worker panicking
+//! mid-[`super::scheduler::IterationPlan`], a lease dying mid-resume, a
+//! client dropping its receiver mid-chunk — are exactly the paths normal
+//! tests never exercise. This module makes them reproducible:
+//!
+//! * [`FaultPlan`] — an armable set of fault points. Each point counts
+//!   the engine calls that cross it and panics on the armed nth call,
+//!   simulating a worker death at a precise plan boundary (the panic
+//!   unwinds into `run_worker`'s `catch_unwind`, taking the worker down
+//!   the same way a real engine bug would).
+//! * [`ChaosEngine`] — a [`StepEngine`] wrapper that forwards every call
+//!   bit-identically while (1) consulting the fault plan and (2)
+//!   maintaining its own model of slot occupancy from the call stream
+//!   alone. Engines are consumed by the worker threads, so end-state
+//!   inspection happens at [`Drop`] — which runs during unwind too — by
+//!   pushing an [`AuditReport`] into a shared log the test owns.
+//!
+//! The audit model is deliberately independent bookkeeping: it trusts
+//! nothing inside the engine, deriving occupancy purely from the
+//! prefill/resume/retain/free contract. A slot still `Occupied` when a
+//! *cleanly drained* worker drops its engine is a leaked slot; a
+//! `Retained` slot at shutdown is a live lease dying with its worker
+//! (allowed — the router placement is dropped by exit bookkeeping).
+//!
+//! Compiled only for tests and the `chaos` feature (on by default so
+//! plain `cargo test` exercises the suite; production binaries can opt
+//! out with `--no-default-features`).
+
+use super::incremental::StepEngine;
+use super::scheduler::ChunkJob;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// Engine call-sites a [`FaultPlan`] can kill a worker at, one per
+/// iteration phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Entry of `resume_many` — mid-plan, after lease reattachment.
+    Resume,
+    /// Entry of any prefill variant (`prefill`, `prefill_many`,
+    /// `prefill_chunk`, `prefill_chunk_many`).
+    Prefill,
+    /// Entry of any decode variant (`decode_step`, `decode_many`,
+    /// `draft`, `decode_speculative`).
+    Decode,
+}
+
+/// One armable fault point: a call counter plus the call index it fires
+/// on (`usize::MAX` = disarmed).
+struct FaultArm {
+    fire_at: AtomicUsize,
+    calls: AtomicUsize,
+    fired: AtomicBool,
+}
+
+impl FaultArm {
+    fn new() -> FaultArm {
+        FaultArm {
+            fire_at: AtomicUsize::new(usize::MAX),
+            calls: AtomicUsize::new(0),
+            fired: AtomicBool::new(false),
+        }
+    }
+
+    fn check(&self, point: FaultPoint) {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if n == self.fire_at.load(Ordering::SeqCst) {
+            self.fired.store(true, Ordering::SeqCst);
+            panic!("chaos: injected {point:?} fault on call {n}");
+        }
+    }
+}
+
+/// Armable fault schedule shared between a test and the worker-owned
+/// [`ChaosEngine`]s it builds. A disarmed plan never fires, so wrapping
+/// every worker and arming one is the standard kill-one-worker setup.
+#[derive(Default)]
+pub struct FaultPlan {
+    resume: FaultArm,
+    prefill: FaultArm,
+    decode: FaultArm,
+}
+
+impl Default for FaultArm {
+    fn default() -> FaultArm {
+        FaultArm::new()
+    }
+}
+
+impl FaultPlan {
+    pub fn new() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan::default())
+    }
+
+    fn arm_of(&self, point: FaultPoint) -> &FaultArm {
+        match point {
+            FaultPoint::Resume => &self.resume,
+            FaultPoint::Prefill => &self.prefill,
+            FaultPoint::Decode => &self.decode,
+        }
+    }
+
+    /// Arm `point` to panic on its `nth` call (1-based). Re-arming
+    /// replaces the previous trigger.
+    pub fn arm(&self, point: FaultPoint, nth: usize) {
+        assert!(nth >= 1, "fault calls are counted from 1");
+        self.arm_of(point).fire_at.store(nth, Ordering::SeqCst);
+    }
+
+    /// Has `point` fired its injected panic?
+    pub fn fired(&self, point: FaultPoint) -> bool {
+        self.arm_of(point).fired.load(Ordering::SeqCst)
+    }
+
+    /// Calls that crossed `point` so far.
+    pub fn calls(&self, point: FaultPoint) -> usize {
+        self.arm_of(point).calls.load(Ordering::SeqCst)
+    }
+
+    /// Any point fired.
+    pub fn any_fired(&self) -> bool {
+        [FaultPoint::Resume, FaultPoint::Prefill, FaultPoint::Decode]
+            .iter()
+            .any(|&p| self.fired(p))
+    }
+
+    fn check(&self, point: FaultPoint) {
+        self.arm_of(point).check(point);
+    }
+}
+
+/// Audit-model view of one engine slot, derived from the call stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotModel {
+    /// Free (initial state, or after `free_slot` / declined retention).
+    Empty,
+    /// Holds an in-flight session's state.
+    Occupied,
+    /// Holds a finished session's window under a lease.
+    Retained,
+}
+
+/// End-state snapshot of one worker's engine, pushed at [`Drop`].
+#[derive(Clone, Debug)]
+pub struct AuditReport {
+    pub worker: usize,
+    /// The worker's fault plan fired (it died by injection).
+    pub fault_fired: bool,
+    /// Slots still holding in-flight state — a leak unless the worker
+    /// was killed mid-plan.
+    pub occupied: usize,
+    /// Slots holding leased windows (allowed at shutdown).
+    pub retained: usize,
+}
+
+/// Shared audit sink: one report per dropped [`ChaosEngine`].
+pub type AuditLog = Arc<Mutex<Vec<AuditReport>>>;
+
+/// Fresh empty audit log.
+pub fn audit_log() -> AuditLog {
+    Arc::new(Mutex::new(Vec::new()))
+}
+
+/// Drain an audit log after shutdown (poison-tolerant: a report push
+/// races no one, but the log crosses panicking worker threads).
+pub fn take_reports(log: &AuditLog) -> Vec<AuditReport> {
+    std::mem::take(&mut *log.lock().unwrap_or_else(PoisonError::into_inner))
+}
+
+/// Fault-injecting, occupancy-auditing [`StepEngine`] wrapper. Forwards
+/// every call to the inner engine unchanged (streams stay bit-identical
+/// while no fault fires), so it can wrap any engine the harness serves.
+pub struct ChaosEngine<S: StepEngine> {
+    inner: S,
+    plan: Arc<FaultPlan>,
+    log: AuditLog,
+    worker: usize,
+    slots: Vec<SlotModel>,
+}
+
+impl<S: StepEngine> ChaosEngine<S> {
+    pub fn new(inner: S, plan: Arc<FaultPlan>, log: AuditLog, worker: usize) -> ChaosEngine<S> {
+        let slots = vec![SlotModel::Empty; inner.slots()];
+        ChaosEngine { inner, plan, log, worker, slots }
+    }
+
+    fn mark(&mut self, slot: usize, state: SlotModel) {
+        if let Some(s) = self.slots.get_mut(slot) {
+            *s = state;
+        }
+    }
+}
+
+impl<S: StepEngine> Drop for ChaosEngine<S> {
+    fn drop(&mut self) {
+        let occupied = self.slots.iter().filter(|&&s| s == SlotModel::Occupied).count();
+        let retained = self.slots.iter().filter(|&&s| s == SlotModel::Retained).count();
+        let report = AuditReport {
+            worker: self.worker,
+            fault_fired: self.plan.any_fired(),
+            occupied,
+            retained,
+        };
+        self.log.lock().unwrap_or_else(PoisonError::into_inner).push(report);
+    }
+}
+
+impl<S: StepEngine> StepEngine for ChaosEngine<S> {
+    fn slots(&self) -> usize {
+        self.inner.slots()
+    }
+    fn seq(&self) -> usize {
+        self.inner.seq()
+    }
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.plan.check(FaultPoint::Prefill);
+        let row = self.inner.prefill(slot, tokens)?;
+        self.mark(slot, SlotModel::Occupied);
+        Ok(row)
+    }
+
+    fn decode_step(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
+        self.plan.check(FaultPoint::Decode);
+        self.inner.decode_step(slot, token)
+    }
+
+    fn free_slot(&mut self, slot: usize) {
+        self.inner.free_slot(slot);
+        self.mark(slot, SlotModel::Empty);
+    }
+
+    fn retain_slot(&mut self, slot: usize, session: u64) -> bool {
+        let kept = self.inner.retain_slot(slot, session);
+        self.mark(slot, if kept { SlotModel::Retained } else { SlotModel::Empty });
+        kept
+    }
+
+    fn resume_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
+        self.plan.check(FaultPoint::Resume);
+        let rows = self.inner.resume_many(jobs)?;
+        for (slot, _) in jobs {
+            self.mark(*slot, SlotModel::Occupied);
+        }
+        Ok(rows)
+    }
+
+    fn prefill_many(&mut self, jobs: &[(usize, Vec<i32>)]) -> Result<Vec<Vec<f32>>> {
+        self.plan.check(FaultPoint::Prefill);
+        let rows = self.inner.prefill_many(jobs)?;
+        for (slot, _) in jobs {
+            self.mark(*slot, SlotModel::Occupied);
+        }
+        Ok(rows)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        first: bool,
+        last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        self.plan.check(FaultPoint::Prefill);
+        let row = self.inner.prefill_chunk(slot, tokens, first, last)?;
+        self.mark(slot, SlotModel::Occupied);
+        Ok(row)
+    }
+
+    fn prefill_chunk_many(&mut self, jobs: &[ChunkJob]) -> Result<Vec<Option<Vec<f32>>>> {
+        if !jobs.is_empty() {
+            self.plan.check(FaultPoint::Prefill);
+        }
+        let rows = self.inner.prefill_chunk_many(jobs)?;
+        for job in jobs {
+            self.mark(job.slot, SlotModel::Occupied);
+        }
+        Ok(rows)
+    }
+
+    fn decode_many(&mut self, jobs: &[(usize, i32)]) -> Result<Vec<Vec<f32>>> {
+        if !jobs.is_empty() {
+            self.plan.check(FaultPoint::Decode);
+        }
+        self.inner.decode_many(jobs)
+    }
+
+    fn speculation(&self) -> usize {
+        self.inner.speculation()
+    }
+
+    fn draft(&mut self, slot: usize, pending: i32, k: usize) -> Result<Vec<i32>> {
+        self.plan.check(FaultPoint::Decode);
+        self.inner.draft(slot, pending, k)
+    }
+
+    fn decode_speculative(&mut self, slot: usize, pending: i32, draft: &[i32]) -> Result<Vec<i32>> {
+        self.plan.check(FaultPoint::Decode);
+        self.inner.decode_speculative(slot, pending, draft)
+    }
+
+    fn rollback(&mut self, slot: usize, n: usize) -> Result<()> {
+        self.inner.rollback(slot, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::argmax;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Position-wise counting mock: predicts `(t + 1) % vocab`.
+    struct CountStep {
+        slots: usize,
+        seq: usize,
+        vocab: usize,
+        fed: Vec<Vec<i32>>,
+    }
+
+    impl CountStep {
+        fn new(slots: usize, seq: usize, vocab: usize) -> CountStep {
+            CountStep { slots, seq, vocab, fed: vec![Vec::new(); slots] }
+        }
+
+        fn row_for(&self, t: i32) -> Vec<f32> {
+            let mut row = vec![0.0f32; self.vocab];
+            row[((t + 1).rem_euclid(self.vocab as i32)) as usize] = 1.0;
+            row
+        }
+    }
+
+    impl StepEngine for CountStep {
+        fn slots(&self) -> usize {
+            self.slots
+        }
+        fn seq(&self) -> usize {
+            self.seq
+        }
+        fn vocab(&self) -> usize {
+            self.vocab
+        }
+        fn name(&self) -> &str {
+            "count-step"
+        }
+        fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+            self.fed[slot] = tokens.to_vec();
+            Ok(self.row_for(*tokens.last().expect("non-empty prompt")))
+        }
+        fn decode_step(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
+            self.fed[slot].push(token);
+            Ok(self.row_for(token))
+        }
+        fn free_slot(&mut self, slot: usize) {
+            self.fed[slot].clear();
+        }
+        fn retain_slot(&mut self, _slot: usize, _session: u64) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn wrapper_is_transparent_when_disarmed() {
+        let log = audit_log();
+        let mut chaos =
+            ChaosEngine::new(CountStep::new(2, 8, 16), FaultPlan::new(), log.clone(), 0);
+        let row = chaos.prefill(0, &[3, 4]).unwrap();
+        assert_eq!(argmax(&row), 5);
+        let row = chaos.decode_step(0, 5).unwrap();
+        assert_eq!(argmax(&row), 6);
+        assert_eq!(chaos.slots[0], SlotModel::Occupied);
+        chaos.free_slot(0);
+        assert_eq!(chaos.slots[0], SlotModel::Empty);
+        drop(chaos);
+        let reports = take_reports(&log);
+        assert_eq!(reports.len(), 1);
+        assert!(!reports[0].fault_fired);
+        assert_eq!((reports[0].occupied, reports[0].retained), (0, 0));
+    }
+
+    #[test]
+    fn armed_fault_fires_on_the_nth_call_and_reports() {
+        let log = audit_log();
+        let plan = FaultPlan::new();
+        plan.arm(FaultPoint::Decode, 3);
+        let mut chaos =
+            ChaosEngine::new(CountStep::new(1, 8, 16), Arc::clone(&plan), log.clone(), 7);
+        chaos.prefill(0, &[1]).unwrap();
+        chaos.decode_step(0, 2).unwrap();
+        chaos.decode_step(0, 3).unwrap();
+        assert!(!plan.fired(FaultPoint::Decode));
+        let hit = catch_unwind(AssertUnwindSafe(|| chaos.decode_step(0, 4)));
+        assert!(hit.is_err(), "the third decode call must panic");
+        assert!(plan.fired(FaultPoint::Decode));
+        assert_eq!(plan.calls(FaultPoint::Decode), 3);
+        drop(chaos);
+        let reports = take_reports(&log);
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].worker, 7);
+        assert!(reports[0].fault_fired);
+        assert_eq!(reports[0].occupied, 1, "the slot was mid-flight when the fault fired");
+    }
+
+    #[test]
+    fn audit_model_tracks_retention_and_resume() {
+        let log = audit_log();
+        let mut chaos =
+            ChaosEngine::new(CountStep::new(2, 8, 16), FaultPlan::new(), log.clone(), 0);
+        chaos.prefill(0, &[1, 2]).unwrap();
+        assert!(chaos.retain_slot(0, 11));
+        assert_eq!(chaos.slots[0], SlotModel::Retained);
+        // Warm resume re-occupies the retained slot.
+        chaos.resume_many(&[(0, vec![3, 4])]).unwrap();
+        assert_eq!(chaos.slots[0], SlotModel::Occupied);
+        drop(chaos);
+        let reports = take_reports(&log);
+        assert_eq!(reports[0].occupied, 1);
+        assert_eq!(reports[0].retained, 0);
+    }
+}

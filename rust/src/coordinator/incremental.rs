@@ -371,6 +371,13 @@ impl CachedLutEngine {
         self.cache.len(slot)
     }
 
+    /// Read-only cache access: lets audits and chaos invariants inspect
+    /// slot occupancy, leases and partial-prefill flags without the
+    /// mutable test hook below.
+    pub fn cache(&self) -> &SlotCache {
+        &self.cache
+    }
+
     /// Direct cache access for eviction/poison tests.
     #[doc(hidden)]
     pub fn cache_mut(&mut self) -> &mut SlotCache {

@@ -88,8 +88,52 @@
 //! system), the host LUT stack (full or cached), or a mock for tests —
 //! which is how the Fig. 6 serving comparison swaps implementations
 //! without touching scheduling.
+//!
+//! # Failure semantics
+//!
+//! The pool is panic-safe by construction; a worker dying mid-iteration
+//! degrades service, never correctness. The guarantees, all pinned by
+//! `rust/tests/chaos_coordinator.rs` via the [`chaos`] fault-injection
+//! harness:
+//!
+//! * **Worker death drains, never wedges.** Each iteration runs under
+//!   `catch_unwind`; a panic rejects the worker's in-flight and routed
+//!   work (client receivers disconnect rather than hang), unregisters
+//!   its placements, and — if it was the last worker — rejects the
+//!   shared queue too. Every submission lands in exactly one of the
+//!   final counters: `completed + rejected == submitted`. Completion is
+//!   counted when a response is produced, which precedes delivery, so a
+//!   panic later in the same iteration can discard counted-completed
+//!   responses: `completed >= delivered` is the delivery-side bound.
+//! * **Poisoned locks recover, never cascade.** Shared mutexes (queue
+//!   state, router, parallel-pool counters, the chaos audit log) are
+//!   acquired poison-tolerantly (`PoisonError::into_inner`); the queue
+//!   state additionally re-derives its redundant fields
+//!   (`QueueState::repair`) after clearing poison, so one panicking
+//!   worker can neither deadlock shutdown nor strand another worker on
+//!   a `lock().unwrap()`.
+//! * **Stale leases degrade to cold prefill.** A routed resume whose
+//!   lease or retained slot died with its worker is counted
+//!   (`routed_misses`), its lease and placement are dropped, and the
+//!   turn re-enters admission as a cold prefill — same tokens, same
+//!   stream, more rows fed — instead of panicking the worker that
+//!   found the inconsistency.
+//! * **Accounting merges order-independently.** Aggregate counters
+//!   equal the field-wise sum of per-worker snapshots regardless of
+//!   worker exit order; only `rejected` may exceed the per-worker sum
+//!   (shared-queue stragglers rejected after the last snapshot).
+//!
+//! The same suite's differential-fuzz layer (`lcd::fuzz` drivers,
+//! replayed on stable by `rust/tests/fuzz_corpus.rs` and open-endedly
+//! by the nightly `rust/fuzz/` cargo-fuzz shell) pins the data plane
+//! under these faults: every LUT GEMM strategy agrees with the FP
+//! reference on arbitrary shapes, `PackedIndices` round-trips, the
+//! `SlotCache` matches a naive model, and config parsing never panics
+//! on hostile input.
 
 pub mod batcher;
+#[cfg(any(test, feature = "chaos"))]
+pub mod chaos;
 pub mod engines;
 pub mod incremental;
 pub mod request;
@@ -100,6 +144,8 @@ pub mod session;
 pub mod speculative;
 
 pub use batcher::{window_clip, AdmissionPolicy, Batcher, Session};
+#[cfg(any(test, feature = "chaos"))]
+pub use chaos::{AuditReport, ChaosEngine, FaultPlan, FaultPoint};
 pub use engines::{HostLutEngine, HostLutModel, HostLutSpec};
 pub use incremental::{CachedLutEngine, FullRecomputeStep, StepEngine};
 pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot, TtftDigest};

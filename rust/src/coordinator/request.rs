@@ -115,6 +115,11 @@ pub struct Metrics {
     /// Retained slots evicted (capacity pressure, TTL expiry, or a stale
     /// lease replaced) — each eviction poison-clears the slot.
     pub cache_evictions: u64,
+    /// Routed turns whose lease/slot bookkeeping disagreed at placement
+    /// (the leased slot was occupied or out of range). Instead of
+    /// killing the worker, the turn degrades to the cold-prefill
+    /// fallback and the stale lease/placement are dropped.
+    pub routed_misses: u64,
     /// Tokens fed through warm-resume phases (`pending` + appended user
     /// tokens); the warm counterpart of `prefill_tokens`.
     pub resumed_tokens: u64,
@@ -144,6 +149,7 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_evictions: u64,
+    pub routed_misses: u64,
     pub resumed_tokens: u64,
     pub prefill_chunks: u64,
     pub p50_latency_us: u64,
@@ -198,6 +204,7 @@ impl Metrics {
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
         self.cache_evictions += other.cache_evictions;
+        self.routed_misses += other.routed_misses;
         self.resumed_tokens += other.resumed_tokens;
         self.prefill_chunks += other.prefill_chunks;
         self.session_ttfts.merge(&other.session_ttfts);
@@ -245,6 +252,7 @@ impl Metrics {
             cache_hits: self.cache_hits,
             cache_misses: self.cache_misses,
             cache_evictions: self.cache_evictions,
+            routed_misses: self.routed_misses,
             resumed_tokens: self.resumed_tokens,
             prefill_chunks: self.prefill_chunks,
             p50_latency_us: nearest_rank(&lat, 0.5),
@@ -300,6 +308,11 @@ impl MetricsSnapshot {
         } else {
             String::new()
         };
+        let routed = if self.routed_misses > 0 {
+            format!("  routed-miss {}", self.routed_misses)
+        } else {
+            String::new()
+        };
         let sess_ttft = if self.session_ttft_samples > 0 {
             format!(
                 "  sess-ttft p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
@@ -313,7 +326,7 @@ impl MetricsSnapshot {
         format!(
             "completed {:>5}  rejected {:>3}  tokens {:>6}  steps {:>5}  \
              prefill {:>6}  decode {:>6}  \
-             p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s{spec}{sess}{sess_ttft}",
+             p50 {:>8.2} ms  p99 {:>8.2} ms  ttft50 {:>8.2} ms  {:>8.1} tok/s{spec}{sess}{routed}{sess_ttft}",
             self.completed,
             self.rejected,
             self.generated_tokens,
@@ -423,20 +436,24 @@ mod tests {
             cache_hits: 3,
             cache_misses: 1,
             cache_evictions: 2,
+            routed_misses: 1,
             resumed_tokens: 24,
             ..Default::default()
         };
-        let b = Metrics { cache_hits: 1, resumed_tokens: 8, ..Default::default() };
+        let b = Metrics { cache_hits: 1, routed_misses: 2, resumed_tokens: 8, ..Default::default() };
         a.merge(&b);
         let s = a.snapshot();
         assert_eq!((s.cache_hits, s.cache_misses, s.cache_evictions), (4, 1, 2));
+        assert_eq!(s.routed_misses, 3);
         assert_eq!(s.resumed_tokens, 32);
         assert_eq!(s.cache_hit_rate(), Some(0.8));
         assert!(s.report().contains("sess hit 4 miss 1 evict 2 (32 resumed tok)"));
+        assert!(s.report().contains("routed-miss 3"));
         // No session traffic → no rate, and the report stays clean.
         let quiet = Metrics::default().snapshot();
         assert_eq!(quiet.cache_hit_rate(), None);
         assert!(!quiet.report().contains("sess hit"));
+        assert!(!quiet.report().contains("routed-miss"));
     }
 
     /// Build a worker-shaped metrics value with distinct counters and
@@ -452,6 +469,7 @@ mod tests {
             cache_hits: i,
             cache_misses: i * 2,
             cache_evictions: i % 2,
+            routed_misses: i % 3,
             resumed_tokens: 5 * i,
             ..Default::default()
         };

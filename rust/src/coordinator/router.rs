@@ -19,7 +19,7 @@
 
 use super::session::SessionId;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Shared session→worker placement map. All methods take `&self`; the
 /// map is guarded by an internal mutex (submitters and workers touch it
@@ -34,21 +34,32 @@ impl Router {
         Router::default()
     }
 
+    /// Poison-tolerant lock. A worker panicking while it holds the map
+    /// would otherwise cascade the panic into every submitter and every
+    /// surviving worker. Clearing the poison is sound here: each
+    /// critical section is a single `HashMap` operation, so the map can
+    /// never be observed mid-update — a poisoned guard still holds a
+    /// structurally consistent map (at worst a stale placement, which
+    /// the cold-prefill fallback already tolerates).
+    fn locked(&self) -> MutexGuard<'_, HashMap<SessionId, usize>> {
+        self.map.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Worker holding `session`'s retained slot, if any.
     pub fn route(&self, session: SessionId) -> Option<usize> {
-        self.map.lock().unwrap().get(&session).copied()
+        self.locked().get(&session).copied()
     }
 
     /// Record that `worker` now holds `session`'s retained slot
     /// (replaces any previous placement).
     pub fn register(&self, session: SessionId, worker: usize) {
-        self.map.lock().unwrap().insert(session, worker);
+        self.locked().insert(session, worker);
     }
 
     /// Drop `session`'s placement — only if `worker` still owns it, so a
     /// late evict on one worker can't clobber a newer lease elsewhere.
     pub fn unregister(&self, session: SessionId, worker: usize) {
-        let mut map = self.map.lock().unwrap();
+        let mut map = self.locked();
         if map.get(&session) == Some(&worker) {
             map.remove(&session);
         }
@@ -57,16 +68,16 @@ impl Router {
     /// Drop every placement owned by `worker` (worker exit — its leases
     /// die with its engine, so resumes must fall back to cold prefill).
     pub fn unregister_worker(&self, worker: usize) {
-        self.map.lock().unwrap().retain(|_, w| *w != worker);
+        self.locked().retain(|_, w| *w != worker);
     }
 
     /// Sessions currently placed.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.locked().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.lock().unwrap().is_empty()
+        self.locked().is_empty()
     }
 }
 
@@ -99,6 +110,29 @@ mod tests {
         assert_eq!(r.route(SessionId(5)), Some(3));
         r.unregister(SessionId(5), 3);
         assert_eq!(r.route(SessionId(5)), None);
+    }
+
+    #[test]
+    fn poisoned_router_keeps_serving() {
+        use std::sync::Arc;
+        let r = Arc::new(Router::new());
+        r.register(SessionId(1), 0);
+        // Panic while holding the map lock (simulated worker death
+        // mid-registration): the mutex is poisoned.
+        let r2 = Arc::clone(&r);
+        let _ = std::thread::spawn(move || {
+            let _guard = r2.map.lock().unwrap();
+            panic!("worker died holding the router lock");
+        })
+        .join();
+        // Every method must keep working and see consistent state.
+        assert_eq!(r.route(SessionId(1)), Some(0));
+        r.register(SessionId(2), 1);
+        assert_eq!(r.len(), 2);
+        r.unregister(SessionId(1), 0);
+        assert_eq!(r.route(SessionId(1)), None);
+        r.unregister_worker(1);
+        assert!(r.is_empty());
     }
 
     #[test]

@@ -132,19 +132,30 @@ impl Scheduler {
         self.cfg.prefill_chunk
     }
 
-    /// Plan one iteration: admit under the policy — charging the warm
-    /// resumes that already ran this iteration as `resume_cost` rows
-    /// against a token budget (the batcher's admit-at-least-one liveness
-    /// rule counts queued admissions only) — then emit the next prompt
-    /// chunk for every mid-prefill session, newly admitted or
-    /// continuing.
+    /// Plan one iteration: admit under the policy — charging against a
+    /// token budget the rows this iteration actually feeds: the warm
+    /// resumes that already ran (`resume_cost`), the next chunk of every
+    /// mid-prefill continuation, and each newly admitted prompt's FIRST
+    /// chunk (`min(clipped_prompt, prefill_chunk)` rows, not its full
+    /// clipped cost — the chunk-budget fix; the batcher's
+    /// admit-at-least-one liveness rule counts queued admissions only).
+    /// Then emit the next prompt chunk for every mid-prefill session,
+    /// newly admitted or continuing.
     ///
     /// Zero-generation sessions (`done()` at admission) never touch the
     /// engine and get no chunks, mirroring the pre-scheduler prefill
     /// phase.
     pub fn plan(&self, batcher: &mut Batcher, seq: usize, resume_cost: usize) -> IterationPlan {
-        let admitted = batcher.fill_slots_costed(seq, resume_cost);
         let chunk = self.cfg.prefill_chunk.max(1);
+        // Mid-prefill sessions feed a chunk this iteration whether or not
+        // anything new is admitted; under TokenBudget those rows charge
+        // the wave like everything else the engine will see.
+        let continuation_cost: usize = batcher
+            .sessions_mut()
+            .filter(|(_, s)| !s.done() && !s.prefill_complete())
+            .map(|(_, s)| chunk.min(s.prompt_len - s.prefilled))
+            .sum();
+        let admitted = batcher.fill_slots_budgeted(seq, resume_cost + continuation_cost, chunk);
         let mut prefill = Vec::new();
         for (slot, sess) in batcher.sessions_mut() {
             if sess.done() || sess.prefill_complete() {
@@ -251,6 +262,67 @@ mod tests {
         let plan = sched.plan(&mut b, 16, 0);
         assert_eq!(plan.admitted, vec![0], "the request is still admitted (and completed)");
         assert!(plan.prefill.is_empty(), "zero-gen sessions never touch the engine");
+    }
+
+    #[test]
+    fn chunked_admission_packs_waves_by_fed_rows() {
+        // Budget 8, chunk 4, seq 32: three 16-row prompts. Each feeds
+        // only 4 rows in its admission wave, so two pack into the budget
+        // (full-cost charging admitted one) and the wave feeds exactly
+        // the budget.
+        let policy = AdmissionPolicy::TokenBudget { max_prefill_tokens: 8 };
+        let fill = |b: &mut Batcher| {
+            for i in 0..3 {
+                // Nothing replies in a planning test; the receiver may drop.
+                let (r, _rx) = req(i, 16, 1);
+                assert!(b.submit(r));
+            }
+        };
+        let sched = Scheduler::new(SchedulerConfig::new(policy, 4).unwrap());
+        let mut b = Batcher::with_policy(4, 64, policy);
+        fill(&mut b);
+        let plan = sched.plan(&mut b, 32, 0);
+        assert_eq!(plan.admitted.len(), 2, "4-row first chunks: two prompts fit the 8 budget");
+        assert_eq!(plan.prefill_rows(), 8, "the wave feeds exactly the budget");
+        // Unchunked planning still charges full clipped prompts.
+        let sched = Scheduler::new(SchedulerConfig::unchunked(policy));
+        let mut b = Batcher::with_policy(4, 64, policy);
+        fill(&mut b);
+        let plan = sched.plan(&mut b, 32, 0);
+        assert_eq!(plan.admitted.len(), 1, "16 + 16 rows exceed the 8 budget unchunked");
+    }
+
+    #[test]
+    fn plan_charges_mid_prefill_continuations_against_the_budget() {
+        // Budget 4, chunk 2: four 6-row prompts. Wave 1 admits two (2+2
+        // first-chunk rows). Wave 2 already owes 4 continuation rows, so
+        // only the liveness head is admitted — without the continuation
+        // charge a second prompt would slip in and the wave would feed
+        // 8 rows against a 4-row budget.
+        let policy = AdmissionPolicy::TokenBudget { max_prefill_tokens: 4 };
+        let sched = Scheduler::new(SchedulerConfig::new(policy, 2).unwrap());
+        let mut b = Batcher::with_policy(4, 64, policy);
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(i, 6, 1);
+            assert!(b.submit(r));
+            rxs.push(rx);
+        }
+        let plan = sched.plan(&mut b, 16, 0);
+        assert_eq!(plan.admitted.len(), 2);
+        assert_eq!(plan.prefill_rows(), 4);
+        for job in &plan.prefill {
+            b.session_mut(job.slot).unwrap().prefilled += job.tokens.len();
+        }
+        let plan = sched.plan(&mut b, 16, 0);
+        assert_eq!(
+            plan.admitted.len(),
+            1,
+            "continuations charge the wave: only the liveness head joins"
+        );
+        // Two 2-row continuations plus the head's 2-row first chunk.
+        assert_eq!(plan.prefill.len(), 3);
+        assert_eq!(plan.prefill_rows(), 6);
     }
 
     #[test]

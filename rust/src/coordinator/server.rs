@@ -76,7 +76,7 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Batched-forward engine: given a padded token batch `[batch × seq]`,
@@ -128,6 +128,22 @@ impl QueueState {
     fn queued(&self) -> usize {
         self.queue.len() + self.routed.iter().map(|q| q.len()).sum::<usize>()
     }
+
+    /// Consistency re-check after clearing mutex poison. Every mutation
+    /// of this struct is a single-field push/pop/flag write (no
+    /// multi-field invariant is ever mid-update when a panic unwinds
+    /// through a guard), so the only derived invariants to restore are
+    /// structural: the per-worker vectors must cover every worker index
+    /// and `exited` must equal the set flags.
+    fn repair(&mut self, workers: usize) {
+        if self.routed.len() < workers {
+            self.routed.resize_with(workers, VecDeque::new);
+        }
+        if self.exited_flags.len() < workers {
+            self.exited_flags.resize(workers, false);
+        }
+        self.exited = self.exited_flags.iter().filter(|&&f| f).count();
+    }
 }
 
 struct Shared {
@@ -137,6 +153,27 @@ struct Shared {
     workers: usize,
     /// Session → worker placements for cache-aware routing.
     router: Router,
+}
+
+impl Shared {
+    /// Poison-tolerant queue-state lock. A worker panicking inside a
+    /// serve phase unwinds while it may hold this mutex; with plain
+    /// `.lock().unwrap()` that poison would cascade into every submitter,
+    /// every surviving worker and `shutdown` itself (the pool would
+    /// deadlock or die with one worker). Clearing the poison is paired
+    /// with [`QueueState::repair`], which re-establishes the derived
+    /// invariants — the failure-semantics contract documented in
+    /// `coordinator/mod.rs`.
+    fn lock_state(&self) -> MutexGuard<'_, QueueState> {
+        match self.state.lock() {
+            Ok(st) => st,
+            Err(poisoned) => {
+                let mut st = poisoned.into_inner();
+                st.repair(self.workers);
+                st
+            }
+        }
+    }
 }
 
 /// Aggregate + per-worker metrics returned by [`ServerHandle::shutdown_report`].
@@ -189,7 +226,7 @@ impl ServerHandle {
             .and_then(|m| self.shared.router.route(m.id));
         let req =
             GenRequest { id, prompt, gen_tokens, reply: tx, t_submit: Instant::now(), session };
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.lock_state();
         if st.shutting_down
             || st.exited == self.shared.workers
             || st.queued() >= self.shared.queue_cap
@@ -225,7 +262,7 @@ impl ServerHandle {
     /// Drain + stop; returns aggregate and per-worker metrics.
     pub fn shutdown_report(mut self) -> ServerReport {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.lock_state();
             st.shutting_down = true;
         }
         self.shared.cond.notify_all();
@@ -240,7 +277,7 @@ impl ServerHandle {
             let _ = join.join();
         }
         let shared_rejected = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.lock_state();
             // Every worker is gone; disconnect stragglers and count them.
             st.rejected += st.queued() as u64;
             st.queue.clear();
@@ -268,7 +305,7 @@ impl Drop for ServerHandle {
     /// the original single-worker server).
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.lock_state();
             st.shutting_down = true;
         }
         self.shared.cond.notify_all();
@@ -420,7 +457,7 @@ fn pool_worker<F, S>(
     // pops it), and once the LAST worker leaves, drop the shared queue
     // too, so clients see disconnected channels instead of hanging.
     {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = shared.lock_state();
         st.exited += 1;
         st.exited_flags[worker] = true;
         // Dropped requests count as rejected so the final report still
@@ -498,6 +535,87 @@ fn evict_slot<S: StepEngine>(
     metrics.cache_evictions += 1;
 }
 
+/// Drain one worker's routed queue into its batcher: lease hits
+/// reattach to their retained slot (consuming no free slot); misses
+/// need normal admission capacity. A hit whose placement fails — the
+/// leased slot is occupied or out of range, i.e. lease/reserve
+/// bookkeeping desynced — degrades to the cold-prefill fallback
+/// (counted in `routed_misses`) instead of killing the worker. Returns
+/// the remaining free-slot count.
+#[allow(clippy::too_many_arguments)]
+fn drain_routed(
+    st: &mut QueueState,
+    shared: &Shared,
+    batcher: &mut Batcher,
+    leases: &mut LeaseTable,
+    metrics: &mut Metrics,
+    resumes: &mut Vec<(usize, Vec<i32>)>,
+    worker: usize,
+    seq: usize,
+    mut free: usize,
+) -> usize {
+    loop {
+        let hit = match st.routed[worker].front() {
+            Some(req) => req
+                .session
+                .as_ref()
+                .map(|m| m.resume.is_some() && leases.contains(m.id))
+                .unwrap_or(false),
+            None => break,
+        };
+        if !hit && free == 0 {
+            break;
+        }
+        let req = st.routed[worker].pop_front().expect("peeked head");
+        metrics.record_start();
+        if hit {
+            let meta = req.session.clone().expect("hit implies session meta");
+            let resume = meta.resume.expect("hit implies resume info");
+            let lease = leases.take(meta.id).expect("hit implies a live lease");
+            match batcher.place(lease.slot, req, seq) {
+                Ok(()) => {
+                    metrics.cache_hits += 1;
+                    let mut feed = Vec::with_capacity(resume.append.len() + 1);
+                    feed.push(resume.pending);
+                    feed.extend_from_slice(&resume.append);
+                    resumes.push((lease.slot, feed));
+                }
+                Err(req) => {
+                    // Lease/slot bookkeeping desynced: the leased slot is
+                    // occupied or out of range. A stale route degrades
+                    // instead of killing the worker: drop the
+                    // (already-taken) lease and its router placement —
+                    // the slot's current owner keeps its state, nothing
+                    // is freed here — and serve the turn through the
+                    // cold-prefill fallback.
+                    shared.router.unregister(meta.id, worker);
+                    metrics.routed_misses += 1;
+                    metrics.cache_misses += 1;
+                    if free > 0 {
+                        free -= 1;
+                        let admitted = batcher.submit(req);
+                        debug_assert!(admitted, "local batcher sized to its slot count");
+                    } else {
+                        // No admission capacity this wave: back to the
+                        // shared queue so any live worker can take it
+                        // next iteration.
+                        st.queue.push_back(req);
+                        shared.cond.notify_one();
+                    }
+                }
+            }
+        } else {
+            if req.session.as_ref().map(|m| m.resume.is_some()).unwrap_or(false) {
+                metrics.cache_misses += 1;
+            }
+            free -= 1;
+            let admitted = batcher.submit(req);
+            debug_assert!(admitted, "local batcher sized to its slot count");
+        }
+    }
+    free
+}
+
 /// One worker's serve loop: admit from the routed + shared queues into
 /// the local batcher (reattaching lease hits to their retained slots),
 /// run resume + prefill + decode phases, complete sessions — retaining
@@ -531,60 +649,40 @@ fn run_worker<S: StepEngine>(
         // slots so decode iterations aren't delayed.
         let mut resumes: Vec<(usize, Vec<i32>)> = Vec::new();
         {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.lock_state();
             while batcher.is_idle() && st.queue.is_empty() && st.routed[worker].is_empty() {
                 if st.shutting_down {
                     return; // clean drain: nothing queued, nothing in flight
                 }
-                let (guard, _timeout) =
-                    shared.cond.wait_timeout(st, Duration::from_millis(50)).unwrap();
+                // Same poison-clearing contract as `lock_state`: a peer
+                // panicking while we wait must not take this worker down.
+                let guard = match shared.cond.wait_timeout(st, Duration::from_millis(50)) {
+                    Ok((guard, _timeout)) => guard,
+                    Err(poisoned) => {
+                        let (mut guard, _timeout) = poisoned.into_inner();
+                        guard.repair(shared.workers);
+                        guard
+                    }
+                };
                 st = guard;
             }
             let mut free =
                 slots.saturating_sub(batcher.active() + batcher.reserved() + batcher.pending());
             loop {
-                // Routed queue first: lease hits reattach to their
-                // retained slot (consuming no free slot); misses need
-                // normal admission capacity.
-                loop {
-                    let hit = match st.routed[worker].front() {
-                        Some(req) => req
-                            .session
-                            .as_ref()
-                            .map(|m| m.resume.is_some() && leases.contains(m.id))
-                            .unwrap_or(false),
-                        None => break,
-                    };
-                    if !hit && free == 0 {
-                        break;
-                    }
-                    let req = st.routed[worker].pop_front().expect("peeked head");
-                    metrics.record_start();
-                    if hit {
-                        let meta = req.session.clone().expect("hit implies session meta");
-                        let resume = meta.resume.expect("hit implies resume info");
-                        let lease = leases.take(meta.id).expect("hit implies a live lease");
-                        batcher.place(lease.slot, req, seq).unwrap_or_else(|_| {
-                            panic!(
-                                "leased slot {} is occupied or out of range \
-                                 (lease/reserve bookkeeping desynced)",
-                                lease.slot
-                            )
-                        });
-                        metrics.cache_hits += 1;
-                        let mut feed = Vec::with_capacity(resume.append.len() + 1);
-                        feed.push(resume.pending);
-                        feed.extend_from_slice(&resume.append);
-                        resumes.push((lease.slot, feed));
-                    } else {
-                        if req.session.as_ref().map(|m| m.resume.is_some()).unwrap_or(false) {
-                            metrics.cache_misses += 1;
-                        }
-                        free -= 1;
-                        let admitted = batcher.submit(req);
-                        debug_assert!(admitted, "local batcher sized to its slot count");
-                    }
-                }
+                // Routed queue first (lease hits consume no free slot;
+                // misses — including stale-lease placement failures —
+                // take normal admission capacity).
+                free = drain_routed(
+                    &mut st,
+                    shared,
+                    &mut batcher,
+                    &mut leases,
+                    metrics,
+                    &mut resumes,
+                    worker,
+                    seq,
+                    free,
+                );
                 // Waiting traffic must never starve behind retained
                 // windows: evict leases LRU-first while blocked requests
                 // outnumber free slots. The shared queue is drained by
@@ -1137,7 +1235,7 @@ mod tests {
         let snap = handle.shutdown();
         assert_eq!(snap.completed, 1);
         // After shutdown the state says so; a late handle would reject.
-        assert!(shared.state.lock().unwrap().shutting_down);
+        assert!(shared.lock_state().shutting_down);
     }
 
     #[test]
@@ -1288,6 +1386,149 @@ mod tests {
             "decode stalled behind the chunking prompt ({} iterations)",
             snap.decode_steps
         );
+    }
+
+    fn test_shared(workers: usize) -> Shared {
+        Shared {
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                routed: (0..workers).map(|_| VecDeque::new()).collect(),
+                shutting_down: false,
+                rejected: 0,
+                exited: 0,
+                exited_flags: vec![false; workers],
+            }),
+            cond: Condvar::new(),
+            queue_cap: 8,
+            workers,
+            router: Router::new(),
+        }
+    }
+
+    fn routed_turn(id: u64, session: u64) -> (GenRequest, Receiver<GenResponse>) {
+        use crate::coordinator::session::{ResumeTurn, SessionMeta};
+        let (tx, rx) = channel();
+        (
+            GenRequest {
+                id,
+                prompt: vec![1, 2, 3],
+                gen_tokens: 1,
+                reply: tx,
+                t_submit: Instant::now(),
+                session: Some(SessionMeta {
+                    id: SessionId(session),
+                    resume: Some(ResumeTurn { pending: 3, append: vec![4] }),
+                }),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn stale_lease_placement_degrades_to_cold_prefill() {
+        // Manufacture the desync the old code panicked on: a lease
+        // claiming slot 0 while slot 0 is occupied by another session.
+        let shared = test_shared(1);
+        let mut batcher = Batcher::new(2, 8);
+        let (tx, _rx0) = channel();
+        let occupier = GenRequest {
+            id: 1,
+            prompt: vec![9],
+            gen_tokens: 3,
+            reply: tx,
+            t_submit: Instant::now(),
+            session: None,
+        };
+        assert!(batcher.submit(occupier));
+        assert_eq!(batcher.fill_slots(8), vec![0]);
+        let mut leases = LeaseTable::new(2, 0);
+        assert!(leases.try_retain(SessionId(7), 0, 0));
+        shared.router.register(SessionId(7), 0);
+        let (req, _rx) = routed_turn(2, 7);
+        let mut metrics = Metrics::default();
+        let mut resumes = Vec::new();
+        let mut st = shared.lock_state();
+        st.routed[0].push_back(req);
+        let free = drain_routed(
+            &mut st,
+            &shared,
+            &mut batcher,
+            &mut leases,
+            &mut metrics,
+            &mut resumes,
+            0,
+            8,
+            1,
+        );
+        // Degraded, not panicked: counted, lease + placement dropped, the
+        // turn re-admitted through the cold-prefill path.
+        assert_eq!(metrics.routed_misses, 1);
+        assert_eq!(metrics.cache_misses, 1);
+        assert_eq!(metrics.cache_hits, 0);
+        assert!(resumes.is_empty(), "a degraded turn must not warm-resume");
+        assert!(!leases.contains(SessionId(7)), "the stale lease is dropped");
+        assert_eq!(shared.router.route(SessionId(7)), None, "placement dropped too");
+        assert_eq!(free, 0, "the degraded turn consumed the free slot");
+        assert_eq!(batcher.pending(), 1, "queued for cold prefill locally");
+        // The occupying session was never disturbed.
+        assert_eq!(batcher.session_mut(0).unwrap().request.id, 1);
+
+        // With no admission capacity the degraded turn falls back to the
+        // shared queue instead (any live worker may take it).
+        assert!(leases.try_retain(SessionId(7), 0, 0));
+        let (req, _rx2) = routed_turn(3, 7);
+        st.routed[0].push_back(req);
+        let free = drain_routed(
+            &mut st,
+            &shared,
+            &mut batcher,
+            &mut leases,
+            &mut metrics,
+            &mut resumes,
+            0,
+            8,
+            0,
+        );
+        assert_eq!(free, 0);
+        assert_eq!(metrics.routed_misses, 2);
+        assert_eq!(st.queue.len(), 1, "no capacity: back to the shared queue");
+        assert!(st.routed[0].is_empty());
+    }
+
+    #[test]
+    fn queue_state_repair_restores_derived_invariants() {
+        let mut st = QueueState {
+            queue: VecDeque::new(),
+            routed: Vec::new(),
+            shutting_down: false,
+            rejected: 0,
+            exited: 7, // inconsistent with the flags below
+            exited_flags: vec![true],
+        };
+        st.repair(3);
+        assert_eq!(st.routed.len(), 3, "per-worker queues cover every worker");
+        assert_eq!(st.exited_flags.len(), 3);
+        assert_eq!(st.exited, 1, "exited recomputed from the flags");
+    }
+
+    #[test]
+    fn poisoned_state_mutex_does_not_cascade_or_deadlock_shutdown() {
+        let handle = start_pool(2, 2, 16, |_w| Ok(MockEngine { b: 2, s: 8, v: 16, calls: 0 }));
+        let rx = handle.submit(vec![3], 2);
+        assert_eq!(rx.recv().unwrap().tokens, vec![4, 5]);
+        // Poison the shared-state mutex the way a panicking worker would:
+        // panic while holding the guard.
+        let shared = Arc::clone(&handle.shared);
+        let _ = std::thread::spawn(move || {
+            let _guard = shared.state.lock().unwrap();
+            panic!("simulated worker panic while holding the queue state");
+        })
+        .join();
+        // Submission, serving and shutdown must all keep working.
+        let rx = handle.submit(vec![7], 2);
+        assert_eq!(rx.recv().unwrap().tokens, vec![8, 9]);
+        let snap = handle.shutdown();
+        assert_eq!(snap.completed, 2, "the pool survived the poisoned mutex");
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Differential-fuzz drivers: one pure function per fuzz target.
+//!
+//! Each driver maps an arbitrary byte string onto a structured case and
+//! asserts a crate invariant, panicking on any violation:
+//!
+//! * [`lut_gemm_differential`] — every LUT GEMM strategy (scalar table,
+//!   symmetric table, bucket, SIMD, and both [`ParallelLut`] paths under
+//!   arbitrary thread/shard splits) agrees with the dense FP reference
+//!   on arbitrary shapes, the parallel paths **bit-identically** so;
+//! * [`packed_roundtrip`] — [`PackedIndices`] `set`/`get`/`unpack_row`
+//!   round-trip an arbitrary write schedule against a dense model;
+//! * [`config_never_panics`] — JSON parsing, [`LcdConfig`] loading and
+//!   `--set` override parsing return `Err` (never panic, never overflow
+//!   the stack) on arbitrary input;
+//! * [`slot_cache_differential`] — [`SlotCache`] ring arithmetic matches
+//!   a naive `Vec`-of-rows model across arbitrary
+//!   push/extend/truncate/clear/lease schedules.
+//!
+//! The drivers are deliberately toolchain-agnostic: `rust/fuzz/` wraps
+//! them in nightly-only `cargo fuzz` targets for open-ended exploration,
+//! while `rust/tests/fuzz_corpus.rs` replays the checked-in seed corpus
+//! plus a budget of seeded random inputs on stable — so tier-1 CI
+//! exercises every driver on every push without nightly.
+//!
+//! Byte decoding follows the usual fuzz convention: an exhausted input
+//! yields zeros forever, so every prefix of a crashing input is itself a
+//! well-formed (shorter) case and minimization stays meaningful.
+
+use crate::clustering::kmeans_1d;
+use crate::config::LcdConfig;
+use crate::lut::{
+    lut_gemm_bucket, lut_gemm_fp_ref, lut_gemm_table, lut_gemm_table_sym, LutLayer, PackedIndices,
+    ParallelLut, ProductTable, SimdLutLayer, SimdScratch, SlotCache,
+};
+use crate::util::json::Json;
+use crate::util::{mse, Rng};
+
+/// Cursor over fuzz input; reads past the end yield 0.
+pub struct ByteReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(data: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { data, pos: 0 }
+    }
+
+    /// Next byte (0 once exhausted).
+    pub fn byte(&mut self) -> u8 {
+        let b = self.data.get(self.pos).copied().unwrap_or(0);
+        self.pos = self.pos.saturating_add(1);
+        b
+    }
+
+    /// Next 8 bytes, big-endian.
+    pub fn u64(&mut self) -> u64 {
+        (0..8).fold(0u64, |v, _| (v << 8) | u64::from(self.byte()))
+    }
+
+    /// Two-byte pick in `[lo, hi]` (inclusive; `lo <= hi` required).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi, "empty range");
+        let raw = (usize::from(self.byte()) << 8) | usize::from(self.byte());
+        lo + raw % (hi - lo + 1)
+    }
+
+    /// Next byte reinterpreted as a signed activation.
+    pub fn i8(&mut self) -> i8 {
+        self.byte() as i8
+    }
+
+    /// All input consumed (subsequent reads only yield padding zeros).
+    pub fn exhausted(&self) -> bool {
+        self.pos >= self.data.len()
+    }
+}
+
+/// Differential check over every GEMM strategy on one fuzz-derived
+/// layer/batch. The exact kernels (table, symmetric table, bucket) must
+/// match the FP reference to numerical noise; SIMD within its 7-bit
+/// centroid-rounding bound; the parallel paths must equal their serial
+/// counterparts **bit for bit** for any thread count and shard split.
+pub fn lut_gemm_differential(data: &[u8]) {
+    let mut r = ByteReader::new(data);
+    let d_in = r.range(1, 64);
+    let d_out = r.range(1, 32);
+    let k = r.range(2, 16);
+    let batch = r.range(1, 4);
+    let threads = r.range(1, 4);
+    let shard_rows = r.range(0, 4); // 0 = auto granularity
+    let seed = r.u64();
+    let mut rng = Rng::new(seed);
+    let w = rng.normal_vec(d_in * d_out, 0.0, 0.05);
+    let km = kmeans_1d(&w, k, 15, &mut rng);
+    let Ok(layer) = LutLayer::compile(&km.clustering, d_in, d_out, 1.3, 0.025) else {
+        return; // a rejected compile is a valid outcome, not a finding
+    };
+    // Activations come straight from the fuzz input (zero-padded).
+    let q: Vec<i8> = (0..batch * d_in).map(|_| r.i8()).collect();
+
+    let y_ref = lut_gemm_fp_ref(&q, batch, &layer);
+    let table = ProductTable::build(&layer.centroids);
+    let y_t = lut_gemm_table(&q, batch, &layer, &table);
+    let y_s = lut_gemm_table_sym(&q, batch, &layer, &table);
+    let y_b = lut_gemm_bucket(&q, batch, &layer);
+    let case = format!("d_in={d_in} d_out={d_out} k={k} batch={batch} seed={seed:#x}");
+    assert!(mse(&y_ref.data, &y_t.data) < 1e-8, "table kernel diverged from FP ref ({case})");
+    assert!(mse(&y_ref.data, &y_s.data) < 1e-8, "symmetric kernel diverged from FP ref ({case})");
+    assert!(mse(&y_ref.data, &y_b.data) < 1e-8, "bucket kernel diverged from FP ref ({case})");
+
+    let simd = SimdLutLayer::compile(&layer);
+    let mut scratch = SimdScratch::default();
+    let y_simd = simd.gemm(&q, batch, &mut scratch);
+    // 7-bit centroid rounding accumulated over d_in INT8 products — the
+    // documented SIMD bound (same as the property suite).
+    let cmax = layer.centroids.iter().fold(0.0f32, |m, &c| m.max(c.abs())).max(1e-12);
+    let tol =
+        (d_in as f64).sqrt() * 127.0 * (f64::from(cmax) / 63.0) * f64::from(layer.output_scale);
+    assert!(
+        mse(&y_simd.data, &y_ref.data).sqrt() < tol.max(1e-4),
+        "SIMD kernel outside its rounding bound ({case})"
+    );
+
+    let par = ParallelLut::new(threads, shard_rows);
+    let pb = par.gemm_bucket(&q, batch, &layer);
+    assert_eq!(
+        y_b.data, pb.data,
+        "parallel bucket not bit-identical to serial ({case} threads={threads} shard={shard_rows})"
+    );
+    let mut ps = SimdScratch::default();
+    let psimd = par.gemm_simd(&simd, &q, batch, &mut ps);
+    assert_eq!(
+        y_simd.data, psimd.data,
+        "parallel SIMD not bit-identical to serial ({case} threads={threads} shard={shard_rows})"
+    );
+}
+
+/// Round-trip an arbitrary write schedule through [`PackedIndices`]
+/// against a dense byte-matrix model: last write wins, neighbors and
+/// row boundaries (odd column counts share no bytes across rows) are
+/// preserved, and `unpack_row` agrees with element-wise `get`.
+pub fn packed_roundtrip(data: &[u8]) {
+    let mut r = ByteReader::new(data);
+    let rows = r.range(1, 12);
+    let cols = r.range(1, 33);
+    let mut p = PackedIndices::zeros(rows, cols);
+    let mut model = vec![vec![0u8; cols]; rows];
+    let mut writes = 0;
+    while !r.exhausted() && writes < 1024 {
+        writes += 1;
+        let row = r.range(0, rows - 1);
+        let col = r.range(0, cols - 1);
+        let v = r.byte() % 16;
+        p.set(row, col, v);
+        model[row][col] = v;
+    }
+    for (row, expect) in model.iter().enumerate() {
+        assert_eq!(&p.unpack_row(row), expect, "unpack_row({row}) diverged ({rows}x{cols})");
+        for (col, &want) in expect.iter().enumerate() {
+            assert_eq!(p.get(row, col), want, "get({row},{col}) diverged ({rows}x{cols})");
+        }
+    }
+}
+
+/// Config parsing must be total: arbitrary bytes through JSON parsing,
+/// [`LcdConfig::from_json`] and `--set` override parsing may be
+/// rejected with `Err` but must never panic or overflow the stack
+/// (deep-nesting inputs exercise the parser's recursion cap).
+pub fn config_never_panics(data: &[u8]) {
+    let text = String::from_utf8_lossy(data);
+    if let Ok(doc) = Json::parse(&text) {
+        let _ = LcdConfig::from_json(&doc);
+    }
+    let mut cfg = LcdConfig::default();
+    for kv in text.split(['\n', ',']) {
+        let _ = cfg.set_override(kv.trim());
+    }
+}
+
+/// Drive a [`SlotCache`] and a naive `Vec`-of-rows model through the
+/// same arbitrary schedule of push / extend / truncate / clear / lease /
+/// evict operations; after every step the cache's `len`, `gather` and
+/// `row` views must equal the model exactly (the ring is float-free
+/// bookkeeping, so equality is bitwise).
+pub fn slot_cache_differential(data: &[u8]) {
+    let mut r = ByteReader::new(data);
+    let slots = r.range(1, 4);
+    let window = r.range(1, 8);
+    let width = r.range(1, 4);
+    let mut cache = SlotCache::new(slots, window, width);
+    let mut model: Vec<Vec<Vec<f32>>> = vec![Vec::new(); slots];
+    let mut counter = 0.0f32;
+    let mut fill = |counter: &mut f32| -> Vec<f32> {
+        (0..width)
+            .map(|_| {
+                *counter += 1.0;
+                *counter
+            })
+            .collect()
+    };
+    let mut ops = 0u64;
+    while !r.exhausted() && ops < 512 {
+        ops += 1;
+        let slot = r.range(0, slots - 1);
+        match r.range(0, 5) {
+            0 => {
+                let row = fill(&mut counter);
+                cache.push(slot, &row);
+                model[slot].push(row);
+                if model[slot].len() > window {
+                    model[slot].remove(0);
+                }
+            }
+            1 => {
+                let n = r.range(0, 3);
+                let mut rows = Vec::with_capacity(n * width);
+                for _ in 0..n {
+                    let row = fill(&mut counter);
+                    rows.extend_from_slice(&row);
+                    model[slot].push(row);
+                }
+                cache.extend(slot, &rows);
+                while model[slot].len() > window {
+                    model[slot].remove(0);
+                }
+            }
+            2 => {
+                let len = r.range(0, window);
+                cache.truncate(slot, len);
+                model[slot].truncate(len);
+            }
+            3 => {
+                cache.clear(slot);
+                model[slot].clear();
+            }
+            4 => {
+                cache.lease(slot, ops);
+                assert_eq!(cache.lease_of(slot), Some(ops), "lease readback");
+                cache.release_lease(slot);
+                assert_eq!(cache.lease_of(slot), None, "released lease must clear");
+            }
+            _ => {
+                cache.evict(slot);
+                model[slot].clear();
+            }
+        }
+        let shape = format!("slots={slots} window={window} width={width} op#{ops}");
+        assert_eq!(cache.len(slot), model[slot].len(), "len diverged ({shape})");
+        let mut got = Vec::new();
+        cache.gather(slot, &mut got);
+        let want: Vec<f32> = model[slot].iter().flatten().copied().collect();
+        assert_eq!(got, want, "gather diverged from the model ({shape})");
+        if let Some(last) = model[slot].last() {
+            assert_eq!(cache.row(slot, model[slot].len() - 1), &last[..], "row view ({shape})");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The canonical "weird input" set every driver must survive: empty,
+    /// all-zero, all-ones, and a short ramp (exercises zero-padding).
+    fn boundary_inputs() -> Vec<Vec<u8>> {
+        let mut v = vec![Vec::new(), vec![0u8; 64], vec![0xFF; 64]];
+        v.push((0u8..32).collect());
+        v
+    }
+
+    #[test]
+    fn drivers_survive_boundary_inputs() {
+        for input in boundary_inputs() {
+            lut_gemm_differential(&input);
+            packed_roundtrip(&input);
+            config_never_panics(&input);
+            slot_cache_differential(&input);
+        }
+    }
+
+    #[test]
+    fn byte_reader_pads_with_zeros() {
+        let mut r = ByteReader::new(&[7]);
+        assert_eq!(r.byte(), 7);
+        assert!(r.exhausted());
+        assert_eq!(r.byte(), 0);
+        assert_eq!(r.range(3, 5), 3, "zero padding picks the low bound");
+        assert_eq!(r.u64(), 0);
+    }
+
+    #[test]
+    fn config_driver_rejects_hostile_documents_quietly() {
+        config_never_panics(br#"{"model":"gpt","seed":1e99,"train_steps":-3}"#);
+        config_never_panics("model=,seed=999999999999999999999999,=x".as_bytes());
+        config_never_panics("[".repeat(100_000).as_bytes());
+    }
+}

@@ -90,6 +90,7 @@ pub mod coordinator;
 pub mod data;
 pub mod distill;
 pub mod eval;
+pub mod fuzz;
 pub mod hessian;
 pub mod lut;
 pub mod model;

@@ -33,7 +33,7 @@ use crate::tensor::Matrix;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
 /// Shard task signature: `(shard_index, worker_scratch)`.
@@ -74,7 +74,11 @@ impl Job {
             if catch_unwind(AssertUnwindSafe(|| task(shard, scratch))).is_err() {
                 self.panicked.store(true, Ordering::Relaxed);
             }
-            let mut rem = self.remaining.lock().unwrap();
+            // Poison-tolerant: the critical section is a single counter
+            // decrement, so a peer that died holding the guard left it
+            // consistent — refusing the lock would instead strand `run`
+            // waiting on a count that can no longer reach zero.
+            let mut rem = self.remaining.lock().unwrap_or_else(PoisonError::into_inner);
             *rem -= 1;
             if *rem == 0 {
                 self.done.notify_all();
@@ -152,9 +156,16 @@ impl GemmPool {
             // Another thread is mid-run on this pool; don't serialize.
             Err(_) => job.work(&mut SimdScratch::default()),
         }
-        let mut rem = job.remaining.lock().unwrap();
+        // Same poison-clearing contract as `Job::work`: the shard counter
+        // is always consistent, and every shard is accounted for (task
+        // panics are caught above), so waiting through poison is safe and
+        // keeps one dead worker from cascading into the whole pool.
+        let mut rem = job.remaining.lock().unwrap_or_else(PoisonError::into_inner);
         while *rem > 0 {
-            rem = job.done.wait(rem).unwrap();
+            rem = match job.done.wait(rem) {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
         drop(rem);
         if job.panicked.load(Ordering::Relaxed) {
@@ -389,6 +400,24 @@ mod tests {
         pool.run(8, &|s: usize, _scratch: &mut SimdScratch| {
             assert!(s != 5, "injected shard failure");
         });
+    }
+
+    #[test]
+    fn pool_survives_a_shard_panic_and_keeps_serving() {
+        let pool = GemmPool::new(2);
+        let first = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|s: usize, _scratch: &mut SimdScratch| {
+                assert!(s != 3, "injected shard failure");
+            });
+        }));
+        assert!(first.is_err(), "the failed run must report its panic");
+        // The same pool keeps serving afterwards: every shard of the next
+        // job runs exactly once.
+        let count = AtomicUsize::new(0);
+        pool.run(8, &|_s: usize, _scratch: &mut SimdScratch| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub enum Json {
 impl Json {
     /// Parse a JSON document from text.
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -206,9 +206,17 @@ fn write_str(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Recursion cap for nested containers. The parser descends once per
+/// `[`/`{`, so unbounded nesting (e.g. a fuzz input of 100k `[`s) would
+/// overflow the stack; config and manifest documents are a handful of
+/// levels deep, and anything past this bound is rejected as malformed.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting depth (bounded by [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -234,8 +242,8 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Parser::object),
+            Some(b'[') => self.nested(Parser::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -243,6 +251,17 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             other => bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
         }
+    }
+
+    /// Descend into a container, enforcing the [`MAX_DEPTH`] bound.
+    fn nested(&mut self, f: fn(&mut Parser<'a>) -> Result<Json>) -> Result<Json> {
+        if self.depth >= MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.pos);
+        }
+        self.depth += 1;
+        let v = f(self);
+        self.depth -= 1;
+        v
     }
 
     fn literal(&mut self, word: &str, value: Json) -> Result<Json> {
@@ -443,6 +462,18 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // Unclosed and closed towers alike must return Err, never
+        // exhaust the stack (the parser recurses once per container).
+        assert!(Json::parse(&"[".repeat(100_000)).is_err());
+        assert!(Json::parse(&"{\"a\":".repeat(100_000)).is_err());
+        let over = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+        assert!(Json::parse(&over).is_err(), "past the depth cap");
+        let within = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&within).is_ok(), "within the depth cap");
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! Chaos suite: fault-injected coordinator runs.
+//!
+//! Every test serves real traffic through the worker pool with engines
+//! wrapped in [`ChaosEngine`], then kills a worker at a precise plan
+//! boundary (armed [`FaultPlan`]) or cancels clients mid-flight, and
+//! asserts the failure contract documented in `coordinator/mod.rs`:
+//!
+//! * **accounting** — `completed + rejected == submitted`, always: a
+//!   panicking worker's in-flight sessions, its routed queue share, and
+//!   (for the last worker) the shared queue all land in `rejected`;
+//! * **isolation** — surviving workers keep serving, and every stream
+//!   they complete stays bit-identical to the uninterrupted
+//!   single-request reference;
+//! * **no leaks** — a cleanly drained worker's engine holds zero
+//!   occupied slots at drop ([`ChaosEngine`]'s independent audit model);
+//! * **mergeable metrics** — the aggregate report equals the field-wise
+//!   sum of the per-worker snapshots for every additive counter.
+
+mod common;
+
+use lcd::coordinator::chaos::{audit_log, take_reports, AuditLog, AuditReport};
+use lcd::coordinator::{
+    start_pool_sched, AdmissionPolicy, ChaosEngine, FaultPlan, FaultPoint, GenResponse,
+    HostLutSpec, MetricsSnapshot, SchedulerConfig, ServerHandle, ServerReport, SessionOptions,
+    SessionStore,
+};
+use std::sync::Arc;
+
+/// Start a pool whose workers each own a chaos-wrapped engine of `kind`,
+/// one private [`FaultPlan`] per worker (index = worker id) and a shared
+/// audit log the engines report into at drop.
+fn chaos_pool(
+    kind: &'static str,
+    workers: usize,
+    batch: usize,
+    queue_cap: usize,
+    sched: SchedulerConfig,
+    opts: SessionOptions,
+    spec: &HostLutSpec,
+) -> (ServerHandle, Vec<Arc<FaultPlan>>, AuditLog) {
+    let plans: Vec<Arc<FaultPlan>> = (0..workers).map(|_| FaultPlan::new()).collect();
+    let log = audit_log();
+    let handle = {
+        let plans = plans.clone();
+        let log = log.clone();
+        let spec = spec.clone();
+        start_pool_sched(workers, batch, queue_cap, sched, opts, move |w| {
+            let engine = common::mk_engine(kind, &spec)?;
+            Ok(ChaosEngine::new(engine, Arc::clone(&plans[w]), log.clone(), w))
+        })
+    };
+    (handle, plans, log)
+}
+
+/// Receive every stream, splitting delivered responses (with their
+/// submission index) from disconnected receivers.
+fn collect(rxs: Vec<std::sync::mpsc::Receiver<GenResponse>>) -> (Vec<(usize, GenResponse)>, u64) {
+    let mut ok = Vec::new();
+    let mut dropped = 0u64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv() {
+            Ok(resp) => ok.push((i, resp)),
+            Err(_) => dropped += 1,
+        }
+    }
+    (ok, dropped)
+}
+
+/// A worker that drained cleanly (its fault never fired) must drop its
+/// engine with zero occupied slots — anything else is a leaked session.
+/// Killed workers are exempt: dying mid-plan strands in-flight slots by
+/// design (their requests are counted rejected instead).
+fn assert_clean_workers_leak_nothing(reports: &[AuditReport], label: &str) {
+    for r in reports {
+        if !r.fault_fired {
+            assert_eq!(
+                r.occupied, 0,
+                "{label}: worker {} drained cleanly but leaked {} occupied slot(s)",
+                r.worker, r.occupied
+            );
+        }
+    }
+}
+
+/// The aggregate must be the field-wise sum of the per-worker snapshots
+/// for every additive counter (merge is order-independent because the
+/// workers' results arrive in racy shutdown order). `rejected` is the
+/// one exception: the aggregate additionally counts shared-queue
+/// stragglers no worker ever owned.
+fn assert_aggregate_is_counter_sum(report: &ServerReport, label: &str) {
+    let sum = |f: fn(&MetricsSnapshot) -> u64| report.per_worker.iter().map(f).sum::<u64>();
+    let pairs: [(&str, u64, u64); 8] = [
+        ("completed", report.aggregate.completed, sum(|m| m.completed)),
+        ("generated_tokens", report.aggregate.generated_tokens, sum(|m| m.generated_tokens)),
+        ("prefill_tokens", report.aggregate.prefill_tokens, sum(|m| m.prefill_tokens)),
+        ("decode_tokens", report.aggregate.decode_tokens, sum(|m| m.decode_tokens)),
+        ("cache_hits", report.aggregate.cache_hits, sum(|m| m.cache_hits)),
+        ("cache_misses", report.aggregate.cache_misses, sum(|m| m.cache_misses)),
+        ("routed_misses", report.aggregate.routed_misses, sum(|m| m.routed_misses)),
+        ("resumed_tokens", report.aggregate.resumed_tokens, sum(|m| m.resumed_tokens)),
+    ];
+    for (name, aggregate, expected) in pairs {
+        assert_eq!(aggregate, expected, "{label}: aggregate {name} != per-worker sum");
+    }
+    assert!(
+        report.aggregate.rejected >= sum(|m| m.rejected),
+        "{label}: aggregate rejected must include every worker-local rejection"
+    );
+}
+
+/// Every delivered stream must be bit-identical to the uninterrupted
+/// single-request reference of its own prompt — chaos may kill workers,
+/// never corrupt survivors.
+fn assert_survivors_match_reference(
+    spec: &HostLutSpec,
+    requests: &[(Vec<i32>, usize)],
+    ok: &[(usize, GenResponse)],
+    label: &str,
+) {
+    for (i, resp) in ok {
+        assert_eq!(resp.id, *i as u64 + 1, "{label}: ids are 1-based submission order");
+        let (prompt, gen) = &requests[*i];
+        assert_eq!(
+            resp.tokens,
+            common::reference_stream(spec, prompt, *gen),
+            "{label}: surviving request {i} diverged from the uninterrupted reference"
+        );
+    }
+}
+
+/// Satellite matrix: kill one worker mid-decode under every engine kind
+/// × worker count and assert the drain contract. A request counted
+/// `completed` whose response was discarded by the same-iteration panic
+/// is legal (collect_done runs before the decode phase), so delivery may
+/// undercount completion but never the reverse — and the global
+/// `completed + rejected == submitted` invariant is exact.
+#[test]
+fn worker_kill_mid_decode_drains_with_full_accounting() {
+    for kind in common::ENGINE_KINDS {
+        for workers in [1usize, 4] {
+            let label = format!("kill-decode/{kind}/w{workers}");
+            let spec = common::base_spec(0xc4a0 + workers as u64, 4, 32, 16, 1);
+            let requests = common::request_set(0x51e7 ^ workers as u64, 16, 12);
+            let sched = SchedulerConfig::unchunked(AdmissionPolicy::Fifo);
+            let (handle, plans, log) =
+                chaos_pool(kind, workers, 4, 64, sched, SessionOptions::default(), &spec);
+            plans[0].arm(FaultPoint::Decode, 2);
+            let rxs: Vec<_> = requests.iter().map(|(p, g)| handle.submit(p.clone(), *g)).collect();
+            let (ok, dropped) = collect(rxs);
+            let report = handle.shutdown_report();
+            assert_eq!(
+                report.aggregate.completed + report.aggregate.rejected,
+                requests.len() as u64,
+                "{label}: every submission must land in completed or rejected"
+            );
+            assert_eq!(ok.len() as u64 + dropped, requests.len() as u64, "{label}: recv count");
+            assert!(
+                report.aggregate.completed >= ok.len() as u64,
+                "{label}: a delivered response implies a counted completion"
+            );
+            if workers == 1 {
+                assert!(plans[0].fired(FaultPoint::Decode), "{label}: armed fault must fire");
+                assert!(dropped > 0, "{label}: the kill must strand at least one request");
+            }
+            assert_survivors_match_reference(&spec, &requests, &ok, &label);
+            assert_clean_workers_leak_nothing(&take_reports(&log), &label);
+            assert_aggregate_is_counter_sum(&report, &label);
+        }
+    }
+}
+
+/// Kill a worker mid-chunked-prefill (partial prompt state in its
+/// engine) and assert survivors finish everything else bit-identically,
+/// with no slot leaks on the clean workers.
+#[test]
+fn worker_kill_mid_chunked_prefill_strands_no_sessions() {
+    for kind in common::ENGINE_KINDS {
+        let label = format!("kill-prefill/{kind}");
+        let spec = common::base_spec(0xf00d, 3, 32, 16, 1);
+        let requests = common::request_set(0xbeef, 16, 10);
+        let sched = SchedulerConfig::new(AdmissionPolicy::Fifo, 2).unwrap();
+        let (handle, plans, log) =
+            chaos_pool(kind, 2, 3, 64, sched, SessionOptions::default(), &spec);
+        plans[0].arm(FaultPoint::Prefill, 3);
+        let rxs: Vec<_> = requests.iter().map(|(p, g)| handle.submit(p.clone(), *g)).collect();
+        let (ok, dropped) = collect(rxs);
+        let report = handle.shutdown_report();
+        assert_eq!(
+            report.aggregate.completed + report.aggregate.rejected,
+            requests.len() as u64,
+            "{label}: accounting must survive a mid-chunk worker death"
+        );
+        assert_eq!(ok.len() as u64 + dropped, requests.len() as u64, "{label}: recv count");
+        assert_survivors_match_reference(&spec, &requests, &ok, &label);
+        assert_clean_workers_leak_nothing(&take_reports(&log), &label);
+        assert_aggregate_is_counter_sum(&report, &label);
+    }
+}
+
+/// Poison a lease mid-`resume_many`: run one clean multi-turn wave so
+/// every session holds a retained-slot lease, then arm the resume fault
+/// and resubmit. The worker dies reattaching the leases; every turn-2
+/// request is counted rejected, turn-1 completions stay counted, and the
+/// receivers disconnect instead of hanging.
+#[test]
+fn lease_poisoned_mid_resume_rejects_the_wave_cleanly() {
+    let label = "resume-poison";
+    let spec = common::base_spec(0xd00f, 4, 32, 16, 1);
+    let gen = 4usize;
+    let opts = SessionOptions { retained_slots: 4, retain_ttl_iters: 0 };
+    let sched = SchedulerConfig::unchunked(AdmissionPolicy::Fifo);
+    let (handle, plans, log) = chaos_pool("cached", 1, 4, 16, sched, opts, &spec);
+    let expected = common::expected_turns(&spec, gen);
+    let convs = common::conversations();
+    let mut store = SessionStore::new();
+    let ids: Vec<_> = (0..convs.len()).map(|_| store.open()).collect();
+    // Turn 1: clean, every session finishes and leases its slot.
+    let rxs: Vec<_> = ids
+        .iter()
+        .enumerate()
+        .map(|(s, &id)| handle.submit_turn(store.turn(id, &convs[s][0]).unwrap(), gen))
+        .collect();
+    for (s, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("{label}: turn 1 of session {s} dropped"));
+        assert_eq!(resp.tokens, expected[s][0].1, "{label}: turn 1 stream");
+        store.record(ids[s], &resp.tokens).unwrap();
+    }
+    // Turn 2: the first lease reattachment panics the worker.
+    plans[0].arm(FaultPoint::Resume, 1);
+    let rxs: Vec<_> = ids
+        .iter()
+        .enumerate()
+        .map(|(s, &id)| {
+            let turn = store.turn(id, &convs[s][1]).unwrap();
+            assert!(turn.resume.is_some(), "{label}: turn 2 must be resumable");
+            handle.submit_turn(turn, gen)
+        })
+        .collect();
+    let (ok, dropped) = collect(rxs);
+    assert!(ok.is_empty(), "{label}: no turn-2 stream can complete after the resume kill");
+    assert_eq!(dropped, ids.len() as u64, "{label}: every turn-2 receiver must disconnect");
+    assert!(plans[0].fired(FaultPoint::Resume), "{label}: armed resume fault must fire");
+    let report = handle.shutdown_report();
+    let submitted = (2 * ids.len()) as u64;
+    assert_eq!(
+        report.aggregate.completed + report.aggregate.rejected,
+        submitted,
+        "{label}: both turns accounted"
+    );
+    assert_eq!(report.aggregate.completed, ids.len() as u64, "{label}: turn 1 stays completed");
+    let reports = take_reports(&log);
+    assert_eq!(reports.len(), 1, "{label}: one engine, one audit report");
+    assert!(reports[0].fault_fired, "{label}: the audit must see the injected death");
+    assert_aggregate_is_counter_sum(&report, label);
+}
+
+/// Cancel mid-chunk: clients drop their receivers immediately after
+/// submitting while the pool chunk-prefills long prompts. Delivery to a
+/// disconnected receiver is a silent no-op, so the pool must drain every
+/// request to completion with zero leaks and no stuck sessions.
+#[test]
+fn cancelled_clients_mid_chunk_do_not_wedge_the_pool() {
+    let label = "cancel-chunk";
+    let spec = common::base_spec(0xabcd, 3, 32, 16, 1);
+    let requests = common::request_set(0x7777, 16, 10);
+    let sched = SchedulerConfig::new(AdmissionPolicy::ShortestPromptFirst, 2).unwrap();
+    let (handle, plans, log) =
+        chaos_pool("cached", 2, 3, 64, sched, SessionOptions::default(), &spec);
+    let mut kept = Vec::new();
+    for (i, (p, g)) in requests.iter().enumerate() {
+        let rx = handle.submit(p.clone(), *g);
+        // Every odd client hangs up right away; its session must still
+        // run (and be counted completed) without wedging a slot.
+        if i % 2 == 0 {
+            kept.push((i, rx));
+        }
+    }
+    let mut ok = Vec::new();
+    for (i, rx) in kept {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("{label}: kept request {i} dropped"));
+        ok.push((i, resp));
+    }
+    let report = handle.shutdown_report();
+    assert_eq!(
+        report.aggregate.completed,
+        requests.len() as u64,
+        "{label}: cancelled requests still run to completion"
+    );
+    assert_eq!(report.aggregate.rejected, 0, "{label}: nothing is rejected in a clean drain");
+    assert!(!plans.iter().any(|p| p.any_fired()), "{label}: no fault is armed here");
+    assert_survivors_match_reference(&spec, &requests, &ok, label);
+    let reports = take_reports(&log);
+    assert_eq!(reports.len(), 2, "{label}: both engines must report at drop");
+    assert_clean_workers_leak_nothing(&reports, label);
+    assert_aggregate_is_counter_sum(&report, label);
+}

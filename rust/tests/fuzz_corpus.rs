@@ -1,0 +1,97 @@
+//! Stable-toolchain replay of the fuzz suite.
+//!
+//! `rust/fuzz/` holds the open-ended cargo-fuzz targets (nightly +
+//! libfuzzer); this binary gives tier-1 CI the same coverage on stable
+//! by running each driver in `lcd::fuzz` over
+//!
+//! 1. the checked-in seed corpus (`rust/fuzz/corpus/<target>/*`,
+//!    embedded at compile time so the test is hermetic), and
+//! 2. a budget of deterministic pseudo-random byte strings
+//!    (`LCD_FUZZ_ITERS` inputs per driver, default 256 — the CI
+//!    fuzz-smoke job raises it).
+//!
+//! Every input that ever crashed a driver belongs in the corpus, where
+//! both the fuzzer and this replay pick it up forever.
+
+use lcd::fuzz;
+use lcd::util::Rng;
+
+type Driver = fn(&[u8]);
+
+/// Per-driver iteration budget for the random phase.
+fn iteration_budget() -> usize {
+    std::env::var("LCD_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(256)
+}
+
+/// FNV-1a over the target name: a stable per-target RNG stream, so two
+/// targets never replay the same random inputs.
+fn stream_seed(name: &str) -> u64 {
+    name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3)
+    })
+}
+
+/// Replay the embedded corpus, then `LCD_FUZZ_ITERS` seeded random
+/// inputs of varied length (including empty).
+fn run(name: &str, driver: Driver, corpus: &[&[u8]]) {
+    assert!(!corpus.is_empty(), "{name}: every target ships at least one corpus seed");
+    for seed in corpus {
+        driver(seed);
+    }
+    let mut rng = Rng::new(stream_seed(name));
+    for _ in 0..iteration_budget() {
+        let len = rng.below(97);
+        let input: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        driver(&input);
+    }
+}
+
+#[test]
+fn lut_gemm_strategies_agree_on_fuzzed_shapes() {
+    run(
+        "lut_gemm_diff",
+        fuzz::lut_gemm_differential,
+        &[
+            include_bytes!("../fuzz/corpus/lut_gemm_diff/seed-minimal").as_slice(),
+            include_bytes!("../fuzz/corpus/lut_gemm_diff/seed-wide").as_slice(),
+            include_bytes!("../fuzz/corpus/lut_gemm_diff/seed-threads").as_slice(),
+        ],
+    );
+}
+
+#[test]
+fn packed_indices_roundtrip_fuzzed_schedules() {
+    run(
+        "packed_indices_roundtrip",
+        fuzz::packed_roundtrip,
+        &[
+            include_bytes!("../fuzz/corpus/packed_indices_roundtrip/seed-dense").as_slice(),
+            include_bytes!("../fuzz/corpus/packed_indices_roundtrip/seed-odd-cols").as_slice(),
+        ],
+    );
+}
+
+#[test]
+fn config_parsing_never_panics_on_fuzzed_input() {
+    run(
+        "config_parse",
+        fuzz::config_never_panics,
+        &[
+            include_bytes!("../fuzz/corpus/config_parse/seed-valid").as_slice(),
+            include_bytes!("../fuzz/corpus/config_parse/seed-deep").as_slice(),
+            include_bytes!("../fuzz/corpus/config_parse/seed-hostile").as_slice(),
+        ],
+    );
+}
+
+#[test]
+fn slot_cache_matches_model_on_fuzzed_schedules() {
+    run(
+        "slot_cache_diff",
+        fuzz::slot_cache_differential,
+        &[
+            include_bytes!("../fuzz/corpus/slot_cache_diff/seed-ring").as_slice(),
+            include_bytes!("../fuzz/corpus/slot_cache_diff/seed-churn").as_slice(),
+        ],
+    );
+}
