@@ -42,9 +42,15 @@
 //!       [--admission fifo|spf|token_budget] [--prefill-chunk N] \
 //!       [--draft-k N] [--draft narrow|oracle] \
 //!       [--turns N] [--resume-rate R] [--retained-slots N] [--workers N] \
-//!       [--compare-admission]`
+//!       [--compare-admission] [--telemetry-json PATH] [--validate-json PATH]`
 //! Without `--engine`, sweeps host and cached across worker counts, then
 //! the speculative engine across draft kinds.
+//!
+//! `--telemetry-json PATH` writes the final run's aggregate telemetry
+//! snapshot (counters + phase latency histograms) as JSON;
+//! `--validate-json PATH` parses a JSON artifact with the crate's own
+//! parser and exits (nonzero on failure) — the CI check for
+//! `BENCH_serving.json`.
 
 use lcd::config::LcdConfig;
 use lcd::coordinator::server;
@@ -53,25 +59,26 @@ use lcd::data::{eval_lm_batches, CharTokenizer, CorpusSpec, SyntheticCorpus};
 use lcd::repro::shared::build_step_engine;
 use lcd::util::Rng;
 
-/// Drive one engine/worker configuration; returns the number of
-/// completed requests so callers can fail loudly when the serving path
-/// is broken (a 0-ok run must not look green in CI).
+/// Drive one engine/worker configuration; fails loudly when the serving
+/// path is broken (a 0-ok run must not look green in CI) and returns the
+/// aggregate snapshot so callers can export its telemetry.
 fn drive(
     cfg: &LcdConfig,
     engine: &str,
     workers: usize,
     n_requests: usize,
     gen_tokens: usize,
-) -> anyhow::Result<usize> {
+) -> anyhow::Result<lcd::coordinator::MetricsSnapshot> {
     let sched = cfg.serve.scheduler_config().expect("scheduler config validated on load");
     let cfg2 = cfg.clone();
     let engine_name = engine.to_string();
-    let handle = server::start_pool_sched(
+    let handle = server::start_pool_tele(
         workers,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
         sched,
         lcd::coordinator::SessionOptions::default(),
+        cfg.serve.telemetry_config(),
         move |_worker| build_step_engine(&cfg2, &engine_name),
     );
 
@@ -105,7 +112,7 @@ fn drive(
         report.aggregate.report()
     );
     anyhow::ensure!(ok > 0, "engine {engine} completed 0/{n_requests} requests");
-    Ok(ok)
+    Ok(report.aggregate)
 }
 
 /// Multi-turn session workload: `n_sessions` conversations of `turns`
@@ -125,12 +132,13 @@ fn drive_sessions(
     let sched = cfg.serve.scheduler_config().expect("scheduler config validated on load");
     let cfg2 = cfg.clone();
     let engine_name = engine.to_string();
-    let handle = server::start_pool_sched(
+    let handle = server::start_pool_tele(
         workers,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
         sched,
         cfg.serve.session_options(),
+        cfg.serve.telemetry_config(),
         move |_worker| build_step_engine(&cfg2, &engine_name),
     );
 
@@ -212,6 +220,20 @@ fn drive_sessions(
     Ok(report.aggregate)
 }
 
+/// Write the aggregate snapshot's JSON exposition (counters + phase
+/// latency histograms) when `--telemetry-json` was given.
+fn write_telemetry(
+    path: &Option<String>,
+    snap: &lcd::coordinator::MetricsSnapshot,
+) -> anyhow::Result<()> {
+    if let Some(path) = path {
+        std::fs::write(path, snap.to_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("telemetry written to {path}");
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut cfg = LcdConfig::default();
     let mut positional: Vec<usize> = Vec::new();
@@ -219,6 +241,7 @@ fn main() -> anyhow::Result<()> {
     let mut turns = 1usize;
     let mut resume_rate = 1.0f64;
     let mut compare_admission = false;
+    let mut telemetry_json: Option<String> = None;
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
     while i < argv.len() {
@@ -276,6 +299,33 @@ fn main() -> anyhow::Result<()> {
                 cfg.set_override(&format!("serve.prefill_chunk={v}"))?;
             }
             "--compare-admission" => compare_admission = true,
+            "--telemetry-json" => {
+                i += 1;
+                telemetry_json = Some(
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow::anyhow!("--telemetry-json needs a path"))?,
+                );
+            }
+            // CI helper: parse a JSON artifact (BENCH_serving.json, a
+            // telemetry dump) with the crate's own parser and exit —
+            // nonzero when the file is missing or malformed.
+            "--validate-json" => {
+                i += 1;
+                let path = argv
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("--validate-json needs a path"))?;
+                let text = std::fs::read_to_string(&path)
+                    .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+                let doc = lcd::util::Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+                if let Some(g) = doc.get("gates") {
+                    g.as_arr().map_err(|e| anyhow::anyhow!("{path}: 'gates': {e}"))?;
+                }
+                println!("validated {path}");
+                return Ok(());
+            }
             "--draft-k" => {
                 i += 1;
                 let v =
@@ -297,7 +347,7 @@ fn main() -> anyhow::Result<()> {
                      [--admission fifo|spf|token_budget] [--prefill-chunk N] \
                      [--draft-k N] [--draft narrow|oracle] \
                      [--turns N] [--resume-rate R] [--retained-slots N] [--workers N] \
-                     [--compare-admission]"
+                     [--compare-admission] [--telemetry-json PATH] [--validate-json PATH]"
                 );
             }
             other => positional.push(other.parse()?),
@@ -388,26 +438,37 @@ fn main() -> anyhow::Result<()> {
                 fifo.cache_hits,
                 if ok { "PASS" } else { "FAIL" }
             );
+            write_telemetry(&telemetry_json, &budget)?;
             return Ok(());
         }
-        drive_sessions(&cfg, kind, cfg.serve.workers, n_requests, turns, gen_tokens, resume_rate)?;
+        let snap = drive_sessions(
+            &cfg,
+            kind,
+            cfg.serve.workers,
+            n_requests,
+            turns,
+            gen_tokens,
+            resume_rate,
+        )?;
+        write_telemetry(&telemetry_json, &snap)?;
         return Ok(());
     }
 
+    let mut last: Option<lcd::coordinator::MetricsSnapshot> = None;
     match engine.as_deref() {
         // Explicit engine: one run at the configured worker count (the
         // CI smoke path uses `--engine cached`).
         Some(kind) => {
-            drive(&cfg, kind, cfg.serve.workers, n_requests, gen_tokens)?;
+            last = Some(drive(&cfg, kind, cfg.serve.workers, n_requests, gen_tokens)?);
         }
         None => {
             // Full-recompute baseline vs incremental decode, swept across
             // coordinator worker counts.
             for workers in [1usize, 2, 4] {
-                drive(&cfg, "host", workers, n_requests, gen_tokens)?;
+                last = Some(drive(&cfg, "host", workers, n_requests, gen_tokens)?);
             }
             for workers in [1usize, 2, 4] {
-                drive(&cfg, "cached", workers, n_requests, gen_tokens)?;
+                last = Some(drive(&cfg, "cached", workers, n_requests, gen_tokens)?);
             }
             // Speculative decode on top of the cached engine: the oracle
             // draft shows the acceptance-rate-1 upper bound, the narrow
@@ -415,17 +476,20 @@ fn main() -> anyhow::Result<()> {
             for draft in ["oracle", "narrow"] {
                 let mut cfg2 = cfg.clone();
                 cfg2.set_override(&format!("serve.draft={draft}"))?;
-                drive(&cfg2, "speculative", 1, n_requests, gen_tokens)?;
+                last = Some(drive(&cfg2, "speculative", 1, n_requests, gen_tokens)?);
             }
             // Artifact engines need `make artifacts`.
             if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
                 for kind in ["fp", "lut"] {
-                    drive(&cfg, kind, cfg.serve.workers, n_requests, gen_tokens)?;
+                    last = Some(drive(&cfg, kind, cfg.serve.workers, n_requests, gen_tokens)?);
                 }
             } else {
                 println!("(skipping fp/lut engines: {}/manifest.json missing)", cfg.artifacts_dir);
             }
         }
+    }
+    if let Some(snap) = &last {
+        write_telemetry(&telemetry_json, snap)?;
     }
     Ok(())
 }

@@ -9,16 +9,24 @@
 //!
 //! Emits machine-checkable `PERF_GATE <name> ... PASS|FAIL` lines the CI
 //! smoke job enforces: cached decode must stay flat across seq (the PR 2
-//! invariant) and the speculative engine must not be slower than plain
-//! cached decode at acceptance rate ≈ 1.
+//! invariant), the speculative engine must not be slower than plain
+//! cached decode at acceptance rate ≈ 1, and full span-tracing telemetry
+//! must not slow the serve loop beyond its noise margin.
+//!
+//! Every gate verdict and the serving scenarios' throughput / TTFT
+//! percentiles are also persisted to `BENCH_serving.json` in the working
+//! directory — the bench trajectory CI uploads and validates.
 
-use lcd::coordinator::server::{serve_blocking, Engine};
+use lcd::coordinator::server::{serve_blocking, serve_blocking_sched, serve_blocking_tele, Engine};
 use lcd::coordinator::{
     AdmissionPolicy, Batcher, CachedLutEngine, ChunkJob, FullRecomputeStep, GenRequest,
-    GreedyTableDraft, HostLutEngine, HostLutSpec, SpeculativeEngine, StepEngine,
+    GreedyTableDraft, HostLutEngine, HostLutSpec, MetricsSnapshot, SchedulerConfig,
+    SpeculativeEngine, StepEngine,
 };
+use lcd::telemetry::TelemetryConfig;
 use lcd::util::argmax;
 use lcd::util::bench::Bencher;
+use lcd::util::Json;
 use std::sync::mpsc::channel;
 use std::time::Instant;
 
@@ -86,6 +94,10 @@ fn warm_slots<S: StepEngine>(engine: &mut S, seq: usize) -> Vec<(usize, i32)> {
 
 fn main() {
     let mut b = Bencher::from_env();
+    // Gate verdicts and per-scenario serving stats accumulated for the
+    // persisted bench trajectory (BENCH_serving.json).
+    let mut gates: Vec<Json> = Vec::new();
+    let mut scenarios: Vec<Json> = Vec::new();
 
     // Batcher admission: submissions + slot fills per second.
     b.bench("batcher_submit_fill/1024", || {
@@ -148,14 +160,57 @@ fn main() {
 
     // End-to-end decode loop at two simulated forward costs.
     for cost_us in [50u64, 500] {
+        let mut last_snap: Option<MetricsSnapshot> = None;
         b.bench(&format!("serve_64reqs_cost{cost_us}us"), || {
             let engine = MockEngine { b: 8, s: 64, v: 96, cost_us };
             let reqs: Vec<(Vec<i32>, usize)> =
                 (0..64).map(|i| (vec![(i % 90) as i32 + 1; 8], 8)).collect();
             let (resps, snap) = serve_blocking(engine, reqs, 8).unwrap();
             debug_assert_eq!(resps.len(), 64);
+            let tps = snap.tokens_per_sec;
+            last_snap = Some(snap);
+            tps
+        });
+        if let Some(snap) = &last_snap {
+            scenarios.push(scenario_json(&format!("serve_64reqs_cost{cost_us}us"), snap));
+        }
+    }
+
+    // Telemetry overhead: the same closed request set through the
+    // scheduler path untraced (telemetry off — zero clock reads) and
+    // fully traced (span capture every iteration + phase histograms +
+    // flight recorder). The PERF_GATE bounds the traced/untraced ratio.
+    {
+        let sched = SchedulerConfig::unchunked(AdmissionPolicy::Fifo);
+        let reqs = || -> Vec<(Vec<i32>, usize)> {
+            (0..16).map(|i| (vec![(i % 90) as i32 + 1; 8], 8)).collect()
+        };
+        let mut last_snap: Option<MetricsSnapshot> = None;
+        b.bench("serve_untraced_16reqs_cost20us", || {
+            let engine =
+                FullRecomputeStep::new(MockEngine { b: 8, s: 64, v: 96, cost_us: 20 }).unwrap();
+            let (resps, snap) = serve_blocking_sched(engine, reqs(), 8, sched).unwrap();
+            debug_assert_eq!(resps.len(), 16);
             snap.tokens_per_sec
         });
+        b.bench("serve_traced_16reqs_cost20us", || {
+            let engine =
+                FullRecomputeStep::new(MockEngine { b: 8, s: 64, v: 96, cost_us: 20 }).unwrap();
+            let (resps, snap, dump) =
+                serve_blocking_tele(engine, reqs(), 8, sched, TelemetryConfig::default()).unwrap();
+            debug_assert_eq!(resps.len(), 16);
+            let events = dump.map(|d| d.events.len()).unwrap_or(0);
+            let tps = snap.tokens_per_sec;
+            last_snap = Some(snap);
+            tps + events as f64
+        });
+        if let Some(snap) = &last_snap {
+            scenarios.push(scenario_json("serve_traced_16reqs_cost20us", snap));
+            assert!(
+                !snap.phases.iteration_us.is_empty(),
+                "traced runs must populate the phase histograms"
+            );
+        }
     }
 
     // Multi-worker coordinator sweep: N workers drain the same closed
@@ -254,6 +309,7 @@ fn main() {
                 "PERF_GATE oracle_acceptance_k4 rate {rate:.4} min 1.00 {}",
                 if ok { "PASS" } else { "FAIL" }
             );
+            gates.push(gate_json("oracle_acceptance_k4", rate, 1.00, ok));
         }
 
         let mut accepted = 0u64;
@@ -376,11 +432,13 @@ fn main() {
             "PERF_GATE chunk_budget_packing wave {new_wave} min 4 {}",
             if ok { "PASS" } else { "FAIL" }
         );
+        gates.push(gate_json("chunk_budget_packing", new_wave as f64, 4.0, ok));
     }
 
     // Machine-checkable perf gates (enforced by the CI smoke job).
     perf_gate(
         &b,
+        &mut gates,
         "cached_decode_flat_vs_seq",
         "decode_step_cached/seq1024",
         "decode_step_cached/seq64",
@@ -388,10 +446,25 @@ fn main() {
     );
     // Warm-resume cost must not scale with seq (it feeds only the turn's
     // appended rows), and at seq 1024 it must beat cold re-prefill by 2x+.
-    perf_gate(&b, "warm_resume_flat_vs_seq", "resume_warm/seq1024", "resume_warm/seq64", 1.60);
-    perf_gate(&b, "warm_resume_skips_prefill", "resume_warm/seq1024", "resume_cold/seq1024", 0.50);
     perf_gate(
         &b,
+        &mut gates,
+        "warm_resume_flat_vs_seq",
+        "resume_warm/seq1024",
+        "resume_warm/seq64",
+        1.60,
+    );
+    perf_gate(
+        &b,
+        &mut gates,
+        "warm_resume_skips_prefill",
+        "resume_warm/seq1024",
+        "resume_cold/seq1024",
+        0.50,
+    );
+    perf_gate(
+        &b,
+        &mut gates,
         "speculative_not_slower_at_accept1",
         "spec_decode_oracle/k4",
         "spec_baseline_cached/k4",
@@ -402,12 +475,74 @@ fn main() {
     // iteration; 0.75 leaves wide noise margin over the ~0.1 expected).
     perf_gate(
         &b,
+        &mut gates,
         "chunked_prefill_unblocks_decode",
         "long_prompt_iter_chunked16/seq256",
         "long_prompt_iter_unchunked/seq256",
         0.75,
     );
+    // Full tracing (spans every iteration) must stay within noise of the
+    // untraced loop: the hot path is counters-only and span capture is
+    // a handful of clock reads per phase, so 1.30 is a generous bound.
+    perf_gate(
+        &b,
+        &mut gates,
+        "telemetry_overhead",
+        "serve_traced_16reqs_cost20us",
+        "serve_untraced_16reqs_cost20us",
+        1.30,
+    );
     b.finish("serving");
+
+    // Persist the trajectory: every gate verdict, the serving scenarios'
+    // throughput/TTFT percentiles, and all bench medians. CI uploads
+    // this file and fails when it is missing or unparsable.
+    let results: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("median_ns", Json::num(r.median_ns())),
+                ("p10_ns", Json::num(r.p10_ns())),
+                ("p90_ns", Json::num(r.p90_ns())),
+                ("samples", Json::int(r.samples_ns.len())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("suite", Json::str("serving")),
+        ("gates", Json::arr(gates)),
+        ("scenarios", Json::arr(scenarios)),
+        ("results", Json::arr(results)),
+    ]);
+    std::fs::write("BENCH_serving.json", doc.to_string_pretty())
+        .expect("writing BENCH_serving.json");
+    println!("bench trajectory written to BENCH_serving.json");
+}
+
+/// One serving scenario's stats for the persisted trajectory: headline
+/// throughput + TTFT percentiles, plus the full telemetry snapshot
+/// (counters and phase histograms).
+fn scenario_json(name: &str, snap: &MetricsSnapshot) -> Json {
+    Json::obj(vec![
+        ("scenario", Json::str(name)),
+        ("tokens_per_sec", Json::num(snap.tokens_per_sec)),
+        ("p50_ttft_us", Json::int(snap.p50_ttft_us as usize)),
+        ("p95_ttft_us", Json::int(snap.p95_ttft_us as usize)),
+        ("p99_ttft_us", Json::int(snap.p99_ttft_us as usize)),
+        ("telemetry", snap.to_json()),
+    ])
+}
+
+/// A gate verdict record for the persisted trajectory.
+fn gate_json(name: &str, ratio: f64, limit: f64, pass: bool) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ratio", Json::num(ratio)),
+        ("limit", Json::num(limit)),
+        ("pass", Json::Bool(pass)),
+    ])
 }
 
 /// Deterministic chunked-prefill drain under `TokenBudget` admission:
@@ -470,16 +605,25 @@ fn drain_chunk_budget(budgeted: bool) -> (usize, usize) {
     (first_wave, iters)
 }
 
-/// Print a `PERF_GATE` verdict: FAIL when `fast`'s median exceeds
-/// `limit` × `slow`'s median (or either case is missing).
-fn perf_gate(b: &Bencher, name: &str, fast: &str, slow: &str, limit: f64) {
+/// Print a `PERF_GATE` verdict — FAIL when `fast`'s median exceeds
+/// `limit` × `slow`'s median (or either case is missing) — and record it
+/// for the persisted trajectory.
+fn perf_gate(b: &Bencher, gates: &mut Vec<Json>, name: &str, fast: &str, slow: &str, limit: f64) {
     let median = |n: &str| b.results().iter().find(|r| r.name == n).map(|r| r.median_ns());
     match (median(fast), median(slow)) {
         (Some(f), Some(s)) if s > 0.0 => {
             let ratio = f / s;
-            let verdict = if ratio <= limit { "PASS" } else { "FAIL" };
-            println!("PERF_GATE {name} ratio {ratio:.3} limit {limit:.2} {verdict}");
+            let ok = ratio <= limit;
+            println!(
+                "PERF_GATE {name} ratio {ratio:.3} limit {limit:.2} {}",
+                if ok { "PASS" } else { "FAIL" }
+            );
+            gates.push(gate_json(name, ratio, limit, ok));
         }
-        _ => println!("PERF_GATE {name} ratio NaN limit {limit:.2} FAIL"),
+        _ => {
+            println!("PERF_GATE {name} ratio NaN limit {limit:.2} FAIL");
+            // -1 stands in for the unmeasurable ratio: NaN is not JSON.
+            gates.push(gate_json(name, -1.0, limit, false));
+        }
     }
 }

@@ -102,6 +102,13 @@ pub struct ServeConfig {
     /// Retained-slot TTL in worker iterations (0 = leases never age out;
     /// they still yield to admission pressure LRU-first).
     pub retain_ttl_iters: u64,
+    /// Telemetry span-capture sampling: record phase spans every Nth
+    /// worker iteration (1 = every iteration, 0 = telemetry off —
+    /// counters-only hot path, no flight recorder).
+    pub telemetry_sample: u64,
+    /// Flight-recorder ring capacity in span events per worker (>= 1;
+    /// old events are dropped, counted in the dump).
+    pub flight_recorder: usize,
 }
 
 impl Default for ServeConfig {
@@ -126,6 +133,8 @@ impl Default for ServeConfig {
             draft_depth: 1,
             retained_slots: 4,
             retain_ttl_iters: 0,
+            telemetry_sample: 1,
+            flight_recorder: 256,
         }
     }
 }
@@ -148,6 +157,16 @@ impl ServeConfig {
         crate::coordinator::SessionOptions {
             retained_slots: self.retained_slots,
             retain_ttl_iters: self.retain_ttl_iters,
+        }
+    }
+
+    /// Telemetry knobs (sampling + flight-recorder capacity) for
+    /// `start_pool_tele`; no sink — pool workers dump to stderr.
+    pub fn telemetry_config(&self) -> crate::telemetry::TelemetryConfig {
+        crate::telemetry::TelemetryConfig {
+            sample_every: self.telemetry_sample,
+            recorder_capacity: self.flight_recorder,
+            sink: None,
         }
     }
 }
@@ -303,6 +322,12 @@ impl LcdConfig {
             if let Some(v) = s.get("retain_ttl_iters") {
                 cfg.serve.retain_ttl_iters = v.as_f64()? as u64;
             }
+            if let Some(v) = s.get("telemetry_sample") {
+                cfg.serve.telemetry_sample = v.as_f64()? as u64;
+            }
+            if let Some(v) = s.get("flight_recorder") {
+                cfg.serve.flight_recorder = v.as_usize()?;
+            }
         }
         // Fail on bad serving knobs at load time, not at serve time.
         cfg.serve.admission_policy()?;
@@ -338,6 +363,12 @@ impl LcdConfig {
                 cfg.serve.retained_slots,
                 cfg.serve.max_batch
             );
+        }
+        // A zero-capacity ring could not hold the faulted phase's open
+        // span, making every fault dump empty; telemetry off is spelled
+        // `telemetry_sample = 0`, not a degenerate recorder.
+        if cfg.serve.flight_recorder == 0 {
+            bail!("serve.flight_recorder must be >= 1 (use telemetry_sample = 0 to disable)");
         }
         validate_draft_knobs(&cfg.serve)?;
         Ok(cfg)
@@ -409,6 +440,14 @@ impl LcdConfig {
                 self.serve.retained_slots = v;
             }
             "serve.retain_ttl_iters" => self.serve.retain_ttl_iters = value.parse()?,
+            "serve.telemetry_sample" => self.serve.telemetry_sample = value.parse()?,
+            "serve.flight_recorder" => {
+                let v: usize = value.parse()?;
+                if v == 0 {
+                    bail!("serve.flight_recorder must be >= 1 (use telemetry_sample = 0)");
+                }
+                self.serve.flight_recorder = v;
+            }
             "serve.admission" => {
                 // Validate before assigning so a bad override leaves the
                 // config untouched.
@@ -662,6 +701,38 @@ mod tests {
         assert_eq!(cfg.serve.workers, 1);
         cfg.set_override("serve.retain_ttl_iters=16").unwrap();
         assert_eq!(cfg.serve.retain_ttl_iters, 16);
+    }
+
+    #[test]
+    fn telemetry_knobs_parse_validate_and_reach_the_typed_config() {
+        // File path: both knobs parse and reach TelemetryConfig.
+        let doc = Json::parse(
+            r#"{"serve": {"telemetry_sample": 4, "flight_recorder": 64}}"#,
+        )
+        .unwrap();
+        let cfg = LcdConfig::from_json(&doc).unwrap();
+        let tele = cfg.serve.telemetry_config();
+        assert_eq!((tele.sample_every, tele.recorder_capacity), (4, 64));
+        assert!(tele.enabled());
+        // Defaults: trace every iteration, 256-event ring.
+        let d = LcdConfig::default();
+        assert_eq!((d.serve.telemetry_sample, d.serve.flight_recorder), (1, 256));
+        // 0 disables telemetry via sampling, not via the ring size.
+        let off = LcdConfig::from_json(
+            &Json::parse(r#"{"serve": {"telemetry_sample": 0}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(!off.serve.telemetry_config().enabled());
+        let bad = |s: &str| LcdConfig::from_json(&Json::parse(s).unwrap()).is_err();
+        assert!(bad(r#"{"serve": {"flight_recorder": 0}}"#));
+        // Overrides mirror the load-time checks and stay atomic.
+        let mut cfg = LcdConfig::default();
+        cfg.set_override("serve.telemetry_sample=8").unwrap();
+        assert_eq!(cfg.serve.telemetry_sample, 8);
+        cfg.set_override("serve.flight_recorder=32").unwrap();
+        assert_eq!(cfg.serve.flight_recorder, 32);
+        assert!(cfg.set_override("serve.flight_recorder=0").is_err());
+        assert_eq!(cfg.serve.flight_recorder, 32, "failed override leaves config untouched");
     }
 
     #[test]

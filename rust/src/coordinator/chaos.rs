@@ -221,6 +221,9 @@ impl<S: StepEngine> StepEngine for ChaosEngine<S> {
     fn name(&self) -> &str {
         self.inner.name()
     }
+    fn gemm_ns(&self) -> u64 {
+        self.inner.gemm_ns()
+    }
 
     fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         self.plan.check(FaultPoint::Prefill);

@@ -151,6 +151,13 @@ impl HostLutModel {
         self.stack.bytes()
     }
 
+    /// Cumulative nanoseconds this model's GEMM pool spent in LUT
+    /// contractions — the telemetry attribution hook
+    /// ([`LutStack::gemm_ns`]). Monotonic; readers take deltas.
+    pub fn gemm_ns(&self) -> u64 {
+        self.stack.gemm_ns()
+    }
+
     /// Embed token ids into `rows × hidden` activations.
     pub fn embed(&self, tokens: &[i32]) -> Vec<f32> {
         let hidden = self.spec.hidden;
@@ -236,6 +243,9 @@ impl Engine for HostLutEngine {
     }
     fn name(&self) -> &str {
         &self.name
+    }
+    fn gemm_ns(&self) -> u64 {
+        self.model.gemm_ns()
     }
 
     fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {

@@ -79,6 +79,13 @@ pub trait StepEngine {
     /// Human-readable engine name for reports.
     fn name(&self) -> &str;
 
+    /// Cumulative nanoseconds this engine's GEMM pool has spent in LUT
+    /// contractions (monotonic — the telemetry loop reads per-iteration
+    /// deltas). Engines without timing hooks report 0.
+    fn gemm_ns(&self) -> u64 {
+        0
+    }
+
     /// Absorb a (window-clipped) prompt into `slot`, replacing any state
     /// the slot held. Returns the logits row at the last prompt position
     /// — the row that predicts the first generated token.
@@ -251,6 +258,9 @@ impl<S: StepEngine + ?Sized> StepEngine for Box<S> {
     fn name(&self) -> &str {
         (**self).name()
     }
+    fn gemm_ns(&self) -> u64 {
+        (**self).gemm_ns()
+    }
     fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         (**self).prefill(slot, tokens)
     }
@@ -409,6 +419,9 @@ impl StepEngine for CachedLutEngine {
     }
     fn name(&self) -> &str {
         &self.name
+    }
+    fn gemm_ns(&self) -> u64 {
+        self.model.gemm_ns()
     }
 
     fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
@@ -649,6 +662,9 @@ impl Engine for CachedLutEngine {
     fn name(&self) -> &str {
         &self.name
     }
+    fn gemm_ns(&self) -> u64 {
+        self.model.gemm_ns()
+    }
     fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         let spec = self.model.spec();
         let rows = spec.batch * spec.seq;
@@ -732,6 +748,9 @@ impl<E: Engine> StepEngine for FullRecomputeStep<E> {
     }
     fn name(&self) -> &str {
         self.engine.name()
+    }
+    fn gemm_ns(&self) -> u64 {
+        self.engine.gemm_ns()
     }
 
     fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {

@@ -130,6 +130,39 @@
 //! reference on arbitrary shapes, `PackedIndices` round-trips, the
 //! `SlotCache` matches a naive model, and config parsing never panics
 //! on hostile input.
+//!
+//! # Telemetry
+//!
+//! Observability lives in [`crate::telemetry`] and is wired through the
+//! pool at three levels, all bounded-memory and merge-order-independent:
+//!
+//! * **Phase histograms** — every sampled iteration records per-phase
+//!   wall time (resume / prefill / decode / speculate), whole-iteration
+//!   time, the engine's LUT-GEMM time delta
+//!   ([`StepEngine::gemm_ns`], monotonic, attributed per iteration),
+//!   and inter-token latency into
+//!   [`crate::telemetry::PhaseStats`] — log2-bucket
+//!   [`crate::telemetry::Histogram`]s (the same bounded structure
+//!   behind [`TtftDigest`]), so per-worker stats merge into aggregate
+//!   stats byte-identically under any merge order.
+//! * **Span tracing** — a per-worker
+//!   [`crate::telemetry::FlightRecorder`] keeps a bounded ring of
+//!   [`crate::telemetry::SpanEvent`]s: phase spans plus request
+//!   lifecycle marks (admit → first token → complete, by request id).
+//!   Capture is gated by `serve.telemetry_sample` (sample every Nth
+//!   iteration; 0 disables) so unsampled iterations run a counters-only
+//!   hot path with zero clock reads — the `telemetry_overhead`
+//!   PERF_GATE in `benches/serving.rs` enforces that tracing stays
+//!   cheap.
+//! * **Flight dumps** — when a worker dies (panic or engine error), its
+//!   recorder is dumped post-mortem: the faulted phase remains as an
+//!   *open* span, so the dump reconstructs the failing iteration's
+//!   timeline. Dumps go to stderr and, when a
+//!   [`crate::telemetry::FlightSink`] is configured, to the test
+//!   harness; [`crate::telemetry::FlightDump::chrome_trace`] exports
+//!   `chrome://tracing` JSON. `lcd serve --telemetry-dump PATH` and
+//!   `serve_bench --telemetry-json PATH` write the exposition formats
+//!   (Prometheus text / JSON snapshot).
 
 pub mod batcher;
 #[cfg(any(test, feature = "chaos"))]
@@ -152,8 +185,9 @@ pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot, TtftDigest}
 pub use router::Router;
 pub use scheduler::{ChunkJob, IterationPlan, Scheduler, SchedulerConfig};
 pub use server::{
-    serve_blocking, serve_blocking_sched, serve_blocking_step, start, start_pool,
-    start_pool_sched, start_pool_session, start_pool_step, Engine, ServerHandle, ServerReport,
+    serve_blocking, serve_blocking_sched, serve_blocking_step, serve_blocking_tele, start,
+    start_pool, start_pool_sched, start_pool_session, start_pool_step, start_pool_tele, Engine,
+    ServerHandle, ServerReport,
 };
 pub use session::{
     Lease, LeaseTable, ResumeTurn, SessionId, SessionMeta, SessionOptions, SessionStore,

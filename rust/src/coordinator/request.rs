@@ -1,6 +1,8 @@
 //! Request/response types and serving metrics.
 
 use super::session::SessionMeta;
+use crate::telemetry::{Histogram, PhaseStats};
+use crate::util::json::Json;
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
@@ -35,57 +37,53 @@ pub struct GenResponse {
     pub latency: Duration,
 }
 
-/// THE nearest-rank percentile rule, shared by every latency/TTFT
-/// digest in the metrics (`sorted` must be ascending; `p` in [0, 1];
-/// empty input reports 0).
-fn nearest_rank(sorted: &[u64], p: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    sorted[((sorted.len() - 1) as f64 * p.clamp(0.0, 1.0)) as usize]
-}
-
-/// Exact TTFT percentile digest. Samples are stored raw and sorted at
-/// query time, so merging per-worker digests is plain concatenation —
-/// **order-independent by construction**: any merge order of any
-/// partition of the samples yields byte-identical percentiles to one
-/// global digest over the union (the property
-/// `prop_ttft_digest_merge_is_order_independent` pins down).
+/// Bounded TTFT percentile digest backed by [`Histogram`]: O(buckets)
+/// memory at any sample count (it used to keep every raw sample in an
+/// unbounded `Vec`), merge = bucket-count addition — **order-independent
+/// by construction**: any merge order of any partition of the samples
+/// yields a byte-identical digest and therefore identical percentiles
+/// to one global digest over the union (the property
+/// `prop_ttft_digest_merge_is_order_independent` pins down). Reported
+/// percentiles are within one histogram bucket of exact (6.25% relative
+/// bound; values below 32 µs are exact).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct TtftDigest {
-    samples_us: Vec<u64>,
+    hist: Histogram,
 }
 
 impl TtftDigest {
     pub fn record(&mut self, us: u64) {
-        self.samples_us.push(us);
+        self.hist.record(us);
     }
 
     /// Fold another worker's digest into this one.
     pub fn merge(&mut self, other: &TtftDigest) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        self.hist.merge(&other.hist);
     }
 
     pub fn len(&self) -> usize {
-        self.samples_us.len()
+        self.hist.len() as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_us.is_empty()
+        self.hist.is_empty()
     }
 
     /// Nearest-rank percentile in microseconds (`p` in [0, 1]); 0 when
     /// the digest is empty. Same rank rule as the latency percentiles.
     pub fn percentile(&self, p: f64) -> u64 {
-        self.percentiles([p])[0]
+        self.hist.percentile(p)
     }
 
-    /// Several percentiles over ONE sort of the samples (the snapshot
-    /// path asks for p50/p95/p99 together).
+    /// Batch percentile lookup (the snapshot path asks for p50/p95/p99
+    /// together).
     pub fn percentiles<const N: usize>(&self, ps: [f64; N]) -> [u64; N] {
-        let mut s = self.samples_us.clone();
-        s.sort_unstable();
-        ps.map(|p| nearest_rank(&s, p))
+        self.hist.percentiles(ps)
+    }
+
+    /// The underlying histogram (exposition).
+    pub fn histogram(&self) -> &Histogram {
+        &self.hist
     }
 }
 
@@ -126,11 +124,15 @@ pub struct Metrics {
     /// Prompt chunks fed through chunked-prefill phases (equals the
     /// number of prefilled prompts when chunking is off/disabled).
     pub prefill_chunks: u64,
-    /// TTFT samples of completed *session turns* only, kept as an exact
+    /// TTFT samples of completed *session turns* only, kept as a bounded
     /// digest so per-worker percentiles merge order-independently.
     pub session_ttfts: TtftDigest,
-    latencies_us: Vec<u64>,
-    ttfts_us: Vec<u64>,
+    /// Per-phase duration histograms recorded by the span-tracing layer
+    /// (empty when span capture is off — the counters above are the
+    /// whole hot path).
+    pub phases: PhaseStats,
+    latency_us: Histogram,
+    ttft_us: Histogram,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -165,6 +167,8 @@ pub struct MetricsSnapshot {
     pub session_ttft_samples: u64,
     pub tokens_per_sec: f64,
     pub wall: Duration,
+    /// Per-phase duration histograms (empty when span capture was off).
+    pub phases: PhaseStats,
 }
 
 impl Metrics {
@@ -180,9 +184,9 @@ impl Metrics {
     pub fn record_completion(&mut self, resp: &GenResponse, session: bool) {
         self.completed += 1;
         self.generated_tokens += resp.tokens.len() as u64;
-        self.latencies_us.push(resp.latency.as_micros() as u64);
+        self.latency_us.record(resp.latency.as_micros() as u64);
         let ttft_us = resp.ttft.as_micros() as u64;
-        self.ttfts_us.push(ttft_us);
+        self.ttft_us.record(ttft_us);
         if session {
             self.session_ttfts.record(ttft_us);
         }
@@ -190,8 +194,9 @@ impl Metrics {
     }
 
     /// Fold another worker's metrics into this one (aggregate reporting
-    /// for the multi-worker coordinator): counters add, latency samples
-    /// concatenate, and the wall-clock window is the union of both.
+    /// for the multi-worker coordinator): counters add, latency
+    /// histograms add bucket-wise, and the wall-clock window is the
+    /// union of both.
     pub fn merge(&mut self, other: &Metrics) {
         self.completed += other.completed;
         self.rejected += other.rejected;
@@ -208,8 +213,9 @@ impl Metrics {
         self.resumed_tokens += other.resumed_tokens;
         self.prefill_chunks += other.prefill_chunks;
         self.session_ttfts.merge(&other.session_ttfts);
-        self.latencies_us.extend_from_slice(&other.latencies_us);
-        self.ttfts_us.extend_from_slice(&other.ttfts_us);
+        self.phases.merge(&other.phases);
+        self.latency_us.merge(&other.latency_us);
+        self.ttft_us.merge(&other.ttft_us);
         self.started = match (self.started, other.started) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -221,15 +227,10 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        // One sort per sample set; every percentile reads the shared
-        // nearest-rank rule.
-        let sorted = |v: &[u64]| {
-            let mut s = v.to_vec();
-            s.sort_unstable();
-            s
-        };
-        let lat = sorted(&self.latencies_us);
-        let ttft = sorted(&self.ttfts_us);
+        // Every percentile reads the histogram's nearest-rank rule
+        // (within one bucket of exact, see `telemetry::Histogram`).
+        let [p50_lat, p99_lat] = self.latency_us.percentiles([0.5, 0.99]);
+        let [p50_ttft, p95_ttft, p99_ttft] = self.ttft_us.percentiles([0.5, 0.95, 0.99]);
         let [p50_sess, p95_sess, p99_sess] = self.session_ttfts.percentiles([0.5, 0.95, 0.99]);
         let wall = match (self.started, self.finished) {
             (Some(a), Some(b)) if b > a => b - a,
@@ -255,17 +256,18 @@ impl Metrics {
             routed_misses: self.routed_misses,
             resumed_tokens: self.resumed_tokens,
             prefill_chunks: self.prefill_chunks,
-            p50_latency_us: nearest_rank(&lat, 0.5),
-            p99_latency_us: nearest_rank(&lat, 0.99),
-            p50_ttft_us: nearest_rank(&ttft, 0.5),
-            p95_ttft_us: nearest_rank(&ttft, 0.95),
-            p99_ttft_us: nearest_rank(&ttft, 0.99),
+            p50_latency_us: p50_lat,
+            p99_latency_us: p99_lat,
+            p50_ttft_us: p50_ttft,
+            p95_ttft_us: p95_ttft,
+            p99_ttft_us: p99_ttft,
             p50_session_ttft_us: p50_sess,
             p95_session_ttft_us: p95_sess,
             p99_session_ttft_us: p99_sess,
             session_ttft_samples: self.session_ttfts.len() as u64,
             tokens_per_sec,
             wall,
+            phases: self.phases.clone(),
         }
     }
 }
@@ -288,6 +290,84 @@ impl MetricsSnapshot {
         } else {
             Some(self.cache_hits as f64 / total as f64)
         }
+    }
+
+    /// Counter-valued fields — the shared source for both exposition
+    /// formats.
+    fn counter_fields(&self) -> [(&'static str, u64); 15] {
+        [
+            ("completed", self.completed),
+            ("rejected", self.rejected),
+            ("generated_tokens", self.generated_tokens),
+            ("decode_steps", self.decode_steps),
+            ("prefill_tokens", self.prefill_tokens),
+            ("decode_tokens", self.decode_tokens),
+            ("drafted_tokens", self.drafted_tokens),
+            ("accepted_tokens", self.accepted_tokens),
+            ("cache_hits", self.cache_hits),
+            ("cache_misses", self.cache_misses),
+            ("cache_evictions", self.cache_evictions),
+            ("routed_misses", self.routed_misses),
+            ("resumed_tokens", self.resumed_tokens),
+            ("prefill_chunks", self.prefill_chunks),
+            ("session_ttft_samples", self.session_ttft_samples),
+        ]
+    }
+
+    /// Percentile gauges in microseconds.
+    fn percentile_fields(&self) -> [(&'static str, u64); 8] {
+        [
+            ("p50_latency_us", self.p50_latency_us),
+            ("p99_latency_us", self.p99_latency_us),
+            ("p50_ttft_us", self.p50_ttft_us),
+            ("p95_ttft_us", self.p95_ttft_us),
+            ("p99_ttft_us", self.p99_ttft_us),
+            ("p50_session_ttft_us", self.p50_session_ttft_us),
+            ("p95_session_ttft_us", self.p95_session_ttft_us),
+            ("p99_session_ttft_us", self.p99_session_ttft_us),
+        ]
+    }
+
+    /// Prometheus text-format exposition: every counter as `lcd_<name>`,
+    /// percentiles and throughput as gauges, and the per-phase duration
+    /// histograms as native Prometheus histograms (`lcd_phase_<name>`).
+    /// Written by `lcd serve --telemetry-dump PATH`.
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for (name, v) in self.counter_fields() {
+            let _ = writeln!(out, "# TYPE lcd_{name} counter");
+            let _ = writeln!(out, "lcd_{name} {v}");
+        }
+        for (name, v) in self.percentile_fields() {
+            let _ = writeln!(out, "# TYPE lcd_{name} gauge");
+            let _ = writeln!(out, "lcd_{name} {v}");
+        }
+        let _ = writeln!(out, "# TYPE lcd_tokens_per_sec gauge");
+        let _ = writeln!(out, "lcd_tokens_per_sec {}", self.tokens_per_sec);
+        let _ = writeln!(out, "# TYPE lcd_wall_seconds gauge");
+        let _ = writeln!(out, "lcd_wall_seconds {}", self.wall.as_secs_f64());
+        for (name, hist) in self.phases.named() {
+            if !hist.is_empty() {
+                hist.prometheus_into(&format!("lcd_phase_{name}"), &mut out);
+            }
+        }
+        out
+    }
+
+    /// JSON exposition of the same data (counters, gauges, and the raw
+    /// phase histograms). Written by `serve_bench --telemetry-json PATH`.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(String, Json)> = self
+            .counter_fields()
+            .iter()
+            .chain(self.percentile_fields().iter())
+            .map(|&(name, v)| (name.to_string(), Json::Num(v as f64)))
+            .collect();
+        fields.push(("tokens_per_sec".into(), Json::Num(self.tokens_per_sec)));
+        fields.push(("wall_seconds".into(), Json::Num(self.wall.as_secs_f64())));
+        fields.push(("phases".into(), self.phases.to_json()));
+        Json::Obj(fields)
     }
 
     pub fn report(&self) -> String {
@@ -363,8 +443,13 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.completed, 100);
         assert_eq!(s.generated_tokens, 400);
-        assert_eq!(s.p50_latency_us, 5000);
-        assert!(s.p99_latency_us >= 9900);
+        // Histogram percentiles report the lower bound of the bucket
+        // holding the exact nearest-rank sample (5000 µs and 9900 µs
+        // here) — within one bucket of exact, never above it.
+        let bucket_low = |v: u64| Histogram::bucket_low(Histogram::bucket_index(v));
+        assert_eq!(s.p50_latency_us, bucket_low(5000));
+        assert!(s.p50_latency_us <= 5000 && s.p50_latency_us >= 5000 - 5000 / 16);
+        assert_eq!(s.p99_latency_us, bucket_low(9900));
         assert!(s.tokens_per_sec > 0.0);
         // TTFT tail percentiles bracket the median.
         assert!(s.p95_ttft_us >= s.p50_ttft_us);
@@ -374,6 +459,44 @@ mod tests {
         assert!(s.p50_session_ttft_us > 0);
         assert!(s.p99_session_ttft_us <= 1000);
         assert!(s.report().contains("sess-ttft p50/p95/p99"));
+    }
+
+    #[test]
+    fn snapshot_exposition_round_trips() {
+        let mut m = Metrics::default();
+        m.record_start();
+        m.prefill_tokens = 12;
+        m.phases.decode_us.record(250);
+        m.phases.decode_us.record(300);
+        m.record_completion(
+            &GenResponse {
+                id: 1,
+                tokens: vec![0; 4],
+                ttft: Duration::from_micros(700),
+                latency: Duration::from_micros(1500),
+            },
+            true,
+        );
+        let s = m.snapshot();
+        let text = s.prometheus_text();
+        assert!(text.contains("# TYPE lcd_completed counter"));
+        assert!(text.contains("lcd_completed 1"));
+        assert!(text.contains("lcd_prefill_tokens 12"));
+        assert!(text.contains("# TYPE lcd_p50_ttft_us gauge"));
+        assert!(text.contains("# TYPE lcd_phase_decode_us histogram"));
+        assert!(text.contains("lcd_phase_decode_us_count 2"));
+        // The JSON form parses back and agrees on the counters and the
+        // phase histograms.
+        let parsed = Json::parse(&s.to_json().to_string_pretty()).unwrap();
+        assert_eq!(parsed.req("completed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(parsed.req("prefill_tokens").unwrap().as_usize().unwrap(), 12);
+        let phases = PhaseStats::from_json(parsed.req("phases").unwrap()).unwrap();
+        assert_eq!(phases, s.phases);
+        // Empty snapshots expose without panicking and skip phase
+        // histograms entirely.
+        let quiet = Metrics::default().snapshot();
+        assert!(!quiet.prometheus_text().contains("lcd_phase_"));
+        assert!(Json::parse(&quiet.to_json().to_string()).is_ok());
     }
 
     #[test]

@@ -70,6 +70,7 @@ use super::request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
 use super::router::Router;
 use super::scheduler::{IterationPlan, Scheduler, SchedulerConfig};
 use super::session::{Lease, LeaseTable, SessionId, SessionOptions, TurnRequest};
+use crate::telemetry::{FlightDump, FlightRecorder, Phase, TelemetryConfig};
 use crate::util::argmax;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -88,6 +89,11 @@ pub trait Engine {
     fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
     /// Human-readable engine name for reports.
     fn name(&self) -> &str;
+    /// Cumulative nanoseconds spent in LUT GEMM (monotonic; telemetry
+    /// reads deltas). Engines without timing hooks report 0.
+    fn gemm_ns(&self) -> u64 {
+        0
+    }
 }
 
 impl<E: Engine + ?Sized> Engine for Box<E> {
@@ -105,6 +111,9 @@ impl<E: Engine + ?Sized> Engine for Box<E> {
     }
     fn name(&self) -> &str {
         (**self).name()
+    }
+    fn gemm_ns(&self) -> u64 {
+        (**self).gemm_ns()
     }
 }
 
@@ -374,19 +383,40 @@ where
     start_pool_sched(workers, max_batch, queue_cap, SchedulerConfig::unchunked(policy), opts, build)
 }
 
-/// General form: start `workers` worker threads sharing one bounded
-/// request queue (plus one routed queue per worker for resumed session
-/// turns), serving [`StepEngine`]s under the scheduler configuration
-/// `sched` (admission policy + chunked-prefill bound) with session
-/// retention per `opts`. The builder is invoked once per worker, inside
-/// that worker's thread, with the worker index — each call must produce
-/// an independent engine.
+/// [`start_pool_tele`] with default telemetry (span capture every
+/// iteration, 256-event flight recorder, dumps to stderr only).
 pub fn start_pool_sched<F, S>(
     workers: usize,
     max_batch: usize,
     queue_cap: usize,
     sched: SchedulerConfig,
     opts: SessionOptions,
+    build: F,
+) -> ServerHandle
+where
+    F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    S: StepEngine,
+{
+    start_pool_tele(workers, max_batch, queue_cap, sched, opts, TelemetryConfig::default(), build)
+}
+
+/// General form: start `workers` worker threads sharing one bounded
+/// request queue (plus one routed queue per worker for resumed session
+/// turns), serving [`StepEngine`]s under the scheduler configuration
+/// `sched` (admission policy + chunked-prefill bound) with session
+/// retention per `opts` and telemetry per `tele` (phase span capture on
+/// sampled iterations, per-worker flight recorder, fault dumps into
+/// `tele.sink`). The builder is invoked once per worker, inside that
+/// worker's thread, with the worker index — each call must produce an
+/// independent engine.
+#[allow(clippy::too_many_arguments)]
+pub fn start_pool_tele<F, S>(
+    workers: usize,
+    max_batch: usize,
+    queue_cap: usize,
+    sched: SchedulerConfig,
+    opts: SessionOptions,
+    tele: TelemetryConfig,
     build: F,
 ) -> ServerHandle
 where
@@ -414,10 +444,11 @@ where
     for w in 0..workers {
         let shared2 = Arc::clone(&shared);
         let build2 = Arc::clone(&build);
+        let tele2 = tele.clone();
         let tx2 = res_tx.clone();
         let join = std::thread::Builder::new()
             .name(format!("lcd-serve-{w}"))
-            .spawn(move || pool_worker(w, shared2, max_batch, sched, opts, build2, tx2))
+            .spawn(move || pool_worker(w, shared2, max_batch, sched, opts, tele2, build2, tx2))
             .expect("spawning serve worker");
         joins.push(join);
     }
@@ -425,12 +456,14 @@ where
     ServerHandle { shared, next_id: AtomicU64::new(1), joins, results: res_rx }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn pool_worker<F, S>(
     worker: usize,
     shared: Arc<Shared>,
     max_batch: usize,
     sched: SchedulerConfig,
     opts: SessionOptions,
+    tele: TelemetryConfig,
     build: Arc<F>,
     results: Sender<(usize, Metrics)>,
 ) where
@@ -438,17 +471,30 @@ fn pool_worker<F, S>(
     S: StepEngine,
 {
     let mut metrics = Metrics::default();
+    // Declared OUTSIDE catch_unwind (same survival pattern as `metrics`):
+    // a panic mid-phase leaves the faulted span open in the recorder, so
+    // the post-mortem dump below reconstructs the faulted timeline.
+    let mut recorder = tele.enabled().then(|| FlightRecorder::new(&tele));
     // Catch panics (engine build or decode) so the exit bookkeeping below
     // always runs — otherwise queued requests would keep their reply
     // senders alive forever and clients would hang in recv().
     let outcome = catch_unwind(AssertUnwindSafe(|| match (build.as_ref())(worker) {
-        Ok(mut engine) => {
-            run_worker(&mut engine, &shared, max_batch, sched, opts, worker, &mut metrics)
-        }
+        Ok(mut engine) => run_worker(
+            &mut engine,
+            &shared,
+            max_batch,
+            sched,
+            opts,
+            worker,
+            &mut metrics,
+            &mut recorder,
+            &tele,
+        ),
         Err(err) => eprintln!("engine build failed on worker {worker}: {err:#}"),
     }));
     if outcome.is_err() {
         eprintln!("serve worker {worker} panicked; draining its queue share");
+        fault_dump(worker, recorder.as_ref(), &tele);
     }
     // This worker's leases die with its engine: drop its placements so
     // later resumes fall back to cold prefill instead of routing here.
@@ -470,6 +516,20 @@ fn pool_worker<F, S>(
         }
     }
     let _ = results.send((worker, metrics));
+}
+
+/// Post-mortem for a faulted worker: summarize the flight recorder to
+/// stderr and push the full dump into the configured sink (chaos tests
+/// and embedders correlate it with the `AuditReport`).
+fn fault_dump(worker: usize, recorder: Option<&FlightRecorder>, tele: &TelemetryConfig) {
+    let Some(rec) = recorder else { return };
+    let dump = rec.dump(worker);
+    eprint!("{}", dump.summary());
+    if let Some(sink) = &tele.sink {
+        // Poison-tolerant: a panicking peer mid-push is exactly the case
+        // dumps exist for.
+        sink.lock().unwrap_or_else(|e| e.into_inner()).push(dump);
+    }
 }
 
 /// Per-worker session machinery: the lease table plus what eviction and
@@ -620,6 +680,7 @@ fn drain_routed(
 /// the local batcher (reattaching lease hits to their retained slots),
 /// run resume + prefill + decode phases, complete sessions — retaining
 /// resumable ones under the lease budget.
+#[allow(clippy::too_many_arguments)]
 fn run_worker<S: StepEngine>(
     engine: &mut S,
     shared: &Arc<Shared>,
@@ -628,6 +689,8 @@ fn run_worker<S: StepEngine>(
     opts: SessionOptions,
     worker: usize,
     metrics: &mut Metrics,
+    recorder: &mut Option<FlightRecorder>,
+    tele: &TelemetryConfig,
 ) {
     if engine.seq() < 2 {
         eprintln!("engine '{}' has seq {} < 2; refusing to serve", engine.name(), engine.seq());
@@ -752,6 +815,12 @@ fn run_worker<S: StepEngine>(
         let step = catch_unwind(AssertUnwindSafe(|| {
             let mut sessions =
                 WorkerSessions { leases: &mut leases, router: &shared.router, worker, iteration };
+            // Span capture only on sampled iterations: unsampled ones run
+            // the counters-only hot path (no clock reads).
+            let mut span = recorder.as_mut().filter(|r| r.sampled(iteration));
+            if let Some(r) = span.as_deref_mut() {
+                r.begin_iteration(iteration);
+            }
             serve_iteration(
                 engine,
                 &mut batcher,
@@ -759,6 +828,7 @@ fn run_worker<S: StepEngine>(
                 &resumes,
                 &scheduler,
                 Some(&mut sessions),
+                span,
             )
         }));
         let outcome = match step {
@@ -774,6 +844,9 @@ fn run_worker<S: StepEngine>(
             }
             Err(msg) => {
                 eprintln!("{msg}");
+                // Engine errors end the worker just like panics do, so
+                // they get the same post-mortem flight dump.
+                fault_dump(worker, recorder.as_ref(), tele);
                 // In-flight sessions drop here; their receivers disconnect.
                 // Count them so the report accounts for every submission.
                 metrics.rejected += (batcher.active() + batcher.pending()) as u64;
@@ -792,6 +865,11 @@ type IterationResponses = Vec<(Sender<GenResponse>, GenResponse)>;
 /// admission + one chunked-prefill wave (the resume rows charge the
 /// admission budget), then one decode step for every prefill-complete
 /// session, collecting finished responses after each phase.
+///
+/// With `tele` set (a sampled iteration) every phase runs inside a
+/// [`Phase`] span — an engine error or panic mid-phase leaves that span
+/// open for the fault dump — and the iteration records its wall time
+/// plus the engine's GEMM-time delta into the phase histograms.
 fn serve_iteration<S: StepEngine>(
     engine: &mut S,
     batcher: &mut Batcher,
@@ -799,14 +877,56 @@ fn serve_iteration<S: StepEngine>(
     resumes: &[(usize, Vec<i32>)],
     scheduler: &Scheduler,
     mut sessions: Option<&mut WorkerSessions<'_>>,
+    mut tele: Option<&mut FlightRecorder>,
 ) -> Result<IterationResponses> {
     let mut responses = Vec::new();
-    let resume_cost = resume_phase(engine, batcher, metrics, resumes)?;
+    let t0 = tele.as_ref().map(|_| (Instant::now(), engine.gemm_ns()));
+    if let Some(t) = tele.as_deref_mut() {
+        t.begin(Phase::Resume, resumes.len() as u64);
+    }
+    let resume_cost = resume_phase(engine, batcher, metrics, resumes, tele.as_deref_mut())?;
+    if let Some(t) = tele.as_deref_mut() {
+        t.end(&mut metrics.phases);
+    }
     let plan = scheduler.plan(batcher, engine.seq(), resume_cost);
-    chunked_prefill_phase(engine, batcher, metrics, &plan)?;
-    collect_done(engine, batcher, metrics, &mut responses, sessions.as_deref_mut());
+    if let Some(t) = tele.as_deref_mut() {
+        for &slot in &plan.admitted {
+            if let Some(sess) = batcher.session_mut(slot) {
+                t.mark(Phase::Admit, sess.request.id);
+            }
+        }
+        t.begin(Phase::Prefill, plan.prefill.len() as u64);
+    }
+    chunked_prefill_phase(engine, batcher, metrics, &plan, tele.as_deref_mut())?;
+    if let Some(t) = tele.as_deref_mut() {
+        t.end(&mut metrics.phases);
+    }
+    collect_done(
+        engine,
+        batcher,
+        metrics,
+        &mut responses,
+        sessions.as_deref_mut(),
+        tele.as_deref_mut(),
+    );
+    if let Some(t) = tele.as_deref_mut() {
+        let phase = if engine.speculation() > 0 { Phase::Speculate } else { Phase::Decode };
+        let jobs =
+            batcher.sessions_mut().filter(|(_, s)| !s.done() && s.prefill_complete()).count();
+        t.begin(phase, jobs as u64);
+    }
     decode_phase(engine, batcher, metrics)?;
-    collect_done(engine, batcher, metrics, &mut responses, sessions);
+    if let Some(t) = tele.as_deref_mut() {
+        t.end(&mut metrics.phases);
+    }
+    collect_done(engine, batcher, metrics, &mut responses, sessions, tele);
+    if let Some((start, gemm0)) = t0 {
+        metrics.phases.iteration_us.record(start.elapsed().as_micros() as u64);
+        let gemm = engine.gemm_ns().saturating_sub(gemm0);
+        if gemm > 0 {
+            metrics.phases.gemm_us.record(gemm / 1_000);
+        }
+    }
     Ok(responses)
 }
 
@@ -823,6 +943,7 @@ fn resume_phase<S: StepEngine>(
     batcher: &mut Batcher,
     metrics: &mut Metrics,
     resumes: &[(usize, Vec<i32>)],
+    mut tele: Option<&mut FlightRecorder>,
 ) -> Result<usize> {
     if resumes.is_empty() {
         return Ok(0);
@@ -845,7 +966,11 @@ fn resume_phase<S: StepEngine>(
         metrics.resumed_tokens += feed.len() as u64;
         cost += feed.len();
         let next = argmax(&row) as i32;
-        batcher.session_mut(*slot).expect("resumed slot holds a session").push_token(next, seq);
+        let sess = batcher.session_mut(*slot).expect("resumed slot holds a session");
+        sess.push_token(next, seq);
+        if let Some(t) = tele.as_deref_mut() {
+            t.mark(Phase::FirstToken, sess.request.id);
+        }
     }
     Ok(cost)
 }
@@ -862,6 +987,7 @@ fn chunked_prefill_phase<S: StepEngine>(
     batcher: &mut Batcher,
     metrics: &mut Metrics,
     plan: &IterationPlan,
+    mut tele: Option<&mut FlightRecorder>,
 ) -> Result<()> {
     if plan.prefill.is_empty() {
         return Ok(());
@@ -890,6 +1016,9 @@ fn chunked_prefill_phase<S: StepEngine>(
                 debug_assert!(job.last, "only final chunks emit a row");
                 let next = argmax(&row) as i32;
                 sess.push_token(next, seq);
+                if let Some(t) = tele.as_deref_mut() {
+                    t.mark(Phase::FirstToken, sess.request.id);
+                }
             }
             None => debug_assert!(!job.last, "final chunks must emit a row"),
         }
@@ -999,6 +1128,7 @@ fn collect_done<S: StepEngine>(
     metrics: &mut Metrics,
     responses: &mut IterationResponses,
     mut sessions: Option<&mut WorkerSessions<'_>>,
+    mut tele: Option<&mut FlightRecorder>,
 ) {
     for (slot, sess) in batcher.take_done_slots() {
         // Zero-gen turns never touch the engine (resume and prefill both
@@ -1014,6 +1144,9 @@ fn collect_done<S: StepEngine>(
         };
         if !retained {
             engine.free_slot(slot);
+        }
+        if let Some(t) = tele.as_deref_mut() {
+            t.mark(Phase::Complete, sess.request.id);
         }
         let reply = sess.request.reply.clone();
         let is_session = sess.request.session.is_some();
@@ -1047,13 +1180,32 @@ pub fn serve_blocking_step<S: StepEngine>(
 
 /// [`serve_blocking_step`] with the full scheduler configuration —
 /// admission policy plus the chunked-prefill bound — the harness path
-/// the chunk-size equivalence sweeps run on.
+/// the chunk-size equivalence sweeps run on. Telemetry is off: this is
+/// the untraced baseline the telemetry-overhead PERF_GATE compares
+/// against.
 pub fn serve_blocking_sched<S: StepEngine>(
-    mut engine: S,
+    engine: S,
     requests: Vec<(Vec<i32>, usize)>,
     max_batch: usize,
     sched: SchedulerConfig,
 ) -> Result<(Vec<GenResponse>, MetricsSnapshot)> {
+    let (responses, snapshot, _) =
+        serve_blocking_tele(engine, requests, max_batch, sched, TelemetryConfig::off())?;
+    Ok((responses, snapshot))
+}
+
+/// [`serve_blocking_sched`] with explicit telemetry: sampled iterations
+/// run under a [`FlightRecorder`] feeding the snapshot's phase
+/// histograms, and the recorder's final state comes back as a
+/// [`FlightDump`] (`None` when telemetry is off). Single-threaded, so
+/// the dump reports worker 0.
+pub fn serve_blocking_tele<S: StepEngine>(
+    mut engine: S,
+    requests: Vec<(Vec<i32>, usize)>,
+    max_batch: usize,
+    sched: SchedulerConfig,
+    tele: TelemetryConfig,
+) -> Result<(Vec<GenResponse>, MetricsSnapshot, Option<FlightDump>)> {
     anyhow::ensure!(engine.seq() >= 2, "engine seq must be >= 2 (got {})", engine.seq());
     let scheduler = Scheduler::new(sched);
     let mut batcher = Batcher::with_policy(
@@ -1076,17 +1228,25 @@ pub fn serve_blocking_sched<S: StepEngine>(
         assert!(batcher.submit(req));
     }
     drop(tx);
+    let mut recorder = tele.enabled().then(|| FlightRecorder::new(&tele));
+    let mut iteration: u64 = 0;
     let mut responses = Vec::new();
     while !batcher.is_idle() {
+        iteration += 1;
+        let mut span = recorder.as_mut().filter(|r| r.sampled(iteration));
+        if let Some(r) = span.as_deref_mut() {
+            r.begin_iteration(iteration);
+        }
         for (_reply, resp) in
-            serve_iteration(&mut engine, &mut batcher, &mut metrics, &[], &scheduler, None)?
+            serve_iteration(&mut engine, &mut batcher, &mut metrics, &[], &scheduler, None, span)?
         {
             responses.push(resp);
         }
     }
     // Drain the channel copies.
     while rx.try_recv().is_ok() {}
-    Ok((responses, metrics.snapshot()))
+    let dump = recorder.map(|r| r.dump(0));
+    Ok((responses, metrics.snapshot(), dump))
 }
 
 #[cfg(test)]

@@ -123,6 +123,9 @@ impl<T: StepEngine, D: StepEngine> StepEngine for SpeculativeEngine<T, D> {
     fn name(&self) -> &str {
         &self.name
     }
+    fn gemm_ns(&self) -> u64 {
+        self.target.gemm_ns() + self.draft.gemm_ns()
+    }
 
     fn prefill(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         let jobs = [(slot, tokens.to_vec())];

@@ -14,7 +14,11 @@
 //!   the stack) on arbitrary input;
 //! * [`slot_cache_differential`] — [`SlotCache`] ring arithmetic matches
 //!   a naive `Vec`-of-rows model across arbitrary
-//!   push/extend/truncate/clear/lease schedules.
+//!   push/extend/truncate/clear/lease schedules;
+//! * [`histogram_differential`] — the telemetry [`Histogram`] merges
+//!   order-independently (byte-identical snapshots), its count/sum and
+//!   nearest-rank percentiles match a naive sorted model, and its JSON
+//!   snapshot round-trips — without panicking on extreme values.
 //!
 //! The drivers are deliberately toolchain-agnostic: `rust/fuzz/` wraps
 //! them in nightly-only `cargo fuzz` targets for open-ended exploration,
@@ -32,6 +36,7 @@ use crate::lut::{
     lut_gemm_bucket, lut_gemm_fp_ref, lut_gemm_table, lut_gemm_table_sym, LutLayer, PackedIndices,
     ParallelLut, ProductTable, SimdLutLayer, SimdScratch, SlotCache,
 };
+use crate::telemetry::Histogram;
 use crate::util::json::Json;
 use crate::util::{mse, Rng};
 
@@ -178,6 +183,73 @@ pub fn config_never_panics(data: &[u8]) {
     }
 }
 
+/// Drive a [`Histogram`] and a naive sorted-`Vec` model through the same
+/// fuzz-derived value stream (extreme values — 0, `u64::MAX` and raw
+/// 64-bit picks — are force-mixed in): the stream recorded shard-wise
+/// and merged in a fuzz-chosen order must equal recording it directly
+/// (structurally AND as serialized JSON text), the exact `count`/`sum`
+/// must match the model, every nearest-rank percentile must land on the
+/// bucket holding the model's nearest-rank element, and the JSON
+/// snapshot must round-trip exactly. Nothing may panic.
+pub fn histogram_differential(data: &[u8]) {
+    let mut r = ByteReader::new(data);
+    let shards = r.range(1, 5);
+    let n = r.range(0, 512);
+    let mut values: Vec<u64> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let v = match r.byte() % 8 {
+            0 => u64::MAX - u64::from(r.byte() % 2),
+            1 => r.u64(),
+            2 => 0,
+            _ => r.u64() % 4096, // the realistic µs-latency regime
+        };
+        values.push(v);
+    }
+    let mut direct = Histogram::new();
+    let mut parts: Vec<Histogram> = (0..shards).map(|_| Histogram::new()).collect();
+    for (i, &v) in values.iter().enumerate() {
+        direct.record(v);
+        parts[i % shards].record(v);
+    }
+    // Fuzz-chosen merge order (Fisher–Yates over the shard list).
+    let mut order: Vec<usize> = (0..shards).collect();
+    for i in (1..order.len()).rev() {
+        order.swap(i, r.range(0, i));
+    }
+    let mut merged = Histogram::new();
+    for &s in &order {
+        merged.merge(&parts[s]);
+    }
+    let case = format!("n={n} shards={shards} order={order:?}");
+    assert_eq!(merged, direct, "merge order changed the histogram ({case})");
+    assert_eq!(
+        merged.to_json().to_string(),
+        direct.to_json().to_string(),
+        "serialized snapshots diverged ({case})"
+    );
+    assert_eq!(merged.len(), values.len() as u64, "count diverged ({case})");
+    let naive_sum: u128 = values.iter().map(|&v| u128::from(v)).sum();
+    assert_eq!(merged.sum(), naive_sum, "sum must be exact ({case})");
+    let round = Histogram::from_json(&merged.to_json()).expect("snapshot must re-parse");
+    assert_eq!(round, merged, "JSON snapshot failed to round-trip ({case})");
+    if !values.is_empty() {
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        for p in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            // The histogram's documented rank rule on the naive model.
+            let rank = ((sorted.len() - 1) as f64 * p) as usize;
+            let want = Histogram::bucket_low(Histogram::bucket_index(sorted[rank]));
+            let got = merged.percentile(p);
+            assert_eq!(got, want, "p{p} diverged: {got} != {want} ({case})");
+        }
+        assert_eq!(
+            merged.max_bucket_low(),
+            Histogram::bucket_low(Histogram::bucket_index(sorted[sorted.len() - 1])),
+            "max bucket diverged ({case})"
+        );
+    }
+}
+
 /// Drive a [`SlotCache`] and a naive `Vec`-of-rows model through the
 /// same arbitrary schedule of push / extend / truncate / clear / lease /
 /// evict operations; after every step the cache's `len`, `gather` and
@@ -276,6 +348,7 @@ mod tests {
             packed_roundtrip(&input);
             config_never_panics(&input);
             slot_cache_differential(&input);
+            histogram_differential(&input);
         }
     }
 

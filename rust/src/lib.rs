@@ -80,6 +80,19 @@
 //! `benches/serving.rs` carry the matching thread/worker sweeps plus the
 //! warm-vs-cold resume sweep.
 //!
+//! ## Telemetry
+//!
+//! [`telemetry`] makes the serving speedups attributable: bounded
+//! log2-bucket [`telemetry::Histogram`]s (order-independent merge, O(buckets)
+//! memory) back every latency percentile in `Metrics`; worker iterations
+//! record per-phase spans (resume / prefill / decode / speculate, plus
+//! GEMM time from the `lut::parallel` timing hooks) into per-phase
+//! histograms and a bounded per-worker [`telemetry::FlightRecorder`]
+//! that dumps — Chrome trace-event JSON included — when a worker
+//! faults. Snapshots expose as Prometheus text or JSON via `lcd serve
+//! --telemetry-dump` and `serve_bench --telemetry-json`; see
+//! `coordinator` § Telemetry for the contract.
+//!
 //! See `DESIGN.md` for the experiment index mapping every table and figure
 //! of the paper to a module and a `lcd repro --exp <id>` command.
 
@@ -99,6 +112,7 @@ pub mod quant;
 pub mod repro;
 pub mod runtime;
 pub mod smooth;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 

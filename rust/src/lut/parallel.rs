@@ -31,10 +31,11 @@ use super::simd::{SimdLutLayer, SimdScratch};
 use super::LutLayer;
 use crate::tensor::Matrix;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Shard task signature: `(shard_index, worker_scratch)`.
 type ShardFn = dyn Fn(usize, &mut SimdScratch) + Sync;
@@ -193,17 +194,28 @@ unsafe impl Sync for OutPtr {}
 pub struct ParallelLut {
     pool: GemmPool,
     shard_rows: usize,
+    /// Cumulative wall nanoseconds spent inside the GEMM drivers — the
+    /// telemetry GEMM-time attribution hook. Monotonic; readers take
+    /// deltas. Two clock reads per GEMM call, negligible against the
+    /// contraction itself.
+    gemm_ns: AtomicU64,
 }
 
 impl ParallelLut {
     /// `threads` compute threads; `shard_rows` fixes the output rows per
     /// shard (`0` = automatic: ~4 shards per thread, ≥16 rows each).
     pub fn new(threads: usize, shard_rows: usize) -> ParallelLut {
-        ParallelLut { pool: GemmPool::new(threads), shard_rows }
+        ParallelLut { pool: GemmPool::new(threads), shard_rows, gemm_ns: AtomicU64::new(0) }
     }
 
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Cumulative nanoseconds spent in [`ParallelLut::gemm_bucket`] /
+    /// [`ParallelLut::gemm_simd`] since construction.
+    pub fn gemm_ns(&self) -> u64 {
+        self.gemm_ns.load(Ordering::Relaxed)
     }
 
     /// Configured shard granularity (0 = automatic).
@@ -225,6 +237,13 @@ impl ParallelLut {
     /// Parallel [`super::lut_gemm_bucket`]; bit-identical to the serial
     /// kernel for any thread count / granularity.
     pub fn gemm_bucket(&self, q: &[i8], batch: usize, layer: &LutLayer) -> Matrix {
+        let t0 = Instant::now();
+        let y = self.gemm_bucket_inner(q, batch, layer);
+        self.gemm_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        y
+    }
+
+    fn gemm_bucket_inner(&self, q: &[i8], batch: usize, layer: &LutLayer) -> Matrix {
         assert_eq!(q.len(), batch * layer.d_in);
         let d_out = layer.d_out;
         let mut y = Matrix::zeros(batch, d_out);
@@ -253,6 +272,19 @@ impl ParallelLut {
     /// Parallel [`SimdLutLayer::gemm`]: pack once into `scratch`, then
     /// shard the row loop. Bit-identical to the serial SIMD path.
     pub fn gemm_simd(
+        &self,
+        layer: &SimdLutLayer,
+        q: &[i8],
+        batch: usize,
+        scratch: &mut SimdScratch,
+    ) -> Matrix {
+        let t0 = Instant::now();
+        let y = self.gemm_simd_inner(layer, q, batch, scratch);
+        self.gemm_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        y
+    }
+
+    fn gemm_simd_inner(
         &self,
         layer: &SimdLutLayer,
         q: &[i8],
@@ -347,6 +379,12 @@ impl LutStack {
     pub fn linear(&self, li: usize, x: &[f32], batch: usize, scratch: &mut SimdScratch) -> Matrix {
         let q = super::quantize_input(x, self.layers[li].input_inv_scale);
         self.gemm(li, &q, batch, scratch)
+    }
+
+    /// Cumulative nanoseconds this stack's pool spent in GEMM — the
+    /// telemetry attribution hook, forwarded from [`ParallelLut::gemm_ns`].
+    pub fn gemm_ns(&self) -> u64 {
+        self.par.gemm_ns()
     }
 }
 
@@ -460,6 +498,21 @@ mod tests {
                 assert_eq!(serial.data, y.data, "t{threads} ({b},{d_in},{d_out},{k})");
             }
         }
+    }
+
+    #[test]
+    fn gemm_time_accumulates_monotonically() {
+        let mut rng = Rng::new(404);
+        let layer = make(&mut rng, 32, 24, 6);
+        let q = random_q(&mut rng, 4 * 32);
+        let par = ParallelLut::new(2, 0);
+        assert_eq!(par.gemm_ns(), 0, "no GEMM ran yet");
+        let _ = par.gemm_bucket(&q, 4, &layer);
+        let after_one = par.gemm_ns();
+        let simd = SimdLutLayer::compile(&layer);
+        let mut scratch = SimdScratch::default();
+        let _ = par.gemm_simd(&simd, &q, 4, &mut scratch);
+        assert!(par.gemm_ns() >= after_one, "gemm_ns must be monotonic");
     }
 
     #[test]

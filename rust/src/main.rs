@@ -27,6 +27,9 @@ struct Args {
     /// Conversation turns per request in `serve` (1 = one-shot requests;
     /// > 1 drives resumable sessions through the session store).
     turns: usize,
+    /// `serve`: write the final telemetry exposition here after shutdown
+    /// (`.json` suffix = JSON snapshot, anything else = Prometheus text).
+    telemetry_dump: Option<String>,
     cfg: LcdConfig,
 }
 
@@ -41,6 +44,7 @@ fn parse_args() -> Result<Args> {
     let mut engine = "lut".to_string();
     let mut requests = 32usize;
     let mut turns = 1usize;
+    let mut telemetry_dump = None;
     let mut i = 1;
     // --config applies first so --set/--model can override it.
     let mut sets: Vec<String> = Vec::new();
@@ -74,6 +78,10 @@ fn parse_args() -> Result<Args> {
             "--prefill-chunk" => sets.push(format!("serve.prefill_chunk={}", take(&mut i)?)),
             "--draft-k" => sets.push(format!("serve.draft_k={}", take(&mut i)?)),
             "--draft" => sets.push(format!("serve.draft={}", take(&mut i)?)),
+            "--telemetry-dump" => telemetry_dump = Some(take(&mut i)?),
+            "--telemetry-sample" => {
+                sets.push(format!("serve.telemetry_sample={}", take(&mut i)?))
+            }
             "--help" | "-h" => bail!("{}", HELP),
             other => bail!("unknown flag '{other}'\n{}", HELP),
         }
@@ -82,7 +90,7 @@ fn parse_args() -> Result<Args> {
     for kv in &sets {
         cfg.set_override(kv)?;
     }
-    Ok(Args { command, exp, engine, requests, turns, cfg })
+    Ok(Args { command, exp, engine, requests, turns, telemetry_dump, cfg })
 }
 
 const HELP: &str = "\
@@ -108,6 +116,10 @@ flags:
                    — streams are bit-identical at every setting)
   --draft-k N      --draft narrow|oracle (speculative draft engine)
   --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)
+  --telemetry-dump <file> (serve: write the final metrics exposition —
+                   phase latency histograms, TTFT, GEMM time — as JSON
+                   when the path ends in .json, Prometheus text else)
+  --telemetry-sample N (trace every Nth iteration; 0 = counters only)
 (cached = incremental decode: per-slot activation cache, per-step cost
 independent of seq, bit-identical logits to the full host engine;
 speculative = cached + draft-and-verify: a cheap draft proposes draft_k
@@ -123,7 +135,9 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args.cfg),
         "compress" => cmd_compress(&args.cfg),
         "eval" => cmd_eval(&args.cfg),
-        "serve" => cmd_serve(&args.cfg, &args.engine, args.requests, args.turns),
+        "serve" => {
+            cmd_serve(&args.cfg, &args.engine, args.requests, args.turns, args.telemetry_dump)
+        }
         "repro" => {
             let exp = args.exp.context("repro needs --exp <id>")?;
             repro::run(&exp, &args.cfg)
@@ -209,7 +223,13 @@ fn cmd_eval(cfg: &LcdConfig) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize, turns: usize) -> Result<()> {
+fn cmd_serve(
+    cfg: &LcdConfig,
+    engine_kind: &str,
+    n_requests: usize,
+    turns: usize,
+    telemetry_dump: Option<String>,
+) -> Result<()> {
     // Artifact engines train-or-load a checkpoint inside build_engine;
     // materialize it once up front so N workers load instead of racing
     // N concurrent trainings onto the same checkpoint file.
@@ -229,12 +249,13 @@ fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize, turns: usize
     let sched = cfg.serve.scheduler_config()?;
     let cfg2 = cfg.clone();
     let engine_kind2 = engine_kind.to_string();
-    let handle = server::start_pool_sched(
+    let handle = server::start_pool_tele(
         cfg.serve.workers,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
         sched,
         cfg.serve.session_options(),
+        cfg.serve.telemetry_config(),
         move |_worker| lcd::repro::shared::build_step_engine(&cfg2, &engine_kind2),
     );
 
@@ -296,5 +317,14 @@ fn cmd_serve(cfg: &LcdConfig, engine_kind: &str, n_requests: usize, turns: usize
         }
     }
     println!("engine {engine_kind}: {}", report.aggregate.report());
+    if let Some(path) = telemetry_dump {
+        let text = if path.ends_with(".json") {
+            report.aggregate.to_json().to_string_pretty()
+        } else {
+            report.aggregate.prometheus_text()
+        };
+        std::fs::write(&path, text).with_context(|| format!("writing {path}"))?;
+        println!("telemetry written to {path}");
+    }
     Ok(())
 }

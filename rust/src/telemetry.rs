@@ -1,0 +1,826 @@
+//! Telemetry: bounded mergeable histograms, phase span tracing, and the
+//! per-worker flight recorder.
+//!
+//! The serving coordinator reports latency through [`Histogram`] — a
+//! fixed-shape log2 histogram with linear sub-buckets (HdrHistogram
+//! style). The design goals, in priority order:
+//!
+//! 1. **Bounded memory.** A histogram is O(buckets) — at most
+//!    [`MAX_BUCKETS`] `u64` counters (~8 KiB) no matter how many samples
+//!    are recorded. This is what lets `Metrics` survive millions of
+//!    requests per worker (the pre-telemetry `TtftDigest` kept every raw
+//!    sample in an unbounded `Vec`).
+//! 2. **Order-independent merge.** `merge` adds bucket counts, which is
+//!    commutative and associative, so merging any partition of a sample
+//!    stream in any order yields a byte-identical histogram — the same
+//!    contract the coordinator's metrics merge property-pins.
+//! 3. **Bounded error.** Values below `2 * SUB_BUCKETS` (= 32) are exact;
+//!    larger values land in a bucket of relative width `1 / SUB_BUCKETS`
+//!    (6.25%), so a reported percentile is always the lower bound of the
+//!    bucket holding the true nearest-rank sample — "within one bucket
+//!    of exact".
+//!
+//! Span tracing rides on top: the worker loop wraps each
+//! [`crate::coordinator::scheduler::IterationPlan`] phase
+//! (resume / prefill / decode / speculate) in a [`Phase`] span whose
+//! duration feeds [`PhaseStats`] histograms, and pushes the span — plus
+//! per-request lifecycle marks (admit, first token, complete) — into a
+//! bounded [`FlightRecorder`] ring. On a worker panic the recorder is
+//! dumped ([`FlightDump`]) with the *open* span still attached, so the
+//! faulted iteration's timeline is reconstructable; dumps export as
+//! Chrome trace-event JSON loadable in Perfetto / `chrome://tracing`.
+//!
+//! Overhead rules: with span capture off (`sample_every == 0`) the hot
+//! path records plain counters only — no `Instant::now` in the
+//! iteration loop. With capture on, each sampled iteration costs a
+//! handful of clock reads and ring pushes; `PERF_GATE
+//! telemetry_overhead` in `benches/serving.rs` pins tracing-on decode
+//! throughput to within a small bound of tracing-off.
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Linear sub-buckets per power of two: values split each octave into
+/// `SUB_BUCKETS` equal slices, bounding relative error to
+/// `1 / SUB_BUCKETS`.
+const SUB_BUCKETS: u64 = 16;
+const SUB_BITS: u32 = 4;
+
+/// Highest possible bucket index + 1 (for `u64::MAX`): indices `0..32`
+/// are the exact small values, then 16 buckets per remaining octave.
+pub const MAX_BUCKETS: usize = (59 * SUB_BUCKETS as usize) + (2 * SUB_BUCKETS as usize);
+
+/// Bounded log2-with-linear-sub-bucket histogram over `u64` samples.
+///
+/// `record` is O(1); `merge` adds bucket counts (order-independent by
+/// construction); `percentile` walks the cumulative counts and returns
+/// the lower bound of the bucket holding the nearest-rank sample —
+/// exact for values < 32, within `1/16` relative error above.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Histogram {
+    /// Bucket counts, grown on demand to the highest recorded index + 1.
+    /// Two histograms over the same multiset always have the same
+    /// length, so derived `PartialEq` compares true contents.
+    counts: Vec<u64>,
+    count: u64,
+    /// Saturating running sum (u128: ~3e20 max-value samples to saturate).
+    sum: u128,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index for a value: identity below `2 * SUB_BUCKETS`, then
+    /// `SUB_BUCKETS` linear slices per octave.
+    pub fn bucket_index(v: u64) -> usize {
+        if v < 2 * SUB_BUCKETS {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros(); // >= SUB_BITS + 1
+        let shift = msb - SUB_BITS;
+        let sub = (v >> shift) as usize; // in [SUB_BUCKETS, 2*SUB_BUCKETS)
+        (shift as usize) * SUB_BUCKETS as usize + sub
+    }
+
+    /// Inclusive lower bound of a bucket — the representative value
+    /// percentiles report. Saturates at `u64::MAX` for the one-past-the-
+    /// top index (used as the exclusive upper bound of the last bucket).
+    pub fn bucket_low(index: usize) -> u64 {
+        if index < (2 * SUB_BUCKETS) as usize {
+            return index as u64;
+        }
+        let shift = index / SUB_BUCKETS as usize - 1;
+        let sub = (index - shift * SUB_BUCKETS as usize) as u128;
+        (sub << shift).min(u64::MAX as u128) as u64
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` occurrences of `v` in O(1).
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let idx = Self::bucket_index(v);
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] = self.counts[idx].saturating_add(n);
+        self.count = self.count.saturating_add(n);
+        self.sum = self.sum.saturating_add(v as u128 * n as u128);
+    }
+
+    /// Fold another histogram in. Bucket-count addition commutes, so any
+    /// merge order over any partition of a sample stream produces a
+    /// byte-identical result.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a = a.saturating_add(b);
+        }
+        self.count = self.count.saturating_add(other.count);
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Nearest-rank percentile (the same rank rule the pre-histogram
+    /// sorted-`Vec` metrics used: index `(len - 1) * p` into the sorted
+    /// multiset), reported as the lower bound of the rank's bucket.
+    /// Returns 0 on an empty histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count - 1) as f64 * p.clamp(0.0, 1.0)) as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen = seen.saturating_add(c);
+            if seen > rank {
+                return Self::bucket_low(idx);
+            }
+        }
+        Self::bucket_low(self.counts.len().saturating_sub(1))
+    }
+
+    /// Batch percentile lookup.
+    pub fn percentiles<const N: usize>(&self, ps: [f64; N]) -> [u64; N] {
+        ps.map(|p| self.percentile(p))
+    }
+
+    /// Largest recorded bucket's lower bound (0 when empty).
+    pub fn max_bucket_low(&self) -> u64 {
+        match self.counts.iter().rposition(|&c| c > 0) {
+            Some(idx) => Self::bucket_low(idx),
+            None => 0,
+        }
+    }
+
+    /// Sparse JSON form: `{"count": n, "sum": "…", "buckets": [[idx, c], …]}`.
+    /// `sum` is a decimal string because it is u128; bucket indices and
+    /// counts are exact in f64 for any realistic stream.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)]))
+            .collect();
+        Json::Obj(vec![
+            ("count".into(), Json::Num(self.count as f64)),
+            ("sum".into(), Json::Str(self.sum.to_string())),
+            ("buckets".into(), Json::Arr(buckets)),
+        ])
+    }
+
+    /// Inverse of [`Histogram::to_json`]. Rejects malformed shapes and
+    /// out-of-range bucket indices rather than panicking.
+    pub fn from_json(j: &Json) -> Result<Histogram> {
+        let count = j.req("count")?.as_f64()? as u64;
+        let sum: u128 = match j.req("sum")? {
+            Json::Str(s) => match s.parse() {
+                Ok(v) => v,
+                Err(e) => bail!("histogram sum {s:?} is not a u128: {e}"),
+            },
+            other => bail!("histogram sum must be a decimal string, got {other:?}"),
+        };
+        let mut h = Histogram::default();
+        for b in j.req("buckets")?.as_arr()? {
+            let pair = b.as_arr()?;
+            if pair.len() != 2 {
+                bail!("histogram bucket entry must be [index, count]");
+            }
+            let idx = pair[0].as_usize()?;
+            let c = pair[1].as_f64()? as u64;
+            if idx >= MAX_BUCKETS {
+                bail!("histogram bucket index {idx} out of range (max {MAX_BUCKETS})");
+            }
+            if idx >= h.counts.len() {
+                h.counts.resize(idx + 1, 0);
+            }
+            h.counts[idx] = h.counts[idx].saturating_add(c);
+        }
+        h.count = count;
+        h.sum = sum;
+        Ok(h)
+    }
+
+    /// Append Prometheus text-format exposition for this histogram:
+    /// cumulative `_bucket{le=…}` lines over the non-empty buckets, plus
+    /// `_sum` and `_count`.
+    pub fn prometheus_into(&self, name: &str, out: &mut String) {
+        use std::fmt::Write;
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum = cum.saturating_add(c);
+            // The bucket upper bound is the next bucket's lower bound.
+            let le = Self::bucket_low(idx + 1).saturating_sub(1);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", self.count);
+        let _ = writeln!(out, "{name}_sum {}", self.sum);
+        let _ = writeln!(out, "{name}_count {}", self.count);
+    }
+}
+
+/// Span / lifecycle-mark kinds. The first four are the scheduler's
+/// `IterationPlan` phases (timed spans); the rest are per-request
+/// lifecycle marks (zero-duration, `detail` = request id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Resume,
+    Prefill,
+    Decode,
+    Speculate,
+    Admit,
+    FirstToken,
+    Complete,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Resume => "resume",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::Speculate => "speculate",
+            Phase::Admit => "admit",
+            Phase::FirstToken => "first_token",
+            Phase::Complete => "complete",
+        }
+    }
+}
+
+/// Per-phase duration histograms (µs), merged worker → aggregate along
+/// with the rest of `Metrics`. `gemm_us` is the per-iteration GEMM time
+/// attributed by the `lut::parallel` timing hooks; `inter_token_us` is
+/// the gap between successive decode/speculate phase completions on one
+/// worker (the serving-side inter-token latency).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseStats {
+    pub resume_us: Histogram,
+    pub prefill_us: Histogram,
+    pub decode_us: Histogram,
+    pub speculate_us: Histogram,
+    pub iteration_us: Histogram,
+    pub gemm_us: Histogram,
+    pub inter_token_us: Histogram,
+}
+
+impl PhaseStats {
+    pub fn merge(&mut self, other: &PhaseStats) {
+        self.resume_us.merge(&other.resume_us);
+        self.prefill_us.merge(&other.prefill_us);
+        self.decode_us.merge(&other.decode_us);
+        self.speculate_us.merge(&other.speculate_us);
+        self.iteration_us.merge(&other.iteration_us);
+        self.gemm_us.merge(&other.gemm_us);
+        self.inter_token_us.merge(&other.inter_token_us);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.named().iter().all(|(_, h)| h.is_empty())
+    }
+
+    /// Name → histogram pairs, the single source of truth for exposition.
+    pub fn named(&self) -> [(&'static str, &Histogram); 7] {
+        [
+            ("resume_us", &self.resume_us),
+            ("prefill_us", &self.prefill_us),
+            ("decode_us", &self.decode_us),
+            ("speculate_us", &self.speculate_us),
+            ("iteration_us", &self.iteration_us),
+            ("gemm_us", &self.gemm_us),
+            ("inter_token_us", &self.inter_token_us),
+        ]
+    }
+
+    fn slot(&mut self, phase: Phase) -> Option<&mut Histogram> {
+        match phase {
+            Phase::Resume => Some(&mut self.resume_us),
+            Phase::Prefill => Some(&mut self.prefill_us),
+            Phase::Decode => Some(&mut self.decode_us),
+            Phase::Speculate => Some(&mut self.speculate_us),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.named().iter().map(|(n, h)| (n.to_string(), h.to_json())).collect())
+    }
+
+    pub fn from_json(j: &Json) -> Result<PhaseStats> {
+        let mut p = PhaseStats::default();
+        for (name, hist) in [
+            ("resume_us", &mut p.resume_us),
+            ("prefill_us", &mut p.prefill_us),
+            ("decode_us", &mut p.decode_us),
+            ("speculate_us", &mut p.speculate_us),
+            ("iteration_us", &mut p.iteration_us),
+            ("gemm_us", &mut p.gemm_us),
+            ("inter_token_us", &mut p.inter_token_us),
+        ] {
+            if let Some(v) = j.get(name) {
+                *hist = Histogram::from_json(v)?;
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// One flight-recorder entry: a closed phase span (`dur_us` measured) or
+/// a zero-duration lifecycle mark. `detail` is the phase's job count for
+/// spans and the request id for marks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub phase: Phase,
+    pub iteration: u64,
+    /// Microseconds since the recorder was created.
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub detail: u64,
+}
+
+/// Telemetry knobs threaded from `ServeConfig` into each worker.
+#[derive(Clone)]
+pub struct TelemetryConfig {
+    /// Capture phase spans every Nth iteration; `0` disables span
+    /// capture entirely (counters-only hot path, no recorder).
+    pub sample_every: u64,
+    /// Flight-recorder ring capacity (events retained per worker).
+    pub recorder_capacity: usize,
+    /// Where faulted workers push their flight dumps (chaos tests and
+    /// embedders); `None` means dumps only summarize to stderr.
+    pub sink: Option<FlightSink>,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> TelemetryConfig {
+        TelemetryConfig { sample_every: 1, recorder_capacity: 256, sink: None }
+    }
+}
+
+impl TelemetryConfig {
+    /// Span capture disabled: the worker loop never reads the clock.
+    pub fn off() -> TelemetryConfig {
+        TelemetryConfig { sample_every: 0, ..TelemetryConfig::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sample_every > 0
+    }
+}
+
+/// Bounded ring of recent [`SpanEvent`]s for one worker, plus the
+/// currently-open span. Declared *outside* the worker's `catch_unwind`
+/// (the same pattern that keeps `Metrics` alive through a panic), so a
+/// fault mid-phase leaves the faulted span open in the dump.
+pub struct FlightRecorder {
+    epoch: Instant,
+    cap: usize,
+    sample_every: u64,
+    ring: VecDeque<SpanEvent>,
+    open: Option<(Phase, u64, Instant, u64)>,
+    iteration: u64,
+    last_token_phase_end: Option<Instant>,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cfg: &TelemetryConfig) -> FlightRecorder {
+        FlightRecorder {
+            epoch: Instant::now(),
+            cap: cfg.recorder_capacity.max(1),
+            sample_every: cfg.sample_every.max(1),
+            ring: VecDeque::new(),
+            open: None,
+            iteration: 0,
+            last_token_phase_end: None,
+            dropped: 0,
+        }
+    }
+
+    /// Whether iteration `i` (1-based) captures spans under the sampling
+    /// knob.
+    pub fn sampled(&self, iteration: u64) -> bool {
+        iteration % self.sample_every == 0
+    }
+
+    /// Mark the start of a sampled iteration; subsequent spans/marks tag
+    /// this iteration number.
+    pub fn begin_iteration(&mut self, iteration: u64) {
+        self.iteration = iteration;
+    }
+
+    pub fn iteration(&self) -> u64 {
+        self.iteration
+    }
+
+    fn push(&mut self, ev: SpanEvent) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(ev);
+    }
+
+    fn now_us(&self, at: Instant) -> u64 {
+        at.duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Open a phase span. A panic before the matching [`end`] leaves the
+    /// span open — the dump's reconstruction of the faulted phase.
+    ///
+    /// [`end`]: FlightRecorder::end
+    pub fn begin(&mut self, phase: Phase, detail: u64) {
+        self.open = Some((phase, self.iteration, Instant::now(), detail));
+    }
+
+    /// Close the open span: push it into the ring and record its
+    /// duration into `stats` (only when the phase did work — empty
+    /// phases still appear in the ring so timelines stay complete, but
+    /// don't skew the histograms). Decode/speculate completions also
+    /// feed the inter-token gap histogram.
+    pub fn end(&mut self, stats: &mut PhaseStats) {
+        let Some((phase, iteration, started, detail)) = self.open.take() else {
+            return;
+        };
+        let ended = Instant::now();
+        let dur_us = ended.duration_since(started).as_micros() as u64;
+        let start_us = self.now_us(started);
+        self.push(SpanEvent { phase, iteration, start_us, dur_us, detail });
+        if detail > 0 {
+            if let Some(h) = stats.slot(phase) {
+                h.record(dur_us);
+            }
+            if matches!(phase, Phase::Decode | Phase::Speculate) {
+                if let Some(prev) = self.last_token_phase_end {
+                    stats.inter_token_us.record(ended.duration_since(prev).as_micros() as u64);
+                }
+                self.last_token_phase_end = Some(ended);
+            }
+        }
+    }
+
+    /// Drop the open span without recording (clean iteration end).
+    pub fn abandon(&mut self) {
+        self.open = None;
+    }
+
+    /// Zero-duration lifecycle mark (admit / first token / complete),
+    /// tagged with the request id.
+    pub fn mark(&mut self, phase: Phase, request: u64) {
+        let start_us = self.now_us(Instant::now());
+        let iteration = self.iteration;
+        self.push(SpanEvent { phase, iteration, start_us, dur_us: 0, detail: request });
+    }
+
+    /// The currently-open span as an event (duration = elapsed so far).
+    pub fn open_span(&self) -> Option<SpanEvent> {
+        self.open.map(|(phase, iteration, started, detail)| SpanEvent {
+            phase,
+            iteration,
+            start_us: self.now_us(started),
+            dur_us: started.elapsed().as_micros() as u64,
+            detail,
+        })
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &SpanEvent> {
+        self.ring.iter()
+    }
+
+    /// Snapshot the ring (plus any open span) for post-mortem use.
+    pub fn dump(&self, worker: usize) -> FlightDump {
+        FlightDump {
+            worker,
+            events: self.ring.iter().cloned().collect(),
+            open: self.open_span(),
+            dropped: self.dropped,
+        }
+    }
+}
+
+/// A faulted (or explicitly dumped) worker's flight-recorder contents.
+#[derive(Clone, Debug)]
+pub struct FlightDump {
+    pub worker: usize,
+    /// Closed spans and marks, oldest first (ring order).
+    pub events: Vec<SpanEvent>,
+    /// The span that was in flight when the dump was taken — on a panic
+    /// dump, the faulted phase.
+    pub open: Option<SpanEvent>,
+    /// Events evicted from the ring before the dump.
+    pub dropped: u64,
+}
+
+impl FlightDump {
+    /// Chrome trace-event JSON (the `traceEvents` array format): load in
+    /// Perfetto or `chrome://tracing`. Phase spans become complete `"X"`
+    /// events; lifecycle marks become instant `"i"` events; the open
+    /// (faulted) span exports with its elapsed duration and an
+    /// `"open": true` arg.
+    pub fn chrome_trace(&self) -> Json {
+        let mut events: Vec<Json> =
+            self.events.iter().map(|e| Self::trace_event(e, false)).collect();
+        if let Some(open) = &self.open {
+            events.push(Self::trace_event(open, true));
+        }
+        Json::Obj(vec![("traceEvents".into(), Json::Arr(events))])
+    }
+
+    fn trace_event(e: &SpanEvent, open: bool) -> Json {
+        let mark = matches!(e.phase, Phase::Admit | Phase::FirstToken | Phase::Complete);
+        let mut fields = vec![
+            ("name".into(), Json::Str(e.phase.name().into())),
+            ("ph".into(), Json::Str(if mark { "i" } else { "X" }.into())),
+            ("ts".into(), Json::Num(e.start_us as f64)),
+            ("pid".into(), Json::Num(0.0)),
+            ("tid".into(), Json::Num(0.0)),
+        ];
+        if !mark {
+            fields.insert(3, ("dur".into(), Json::Num(e.dur_us as f64)));
+        }
+        let mut args = vec![
+            ("iteration".into(), Json::Num(e.iteration as f64)),
+            ((if mark { "request" } else { "jobs" }).into(), Json::Num(e.detail as f64)),
+        ];
+        if open {
+            args.push(("open".into(), Json::Bool(true)));
+        }
+        fields.push(("args".into(), Json::Obj(args)));
+        Json::Obj(fields)
+    }
+
+    /// Short human-readable post-mortem (a few lines for stderr).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "flight recorder: worker {} · {} events ({} dropped)",
+            self.worker,
+            self.events.len(),
+            self.dropped
+        );
+        if let Some(open) = &self.open {
+            let _ = writeln!(
+                s,
+                "  open span: {} (iteration {}, {} jobs, {}us elapsed)",
+                open.phase.name(),
+                open.iteration,
+                open.detail,
+                open.dur_us
+            );
+        }
+        for e in self.events.iter().rev().take(8) {
+            let _ = writeln!(
+                s,
+                "  {:>10}us {:<12} iter {:<6} dur {:>8}us detail {}",
+                e.start_us,
+                e.phase.name(),
+                e.iteration,
+                e.dur_us,
+                e.detail
+            );
+        }
+        s
+    }
+}
+
+/// Shared destination for faulted workers' flight dumps — the same
+/// shape as the chaos `AuditLog`, so tests can correlate the two.
+pub type FlightSink = Arc<Mutex<Vec<FlightDump>>>;
+
+pub fn flight_sink() -> FlightSink {
+    Arc::new(Mutex::new(Vec::new()))
+}
+
+/// Drain a sink, tolerating poison (a panicking worker holding the lock
+/// is exactly the case dumps exist for).
+pub fn take_dumps(sink: &FlightSink) -> Vec<FlightDump> {
+    let mut guard = sink.lock().unwrap_or_else(|e| e.into_inner());
+    std::mem::take(&mut *guard)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.len(), 32);
+        for v in 0..32u64 {
+            assert_eq!(Histogram::bucket_low(Histogram::bucket_index(v)), v);
+        }
+        let mut one = Histogram::new();
+        one.record(7);
+        assert_eq!((one.len(), one.percentile(0.5)), (1, 7));
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounded() {
+        let mut prev = 0usize;
+        for e in 0..64u32 {
+            for v in [1u64 << e, (1u64 << e) + 1, (1u64 << e).saturating_mul(2) - 1] {
+                let idx = Histogram::bucket_index(v);
+                assert!(idx >= prev, "index must not decrease (v = {v})");
+                assert!(idx < MAX_BUCKETS, "index {idx} out of bound for v = {v}");
+                let low = Histogram::bucket_low(idx);
+                let high = Histogram::bucket_low(idx + 1);
+                assert!(low <= v, "v = {v} below its bucket lower bound {low}");
+                // The top bucket's upper bound saturates at u64::MAX.
+                assert!(v < high || high == u64::MAX, "v = {v} not in [{low}, {high})");
+                prev = idx;
+            }
+        }
+        assert!(Histogram::bucket_index(u64::MAX) < MAX_BUCKETS);
+    }
+
+    #[test]
+    fn percentile_within_one_bucket_of_exact() {
+        let mut h = Histogram::new();
+        let mut naive: Vec<u64> = Vec::new();
+        let mut rng = Rng::new(0x7e1e);
+        for _ in 0..5000 {
+            let v = rng.below(1_000_000) as u64;
+            h.record(v);
+            naive.push(v);
+        }
+        naive.sort_unstable();
+        for p in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let exact = naive[((naive.len() - 1) as f64 * p) as usize];
+            let got = h.percentile(p);
+            assert_eq!(
+                Histogram::bucket_index(exact),
+                Histogram::bucket_index(got),
+                "p{p}: reported {got} must share a bucket with exact {exact}"
+            );
+            assert!(got <= exact, "representative is the bucket lower bound");
+        }
+    }
+
+    #[test]
+    fn merge_is_order_independent_and_matches_global() {
+        let mut rng = Rng::new(0x9e1);
+        let mut shards: Vec<Histogram> = (0..5).map(|_| Histogram::new()).collect();
+        let mut global = Histogram::new();
+        for i in 0..2000 {
+            let v = (rng.below(1 << 20)) as u64;
+            shards[i % 5].record(v);
+            global.record(v);
+        }
+        let mut fwd = Histogram::new();
+        for s in &shards {
+            fwd.merge(s);
+        }
+        let mut rev = Histogram::new();
+        for s in shards.iter().rev() {
+            rev.merge(s);
+        }
+        assert_eq!(fwd, rev, "merge order must not change the histogram");
+        assert_eq!(fwd, global, "merged shards must equal single-stream recording");
+        assert_eq!(fwd.percentile(0.99), global.percentile(0.99));
+    }
+
+    #[test]
+    fn extreme_values_do_not_panic() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        h.record_n(1, u64::MAX);
+        assert!(!h.is_empty());
+        assert!(h.percentile(1.0) >= Histogram::bucket_low(Histogram::bucket_index(u64::MAX)));
+        let mut other = h.clone();
+        other.merge(&h);
+        assert!(other.len() >= h.len());
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(42);
+        for _ in 0..500 {
+            h.record(rng.below(1 << 30) as u64);
+        }
+        h.record(u64::MAX);
+        let text = h.to_json().to_string();
+        let back = Histogram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(h, back);
+        // Empty histogram round-trips too.
+        let empty = Histogram::new();
+        let parsed = Json::parse(&empty.to_json().to_string()).unwrap();
+        assert_eq!(empty, Histogram::from_json(&parsed).unwrap());
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let mut h = Histogram::new();
+        h.record(3);
+        h.record(3);
+        h.record(100);
+        let mut out = String::new();
+        h.prometheus_into("lcd_test_us", &mut out);
+        assert!(out.contains("# TYPE lcd_test_us histogram"));
+        assert!(out.contains("lcd_test_us_bucket{le=\"3\"} 2"));
+        assert!(out.contains("lcd_test_us_bucket{le=\"+Inf\"} 3"));
+        assert!(out.contains("lcd_test_us_count 3"));
+    }
+
+    #[test]
+    fn recorder_ring_is_bounded_and_keeps_open_span() {
+        let cfg = TelemetryConfig { sample_every: 1, recorder_capacity: 4, sink: None };
+        let mut rec = FlightRecorder::new(&cfg);
+        let mut stats = PhaseStats::default();
+        for i in 1..=10u64 {
+            rec.begin_iteration(i);
+            rec.begin(Phase::Decode, 2);
+            rec.end(&mut stats);
+        }
+        assert_eq!(rec.events().count(), 4, "ring must stay at capacity");
+        rec.begin_iteration(11);
+        rec.begin(Phase::Prefill, 3);
+        let dump = rec.dump(7);
+        assert_eq!(dump.worker, 7);
+        assert_eq!(dump.dropped, 6);
+        let open = dump.open.expect("open span must survive into the dump");
+        assert_eq!((open.phase, open.iteration, open.detail), (Phase::Prefill, 11, 3));
+        assert_eq!(stats.decode_us.len(), 10);
+        assert!(stats.inter_token_us.len() >= 9);
+    }
+
+    #[test]
+    fn empty_phases_stay_out_of_histograms_but_in_ring() {
+        let mut rec = FlightRecorder::new(&TelemetryConfig::default());
+        let mut stats = PhaseStats::default();
+        rec.begin_iteration(1);
+        rec.begin(Phase::Resume, 0);
+        rec.end(&mut stats);
+        assert_eq!(rec.events().count(), 1, "zero-job span still lands in the ring");
+        assert!(stats.resume_us.is_empty(), "zero-job span must not skew the histogram");
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_tags_open_span() {
+        let mut rec = FlightRecorder::new(&TelemetryConfig::default());
+        let mut stats = PhaseStats::default();
+        rec.begin_iteration(1);
+        rec.mark(Phase::Admit, 42);
+        rec.begin(Phase::Prefill, 1);
+        rec.end(&mut stats);
+        rec.begin(Phase::Decode, 1);
+        let dump = rec.dump(0);
+        let text = dump.chrome_trace().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].req("ph").unwrap().as_str().unwrap(), "i");
+        assert_eq!(events[1].req("ph").unwrap().as_str().unwrap(), "X");
+        let open = &events[2];
+        assert_eq!(open.req("name").unwrap().as_str().unwrap(), "decode");
+        assert!(
+            open.req("args").unwrap().req("open").unwrap().as_bool().unwrap(),
+            "faulted span must be tagged open"
+        );
+        assert!(!dump.summary().is_empty());
+    }
+
+    #[test]
+    fn sampling_knob_gates_capture() {
+        let cfg = TelemetryConfig { sample_every: 4, recorder_capacity: 16, sink: None };
+        let rec = FlightRecorder::new(&cfg);
+        let sampled: Vec<u64> = (1..=12).filter(|&i| rec.sampled(i)).collect();
+        assert_eq!(sampled, vec![4, 8, 12]);
+        assert!(TelemetryConfig::off().sample_every == 0 && !TelemetryConfig::off().enabled());
+    }
+}

@@ -20,10 +20,12 @@ mod common;
 
 use lcd::coordinator::chaos::{audit_log, take_reports, AuditLog, AuditReport};
 use lcd::coordinator::{
-    start_pool_sched, AdmissionPolicy, ChaosEngine, FaultPlan, FaultPoint, GenResponse,
-    HostLutSpec, MetricsSnapshot, SchedulerConfig, ServerHandle, ServerReport, SessionOptions,
-    SessionStore,
+    start_pool_sched, start_pool_tele, AdmissionPolicy, ChaosEngine, FaultPlan, FaultPoint,
+    GenResponse, HostLutSpec, MetricsSnapshot, SchedulerConfig, ServerHandle, ServerReport,
+    SessionOptions, SessionStore,
 };
+use lcd::telemetry::{flight_sink, take_dumps, FlightSink, Phase, PhaseStats, TelemetryConfig};
+use lcd::util::Json;
 use std::sync::Arc;
 
 /// Start a pool whose workers each own a chaos-wrapped engine of `kind`,
@@ -50,6 +52,35 @@ fn chaos_pool(
         })
     };
     (handle, plans, log)
+}
+
+/// Like [`chaos_pool`], but with span tracing on (every iteration
+/// sampled) and faulted workers' flight dumps routed into the returned
+/// sink, so tests can correlate dumps with the chaos audit.
+fn chaos_pool_tele(
+    kind: &'static str,
+    workers: usize,
+    batch: usize,
+    queue_cap: usize,
+    sched: SchedulerConfig,
+    opts: SessionOptions,
+    spec: &HostLutSpec,
+) -> (ServerHandle, Vec<Arc<FaultPlan>>, AuditLog, FlightSink) {
+    let plans: Vec<Arc<FaultPlan>> = (0..workers).map(|_| FaultPlan::new()).collect();
+    let log = audit_log();
+    let sink = flight_sink();
+    let tele =
+        TelemetryConfig { sample_every: 1, recorder_capacity: 256, sink: Some(sink.clone()) };
+    let handle = {
+        let plans = plans.clone();
+        let log = log.clone();
+        let spec = spec.clone();
+        start_pool_tele(workers, batch, queue_cap, sched, opts, tele, move |w| {
+            let engine = common::mk_engine(kind, &spec)?;
+            Ok(ChaosEngine::new(engine, Arc::clone(&plans[w]), log.clone(), w))
+        })
+    };
+    (handle, plans, log, sink)
 }
 
 /// Receive every stream, splitting delivered responses (with their
@@ -209,7 +240,7 @@ fn lease_poisoned_mid_resume_rejects_the_wave_cleanly() {
     let gen = 4usize;
     let opts = SessionOptions { retained_slots: 4, retain_ttl_iters: 0 };
     let sched = SchedulerConfig::unchunked(AdmissionPolicy::Fifo);
-    let (handle, plans, log) = chaos_pool("cached", 1, 4, 16, sched, opts, &spec);
+    let (handle, plans, log, sink) = chaos_pool_tele("cached", 1, 4, 16, sched, opts, &spec);
     let expected = common::expected_turns(&spec, gen);
     let convs = common::conversations();
     let mut store = SessionStore::new();
@@ -251,6 +282,21 @@ fn lease_poisoned_mid_resume_rejects_the_wave_cleanly() {
     let reports = take_reports(&log);
     assert_eq!(reports.len(), 1, "{label}: one engine, one audit report");
     assert!(reports[0].fault_fired, "{label}: the audit must see the injected death");
+    // Telemetry post-mortem: the dump's open span names the faulted
+    // resume phase, with the whole turn-2 wave in flight.
+    let dumps = take_dumps(&sink);
+    assert_eq!(dumps.len(), 1, "{label}: the killed worker must push one flight dump");
+    let open = dumps[0]
+        .open
+        .as_ref()
+        .unwrap_or_else(|| panic!("{label}: the resume kill must leave its span open"));
+    assert_eq!(open.phase, Phase::Resume, "{label}: the open span is the faulted phase");
+    assert!(
+        (1..=ids.len() as u64).contains(&open.detail),
+        "{label}: the faulted resume had between 1 and {} leases in flight, saw {}",
+        ids.len(),
+        open.detail
+    );
     assert_aggregate_is_counter_sum(&report, label);
 }
 
@@ -293,4 +339,101 @@ fn cancelled_clients_mid_chunk_do_not_wedge_the_pool() {
     assert_eq!(reports.len(), 2, "{label}: both engines must report at drop");
     assert_clean_workers_leak_nothing(&reports, label);
     assert_aggregate_is_counter_sum(&report, label);
+}
+
+/// A chaos-killed worker's flight dump must reconstruct the faulted
+/// iteration: the injected phase is the dump's OPEN span (the panic
+/// fired before the matching `end`), earlier phases of the same
+/// iteration survive as closed ring events, the dump names the same
+/// worker as the chaos audit's faulted report, and the chrome-trace
+/// export is loadable JSON with one entry per event plus the open span.
+#[test]
+fn faulted_worker_flight_dump_reconstructs_the_faulted_phase() {
+    let cases = [
+        (FaultPoint::Prefill, Phase::Prefill, SchedulerConfig::new(AdmissionPolicy::Fifo, 2)),
+        (FaultPoint::Decode, Phase::Decode, Ok(SchedulerConfig::unchunked(AdmissionPolicy::Fifo))),
+    ];
+    for (point, phase, sched) in cases {
+        let label = format!("flight-dump/{}", phase.name());
+        let spec = common::base_spec(0x7e1e, 4, 32, 16, 1);
+        let requests = common::request_set(0x1357, 12, 10);
+        let (handle, plans, log, sink) =
+            chaos_pool_tele("cached", 1, 4, 64, sched.unwrap(), SessionOptions::default(), &spec);
+        plans[0].arm(point, 2);
+        let rxs: Vec<_> = requests.iter().map(|(p, g)| handle.submit(p.clone(), *g)).collect();
+        let (ok, dropped) = collect(rxs);
+        let report = handle.shutdown_report();
+        assert!(plans[0].fired(point), "{label}: armed fault must fire");
+        assert_eq!(ok.len() as u64 + dropped, requests.len() as u64, "{label}: recv count");
+        assert_eq!(
+            report.aggregate.completed + report.aggregate.rejected,
+            requests.len() as u64,
+            "{label}: accounting must survive the kill"
+        );
+        let audits = take_reports(&log);
+        let faulted: Vec<_> = audits.iter().filter(|r| r.fault_fired).collect();
+        assert_eq!(faulted.len(), 1, "{label}: exactly one audit saw the injected death");
+        let dumps = take_dumps(&sink);
+        assert_eq!(dumps.len(), 1, "{label}: exactly one faulted worker, exactly one dump");
+        let dump = &dumps[0];
+        assert_eq!(dump.worker, faulted[0].worker, "{label}: dump and audit name the same worker");
+        let open = dump.open.as_ref().unwrap_or_else(|| {
+            panic!("{label}: a panic mid-phase must leave the faulted span open")
+        });
+        assert_eq!(open.phase, phase, "{label}: the open span is the injected phase");
+        assert!(open.detail > 0, "{label}: the faulted phase had jobs in flight");
+        assert!(
+            dump.events.iter().any(|e| e.iteration == open.iteration),
+            "{label}: the dump retains closed spans from the faulted iteration"
+        );
+        let trace = Json::parse(&dump.chrome_trace().to_string())
+            .unwrap_or_else(|e| panic!("{label}: chrome trace must be valid JSON: {e:#}"));
+        let events = trace.req("traceEvents").and_then(|t| t.as_arr()).unwrap_or_else(|e| {
+            panic!("{label}: chrome trace must carry a traceEvents array: {e:#}")
+        });
+        assert_eq!(
+            events.len(),
+            dump.events.len() + 1,
+            "{label}: one trace entry per ring event plus the open span"
+        );
+    }
+}
+
+/// Phase histograms stay mergeable through chaos: folding the killed
+/// and surviving workers' snapshots in any order produces byte-identical
+/// aggregate phase stats (serialized JSON compared, not just structural
+/// equality), and the pool's own aggregate equals that fold.
+#[test]
+fn phase_histograms_merge_order_independently_across_worker_death() {
+    let label = "phase-merge";
+    let spec = common::base_spec(0x9a9a, 4, 32, 16, 1);
+    let requests = common::request_set(0x4242, 16, 12);
+    let sched = SchedulerConfig::unchunked(AdmissionPolicy::Fifo);
+    let (handle, plans, _log, sink) =
+        chaos_pool_tele("cached", 4, 4, 64, sched, SessionOptions::default(), &spec);
+    plans[0].arm(FaultPoint::Decode, 2);
+    let rxs: Vec<_> = requests.iter().map(|(p, g)| handle.submit(p.clone(), *g)).collect();
+    let (_ok, _dropped) = collect(rxs);
+    let report = handle.shutdown_report();
+    assert!(plans[0].fired(FaultPoint::Decode), "{label}: armed fault must fire");
+    assert!(!take_dumps(&sink).is_empty(), "{label}: the killed worker must push a dump");
+    assert!(
+        !report.aggregate.phases.iteration_us.is_empty(),
+        "{label}: survivors keep feeding the phase histograms"
+    );
+    let mut forward = PhaseStats::default();
+    for w in &report.per_worker {
+        forward.merge(&w.phases);
+    }
+    let mut reverse = PhaseStats::default();
+    for w in report.per_worker.iter().rev() {
+        reverse.merge(&w.phases);
+    }
+    assert_eq!(forward, reverse, "{label}: phase merge must be order-independent");
+    assert_eq!(
+        forward.to_json().to_string(),
+        reverse.to_json().to_string(),
+        "{label}: merge order must produce byte-identical JSON"
+    );
+    assert_eq!(forward, report.aggregate.phases, "{label}: the aggregate is the per-worker fold");
 }

@@ -95,3 +95,16 @@ fn slot_cache_matches_model_on_fuzzed_schedules() {
         ],
     );
 }
+
+#[test]
+fn histogram_matches_sorted_oracle_on_fuzzed_streams() {
+    run(
+        "histogram",
+        fuzz::histogram_differential,
+        &[
+            include_bytes!("../fuzz/corpus/histogram/seed-merge").as_slice(),
+            include_bytes!("../fuzz/corpus/histogram/seed-extremes").as_slice(),
+            include_bytes!("../fuzz/corpus/histogram/seed-empty-stream").as_slice(),
+        ],
+    );
+}
