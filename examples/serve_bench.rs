@@ -37,12 +37,27 @@
 //! budget admission must not regress warm-resume TTFT nor demote warm
 //! hits.
 //!
+//! Front-door mode (`--frontdoor`): a production-shaped workload driven
+//! through the network front door's TCP wire protocol
+//! (`docs/PROTOCOL.md`) instead of in-process handles. Phase 1 serves
+//! Zipf-popular multi-turn sessions closed-loop (mixed short/medium/long
+//! prompt classes, gold/bronze tenants at the fair-queue's 3:1 weights,
+//! shed turns lose session affinity and cold-prefill) to measure the
+//! unloaded TTFT baseline; phase 2 replays a stateless open-loop burst
+//! train at 2x the measured unloaded throughput so admission shedding
+//! engages. The run persists `BENCH_frontdoor.json` (both phases'
+//! percentiles + per-tenant accounting) and prints a machine-checkable
+//! `PERF_GATE frontdoor_shed_graceful` line: p99 TTFT of *admitted*
+//! requests under 2x overload must stay within 1.5x of the unloaded p99
+//! (plus a 10ms jitter floor) — overload must shed, not queue-collapse.
+//!
 //! Run: `cargo run --release --example serve_bench -- \
 //!       [requests] [gen_tokens] [--engine host|cached|speculative|fp|lut] \
 //!       [--admission fifo|spf|token_budget] [--prefill-chunk N] \
 //!       [--draft-k N] [--draft narrow|oracle] \
 //!       [--turns N] [--resume-rate R] [--retained-slots N] [--workers N] \
-//!       [--compare-admission] [--telemetry-json PATH] [--validate-json PATH]`
+//!       [--compare-admission] [--frontdoor] \
+//!       [--telemetry-json PATH] [--validate-json PATH]`
 //! Without `--engine`, sweeps host and cached across worker counts, then
 //! the speculative engine across draft kinds.
 //!
@@ -53,11 +68,16 @@
 //! `BENCH_serving.json`.
 
 use lcd::config::LcdConfig;
+use lcd::coordinator::frontdoor::{
+    decode_server, encode_client, read_frame, write_frame, MAX_FRAME,
+};
 use lcd::coordinator::server;
-use lcd::coordinator::{CachedLutEngine, HostLutSpec, SessionStore};
+use lcd::coordinator::{
+    CachedLutEngine, ClientFrame, FrontDoor, HostLutSpec, ServerFrame, SessionStore, WireRequest,
+};
 use lcd::data::{eval_lm_batches, CharTokenizer, CorpusSpec, SyntheticCorpus};
 use lcd::repro::shared::build_step_engine;
-use lcd::util::Rng;
+use lcd::util::{Json, Rng, ZipfTable};
 
 /// Drive one engine/worker configuration; fails loudly when the serving
 /// path is broken (a 0-ok run must not look green in CI) and returns the
@@ -220,6 +240,294 @@ fn drive_sessions(
     Ok(report.aggregate)
 }
 
+/// Sorted-vector percentile (nearest-rank on the sorted samples); the
+/// client-side view of TTFT, independent of the server's histograms.
+fn percentile_us(samples: &mut Vec<u64>, q: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    samples.sort_unstable();
+    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+    samples[idx.min(samples.len() - 1)]
+}
+
+/// What one wire-level request came back as.
+enum WireOutcome {
+    Done { tokens: Vec<i32>, ttft_us: u64 },
+    Shed,
+    Cancelled,
+}
+
+/// Read server frames until the terminal frame for `id` arrives.
+/// Closed-loop phases have exactly one request in flight, so every frame
+/// on the stream belongs to `id`.
+fn read_outcome(stream: &mut std::net::TcpStream, id: u64) -> anyhow::Result<WireOutcome> {
+    let mut tokens = Vec::new();
+    loop {
+        let payload = read_frame(stream, MAX_FRAME)?
+            .ok_or_else(|| anyhow::anyhow!("server closed mid-request {id}"))?;
+        match decode_server(&payload)? {
+            ServerFrame::Tokens { id: fid, tokens: t } if fid == id => tokens.extend_from_slice(&t),
+            ServerFrame::Done { id: fid, ttft_us, .. } if fid == id => {
+                return Ok(WireOutcome::Done { tokens, ttft_us })
+            }
+            ServerFrame::Overloaded { id: fid, .. } if fid == id => return Ok(WireOutcome::Shed),
+            ServerFrame::Cancelled { id: fid, .. } if fid == id => return Ok(WireOutcome::Cancelled),
+            other => anyhow::bail!("frame for an unexpected request: {other:?}"),
+        }
+    }
+}
+
+/// Production-shaped workload through the TCP front door.
+///
+/// Phase 1 (unloaded baseline): Zipf-popular sessions served closed-loop
+/// — one request in flight — so its TTFT distribution is the queueing-
+/// free reference. Phase 2 (overload): stateless open-loop arrivals in
+/// bursts at 2x the throughput phase 1 measured, so the admission queue
+/// saturates and shedding engages. The `frontdoor_shed_graceful` gate
+/// holds the admitted-work p99 TTFT under overload to 1.5x the unloaded
+/// p99 (+10ms CI-jitter floor): shedding must keep latency flat instead
+/// of letting the queue absorb (and collapse under) the excess.
+fn drive_frontdoor(
+    cfg: &LcdConfig,
+    engine: &str,
+    n_sessions: usize,
+    gen_tokens: usize,
+) -> anyhow::Result<()> {
+    let sched = cfg.serve.scheduler_config().expect("scheduler config validated on load");
+    let cfg2 = cfg.clone();
+    let engine_name = engine.to_string();
+    // Small admission + pool queues on purpose: the overload phase must
+    // actually overflow them, and graceful shedding is exactly the
+    // behaviour under test.
+    let handle = server::start_pool_tele(
+        cfg.serve.workers,
+        cfg.serve.max_batch,
+        8,
+        sched,
+        cfg.serve.session_options(),
+        cfg.serve.telemetry_config(),
+        move |_worker| build_step_engine(&cfg2, &engine_name),
+    );
+    let mut door_cfg = cfg.serve.frontdoor_config()?;
+    if door_cfg.tenant_weights.is_empty() {
+        door_cfg.tenant_weights = vec![("gold".to_string(), 3), ("bronze".to_string(), 1)];
+    }
+    door_cfg.shed_queue = 8;
+    let door = FrontDoor::start(handle, door_cfg)?;
+    let addr = door.addr();
+
+    let tok = CharTokenizer::new();
+    // Mixed prompt-length classes, as production traffic has: chats,
+    // paragraphs, and documents.
+    let classes = [
+        "hi ",
+        "the cat sat on the mat and then the bird moved over the river ",
+        "every lamp in the long hall glows while two plus three is five and \
+         the river runs past the quiet mill toward the sea again and again \
+         because the story repeats itself for as long as anyone listens ",
+    ];
+    let tenant_of = |idx: usize| if idx % 4 == 3 { "bronze" } else { "gold" };
+    let mut rng = Rng::new(cfg.seed ^ 0xf207);
+    let mut next_id = 0u64;
+
+    // Phase 1: closed-loop Zipf session turns. Popular sessions speak
+    // more often (rank-skewed s=1.1), a turn that gets shed loses
+    // session affinity — its next turn arrives without resume info and
+    // cold-prefills the whole history, like a real client bounced to a
+    // different replica.
+    let mut store = SessionStore::new();
+    let sessions: Vec<_> = (0..n_sessions.max(1)).map(|_| store.open()).collect();
+    let zipf = ZipfTable::new(sessions.len(), 1.1);
+    let mut shed_last = vec![false; sessions.len()];
+    let total_turns = sessions.len() * 3;
+    let mut unloaded_ttft = Vec::new();
+    let mut unloaded_shed = 0u64;
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    let t1 = std::time::Instant::now();
+    for _ in 0..total_turns {
+        let s = zipf.sample(&mut rng);
+        let sid = sessions[s];
+        let user = tok.encode(classes[s % classes.len()]);
+        let mut turn = store.turn(sid, &user)?;
+        if shed_last[s] {
+            turn.resume = None; // affinity lost with the shed turn's slot
+            shed_last[s] = false;
+        }
+        next_id += 1;
+        let wire = WireRequest {
+            id: next_id,
+            session: sid.0,
+            priority: (s % 4) as u8,
+            deadline_ms: 0,
+            gen_tokens: gen_tokens as u32,
+            resume: turn.resume,
+            tenant: tenant_of(s).to_string(),
+            prompt: turn.prompt,
+        };
+        write_frame(&mut stream, &encode_client(&ClientFrame::Request(wire)))?;
+        match read_outcome(&mut stream, next_id)? {
+            WireOutcome::Done { tokens, ttft_us } => {
+                unloaded_ttft.push(ttft_us);
+                store.record(sid, &tokens)?;
+            }
+            WireOutcome::Shed => {
+                unloaded_shed += 1;
+                shed_last[s] = true;
+            }
+            WireOutcome::Cancelled => anyhow::bail!("unloaded phase cancelled a request"),
+        }
+    }
+    let wall1 = t1.elapsed().as_secs_f64();
+    let completed1 = unloaded_ttft.len();
+    anyhow::ensure!(completed1 > 0, "unloaded phase completed 0/{total_turns} turns");
+    let rate1 = completed1 as f64 / wall1.max(1e-9);
+    let un_p50 = percentile_us(&mut unloaded_ttft, 0.50);
+    let un_p99 = percentile_us(&mut unloaded_ttft, 0.99);
+    println!(
+        "frontdoor unloaded: {completed1}/{total_turns} turns, {unloaded_shed} shed, \
+         {rate1:.1} req/s, ttft p50 {un_p50}us p99 {un_p99}us"
+    );
+
+    // Phase 2: open-loop burst train at 2x the unloaded rate. A writer
+    // pushes bursts on schedule regardless of completions (that is what
+    // open-loop means) while this thread drains terminals; pipelining on
+    // one connection keeps frame order deterministic per request id.
+    let n2 = total_turns.max(32);
+    let first_id = next_id + 1;
+    let gap_us = (1e6 / (2.0 * rate1)) as u64;
+    let mut writer = stream.try_clone()?;
+    let write_rng_seed = cfg.seed ^ 0x0be5;
+    let writer_thread = std::thread::spawn(move || -> anyhow::Result<()> {
+        let mut rng = Rng::new(write_rng_seed);
+        let tok = CharTokenizer::new();
+        let mut sent = 0usize;
+        while sent < n2 {
+            let burst = (1 + rng.below(4)).min(n2 - sent);
+            for b in 0..burst {
+                let i = sent + b;
+                let wire = WireRequest {
+                    id: first_id + i as u64,
+                    session: 0,
+                    priority: (i % 4) as u8,
+                    deadline_ms: 0,
+                    gen_tokens: gen_tokens as u32,
+                    resume: None,
+                    tenant: tenant_of(i).to_string(),
+                    prompt: tok.encode(classes[i % classes.len()]),
+                };
+                write_frame(&mut writer, &encode_client(&ClientFrame::Request(wire)))?;
+            }
+            sent += burst;
+            std::thread::sleep(std::time::Duration::from_micros(
+                (burst as u64 * gap_us).min(100_000),
+            ));
+        }
+        Ok(())
+    });
+    let mut overload_ttft = Vec::new();
+    let mut overload_shed = 0u64;
+    let t2 = std::time::Instant::now();
+    // Token frames interleave with terminals on the shared stream, so
+    // drain until all n2 requests have concluded one way or the other.
+    let mut terminals = 0u64;
+    while terminals < n2 as u64 {
+        let payload = read_frame(&mut stream, MAX_FRAME)?
+            .ok_or_else(|| anyhow::anyhow!("server closed mid-overload"))?;
+        match decode_server(&payload)? {
+            ServerFrame::Tokens { .. } => {}
+            ServerFrame::Done { ttft_us, .. } => {
+                overload_ttft.push(ttft_us);
+                terminals += 1;
+            }
+            ServerFrame::Overloaded { .. } => {
+                overload_shed += 1;
+                terminals += 1;
+            }
+            ServerFrame::Cancelled { .. } => anyhow::bail!("overload phase cancelled a request"),
+        }
+    }
+    writer_thread.join().expect("writer thread")?;
+    let wall2 = t2.elapsed().as_secs_f64();
+    let completed2 = overload_ttft.len();
+    let over_p50 = percentile_us(&mut overload_ttft, 0.50);
+    let over_p99 = percentile_us(&mut overload_ttft, 0.99);
+    let shed_rate = overload_shed as f64 / n2 as f64;
+    println!(
+        "frontdoor 2x overload: {completed2}/{n2} done, {overload_shed} shed \
+         ({:.0}% shed rate), {:.1} req/s admitted, ttft p50 {over_p50}us p99 {over_p99}us",
+        shed_rate * 100.0,
+        completed2 as f64 / wall2.max(1e-9),
+    );
+    drop(stream);
+    let report = door.shutdown();
+
+    // The gate: admitted work must not pay for the shed work. The 1.5x
+    // ratio bounds queueing inflation; the 10ms floor absorbs scheduler
+    // jitter on runs whose absolute TTFTs are microseconds.
+    let limit = 1.5;
+    let ok = completed2 > 0 && over_p99 <= un_p99 * 3 / 2 + 10_000;
+    println!(
+        "PERF_GATE frontdoor_shed_graceful p99 {over_p99}us vs unloaded {un_p99}us \
+         limit {limit:.2}x+10ms shed {overload_shed}/{n2} {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+
+    let phase_json = |reqs: usize, done: usize, shed: u64, p50: u64, p99: u64, wall: f64| {
+        Json::obj(vec![
+            ("requests", Json::int(reqs)),
+            ("completed", Json::int(done)),
+            ("shed", Json::int(shed as usize)),
+            ("p50_ttft_us", Json::int(p50 as usize)),
+            ("p99_ttft_us", Json::int(p99 as usize)),
+            ("throughput_rps", Json::num(done as f64 / wall.max(1e-9))),
+            ("wall_s", Json::num(wall)),
+        ])
+    };
+    let tenants: Vec<Json> = report
+        .tenants
+        .iter()
+        .map(|(name, t)| {
+            let mut fields = t.to_json();
+            if let Json::Obj(ref mut kv) = fields {
+                kv.insert(0, ("tenant".to_string(), Json::str(name.clone())));
+            }
+            fields
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("frontdoor")),
+        ("engine", Json::str(engine)),
+        (
+            "gates",
+            Json::arr(vec![Json::obj(vec![
+                ("name", Json::str("frontdoor_shed_graceful")),
+                ("ratio", Json::num(over_p99 as f64 / (un_p99.max(1)) as f64)),
+                ("limit", Json::num(limit)),
+                ("pass", Json::Bool(ok)),
+            ])]),
+        ),
+        (
+            "phases",
+            Json::obj(vec![
+                ("unloaded", phase_json(total_turns, completed1, unloaded_shed, un_p50, un_p99, wall1)),
+                ("overload", phase_json(n2, completed2, overload_shed, over_p50, over_p99, wall2)),
+            ]),
+        ),
+        ("tenants", Json::arr(tenants)),
+    ]);
+    std::fs::write("BENCH_frontdoor.json", doc.to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("writing BENCH_frontdoor.json: {e}"))?;
+    println!("front-door trajectory written to BENCH_frontdoor.json");
+    anyhow::ensure!(
+        report.pool.aggregate.completed as usize == completed1 + completed2,
+        "socket-side and pool-side completion counts diverged: {} vs {}",
+        report.pool.aggregate.completed,
+        completed1 + completed2
+    );
+    Ok(())
+}
+
 /// Write the aggregate snapshot's JSON exposition (counters + phase
 /// latency histograms) when `--telemetry-json` was given.
 fn write_telemetry(
@@ -241,6 +549,7 @@ fn main() -> anyhow::Result<()> {
     let mut turns = 1usize;
     let mut resume_rate = 1.0f64;
     let mut compare_admission = false;
+    let mut frontdoor = false;
     let mut telemetry_json: Option<String> = None;
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -299,6 +608,7 @@ fn main() -> anyhow::Result<()> {
                 cfg.set_override(&format!("serve.prefill_chunk={v}"))?;
             }
             "--compare-admission" => compare_admission = true,
+            "--frontdoor" => frontdoor = true,
             "--telemetry-json" => {
                 i += 1;
                 telemetry_json = Some(
@@ -347,7 +657,8 @@ fn main() -> anyhow::Result<()> {
                      [--admission fifo|spf|token_budget] [--prefill-chunk N] \
                      [--draft-k N] [--draft narrow|oracle] \
                      [--turns N] [--resume-rate R] [--retained-slots N] [--workers N] \
-                     [--compare-admission] [--telemetry-json PATH] [--validate-json PATH]"
+                     [--compare-admission] [--frontdoor] \
+                     [--telemetry-json PATH] [--validate-json PATH]"
                 );
             }
             other => positional.push(other.parse()?),
@@ -362,6 +673,10 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         !compare_admission || turns > 1,
         "--compare-admission needs a session workload: pass --turns N with N > 1"
+    );
+    anyhow::ensure!(
+        !frontdoor || turns == 1,
+        "--frontdoor drives its own session schedule; drop --turns"
     );
 
     // Quality gate before timing anything: perplexity measured *through*
@@ -388,6 +703,17 @@ fn main() -> anyhow::Result<()> {
         cfg.serve.admission
     );
     drop(probe);
+
+    // Wire-protocol workload: Zipf sessions + 2x-overload burst train
+    // through the TCP front door (the CI frontdoor-smoke path).
+    if frontdoor {
+        return drive_frontdoor(
+            &cfg,
+            engine.as_deref().unwrap_or("cached"),
+            n_requests,
+            gen_tokens,
+        );
+    }
 
     // Multi-turn session workload (the CI warm-resume smoke path runs
     // `--engine cached --turns 3`): positional [requests] counts

@@ -109,6 +109,20 @@ pub struct ServeConfig {
     /// Flight-recorder ring capacity in span events per worker (>= 1;
     /// old events are dropped, counted in the dump).
     pub flight_recorder: usize,
+    /// Front-door listen address (`host:port`; port `0` = OS-assigned).
+    /// Empty = the front door is off; `lcd serve --listen ADDR` turns it
+    /// on. See `docs/PROTOCOL.md` for the wire format.
+    pub listen: String,
+    /// Per-tenant fairness weights as `name:weight` pairs separated by
+    /// commas (e.g. `"gold:3,bronze:1"`). Weights are positive integers;
+    /// unlisted tenants get weight 1. Validated at load time.
+    pub tenant_weights: String,
+    /// Default request deadline in milliseconds applied when a request
+    /// frame carries `deadline_ms = 0` (0 here too = no deadline).
+    pub deadline_ms: u64,
+    /// Admission-queue depth at which the front door sheds new requests
+    /// with `Overloaded` straight from the socket reader (>= 1).
+    pub shed_queue: usize,
 }
 
 impl Default for ServeConfig {
@@ -135,6 +149,10 @@ impl Default for ServeConfig {
             retain_ttl_iters: 0,
             telemetry_sample: 1,
             flight_recorder: 256,
+            listen: String::new(),
+            tenant_weights: String::new(),
+            deadline_ms: 0,
+            shed_queue: 64,
         }
     }
 }
@@ -168,6 +186,26 @@ impl ServeConfig {
             recorder_capacity: self.flight_recorder,
             sink: None,
         }
+    }
+
+    /// Front-door knobs (listen address, tenant weights, deadline,
+    /// shedding threshold) for [`crate::coordinator::FrontDoor::start`].
+    /// An empty `listen` falls back to an OS-assigned loopback port.
+    pub fn frontdoor_config(&self) -> Result<crate::coordinator::FrontDoorConfig> {
+        let listen = if self.listen.is_empty() {
+            "127.0.0.1:0".to_string()
+        } else {
+            self.listen.clone()
+        };
+        Ok(crate::coordinator::FrontDoorConfig {
+            listen,
+            tenant_weights: crate::coordinator::frontdoor::parse_tenant_weights(
+                &self.tenant_weights,
+            )?,
+            deadline_ms: self.deadline_ms,
+            shed_queue: self.shed_queue,
+            stream_chunk: 32,
+        })
     }
 }
 
@@ -328,6 +366,18 @@ impl LcdConfig {
             if let Some(v) = s.get("flight_recorder") {
                 cfg.serve.flight_recorder = v.as_usize()?;
             }
+            if let Some(v) = s.get("listen") {
+                cfg.serve.listen = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("tenant_weights") {
+                cfg.serve.tenant_weights = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("deadline_ms") {
+                cfg.serve.deadline_ms = v.as_f64()? as u64;
+            }
+            if let Some(v) = s.get("shed_queue") {
+                cfg.serve.shed_queue = v.as_usize()?;
+            }
         }
         // Fail on bad serving knobs at load time, not at serve time.
         cfg.serve.admission_policy()?;
@@ -371,6 +421,15 @@ impl LcdConfig {
             bail!("serve.flight_recorder must be >= 1 (use telemetry_sample = 0 to disable)");
         }
         validate_draft_knobs(&cfg.serve)?;
+        // Shedding at depth zero would reject every request before the
+        // dispatcher ever ran; "no front door" is spelled by leaving
+        // `serve.listen` empty, not by closing admission entirely.
+        if cfg.serve.shed_queue == 0 {
+            bail!("serve.shed_queue must be >= 1 (shed admission, don't close it)");
+        }
+        // Fail on malformed tenant weights at load time, not at the
+        // first socket accept.
+        crate::coordinator::frontdoor::parse_tenant_weights(&cfg.serve.tenant_weights)?;
         Ok(cfg)
     }
 
@@ -520,6 +579,21 @@ impl LcdConfig {
             "serve.vocab" => self.serve.vocab = value.parse()?,
             "serve.hidden" => self.serve.hidden = value.parse()?,
             "serve.depth" => self.serve.depth = value.parse()?,
+            "serve.listen" => self.serve.listen = value.to_string(),
+            "serve.tenant_weights" => {
+                // Validate before assigning so a bad override leaves the
+                // config untouched.
+                crate::coordinator::frontdoor::parse_tenant_weights(value)?;
+                self.serve.tenant_weights = value.to_string();
+            }
+            "serve.deadline_ms" => self.serve.deadline_ms = value.parse()?,
+            "serve.shed_queue" => {
+                let v: usize = value.parse()?;
+                if v == 0 {
+                    bail!("serve.shed_queue must be >= 1 (shed admission, don't close it)");
+                }
+                self.serve.shed_queue = v;
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -848,6 +922,56 @@ mod tests {
         assert!(cfg.set_override("serve.seq=1").is_err());
         assert!(cfg.set_override("nope=1").is_err());
         assert!(cfg.set_override("garbage").is_err());
+    }
+
+    #[test]
+    fn frontdoor_knobs_parse_validate_and_reach_the_typed_config() {
+        let doc = Json::parse(
+            r#"{"serve": {"listen": "0.0.0.0:7070",
+                "tenant_weights": "gold:3,bronze:1",
+                "deadline_ms": 250, "shed_queue": 8}}"#,
+        )
+        .unwrap();
+        let cfg = LcdConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serve.listen, "0.0.0.0:7070");
+        assert_eq!(cfg.serve.deadline_ms, 250);
+        assert_eq!(cfg.serve.shed_queue, 8);
+        let fd = cfg.serve.frontdoor_config().unwrap();
+        assert_eq!(fd.listen, "0.0.0.0:7070");
+        assert_eq!(
+            fd.tenant_weights,
+            vec![("gold".to_string(), 3), ("bronze".to_string(), 1)]
+        );
+        assert_eq!((fd.deadline_ms, fd.shed_queue), (250, 8));
+        // Defaults: front door off (empty listen), which the typed
+        // config maps to an OS-assigned loopback port; weight 1 for
+        // everyone; no deadline; shed at 64.
+        let d = LcdConfig::default();
+        assert_eq!(d.serve.listen, "");
+        let fd = d.serve.frontdoor_config().unwrap();
+        assert_eq!(fd.listen, "127.0.0.1:0");
+        assert!(fd.tenant_weights.is_empty());
+        assert_eq!((fd.deadline_ms, fd.shed_queue), (0, 64));
+        // Load-time rejections.
+        let bad = |s: &str| LcdConfig::from_json(&Json::parse(s).unwrap()).is_err();
+        assert!(bad(r#"{"serve": {"shed_queue": 0}}"#));
+        assert!(bad(r#"{"serve": {"tenant_weights": "gold:0"}}"#), "zero weight");
+        assert!(bad(r#"{"serve": {"tenant_weights": "gold:x"}}"#), "non-integer weight");
+        assert!(bad(r#"{"serve": {"tenant_weights": "gold:1,gold:2"}}"#), "duplicate");
+        // Overrides mirror the load-time checks and stay atomic.
+        let mut cfg = LcdConfig::default();
+        cfg.set_override("serve.listen=127.0.0.1:9000").unwrap();
+        assert_eq!(cfg.serve.listen, "127.0.0.1:9000");
+        cfg.set_override("serve.tenant_weights=acme:2").unwrap();
+        assert_eq!(cfg.serve.tenant_weights, "acme:2");
+        assert!(cfg.set_override("serve.tenant_weights=:3").is_err());
+        assert_eq!(cfg.serve.tenant_weights, "acme:2", "failed override leaves config untouched");
+        cfg.set_override("serve.deadline_ms=100").unwrap();
+        assert_eq!(cfg.serve.deadline_ms, 100);
+        assert!(cfg.set_override("serve.shed_queue=0").is_err());
+        assert_eq!(cfg.serve.shed_queue, 64);
+        cfg.set_override("serve.shed_queue=2").unwrap();
+        assert_eq!(cfg.serve.shed_queue, 2);
     }
 
     #[test]

@@ -384,6 +384,27 @@ impl Batcher {
     pub fn take_done(&mut self) -> Vec<Session> {
         self.take_done_slots().into_iter().map(|(_, s)| s).collect()
     }
+
+    /// Remove a not-yet-admitted request from the pending queue
+    /// (cancellation before a slot was assigned). Dropping the returned
+    /// request disconnects its reply sender.
+    pub fn remove_pending(&mut self, id: u64) -> Option<GenRequest> {
+        let idx = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(idx)
+    }
+
+    /// Tear a live session out of its slot mid-generation (cancellation
+    /// or deadline expiry): the slot re-opens to admission and the
+    /// caller MUST poison-clear the engine state (`free_slot`) — the
+    /// same contract as lease eviction. Returns the freed slot index
+    /// and the session for accounting.
+    pub fn take_slot_of(&mut self, id: u64) -> Option<(usize, Session)> {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().map(|sess| sess.request.id == id).unwrap_or(false))?;
+        Some((slot, self.slots[slot].take().expect("position returned an occupied slot")))
+    }
 }
 
 #[cfg(test)]
@@ -694,5 +715,34 @@ mod tests {
         let freed: Vec<usize> = done.iter().map(|(slot, _)| *slot).collect();
         assert_eq!(freed, vec![0, 2], "slot 1 still generating");
         assert_eq!(b.active(), 1);
+    }
+
+    #[test]
+    fn cancellation_removes_pending_and_live_sessions() {
+        let mut b = Batcher::new(2, 8);
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(i, 2, 5);
+            assert!(b.submit(r));
+            rxs.push(rx);
+        }
+        assert_eq!(b.fill_slots(16), vec![0, 1], "two slots admit ids 0 and 1");
+        // Id 3 is still pending; id 1 is live in slot 1; id 9 is unknown.
+        let dropped = b.remove_pending(3).expect("pending request removed");
+        assert_eq!(dropped.id, 3);
+        assert!(b.remove_pending(3).is_none(), "double-remove finds nothing");
+        assert!(b.remove_pending(1).is_none(), "live sessions are not pending");
+        let (slot, sess) = b.take_slot_of(1).expect("live session torn out");
+        assert_eq!((slot, sess.request.id), (1, 1));
+        assert!(b.take_slot_of(9).is_none());
+        assert_eq!((b.active(), b.pending()), (1, 1), "id 0 live, id 2 pending");
+        drop(dropped);
+        drop(sess);
+        // Dropping the cancelled request/session disconnects receivers.
+        use std::sync::mpsc::TryRecvError::Disconnected;
+        assert!(matches!(rxs[3].try_recv(), Err(Disconnected)));
+        assert!(matches!(rxs[1].try_recv(), Err(Disconnected)));
+        // The freed slot is reusable immediately.
+        assert_eq!(b.fill_slots(16), vec![1], "pending id 2 takes the freed slot");
     }
 }

@@ -1,0 +1,1388 @@
+//! Network front door: the socket serving API in front of the worker
+//! pool.
+//!
+//! Three layers, each usable on its own:
+//!
+//! * **Wire codec** — a hand-rolled length-prefixed binary protocol
+//!   over `std::net` (no external deps), normatively specified in
+//!   `docs/PROTOCOL.md`. The encoding is canonical: every valid payload
+//!   is a fixed point of `encode ∘ decode`, which the
+//!   `lcd::fuzz::frame_roundtrip` driver checks on arbitrary bytes.
+//! * **[`FairQueue`]** — deterministic admission ordering: strict
+//!   priority tiers, and within a tier per-tenant stride scheduling
+//!   weighted by `serve.tenant_weights` (cost = `1 + gen_tokens`), with
+//!   lexicographic tie-breaks so two runs of the same arrival sequence
+//!   dequeue identically.
+//! * **[`FrontDoor`]** — the runtime: an accept thread, one polling
+//!   reader per connection, and a single dispatcher thread that owns
+//!   the [`ServerHandle`] (it holds a `Receiver` and is not `Sync`).
+//!   Load-shedding happens at the socket: when the admission queue is
+//!   at `shed_queue`, the *reader* answers `Overloaded` directly and
+//!   the dispatcher, fair queue, and pool never see the request.
+//!
+//! Cancellation (client `Cancel` frames, deadline expiry, disconnect)
+//! reuses the pool's drain accounting: a request torn down anywhere —
+//! fair queue, pool queue, or mid-`IterationPlan` in a slot — counts as
+//! `rejected` (plus the `cancelled` observability counter), so
+//! `completed + rejected == submitted` holds exactly, and freed slots
+//! are poison-cleared exactly like chaos-drain eviction.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::request::Metrics;
+use super::server::{ServerHandle, ServerReport};
+use super::session::{ResumeTurn, SessionId, TurnRequest};
+use crate::telemetry::Histogram;
+use crate::util::Json;
+
+/// Wire protocol version this build speaks (`docs/PROTOCOL.md`).
+pub const PROTOCOL_VERSION: u8 = 0x01;
+/// Maximum frame payload in bytes (1 MiB); larger lengths drop the
+/// connection before the payload is read.
+pub const MAX_FRAME: usize = 1 << 20;
+/// Maximum tenant-name length in bytes.
+pub const MAX_TENANT_BYTES: usize = 64;
+/// Maximum prompt / append / per-frame token count.
+pub const MAX_PROMPT_TOKENS: usize = 65_536;
+/// Maximum `gen_tokens` in a request.
+pub const MAX_GEN_TOKENS: u32 = 1 << 20;
+/// Number of priority tiers; wire priorities clamp to `0..PRIORITY_TIERS`.
+pub const PRIORITY_TIERS: u8 = 4;
+
+const TYPE_REQUEST: u8 = 0x01;
+const TYPE_CANCEL: u8 = 0x02;
+const TYPE_TOKENS: u8 = 0x81;
+const TYPE_DONE: u8 = 0x82;
+const TYPE_OVERLOADED: u8 = 0x83;
+const TYPE_CANCELLED: u8 = 0x84;
+
+/// A decoded `Request` frame (client → server).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    /// Client-chosen id, unique per connection.
+    pub id: u64,
+    /// Session id; 0 = stateless one-shot.
+    pub session: u64,
+    /// Priority tier as sent; the server clamps to `PRIORITY_TIERS - 1`
+    /// at admission (the codec preserves the byte for canonicality).
+    pub priority: u8,
+    /// Relative deadline in ms from server receipt; 0 = server default.
+    pub deadline_ms: u32,
+    /// Tokens to generate.
+    pub gen_tokens: u32,
+    /// Warm-resume info; `None` cold-prefills `prompt`.
+    pub resume: Option<ResumeTurn>,
+    /// Tenant name; empty maps to `"default"` at admission.
+    pub tenant: String,
+    /// Full-history prompt.
+    pub prompt: Vec<i32>,
+}
+
+/// Client → server frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientFrame {
+    /// Submit a generation request.
+    Request(WireRequest),
+    /// Best-effort cancel of a previously sent request id.
+    Cancel {
+        /// The request id to cancel.
+        id: u64,
+    },
+}
+
+/// Server → client frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerFrame {
+    /// A chunk of generated tokens.
+    Tokens {
+        /// Request id the tokens belong to.
+        id: u64,
+        /// Generated tokens, in order.
+        tokens: Vec<i32>,
+    },
+    /// Terminal: the request completed. Times are µs from server
+    /// receipt of the request frame (fair-queue wait included).
+    Done {
+        /// Request id.
+        id: u64,
+        /// Time to first token.
+        ttft_us: u64,
+        /// Total latency.
+        latency_us: u64,
+    },
+    /// Terminal: shed at admission (or pool backpressure); no model
+    /// work was done.
+    Overloaded {
+        /// Request id.
+        id: u64,
+        /// Admission queue depth observed when shedding.
+        queue_depth: u32,
+    },
+    /// Terminal: torn down by client cancel or deadline expiry.
+    Cancelled {
+        /// Request id.
+        id: u64,
+        /// True when the deadline expired; false for client cancel.
+        deadline: bool,
+    },
+}
+
+/// Bounds-checked big-endian reader over a payload slice. Every token
+/// count is validated against the remaining bytes *before* allocating,
+/// so hostile length fields cannot force oversized allocations.
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(data: &'a [u8]) -> Cursor<'a> {
+        Cursor { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.data.len() - self.pos < n {
+            bail!("truncated frame: needed {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().expect("take returned 2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().expect("take returned 4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().expect("take returned 8 bytes")))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_be_bytes(self.take(4)?.try_into().expect("take returned 4 bytes")))
+    }
+
+    fn tokens(&mut self, n: usize, what: &str) -> Result<Vec<i32>> {
+        if n > MAX_PROMPT_TOKENS {
+            bail!("{what} count {n} exceeds {MAX_PROMPT_TOKENS}");
+        }
+        // Length-vs-remaining check (inside `take`) happens before the
+        // allocation can grow past the actual payload size.
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_be_bytes(c.try_into().expect("chunk of 4"))).collect())
+    }
+
+    /// Trailing bytes after the body are a protocol error — this is
+    /// what makes the encoding canonical.
+    fn finish(self) -> Result<()> {
+        if self.pos != self.data.len() {
+            bail!("{} trailing bytes after frame body", self.data.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn header(cur: &mut Cursor) -> Result<u8> {
+    let version = cur.u8()?;
+    if version != PROTOCOL_VERSION {
+        bail!("unsupported protocol version {version:#04x}");
+    }
+    cur.u8()
+}
+
+/// Decode a client → server payload (no length prefix).
+pub fn decode_client(payload: &[u8]) -> Result<ClientFrame> {
+    let mut cur = Cursor::new(payload);
+    let ty = header(&mut cur)?;
+    let frame = match ty {
+        TYPE_REQUEST => {
+            let id = cur.u64()?;
+            let session = cur.u64()?;
+            let priority = cur.u8()?;
+            let deadline_ms = cur.u32()?;
+            let gen_tokens = cur.u32()?;
+            if gen_tokens > MAX_GEN_TOKENS {
+                bail!("gen_tokens {gen_tokens} exceeds {MAX_GEN_TOKENS}");
+            }
+            let resume = match cur.u8()? {
+                0 => None,
+                1 => {
+                    if session == 0 {
+                        bail!("resume flag set on a stateless request");
+                    }
+                    let pending = cur.i32()?;
+                    let n = cur.u32()? as usize;
+                    Some(ResumeTurn { pending, append: cur.tokens(n, "append")? })
+                }
+                f => bail!("invalid resume flag {f:#04x}"),
+            };
+            let tlen = cur.u16()? as usize;
+            if tlen > MAX_TENANT_BYTES {
+                bail!("tenant name of {tlen} bytes exceeds {MAX_TENANT_BYTES}");
+            }
+            let tenant = std::str::from_utf8(cur.take(tlen)?)
+                .context("tenant name is not UTF-8")?
+                .to_string();
+            let n = cur.u32()? as usize;
+            let prompt = cur.tokens(n, "prompt")?;
+            ClientFrame::Request(WireRequest {
+                id,
+                session,
+                priority,
+                deadline_ms,
+                gen_tokens,
+                resume,
+                tenant,
+                prompt,
+            })
+        }
+        TYPE_CANCEL => ClientFrame::Cancel { id: cur.u64()? },
+        t => bail!("unknown client frame type {t:#04x}"),
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+/// Decode a server → client payload (no length prefix).
+pub fn decode_server(payload: &[u8]) -> Result<ServerFrame> {
+    let mut cur = Cursor::new(payload);
+    let ty = header(&mut cur)?;
+    let frame = match ty {
+        TYPE_TOKENS => {
+            let id = cur.u64()?;
+            let n = cur.u32()? as usize;
+            ServerFrame::Tokens { id, tokens: cur.tokens(n, "tokens")? }
+        }
+        TYPE_DONE => {
+            ServerFrame::Done { id: cur.u64()?, ttft_us: cur.u64()?, latency_us: cur.u64()? }
+        }
+        TYPE_OVERLOADED => ServerFrame::Overloaded { id: cur.u64()?, queue_depth: cur.u32()? },
+        TYPE_CANCELLED => {
+            let id = cur.u64()?;
+            let deadline = match cur.u8()? {
+                0 => false,
+                1 => true,
+                r => bail!("invalid cancel reason {r:#04x}"),
+            };
+            ServerFrame::Cancelled { id, deadline }
+        }
+        t => bail!("unknown server frame type {t:#04x}"),
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+/// Encode a client → server frame into a payload (no length prefix).
+pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
+    let mut out = vec![PROTOCOL_VERSION];
+    match frame {
+        ClientFrame::Request(r) => {
+            out.push(TYPE_REQUEST);
+            out.extend_from_slice(&r.id.to_be_bytes());
+            out.extend_from_slice(&r.session.to_be_bytes());
+            out.push(r.priority);
+            out.extend_from_slice(&r.deadline_ms.to_be_bytes());
+            out.extend_from_slice(&r.gen_tokens.to_be_bytes());
+            match &r.resume {
+                None => out.push(0),
+                Some(res) => {
+                    out.push(1);
+                    out.extend_from_slice(&res.pending.to_be_bytes());
+                    out.extend_from_slice(&(res.append.len() as u32).to_be_bytes());
+                    for t in &res.append {
+                        out.extend_from_slice(&t.to_be_bytes());
+                    }
+                }
+            }
+            out.extend_from_slice(&(r.tenant.len() as u16).to_be_bytes());
+            out.extend_from_slice(r.tenant.as_bytes());
+            out.extend_from_slice(&(r.prompt.len() as u32).to_be_bytes());
+            for t in &r.prompt {
+                out.extend_from_slice(&t.to_be_bytes());
+            }
+        }
+        ClientFrame::Cancel { id } => {
+            out.push(TYPE_CANCEL);
+            out.extend_from_slice(&id.to_be_bytes());
+        }
+    }
+    out
+}
+
+/// Encode a server → client frame into a payload (no length prefix).
+pub fn encode_server(frame: &ServerFrame) -> Vec<u8> {
+    let mut out = vec![PROTOCOL_VERSION];
+    match frame {
+        ServerFrame::Tokens { id, tokens } => {
+            out.push(TYPE_TOKENS);
+            out.extend_from_slice(&id.to_be_bytes());
+            out.extend_from_slice(&(tokens.len() as u32).to_be_bytes());
+            for t in tokens {
+                out.extend_from_slice(&t.to_be_bytes());
+            }
+        }
+        ServerFrame::Done { id, ttft_us, latency_us } => {
+            out.push(TYPE_DONE);
+            out.extend_from_slice(&id.to_be_bytes());
+            out.extend_from_slice(&ttft_us.to_be_bytes());
+            out.extend_from_slice(&latency_us.to_be_bytes());
+        }
+        ServerFrame::Overloaded { id, queue_depth } => {
+            out.push(TYPE_OVERLOADED);
+            out.extend_from_slice(&id.to_be_bytes());
+            out.extend_from_slice(&queue_depth.to_be_bytes());
+        }
+        ServerFrame::Cancelled { id, deadline } => {
+            out.push(TYPE_CANCELLED);
+            out.extend_from_slice(&id.to_be_bytes());
+            out.push(u8::from(*deadline));
+        }
+    }
+    out
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)
+}
+
+/// Read one length-prefixed frame, blocking. Returns `Ok(None)` on a
+/// clean EOF at a frame boundary; EOF mid-frame is an error. For
+/// sockets with read timeouts use [`read_frame_poll`] — a timeout here
+/// would lose framing sync.
+pub fn read_frame<R: Read>(r: &mut R, max: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof inside frame header"))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let n = u32::from_be_bytes(len) as usize;
+    if n > max {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, format!("{n}-byte frame > {max}")));
+    }
+    let mut payload = vec![0u8; n];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Fill `buf` across read-timeout polls. `WouldBlock`/`TimedOut` are
+/// retried (they mean the 25 ms poll tick fired, not that data is
+/// lost); partial reads keep their position, so a timeout mid-frame
+/// never desynchronizes framing. Returns `Ok(false)` on a clean end
+/// (EOF or stop request) before the first byte of a frame.
+fn read_full_poll(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    at_boundary: bool,
+) -> io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            if got == 0 && at_boundary {
+                return Ok(false);
+            }
+            return Err(io::Error::new(io::ErrorKind::Interrupted, "front door stopping"));
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) if got == 0 && at_boundary => return Ok(false),
+            Ok(0) => {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof mid-frame"));
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// [`read_frame`] for server readers polling a stop flag through socket
+/// read timeouts.
+fn read_frame_poll(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+    max: usize,
+) -> io::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    if !read_full_poll(stream, &mut len, stop, true)? {
+        return Ok(None);
+    }
+    let n = u32::from_be_bytes(len) as usize;
+    if n > max {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, format!("{n}-byte frame > {max}")));
+    }
+    let mut payload = vec![0u8; n];
+    read_full_poll(stream, &mut payload, stop, false)?;
+    Ok(Some(payload))
+}
+
+/// Parse `serve.tenant_weights` (`"acme:3,free:1"`). Weights must be
+/// ≥ 1; duplicates and over-long names are rejected at load time so a
+/// bad config fails before the listener binds.
+pub fn parse_tenant_weights(s: &str) -> Result<Vec<(String, u64)>> {
+    let mut out: Vec<(String, u64)> = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (name, weight) = part
+            .split_once(':')
+            .with_context(|| format!("tenant weight '{part}' is not name:weight"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            bail!("tenant weight '{part}' has an empty name");
+        }
+        if name.len() > MAX_TENANT_BYTES {
+            bail!("tenant name '{name}' exceeds {MAX_TENANT_BYTES} bytes");
+        }
+        let weight: u64 = weight
+            .trim()
+            .parse()
+            .with_context(|| format!("tenant '{name}' weight '{}' is not an integer", weight.trim()))?;
+        if weight == 0 {
+            bail!("tenant '{name}' weight must be >= 1");
+        }
+        if out.iter().any(|(n, _)| n == name) {
+            bail!("duplicate tenant '{name}' in tenant_weights");
+        }
+        out.push((name.to_string(), weight));
+    }
+    Ok(out)
+}
+
+/// Stride-scheduler scale: pass increments are `cost * STRIDE / weight`,
+/// so higher-weight tenants advance slower and are picked more often.
+const STRIDE: u64 = 1 << 20;
+
+/// A request admitted past the socket-level shed check, waiting for a
+/// pool slot.
+#[derive(Debug)]
+pub struct QueuedRequest {
+    /// Connection the request arrived on.
+    pub conn: u64,
+    /// The decoded request.
+    pub wire: WireRequest,
+    /// Server receipt instant — the TTFT/latency/deadline epoch.
+    pub received: Instant,
+    /// Absolute deadline, if any.
+    pub deadline: Option<Instant>,
+}
+
+struct Lane {
+    pass: u64,
+    queue: VecDeque<QueuedRequest>,
+}
+
+/// Deterministic weighted fair queue: strict priority across tiers;
+/// stride scheduling across tenants within a tier (cost =
+/// `1 + gen_tokens`, so a tenant's share is measured in tokens, not
+/// requests); `BTreeMap` lanes give lexicographic tie-breaks. A tenant
+/// re-entering an empty lane resumes from the tier's current minimum
+/// pass — absence neither banks credit nor accrues debt.
+pub struct FairQueue {
+    weights: HashMap<String, u64>,
+    tiers: Vec<BTreeMap<String, Lane>>,
+    len: usize,
+}
+
+impl FairQueue {
+    /// Build with the given tenant weights; unknown tenants get 1.
+    pub fn new(weights: &[(String, u64)]) -> FairQueue {
+        FairQueue {
+            weights: weights.iter().map(|(t, w)| (t.clone(), (*w).max(1))).collect(),
+            tiers: (0..PRIORITY_TIERS).map(|_| BTreeMap::new()).collect(),
+            len: 0,
+        }
+    }
+
+    /// Queued request count across all tiers and tenants.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue; priority is clamped to the top tier here (the wire
+    /// value is preserved in `entry.wire`).
+    pub fn push(&mut self, entry: QueuedRequest) {
+        let tier = &mut self.tiers[entry.wire.priority.min(PRIORITY_TIERS - 1) as usize];
+        let floor = tier
+            .values()
+            .filter(|l| !l.queue.is_empty())
+            .map(|l| l.pass)
+            .min()
+            .unwrap_or(0);
+        let lane = tier
+            .entry(entry.wire.tenant.clone())
+            .or_insert_with(|| Lane { pass: floor, queue: VecDeque::new() });
+        if lane.queue.is_empty() {
+            lane.pass = lane.pass.max(floor);
+        }
+        lane.queue.push_back(entry);
+        self.len += 1;
+    }
+
+    /// Dequeue the next request: the highest non-empty tier wins
+    /// outright; within it, the non-empty lane with the minimum pass
+    /// (first in name order on ties).
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        for tier in self.tiers.iter_mut().rev() {
+            let name = tier
+                .iter()
+                .filter(|(_, l)| !l.queue.is_empty())
+                .min_by_key(|(_, l)| l.pass)
+                .map(|(n, _)| n.clone());
+            let Some(name) = name else { continue };
+            let weight = self.weights.get(&name).copied().unwrap_or(1);
+            let lane = tier.get_mut(&name).expect("picked lane exists");
+            let entry = lane.queue.pop_front().expect("picked lane is non-empty");
+            let cost = 1 + u64::from(entry.wire.gen_tokens);
+            lane.pass = lane.pass.saturating_add(cost.saturating_mul(STRIDE) / weight);
+            self.len -= 1;
+            return Some(entry);
+        }
+        None
+    }
+
+    /// Remove one queued request by (connection, id); `None` if it is
+    /// not queued (already submitted or never admitted).
+    pub fn remove(&mut self, conn: u64, id: u64) -> Option<QueuedRequest> {
+        for tier in &mut self.tiers {
+            for lane in tier.values_mut() {
+                if let Some(i) = lane.queue.iter().position(|e| e.conn == conn && e.wire.id == id)
+                {
+                    self.len -= 1;
+                    return lane.queue.remove(i);
+                }
+            }
+        }
+        None
+    }
+
+    /// Remove everything queued by a connection (disconnect).
+    pub fn remove_conn(&mut self, conn: u64) -> Vec<QueuedRequest> {
+        self.drain_matching(|e| e.conn == conn)
+    }
+
+    /// Remove every queued request whose deadline has passed.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<QueuedRequest> {
+        self.drain_matching(|e| e.deadline.map(|d| d <= now).unwrap_or(false))
+    }
+
+    fn drain_matching(&mut self, mut pred: impl FnMut(&QueuedRequest) -> bool) -> Vec<QueuedRequest> {
+        let mut out = Vec::new();
+        for tier in &mut self.tiers {
+            for lane in tier.values_mut() {
+                let mut keep = VecDeque::with_capacity(lane.queue.len());
+                for e in lane.queue.drain(..) {
+                    if pred(&e) {
+                        out.push(e);
+                    } else {
+                        keep.push_back(e);
+                    }
+                }
+                lane.queue = keep;
+            }
+        }
+        self.len -= out.len();
+        out
+    }
+}
+
+/// Front-door runtime knobs; built from config via
+/// `ServeConfig::frontdoor_config`.
+#[derive(Clone, Debug)]
+pub struct FrontDoorConfig {
+    /// Bind address (`"127.0.0.1:0"` picks an ephemeral port).
+    pub listen: String,
+    /// Per-tenant weights; tenants not listed get weight 1.
+    pub tenant_weights: Vec<(String, u64)>,
+    /// Default deadline in ms for requests that send `deadline_ms = 0`;
+    /// 0 = no default deadline.
+    pub deadline_ms: u64,
+    /// Admission queue depth at which new requests are shed with
+    /// `Overloaded` straight from the socket reader.
+    pub shed_queue: usize,
+    /// Max tokens per `Tokens` frame when streaming a response out.
+    pub stream_chunk: usize,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> FrontDoorConfig {
+        FrontDoorConfig {
+            listen: "127.0.0.1:0".to_string(),
+            tenant_weights: Vec::new(),
+            deadline_ms: 0,
+            shed_queue: 64,
+            stream_chunk: 32,
+        }
+    }
+}
+
+/// Per-tenant front-door counters; `submitted == completed + shed +
+/// cancelled + expired` once a tenant's traffic has fully drained.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    /// Requests received on the socket (pre-shed).
+    pub submitted: u64,
+    /// Requests that streamed to `Done`.
+    pub completed: u64,
+    /// Requests answered `Overloaded` (socket shed or pool reject).
+    pub shed: u64,
+    /// Requests torn down by client cancel or disconnect.
+    pub cancelled: u64,
+    /// Requests torn down by deadline expiry.
+    pub expired: u64,
+    /// TTFT of completed requests, µs from socket receipt (fair-queue
+    /// wait included — unlike the pool histograms).
+    pub ttft_us: Histogram,
+}
+
+impl TenantStats {
+    /// JSON exposition (counters + TTFT percentiles) for `BENCH_*.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::int(self.submitted as usize)),
+            ("completed", Json::int(self.completed as usize)),
+            ("shed", Json::int(self.shed as usize)),
+            ("cancelled", Json::int(self.cancelled as usize)),
+            ("expired", Json::int(self.expired as usize)),
+            ("p50_ttft_us", Json::int(self.ttft_us.percentile(0.50) as usize)),
+            ("p99_ttft_us", Json::int(self.ttft_us.percentile(0.99) as usize)),
+        ])
+    }
+}
+
+/// Final report from [`FrontDoor::shutdown`]: the pool's own report
+/// plus the per-tenant socket-side view.
+pub struct FrontDoorReport {
+    /// The wrapped pool's shutdown report.
+    pub pool: ServerReport,
+    /// Per-tenant counters, keyed by tenant name.
+    pub tenants: BTreeMap<String, TenantStats>,
+}
+
+type SharedWriter = Arc<Mutex<TcpStream>>;
+type TenantMap = Arc<Mutex<BTreeMap<String, TenantStats>>>;
+
+enum Event {
+    Open { conn: u64, writer: SharedWriter },
+    Request { conn: u64, wire: WireRequest, received: Instant },
+    Cancel { conn: u64, id: u64 },
+    Closed { conn: u64 },
+}
+
+/// A running front door. Owns the listener, per-connection readers,
+/// and the dispatcher thread that owns the pool handle; consume with
+/// [`FrontDoor::shutdown`] to drain and collect the report.
+pub struct FrontDoor {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<ServerReport>>,
+    tenants: TenantMap,
+}
+
+impl FrontDoor {
+    /// Bind `cfg.listen` and start serving requests into `handle`'s
+    /// pool. The handle moves into the dispatcher thread (it is not
+    /// `Sync`); it is shut down when the front door is.
+    pub fn start(handle: ServerHandle, cfg: FrontDoorConfig) -> Result<FrontDoor> {
+        let listener =
+            TcpListener::bind(&cfg.listen).with_context(|| format!("binding {}", cfg.listen))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let backlog = Arc::new(AtomicUsize::new(0));
+        let tenants: TenantMap = Arc::new(Mutex::new(BTreeMap::new()));
+        let (ev_tx, ev_rx) = channel();
+
+        let accept = std::thread::Builder::new()
+            .name("lcd-frontdoor-accept".to_string())
+            .spawn({
+                let stop = Arc::clone(&stop);
+                let backlog = Arc::clone(&backlog);
+                let tenants = Arc::clone(&tenants);
+                let shed_queue = cfg.shed_queue;
+                move || accept_loop(listener, ev_tx, stop, backlog, tenants, shed_queue)
+            })
+            .context("spawning accept thread")?;
+
+        let dispatcher = std::thread::Builder::new()
+            .name("lcd-frontdoor-dispatch".to_string())
+            .spawn({
+                let backlog = Arc::clone(&backlog);
+                let tenants = Arc::clone(&tenants);
+                let cfg = cfg.clone();
+                move || dispatcher_loop(handle, cfg, ev_rx, backlog, tenants)
+            })
+            .context("spawning dispatcher thread")?;
+
+        Ok(FrontDoor { addr, stop, accept: Some(accept), dispatcher: Some(dispatcher), tenants })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain in-flight work, shut the pool down, and
+    /// return the combined report.
+    pub fn shutdown(mut self) -> FrontDoorReport {
+        self.stop.store(true, Ordering::Relaxed);
+        // `incoming()` blocks; a throwaway self-connection makes it
+        // yield once so the accept loop observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        let pool = match self.dispatcher.take() {
+            Some(j) => j.join().unwrap_or_else(|_| ServerReport {
+                aggregate: Metrics::default().snapshot(),
+                per_worker: Vec::new(),
+            }),
+            None => ServerReport { aggregate: Metrics::default().snapshot(), per_worker: Vec::new() },
+        };
+        let tenants = self.tenants.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        FrontDoorReport { pool, tenants }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    events: Sender<Event>,
+    stop: Arc<AtomicBool>,
+    backlog: Arc<AtomicUsize>,
+    tenants: TenantMap,
+    shed_queue: usize,
+) {
+    let mut next_conn = 0u64;
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        // 25 ms read timeout turns blocking reads into a stop-flag poll;
+        // `read_full_poll` keeps framing sync across the timeouts.
+        if stream.set_read_timeout(Some(Duration::from_millis(25))).is_err() {
+            continue;
+        }
+        let _ = stream.set_nodelay(true);
+        let Ok(write_half) = stream.try_clone() else { continue };
+        let conn = next_conn;
+        next_conn += 1;
+        let writer: SharedWriter = Arc::new(Mutex::new(write_half));
+        // Open is sent before the reader exists, so the dispatcher
+        // always learns the writer before the first request frame.
+        if events.send(Event::Open { conn, writer: Arc::clone(&writer) }).is_err() {
+            break;
+        }
+        let ctx = ReaderCtx {
+            conn,
+            writer,
+            events: events.clone(),
+            stop: Arc::clone(&stop),
+            backlog: Arc::clone(&backlog),
+            tenants: Arc::clone(&tenants),
+            shed_queue,
+        };
+        let _ = std::thread::Builder::new()
+            .name(format!("lcd-frontdoor-conn-{conn}"))
+            .spawn(move || reader_loop(stream, ctx));
+    }
+}
+
+struct ReaderCtx {
+    conn: u64,
+    writer: SharedWriter,
+    events: Sender<Event>,
+    stop: Arc<AtomicBool>,
+    backlog: Arc<AtomicUsize>,
+    tenants: TenantMap,
+    shed_queue: usize,
+}
+
+fn bump_tenant(tenants: &TenantMap, name: &str, f: impl FnOnce(&mut TenantStats)) {
+    let mut map = tenants.lock().unwrap_or_else(|e| e.into_inner());
+    f(map.entry(name.to_string()).or_default());
+}
+
+/// Per-connection reader: decodes frames, sheds at the socket, and
+/// forwards the rest to the dispatcher. Any protocol error drops the
+/// connection (the dispatcher then cancels its in-flight work).
+fn reader_loop(mut stream: TcpStream, ctx: ReaderCtx) {
+    loop {
+        let payload = match read_frame_poll(&mut stream, &ctx.stop, MAX_FRAME) {
+            Ok(Some(p)) => p,
+            Ok(None) | Err(_) => break,
+        };
+        match decode_client(&payload) {
+            Ok(ClientFrame::Request(mut wire)) => {
+                if wire.tenant.is_empty() {
+                    wire.tenant = "default".to_string();
+                }
+                bump_tenant(&ctx.tenants, &wire.tenant, |t| t.submitted += 1);
+                let depth = ctx.backlog.load(Ordering::Relaxed);
+                if depth >= ctx.shed_queue {
+                    // Admission-level shed: answer right here, cheaply —
+                    // the dispatcher and pool never see the request.
+                    bump_tenant(&ctx.tenants, &wire.tenant, |t| t.shed += 1);
+                    let frame =
+                        ServerFrame::Overloaded { id: wire.id, queue_depth: depth as u32 };
+                    let mut w = ctx.writer.lock().unwrap_or_else(|e| e.into_inner());
+                    if write_frame(&mut *w, &encode_server(&frame)).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                ctx.backlog.fetch_add(1, Ordering::Relaxed);
+                let ev = Event::Request { conn: ctx.conn, wire, received: Instant::now() };
+                if ctx.events.send(ev).is_err() {
+                    break;
+                }
+            }
+            Ok(ClientFrame::Cancel { id }) => {
+                if ctx.events.send(Event::Cancel { conn: ctx.conn, id }).is_err() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = ctx.events.send(Event::Closed { conn: ctx.conn });
+}
+
+#[derive(PartialEq)]
+enum PendState {
+    Live,
+    ClientCancelled,
+    DeadlineExpired,
+}
+
+struct Pending {
+    conn: u64,
+    wire_id: u64,
+    tenant: String,
+    received: Instant,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    rx: Receiver<super::request::GenResponse>,
+    state: PendState,
+}
+
+fn send_to(writers: &mut HashMap<u64, SharedWriter>, conn: u64, frame: &ServerFrame) {
+    let ok = match writers.get(&conn) {
+        Some(w) => {
+            let payload = encode_server(frame);
+            let mut guard = w.lock().unwrap_or_else(|e| e.into_inner());
+            write_frame(&mut *guard, &payload).is_ok()
+        }
+        None => true,
+    };
+    if !ok {
+        writers.remove(&conn);
+    }
+}
+
+/// The dispatcher owns the pool handle (a `Receiver` holder, so not
+/// `Sync`): it alone submits, cancels, polls responses, and writes
+/// result frames. Exits once stopped AND drained, then shuts the pool
+/// down and returns its report.
+fn dispatcher_loop(
+    handle: ServerHandle,
+    cfg: FrontDoorConfig,
+    events: Receiver<Event>,
+    backlog: Arc<AtomicUsize>,
+    tenants: TenantMap,
+) -> ServerReport {
+    let inflight_cap = handle.queue_cap().max(1);
+    let stream_chunk = cfg.stream_chunk.max(1);
+    let mut queue = FairQueue::new(&cfg.tenant_weights);
+    let mut writers: HashMap<u64, SharedWriter> = HashMap::new();
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
+    let mut by_wire: HashMap<(u64, u64), u64> = HashMap::new();
+    let mut senders_done = false;
+
+    loop {
+        let mut idle = true;
+
+        // 1. Drain reader events.
+        loop {
+            match events.try_recv() {
+                Ok(Event::Open { conn, writer }) => {
+                    writers.insert(conn, writer);
+                }
+                Ok(Event::Request { conn, wire, received }) => {
+                    idle = false;
+                    let deadline_ms = if wire.deadline_ms > 0 {
+                        u64::from(wire.deadline_ms)
+                    } else {
+                        cfg.deadline_ms
+                    };
+                    let deadline =
+                        (deadline_ms > 0).then(|| received + Duration::from_millis(deadline_ms));
+                    queue.push(QueuedRequest { conn, wire, received, deadline });
+                }
+                Ok(Event::Cancel { conn, id }) => {
+                    idle = false;
+                    if let Some(entry) = queue.remove(conn, id) {
+                        backlog.fetch_sub(1, Ordering::Relaxed);
+                        bump_tenant(&tenants, &entry.wire.tenant, |t| t.cancelled += 1);
+                        send_to(&mut writers, conn, &ServerFrame::Cancelled { id, deadline: false });
+                    } else if let Some(&pid) = by_wire.get(&(conn, id)) {
+                        if let Some(p) = pending.get_mut(&pid) {
+                            if p.state == PendState::Live {
+                                p.state = PendState::ClientCancelled;
+                                handle.cancel(pid);
+                            }
+                        }
+                    }
+                }
+                Ok(Event::Closed { conn }) => {
+                    idle = false;
+                    writers.remove(&conn);
+                    for entry in queue.remove_conn(conn) {
+                        backlog.fetch_sub(1, Ordering::Relaxed);
+                        bump_tenant(&tenants, &entry.wire.tenant, |t| t.cancelled += 1);
+                    }
+                    // Disconnect frees in-flight slots and leases too:
+                    // the pool-side cancel tears the session out of its
+                    // slot mid-plan, same as an explicit Cancel frame.
+                    for (&pid, p) in pending.iter_mut() {
+                        if p.conn == conn && p.state == PendState::Live {
+                            p.state = PendState::ClientCancelled;
+                            handle.cancel(pid);
+                        }
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    senders_done = true;
+                    break;
+                }
+            }
+        }
+
+        // 2. Deadline sweeps: queued requests expire without touching
+        // the pool; in-flight ones are cancelled into the pool.
+        let now = Instant::now();
+        for entry in queue.take_expired(now) {
+            idle = false;
+            backlog.fetch_sub(1, Ordering::Relaxed);
+            bump_tenant(&tenants, &entry.wire.tenant, |t| t.expired += 1);
+            send_to(
+                &mut writers,
+                entry.conn,
+                &ServerFrame::Cancelled { id: entry.wire.id, deadline: true },
+            );
+        }
+        for (&pid, p) in pending.iter_mut() {
+            if p.state == PendState::Live && p.deadline.map(|d| d <= now).unwrap_or(false) {
+                idle = false;
+                p.state = PendState::DeadlineExpired;
+                bump_tenant(&tenants, &p.tenant, |t| t.expired += 1);
+                handle.cancel(pid);
+            }
+        }
+
+        // 3. Submit while the pool has room (bounded by queue_cap so
+        // submissions are never rejected for backpressure we created).
+        while pending.len() < inflight_cap {
+            let Some(entry) = queue.pop() else { break };
+            idle = false;
+            backlog.fetch_sub(1, Ordering::Relaxed);
+            let QueuedRequest { conn, wire, received, deadline } = entry;
+            let tenant = wire.tenant.clone();
+            let wire_id = wire.id;
+            let gen = wire.gen_tokens as usize;
+            let submitted = Instant::now();
+            let (pid, rx) = if wire.session != 0 {
+                let turn = TurnRequest {
+                    session: SessionId(wire.session),
+                    prompt: wire.prompt,
+                    resume: wire.resume,
+                };
+                handle.submit_turn_with_id(turn, gen)
+            } else {
+                handle.submit_with_id(wire.prompt, gen)
+            };
+            by_wire.insert((conn, wire_id), pid);
+            pending.insert(
+                pid,
+                Pending {
+                    conn,
+                    wire_id,
+                    tenant,
+                    received,
+                    submitted,
+                    deadline,
+                    rx,
+                    state: PendState::Live,
+                },
+            );
+        }
+
+        // 4. Poll in-flight responses.
+        let mut resolved: Vec<(u64, Option<super::request::GenResponse>)> = Vec::new();
+        for (&pid, p) in pending.iter() {
+            match p.rx.try_recv() {
+                Ok(resp) => resolved.push((pid, Some(resp))),
+                Err(TryRecvError::Disconnected) => resolved.push((pid, None)),
+                Err(TryRecvError::Empty) => {}
+            }
+        }
+        for (pid, resp) in resolved {
+            idle = false;
+            let p = pending.remove(&pid).expect("resolved id is pending");
+            by_wire.remove(&(p.conn, p.wire_id));
+            match resp {
+                Some(resp) => {
+                    // Report times from socket receipt: pool times start
+                    // at submission, so add the fair-queue wait.
+                    let wait = p.submitted.duration_since(p.received);
+                    let ttft_us = (wait + resp.ttft).as_micros() as u64;
+                    let latency_us = (wait + resp.latency).as_micros() as u64;
+                    bump_tenant(&tenants, &p.tenant, |t| {
+                        t.completed += 1;
+                        t.ttft_us.record(ttft_us);
+                    });
+                    for chunk in resp.tokens.chunks(stream_chunk) {
+                        send_to(
+                            &mut writers,
+                            p.conn,
+                            &ServerFrame::Tokens { id: p.wire_id, tokens: chunk.to_vec() },
+                        );
+                    }
+                    send_to(
+                        &mut writers,
+                        p.conn,
+                        &ServerFrame::Done { id: p.wire_id, ttft_us, latency_us },
+                    );
+                }
+                None => {
+                    let frame = match p.state {
+                        PendState::Live => {
+                            // The pool dropped the request without a
+                            // response: backpressure reject or worker
+                            // death — either way, shed.
+                            bump_tenant(&tenants, &p.tenant, |t| t.shed += 1);
+                            ServerFrame::Overloaded {
+                                id: p.wire_id,
+                                queue_depth: backlog.load(Ordering::Relaxed) as u32,
+                            }
+                        }
+                        PendState::ClientCancelled => {
+                            bump_tenant(&tenants, &p.tenant, |t| t.cancelled += 1);
+                            ServerFrame::Cancelled { id: p.wire_id, deadline: false }
+                        }
+                        PendState::DeadlineExpired => {
+                            ServerFrame::Cancelled { id: p.wire_id, deadline: true }
+                        }
+                    };
+                    send_to(&mut writers, p.conn, &frame);
+                }
+            }
+        }
+
+        // Exit only when every event sender (accept loop + readers) has
+        // hung up AND all admitted work drained — a late Request can
+        // then never be lost.
+        if senders_done && queue.is_empty() && pending.is_empty() {
+            break;
+        }
+        if idle {
+            std::thread::sleep(Duration::from_micros(300));
+        }
+    }
+
+    // Force any lingering readers out of blocking reads, then drain the
+    // pool for its report.
+    for w in writers.values() {
+        let guard = w.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = guard.shutdown(Shutdown::Both);
+    }
+    handle.shutdown_report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tenant: &str, priority: u8, gen: u32) -> QueuedRequest {
+        QueuedRequest {
+            conn: 0,
+            wire: WireRequest {
+                id,
+                session: 0,
+                priority,
+                deadline_ms: 0,
+                gen_tokens: gen,
+                resume: None,
+                tenant: tenant.to_string(),
+                prompt: vec![1],
+            },
+            received: Instant::now(),
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn codec_roundtrips_every_frame_shape() {
+        let frames = vec![
+            ClientFrame::Request(WireRequest {
+                id: 7,
+                session: 0,
+                priority: 1,
+                deadline_ms: 2000,
+                gen_tokens: 4,
+                resume: None,
+                tenant: "acme".to_string(),
+                prompt: vec![3, 5],
+            }),
+            ClientFrame::Request(WireRequest {
+                id: 8,
+                session: 3,
+                priority: 0,
+                deadline_ms: 0,
+                gen_tokens: 2,
+                resume: Some(ResumeTurn { pending: 9, append: vec![4] }),
+                tenant: "beta".to_string(),
+                prompt: vec![1, 2, 9, 4],
+            }),
+            ClientFrame::Cancel { id: 7 },
+        ];
+        for f in frames {
+            let bytes = encode_client(&f);
+            assert_eq!(decode_client(&bytes).unwrap(), f);
+        }
+        let frames = vec![
+            ServerFrame::Tokens { id: 7, tokens: vec![9, 2] },
+            ServerFrame::Done { id: 7, ttft_us: 1500, latency_us: 2500 },
+            ServerFrame::Overloaded { id: 7, queue_depth: 256 },
+            ServerFrame::Cancelled { id: 7, deadline: true },
+            ServerFrame::Cancelled { id: 7, deadline: false },
+        ];
+        for f in frames {
+            let bytes = encode_server(&f);
+            assert_eq!(decode_server(&bytes).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_malformed_payloads() {
+        // Wrong version.
+        assert!(decode_client(&[0x02, TYPE_CANCEL, 0, 0, 0, 0, 0, 0, 0, 7]).is_err());
+        // Unknown type bytes (and direction mixups).
+        assert!(decode_client(&[0x01, 0x7f]).is_err());
+        assert!(decode_server(&[0x01, TYPE_REQUEST]).is_err());
+        // Truncations at every prefix of a valid frame.
+        let full = encode_client(&ClientFrame::Request(WireRequest {
+            id: 1,
+            session: 2,
+            priority: 3,
+            deadline_ms: 4,
+            gen_tokens: 5,
+            resume: Some(ResumeTurn { pending: 6, append: vec![7] }),
+            tenant: "t".to_string(),
+            prompt: vec![8],
+        }));
+        for cut in 0..full.len() {
+            assert!(decode_client(&full[..cut]).is_err(), "prefix {cut} must not decode");
+        }
+        // Trailing garbage after a complete body.
+        let mut long = full.clone();
+        long.push(0);
+        assert!(decode_client(&long).is_err());
+        // Bad resume flag and resume-on-stateless.
+        // Resume flag sits after version+type+id+session+priority+
+        // deadline+gen = offset 27.
+        let mut bad_flag = full.clone();
+        assert_eq!(bad_flag[27], 1, "resume flag offset");
+        bad_flag[27] = 2;
+        assert!(decode_client(&bad_flag).is_err());
+        let stateless = encode_client(&ClientFrame::Request(WireRequest {
+            id: 1,
+            session: 0,
+            priority: 0,
+            deadline_ms: 0,
+            gen_tokens: 1,
+            resume: None,
+            tenant: String::new(),
+            prompt: vec![],
+        }));
+        let mut resumed = stateless.clone();
+        assert_eq!(resumed[27], 0, "resume flag offset");
+        resumed[27] = 1;
+        assert!(decode_client(&resumed).is_err());
+        // Hostile token count: claims 2^32/4 tokens on a tiny payload —
+        // must error on remaining-bytes, not allocate.
+        let mut hostile = encode_server(&ServerFrame::Tokens { id: 1, tokens: vec![] });
+        let n = hostile.len();
+        hostile[n - 4..].copy_from_slice(&0x3fff_ffffu32.to_be_bytes());
+        assert!(decode_server(&hostile).is_err());
+        // Invalid UTF-8 tenant.
+        let mut bad_utf8 = encode_client(&ClientFrame::Request(WireRequest {
+            id: 1,
+            session: 0,
+            priority: 0,
+            deadline_ms: 0,
+            gen_tokens: 1,
+            resume: None,
+            tenant: "ab".to_string(),
+            prompt: vec![],
+        }));
+        // Tenant bytes start after the u16 length at offset 28.
+        bad_utf8[30] = 0xff;
+        assert!(decode_client(&bad_utf8).is_err());
+    }
+
+    #[test]
+    fn fair_queue_respects_priority_tiers_strictly() {
+        let mut q = FairQueue::new(&[]);
+        q.push(req(1, "a", 0, 10));
+        q.push(req(2, "a", 3, 10));
+        q.push(req(3, "b", 1, 10));
+        q.push(req(4, "b", 9, 10)); // clamps to tier 3
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.wire.id).collect();
+        assert_eq!(order, vec![2, 4, 3, 1]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fair_queue_shares_by_weight_within_a_tier() {
+        let mut q = FairQueue::new(&parse_tenant_weights("gold:3,bronze:1").unwrap());
+        for i in 0..12 {
+            q.push(req(100 + i, "gold", 2, 10));
+            q.push(req(200 + i, "bronze", 2, 10));
+        }
+        // Over the first 8 pops, gold's 3:1 weight should show through:
+        // exactly 6 gold and 2 bronze with equal-cost requests.
+        let first: Vec<String> = (0..8).map(|_| q.pop().unwrap().wire.tenant).collect();
+        let gold = first.iter().filter(|t| *t == "gold").count();
+        assert_eq!(gold, 6, "gold got {gold}/8 of the first pops: {first:?}");
+        // Everything still drains.
+        let mut rest = 8;
+        while q.pop().is_some() {
+            rest += 1;
+        }
+        assert_eq!(rest, 24);
+    }
+
+    #[test]
+    fn fair_queue_tie_breaks_lexicographically_and_is_deterministic() {
+        let run = || {
+            let mut q = FairQueue::new(&[]);
+            q.push(req(1, "zeta", 1, 5));
+            q.push(req(2, "alpha", 1, 5));
+            q.push(req(3, "mid", 1, 5));
+            std::iter::from_fn(move || q.pop()).map(|e| e.wire.id).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), vec![2, 3, 1], "equal pass resolves in tenant name order");
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn fair_queue_reactivated_tenant_does_not_bank_credit() {
+        let mut q = FairQueue::new(&[]);
+        // "busy" works through a batch, advancing its pass.
+        for i in 0..4 {
+            q.push(req(i, "busy", 0, 100));
+        }
+        for _ in 0..4 {
+            q.pop().unwrap();
+        }
+        // A newcomer arrives alongside more "busy" work: its lane
+        // starts at the tier floor (busy's accumulated pass), not at
+        // pass 0 with banked credit — so it ties with busy instead of
+        // draining first, and the tie resolves by name ("busy" <
+        // "idle").
+        q.push(req(10, "busy", 0, 100));
+        q.push(req(11, "idle", 0, 100));
+        q.push(req(12, "idle", 0, 100));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.wire.id).collect();
+        assert_eq!(order, vec![10, 11, 12], "idle must not preempt busy with banked credit");
+    }
+
+    #[test]
+    fn fair_queue_remove_and_expiry_bookkeeping() {
+        let mut q = FairQueue::new(&[]);
+        let now = Instant::now();
+        let mut expired = req(1, "a", 0, 1);
+        expired.deadline = Some(now - Duration::from_millis(1));
+        q.push(expired);
+        q.push(req(2, "a", 0, 1));
+        let mut other_conn = req(3, "b", 0, 1);
+        other_conn.conn = 9;
+        q.push(other_conn);
+        assert_eq!(q.len(), 3);
+        let dead: Vec<u64> = q.take_expired(now).into_iter().map(|e| e.wire.id).collect();
+        assert_eq!(dead, vec![1]);
+        assert!(q.remove(0, 2).is_some());
+        assert!(q.remove(0, 2).is_none(), "double-remove finds nothing");
+        assert_eq!(q.remove_conn(9).len(), 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn tenant_weight_parsing_validates_at_load_time() {
+        assert_eq!(
+            parse_tenant_weights("acme:3, free:1").unwrap(),
+            vec![("acme".to_string(), 3), ("free".to_string(), 1)]
+        );
+        assert!(parse_tenant_weights("").unwrap().is_empty());
+        assert!(parse_tenant_weights("acme").is_err(), "missing weight");
+        assert!(parse_tenant_weights("acme:0").is_err(), "zero weight");
+        assert!(parse_tenant_weights(":3").is_err(), "empty name");
+        assert!(parse_tenant_weights("a:1,a:2").is_err(), "duplicate tenant");
+        assert!(parse_tenant_weights("acme:x").is_err(), "non-integer weight");
+    }
+
+    #[test]
+    fn frame_io_roundtrips_and_bounds_length() {
+        let payload = encode_client(&ClientFrame::Cancel { id: 42 });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        let mut rd = io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut rd, MAX_FRAME).unwrap().unwrap(), payload);
+        assert!(read_frame(&mut rd, MAX_FRAME).unwrap().is_none(), "clean EOF is None");
+        // An oversized length header is rejected before the payload.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(MAX_FRAME as u32 + 1).to_be_bytes());
+        assert!(read_frame(&mut io::Cursor::new(huge), MAX_FRAME).is_err());
+        // EOF inside the header or body errors instead of hanging.
+        let mut partial = Vec::new();
+        write_frame(&mut partial, &payload).unwrap();
+        partial.truncate(2);
+        assert!(read_frame(&mut io::Cursor::new(partial), MAX_FRAME).is_err());
+    }
+}

@@ -47,7 +47,15 @@
 //!   expired, first turns — falls back to cold prefill. Resumed streams
 //!   are **bit-identical** to the same tokens run as one uninterrupted
 //!   request, warm or cold (`rust/tests/session_resume.rs`);
-//! * [`scheduler`] — the per-iteration planner (see **Scheduler** below).
+//! * [`scheduler`] — the per-iteration planner (see **Scheduler** below);
+//! * [`frontdoor`] — the network front door: a length-prefixed TCP
+//!   protocol (`docs/PROTOCOL.md`) feeding the pool through a
+//!   per-tenant weighted [`FairQueue`] with strict priority tiers,
+//!   request deadlines, client cancellation (slot + lease freed
+//!   mid-plan with exact `completed + rejected == submitted`
+//!   accounting), and admission-level load shedding that answers
+//!   `Overloaded` straight from the socket reader. Operator docs in
+//!   `docs/OPERATIONS.md`, request lifecycle in `docs/ARCHITECTURE.md`.
 //!
 //! # Scheduler
 //!
@@ -168,6 +176,7 @@ pub mod batcher;
 #[cfg(any(test, feature = "chaos"))]
 pub mod chaos;
 pub mod engines;
+pub mod frontdoor;
 pub mod incremental;
 pub mod request;
 pub mod router;
@@ -180,6 +189,10 @@ pub use batcher::{window_clip, AdmissionPolicy, Batcher, Session};
 #[cfg(any(test, feature = "chaos"))]
 pub use chaos::{AuditReport, ChaosEngine, FaultPlan, FaultPoint};
 pub use engines::{HostLutEngine, HostLutModel, HostLutSpec};
+pub use frontdoor::{
+    ClientFrame, FairQueue, FrontDoor, FrontDoorConfig, FrontDoorReport, ServerFrame, TenantStats,
+    WireRequest,
+};
 pub use incremental::{CachedLutEngine, FullRecomputeStep, StepEngine};
 pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot, TtftDigest};
 pub use router::Router;

@@ -92,6 +92,11 @@ impl TtftDigest {
 pub struct Metrics {
     pub completed: u64,
     pub rejected: u64,
+    /// Requests torn down by [`super::server::ServerHandle::cancel`]
+    /// (client cancel, deadline expiry, disconnect). Each is ALSO
+    /// counted in `rejected`, preserving `completed + rejected ==
+    /// submitted`; this counter just attributes the cause.
+    pub cancelled: u64,
     pub generated_tokens: u64,
     pub decode_steps: u64,
     /// Prompt tokens absorbed through the prefill phase (window-clipped).
@@ -142,6 +147,8 @@ pub struct Metrics {
 pub struct MetricsSnapshot {
     pub completed: u64,
     pub rejected: u64,
+    /// Cancelled requests (a subset of `rejected` by cause).
+    pub cancelled: u64,
     pub generated_tokens: u64,
     pub decode_steps: u64,
     pub prefill_tokens: u64,
@@ -200,6 +207,7 @@ impl Metrics {
     pub fn merge(&mut self, other: &Metrics) {
         self.completed += other.completed;
         self.rejected += other.rejected;
+        self.cancelled += other.cancelled;
         self.generated_tokens += other.generated_tokens;
         self.decode_steps += other.decode_steps;
         self.prefill_tokens += other.prefill_tokens;
@@ -244,6 +252,7 @@ impl Metrics {
         MetricsSnapshot {
             completed: self.completed,
             rejected: self.rejected,
+            cancelled: self.cancelled,
             generated_tokens: self.generated_tokens,
             decode_steps: self.decode_steps,
             prefill_tokens: self.prefill_tokens,
@@ -294,10 +303,11 @@ impl MetricsSnapshot {
 
     /// Counter-valued fields — the shared source for both exposition
     /// formats.
-    fn counter_fields(&self) -> [(&'static str, u64); 15] {
+    fn counter_fields(&self) -> [(&'static str, u64); 16] {
         [
             ("completed", self.completed),
             ("rejected", self.rejected),
+            ("cancelled", self.cancelled),
             ("generated_tokens", self.generated_tokens),
             ("decode_steps", self.decode_steps),
             ("prefill_tokens", self.prefill_tokens),

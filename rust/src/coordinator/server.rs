@@ -73,7 +73,7 @@ use super::session::{Lease, LeaseTable, SessionId, SessionOptions, TurnRequest};
 use crate::telemetry::{FlightDump, FlightRecorder, Phase, TelemetryConfig};
 use crate::util::argmax;
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -131,6 +131,14 @@ struct QueueState {
     /// Per-worker exit flags, so routed submissions never target a dead
     /// worker's queue (they fall back to the shared queue instead).
     exited_flags: Vec<bool>,
+    /// Request ids marked for cancellation ([`ServerHandle::cancel`]).
+    /// Each worker sweeps the set inside its admission critical section
+    /// and drops marked requests wherever they live: shared queue, its
+    /// routed queue, its batcher's pending queue, or a live slot (the
+    /// slot is poison-cleared like chaos-drain eviction). Marks for ids
+    /// that already completed are removed after the completing
+    /// iteration, so the set stays bounded by in-flight cancels.
+    cancels: HashSet<u64>,
 }
 
 impl QueueState {
@@ -206,6 +214,16 @@ impl ServerHandle {
     /// rejected by backpressure are dropped, which the caller observes as
     /// a disconnected receiver.
     pub fn submit(&self, prompt: Vec<i32>, gen_tokens: usize) -> Receiver<GenResponse> {
+        self.submit_inner(prompt, gen_tokens, None).1
+    }
+
+    /// [`ServerHandle::submit`], also returning the assigned request id
+    /// — the token [`ServerHandle::cancel`] takes.
+    pub fn submit_with_id(
+        &self,
+        prompt: Vec<i32>,
+        gen_tokens: usize,
+    ) -> (u64, Receiver<GenResponse>) {
         self.submit_inner(prompt, gen_tokens, None)
     }
 
@@ -215,8 +233,40 @@ impl ServerHandle {
     /// (warm resume, zero re-prefill); first turns and turns whose lease
     /// is gone take the shared queue and cold-prefill the full history.
     pub fn submit_turn(&self, turn: TurnRequest, gen_tokens: usize) -> Receiver<GenResponse> {
+        self.submit_turn_with_id(turn, gen_tokens).1
+    }
+
+    /// [`ServerHandle::submit_turn`], also returning the assigned
+    /// request id for [`ServerHandle::cancel`].
+    pub fn submit_turn_with_id(
+        &self,
+        turn: TurnRequest,
+        gen_tokens: usize,
+    ) -> (u64, Receiver<GenResponse>) {
         let meta = super::session::SessionMeta { id: turn.session, resume: turn.resume };
         self.submit_inner(turn.prompt, gen_tokens, Some(meta))
+    }
+
+    /// Mark a request for cancellation. Best-effort and idempotent:
+    /// unknown or already-completed ids are no-ops. A marked request is
+    /// dropped at the next worker iteration wherever it lives — queued,
+    /// routed, batcher-pending, or mid-generation in a slot (the slot
+    /// and any consumed lease are freed). The drop counts as `rejected`
+    /// (so `completed + rejected == submitted` stays exact) plus the
+    /// `cancelled` observability counter, and the caller observes a
+    /// disconnected receiver.
+    pub fn cancel(&self, id: u64) {
+        let mut st = self.shared.lock_state();
+        st.cancels.insert(id);
+        drop(st);
+        self.shared.cond.notify_all();
+    }
+
+    /// Shared-queue capacity: the bound beyond which submissions are
+    /// rejected. Callers that must never trip backpressure (the network
+    /// front door) keep at most this many requests in flight.
+    pub fn queue_cap(&self) -> usize {
+        self.shared.queue_cap
     }
 
     fn submit_inner(
@@ -224,7 +274,7 @@ impl ServerHandle {
         prompt: Vec<i32>,
         gen_tokens: usize,
         session: Option<super::session::SessionMeta>,
-    ) -> Receiver<GenResponse> {
+    ) -> (u64, Receiver<GenResponse>) {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         // Cache-aware placement: only turns that can actually resume are
@@ -255,7 +305,7 @@ impl ServerHandle {
                 }
             }
         }
-        rx
+        (id, rx)
     }
 
     /// Number of worker threads behind this handle.
@@ -432,6 +482,7 @@ where
             rejected: 0,
             exited: 0,
             exited_flags: vec![false; workers],
+            cancels: HashSet::new(),
         }),
         cond: Condvar::new(),
         queue_cap: queue_cap.max(1),
@@ -729,6 +780,49 @@ fn run_worker<S: StepEngine>(
                 };
                 st = guard;
             }
+            // Cancellation sweep: drop marked requests wherever they
+            // live. Runs inside the admission critical section, before
+            // free-slot accounting, so a slot freed here is reusable in
+            // this very iteration. Dropping a request disconnects its
+            // reply sender; each drop counts as `rejected` (preserving
+            // `completed + rejected == submitted` exactly) plus the
+            // `cancelled` observability counter.
+            if !st.cancels.is_empty() {
+                {
+                    let QueueState { queue, routed, cancels, .. } = &mut *st;
+                    let mut dropped = 0u64;
+                    let mut sweep = |r: &GenRequest| {
+                        if cancels.remove(&r.id) {
+                            dropped += 1;
+                            false
+                        } else {
+                            true
+                        }
+                    };
+                    queue.retain(&mut sweep);
+                    routed[worker].retain(&mut sweep);
+                    metrics.rejected += dropped;
+                    metrics.cancelled += dropped;
+                }
+                // Ids already admitted here: drop from the local pending
+                // queue, or tear the live session out of its slot and
+                // poison-clear the engine state (the same contract as
+                // chaos-drain lease eviction). Ids owned by other
+                // workers stay marked for their owner's sweep.
+                let marked: Vec<u64> = st.cancels.iter().copied().collect();
+                for id in marked {
+                    if batcher.remove_pending(id).is_some() {
+                        st.cancels.remove(&id);
+                        metrics.rejected += 1;
+                        metrics.cancelled += 1;
+                    } else if let Some((slot, _session)) = batcher.take_slot_of(id) {
+                        st.cancels.remove(&id);
+                        engine.free_slot(slot);
+                        metrics.rejected += 1;
+                        metrics.cancelled += 1;
+                    }
+                }
+            }
             let mut free =
                 slots.saturating_sub(batcher.active() + batcher.reserved() + batcher.pending());
             loop {
@@ -838,8 +932,20 @@ fn run_worker<S: StepEngine>(
         };
         match outcome {
             Ok(responses) => {
+                let finished: Vec<u64> = responses.iter().map(|(_, resp)| resp.id).collect();
                 for (reply, resp) in responses {
                     let _ = reply.send(resp);
+                }
+                // A cancel can land after its request already completed
+                // in this iteration; clear such stale marks so the set
+                // stays bounded by live cancels.
+                if !finished.is_empty() {
+                    let mut st = shared.lock_state();
+                    if !st.cancels.is_empty() {
+                        for id in &finished {
+                            st.cancels.remove(id);
+                        }
+                    }
                 }
             }
             Err(msg) => {
@@ -1557,6 +1663,7 @@ mod tests {
                 rejected: 0,
                 exited: 0,
                 exited_flags: vec![false; workers],
+                cancels: HashSet::new(),
             }),
             cond: Condvar::new(),
             queue_cap: 8,
@@ -1664,6 +1771,7 @@ mod tests {
             rejected: 0,
             exited: 7, // inconsistent with the flags below
             exited_flags: vec![true],
+            cancels: HashSet::new(),
         };
         st.repair(3);
         assert_eq!(st.routed.len(), 3, "per-worker queues cover every worker");

@@ -18,7 +18,12 @@
 //! * [`histogram_differential`] — the telemetry [`Histogram`] merges
 //!   order-independently (byte-identical snapshots), its count/sum and
 //!   nearest-rank percentiles match a naive sorted model, and its JSON
-//!   snapshot round-trips — without panicking on extreme values.
+//!   snapshot round-trips — without panicking on extreme values;
+//! * [`frame_roundtrip`] — the front-door wire codec
+//!   (`docs/PROTOCOL.md`) never panics on arbitrary payload bytes,
+//!   accepted payloads are canonical (`encode(decode(b)) == b`), and
+//!   structured frames built from the fuzz input survive
+//!   `decode(encode(f)) == f`.
 //!
 //! The drivers are deliberately toolchain-agnostic: `rust/fuzz/` wraps
 //! them in nightly-only `cargo fuzz` targets for open-ended exploration,
@@ -32,6 +37,11 @@
 
 use crate::clustering::kmeans_1d;
 use crate::config::LcdConfig;
+use crate::coordinator::frontdoor::{
+    decode_client, decode_server, encode_client, encode_server, ClientFrame, ServerFrame,
+    WireRequest, MAX_GEN_TOKENS,
+};
+use crate::coordinator::ResumeTurn;
 use crate::lut::{
     lut_gemm_bucket, lut_gemm_fp_ref, lut_gemm_table, lut_gemm_table_sym, LutLayer, PackedIndices,
     ParallelLut, ProductTable, SimdLutLayer, SimdScratch, SlotCache,
@@ -329,6 +339,76 @@ pub fn slot_cache_differential(data: &[u8]) {
     }
 }
 
+/// Front-door wire-codec driver (`docs/PROTOCOL.md`). Two phases:
+///
+/// 1. **Raw**: the input bytes are fed to both payload decoders.
+///    Rejection is fine; a panic is a finding. An accepted payload must
+///    be *canonical* — re-encoding the decoded frame reproduces the
+///    input byte for byte, and decoding the re-encoding yields the same
+///    frame.
+/// 2. **Structured**: a valid frame of every shape is synthesized from
+///    the remaining input (fields clamped into their documented limits)
+///    and must survive `decode(encode(f)) == f`.
+pub fn frame_roundtrip(data: &[u8]) {
+    // Phase 1: arbitrary bytes against both decoders.
+    if let Ok(frame) = decode_client(data) {
+        let bytes = encode_client(&frame);
+        assert_eq!(bytes, data, "accepted client payload was not canonical");
+        assert_eq!(decode_client(&bytes).unwrap(), frame, "client re-decode diverged");
+    }
+    if let Ok(frame) = decode_server(data) {
+        let bytes = encode_server(&frame);
+        assert_eq!(bytes, data, "accepted server payload was not canonical");
+        assert_eq!(decode_server(&bytes).unwrap(), frame, "server re-decode diverged");
+    }
+
+    // Phase 2: structured frames derived from the same input.
+    let mut r = ByteReader::new(data);
+    let session = r.u64() % 4; // 0 = stateless, small ids otherwise
+    let tenant: String =
+        (0..r.range(0, 8)).map(|_| char::from(b'a' + r.byte() % 26)).collect();
+    let resume = if session != 0 && r.byte() % 2 == 1 {
+        Some(ResumeTurn {
+            pending: i32::from(r.i8()),
+            append: (0..r.range(0, 6)).map(|_| i32::from(r.i8())).collect(),
+        })
+    } else {
+        None
+    };
+    let request = ClientFrame::Request(WireRequest {
+        id: r.u64(),
+        session,
+        priority: r.byte(),
+        deadline_ms: (r.range(0, u16::MAX as usize)) as u32,
+        gen_tokens: (r.u64() % (u64::from(MAX_GEN_TOKENS) + 1)) as u32,
+        resume,
+        tenant,
+        prompt: (0..r.range(0, 12)).map(|_| i32::from(r.i8())).collect(),
+    });
+    let frames = [request, ClientFrame::Cancel { id: r.u64() }];
+    for frame in &frames {
+        let bytes = encode_client(frame);
+        let back = decode_client(&bytes)
+            .unwrap_or_else(|e| panic!("valid client frame failed to decode: {e} ({frame:?})"));
+        assert_eq!(&back, frame, "client frame round-trip diverged");
+    }
+    let replies = [
+        ServerFrame::Tokens {
+            id: r.u64(),
+            tokens: (0..r.range(0, 8)).map(|_| i32::from(r.i8())).collect(),
+        },
+        ServerFrame::Done { id: r.u64(), ttft_us: r.u64(), latency_us: r.u64() },
+        ServerFrame::Overloaded { id: r.u64(), queue_depth: (r.range(0, 4096)) as u32 },
+        ServerFrame::Cancelled { id: r.u64(), deadline: r.byte() % 2 == 1 },
+    ];
+    for frame in &replies {
+        let bytes = encode_server(frame);
+        let back = decode_server(&bytes)
+            .unwrap_or_else(|e| panic!("valid server frame failed to decode: {e} ({frame:?})"));
+        assert_eq!(&back, frame, "server frame round-trip diverged");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,6 +429,7 @@ mod tests {
             config_never_panics(&input);
             slot_cache_differential(&input);
             histogram_differential(&input);
+            frame_roundtrip(&input);
         }
     }
 

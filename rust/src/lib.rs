@@ -39,15 +39,22 @@
 //!
 //! ## Incremental decode subsystem
 //!
-//! Each worker iteration splits into an explicit **prefill phase** (all
-//! newly admitted prompts fold into one cross-request GEMM; admission is
-//! policy-driven — FIFO, shortest-prompt-first or token-budget via
-//! `ServeConfig::admission`) and a **decode phase** advancing every
-//! in-flight session by one token. [`coordinator::CachedLutEngine`]
-//! backs the decode phase with a per-slot activation ring
-//! ([`lut::SlotCache`]): the LUT stack is position-wise, so computing
-//! only the new rows is *exact* — bit-identical to full-window
-//! recompute (`rust/tests/incremental_decode.rs` pins this across
+//! Each worker iteration executes one [`coordinator::IterationPlan`]
+//! built by the scheduler, in a fixed phase order: **resume** (turns
+//! reattached to a retained slot feed `[pending] + append` — zero
+//! re-prefill), **chunked prefill** (each mid-prefill session feeds its
+//! next ≤ `ServeConfig::prefill_chunk` prompt rows, so a long prompt
+//! can never stall in-flight decodes), **decode** (every
+//! prefill-complete session advances one token) and **speculate**
+//! (draft + bulk-verify instead of plain decode when the engine drafts).
+//! Admission into the plan is policy-driven — FIFO,
+//! shortest-prompt-first or token-budget via `ServeConfig::admission`.
+//! [`coordinator::CachedLutEngine`] backs the step contract with a
+//! per-slot activation ring ([`lut::SlotCache`]): the LUT stack is
+//! position-wise, so computing only the new rows is *exact* —
+//! bit-identical to full-window recompute
+//! (`rust/tests/incremental_decode.rs` and
+//! `rust/tests/chunked_prefill.rs` pin this across chunk sizes,
 //! admission policies and thread counts), while per-step cost drops
 //! from `batch × seq` rows to `active_slots` rows.
 //!
@@ -79,6 +86,18 @@
 //! eviction falls back to cold prefill). `benches/lut_gemm.rs` and
 //! `benches/serving.rs` carry the matching thread/worker sweeps plus the
 //! warm-vs-cold resume sweep.
+//!
+//! ## Network front door
+//!
+//! [`coordinator::FrontDoor`] exposes the pool over TCP (`lcd serve
+//! --listen ADDR`): a length-prefixed binary protocol
+//! (`docs/PROTOCOL.md`) with streaming token frames, per-tenant
+//! weighted fairness under strict priority tiers
+//! ([`coordinator::FairQueue`]), request deadlines, client
+//! cancellation that frees slots and leases mid-plan, and
+//! admission-level load shedding answered straight from the socket.
+//! Request lifecycle and module map: `docs/ARCHITECTURE.md`; operator
+//! manual (every `serve.*` knob, gates, tuning): `docs/OPERATIONS.md`.
 //!
 //! ## Telemetry
 //!

@@ -78,6 +78,7 @@ fn parse_args() -> Result<Args> {
             "--prefill-chunk" => sets.push(format!("serve.prefill_chunk={}", take(&mut i)?)),
             "--draft-k" => sets.push(format!("serve.draft_k={}", take(&mut i)?)),
             "--draft" => sets.push(format!("serve.draft={}", take(&mut i)?)),
+            "--listen" => sets.push(format!("serve.listen={}", take(&mut i)?)),
             "--telemetry-dump" => telemetry_dump = Some(take(&mut i)?),
             "--telemetry-sample" => {
                 sets.push(format!("serve.telemetry_sample={}", take(&mut i)?))
@@ -115,6 +116,12 @@ flags:
                    prompts chunk across iterations so decodes never wait
                    — streams are bit-identical at every setting)
   --draft-k N      --draft narrow|oracle (speculative draft engine)
+  --listen ADDR    (serve: expose the pool over TCP at host:port — the
+                   network front door of docs/PROTOCOL.md, with
+                   per-tenant fairness (serve.tenant_weights), request
+                   deadlines (serve.deadline_ms) and admission-level
+                   load shedding (serve.shed_queue); serves until
+                   killed. See docs/OPERATIONS.md)
   --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)
   --telemetry-dump <file> (serve: write the final metrics exposition —
                    phase latency histograms, TTFT, GEMM time — as JSON
@@ -258,6 +265,18 @@ fn cmd_serve(
         cfg.serve.telemetry_config(),
         move |_worker| lcd::repro::shared::build_step_engine(&cfg2, &engine_kind2),
     );
+
+    // `--listen`: hand the pool to the network front door and serve
+    // until killed. The synthetic request mix below is skipped — real
+    // clients drive the pool over the socket instead.
+    if !cfg.serve.listen.is_empty() {
+        let door = lcd::coordinator::FrontDoor::start(handle, cfg.serve.frontdoor_config()?)?;
+        println!("front door listening on {}", door.addr());
+        println!("wire protocol: docs/PROTOCOL.md; operations: docs/OPERATIONS.md");
+        loop {
+            std::thread::park();
+        }
+    }
 
     let tok = CharTokenizer::new();
     let prompts = ["the cat ", "a bird moves ", "two plus three is ", "the river is "];

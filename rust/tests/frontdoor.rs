@@ -1,0 +1,609 @@
+//! Acceptance suite for the network front door (`coordinator::frontdoor`).
+//!
+//! Four layers of guarantees:
+//!
+//! * **Spec conformance** — the hex example frames in `docs/PROTOCOL.md`
+//!   decode to exactly the documented fields and re-encode byte-for-byte
+//!   (the spec text is `include_str!`-ed, so doc and codec cannot drift
+//!   apart silently); malformed payloads derived from those vectors are
+//!   rejected.
+//! * **Bit-identity** — concurrent TCP clients across multiple tenants
+//!   receive streams identical to the uninterrupted single-request
+//!   reference AND to the same prompts served by an in-process
+//!   `ServerHandle` (the repo-wide equivalence anchor, now through the
+//!   socket).
+//! * **Failure semantics** — cancellation, deadline expiry and
+//!   mid-generation client disconnect free slots and leases (chaos-audit
+//!   verified) while `completed + rejected == submitted` stays exact.
+//! * **Overload** — admission-level shedding answers `Overloaded`
+//!   without touching the pool, and admitted work still completes
+//!   bit-identically.
+
+mod common;
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lcd::coordinator::chaos::{audit_log, take_reports};
+use lcd::coordinator::frontdoor::{
+    decode_client, decode_server, encode_client, encode_server, read_frame, write_frame,
+    parse_tenant_weights, FairQueue, QueuedRequest, MAX_FRAME,
+};
+use lcd::coordinator::{
+    start_pool_sched, AdmissionPolicy, ChaosEngine, ClientFrame, FaultPlan, FrontDoor,
+    FrontDoorConfig, ResumeTurn, SchedulerConfig, ServerFrame, SessionOptions, SessionStore,
+    StepEngine, WireRequest,
+};
+use lcd::util::Rng;
+
+/// The normative spec; the conformance test reads its vectors verbatim.
+const SPEC: &str = include_str!("../../docs/PROTOCOL.md");
+
+fn unhex(s: &str) -> Vec<u8> {
+    assert_eq!(s.len() % 2, 0, "hex string must have even length");
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).expect("valid hex"))
+        .collect()
+}
+
+fn fifo_sched(chunk: usize) -> SchedulerConfig {
+    SchedulerConfig::new(AdmissionPolicy::Fifo, chunk).unwrap()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn wire(
+    id: u64,
+    session: u64,
+    priority: u8,
+    deadline_ms: u32,
+    gen_tokens: u32,
+    resume: Option<ResumeTurn>,
+    tenant: &str,
+    prompt: Vec<i32>,
+) -> WireRequest {
+    WireRequest { id, session, priority, deadline_ms, gen_tokens, resume, tenant: tenant.to_string(), prompt }
+}
+
+/// Everything a client observed for one request id.
+#[derive(Default)]
+struct Outcome {
+    tokens: Vec<i32>,
+    token_frames: usize,
+    done: Option<(u64, u64)>,
+    overloaded: bool,
+    /// `Some(deadline)` once a `Cancelled` frame arrived.
+    cancelled: Option<bool>,
+}
+
+/// Read server frames until `want` terminal frames have arrived.
+fn collect(stream: &mut TcpStream, want: usize) -> HashMap<u64, Outcome> {
+    let mut out: HashMap<u64, Outcome> = HashMap::new();
+    let mut terminals = 0;
+    while terminals < want {
+        let payload = read_frame(stream, MAX_FRAME)
+            .expect("reading server frame")
+            .expect("server closed before all terminals arrived");
+        match decode_server(&payload).expect("server sent a valid frame") {
+            ServerFrame::Tokens { id, tokens } => {
+                let o = out.entry(id).or_default();
+                o.tokens.extend_from_slice(&tokens);
+                o.token_frames += 1;
+            }
+            ServerFrame::Done { id, ttft_us, latency_us } => {
+                out.entry(id).or_default().done = Some((ttft_us, latency_us));
+                terminals += 1;
+            }
+            ServerFrame::Overloaded { id, .. } => {
+                out.entry(id).or_default().overloaded = true;
+                terminals += 1;
+            }
+            ServerFrame::Cancelled { id, deadline } => {
+                out.entry(id).or_default().cancelled = Some(deadline);
+                terminals += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Every example frame in `docs/PROTOCOL.md` must appear there verbatim,
+/// decode to exactly the documented fields, and re-encode to the same
+/// bytes — so the spec, the codec, and this test can only change
+/// together.
+#[test]
+fn spec_conformance_vectors_decode_and_reencode_verbatim() {
+    let client_vectors: [(&str, ClientFrame); 3] = [
+        (
+            "0000002e01010000000000000007000000000000000001000007d00000000400000461636d65000000020000000300000005",
+            ClientFrame::Request(wire(7, 0, 1, 2000, 4, None, "acme", vec![3, 5])),
+        ),
+        (
+            "00000042010100000000000000080000000000000003000000000000000002010000000900000001000000040004626574610000000400000001000000020000000900000004",
+            ClientFrame::Request(wire(
+                8,
+                3,
+                0,
+                0,
+                2,
+                Some(ResumeTurn { pending: 9, append: vec![4] }),
+                "beta",
+                vec![1, 2, 9, 4],
+            )),
+        ),
+        ("0000000a01020000000000000007", ClientFrame::Cancel { id: 7 }),
+    ];
+    let server_vectors: [(&str, ServerFrame); 4] = [
+        (
+            "0000001601810000000000000007000000020000000900000002",
+            ServerFrame::Tokens { id: 7, tokens: vec![9, 2] },
+        ),
+        (
+            "0000001a0182000000000000000700000000000005dc00000000000009c4",
+            ServerFrame::Done { id: 7, ttft_us: 1500, latency_us: 2500 },
+        ),
+        ("0000000e0183000000000000000700000100", ServerFrame::Overloaded { id: 7, queue_depth: 256 }),
+        ("0000000b0184000000000000000701", ServerFrame::Cancelled { id: 7, deadline: true }),
+    ];
+
+    let split = |hex: &str| -> (usize, Vec<u8>) {
+        assert!(SPEC.contains(hex), "docs/PROTOCOL.md lost conformance vector {hex}");
+        let bytes = unhex(hex);
+        let len = u32::from_be_bytes(bytes[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, bytes.len() - 4, "length prefix must count the payload exactly");
+        (len, bytes[4..].to_vec())
+    };
+    for (hex, expect) in &client_vectors {
+        let (_, payload) = split(hex);
+        let frame = decode_client(&payload).expect("spec vector must decode");
+        assert_eq!(&frame, expect, "decoded fields diverged from the spec ({hex})");
+        assert_eq!(encode_client(&frame), payload, "re-encode diverged from the spec ({hex})");
+    }
+    for (hex, expect) in &server_vectors {
+        let (_, payload) = split(hex);
+        let frame = decode_server(&payload).expect("spec vector must decode");
+        assert_eq!(&frame, expect, "decoded fields diverged from the spec ({hex})");
+        assert_eq!(encode_server(&frame), payload, "re-encode diverged from the spec ({hex})");
+    }
+}
+
+/// Corruptions of the spec's own vectors must be rejected: version and
+/// type bytes, every strict truncation, trailing garbage, and oversized
+/// length prefixes at the framing layer.
+#[test]
+fn spec_vector_corruptions_are_rejected() {
+    let resumed = "00000042010100000000000000080000000000000003000000000000000002010000000900000001000000040004626574610000000400000001000000020000000900000004";
+    let payload = unhex(resumed)[4..].to_vec();
+    assert!(decode_client(&payload).is_ok(), "baseline vector must decode");
+
+    let mut bad_version = payload.clone();
+    bad_version[0] = 0x02;
+    assert!(decode_client(&bad_version).is_err(), "unknown version accepted");
+    let mut bad_type = payload.clone();
+    bad_type[1] = 0x7f;
+    assert!(decode_client(&bad_type).is_err(), "unknown type accepted");
+    for cut in 0..payload.len() {
+        assert!(decode_client(&payload[..cut]).is_err(), "truncation at {cut} accepted");
+    }
+    let mut trailing = payload.clone();
+    trailing.push(0);
+    assert!(decode_client(&trailing).is_err(), "trailing byte accepted");
+
+    // Framing layer: a length prefix above MAX_FRAME is refused before
+    // any payload allocation.
+    let mut oversized = ((MAX_FRAME + 1) as u32).to_be_bytes().to_vec();
+    oversized.extend_from_slice(&payload);
+    let mut cursor = std::io::Cursor::new(oversized);
+    assert!(read_frame(&mut cursor, MAX_FRAME).is_err(), "oversized frame accepted");
+
+    // The weight parser is the config-side gate of the same front door.
+    assert!(parse_tenant_weights("gold:3,bronze:1").is_ok());
+    for bad in ["gold", "gold:0", ":3", "gold:x", "gold:1,gold:2"] {
+        assert!(parse_tenant_weights(bad).is_err(), "tenant weights '{bad}' accepted");
+    }
+}
+
+/// The fair queue drains deterministically: identical push sequences
+/// yield identical pop orders, nothing is lost, and priority tiers are
+/// strict (all clamped-tier-3 work before any tier-2 work, and so on).
+#[test]
+fn fair_queue_is_deterministic_and_strictly_tiered_under_random_load() {
+    let weights = vec![("a".to_string(), 3), ("b".to_string(), 1)];
+    let mut q1 = FairQueue::new(&weights);
+    let mut q2 = FairQueue::new(&weights);
+    let mut rng = Rng::new(0xFA12);
+    let n = 200u64;
+    let mut params = Vec::new();
+    for id in 0..n {
+        let tenant = ["a", "b", "c"][rng.below(3)];
+        let priority = rng.below(6) as u8; // above 3 exercises clamping
+        let gen = rng.below(32) as u32;
+        params.push((id, tenant, priority, gen));
+    }
+    for &(id, tenant, priority, gen) in &params {
+        let mk = || QueuedRequest {
+            conn: 0,
+            wire: wire(id, 0, priority, 0, gen, None, tenant, vec![1]),
+            received: Instant::now(),
+            deadline: None,
+        };
+        q1.push(mk());
+        q2.push(mk());
+    }
+    assert_eq!(q1.len(), n as usize);
+    let drain = |q: &mut FairQueue| -> Vec<(u64, u8)> {
+        std::iter::from_fn(|| q.pop().map(|e| (e.wire.id, e.wire.priority.min(3)))).collect()
+    };
+    let o1 = drain(&mut q1);
+    let o2 = drain(&mut q2);
+    assert_eq!(o1, o2, "identical push sequences must pop identically");
+    assert!(q1.is_empty());
+    assert_eq!(o1.len(), n as usize, "pops must conserve requests");
+    let mut seen: Vec<u64> = o1.iter().map(|&(id, _)| id).collect();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), n as usize, "every id pops exactly once");
+    for w in o1.windows(2) {
+        assert!(w[0].1 >= w[1].1, "priority tiers must be strict: {:?} before {:?}", w[0], w[1]);
+    }
+}
+
+/// Tentpole acceptance: concurrent TCP clients across two tenants, all
+/// streams bit-identical to (a) the uninterrupted single-request
+/// reference and (b) the same prompts served by an in-process
+/// `ServerHandle` — through pipelined requests, chunked `Tokens` frames
+/// and weighted fair queueing.
+#[test]
+fn concurrent_tenants_receive_bit_identical_streams_over_the_socket() {
+    let spec = common::base_spec(0xF00D, 4, 32, 48, 1);
+    let mk = {
+        let spec = spec.clone();
+        move |_w: usize| common::mk_engine("cached", &spec)
+    };
+    let handle = start_pool_sched(2, 4, 64, fifo_sched(8), SessionOptions::default(), mk.clone());
+    let door = FrontDoor::start(
+        handle,
+        FrontDoorConfig {
+            listen: "127.0.0.1:0".to_string(),
+            tenant_weights: vec![("gold".to_string(), 3), ("bronze".to_string(), 1)],
+            deadline_ms: 0,
+            shed_queue: 64,
+            stream_chunk: 3, // small on purpose: multi-frame streams
+        },
+    )
+    .expect("front door binds an ephemeral port");
+    let addr = door.addr();
+
+    let tenants = ["gold", "bronze", "gold"];
+    let mut joins = Vec::new();
+    for (c, tenant) in tenants.iter().enumerate() {
+        let requests = common::request_set(0x1000 + c as u64, spec.vocab, 4);
+        let tenant = tenant.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            for (i, (prompt, gen)) in requests.iter().enumerate() {
+                let frame = ClientFrame::Request(wire(
+                    i as u64 + 1,
+                    0,
+                    (c % 4) as u8,
+                    0,
+                    *gen as u32,
+                    None,
+                    &tenant,
+                    prompt.clone(),
+                ));
+                write_frame(&mut stream, &encode_client(&frame)).expect("send request");
+            }
+            let outcomes = collect(&mut stream, requests.len());
+            (requests, outcomes)
+        }));
+    }
+
+    let mut multi_frame_streams = 0usize;
+    let mut all_requests = Vec::new();
+    for join in joins {
+        let (requests, outcomes) = join.join().expect("client thread");
+        for (i, (prompt, gen)) in requests.iter().enumerate() {
+            let o = &outcomes[&(i as u64 + 1)];
+            let (ttft_us, latency_us) = o.done.expect("unloaded request must complete");
+            assert!(ttft_us <= latency_us, "TTFT cannot exceed total latency");
+            assert!(!o.overloaded && o.cancelled.is_none(), "unexpected terminal frame");
+            assert_eq!(
+                o.tokens,
+                common::reference_stream(&spec, prompt, *gen),
+                "socket stream diverged from the uninterrupted reference"
+            );
+            if o.token_frames > 1 {
+                multi_frame_streams += 1;
+            }
+        }
+        all_requests.extend(requests);
+    }
+    assert!(multi_frame_streams > 0, "stream_chunk=3 must split some responses across frames");
+
+    // The same prompts through an in-process ServerHandle: the socket
+    // path must be a pure transport, not a different scheduler.
+    let reference_pool =
+        start_pool_sched(2, 4, 64, fifo_sched(8), SessionOptions::default(), mk);
+    let rxs: Vec<_> = all_requests
+        .iter()
+        .map(|(prompt, gen)| reference_pool.submit(prompt.clone(), *gen))
+        .collect();
+    for ((prompt, gen), rx) in all_requests.iter().zip(rxs) {
+        let resp = rx.recv().expect("in-process request must complete");
+        assert_eq!(
+            resp.tokens,
+            common::reference_stream(&spec, prompt, *gen),
+            "in-process pool diverged from the reference"
+        );
+    }
+    reference_pool.shutdown();
+
+    let report = door.shutdown();
+    let total = 12;
+    assert_eq!(report.pool.aggregate.completed, total, "every admitted request completed");
+    assert_eq!(report.pool.aggregate.rejected, 0, "nothing was shed or cancelled");
+    let gold = &report.tenants["gold"];
+    let bronze = &report.tenants["bronze"];
+    assert_eq!((gold.submitted, gold.completed), (8, 8));
+    assert_eq!((bronze.submitted, bronze.completed), (4, 4));
+    for (name, t) in &report.tenants {
+        assert_eq!(
+            t.submitted,
+            t.completed + t.shed + t.cancelled + t.expired,
+            "tenant '{name}' accounting must balance"
+        );
+    }
+}
+
+/// Pool-level cancellation accounting: cancelled requests are torn out
+/// of the queue or their slots (chaos-audited: zero leaked slots) and
+/// `completed + rejected == submitted` holds exactly, with `cancelled`
+/// attributing the cause.
+#[test]
+fn cancellation_keeps_pool_accounting_exact_and_leaks_no_slots() {
+    let spec = common::base_spec(0xCA9C, 2, 32, 48, 1);
+    let plan = FaultPlan::new(); // never armed: audit-only chaos wrap
+    let log = audit_log();
+    let handle = {
+        let (spec, plan, log) = (spec.clone(), Arc::clone(&plan), Arc::clone(&log));
+        start_pool_sched(1, 2, 64, fifo_sched(8), SessionOptions::default(), move |worker| {
+            Ok(ChaosEngine::new(
+                common::mk_engine("cached", &spec)?,
+                Arc::clone(&plan),
+                Arc::clone(&log),
+                worker,
+            ))
+        })
+    };
+
+    let requests = common::request_set(0xCA9C, spec.vocab, 8);
+    let mut keep = Vec::new();
+    let mut cancelled_ids = Vec::new();
+    let mut cancelled_rxs = Vec::new();
+    for (i, (prompt, gen)) in requests.iter().enumerate() {
+        if i % 2 == 0 {
+            let (_, rx) = handle.submit_with_id(prompt.clone(), *gen);
+            keep.push((prompt.clone(), *gen, rx));
+        } else {
+            // Long generations so the cancel lands mid-flight or queued.
+            let (id, rx) = handle.submit_with_id(prompt.clone(), 3000);
+            cancelled_ids.push(id);
+            cancelled_rxs.push(rx);
+        }
+    }
+    for id in &cancelled_ids {
+        handle.cancel(*id);
+        handle.cancel(*id); // idempotent: double-cancel must not double-count
+    }
+    for (prompt, gen, rx) in keep {
+        let resp = rx.recv().expect("uncancelled requests must complete");
+        assert_eq!(
+            resp.tokens,
+            common::reference_stream(&spec, &prompt, gen),
+            "surviving streams must stay bit-identical"
+        );
+    }
+    // A cancelled request either dropped (disconnected receiver) or
+    // completed before the cancel landed — both are accounted below.
+    let raced: u64 = cancelled_rxs.iter().filter(|rx| rx.recv().is_ok()).count() as u64;
+
+    let snap = handle.shutdown();
+    assert_eq!(
+        snap.completed + snap.rejected,
+        8,
+        "every submission lands in exactly one final counter"
+    );
+    assert_eq!(snap.cancelled, snap.rejected, "only cancellation rejected work here");
+    assert_eq!(snap.completed, 4 + raced);
+    assert_eq!(snap.cancelled, 4 - raced);
+    let reports = take_reports(&log);
+    assert_eq!(reports.len(), 1, "one worker, one audit report");
+    assert_eq!(reports[0].occupied, 0, "cancellation must free every slot");
+    assert!(!reports[0].fault_fired);
+}
+
+/// A queued request whose deadline expires is answered
+/// `Cancelled(deadline)` without ever touching the pool; the in-flight
+/// request ahead of it completes normally.
+#[test]
+fn deadline_expiry_answers_cancelled_without_model_work() {
+    let spec = common::base_spec(0xDEAD, 2, 32, 48, 1);
+    let handle = {
+        let spec = spec.clone();
+        // queue_cap 1 ⇒ the dispatcher keeps exactly one request in
+        // flight, so the second request waits in the fair queue where
+        // queued-expiry is deterministic.
+        start_pool_sched(1, 1, 1, fifo_sched(8), SessionOptions::default(), move |_| {
+            common::mk_engine("cached", &spec)
+        })
+    };
+    let door = FrontDoor::start(handle, FrontDoorConfig::default()).expect("bind");
+    let mut stream = TcpStream::connect(door.addr()).expect("connect");
+
+    let slow_prompt: Vec<i32> = (0..16).map(|i| i % spec.vocab as i32).collect();
+    let slow = ClientFrame::Request(wire(1, 0, 0, 0, 512, None, "", slow_prompt.clone()));
+    let doomed = ClientFrame::Request(wire(2, 0, 0, 1, 4, None, "", vec![5]));
+    write_frame(&mut stream, &encode_client(&slow)).unwrap();
+    write_frame(&mut stream, &encode_client(&doomed)).unwrap();
+
+    let outcomes = collect(&mut stream, 2);
+    let slow_out = &outcomes[&1];
+    assert!(slow_out.done.is_some(), "the in-flight request must complete");
+    assert_eq!(
+        slow_out.tokens,
+        common::reference_stream(&spec, &slow_prompt, 512),
+        "the surviving stream must stay bit-identical"
+    );
+    let doomed_out = &outcomes[&2];
+    assert_eq!(doomed_out.cancelled, Some(true), "deadline expiry reason byte");
+    assert_eq!(doomed_out.token_frames, 0, "an expired request streams nothing");
+    drop(stream);
+
+    let report = door.shutdown();
+    assert_eq!(report.pool.aggregate.completed, 1);
+    assert_eq!(
+        report.pool.aggregate.completed + report.pool.aggregate.rejected,
+        1,
+        "the expired request must never have reached the pool"
+    );
+    let t = &report.tenants["default"];
+    assert_eq!((t.submitted, t.completed, t.expired), (2, 1, 1));
+}
+
+/// ISSUE acceptance: a client that disconnects mid-generation frees its
+/// slot AND its session lease — pinned by the chaos occupancy audit —
+/// and the pool accounting still balances exactly.
+#[test]
+fn client_disconnect_mid_generation_frees_slot_and_lease() {
+    let spec = common::base_spec(0xD15C, 2, 32, 48, 1);
+    let plan = FaultPlan::new();
+    let log = audit_log();
+    let handle = {
+        let (spec, plan, log) = (spec.clone(), Arc::clone(&plan), Arc::clone(&log));
+        let opts = SessionOptions { retained_slots: 1, retain_ttl_iters: 0 };
+        start_pool_sched(1, 2, 16, fifo_sched(8), opts, move |worker| {
+            Ok(ChaosEngine::new(
+                common::mk_engine("cached", &spec)?,
+                Arc::clone(&plan),
+                Arc::clone(&log),
+                worker,
+            ))
+        })
+    };
+    let door = FrontDoor::start(handle, FrontDoorConfig::default()).expect("bind");
+    let mut stream = TcpStream::connect(door.addr()).expect("connect");
+
+    // Turn 1 completes and leases its slot for warm resume.
+    let mut store = SessionStore::new();
+    let sid = store.open();
+    let turn1 = store.turn(sid, &[3, 1, 4]).unwrap();
+    let req1 =
+        ClientFrame::Request(wire(1, sid.0, 0, 0, 4, turn1.resume.clone(), "", turn1.prompt.clone()));
+    write_frame(&mut stream, &encode_client(&req1)).unwrap();
+    let outcomes = collect(&mut stream, 1);
+    let t1 = outcomes[&1].tokens.clone();
+    assert_eq!(t1, common::reference_stream(&spec, &turn1.prompt, 4), "turn 1 stream");
+    store.record(sid, &t1).unwrap();
+
+    // Turn 2 resumes warm with a generation far too long to finish,
+    // then the client vanishes mid-generation.
+    let turn2 = store.turn(sid, &[2, 7]).unwrap();
+    assert!(turn2.resume.is_some(), "second turns resume");
+    let req2 =
+        ClientFrame::Request(wire(2, sid.0, 0, 0, 100_000, turn2.resume.clone(), "", turn2.prompt));
+    write_frame(&mut stream, &encode_client(&req2)).unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // let it reach a slot
+    drop(stream);
+
+    let report = door.shutdown();
+    assert_eq!(report.pool.aggregate.completed, 1, "only turn 1 completed");
+    assert_eq!(
+        report.pool.aggregate.completed + report.pool.aggregate.rejected,
+        2,
+        "the torn-down turn must still be accounted"
+    );
+    assert_eq!(report.pool.aggregate.cancelled, 1, "the teardown was a cancellation");
+    let t = &report.tenants["default"];
+    assert_eq!((t.submitted, t.completed, t.cancelled), (2, 1, 1));
+
+    let reports = take_reports(&log);
+    assert_eq!(reports.len(), 1);
+    assert!(!reports[0].fault_fired);
+    assert_eq!(reports[0].occupied, 0, "disconnect must free the in-flight slot");
+    assert_eq!(reports[0].retained, 0, "the consumed lease must not linger");
+}
+
+/// Overload: a pipelined burst beyond `shed_queue` is answered
+/// `Overloaded` straight from the socket; admitted requests complete
+/// bit-identically and every request lands in exactly one outcome.
+#[test]
+fn overload_sheds_cheaply_and_admitted_work_completes() {
+    let spec = common::base_spec(0x10AD, 2, 32, 48, 1);
+    let handle = {
+        let spec = spec.clone();
+        start_pool_sched(1, 2, 1, fifo_sched(8), SessionOptions::default(), move |_| {
+            common::mk_engine("cached", &spec)
+        })
+    };
+    let door = FrontDoor::start(
+        handle,
+        FrontDoorConfig { shed_queue: 1, ..FrontDoorConfig::default() },
+    )
+    .expect("bind");
+    let mut stream = TcpStream::connect(door.addr()).expect("connect");
+
+    let n = 12u64;
+    let prompts: Vec<Vec<i32>> = (0..n).map(|i| vec![i as i32 % spec.vocab as i32, 7, 3]).collect();
+    for (i, prompt) in prompts.iter().enumerate() {
+        let frame = ClientFrame::Request(wire(i as u64 + 1, 0, 0, 0, 150, None, "", prompt.clone()));
+        write_frame(&mut stream, &encode_client(&frame)).unwrap();
+    }
+    let outcomes = collect(&mut stream, n as usize);
+    drop(stream);
+
+    let mut done = 0u64;
+    let mut shed = 0u64;
+    for (i, prompt) in prompts.iter().enumerate() {
+        let o = &outcomes[&(i as u64 + 1)];
+        match (o.done.is_some(), o.overloaded) {
+            (true, false) => {
+                done += 1;
+                assert_eq!(
+                    o.tokens,
+                    common::reference_stream(&spec, prompt, 150),
+                    "admitted request {i} diverged under overload"
+                );
+            }
+            (false, true) => {
+                shed += 1;
+                assert!(o.tokens.is_empty(), "shed request {i} must stream nothing");
+            }
+            other => panic!("request {i} has no single terminal outcome: {other:?}"),
+        }
+    }
+    assert_eq!(done + shed, n, "every request lands in exactly one outcome");
+    assert!(done >= 1, "the first request is admitted before any backlog exists");
+    assert!(shed >= 1, "a 12-deep burst over shed_queue=1 must shed");
+
+    let report = door.shutdown();
+    assert_eq!(report.pool.aggregate.completed, done, "the pool saw only admitted work");
+    assert_eq!(report.pool.aggregate.rejected, 0, "shedding happened at the socket, not the pool");
+    let t = &report.tenants["default"];
+    assert_eq!((t.submitted, t.completed, t.shed), (n, done, shed));
+    assert_eq!(t.cancelled + t.expired, 0);
+}
+
+/// `Box<dyn StepEngine>` must stay usable behind the chaos wrapper the
+/// disconnect/cancellation tests rely on (compile-time contract pin).
+#[test]
+fn chaos_wrap_preserves_the_step_engine_contract() {
+    let spec = common::base_spec(0x0B0E, 2, 16, 48, 1);
+    let engine =
+        ChaosEngine::new(common::mk_engine("cached", &spec).unwrap(), FaultPlan::new(), audit_log(), 0);
+    assert_eq!(engine.slots(), 2);
+    assert_eq!(engine.seq(), 16);
+    assert_eq!(engine.vocab(), 48);
+}

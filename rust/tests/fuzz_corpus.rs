@@ -97,6 +97,21 @@ fn slot_cache_matches_model_on_fuzzed_schedules() {
 }
 
 #[test]
+fn frame_codec_roundtrips_on_fuzzed_frames() {
+    run(
+        "frame_roundtrip",
+        fuzz::frame_roundtrip,
+        &[
+            include_bytes!("../fuzz/corpus/frame_roundtrip/seed-request").as_slice(),
+            include_bytes!("../fuzz/corpus/frame_roundtrip/seed-resume").as_slice(),
+            include_bytes!("../fuzz/corpus/frame_roundtrip/seed-cancel").as_slice(),
+            include_bytes!("../fuzz/corpus/frame_roundtrip/seed-tokens").as_slice(),
+            include_bytes!("../fuzz/corpus/frame_roundtrip/seed-hostile").as_slice(),
+        ],
+    );
+}
+
+#[test]
 fn histogram_matches_sorted_oracle_on_fuzzed_streams() {
     run(
         "histogram",
