@@ -45,11 +45,16 @@
 //! shed turns lose session affinity and cold-prefill) to measure the
 //! unloaded TTFT baseline; phase 2 replays a stateless open-loop burst
 //! train at 2x the measured unloaded throughput so admission shedding
-//! engages. The run persists `BENCH_frontdoor.json` (both phases'
-//! percentiles + per-tenant accounting) and prints a machine-checkable
-//! `PERF_GATE frontdoor_shed_graceful` line: p99 TTFT of *admitted*
+//! engages; phase 3 replays the same burst train with the live admin
+//! plane scraped at 1 Hz in the background. The run persists
+//! `BENCH_frontdoor.json` (all phases' percentiles + per-tenant
+//! accounting) and prints two machine-checkable gates:
+//! `PERF_GATE frontdoor_shed_graceful` — p99 TTFT of *admitted*
 //! requests under 2x overload must stay within 1.5x of the unloaded p99
-//! (plus a 10ms jitter floor) — overload must shed, not queue-collapse.
+//! (plus a 10ms jitter floor), overload must shed, not queue-collapse —
+//! and `PERF_GATE admin_scrape_overhead` — the scraped overload phase's
+//! admitted p99 TTFT must stay within 1.05x of the unscraped phase's
+//! (same jitter floor): observability must be free at the data plane.
 //!
 //! Run: `cargo run --release --example serve_bench -- \
 //!       [requests] [gen_tokens] [--engine host|cached|speculative|fp|lut] \
@@ -57,7 +62,7 @@
 //!       [--draft-k N] [--draft narrow|oracle] \
 //!       [--turns N] [--resume-rate R] [--retained-slots N] [--workers N] \
 //!       [--compare-admission] [--frontdoor] \
-//!       [--telemetry-json PATH] [--validate-json PATH]`
+//!       [--telemetry-json PATH] [--validate-json PATH] [--validate-prom PATH]`
 //! Without `--engine`, sweeps host and cached across worker counts, then
 //! the speculative engine across draft kinds.
 //!
@@ -65,7 +70,12 @@
 //! snapshot (counters + phase latency histograms) as JSON;
 //! `--validate-json PATH` parses a JSON artifact with the crate's own
 //! parser and exits (nonzero on failure) — the CI check for
-//! `BENCH_serving.json`.
+//! `BENCH_serving.json`; `--validate-prom PATH` runs the same check on a
+//! Prometheus text exposition via [`lcd::telemetry::prometheus_lint`] —
+//! the CI check for admin-plane `/metrics` scrapes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 use lcd::config::LcdConfig;
 use lcd::coordinator::frontdoor::{
@@ -73,8 +83,10 @@ use lcd::coordinator::frontdoor::{
 };
 use lcd::coordinator::server;
 use lcd::coordinator::{
-    CachedLutEngine, ClientFrame, FrontDoor, HostLutSpec, ServerFrame, SessionStore, WireRequest,
+    AdminServer, AdminState, CachedLutEngine, ClientFrame, FrontDoor, FrontDoorObs, HostLutSpec,
+    MetricsRegistry, ServerFrame, SessionStore, WireRequest,
 };
+use lcd::telemetry::{prometheus_lint, FlightRecorder, SloTracker};
 use lcd::data::{eval_lm_batches, CharTokenizer, CorpusSpec, SyntheticCorpus};
 use lcd::repro::shared::build_step_engine;
 use lcd::util::{Json, Rng, ZipfTable};
@@ -251,6 +263,41 @@ fn percentile_us(samples: &mut Vec<u64>, q: f64) -> u64 {
     samples[idx.min(samples.len() - 1)]
 }
 
+/// Mixed prompt-length classes, as production traffic has: chats,
+/// paragraphs, and documents.
+const CLASSES: [&str; 3] = [
+    "hi ",
+    "the cat sat on the mat and then the bird moved over the river ",
+    "every lamp in the long hall glows while two plus three is five and \
+     the river runs past the quiet mill toward the sea again and again \
+     because the story repeats itself for as long as anyone listens ",
+];
+
+fn tenant_of(idx: usize) -> &'static str {
+    if idx % 4 == 3 {
+        "bronze"
+    } else {
+        "gold"
+    }
+}
+
+/// Blocking HTTP/1.0 GET against the admin plane; returns (status, body).
+fn http_get(addr: std::net::SocketAddr, target: &str) -> anyhow::Result<(u16, String)> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
+    write!(s, "GET {target} HTTP/1.0\r\n\r\n")?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw)?;
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed admin response: {raw:?}"))?;
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    Ok((status, body))
+}
+
 /// What one wire-level request came back as.
 enum WireOutcome {
     Done { tokens: Vec<i32>, ttft_us: u64 },
@@ -278,6 +325,81 @@ fn read_outcome(stream: &mut std::net::TcpStream, id: u64) -> anyhow::Result<Wir
     }
 }
 
+/// One open-loop overload phase's client-side measurements.
+struct OverloadResult {
+    ttft: Vec<u64>,
+    shed: u64,
+    completed: usize,
+    wall: f64,
+}
+
+/// Open-loop burst train: a writer thread pushes stateless requests on
+/// schedule regardless of completions (that is what open-loop means)
+/// while this thread drains terminals; pipelining on one connection
+/// keeps frame order deterministic per request id.
+fn overload_phase(
+    stream: &mut std::net::TcpStream,
+    first_id: u64,
+    n2: usize,
+    gap_us: u64,
+    gen_tokens: usize,
+    seed: u64,
+) -> anyhow::Result<OverloadResult> {
+    let mut writer = stream.try_clone()?;
+    let writer_thread = std::thread::spawn(move || -> anyhow::Result<()> {
+        let mut rng = Rng::new(seed);
+        let tok = CharTokenizer::new();
+        let mut sent = 0usize;
+        while sent < n2 {
+            let burst = (1 + rng.below(4)).min(n2 - sent);
+            for b in 0..burst {
+                let i = sent + b;
+                let wire = WireRequest {
+                    id: first_id + i as u64,
+                    session: 0,
+                    priority: (i % 4) as u8,
+                    deadline_ms: 0,
+                    gen_tokens: gen_tokens as u32,
+                    resume: None,
+                    tenant: tenant_of(i).to_string(),
+                    prompt: tok.encode(CLASSES[i % CLASSES.len()]),
+                    trace_id: 0,
+                };
+                write_frame(&mut writer, &encode_client(&ClientFrame::Request(wire)))?;
+            }
+            sent += burst;
+            std::thread::sleep(std::time::Duration::from_micros(
+                (burst as u64 * gap_us).min(100_000),
+            ));
+        }
+        Ok(())
+    });
+    let mut ttft = Vec::new();
+    let mut shed = 0u64;
+    let t = std::time::Instant::now();
+    // Token frames interleave with terminals on the shared stream, so
+    // drain until all n2 requests have concluded one way or the other.
+    let mut terminals = 0u64;
+    while terminals < n2 as u64 {
+        let payload = read_frame(stream, MAX_FRAME)?
+            .ok_or_else(|| anyhow::anyhow!("server closed mid-overload"))?;
+        match decode_server(&payload)? {
+            ServerFrame::Tokens { .. } => {}
+            ServerFrame::Done { ttft_us, .. } => {
+                ttft.push(ttft_us);
+                terminals += 1;
+            }
+            ServerFrame::Overloaded { .. } => {
+                shed += 1;
+                terminals += 1;
+            }
+            ServerFrame::Cancelled { .. } => anyhow::bail!("overload phase cancelled a request"),
+        }
+    }
+    writer_thread.join().expect("writer thread")?;
+    Ok(OverloadResult { completed: ttft.len(), ttft, shed, wall: t.elapsed().as_secs_f64() })
+}
+
 /// Production-shaped workload through the TCP front door.
 ///
 /// Phase 1 (unloaded baseline): Zipf-popular sessions served closed-loop
@@ -299,14 +421,17 @@ fn drive_frontdoor(
     let engine_name = engine.to_string();
     // Small admission + pool queues on purpose: the overload phase must
     // actually overflow them, and graceful shedding is exactly the
-    // behaviour under test.
-    let handle = server::start_pool_tele(
+    // behaviour under test. The registry + admin plane ride along so
+    // phase 3 can measure the cost of scraping a loaded pool.
+    let registry = Arc::new(MetricsRegistry::new(cfg.serve.workers));
+    let handle = server::start_pool_obs(
         cfg.serve.workers,
         cfg.serve.max_batch,
         8,
         sched,
         cfg.serve.session_options(),
         cfg.serve.telemetry_config(),
+        Some(Arc::clone(&registry)),
         move |_worker| build_step_engine(&cfg2, &engine_name),
     );
     let mut door_cfg = cfg.serve.frontdoor_config()?;
@@ -314,20 +439,23 @@ fn drive_frontdoor(
         door_cfg.tenant_weights = vec![("gold".to_string(), 3), ("bronze".to_string(), 1)];
     }
     door_cfg.shed_queue = 8;
-    let door = FrontDoor::start(handle, door_cfg)?;
+    let slo = Arc::new(SloTracker::new(0, 0.99));
+    let recorder = Arc::new(Mutex::new(FlightRecorder::new(&cfg.serve.telemetry_config())));
+    let obs = FrontDoorObs { slo: Some(Arc::clone(&slo)), recorder: Some(Arc::clone(&recorder)) };
+    let door = FrontDoor::start_obs(handle, door_cfg, obs)?;
     let addr = door.addr();
+    let admin = AdminServer::start(
+        "127.0.0.1:0",
+        AdminState {
+            registry,
+            slo: Some(slo),
+            frontdoor: Some(door.stats_handle()),
+            frontdoor_recorder: Some(recorder),
+        },
+    )?;
+    let admin_addr = admin.addr();
 
     let tok = CharTokenizer::new();
-    // Mixed prompt-length classes, as production traffic has: chats,
-    // paragraphs, and documents.
-    let classes = [
-        "hi ",
-        "the cat sat on the mat and then the bird moved over the river ",
-        "every lamp in the long hall glows while two plus three is five and \
-         the river runs past the quiet mill toward the sea again and again \
-         because the story repeats itself for as long as anyone listens ",
-    ];
-    let tenant_of = |idx: usize| if idx % 4 == 3 { "bronze" } else { "gold" };
     let mut rng = Rng::new(cfg.seed ^ 0xf207);
     let mut next_id = 0u64;
 
@@ -348,7 +476,7 @@ fn drive_frontdoor(
     for _ in 0..total_turns {
         let s = zipf.sample(&mut rng);
         let sid = sessions[s];
-        let user = tok.encode(classes[s % classes.len()]);
+        let user = tok.encode(CLASSES[s % CLASSES.len()]);
         let mut turn = store.turn(sid, &user)?;
         if shed_last[s] {
             turn.resume = None; // affinity lost with the shed turn's slot
@@ -364,6 +492,7 @@ fn drive_frontdoor(
             resume: turn.resume,
             tenant: tenant_of(s).to_string(),
             prompt: turn.prompt,
+            trace_id: 0,
         };
         write_frame(&mut stream, &encode_client(&ClientFrame::Request(wire)))?;
         match read_outcome(&mut stream, next_id)? {
@@ -389,78 +518,65 @@ fn drive_frontdoor(
          {rate1:.1} req/s, ttft p50 {un_p50}us p99 {un_p99}us"
     );
 
-    // Phase 2: open-loop burst train at 2x the unloaded rate. A writer
-    // pushes bursts on schedule regardless of completions (that is what
-    // open-loop means) while this thread drains terminals; pipelining on
-    // one connection keeps frame order deterministic per request id.
+    // Phase 2: open-loop burst train at 2x the unloaded rate, no
+    // observers — the shed-gracefulness baseline.
     let n2 = total_turns.max(32);
-    let first_id = next_id + 1;
     let gap_us = (1e6 / (2.0 * rate1)) as u64;
-    let mut writer = stream.try_clone()?;
-    let write_rng_seed = cfg.seed ^ 0x0be5;
-    let writer_thread = std::thread::spawn(move || -> anyhow::Result<()> {
-        let mut rng = Rng::new(write_rng_seed);
-        let tok = CharTokenizer::new();
-        let mut sent = 0usize;
-        while sent < n2 {
-            let burst = (1 + rng.below(4)).min(n2 - sent);
-            for b in 0..burst {
-                let i = sent + b;
-                let wire = WireRequest {
-                    id: first_id + i as u64,
-                    session: 0,
-                    priority: (i % 4) as u8,
-                    deadline_ms: 0,
-                    gen_tokens: gen_tokens as u32,
-                    resume: None,
-                    tenant: tenant_of(i).to_string(),
-                    prompt: tok.encode(classes[i % classes.len()]),
-                };
-                write_frame(&mut writer, &encode_client(&ClientFrame::Request(wire)))?;
-            }
-            sent += burst;
-            std::thread::sleep(std::time::Duration::from_micros(
-                (burst as u64 * gap_us).min(100_000),
-            ));
-        }
-        Ok(())
-    });
-    let mut overload_ttft = Vec::new();
-    let mut overload_shed = 0u64;
-    let t2 = std::time::Instant::now();
-    // Token frames interleave with terminals on the shared stream, so
-    // drain until all n2 requests have concluded one way or the other.
-    let mut terminals = 0u64;
-    while terminals < n2 as u64 {
-        let payload = read_frame(&mut stream, MAX_FRAME)?
-            .ok_or_else(|| anyhow::anyhow!("server closed mid-overload"))?;
-        match decode_server(&payload)? {
-            ServerFrame::Tokens { .. } => {}
-            ServerFrame::Done { ttft_us, .. } => {
-                overload_ttft.push(ttft_us);
-                terminals += 1;
-            }
-            ServerFrame::Overloaded { .. } => {
-                overload_shed += 1;
-                terminals += 1;
-            }
-            ServerFrame::Cancelled { .. } => anyhow::bail!("overload phase cancelled a request"),
-        }
-    }
-    writer_thread.join().expect("writer thread")?;
-    let wall2 = t2.elapsed().as_secs_f64();
-    let completed2 = overload_ttft.len();
-    let over_p50 = percentile_us(&mut overload_ttft, 0.50);
-    let over_p99 = percentile_us(&mut overload_ttft, 0.99);
-    let shed_rate = overload_shed as f64 / n2 as f64;
+    let mut r2 =
+        overload_phase(&mut stream, next_id + 1, n2, gap_us, gen_tokens, cfg.seed ^ 0x0be5)?;
+    next_id += n2 as u64;
+    let over_p50 = percentile_us(&mut r2.ttft, 0.50);
+    let over_p99 = percentile_us(&mut r2.ttft, 0.99);
     println!(
-        "frontdoor 2x overload: {completed2}/{n2} done, {overload_shed} shed \
-         ({:.0}% shed rate), {:.1} req/s admitted, ttft p50 {over_p50}us p99 {over_p99}us",
-        shed_rate * 100.0,
-        completed2 as f64 / wall2.max(1e-9),
+        "frontdoor 2x overload: {}/{n2} done, {} shed ({:.0}% shed rate), \
+         {:.1} req/s admitted, ttft p50 {over_p50}us p99 {over_p99}us",
+        r2.completed,
+        r2.shed,
+        r2.shed as f64 / n2 as f64 * 100.0,
+        r2.completed as f64 / r2.wall.max(1e-9),
+    );
+
+    // Phase 3: the identical burst train with the admin plane scraped
+    // at 1 Hz in the background — the cost of live observability under
+    // load. Every scrape must lint clean; a scraper that never lands is
+    // a failed measurement, not a pass.
+    let scrape_stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&scrape_stop);
+    let scraper = std::thread::spawn(move || -> anyhow::Result<u64> {
+        let mut scrapes = 0u64;
+        while !stop2.load(Ordering::Relaxed) {
+            let (status, body) = http_get(admin_addr, "/metrics")?;
+            anyhow::ensure!(status == 200, "/metrics answered {status} under load");
+            prometheus_lint(&body)
+                .map_err(|e| anyhow::anyhow!("scrape {scrapes} failed lint: {e}"))?;
+            let (status, _) = http_get(admin_addr, "/healthz")?;
+            anyhow::ensure!(status == 200, "/healthz answered {status} under load");
+            scrapes += 1;
+            // 1 Hz, polled in small steps so stop latency stays low.
+            for _ in 0..20 {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+        Ok(scrapes)
+    });
+    let mut r3 =
+        overload_phase(&mut stream, next_id + 1, n2, gap_us, gen_tokens, cfg.seed ^ 0x3c1a)?;
+    scrape_stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().expect("scraper thread")?;
+    let scrape_p50 = percentile_us(&mut r3.ttft, 0.50);
+    let scrape_p99 = percentile_us(&mut r3.ttft, 0.99);
+    println!(
+        "frontdoor 2x overload + 1Hz admin scrape: {}/{n2} done, {} shed, {scrapes} scrapes, \
+         ttft p50 {scrape_p50}us p99 {scrape_p99}us",
+        r3.completed, r3.shed,
     );
     drop(stream);
     let report = door.shutdown();
+    admin.stop();
+    let (completed2, overload_shed, wall2) = (r2.completed, r2.shed, r2.wall);
 
     // The gate: admitted work must not pay for the shed work. The 1.5x
     // ratio bounds queueing inflation; the 10ms floor absorbs scheduler
@@ -471,6 +587,19 @@ fn drive_frontdoor(
         "PERF_GATE frontdoor_shed_graceful p99 {over_p99}us vs unloaded {un_p99}us \
          limit {limit:.2}x+10ms shed {overload_shed}/{n2} {}",
         if ok { "PASS" } else { "FAIL" }
+    );
+    // The admin gate: a 1 Hz scraper is an observer, not a participant.
+    // The registry decouples scrapes from worker iterations (workers
+    // publish snapshots; the listener only reads them), so the scraped
+    // phase's admitted p99 must track the unscraped phase's within 5%
+    // (same 10ms jitter floor as above).
+    let scrape_limit = 1.05;
+    let scrape_ok =
+        r3.completed > 0 && scrapes > 0 && scrape_p99 <= over_p99 * 21 / 20 + 10_000;
+    println!(
+        "PERF_GATE admin_scrape_overhead p99 {scrape_p99}us vs unscraped {over_p99}us \
+         limit {scrape_limit:.2}x+10ms scrapes {scrapes} {}",
+        if scrape_ok { "PASS" } else { "FAIL" }
     );
 
     let phase_json = |reqs: usize, done: usize, shed: u64, p50: u64, p99: u64, wall: f64| {
@@ -500,18 +629,31 @@ fn drive_frontdoor(
         ("engine", Json::str(engine)),
         (
             "gates",
-            Json::arr(vec![Json::obj(vec![
-                ("name", Json::str("frontdoor_shed_graceful")),
-                ("ratio", Json::num(over_p99 as f64 / (un_p99.max(1)) as f64)),
-                ("limit", Json::num(limit)),
-                ("pass", Json::Bool(ok)),
-            ])]),
+            Json::arr(vec![
+                Json::obj(vec![
+                    ("name", Json::str("frontdoor_shed_graceful")),
+                    ("ratio", Json::num(over_p99 as f64 / (un_p99.max(1)) as f64)),
+                    ("limit", Json::num(limit)),
+                    ("pass", Json::Bool(ok)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("admin_scrape_overhead")),
+                    ("ratio", Json::num(scrape_p99 as f64 / (over_p99.max(1)) as f64)),
+                    ("limit", Json::num(scrape_limit)),
+                    ("scrapes", Json::int(scrapes as usize)),
+                    ("pass", Json::Bool(scrape_ok)),
+                ]),
+            ]),
         ),
         (
             "phases",
             Json::obj(vec![
                 ("unloaded", phase_json(total_turns, completed1, unloaded_shed, un_p50, un_p99, wall1)),
                 ("overload", phase_json(n2, completed2, overload_shed, over_p50, over_p99, wall2)),
+                (
+                    "overload_scraped",
+                    phase_json(n2, r3.completed, r3.shed, scrape_p50, scrape_p99, r3.wall),
+                ),
             ]),
         ),
         ("tenants", Json::arr(tenants)),
@@ -520,10 +662,10 @@ fn drive_frontdoor(
         .map_err(|e| anyhow::anyhow!("writing BENCH_frontdoor.json: {e}"))?;
     println!("front-door trajectory written to BENCH_frontdoor.json");
     anyhow::ensure!(
-        report.pool.aggregate.completed as usize == completed1 + completed2,
+        report.pool.aggregate.completed as usize == completed1 + completed2 + r3.completed,
         "socket-side and pool-side completion counts diverged: {} vs {}",
         report.pool.aggregate.completed,
-        completed1 + completed2
+        completed1 + completed2 + r3.completed
     );
     Ok(())
 }
@@ -636,6 +778,21 @@ fn main() -> anyhow::Result<()> {
                 println!("validated {path}");
                 return Ok(());
             }
+            // CI helper: promtool-style validation of a Prometheus text
+            // exposition (an admin-plane /metrics scrape) — nonzero when
+            // the file is missing or a sample would be rejected.
+            "--validate-prom" => {
+                i += 1;
+                let path = argv
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("--validate-prom needs a path"))?;
+                let text = std::fs::read_to_string(&path)
+                    .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+                prometheus_lint(&text).map_err(|e| anyhow::anyhow!("linting {path}: {e}"))?;
+                println!("validated {path}");
+                return Ok(());
+            }
             "--draft-k" => {
                 i += 1;
                 let v =
@@ -658,7 +815,7 @@ fn main() -> anyhow::Result<()> {
                      [--draft-k N] [--draft narrow|oracle] \
                      [--turns N] [--resume-rate R] [--retained-slots N] [--workers N] \
                      [--compare-admission] [--frontdoor] \
-                     [--telemetry-json PATH] [--validate-json PATH]"
+                     [--telemetry-json PATH] [--validate-json PATH] [--validate-prom PATH]"
                 );
             }
             other => positional.push(other.parse()?),

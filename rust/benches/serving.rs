@@ -111,6 +111,7 @@ fn main() {
                 reply: tx.clone(),
                 t_submit: Instant::now(),
                 session: None,
+                trace: 0,
             });
             debug_assert!(ok);
         }
@@ -144,6 +145,7 @@ fn main() {
                     reply: tx.clone(),
                     t_submit: Instant::now(),
                     session: None,
+                    trace: 0,
                 });
             }
             let mut admitted = 0usize;
@@ -569,6 +571,7 @@ fn drain_chunk_budget(budgeted: bool) -> (usize, usize) {
             reply: tx.clone(),
             t_submit: Instant::now(),
             session: None,
+            trace: 0,
         });
         assert!(ok, "queue cap must fit the whole request set");
     }

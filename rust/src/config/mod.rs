@@ -123,6 +123,18 @@ pub struct ServeConfig {
     /// Admission-queue depth at which the front door sheds new requests
     /// with `Overloaded` straight from the socket reader (>= 1).
     pub shed_queue: usize,
+    /// Admin-plane bind address (`/metrics`, `/healthz`, `/readyz`,
+    /// `/slo`, `/flight?worker=N`); empty = admin plane off. Requires
+    /// the front door (`serve.listen`) — the admin plane introspects
+    /// the pool it wraps.
+    pub admin_listen: String,
+    /// TTFT objective in milliseconds for the SLO burn-rate watchdog:
+    /// completed requests slower than this count against the error
+    /// budget. 0 = no latency objective (availability only).
+    pub slo_ttft_ms: u64,
+    /// Availability objective in (0, 1): the error-budget denominator
+    /// behind `/slo` burn rates and the `/readyz` fast-burn watchdog.
+    pub slo_availability: f64,
 }
 
 impl Default for ServeConfig {
@@ -153,6 +165,9 @@ impl Default for ServeConfig {
             tenant_weights: String::new(),
             deadline_ms: 0,
             shed_queue: 64,
+            admin_listen: String::new(),
+            slo_ttft_ms: 0,
+            slo_availability: 0.99,
         }
     }
 }
@@ -378,6 +393,15 @@ impl LcdConfig {
             if let Some(v) = s.get("shed_queue") {
                 cfg.serve.shed_queue = v.as_usize()?;
             }
+            if let Some(v) = s.get("admin_listen") {
+                cfg.serve.admin_listen = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("slo_ttft_ms") {
+                cfg.serve.slo_ttft_ms = v.as_f64()? as u64;
+            }
+            if let Some(v) = s.get("slo_availability") {
+                cfg.serve.slo_availability = v.as_f64()?;
+            }
         }
         // Fail on bad serving knobs at load time, not at serve time.
         cfg.serve.admission_policy()?;
@@ -430,6 +454,11 @@ impl LcdConfig {
         // Fail on malformed tenant weights at load time, not at the
         // first socket accept.
         crate::coordinator::frontdoor::parse_tenant_weights(&cfg.serve.tenant_weights)?;
+        // An objective at 0 would make every request a budget violation
+        // and at 1 would divide the burn rate by zero.
+        if !(cfg.serve.slo_availability > 0.0 && cfg.serve.slo_availability < 1.0) {
+            bail!("serve.slo_availability must be in (0, 1)");
+        }
         Ok(cfg)
     }
 
@@ -587,6 +616,15 @@ impl LcdConfig {
                 self.serve.tenant_weights = value.to_string();
             }
             "serve.deadline_ms" => self.serve.deadline_ms = value.parse()?,
+            "serve.admin_listen" => self.serve.admin_listen = value.to_string(),
+            "serve.slo_ttft_ms" => self.serve.slo_ttft_ms = value.parse()?,
+            "serve.slo_availability" => {
+                let v: f64 = value.parse()?;
+                if !(v > 0.0 && v < 1.0) {
+                    bail!("serve.slo_availability must be in (0, 1)");
+                }
+                self.serve.slo_availability = v;
+            }
             "serve.shed_queue" => {
                 let v: usize = value.parse()?;
                 if v == 0 {
@@ -972,6 +1010,39 @@ mod tests {
         assert_eq!(cfg.serve.shed_queue, 64);
         cfg.set_override("serve.shed_queue=2").unwrap();
         assert_eq!(cfg.serve.shed_queue, 2);
+    }
+
+    #[test]
+    fn admin_plane_knobs_parse_validate_and_override() {
+        let doc = Json::parse(
+            r#"{"serve": {"listen": "127.0.0.1:7070", "admin_listen": "127.0.0.1:9100",
+                "slo_ttft_ms": 250, "slo_availability": 0.999}}"#,
+        )
+        .unwrap();
+        let cfg = LcdConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serve.admin_listen, "127.0.0.1:9100");
+        assert_eq!(cfg.serve.slo_ttft_ms, 250);
+        assert_eq!(cfg.serve.slo_availability, 0.999);
+        // Defaults: admin plane off, availability objective 99%.
+        let d = LcdConfig::default();
+        assert_eq!(d.serve.admin_listen, "");
+        assert_eq!(d.serve.slo_ttft_ms, 0);
+        assert_eq!(d.serve.slo_availability, 0.99);
+        // The availability objective must be a real ratio.
+        let bad = |s: &str| LcdConfig::from_json(&Json::parse(s).unwrap()).is_err();
+        assert!(bad(r#"{"serve": {"slo_availability": 0}}"#));
+        assert!(bad(r#"{"serve": {"slo_availability": 1}}"#));
+        assert!(bad(r#"{"serve": {"slo_availability": 1.5}}"#));
+        // Overrides mirror the load-time checks and stay atomic.
+        let mut cfg = LcdConfig::default();
+        cfg.set_override("serve.admin_listen=127.0.0.1:0").unwrap();
+        assert_eq!(cfg.serve.admin_listen, "127.0.0.1:0");
+        cfg.set_override("serve.slo_ttft_ms=100").unwrap();
+        assert_eq!(cfg.serve.slo_ttft_ms, 100);
+        assert!(cfg.set_override("serve.slo_availability=1.0").is_err());
+        assert_eq!(cfg.serve.slo_availability, 0.99, "failed override leaves config untouched");
+        cfg.set_override("serve.slo_availability=0.995").unwrap();
+        assert_eq!(cfg.serve.slo_availability, 0.995);
     }
 
     #[test]

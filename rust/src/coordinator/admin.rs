@@ -1,0 +1,546 @@
+//! Live HTTP admin plane: on-demand `/metrics`, `/healthz`, `/readyz`,
+//! `/slo` and `/flight` introspection for a running pool.
+//!
+//! Everything the pool publishes after exit (`--telemetry-dump`, the
+//! shutdown report) is visible here *while it serves*, through the
+//! lock-cheap [`MetricsRegistry`] publication layer: workers push
+//! throttled [`MetricsSnapshot`]s, gauges and flight dumps into their
+//! registry slot (`server::start_pool_obs`), the front door exposes its
+//! socket-side accounting through [`FrontDoorStats`], and this module
+//! serves both over a dependency-free HTTP/1.0 listener on `std::net` —
+//! the same no-external-crates discipline as the front door itself.
+//! A scrape never touches a worker thread: it reads the slots the
+//! workers already paid to publish (at most one snapshot clone per
+//! worker per `PUBLISH_INTERVAL`), so `/metrics` at any sane rate
+//! cannot move serving tails (the `admin_scrape_overhead` PERF_GATE in
+//! `examples/serve_bench.rs` enforces this).
+//!
+//! # Endpoints
+//!
+//! * `GET /metrics` — Prometheus text format: every pool counter and
+//!   percentile gauge as `worker="N"`-labeled series, aggregate phase
+//!   histograms (the order-independent fold of per-worker
+//!   [`PhaseStats`]), per-tenant front-door counters and TTFT
+//!   histograms as `tenant="..."`-labeled series, live gauges (worker
+//!   in-flight, lease occupancy, queue depth, front-door backlog), and
+//!   SLO burn rates. The output passes `telemetry::prometheus_lint`.
+//! * `GET /healthz` — liveness: 200 while at least one worker slot is
+//!   alive, 503 after the pool dies or drains.
+//! * `GET /readyz` — readiness: like `/healthz`, but also 503 while
+//!   the SLO watchdog reports a fast-burn ([`SloTracker::degraded`]) —
+//!   the signal a load balancer uses to stop routing here.
+//! * `GET /slo` — the burn-rate JSON ([`SloTracker::to_json`]): both
+//!   windows, good/bad counts, objectives, degraded flag.
+//! * `GET /flight?worker=N` — the worker's most recently published
+//!   flight dump as `chrome://tracing` JSON, without killing the
+//!   process. `worker=frontdoor` (or N = worker count) serves the
+//!   front door's own recorder: receive/queue/stream-out spans.
+//!
+//! The listener is deliberately serial (one connection at a time, 2 s
+//! socket timeouts, 8 KiB request cap): the admin plane is for one
+//! scraper and an operator's curl, and a stalled client must not pin
+//! threads the serving path could use.
+
+use super::frontdoor::{FrontDoorStats, TenantStats};
+use super::request::{help_for, Metrics};
+use super::server::MetricsRegistry;
+use crate::telemetry::{
+    FlightRecorder, PhaseStats, SloTracker, FAST_BURN_WINDOW_SECS, SLOW_BURN_WINDOW_SECS,
+};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Per-connection socket timeout: an operator's curl is instant, and a
+/// stalled scraper must not wedge the (serial) admin loop.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Request-head size cap; admin requests are one line plus headers.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Everything the admin endpoints read. All handles are shared,
+/// lock-cheap views — building one never copies serving state.
+#[derive(Clone)]
+pub struct AdminState {
+    /// Per-worker snapshot slots published by `start_pool_obs`.
+    pub registry: Arc<MetricsRegistry>,
+    /// SLO burn-rate tracker (shared with the front door's
+    /// `FrontDoorObs`); `None` disables `/slo` and the `/readyz`
+    /// watchdog.
+    pub slo: Option<Arc<SloTracker>>,
+    /// Front-door socket-side accounting (`FrontDoor::stats_handle`).
+    pub frontdoor: Option<FrontDoorStats>,
+    /// The front door's shared flight recorder, served by
+    /// `/flight?worker=frontdoor`.
+    pub frontdoor_recorder: Option<Arc<Mutex<FlightRecorder>>>,
+}
+
+impl Default for AdminState {
+    /// An empty state (zero registry slots): every endpoint still
+    /// answers, `/healthz` reports no live workers.
+    fn default() -> AdminState {
+        AdminState {
+            registry: Arc::new(MetricsRegistry::new(0)),
+            slo: None,
+            frontdoor: None,
+            frontdoor_recorder: None,
+        }
+    }
+}
+
+/// A running admin listener. Dropping it without [`AdminServer::stop`]
+/// leaves the thread serving until the process exits (it holds only
+/// shared read handles); tests call `stop()` for a clean join.
+pub struct AdminServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl AdminServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:9100"`; port 0 picks an
+    /// ephemeral port) and serve the admin endpoints over `state`.
+    pub fn start(listen: &str, state: AdminState) -> Result<AdminServer> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding admin listener {listen}"))?;
+        let addr = listener.local_addr().context("resolving admin address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("lcd-admin".to_string())
+            .spawn(move || accept_loop(listener, state, stop2))
+            .context("spawning admin thread")?;
+        Ok(AdminServer { addr, stop, join: Some(join) })
+    }
+
+    /// The bound address (for `--admin-listen 127.0.0.1:0` callers).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // `incoming()` blocks; a throwaway self-connection makes it
+        // yield once so the loop observes the flag (the same shutdown
+        // idiom as the front door's accept loop).
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: AdminState, stop: Arc<AtomicBool>) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let Ok(mut stream) = stream else { continue };
+        let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+        let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+        let _ = handle_connection(&mut stream, &state);
+    }
+}
+
+/// Read one request head, route it, write one response. Errors are
+/// per-connection (a half-open socket just drops) and never propagate
+/// to the accept loop.
+fn handle_connection(stream: &mut TcpStream, state: &AdminState) -> Result<()> {
+    let head = read_request_head(stream)?;
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let (method, target) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        respond(stream, 405, "Method Not Allowed", "text/plain", "admin plane is GET-only\n");
+        return Ok(());
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    match path {
+        "/metrics" => {
+            let body = metrics_text(state);
+            respond(stream, 200, "OK", "text/plain; version=0.0.4", &body);
+        }
+        "/healthz" => {
+            let alive = state.registry.alive_count();
+            if alive > 0 {
+                respond(stream, 200, "OK", "text/plain", "ok\n");
+            } else {
+                respond(stream, 503, "Service Unavailable", "text/plain", "no live workers\n");
+            }
+        }
+        "/readyz" => {
+            let alive = state.registry.alive_count();
+            let burning = state.slo.as_deref().is_some_and(SloTracker::degraded);
+            if alive == 0 {
+                respond(stream, 503, "Service Unavailable", "text/plain", "no live workers\n");
+            } else if burning {
+                respond(
+                    stream,
+                    503,
+                    "Service Unavailable",
+                    "text/plain",
+                    "slo fast-burn: error budget exhausting\n",
+                );
+            } else {
+                respond(stream, 200, "OK", "text/plain", "ok\n");
+            }
+        }
+        "/slo" => match &state.slo {
+            Some(slo) => {
+                respond(stream, 200, "OK", "application/json", &slo.to_json().to_string())
+            }
+            None => respond(stream, 404, "Not Found", "text/plain", "no slo configured\n"),
+        },
+        "/flight" => {
+            let worker = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("worker="))
+                .unwrap_or("0");
+            serve_flight(stream, state, worker);
+        }
+        _ => respond(stream, 404, "Not Found", "text/plain", "unknown admin endpoint\n"),
+    }
+    Ok(())
+}
+
+fn serve_flight(stream: &mut TcpStream, state: &AdminState, worker: &str) {
+    let workers = state.registry.len();
+    let frontdoor_slot = worker == "frontdoor"
+        || worker.parse::<usize>().is_ok_and(|n| n == workers);
+    if frontdoor_slot {
+        match &state.frontdoor_recorder {
+            Some(rec) => {
+                let dump =
+                    rec.lock().unwrap_or_else(|e| e.into_inner()).dump(workers);
+                respond(stream, 200, "OK", "application/json", &dump.chrome_trace().to_string());
+            }
+            None => respond(
+                stream,
+                404,
+                "Not Found",
+                "text/plain",
+                "front door recorder not configured\n",
+            ),
+        }
+        return;
+    }
+    let Ok(n) = worker.parse::<usize>() else {
+        respond(stream, 404, "Not Found", "text/plain", "worker must be an index\n");
+        return;
+    };
+    match state.registry.flight(n) {
+        Some(dump) => {
+            respond(stream, 200, "OK", "application/json", &dump.chrome_trace().to_string())
+        }
+        None => respond(
+            stream,
+            404,
+            "Not Found",
+            "text/plain",
+            "no flight dump published for that worker (telemetry off, or index out of range)\n",
+        ),
+    }
+}
+
+fn read_request_head(stream: &mut TcpStream) -> Result<String> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = stream.read(&mut chunk).context("reading admin request")?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n") {
+            break;
+        }
+        anyhow::ensure!(buf.len() <= MAX_REQUEST_BYTES, "admin request head too large");
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}
+
+fn respond(stream: &mut TcpStream, status: u16, reason: &str, content_type: &str, body: &str) {
+    let head = format!(
+        "HTTP/1.0 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+}
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double quote and newline. Tenant names come off the wire, so they
+/// are hostile until proven otherwise.
+fn label_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Build the `/metrics` exposition. One `# HELP`/`# TYPE` header per
+/// family, then one `worker="N"`- or `tenant="..."`-labeled series per
+/// publisher, so real scrapers ingest it unmodified — pinned by
+/// `telemetry::prometheus_lint` in the admin-plane tests and the CI
+/// admin-smoke job.
+pub fn metrics_text(state: &AdminState) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let slots: Vec<_> = (0..state.registry.len())
+        .filter_map(|w| state.registry.snapshot(w).map(|s| (w, s)))
+        .collect();
+    // Field names come from a zero template so header emission does not
+    // depend on at least one worker having published yet.
+    let template = Metrics::default().snapshot();
+    for (i, (name, _)) in template.counter_fields().iter().enumerate() {
+        let _ = writeln!(out, "# HELP lcd_{name} {}", help_for(name));
+        let _ = writeln!(out, "# TYPE lcd_{name} counter");
+        for (w, snap) in &slots {
+            let _ = writeln!(out, "lcd_{name}{{worker=\"{w}\"}} {}", snap.counter_fields()[i].1);
+        }
+    }
+    for (i, (name, _)) in template.percentile_fields().iter().enumerate() {
+        let _ = writeln!(out, "# HELP lcd_{name} {}", help_for(name));
+        let _ = writeln!(out, "# TYPE lcd_{name} gauge");
+        for (w, snap) in &slots {
+            let _ =
+                writeln!(out, "lcd_{name}{{worker=\"{w}\"}} {}", snap.percentile_fields()[i].1);
+        }
+    }
+    let _ = writeln!(out, "# HELP lcd_tokens_per_sec {}", help_for("tokens_per_sec"));
+    let _ = writeln!(out, "# TYPE lcd_tokens_per_sec gauge");
+    for (w, snap) in &slots {
+        let _ = writeln!(out, "lcd_tokens_per_sec{{worker=\"{w}\"}} {}", snap.tokens_per_sec);
+    }
+    // Live worker gauges straight from the registry (present even for
+    // slots that have not published a snapshot yet).
+    let gauge_fams: [(&str, &str, fn(&crate::telemetry::Gauges) -> u64); 3] = [
+        ("lcd_worker_in_flight", "Sessions admitted on the worker (active + pending).", |g| {
+            g.in_flight
+        }),
+        ("lcd_worker_queue_depth", "Pool queue depth observed by the worker at publish time.", |g| {
+            g.queue_depth
+        }),
+        ("lcd_worker_leases", "Retained session leases held by the worker.", |g| g.leases),
+    ];
+    for (name, help, get) in gauge_fams {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        for w in 0..state.registry.len() {
+            let _ = writeln!(out, "{name}{{worker=\"{w}\"}} {}", get(&state.registry.gauges(w)));
+        }
+    }
+    let _ = writeln!(out, "# HELP lcd_worker_alive Worker liveness flag (1 = serving).");
+    let _ = writeln!(out, "# TYPE lcd_worker_alive gauge");
+    for w in 0..state.registry.len() {
+        let _ =
+            writeln!(out, "lcd_worker_alive{{worker=\"{w}\"}} {}", u64::from(state.registry.alive(w)));
+    }
+    // Pool queue depth: every worker observes the same shared queue, so
+    // the freshest (max) published observation stands for the pool.
+    let queue_depth =
+        (0..state.registry.len()).map(|w| state.registry.gauges(w).queue_depth).max().unwrap_or(0);
+    let _ = writeln!(out, "# HELP lcd_pool_queue_depth Requests waiting in the shared pool queue.");
+    let _ = writeln!(out, "# TYPE lcd_pool_queue_depth gauge");
+    let _ = writeln!(out, "lcd_pool_queue_depth {queue_depth}");
+    // Aggregate phase histograms: the order-independent fold of every
+    // published worker's PhaseStats (bucket-wise merge, see
+    // `telemetry::Histogram::merge`).
+    let mut phases = PhaseStats::default();
+    for (_, snap) in &slots {
+        phases.merge(&snap.phases);
+    }
+    for (name, hist) in phases.named() {
+        if !hist.is_empty() {
+            hist.prometheus_with_help_into(
+                &format!("lcd_phase_{name}"),
+                help_for(name),
+                "",
+                &mut out,
+            );
+        }
+    }
+    if let Some(fd) = &state.frontdoor {
+        let _ = writeln!(out, "# HELP lcd_frontdoor_backlog Requests waiting in the fair queue.");
+        let _ = writeln!(out, "# TYPE lcd_frontdoor_backlog gauge");
+        let _ = writeln!(out, "lcd_frontdoor_backlog {}", fd.backlog());
+        let _ = writeln!(
+            out,
+            "# HELP lcd_frontdoor_inflight Requests submitted to the pool and not yet resolved."
+        );
+        let _ = writeln!(out, "# TYPE lcd_frontdoor_inflight gauge");
+        let _ = writeln!(out, "lcd_frontdoor_inflight {}", fd.inflight());
+        let tenants = fd.tenants();
+        let tenant_fams: [(&str, &str, fn(&TenantStats) -> u64); 5] = [
+            ("lcd_tenant_submitted", "Tenant requests received on the socket (pre-shed).", |t| {
+                t.submitted
+            }),
+            ("lcd_tenant_completed", "Tenant requests that streamed to Done.", |t| t.completed),
+            ("lcd_tenant_shed", "Tenant requests answered Overloaded.", |t| t.shed),
+            ("lcd_tenant_cancelled", "Tenant requests torn down by cancel or disconnect.", |t| {
+                t.cancelled
+            }),
+            ("lcd_tenant_expired", "Tenant requests torn down by deadline expiry.", |t| t.expired),
+        ];
+        for (name, help, get) in tenant_fams {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for (tenant, stats) in &tenants {
+                let _ = writeln!(
+                    out,
+                    "{name}{{tenant=\"{}\"}} {}",
+                    label_escape(tenant),
+                    get(stats)
+                );
+            }
+        }
+        if tenants.values().any(|t| !t.ttft_us.is_empty()) {
+            let _ = writeln!(
+                out,
+                "# HELP lcd_tenant_ttft_us Tenant TTFT from socket receipt (µs, fair-queue wait included)."
+            );
+            let _ = writeln!(out, "# TYPE lcd_tenant_ttft_us histogram");
+            for (tenant, stats) in &tenants {
+                if !stats.ttft_us.is_empty() {
+                    stats.ttft_us.prometheus_series_into(
+                        "lcd_tenant_ttft_us",
+                        &format!("tenant=\"{}\"", label_escape(tenant)),
+                        &mut out,
+                    );
+                }
+            }
+        }
+    }
+    if let Some(slo) = &state.slo {
+        let fast = slo.window(FAST_BURN_WINDOW_SECS);
+        let slow = slo.window(SLOW_BURN_WINDOW_SECS);
+        let _ = writeln!(
+            out,
+            "# HELP lcd_slo_burn_rate Error-budget burn rate over the alerting windows."
+        );
+        let _ = writeln!(out, "# TYPE lcd_slo_burn_rate gauge");
+        let _ = writeln!(out, "lcd_slo_burn_rate{{window=\"fast\"}} {}", fast.burn_rate);
+        let _ = writeln!(out, "lcd_slo_burn_rate{{window=\"slow\"}} {}", slow.burn_rate);
+        let _ = writeln!(out, "# HELP lcd_slo_degraded SLO watchdog fast-burn flag (1 = degraded).");
+        let _ = writeln!(out, "# TYPE lcd_slo_degraded gauge");
+        let _ = writeln!(out, "lcd_slo_degraded {}", u64::from(slo.degraded()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Phase;
+
+    fn get(addr: SocketAddr, target: &str) -> (u16, String) {
+        let mut stream = TcpStream::connect(addr).expect("connecting admin");
+        write!(stream, "GET {target} HTTP/1.0\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        let status: u16 = buf
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .expect("status line");
+        let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    fn test_state() -> AdminState {
+        let registry = Arc::new(MetricsRegistry::new(2));
+        let mut m = Metrics::default();
+        m.completed = 3;
+        m.phases.decode_us.record(120);
+        registry.publish(0, m.snapshot());
+        registry.set_gauges(0, crate::telemetry::Gauges { in_flight: 1, queue_depth: 4, leases: 2 });
+        AdminState { registry, ..AdminState::default() }
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_labeled_lint_clean_text() {
+        let admin = AdminServer::start("127.0.0.1:0", test_state()).unwrap();
+        let (status, body) = get(admin.addr(), "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("lcd_completed{worker=\"0\"} 3"), "{body}");
+        assert!(body.contains("# TYPE lcd_completed counter"));
+        assert!(body.contains("lcd_worker_queue_depth{worker=\"0\"} 4"));
+        assert!(body.contains("lcd_pool_queue_depth 4"));
+        assert!(body.contains("lcd_phase_decode_us_count 1"));
+        crate::telemetry::prometheus_lint(&body).expect("scrape must lint clean");
+        admin.stop();
+    }
+
+    #[test]
+    fn health_flips_with_worker_liveness_and_slo_burn() {
+        let state = test_state();
+        let slo = Arc::new(SloTracker::new(0, 0.99));
+        let state =
+            AdminState { slo: Some(Arc::clone(&slo)), ..state };
+        let admin = AdminServer::start("127.0.0.1:0", state.clone()).unwrap();
+        assert_eq!(get(admin.addr(), "/healthz").0, 200, "published slot 0 is alive");
+        assert_eq!(get(admin.addr(), "/readyz").0, 200);
+        // Fast-burn: all-bad traffic at 99% availability burns 100x.
+        for _ in 0..50 {
+            slo.record_bad();
+        }
+        assert_eq!(get(admin.addr(), "/readyz").0, 503, "watchdog must trip on fast-burn");
+        assert_eq!(get(admin.addr(), "/healthz").0, 200, "liveness ignores the SLO");
+        let (status, body) = get(admin.addr(), "/slo");
+        assert_eq!(status, 200);
+        assert!(body.contains("\"degraded\":true"), "{body}");
+        // Both workers gone: liveness drops too.
+        state.registry.set_alive(0, false);
+        assert_eq!(get(admin.addr(), "/healthz").0, 503);
+        admin.stop();
+    }
+
+    #[test]
+    fn flight_endpoint_serves_dumps_and_404s_cleanly() {
+        let state = test_state();
+        let mut rec = FlightRecorder::new(&crate::telemetry::TelemetryConfig::default());
+        rec.begin_iteration(1);
+        rec.mark_traced(Phase::Admit, 7, 0xabcd);
+        state.registry.publish_flight(0, rec.dump(0));
+        let admin = AdminServer::start("127.0.0.1:0", state).unwrap();
+        let (status, body) = get(admin.addr(), "/flight?worker=0");
+        assert_eq!(status, 200);
+        assert!(body.contains("000000000000abcd"), "trace id must render: {body}");
+        assert_eq!(get(admin.addr(), "/flight?worker=1").0, 404, "no dump published");
+        assert_eq!(get(admin.addr(), "/flight?worker=zzz").0, 404);
+        assert_eq!(get(admin.addr(), "/flight?worker=frontdoor").0, 404, "no fd recorder");
+        assert_eq!(get(admin.addr(), "/nope").0, 404);
+        admin.stop();
+    }
+
+    #[test]
+    fn non_get_methods_are_rejected() {
+        let admin = AdminServer::start("127.0.0.1:0", AdminState::default()).unwrap();
+        let mut stream = TcpStream::connect(admin.addr()).unwrap();
+        write!(stream, "POST /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.0 405"), "{buf}");
+        admin.stop();
+    }
+
+    #[test]
+    fn label_escaping_keeps_hostile_tenants_lintable() {
+        assert_eq!(label_escape("plain"), "plain");
+        assert_eq!(label_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

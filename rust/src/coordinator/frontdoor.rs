@@ -41,7 +41,7 @@ use anyhow::{bail, Context, Result};
 use super::request::Metrics;
 use super::server::{ServerHandle, ServerReport};
 use super::session::{ResumeTurn, SessionId, TurnRequest};
-use crate::telemetry::Histogram;
+use crate::telemetry::{FlightRecorder, Histogram, Phase, SloTracker};
 use crate::util::Json;
 
 /// Wire protocol version this build speaks (`docs/PROTOCOL.md`).
@@ -85,6 +85,11 @@ pub struct WireRequest {
     pub tenant: String,
     /// Full-history prompt.
     pub prompt: Vec<i32>,
+    /// Client trace id (optional frame extension; `0` = absent). When
+    /// set, every flight-recorder span the request touches — frame
+    /// receipt, fair-queue wait, admission, scheduler phases, stream-out
+    /// — carries it, so one grep reconstructs the request's timeline.
+    pub trace_id: u64,
 }
 
 /// Client → server frames.
@@ -178,6 +183,10 @@ impl<'a> Cursor<'a> {
         Ok(i32::from_be_bytes(self.take(4)?.try_into().expect("take returned 4 bytes")))
     }
 
+    fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
     fn tokens(&mut self, n: usize, what: &str) -> Result<Vec<i32>> {
         if n > MAX_PROMPT_TOKENS {
             bail!("{what} count {n} exceeds {MAX_PROMPT_TOKENS}");
@@ -241,6 +250,22 @@ pub fn decode_client(payload: &[u8]) -> Result<ClientFrame> {
                 .to_string();
             let n = cur.u32()? as usize;
             let prompt = cur.tokens(n, "prompt")?;
+            // Optional trailing extension block. Exactly one encoding
+            // per value keeps the frame canonical: absent extension ⇔
+            // trace_id 0, present ⇔ tag 0x01 + a nonzero trace id.
+            let trace_id = if cur.remaining() == 0 {
+                0
+            } else {
+                let tag = cur.u8()?;
+                if tag != 0x01 {
+                    bail!("unknown request extension tag {tag:#04x}");
+                }
+                let t = cur.u64()?;
+                if t == 0 {
+                    bail!("trace_id extension must carry a nonzero id");
+                }
+                t
+            };
             ClientFrame::Request(WireRequest {
                 id,
                 session,
@@ -250,6 +275,7 @@ pub fn decode_client(payload: &[u8]) -> Result<ClientFrame> {
                 resume,
                 tenant,
                 prompt,
+                trace_id,
             })
         }
         TYPE_CANCEL => ClientFrame::Cancel { id: cur.u64()? },
@@ -315,6 +341,10 @@ pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
             out.extend_from_slice(&(r.prompt.len() as u32).to_be_bytes());
             for t in &r.prompt {
                 out.extend_from_slice(&t.to_be_bytes());
+            }
+            if r.trace_id != 0 {
+                out.push(0x01);
+                out.extend_from_slice(&r.trace_id.to_be_bytes());
             }
         }
         ClientFrame::Cancel { id } => {
@@ -696,6 +726,73 @@ pub struct FrontDoorReport {
 type SharedWriter = Arc<Mutex<TcpStream>>;
 type TenantMap = Arc<Mutex<BTreeMap<String, TenantStats>>>;
 
+/// Observability hooks threaded through the front door by
+/// [`FrontDoor::start_obs`]: an optional SLO tracker (each terminal
+/// outcome recorded as good/bad) and an optional shared flight
+/// recorder (frame receipt, fair-queue wait, and stream-out events, so
+/// the admin plane's `/flight` covers the socket side too).
+#[derive(Clone, Default)]
+pub struct FrontDoorObs {
+    /// Burn-rate tracker fed by request outcomes.
+    pub slo: Option<Arc<SloTracker>>,
+    /// Frontdoor-side flight recorder (shared: reader threads mark
+    /// frame receipt, the dispatcher marks queue-wait and stream-out).
+    pub recorder: Option<Arc<Mutex<FlightRecorder>>>,
+}
+
+impl FrontDoorObs {
+    fn mark(&self, phase: Phase, request: u64, trace: u64) {
+        if let Some(rec) = &self.recorder {
+            rec.lock().unwrap_or_else(|e| e.into_inner()).mark_traced(phase, request, trace);
+        }
+    }
+
+    fn mark_span(&self, phase: Phase, request: u64, trace: u64, dur_us: u64) {
+        if let Some(rec) = &self.recorder {
+            rec.lock().unwrap_or_else(|e| e.into_inner()).mark_span(phase, request, trace, dur_us);
+        }
+    }
+
+    fn slo_good_ttft(&self, ttft_us: u64) {
+        if let Some(slo) = &self.slo {
+            slo.record_ttft(ttft_us);
+        }
+    }
+
+    fn slo_bad(&self) {
+        if let Some(slo) = &self.slo {
+            slo.record_bad();
+        }
+    }
+}
+
+/// Live read handle onto the front door's socket-side accounting, for
+/// the admin plane. All reads are poison-tolerant — a chaos-killed
+/// thread that died holding the tenant lock must not wedge a scrape.
+#[derive(Clone)]
+pub struct FrontDoorStats {
+    tenants: TenantMap,
+    backlog: Arc<AtomicUsize>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl FrontDoorStats {
+    /// Snapshot the per-tenant counters (cloned out under the lock).
+    pub fn tenants(&self) -> BTreeMap<String, TenantStats> {
+        self.tenants.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Requests waiting in the fair queue (pre-pool admission).
+    pub fn backlog(&self) -> usize {
+        self.backlog.load(Ordering::Relaxed)
+    }
+
+    /// Requests submitted to the pool and not yet resolved.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
 enum Event {
     Open { conn: u64, writer: SharedWriter },
     Request { conn: u64, wire: WireRequest, received: Instant },
@@ -712,6 +809,8 @@ pub struct FrontDoor {
     accept: Option<JoinHandle<()>>,
     dispatcher: Option<JoinHandle<ServerReport>>,
     tenants: TenantMap,
+    backlog: Arc<AtomicUsize>,
+    inflight: Arc<AtomicUsize>,
 }
 
 impl FrontDoor {
@@ -719,11 +818,22 @@ impl FrontDoor {
     /// pool. The handle moves into the dispatcher thread (it is not
     /// `Sync`); it is shut down when the front door is.
     pub fn start(handle: ServerHandle, cfg: FrontDoorConfig) -> Result<FrontDoor> {
+        FrontDoor::start_obs(handle, cfg, FrontDoorObs::default())
+    }
+
+    /// [`FrontDoor::start`] with observability hooks: SLO outcome
+    /// recording and socket-side flight events for the admin plane.
+    pub fn start_obs(
+        handle: ServerHandle,
+        cfg: FrontDoorConfig,
+        obs: FrontDoorObs,
+    ) -> Result<FrontDoor> {
         let listener =
             TcpListener::bind(&cfg.listen).with_context(|| format!("binding {}", cfg.listen))?;
         let addr = listener.local_addr().context("resolving bound address")?;
         let stop = Arc::new(AtomicBool::new(false));
         let backlog = Arc::new(AtomicUsize::new(0));
+        let inflight = Arc::new(AtomicUsize::new(0));
         let tenants: TenantMap = Arc::new(Mutex::new(BTreeMap::new()));
         let (ev_tx, ev_rx) = channel();
 
@@ -733,8 +843,9 @@ impl FrontDoor {
                 let stop = Arc::clone(&stop);
                 let backlog = Arc::clone(&backlog);
                 let tenants = Arc::clone(&tenants);
+                let obs = obs.clone();
                 let shed_queue = cfg.shed_queue;
-                move || accept_loop(listener, ev_tx, stop, backlog, tenants, shed_queue)
+                move || accept_loop(listener, ev_tx, stop, backlog, tenants, obs, shed_queue)
             })
             .context("spawning accept thread")?;
 
@@ -742,18 +853,36 @@ impl FrontDoor {
             .name("lcd-frontdoor-dispatch".to_string())
             .spawn({
                 let backlog = Arc::clone(&backlog);
+                let inflight = Arc::clone(&inflight);
                 let tenants = Arc::clone(&tenants);
                 let cfg = cfg.clone();
-                move || dispatcher_loop(handle, cfg, ev_rx, backlog, tenants)
+                move || dispatcher_loop(handle, cfg, ev_rx, backlog, inflight, tenants, obs)
             })
             .context("spawning dispatcher thread")?;
 
-        Ok(FrontDoor { addr, stop, accept: Some(accept), dispatcher: Some(dispatcher), tenants })
+        Ok(FrontDoor {
+            addr,
+            stop,
+            accept: Some(accept),
+            dispatcher: Some(dispatcher),
+            tenants,
+            backlog,
+            inflight,
+        })
     }
 
     /// The bound address (resolves `:0` ephemeral ports).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Live socket-side accounting handle for the admin plane.
+    pub fn stats_handle(&self) -> FrontDoorStats {
+        FrontDoorStats {
+            tenants: Arc::clone(&self.tenants),
+            backlog: Arc::clone(&self.backlog),
+            inflight: Arc::clone(&self.inflight),
+        }
     }
 
     /// Stop accepting, drain in-flight work, shut the pool down, and
@@ -784,6 +913,7 @@ fn accept_loop(
     stop: Arc<AtomicBool>,
     backlog: Arc<AtomicUsize>,
     tenants: TenantMap,
+    obs: FrontDoorObs,
     shed_queue: usize,
 ) {
     let mut next_conn = 0u64;
@@ -814,6 +944,7 @@ fn accept_loop(
             stop: Arc::clone(&stop),
             backlog: Arc::clone(&backlog),
             tenants: Arc::clone(&tenants),
+            obs: obs.clone(),
             shed_queue,
         };
         let _ = std::thread::Builder::new()
@@ -829,6 +960,7 @@ struct ReaderCtx {
     stop: Arc<AtomicBool>,
     backlog: Arc<AtomicUsize>,
     tenants: TenantMap,
+    obs: FrontDoorObs,
     shed_queue: usize,
 }
 
@@ -851,12 +983,15 @@ fn reader_loop(mut stream: TcpStream, ctx: ReaderCtx) {
                 if wire.tenant.is_empty() {
                     wire.tenant = "default".to_string();
                 }
+                // The trace's root span: the request exists from here.
+                ctx.obs.mark(Phase::Receive, wire.id, wire.trace_id);
                 bump_tenant(&ctx.tenants, &wire.tenant, |t| t.submitted += 1);
                 let depth = ctx.backlog.load(Ordering::Relaxed);
                 if depth >= ctx.shed_queue {
                     // Admission-level shed: answer right here, cheaply —
                     // the dispatcher and pool never see the request.
                     bump_tenant(&ctx.tenants, &wire.tenant, |t| t.shed += 1);
+                    ctx.obs.slo_bad();
                     let frame =
                         ServerFrame::Overloaded { id: wire.id, queue_depth: depth as u32 };
                     let mut w = ctx.writer.lock().unwrap_or_else(|e| e.into_inner());
@@ -898,6 +1033,7 @@ struct Pending {
     deadline: Option<Instant>,
     rx: Receiver<super::request::GenResponse>,
     state: PendState,
+    trace: u64,
 }
 
 fn send_to(writers: &mut HashMap<u64, SharedWriter>, conn: u64, frame: &ServerFrame) {
@@ -923,7 +1059,9 @@ fn dispatcher_loop(
     cfg: FrontDoorConfig,
     events: Receiver<Event>,
     backlog: Arc<AtomicUsize>,
+    inflight: Arc<AtomicUsize>,
     tenants: TenantMap,
+    obs: FrontDoorObs,
 ) -> ServerReport {
     let inflight_cap = handle.queue_cap().max(1);
     let stream_chunk = cfg.stream_chunk.max(1);
@@ -1000,6 +1138,7 @@ fn dispatcher_loop(
             idle = false;
             backlog.fetch_sub(1, Ordering::Relaxed);
             bump_tenant(&tenants, &entry.wire.tenant, |t| t.expired += 1);
+            obs.slo_bad();
             send_to(
                 &mut writers,
                 entry.conn,
@@ -1011,6 +1150,7 @@ fn dispatcher_loop(
                 idle = false;
                 p.state = PendState::DeadlineExpired;
                 bump_tenant(&tenants, &p.tenant, |t| t.expired += 1);
+                obs.slo_bad();
                 handle.cancel(pid);
             }
         }
@@ -1024,17 +1164,22 @@ fn dispatcher_loop(
             let QueuedRequest { conn, wire, received, deadline } = entry;
             let tenant = wire.tenant.clone();
             let wire_id = wire.id;
+            let trace = wire.trace_id;
             let gen = wire.gen_tokens as usize;
             let submitted = Instant::now();
+            // The fair-queue wait, closed at submission — the span
+            // between frame receipt and pool admission in a trace.
+            let wait_us = submitted.duration_since(received).as_micros() as u64;
+            obs.mark_span(Phase::Queue, wire_id, trace, wait_us);
             let (pid, rx) = if wire.session != 0 {
                 let turn = TurnRequest {
                     session: SessionId(wire.session),
                     prompt: wire.prompt,
                     resume: wire.resume,
                 };
-                handle.submit_turn_with_id(turn, gen)
+                handle.submit_turn_with_id_traced(turn, gen, trace)
             } else {
-                handle.submit_with_id(wire.prompt, gen)
+                handle.submit_with_id_traced(wire.prompt, gen, trace)
             };
             by_wire.insert((conn, wire_id), pid);
             pending.insert(
@@ -1048,9 +1193,11 @@ fn dispatcher_loop(
                     deadline,
                     rx,
                     state: PendState::Live,
+                    trace,
                 },
             );
         }
+        inflight.store(pending.len(), Ordering::Relaxed);
 
         // 4. Poll in-flight responses.
         let mut resolved: Vec<(u64, Option<super::request::GenResponse>)> = Vec::new();
@@ -1076,6 +1223,7 @@ fn dispatcher_loop(
                         t.completed += 1;
                         t.ttft_us.record(ttft_us);
                     });
+                    obs.slo_good_ttft(ttft_us);
                     for chunk in resp.tokens.chunks(stream_chunk) {
                         send_to(
                             &mut writers,
@@ -1088,6 +1236,8 @@ fn dispatcher_loop(
                         p.conn,
                         &ServerFrame::Done { id: p.wire_id, ttft_us, latency_us },
                     );
+                    // The trace's terminal span: response fully written.
+                    obs.mark(Phase::StreamOut, p.wire_id, p.trace);
                 }
                 None => {
                     let frame = match p.state {
@@ -1096,6 +1246,7 @@ fn dispatcher_loop(
                             // response: backpressure reject or worker
                             // death — either way, shed.
                             bump_tenant(&tenants, &p.tenant, |t| t.shed += 1);
+                            obs.slo_bad();
                             ServerFrame::Overloaded {
                                 id: p.wire_id,
                                 queue_depth: backlog.load(Ordering::Relaxed) as u32,
@@ -1113,6 +1264,7 @@ fn dispatcher_loop(
                 }
             }
         }
+        inflight.store(pending.len(), Ordering::Relaxed);
 
         // Exit only when every event sender (accept loop + readers) has
         // hung up AND all admitted work drained — a late Request can
@@ -1150,6 +1302,7 @@ mod tests {
                 resume: None,
                 tenant: tenant.to_string(),
                 prompt: vec![1],
+                trace_id: 0,
             },
             received: Instant::now(),
             deadline: None,
@@ -1168,6 +1321,7 @@ mod tests {
                 resume: None,
                 tenant: "acme".to_string(),
                 prompt: vec![3, 5],
+                trace_id: 0,
             }),
             ClientFrame::Request(WireRequest {
                 id: 8,
@@ -1178,6 +1332,18 @@ mod tests {
                 resume: Some(ResumeTurn { pending: 9, append: vec![4] }),
                 tenant: "beta".to_string(),
                 prompt: vec![1, 2, 9, 4],
+                trace_id: 0,
+            }),
+            ClientFrame::Request(WireRequest {
+                id: 9,
+                session: 0,
+                priority: 2,
+                deadline_ms: 100,
+                gen_tokens: 1,
+                resume: None,
+                tenant: "acme".to_string(),
+                prompt: vec![11],
+                trace_id: 0xdead_beef_0042_0007,
             }),
             ClientFrame::Cancel { id: 7 },
         ];
@@ -1215,6 +1381,7 @@ mod tests {
             resume: Some(ResumeTurn { pending: 6, append: vec![7] }),
             tenant: "t".to_string(),
             prompt: vec![8],
+            trace_id: 0,
         }));
         for cut in 0..full.len() {
             assert!(decode_client(&full[..cut]).is_err(), "prefix {cut} must not decode");
@@ -1239,6 +1406,7 @@ mod tests {
             resume: None,
             tenant: String::new(),
             prompt: vec![],
+            trace_id: 0,
         }));
         let mut resumed = stateless.clone();
         assert_eq!(resumed[27], 0, "resume flag offset");
@@ -1260,10 +1428,62 @@ mod tests {
             resume: None,
             tenant: "ab".to_string(),
             prompt: vec![],
+            trace_id: 0,
         }));
         // Tenant bytes start after the u16 length at offset 28.
         bad_utf8[30] = 0xff;
         assert!(decode_client(&bad_utf8).is_err());
+    }
+
+    #[test]
+    fn trace_extension_is_canonical() {
+        let base = WireRequest {
+            id: 5,
+            session: 0,
+            priority: 0,
+            deadline_ms: 0,
+            gen_tokens: 2,
+            resume: None,
+            tenant: "t".to_string(),
+            prompt: vec![1, 2],
+            trace_id: 0,
+        };
+        let plain = encode_client(&ClientFrame::Request(base.clone()));
+        let traced = encode_client(&ClientFrame::Request(WireRequest {
+            trace_id: 0x0102_0304_0506_0708,
+            ..base.clone()
+        }));
+        // The extension is exactly 9 trailing bytes: tag + trace id.
+        assert_eq!(traced.len(), plain.len() + 9);
+        assert_eq!(&traced[..plain.len()], &plain[..], "prefix is byte-identical");
+        assert_eq!(traced[plain.len()], 0x01, "extension tag");
+        // Round trip preserves the id.
+        match decode_client(&traced).unwrap() {
+            ClientFrame::Request(r) => assert_eq!(r.trace_id, 0x0102_0304_0506_0708),
+            other => panic!("decoded {other:?}"),
+        }
+        // A zero trace id must be encoded by absence — the explicit
+        // form is rejected (unique encoding keeps the frame canonical).
+        let mut zero = plain.clone();
+        zero.push(0x01);
+        zero.extend_from_slice(&0u64.to_be_bytes());
+        assert!(decode_client(&zero).is_err(), "explicit zero trace id is non-canonical");
+        // Unknown extension tags are rejected, not skipped.
+        let mut unknown = plain.clone();
+        unknown.push(0x02);
+        unknown.extend_from_slice(&7u64.to_be_bytes());
+        assert!(decode_client(&unknown).is_err());
+        // Truncated extension bodies are rejected.
+        for cut in 1..9 {
+            let mut short = plain.clone();
+            short.push(0x01);
+            short.extend_from_slice(&7u64.to_be_bytes()[..cut - 1]);
+            assert!(decode_client(&short).is_err(), "truncated extension ({cut} bytes)");
+        }
+        // Trailing garbage after a complete extension still errors.
+        let mut long = traced.clone();
+        long.push(0);
+        assert!(decode_client(&long).is_err());
     }
 
     #[test]

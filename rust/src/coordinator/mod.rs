@@ -55,7 +55,14 @@
 //!   mid-plan with exact `completed + rejected == submitted`
 //!   accounting), and admission-level load shedding that answers
 //!   `Overloaded` straight from the socket reader. Operator docs in
-//!   `docs/OPERATIONS.md`, request lifecycle in `docs/ARCHITECTURE.md`.
+//!   `docs/OPERATIONS.md`, request lifecycle in `docs/ARCHITECTURE.md`;
+//! * [`admin`] — the live admin plane: a dependency-free HTTP/1.0
+//!   listener (`serve.admin_listen`) serving `/metrics` (Prometheus
+//!   text over the [`server::MetricsRegistry`] snapshot layer),
+//!   `/healthz` + `/readyz` (worker liveness and the SLO fast-burn
+//!   watchdog), `/slo` (burn-rate JSON), and `/flight?worker=N`
+//!   (on-demand chrome-trace flight dumps) — converting the exit-time
+//!   telemetry artifacts into a scrapeable operational surface.
 //!
 //! # Scheduler
 //!
@@ -172,6 +179,7 @@
 //!   `serve_bench --telemetry-json PATH` write the exposition formats
 //!   (Prometheus text / JSON snapshot).
 
+pub mod admin;
 pub mod batcher;
 #[cfg(any(test, feature = "chaos"))]
 pub mod chaos;
@@ -185,13 +193,14 @@ pub mod server;
 pub mod session;
 pub mod speculative;
 
+pub use admin::{AdminServer, AdminState};
 pub use batcher::{window_clip, AdmissionPolicy, Batcher, Session};
 #[cfg(any(test, feature = "chaos"))]
 pub use chaos::{AuditReport, ChaosEngine, FaultPlan, FaultPoint};
 pub use engines::{HostLutEngine, HostLutModel, HostLutSpec};
 pub use frontdoor::{
-    ClientFrame, FairQueue, FrontDoor, FrontDoorConfig, FrontDoorReport, ServerFrame, TenantStats,
-    WireRequest,
+    ClientFrame, FairQueue, FrontDoor, FrontDoorConfig, FrontDoorObs, FrontDoorReport,
+    FrontDoorStats, ServerFrame, TenantStats, WireRequest,
 };
 pub use incremental::{CachedLutEngine, FullRecomputeStep, StepEngine};
 pub use request::{GenRequest, GenResponse, Metrics, MetricsSnapshot, TtftDigest};
@@ -199,8 +208,8 @@ pub use router::Router;
 pub use scheduler::{ChunkJob, IterationPlan, Scheduler, SchedulerConfig};
 pub use server::{
     serve_blocking, serve_blocking_sched, serve_blocking_step, serve_blocking_tele, start,
-    start_pool, start_pool_sched, start_pool_session, start_pool_step, start_pool_tele, Engine,
-    ServerHandle, ServerReport,
+    start_pool, start_pool_obs, start_pool_sched, start_pool_session, start_pool_step,
+    start_pool_tele, Engine, MetricsRegistry, ServerHandle, ServerReport,
 };
 pub use session::{
     Lease, LeaseTable, ResumeTurn, SessionId, SessionMeta, SessionOptions, SessionStore,

@@ -23,6 +23,10 @@ pub struct GenRequest {
     /// request; `Some` with `resume` = a turn that may reattach to a
     /// retained slot on the worker holding its lease).
     pub session: Option<SessionMeta>,
+    /// Client-supplied trace id propagated from the wire (`0` =
+    /// untraced). Every flight-recorder span the request participates
+    /// in carries it, so one grep reconstructs the request's timeline.
+    pub trace: u64,
 }
 
 /// A completed generation.
@@ -302,8 +306,9 @@ impl MetricsSnapshot {
     }
 
     /// Counter-valued fields — the shared source for both exposition
-    /// formats.
-    fn counter_fields(&self) -> [(&'static str, u64); 16] {
+    /// formats (crate-visible so the admin plane can emit per-worker
+    /// labeled series from the same list).
+    pub(crate) fn counter_fields(&self) -> [(&'static str, u64); 16] {
         [
             ("completed", self.completed),
             ("rejected", self.rejected),
@@ -325,7 +330,7 @@ impl MetricsSnapshot {
     }
 
     /// Percentile gauges in microseconds.
-    fn percentile_fields(&self) -> [(&'static str, u64); 8] {
+    pub(crate) fn percentile_fields(&self) -> [(&'static str, u64); 8] {
         [
             ("p50_latency_us", self.p50_latency_us),
             ("p99_latency_us", self.p99_latency_us),
@@ -341,25 +346,37 @@ impl MetricsSnapshot {
     /// Prometheus text-format exposition: every counter as `lcd_<name>`,
     /// percentiles and throughput as gauges, and the per-phase duration
     /// histograms as native Prometheus histograms (`lcd_phase_<name>`).
-    /// Written by `lcd serve --telemetry-dump PATH`.
+    /// Every family carries `# HELP` + `# TYPE` headers so real scrapers
+    /// ingest it unmodified (`telemetry::prometheus_lint` pins this).
+    /// Written by `lcd serve --telemetry-dump PATH` and served live by
+    /// the admin plane's `/metrics`.
     pub fn prometheus_text(&self) -> String {
         use std::fmt::Write;
         let mut out = String::new();
         for (name, v) in self.counter_fields() {
+            let _ = writeln!(out, "# HELP lcd_{name} {}", help_for(name));
             let _ = writeln!(out, "# TYPE lcd_{name} counter");
             let _ = writeln!(out, "lcd_{name} {v}");
         }
         for (name, v) in self.percentile_fields() {
+            let _ = writeln!(out, "# HELP lcd_{name} {}", help_for(name));
             let _ = writeln!(out, "# TYPE lcd_{name} gauge");
             let _ = writeln!(out, "lcd_{name} {v}");
         }
+        let _ = writeln!(out, "# HELP lcd_tokens_per_sec {}", help_for("tokens_per_sec"));
         let _ = writeln!(out, "# TYPE lcd_tokens_per_sec gauge");
         let _ = writeln!(out, "lcd_tokens_per_sec {}", self.tokens_per_sec);
+        let _ = writeln!(out, "# HELP lcd_wall_seconds {}", help_for("wall_seconds"));
         let _ = writeln!(out, "# TYPE lcd_wall_seconds gauge");
         let _ = writeln!(out, "lcd_wall_seconds {}", self.wall.as_secs_f64());
         for (name, hist) in self.phases.named() {
             if !hist.is_empty() {
-                hist.prometheus_into(&format!("lcd_phase_{name}"), &mut out);
+                hist.prometheus_with_help_into(
+                    &format!("lcd_phase_{name}"),
+                    help_for(name),
+                    "",
+                    &mut out,
+                );
             }
         }
         out
@@ -431,6 +448,49 @@ impl MetricsSnapshot {
     }
 }
 
+/// One-line `# HELP` text per exposed series (short name, without the
+/// `lcd_` / `lcd_phase_` prefix). Every family the snapshot or the
+/// admin plane emits must have an arm here — `prometheus_lint` fails
+/// the exposition otherwise.
+pub(crate) fn help_for(name: &str) -> &'static str {
+    match name {
+        "completed" => "Requests completed.",
+        "rejected" => "Requests rejected (backpressure, shed, cancel, deadline).",
+        "cancelled" => "Requests torn down by cancel/deadline/disconnect (subset of rejected).",
+        "generated_tokens" => "Tokens generated across all requests.",
+        "decode_steps" => "Incremental decode steps executed.",
+        "prefill_tokens" => "Prompt tokens absorbed through prefill (window-clipped).",
+        "decode_tokens" => "Tokens generated through incremental decode steps.",
+        "drafted_tokens" => "Draft tokens proposed during speculative phases.",
+        "accepted_tokens" => "Draft tokens accepted by bulk verification.",
+        "cache_hits" => "Resumed turns reattached warm (zero re-prefill).",
+        "cache_misses" => "Resumed turns served through the cold-prefill fallback.",
+        "cache_evictions" => "Retained slots evicted (capacity, TTL, or stale lease).",
+        "routed_misses" => "Routed turns whose lease bookkeeping disagreed at placement.",
+        "resumed_tokens" => "Tokens fed through warm-resume phases.",
+        "prefill_chunks" => "Prompt chunks fed through chunked-prefill phases.",
+        "session_ttft_samples" => "Completed session turns in the TTFT digest.",
+        "p50_latency_us" => "Median end-to-end request latency (µs).",
+        "p99_latency_us" => "p99 end-to-end request latency (µs).",
+        "p50_ttft_us" => "Median time to first token (µs).",
+        "p95_ttft_us" => "p95 time to first token (µs).",
+        "p99_ttft_us" => "p99 time to first token (µs).",
+        "p50_session_ttft_us" => "Median TTFT of session turns (µs).",
+        "p95_session_ttft_us" => "p95 TTFT of session turns (µs).",
+        "p99_session_ttft_us" => "p99 TTFT of session turns (µs).",
+        "tokens_per_sec" => "Generated-token throughput over the wall window.",
+        "wall_seconds" => "Wall-clock window between first and last completion.",
+        "resume_us" => "Warm-resume phase latency (µs).",
+        "prefill_us" => "Prefill phase latency (µs).",
+        "decode_us" => "Decode phase latency (µs).",
+        "speculate_us" => "Speculative draft-and-verify phase latency (µs).",
+        "iteration_us" => "Full worker iteration latency (µs).",
+        "gemm_us" => "Per-iteration GEMM time (µs).",
+        "inter_token_us" => "Gap between successive token-producing phases (µs).",
+        _ => "LCD serving metric.",
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -490,11 +550,14 @@ mod tests {
         let s = m.snapshot();
         let text = s.prometheus_text();
         assert!(text.contains("# TYPE lcd_completed counter"));
+        assert!(text.contains("# HELP lcd_completed Requests completed."));
         assert!(text.contains("lcd_completed 1"));
         assert!(text.contains("lcd_prefill_tokens 12"));
         assert!(text.contains("# TYPE lcd_p50_ttft_us gauge"));
         assert!(text.contains("# TYPE lcd_phase_decode_us histogram"));
+        assert!(text.contains("# HELP lcd_phase_decode_us Decode phase latency"));
         assert!(text.contains("lcd_phase_decode_us_count 2"));
+        crate::telemetry::prometheus_lint(&text).expect("exposition must lint clean");
         // The JSON form parses back and agrees on the counters and the
         // phase histograms.
         let parsed = Json::parse(&s.to_json().to_string_pretty()).unwrap();

@@ -195,6 +195,7 @@ mod tests {
                 reply: tx,
                 t_submit: Instant::now(),
                 session: None,
+                trace: 0,
             },
             rx,
         )

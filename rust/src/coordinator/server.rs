@@ -70,7 +70,7 @@ use super::request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
 use super::router::Router;
 use super::scheduler::{IterationPlan, Scheduler, SchedulerConfig};
 use super::session::{Lease, LeaseTable, SessionId, SessionOptions, TurnRequest};
-use crate::telemetry::{FlightDump, FlightRecorder, Phase, TelemetryConfig};
+use crate::telemetry::{FlightDump, FlightRecorder, Gauges, Phase, Registry, TelemetryConfig};
 use crate::util::argmax;
 use anyhow::Result;
 use std::collections::{HashSet, VecDeque};
@@ -193,6 +193,21 @@ impl Shared {
     }
 }
 
+/// Live-introspection registry served by `coordinator::admin`: one
+/// [`MetricsSnapshot`] publication slot per pool worker (the admin
+/// plane conventionally appends one extra slot for the front door).
+/// Workers started through [`start_pool_obs`] publish throttled
+/// snapshots, gauges and flight dumps here while they run, and their
+/// final exit-time snapshot just before reporting it to
+/// [`ServerHandle::shutdown_report`] — so after shutdown the registry
+/// fold equals the report fold.
+pub type MetricsRegistry = Registry<MetricsSnapshot>;
+
+/// Minimum interval between registry publications per worker: scrapes
+/// see data at most this stale, and the serve loop pays at most four
+/// snapshot clones per second.
+const PUBLISH_INTERVAL: Duration = Duration::from_millis(250);
+
 /// Aggregate + per-worker metrics returned by [`ServerHandle::shutdown_report`].
 #[derive(Clone, Debug)]
 pub struct ServerReport {
@@ -214,7 +229,7 @@ impl ServerHandle {
     /// rejected by backpressure are dropped, which the caller observes as
     /// a disconnected receiver.
     pub fn submit(&self, prompt: Vec<i32>, gen_tokens: usize) -> Receiver<GenResponse> {
-        self.submit_inner(prompt, gen_tokens, None).1
+        self.submit_inner(prompt, gen_tokens, None, 0).1
     }
 
     /// [`ServerHandle::submit`], also returning the assigned request id
@@ -224,7 +239,22 @@ impl ServerHandle {
         prompt: Vec<i32>,
         gen_tokens: usize,
     ) -> (u64, Receiver<GenResponse>) {
-        self.submit_inner(prompt, gen_tokens, None)
+        self.submit_inner(prompt, gen_tokens, None, 0)
+    }
+
+    /// [`ServerHandle::submit_with_id`] carrying a client trace id
+    /// (0 = untraced). On telemetry-sampled iterations every phase span
+    /// the request participates in — admission, prefill chunks, decode
+    /// waves, completion — is mirrored into the worker's flight
+    /// recorder under this id, so one trace grep across dumps
+    /// reconstructs the request's full timeline.
+    pub fn submit_with_id_traced(
+        &self,
+        prompt: Vec<i32>,
+        gen_tokens: usize,
+        trace: u64,
+    ) -> (u64, Receiver<GenResponse>) {
+        self.submit_inner(prompt, gen_tokens, None, trace)
     }
 
     /// Submit one conversation turn (built by
@@ -243,8 +273,19 @@ impl ServerHandle {
         turn: TurnRequest,
         gen_tokens: usize,
     ) -> (u64, Receiver<GenResponse>) {
+        self.submit_turn_with_id_traced(turn, gen_tokens, 0)
+    }
+
+    /// [`ServerHandle::submit_turn_with_id`] carrying a client trace id
+    /// (0 = untraced); see [`ServerHandle::submit_with_id_traced`].
+    pub fn submit_turn_with_id_traced(
+        &self,
+        turn: TurnRequest,
+        gen_tokens: usize,
+        trace: u64,
+    ) -> (u64, Receiver<GenResponse>) {
         let meta = super::session::SessionMeta { id: turn.session, resume: turn.resume };
-        self.submit_inner(turn.prompt, gen_tokens, Some(meta))
+        self.submit_inner(turn.prompt, gen_tokens, Some(meta), trace)
     }
 
     /// Mark a request for cancellation. Best-effort and idempotent:
@@ -274,6 +315,7 @@ impl ServerHandle {
         prompt: Vec<i32>,
         gen_tokens: usize,
         session: Option<super::session::SessionMeta>,
+        trace: u64,
     ) -> (u64, Receiver<GenResponse>) {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -283,8 +325,15 @@ impl ServerHandle {
             .as_ref()
             .filter(|m| m.resume.is_some())
             .and_then(|m| self.shared.router.route(m.id));
-        let req =
-            GenRequest { id, prompt, gen_tokens, reply: tx, t_submit: Instant::now(), session };
+        let req = GenRequest {
+            id,
+            prompt,
+            gen_tokens,
+            reply: tx,
+            t_submit: Instant::now(),
+            session,
+            trace,
+        };
         let mut st = self.shared.lock_state();
         if st.shutting_down
             || st.exited == self.shared.workers
@@ -473,6 +522,31 @@ where
     F: Fn(usize) -> Result<S> + Send + Sync + 'static,
     S: StepEngine,
 {
+    start_pool_obs(workers, max_batch, queue_cap, sched, opts, tele, None, build)
+}
+
+/// [`start_pool_tele`] plus a live [`MetricsRegistry`]: each worker
+/// publishes its metrics snapshot, gauges (in-flight sessions, lease
+/// occupancy, pool queue depth) and current flight dump into its
+/// registry slot at most every [`PUBLISH_INTERVAL`] while serving, and
+/// force-publishes its final snapshot (then clears its alive flag)
+/// on exit. The admin plane scrapes the registry without ever touching
+/// worker threads; `None` is exactly [`start_pool_tele`].
+#[allow(clippy::too_many_arguments)]
+pub fn start_pool_obs<F, S>(
+    workers: usize,
+    max_batch: usize,
+    queue_cap: usize,
+    sched: SchedulerConfig,
+    opts: SessionOptions,
+    tele: TelemetryConfig,
+    registry: Option<Arc<MetricsRegistry>>,
+    build: F,
+) -> ServerHandle
+where
+    F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    S: StepEngine,
+{
     let workers = workers.max(1);
     let shared = Arc::new(Shared {
         state: Mutex::new(QueueState {
@@ -497,9 +571,10 @@ where
         let build2 = Arc::clone(&build);
         let tele2 = tele.clone();
         let tx2 = res_tx.clone();
+        let reg2 = registry.clone();
         let join = std::thread::Builder::new()
             .name(format!("lcd-serve-{w}"))
-            .spawn(move || pool_worker(w, shared2, max_batch, sched, opts, tele2, build2, tx2))
+            .spawn(move || pool_worker(w, shared2, max_batch, sched, opts, tele2, reg2, build2, tx2))
             .expect("spawning serve worker");
         joins.push(join);
     }
@@ -515,6 +590,7 @@ fn pool_worker<F, S>(
     sched: SchedulerConfig,
     opts: SessionOptions,
     tele: TelemetryConfig,
+    registry: Option<Arc<MetricsRegistry>>,
     build: Arc<F>,
     results: Sender<(usize, Metrics)>,
 ) where
@@ -540,12 +616,25 @@ fn pool_worker<F, S>(
             &mut metrics,
             &mut recorder,
             &tele,
+            registry.as_deref(),
         ),
         Err(err) => eprintln!("engine build failed on worker {worker}: {err:#}"),
     }));
     if outcome.is_err() {
         eprintln!("serve worker {worker} panicked; draining its queue share");
         fault_dump(worker, recorder.as_ref(), &tele);
+    }
+    // Exit-time publication: the registry's last word from this worker
+    // is exactly the snapshot reported below, so post-shutdown scrapes
+    // fold to the same totals as the shutdown report. The alive flag
+    // drops (after publish — publish re-asserts it) so /healthz sees
+    // the worker leave whether it drained cleanly or panicked.
+    if let Some(reg) = &registry {
+        reg.publish(worker, metrics.snapshot());
+        if let Some(rec) = &recorder {
+            reg.publish_flight(worker, rec.dump(worker));
+        }
+        reg.set_alive(worker, false);
     }
     // This worker's leases die with its engine: drop its placements so
     // later resumes fall back to cold prefill instead of routing here.
@@ -742,6 +831,7 @@ fn run_worker<S: StepEngine>(
     metrics: &mut Metrics,
     recorder: &mut Option<FlightRecorder>,
     tele: &TelemetryConfig,
+    registry: Option<&MetricsRegistry>,
 ) {
     if engine.seq() < 2 {
         eprintln!("engine '{}' has seq {} < 2; refusing to serve", engine.name(), engine.seq());
@@ -753,6 +843,7 @@ fn run_worker<S: StepEngine>(
     let mut batcher = Batcher::with_policy(slots, slots, sched.policy);
     let mut leases = LeaseTable::new(opts.retained_slots.min(slots), opts.retain_ttl_iters);
     let mut iteration: u64 = 0;
+    let mut last_publish: Option<Instant> = None;
     loop {
         // Lease TTL sweep (iteration clock): expired windows are poison-
         // cleared BEFORE admission, so a racing resume misses cleanly.
@@ -779,6 +870,15 @@ fn run_worker<S: StepEngine>(
                     }
                 };
                 st = guard;
+                // Keep the registry fresh through idle stretches too —
+                // a quiet pool must still answer /metrics with current
+                // gauges, not the last busy iteration's.
+                if let Some(reg) = registry {
+                    if last_publish.map_or(true, |t| t.elapsed() >= PUBLISH_INTERVAL) {
+                        last_publish = Some(Instant::now());
+                        publish_registry(reg, worker, metrics, 0, leases.len(), st.queued(), recorder.as_ref());
+                    }
+                }
             }
             // Cancellation sweep: drop marked requests wherever they
             // live. Runs inside the admission critical section, before
@@ -959,6 +1059,40 @@ fn run_worker<S: StepEngine>(
                 return;
             }
         }
+        if let Some(reg) = registry {
+            if last_publish.map_or(true, |t| t.elapsed() >= PUBLISH_INTERVAL) {
+                last_publish = Some(Instant::now());
+                let queued = shared.lock_state().queued();
+                let in_flight = batcher.active() + batcher.pending();
+                publish_registry(reg, worker, metrics, in_flight, leases.len(), queued, recorder.as_ref());
+            }
+        }
+    }
+}
+
+/// Push one worker's live state into its registry slot: metrics
+/// snapshot, gauges, and (when telemetry is on) the current flight dump
+/// so `/flight?worker=N` answers without waiting for a fault or exit.
+fn publish_registry(
+    registry: &MetricsRegistry,
+    worker: usize,
+    metrics: &Metrics,
+    in_flight: usize,
+    leases: usize,
+    queue_depth: usize,
+    recorder: Option<&FlightRecorder>,
+) {
+    registry.publish(worker, metrics.snapshot());
+    registry.set_gauges(
+        worker,
+        Gauges {
+            in_flight: in_flight as u64,
+            queue_depth: queue_depth as u64,
+            leases: leases as u64,
+        },
+    );
+    if let Some(rec) = recorder {
+        registry.publish_flight(worker, rec.dump(worker));
     }
 }
 
@@ -987,18 +1121,34 @@ fn serve_iteration<S: StepEngine>(
 ) -> Result<IterationResponses> {
     let mut responses = Vec::new();
     let t0 = tele.as_ref().map(|_| (Instant::now(), engine.gemm_ns()));
+    // Traced participants of the upcoming resume phase, collected up
+    // front so the batched span can be mirrored per request afterwards
+    // (the trace-attachment contract in `telemetry::FlightRecorder`).
+    let mut traced: Vec<(u64, u64)> = Vec::new();
+    if tele.is_some() {
+        for (slot, _) in resumes {
+            if let Some(s) = batcher.session_mut(*slot) {
+                if !s.done() && s.request.trace != 0 {
+                    traced.push((s.request.id, s.request.trace));
+                }
+            }
+        }
+    }
     if let Some(t) = tele.as_deref_mut() {
         t.begin(Phase::Resume, resumes.len() as u64);
     }
     let resume_cost = resume_phase(engine, batcher, metrics, resumes, tele.as_deref_mut())?;
     if let Some(t) = tele.as_deref_mut() {
         t.end(&mut metrics.phases);
+        for &(id, trace) in &traced {
+            t.attach_trace(id, trace);
+        }
     }
     let plan = scheduler.plan(batcher, engine.seq(), resume_cost);
     if let Some(t) = tele.as_deref_mut() {
         for &slot in &plan.admitted {
             if let Some(sess) = batcher.session_mut(slot) {
-                t.mark(Phase::Admit, sess.request.id);
+                t.mark_traced(Phase::Admit, sess.request.id, sess.request.trace);
             }
         }
         t.begin(Phase::Prefill, plan.prefill.len() as u64);
@@ -1006,6 +1156,11 @@ fn serve_iteration<S: StepEngine>(
     chunked_prefill_phase(engine, batcher, metrics, &plan, tele.as_deref_mut())?;
     if let Some(t) = tele.as_deref_mut() {
         t.end(&mut metrics.phases);
+        for job in &plan.prefill {
+            if let Some(sess) = batcher.session_mut(job.slot) {
+                t.attach_trace(sess.request.id, sess.request.trace);
+            }
+        }
     }
     collect_done(
         engine,
@@ -1015,15 +1170,24 @@ fn serve_iteration<S: StepEngine>(
         sessions.as_deref_mut(),
         tele.as_deref_mut(),
     );
+    traced.clear();
     if let Some(t) = tele.as_deref_mut() {
         let phase = if engine.speculation() > 0 { Phase::Speculate } else { Phase::Decode };
-        let jobs =
-            batcher.sessions_mut().filter(|(_, s)| !s.done() && s.prefill_complete()).count();
-        t.begin(phase, jobs as u64);
+        let mut jobs = 0u64;
+        for (_, s) in batcher.sessions_mut().filter(|(_, s)| !s.done() && s.prefill_complete()) {
+            jobs += 1;
+            if s.request.trace != 0 {
+                traced.push((s.request.id, s.request.trace));
+            }
+        }
+        t.begin(phase, jobs);
     }
     decode_phase(engine, batcher, metrics)?;
     if let Some(t) = tele.as_deref_mut() {
         t.end(&mut metrics.phases);
+        for &(id, trace) in &traced {
+            t.attach_trace(id, trace);
+        }
     }
     collect_done(engine, batcher, metrics, &mut responses, sessions, tele);
     if let Some((start, gemm0)) = t0 {
@@ -1075,7 +1239,7 @@ fn resume_phase<S: StepEngine>(
         let sess = batcher.session_mut(*slot).expect("resumed slot holds a session");
         sess.push_token(next, seq);
         if let Some(t) = tele.as_deref_mut() {
-            t.mark(Phase::FirstToken, sess.request.id);
+            t.mark_traced(Phase::FirstToken, sess.request.id, sess.request.trace);
         }
     }
     Ok(cost)
@@ -1123,7 +1287,7 @@ fn chunked_prefill_phase<S: StepEngine>(
                 let next = argmax(&row) as i32;
                 sess.push_token(next, seq);
                 if let Some(t) = tele.as_deref_mut() {
-                    t.mark(Phase::FirstToken, sess.request.id);
+                    t.mark_traced(Phase::FirstToken, sess.request.id, sess.request.trace);
                 }
             }
             None => debug_assert!(!job.last, "final chunks must emit a row"),
@@ -1252,7 +1416,7 @@ fn collect_done<S: StepEngine>(
             engine.free_slot(slot);
         }
         if let Some(t) = tele.as_deref_mut() {
-            t.mark(Phase::Complete, sess.request.id);
+            t.mark_traced(Phase::Complete, sess.request.id, sess.request.trace);
         }
         let reply = sess.request.reply.clone();
         let is_session = sess.request.session.is_some();
@@ -1330,6 +1494,7 @@ pub fn serve_blocking_tele<S: StepEngine>(
             reply: tx.clone(),
             t_submit: Instant::now(),
             session: None,
+            trace: 0,
         };
         assert!(batcher.submit(req));
     }
@@ -1686,6 +1851,7 @@ mod tests {
                     id: SessionId(session),
                     resume: Some(ResumeTurn { pending: 3, append: vec![4] }),
                 }),
+                trace: 0,
             },
             rx,
         )
@@ -1705,6 +1871,7 @@ mod tests {
             reply: tx,
             t_submit: Instant::now(),
             session: None,
+            trace: 0,
         };
         assert!(batcher.submit(occupier));
         assert_eq!(batcher.fill_slots(8), vec![0]);

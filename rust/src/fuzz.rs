@@ -348,7 +348,10 @@ pub fn slot_cache_differential(data: &[u8]) {
 ///    frame.
 /// 2. **Structured**: a valid frame of every shape is synthesized from
 ///    the remaining input (fields clamped into their documented limits)
-///    and must survive `decode(encode(f)) == f`.
+///    and must survive `decode(encode(f)) == f`. Half the synthesized
+///    requests carry the `trace_id` frame extension (tag `0x01` +
+///    nonzero id), so the canonical-absence rule (`trace_id == 0` ⇔ no
+///    trailing block) is fuzzed from both sides.
 pub fn frame_roundtrip(data: &[u8]) {
     // Phase 1: arbitrary bytes against both decoders.
     if let Ok(frame) = decode_client(data) {
@@ -375,6 +378,9 @@ pub fn frame_roundtrip(data: &[u8]) {
     } else {
         None
     };
+    // Absent on even picks, present (and forced nonzero — zero is only
+    // representable by absence) on odd ones.
+    let trace_id = if r.byte() % 2 == 0 { 0 } else { r.u64() | 1 };
     let request = ClientFrame::Request(WireRequest {
         id: r.u64(),
         session,
@@ -384,6 +390,7 @@ pub fn frame_roundtrip(data: &[u8]) {
         resume,
         tenant,
         prompt: (0..r.range(0, 12)).map(|_| i32::from(r.i8())).collect(),
+        trace_id,
     });
     let frames = [request, ClientFrame::Cancel { id: r.u64() }];
     for frame in &frames {

@@ -11,12 +11,16 @@
 //! Global flags: `--config <file.json>`, `--set key=value` (repeatable),
 //! `--artifacts <dir>`.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::{bail, Context, Result};
 use lcd::config::LcdConfig;
 use lcd::coordinator::server;
+use lcd::coordinator::{AdminServer, AdminState, FrontDoorObs};
 use lcd::data::CharTokenizer;
 use lcd::repro;
 use lcd::repro::shared::{open_runtime, train_or_load};
+use lcd::telemetry::{FlightRecorder, SloTracker};
 use lcd::util::Rng;
 
 struct Args {
@@ -79,6 +83,7 @@ fn parse_args() -> Result<Args> {
             "--draft-k" => sets.push(format!("serve.draft_k={}", take(&mut i)?)),
             "--draft" => sets.push(format!("serve.draft={}", take(&mut i)?)),
             "--listen" => sets.push(format!("serve.listen={}", take(&mut i)?)),
+            "--admin-listen" => sets.push(format!("serve.admin_listen={}", take(&mut i)?)),
             "--telemetry-dump" => telemetry_dump = Some(take(&mut i)?),
             "--telemetry-sample" => {
                 sets.push(format!("serve.telemetry_sample={}", take(&mut i)?))
@@ -122,6 +127,12 @@ flags:
                    deadlines (serve.deadline_ms) and admission-level
                    load shedding (serve.shed_queue); serves until
                    killed. See docs/OPERATIONS.md)
+  --admin-listen ADDR (serve: HTTP admin plane at host:port — /metrics
+                   Prometheus text, /healthz + /readyz liveness and the
+                   SLO fast-burn watchdog (serve.slo_ttft_ms,
+                   serve.slo_availability), /slo burn-rate JSON,
+                   /flight?worker=N chrome-trace dumps; requires
+                   --listen. See docs/OPERATIONS.md)
   --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)
   --telemetry-dump <file> (serve: write the final metrics exposition —
                    phase latency histograms, TTFT, GEMM time — as JSON
@@ -256,13 +267,22 @@ fn cmd_serve(
     let sched = cfg.serve.scheduler_config()?;
     let cfg2 = cfg.clone();
     let engine_kind2 = engine_kind.to_string();
-    let handle = server::start_pool_tele(
+    // `--admin-listen`: the admin plane scrapes the long-running
+    // network-serving pool; without `--listen` the synthetic mix exits
+    // as soon as the requests drain, so there is nothing to introspect.
+    if !cfg.serve.admin_listen.is_empty() && cfg.serve.listen.is_empty() {
+        bail!("serve.admin_listen requires serve.listen (--listen): the admin plane introspects the network-serving pool");
+    }
+    let registry = (!cfg.serve.admin_listen.is_empty())
+        .then(|| Arc::new(lcd::coordinator::MetricsRegistry::new(cfg.serve.workers)));
+    let handle = server::start_pool_obs(
         cfg.serve.workers,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
         sched,
         cfg.serve.session_options(),
         cfg.serve.telemetry_config(),
+        registry.clone(),
         move |_worker| lcd::repro::shared::build_step_engine(&cfg2, &engine_kind2),
     );
 
@@ -270,7 +290,35 @@ fn cmd_serve(
     // until killed. The synthetic request mix below is skipped — real
     // clients drive the pool over the socket instead.
     if !cfg.serve.listen.is_empty() {
-        let door = lcd::coordinator::FrontDoor::start(handle, cfg.serve.frontdoor_config()?)?;
+        let fd_cfg = cfg.serve.frontdoor_config()?;
+        let (door, _admin) = if let Some(registry) = registry {
+            // Admin plane on: share an SLO tracker and a socket-side
+            // flight recorder between the front door (which records
+            // outcomes and spans) and the HTTP listener (which serves
+            // them on demand).
+            let slo = Arc::new(SloTracker::new(
+                cfg.serve.slo_ttft_ms,
+                cfg.serve.slo_availability,
+            ));
+            let recorder =
+                Arc::new(Mutex::new(FlightRecorder::new(&cfg.serve.telemetry_config())));
+            let obs = FrontDoorObs {
+                slo: Some(Arc::clone(&slo)),
+                recorder: Some(Arc::clone(&recorder)),
+            };
+            let door = lcd::coordinator::FrontDoor::start_obs(handle, fd_cfg, obs)?;
+            let state = AdminState {
+                registry,
+                slo: Some(slo),
+                frontdoor: Some(door.stats_handle()),
+                frontdoor_recorder: Some(recorder),
+            };
+            let admin = AdminServer::start(&cfg.serve.admin_listen, state)?;
+            println!("admin plane listening on {}", admin.addr());
+            (door, Some(admin))
+        } else {
+            (lcd::coordinator::FrontDoor::start(handle, fd_cfg)?, None)
+        };
         println!("front door listening on {}", door.addr());
         println!("wire protocol: docs/PROTOCOL.md; operations: docs/OPERATIONS.md");
         loop {

@@ -40,8 +40,15 @@
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
+
+/// Poison-tolerant lock helper: telemetry must stay readable after a
+/// chaos-killed peer poisoned the mutex (a scrape during an outage is
+/// exactly when the data matters most).
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Linear sub-buckets per power of two: values split each octave into
 /// `SUB_BUCKETS` equal slices, bounding relative error to
@@ -231,6 +238,27 @@ impl Histogram {
     pub fn prometheus_into(&self, name: &str, out: &mut String) {
         use std::fmt::Write;
         let _ = writeln!(out, "# TYPE {name} histogram");
+        self.prometheus_series_into(name, "", out);
+    }
+
+    /// [`Histogram::prometheus_into`] preceded by a `# HELP` header and
+    /// with `labels` attached to every sample — one full metric family.
+    pub fn prometheus_with_help_into(&self, name: &str, help: &str, labels: &str, out: &mut String) {
+        use std::fmt::Write;
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        self.prometheus_series_into(name, labels, out);
+    }
+
+    /// The sample lines only (no `# HELP`/`# TYPE` headers), so callers
+    /// can emit one header per family followed by several labeled series
+    /// (e.g. one per worker). `labels` is a comma-joined label list like
+    /// `worker="0"` — empty for none — merged with the `le` label on
+    /// bucket lines.
+    pub fn prometheus_series_into(&self, name: &str, labels: &str, out: &mut String) {
+        use std::fmt::Write;
+        let sep = if labels.is_empty() { "" } else { "," };
+        let plain = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
         let mut cum = 0u64;
         for (idx, &c) in self.counts.iter().enumerate() {
             if c == 0 {
@@ -239,23 +267,125 @@ impl Histogram {
             cum = cum.saturating_add(c);
             // The bucket upper bound is the next bucket's lower bound.
             let le = Self::bucket_low(idx + 1).saturating_sub(1);
-            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+            let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}");
         }
-        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", self.count);
-        let _ = writeln!(out, "{name}_sum {}", self.sum);
-        let _ = writeln!(out, "{name}_count {}", self.count);
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", self.count);
+        let _ = writeln!(out, "{name}_sum{plain} {}", self.sum);
+        let _ = writeln!(out, "{name}_count{plain} {}", self.count);
     }
 }
 
+/// Promtool-style validation of a Prometheus text exposition: every
+/// sample line must parse (`name{labels} value`), every sample's metric
+/// family must be preceded by both `# HELP` and `# TYPE` headers, and
+/// histogram `_bucket` samples must carry an `le` label. Used by the CI
+/// admin-smoke job (via `serve_bench --validate-prom`) so a scrape that
+/// real Prometheus would reject fails the build.
+pub fn prometheus_lint(text: &str) -> Result<()> {
+    use std::collections::HashMap;
+    let mut helps: Vec<String> = Vec::new();
+    let mut types: HashMap<String, String> = HashMap::new();
+    let name_ok = |s: &str| {
+        !s.is_empty()
+            && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    };
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            if !name_ok(name) {
+                bail!("line {ln}: malformed HELP header: {line:?}");
+            }
+            helps.push(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (name, kind) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            if !name_ok(name)
+                || !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped")
+            {
+                bail!("line {ln}: malformed TYPE header: {line:?}");
+            }
+            types.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+        // Sample line: name[{labels}] value
+        let name_end = line.find(|c: char| c == '{' || c.is_whitespace()).unwrap_or(line.len());
+        let name = &line[..name_end];
+        if !name_ok(name) {
+            bail!("line {ln}: malformed metric name in {line:?}");
+        }
+        let rest = &line[name_end..];
+        let (labels, value) = if let Some(body) = rest.strip_prefix('{') {
+            let close = match body.find('}') {
+                Some(c) => c,
+                None => bail!("line {ln}: unterminated label set in {line:?}"),
+            };
+            (&body[..close], body[close + 1..].trim())
+        } else {
+            ("", rest.trim())
+        };
+        for pair in labels.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = match pair.split_once('=') {
+                Some(kv) => kv,
+                None => bail!("line {ln}: label {pair:?} is not key=\"value\""),
+            };
+            if !name_ok(k) || !v.starts_with('"') || !v.ends_with('"') || v.len() < 2 {
+                bail!("line {ln}: malformed label {pair:?}");
+            }
+        }
+        let value = value.split_whitespace().next().unwrap_or("");
+        if !matches!(value, "+Inf" | "-Inf" | "NaN") && value.parse::<f64>().is_err() {
+            bail!("line {ln}: sample value {value:?} is not a number");
+        }
+        // Resolve the sample's family: histogram series expose _bucket /
+        // _sum / _count under the family's TYPE header.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let stem = name.strip_suffix(suf)?;
+                types.get(stem).filter(|k| *k == "histogram").map(|_| stem)
+            })
+            .unwrap_or(name);
+        match types.get(family) {
+            None => bail!("line {ln}: sample {name:?} has no preceding # TYPE header"),
+            Some(kind) if kind == "histogram" && name.ends_with("_bucket") => {
+                if !labels.split(',').any(|p| p.starts_with("le=")) {
+                    bail!("line {ln}: histogram bucket sample without an le label");
+                }
+            }
+            Some(_) => {}
+        }
+        if !helps.iter().any(|h| h == family) {
+            bail!("line {ln}: sample {name:?} has no preceding # HELP header");
+        }
+    }
+    Ok(())
+}
+
 /// Span / lifecycle-mark kinds. The first four are the scheduler's
-/// `IterationPlan` phases (timed spans); the rest are per-request
-/// lifecycle marks (zero-duration, `detail` = request id).
+/// `IterationPlan` phases (timed spans); `Receive` / `Queue` /
+/// `StreamOut` are the front door's request-lifecycle events (frame
+/// decoded, fair-queue wait, response streamed); the rest are
+/// per-request lifecycle marks (zero-duration, `detail` = request id).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
     Resume,
     Prefill,
     Decode,
     Speculate,
+    Receive,
+    Queue,
+    StreamOut,
     Admit,
     FirstToken,
     Complete,
@@ -268,6 +398,9 @@ impl Phase {
             Phase::Prefill => "prefill",
             Phase::Decode => "decode",
             Phase::Speculate => "speculate",
+            Phase::Receive => "receive",
+            Phase::Queue => "queue",
+            Phase::StreamOut => "stream_out",
             Phase::Admit => "admit",
             Phase::FirstToken => "first_token",
             Phase::Complete => "complete",
@@ -363,6 +496,11 @@ pub struct SpanEvent {
     pub start_us: u64,
     pub dur_us: u64,
     pub detail: u64,
+    /// Client-supplied trace id propagated from the wire (`0` =
+    /// untraced). Exported in the Chrome trace args as a 16-hex-digit
+    /// string, so one grep over dumps reconstructs a request's timeline
+    /// across frontdoor, scheduler, and engine layers.
+    pub trace: u64,
 }
 
 /// Telemetry knobs threaded from `ServeConfig` into each worker.
@@ -407,6 +545,10 @@ pub struct FlightRecorder {
     open: Option<(Phase, u64, Instant, u64)>,
     iteration: u64,
     last_token_phase_end: Option<Instant>,
+    /// Timing of the most recently closed phase span, so per-request
+    /// trace attachments ([`FlightRecorder::attach_trace`]) can mirror
+    /// the span they participated in.
+    last_span: Option<SpanEvent>,
     dropped: u64,
 }
 
@@ -420,6 +562,7 @@ impl FlightRecorder {
             open: None,
             iteration: 0,
             last_token_phase_end: None,
+            last_span: None,
             dropped: 0,
         }
     }
@@ -472,7 +615,9 @@ impl FlightRecorder {
         let ended = Instant::now();
         let dur_us = ended.duration_since(started).as_micros() as u64;
         let start_us = self.now_us(started);
-        self.push(SpanEvent { phase, iteration, start_us, dur_us, detail });
+        let ev = SpanEvent { phase, iteration, start_us, dur_us, detail, trace: 0 };
+        self.last_span = Some(ev.clone());
+        self.push(ev);
         if detail > 0 {
             if let Some(h) = stats.slot(phase) {
                 h.record(dur_us);
@@ -494,9 +639,40 @@ impl FlightRecorder {
     /// Zero-duration lifecycle mark (admit / first token / complete),
     /// tagged with the request id.
     pub fn mark(&mut self, phase: Phase, request: u64) {
+        self.mark_traced(phase, request, 0);
+    }
+
+    /// [`FlightRecorder::mark`] carrying a client trace id (`0` =
+    /// untraced).
+    pub fn mark_traced(&mut self, phase: Phase, request: u64, trace: u64) {
         let start_us = self.now_us(Instant::now());
         let iteration = self.iteration;
-        self.push(SpanEvent { phase, iteration, start_us, dur_us: 0, detail: request });
+        self.push(SpanEvent { phase, iteration, start_us, dur_us: 0, detail: request, trace });
+    }
+
+    /// A span ending *now* that started `dur_us` ago — for phases whose
+    /// duration was measured elsewhere (e.g. the front door's fair-queue
+    /// wait, timed from frame receipt to dispatch).
+    pub fn mark_span(&mut self, phase: Phase, request: u64, trace: u64, dur_us: u64) {
+        let start_us = self.now_us(Instant::now()).saturating_sub(dur_us);
+        let iteration = self.iteration;
+        self.push(SpanEvent { phase, iteration, start_us, dur_us, detail: request, trace });
+    }
+
+    /// Attach a traced request to the most recently closed phase span:
+    /// pushes a per-request copy of that span (same phase and timing,
+    /// `detail` = request id, `trace` set), so a `trace_id` grep over the
+    /// dump finds every phase the request participated in even though
+    /// phase spans are batched. No-op when `trace == 0` or no span has
+    /// closed yet.
+    pub fn attach_trace(&mut self, request: u64, trace: u64) {
+        if trace == 0 {
+            return;
+        }
+        let Some(last) = self.last_span.clone() else {
+            return;
+        };
+        self.push(SpanEvent { detail: request, trace, ..last });
     }
 
     /// The currently-open span as an event (duration = elapsed so far).
@@ -507,6 +683,7 @@ impl FlightRecorder {
             start_us: self.now_us(started),
             dur_us: started.elapsed().as_micros() as u64,
             detail,
+            trace: 0,
         })
     }
 
@@ -554,7 +731,18 @@ impl FlightDump {
     }
 
     fn trace_event(e: &SpanEvent, open: bool) -> Json {
-        let mark = matches!(e.phase, Phase::Admit | Phase::FirstToken | Phase::Complete);
+        let mark = matches!(
+            e.phase,
+            Phase::Admit
+                | Phase::FirstToken
+                | Phase::Complete
+                | Phase::Receive
+                | Phase::StreamOut
+        );
+        // `detail` is the request id for marks, frontdoor lifecycle
+        // events, and per-request trace attachments; the job count only
+        // for plain batched phase spans.
+        let per_request = mark || e.phase == Phase::Queue || e.trace != 0;
         let mut fields = vec![
             ("name".into(), Json::Str(e.phase.name().into())),
             ("ph".into(), Json::Str(if mark { "i" } else { "X" }.into())),
@@ -567,8 +755,11 @@ impl FlightDump {
         }
         let mut args = vec![
             ("iteration".into(), Json::Num(e.iteration as f64)),
-            ((if mark { "request" } else { "jobs" }).into(), Json::Num(e.detail as f64)),
+            ((if per_request { "request" } else { "jobs" }).into(), Json::Num(e.detail as f64)),
         ];
+        if e.trace != 0 {
+            args.push(("trace".into(), Json::Str(format!("{:016x}", e.trace))));
+        }
         if open {
             args.push(("open".into(), Json::Bool(true)));
         }
@@ -625,6 +816,256 @@ pub fn flight_sink() -> FlightSink {
 pub fn take_dumps(sink: &FlightSink) -> Vec<FlightDump> {
     let mut guard = sink.lock().unwrap_or_else(|e| e.into_inner());
     std::mem::take(&mut *guard)
+}
+
+/// Instantaneous per-worker gauges published alongside snapshots —
+/// values that have no meaning as histograms (current depth, not
+/// latency).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Gauges {
+    /// Sessions currently admitted on the worker (active + pending).
+    pub in_flight: u64,
+    /// Shared-queue depth observed at publish time.
+    pub queue_depth: u64,
+    /// Retained session leases held by the worker.
+    pub leases: u64,
+}
+
+struct RegistrySlot<S> {
+    snapshot: Option<S>,
+    flight: Option<FlightDump>,
+    gauges: Gauges,
+    alive: bool,
+}
+
+impl<S> Default for RegistrySlot<S> {
+    fn default() -> RegistrySlot<S> {
+        RegistrySlot { snapshot: None, flight: None, gauges: Gauges::default(), alive: false }
+    }
+}
+
+/// Lock-cheap publication point between live workers and the admin
+/// plane: each worker owns one slot and periodically *publishes* a
+/// clone of its metrics snapshot / flight dump / gauges; scrapers read
+/// whatever was last published. One mutex per slot, held only for the
+/// clone-in / clone-out, so a `/metrics` scrape never contends with
+/// more than one worker at a time and a wedged worker can't block the
+/// others' slots. All locks are poison-tolerant — a chaos-killed worker
+/// mid-publish must not wedge a scrape.
+///
+/// Workers publish a *final* snapshot right before exit (then flip
+/// `alive` off), so post-shutdown registry contents equal the exit-time
+/// merged report — the property `rust/tests/admin_plane.rs` pins.
+pub struct Registry<S> {
+    slots: Vec<Mutex<RegistrySlot<S>>>,
+}
+
+impl<S: Clone> Registry<S> {
+    pub fn new(slots: usize) -> Registry<S> {
+        Registry { slots: (0..slots).map(|_| Mutex::new(RegistrySlot::default())).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Publish a snapshot and mark the slot alive. Out-of-range slots
+    /// are ignored (the registry is sized once at pool start).
+    pub fn publish(&self, slot: usize, snapshot: S) {
+        if let Some(m) = self.slots.get(slot) {
+            let mut g = lock_clean(m);
+            g.snapshot = Some(snapshot);
+            g.alive = true;
+        }
+    }
+
+    pub fn publish_flight(&self, slot: usize, dump: FlightDump) {
+        if let Some(m) = self.slots.get(slot) {
+            lock_clean(m).flight = Some(dump);
+        }
+    }
+
+    pub fn set_gauges(&self, slot: usize, gauges: Gauges) {
+        if let Some(m) = self.slots.get(slot) {
+            lock_clean(m).gauges = gauges;
+        }
+    }
+
+    pub fn set_alive(&self, slot: usize, alive: bool) {
+        if let Some(m) = self.slots.get(slot) {
+            lock_clean(m).alive = alive;
+        }
+    }
+
+    pub fn snapshot(&self, slot: usize) -> Option<S> {
+        self.slots.get(slot).and_then(|m| lock_clean(m).snapshot.clone())
+    }
+
+    pub fn flight(&self, slot: usize) -> Option<FlightDump> {
+        self.slots.get(slot).and_then(|m| lock_clean(m).flight.clone())
+    }
+
+    pub fn gauges(&self, slot: usize) -> Gauges {
+        self.slots.get(slot).map(|m| lock_clean(m).gauges).unwrap_or_default()
+    }
+
+    pub fn alive(&self, slot: usize) -> bool {
+        self.slots.get(slot).is_some_and(|m| lock_clean(m).alive)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.slots.iter().filter(|m| lock_clean(m).alive).count()
+    }
+}
+
+/// Rolling window the SLO watchdog reads from: seconds since the
+/// tracker's epoch are bucketed, and burn rate is computed over the
+/// trailing `secs` of buckets.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloWindow {
+    pub good: u64,
+    pub bad: u64,
+    /// `(bad / total) / (1 - availability)` — 1.0 means the error
+    /// budget is being consumed exactly as fast as the objective
+    /// allows; > 1 means faster.
+    pub burn_rate: f64,
+}
+
+/// Fast-burn window (seconds). Short so a sudden outage flips
+/// `/readyz` within seconds, per the multi-window burn-rate alerting
+/// pattern.
+pub const FAST_BURN_WINDOW_SECS: u64 = 10;
+/// Slow-burn window (seconds) — context for operators, not a trip wire.
+pub const SLOW_BURN_WINDOW_SECS: u64 = 60;
+/// Fast-window burn rate at which the watchdog declares the pool
+/// degraded (the canonical 14.4× "2% budget in 1 hour" threshold,
+/// rounded).
+pub const FAST_BURN_THRESHOLD: f64 = 14.0;
+
+#[derive(Clone, Copy, Default)]
+struct SloBucket {
+    sec: u64,
+    good: u64,
+    bad: u64,
+}
+
+/// Rolling SLO burn-rate tracker. The front door records each
+/// completed request as good or bad (TTFT over `slo_ttft_us`, shed,
+/// or expired = bad); the admin plane reads windowed burn rates and
+/// flips `/readyz` on fast burn. Per-second buckets in a bounded ring;
+/// recording is O(1) amortized.
+pub struct SloTracker {
+    epoch: Instant,
+    slo_ttft_us: u64,
+    availability: f64,
+    buckets: Mutex<VecDeque<SloBucket>>,
+}
+
+impl SloTracker {
+    /// `slo_ttft_ms == 0` disables the latency criterion (only explicit
+    /// `record_bad` calls — sheds, deadline misses — count as bad).
+    pub fn new(slo_ttft_ms: u64, availability: f64) -> SloTracker {
+        SloTracker {
+            epoch: Instant::now(),
+            slo_ttft_us: slo_ttft_ms.saturating_mul(1000),
+            availability: availability.clamp(0.0, 0.9999),
+            buckets: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn slo_ttft_us(&self) -> u64 {
+        self.slo_ttft_us
+    }
+
+    pub fn availability(&self) -> f64 {
+        self.availability
+    }
+
+    fn record(&self, good: bool) {
+        let sec = self.epoch.elapsed().as_secs();
+        let mut buckets = lock_clean(&self.buckets);
+        if buckets.back().map(|b| b.sec) != Some(sec) {
+            buckets.push_back(SloBucket { sec, good: 0, bad: 0 });
+            // Keep a little over the slow window; older buckets can
+            // never be read again.
+            while buckets.front().is_some_and(|b| b.sec + 2 * SLOW_BURN_WINDOW_SECS < sec) {
+                buckets.pop_front();
+            }
+        }
+        let back = buckets.back_mut().expect("bucket just pushed");
+        if good {
+            back.good += 1;
+        } else {
+            back.bad += 1;
+        }
+    }
+
+    /// Record a served request by its TTFT; bad iff the latency
+    /// objective is set and missed.
+    pub fn record_ttft(&self, ttft_us: u64) {
+        self.record(!(self.slo_ttft_us > 0 && ttft_us > self.slo_ttft_us));
+    }
+
+    pub fn record_good(&self) {
+        self.record(true);
+    }
+
+    /// A request the client would count against us: shed, expired, or
+    /// failed.
+    pub fn record_bad(&self) {
+        self.record(false);
+    }
+
+    /// Burn rate over the trailing `secs` seconds.
+    pub fn window(&self, secs: u64) -> SloWindow {
+        let now = self.epoch.elapsed().as_secs();
+        let from = now.saturating_sub(secs);
+        let (mut good, mut bad) = (0u64, 0u64);
+        for b in lock_clean(&self.buckets).iter() {
+            if b.sec >= from {
+                good += b.good;
+                bad += b.bad;
+            }
+        }
+        let total = good + bad;
+        let burn_rate = if total == 0 {
+            0.0
+        } else {
+            (bad as f64 / total as f64) / (1.0 - self.availability)
+        };
+        SloWindow { good, bad, burn_rate }
+    }
+
+    /// Watchdog verdict: fast-window burn rate at or over threshold
+    /// (with at least one actual bad event, so an idle pool is never
+    /// "degraded").
+    pub fn degraded(&self) -> bool {
+        let w = self.window(FAST_BURN_WINDOW_SECS);
+        w.bad > 0 && w.burn_rate >= FAST_BURN_THRESHOLD
+    }
+
+    /// The `/slo` endpoint body.
+    pub fn to_json(&self) -> Json {
+        let win = |w: SloWindow, secs: u64| {
+            Json::Obj(vec![
+                ("window_secs".into(), Json::Num(secs as f64)),
+                ("good".into(), Json::Num(w.good as f64)),
+                ("bad".into(), Json::Num(w.bad as f64)),
+                ("burn_rate".into(), Json::Num(w.burn_rate)),
+            ])
+        };
+        Json::Obj(vec![
+            ("slo_ttft_ms".into(), Json::Num((self.slo_ttft_us / 1000) as f64)),
+            ("slo_availability".into(), Json::Num(self.availability)),
+            ("fast".into(), win(self.window(FAST_BURN_WINDOW_SECS), FAST_BURN_WINDOW_SECS)),
+            ("slow".into(), win(self.window(SLOW_BURN_WINDOW_SECS), SLOW_BURN_WINDOW_SECS)),
+            ("degraded".into(), Json::Bool(self.degraded())),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -710,6 +1151,64 @@ mod tests {
         assert_eq!(fwd, rev, "merge order must not change the histogram");
         assert_eq!(fwd, global, "merged shards must equal single-stream recording");
         assert_eq!(fwd.percentile(0.99), global.percentile(0.99));
+    }
+
+    #[test]
+    fn empty_histogram_percentiles_are_zero() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile(p), 0, "empty histogram reports 0 at every rank");
+        }
+        assert_eq!((h.len(), h.sum(), h.max_bucket_low()), (0, 0, 0));
+    }
+
+    #[test]
+    fn single_sample_dominates_every_percentile() {
+        for v in [0u64, 7, 31, 33, 1 << 20, u64::MAX] {
+            let mut h = Histogram::new();
+            h.record(v);
+            let rep = Histogram::bucket_low(Histogram::bucket_index(v));
+            for p in [0.0, 0.5, 0.99, 1.0] {
+                assert_eq!(h.percentile(p), rep, "p{p} of single sample {v}");
+            }
+            assert_eq!(h.max_bucket_low(), rep);
+        }
+    }
+
+    #[test]
+    fn all_samples_in_one_bucket_collapse_percentiles() {
+        // 1000 and 1001 share an octave sub-bucket (width 64 at that
+        // scale), so every rank reports the same bucket lower bound.
+        let mut h = Histogram::new();
+        for _ in 0..500 {
+            h.record(1000);
+            h.record(1001);
+        }
+        assert_eq!(Histogram::bucket_index(1000), Histogram::bucket_index(1001));
+        let rep = Histogram::bucket_low(Histogram::bucket_index(1000));
+        for p in [0.0, 0.25, 0.5, 0.999, 1.0] {
+            assert_eq!(h.percentile(p), rep);
+        }
+        assert_eq!(h.len(), 1000);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_both_ways() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(0xe44);
+        for _ in 0..300 {
+            h.record(rng.below(1 << 24) as u64);
+        }
+        let before = h.clone();
+        h.merge(&Histogram::new());
+        assert_eq!(h, before, "merging an empty histogram in must change nothing");
+        let mut fresh = Histogram::new();
+        fresh.merge(&before);
+        assert_eq!(fresh, before, "merging into an empty histogram must copy exactly");
+        let mut both = Histogram::new();
+        both.merge(&Histogram::new());
+        assert!(both.is_empty() && both.percentile(0.5) == 0);
     }
 
     #[test]
@@ -822,5 +1321,141 @@ mod tests {
         let sampled: Vec<u64> = (1..=12).filter(|&i| rec.sampled(i)).collect();
         assert_eq!(sampled, vec![4, 8, 12]);
         assert!(TelemetryConfig::off().sample_every == 0 && !TelemetryConfig::off().enabled());
+    }
+
+    #[test]
+    fn labeled_exposition_passes_lint() {
+        let mut h = Histogram::new();
+        h.record(3);
+        h.record(4000);
+        let mut out = String::new();
+        h.prometheus_with_help_into(
+            "lcd_phase_decode_us",
+            "Decode phase latency (µs).",
+            "worker=\"1\"",
+            &mut out,
+        );
+        assert!(out.contains("# HELP lcd_phase_decode_us Decode phase latency (µs)."));
+        assert!(out.contains("# TYPE lcd_phase_decode_us histogram"));
+        assert!(out.contains("lcd_phase_decode_us_bucket{worker=\"1\",le=\"3\"} 1"));
+        assert!(out.contains("lcd_phase_decode_us_sum{worker=\"1\"} 4003"));
+        assert!(out.contains("lcd_phase_decode_us_count{worker=\"1\"} 2"));
+        prometheus_lint(&out).expect("labeled family must lint clean");
+    }
+
+    #[test]
+    fn lint_rejects_malformed_expositions() {
+        // Sample without headers.
+        assert!(prometheus_lint("lcd_up 1\n").is_err());
+        // TYPE without HELP.
+        assert!(prometheus_lint("# TYPE lcd_up gauge\nlcd_up 1\n").is_err());
+        // Bad value.
+        assert!(prometheus_lint("# HELP lcd_up x\n# TYPE lcd_up gauge\nlcd_up one\n").is_err());
+        // Histogram bucket missing the le label.
+        let bad = "# HELP lcd_h x\n# TYPE lcd_h histogram\nlcd_h_bucket{worker=\"0\"} 1\n";
+        assert!(prometheus_lint(bad).is_err());
+        // Unterminated label set.
+        assert!(prometheus_lint("# HELP lcd_up x\n# TYPE lcd_up gauge\nlcd_up{a=\"1\" 1\n")
+            .is_err());
+        // A full well-formed family passes.
+        let good = "# HELP lcd_up whether up\n# TYPE lcd_up gauge\nlcd_up{worker=\"0\"} 1\n";
+        prometheus_lint(good).expect("well-formed exposition");
+    }
+
+    #[test]
+    fn traced_marks_and_attachments_carry_the_trace_id() {
+        let mut rec = FlightRecorder::new(&TelemetryConfig::default());
+        let mut stats = PhaseStats::default();
+        rec.begin_iteration(1);
+        rec.mark_traced(Phase::Admit, 42, 0xabcd);
+        rec.begin(Phase::Prefill, 2);
+        rec.end(&mut stats);
+        rec.attach_trace(42, 0xabcd);
+        rec.attach_trace(43, 0); // untraced: must be a no-op
+        rec.mark_span(Phase::Queue, 42, 0xabcd, 150);
+        let dump = rec.dump(0);
+        let traced: Vec<&SpanEvent> =
+            dump.events.iter().filter(|e| e.trace == 0xabcd).collect();
+        let phases: Vec<Phase> = traced.iter().map(|e| e.phase).collect();
+        assert_eq!(phases, vec![Phase::Admit, Phase::Prefill, Phase::Queue]);
+        assert!(traced.iter().all(|e| e.detail == 42));
+        // The attachment mirrors the batched span's timing.
+        let batched =
+            dump.events.iter().find(|e| e.phase == Phase::Prefill && e.trace == 0).unwrap();
+        let attached =
+            dump.events.iter().find(|e| e.phase == Phase::Prefill && e.trace != 0).unwrap();
+        assert_eq!((batched.start_us, batched.dur_us), (attached.start_us, attached.dur_us));
+        assert_eq!(dump.events.len(), 4, "untraced attach must not add an event");
+        // Chrome export: traced events carry the 16-hex trace arg and a
+        // request id; Queue renders as a span, Receive/StreamOut as marks.
+        let text = dump.chrome_trace().to_string_pretty();
+        assert!(text.contains("000000000000abcd"));
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        let queue = events
+            .iter()
+            .find(|e| e.req("name").unwrap().as_str().unwrap() == "queue")
+            .unwrap();
+        assert_eq!(queue.req("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(queue.req("dur").unwrap().as_f64().unwrap(), 150.0);
+        assert_eq!(queue.req("args").unwrap().req("request").unwrap().as_f64().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn registry_publishes_and_survives_out_of_range() {
+        let reg: Registry<u64> = Registry::new(2);
+        assert_eq!((reg.len(), reg.alive_count()), (2, 0));
+        reg.publish(0, 7);
+        reg.set_gauges(0, Gauges { in_flight: 3, queue_depth: 5, leases: 1 });
+        assert_eq!(reg.snapshot(0), Some(7));
+        assert_eq!(reg.snapshot(1), None);
+        assert_eq!(reg.gauges(0).queue_depth, 5);
+        assert!(reg.alive(0) && !reg.alive(1));
+        assert_eq!(reg.alive_count(), 1);
+        reg.set_alive(0, false);
+        assert_eq!(reg.alive_count(), 0);
+        // Out-of-range slots are ignored, never panic.
+        reg.publish(9, 1);
+        reg.set_alive(9, true);
+        assert_eq!(reg.snapshot(9), None);
+        assert_eq!(reg.gauges(9).in_flight, 0);
+        let mut rec = FlightRecorder::new(&TelemetryConfig::default());
+        rec.begin_iteration(1);
+        rec.mark(Phase::Admit, 1);
+        let reg2: Registry<u64> = Registry::new(1);
+        reg2.publish_flight(0, rec.dump(0));
+        assert_eq!(reg2.flight(0).unwrap().events.len(), 1);
+        assert!(reg2.flight(9).is_none());
+    }
+
+    #[test]
+    fn slo_burn_rate_windows() {
+        let slo = SloTracker::new(100, 0.99); // 100ms TTFT, 99% availability
+        assert_eq!(slo.slo_ttft_us(), 100_000);
+        for _ in 0..98 {
+            slo.record_ttft(50_000); // within objective
+        }
+        slo.record_ttft(200_000); // missed latency objective
+        slo.record_bad(); // shed
+        let w = slo.window(FAST_BURN_WINDOW_SECS);
+        assert_eq!((w.good, w.bad), (98, 2));
+        // 2% bad against a 1% budget = burn rate 2.
+        assert!((w.burn_rate - 2.0).abs() < 1e-9, "burn {}", w.burn_rate);
+        assert!(!slo.degraded(), "burn 2 is under the fast-burn threshold");
+        // Push bad fraction over threshold: 14 * 1% = 14% bad.
+        for _ in 0..40 {
+            slo.record_bad();
+        }
+        assert!(slo.degraded());
+        let j = slo.to_json().to_string();
+        assert!(j.contains("\"degraded\": true") || j.contains("\"degraded\":true"), "{j}");
+        // Latency criterion off: only explicit bads count.
+        let lax = SloTracker::new(0, 0.99);
+        lax.record_ttft(10_000_000);
+        assert_eq!(lax.window(FAST_BURN_WINDOW_SECS).bad, 0);
+        // Idle tracker is never degraded and burns at 0.
+        let idle = SloTracker::new(100, 0.99);
+        assert!(!idle.degraded());
+        assert_eq!(idle.window(FAST_BURN_WINDOW_SECS).burn_rate, 0.0);
     }
 }

@@ -1,0 +1,299 @@
+//! Acceptance suite for the live admin plane (`coordinator::admin`).
+//!
+//! Three layers of guarantees on top of the front-door suite:
+//!
+//! * **Live introspection** — while a pool is serving TCP traffic,
+//!   `/metrics` answers a lint-clean Prometheus exposition, `/healthz`
+//!   and `/readyz` answer 200, `/slo` answers burn-rate JSON, and
+//!   `/flight` serves chrome-trace dumps — all without touching worker
+//!   threads, and without perturbing bit-identity of the served streams.
+//! * **Registry-fold equality** — after a clean shutdown, each worker's
+//!   final published registry snapshot equals the exit-time report's
+//!   per-worker snapshot *exactly*, and the order-independent fold of
+//!   the per-worker phase histograms equals the aggregate's (the
+//!   property that makes scraped aggregates trustworthy: a scrape is
+//!   just an earlier fold of the same slots).
+//! * **Trace propagation** — a client-supplied `trace_id` on the wire
+//!   shows up on the front door's Receive/Queue/StreamOut events and on
+//!   the owning worker's Admit/FirstToken/Complete marks (plus the
+//!   phase spans it rode), so one grep for the 16-hex id reconstructs
+//!   the request's timeline across layers.
+
+mod common;
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use lcd::coordinator::frontdoor::{
+    decode_server, encode_client, read_frame, write_frame, MAX_FRAME,
+};
+use lcd::coordinator::{
+    start_pool_obs, AdminServer, AdminState, AdmissionPolicy, ClientFrame, FrontDoor,
+    FrontDoorConfig, FrontDoorObs, MetricsRegistry, SchedulerConfig, ServerFrame, SessionOptions,
+    WireRequest,
+};
+use lcd::telemetry::{
+    prometheus_lint, FlightDump, FlightRecorder, Phase, PhaseStats, SloTracker, TelemetryConfig,
+};
+
+/// One-shot HTTP/1.0 GET against the admin plane; returns (status, body).
+fn http_get(addr: SocketAddr, target: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connecting to admin plane");
+    stream.set_read_timeout(Some(Duration::from_secs(5))).expect("setting read timeout");
+    write!(stream, "GET {target} HTTP/1.0\r\nHost: admin\r\n\r\n").expect("writing request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("reading admin response");
+    let status = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("admin response has no status line: {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// True when the dump holds an event of `phase` carrying `trace`
+/// (closed ring events or the open span).
+fn has_trace(dump: &FlightDump, phase: Phase, trace: u64) -> bool {
+    dump.events.iter().chain(dump.open.iter()).any(|e| e.phase == phase && e.trace == trace)
+}
+
+/// Distinct nonzero trace ids, greppable as 16-hex digits.
+fn trace_of(i: usize) -> u64 {
+    0x7ace_0000_0000_0000 | (i as u64 + 1)
+}
+
+#[test]
+fn admin_plane_serves_live_introspection_and_registry_fold_matches_exit_report() {
+    let spec = common::base_spec(0xad31, 4, 48, 24, 0);
+    let workers = 2;
+    let registry = Arc::new(MetricsRegistry::new(workers));
+    // Capacity above any event count this test can produce: the
+    // post-shutdown trace greps must never lose a mark to ring eviction.
+    let tele = TelemetryConfig { sample_every: 1, recorder_capacity: 4096, sink: None };
+    let handle = {
+        let spec = spec.clone();
+        start_pool_obs(
+            workers,
+            4,
+            64,
+            SchedulerConfig::new(AdmissionPolicy::Fifo, 8).unwrap(),
+            SessionOptions::default(),
+            tele.clone(),
+            Some(Arc::clone(&registry)),
+            move |_w: usize| common::mk_engine("cached", &spec),
+        )
+    };
+    let slo = Arc::new(SloTracker::new(0, 0.99));
+    let recorder = Arc::new(Mutex::new(FlightRecorder::new(&tele)));
+    let door = FrontDoor::start_obs(
+        handle,
+        FrontDoorConfig::default(),
+        FrontDoorObs { slo: Some(Arc::clone(&slo)), recorder: Some(Arc::clone(&recorder)) },
+    )
+    .expect("binding front door");
+    let admin = AdminServer::start(
+        "127.0.0.1:0",
+        AdminState {
+            registry: Arc::clone(&registry),
+            slo: Some(Arc::clone(&slo)),
+            frontdoor: Some(door.stats_handle()),
+            frontdoor_recorder: Some(Arc::clone(&recorder)),
+        },
+    )
+    .expect("binding admin plane");
+
+    // Submit a mixed traced request set over the wire, all on one
+    // connection; tenants alternate so the tenant-labeled families have
+    // more than one series.
+    let requests = common::request_set(0x51ee, spec.vocab, 6);
+    let mut stream = TcpStream::connect(door.addr()).expect("connecting front door");
+    for (i, (prompt, gen)) in requests.iter().enumerate() {
+        let frame = ClientFrame::Request(WireRequest {
+            id: i as u64 + 1,
+            session: 0,
+            priority: 0,
+            deadline_ms: 0,
+            gen_tokens: *gen as u32,
+            resume: None,
+            tenant: if i % 2 == 0 { "gold".to_string() } else { "bronze".to_string() },
+            prompt: prompt.clone(),
+            trace_id: trace_of(i),
+        });
+        write_frame(&mut stream, &encode_client(&frame)).expect("writing request frame");
+    }
+
+    // Scrape while the pool is (very likely still) serving: every
+    // endpoint must answer without waiting on worker threads, and the
+    // exposition must be lint-clean whatever publication state the
+    // scrape catches.
+    let (code, body) = http_get(admin.addr(), "/metrics");
+    assert_eq!(code, 200, "/metrics while serving");
+    prometheus_lint(&body).expect("mid-serve /metrics exposition must be lint-clean");
+    assert!(body.contains("# TYPE lcd_completed counter"), "counter headers always present");
+    let (code, body) = http_get(admin.addr(), "/healthz");
+    assert_eq!((code, body.as_str()), (200, "ok\n"), "/healthz with live workers");
+    let (code, _) = http_get(admin.addr(), "/readyz");
+    assert_eq!(code, 200, "/readyz: healthy pool, no error budget burn");
+    let (code, body) = http_get(admin.addr(), "/slo");
+    assert_eq!(code, 200, "/slo is configured");
+    assert!(body.contains("burn_rate"), "slo JSON shape: {body}");
+    assert!(body.contains("\"degraded\""), "slo JSON shape: {body}");
+
+    // Drain all six terminals, then check bit-identity: introspection
+    // must be a pure observer.
+    let mut tokens: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut done = 0;
+    while done < requests.len() {
+        let payload = read_frame(&mut stream, MAX_FRAME)
+            .expect("reading server frame")
+            .expect("server closed early");
+        match decode_server(&payload).expect("valid server frame") {
+            ServerFrame::Tokens { id, tokens: t } => tokens.entry(id).or_default().extend(t),
+            ServerFrame::Done { .. } => done += 1,
+            other => panic!("unexpected terminal under no overload: {other:?}"),
+        }
+    }
+    for (i, (prompt, gen)) in requests.iter().enumerate() {
+        assert_eq!(
+            tokens.get(&(i as u64 + 1)),
+            Some(&common::reference_stream(&spec, prompt, *gen)),
+            "request {i} diverged from the uninterrupted reference"
+        );
+    }
+
+    // Post-drain, pre-shutdown: flight endpoints serve chrome-trace
+    // JSON; the front-door dump already carries the trace ids.
+    let (code, body) = http_get(admin.addr(), "/flight?worker=0");
+    assert_eq!(code, 200, "worker 0 has published a flight dump");
+    assert!(body.contains("traceEvents"), "chrome-trace shape");
+    let (code, body) = http_get(admin.addr(), "/flight?worker=frontdoor");
+    assert_eq!(code, 200, "front-door recorder is configured");
+    let hex = format!("{:016x}", trace_of(0));
+    assert!(body.contains(&hex), "front-door flight dump carries trace {hex}: {body}");
+    let (code, _) = http_get(admin.addr(), "/flight?worker=9");
+    assert_eq!(code, 404, "out-of-range worker index");
+    let (code, _) = http_get(admin.addr(), "/nope");
+    assert_eq!(code, 404, "unknown endpoint");
+
+    let (code, body) = http_get(admin.addr(), "/metrics");
+    assert_eq!(code, 200);
+    prometheus_lint(&body).expect("post-drain /metrics exposition must be lint-clean");
+    assert!(body.contains("lcd_completed{worker=\"0\"}"), "published worker series: {body}");
+    assert!(body.contains("lcd_tenant_completed{tenant=\"gold\"}"), "tenant series: {body}");
+
+    drop(stream);
+    let report = door.shutdown();
+
+    // Registry-fold equality: each worker's final published snapshot is
+    // the exit report's per-worker snapshot, bit for bit...
+    assert_eq!(report.pool.per_worker.len(), workers);
+    for (w, snap) in report.pool.per_worker.iter().enumerate() {
+        assert_eq!(
+            registry.snapshot(w).as_ref(),
+            Some(snap),
+            "worker {w}: post-shutdown registry slot must equal the exit-time snapshot"
+        );
+        assert!(!registry.alive(w), "worker {w} must clear its alive flag on exit");
+    }
+    assert_eq!(registry.alive_count(), 0);
+    // ...and the aggregate phase histograms are the order-independent
+    // fold of those slots (bucket-wise merge commutes).
+    let mut fwd = PhaseStats::default();
+    let mut rev = PhaseStats::default();
+    for snap in &report.pool.per_worker {
+        fwd.merge(&snap.phases);
+    }
+    for w in (0..workers).rev() {
+        rev.merge(&registry.snapshot(w).expect("published slot").phases);
+    }
+    assert_eq!(fwd, report.pool.aggregate.phases, "aggregate = fold(per-worker phases)");
+    assert_eq!(rev, fwd, "fold order must not matter");
+    assert!(!fwd.is_empty(), "sample_every=1 serving must have captured phase spans");
+    assert_eq!(report.pool.aggregate.completed, requests.len() as u64);
+
+    // Trace propagation: every request's trace id must appear on the
+    // front door's lifecycle events and on some worker's admission /
+    // first-token / completion marks.
+    let fd_dump = recorder.lock().unwrap().dump(workers);
+    let worker_dumps: Vec<FlightDump> =
+        (0..workers).map(|w| registry.flight(w).expect("exit-time flight publish")).collect();
+    for i in 0..requests.len() {
+        let t = trace_of(i);
+        for phase in [Phase::Receive, Phase::Queue, Phase::StreamOut] {
+            assert!(has_trace(&fd_dump, phase, t), "front door lost trace {t:#x} on {phase:?}");
+        }
+        for phase in [Phase::Admit, Phase::FirstToken, Phase::Complete] {
+            assert!(
+                worker_dumps.iter().any(|d| has_trace(d, phase, t)),
+                "no worker recorded trace {t:#x} on {phase:?}"
+            );
+        }
+    }
+    // The trace also rides timed scheduler spans (prefill/decode), not
+    // just the zero-duration lifecycle marks.
+    let span_traced = worker_dumps
+        .iter()
+        .flat_map(|d| d.events.iter())
+        .any(|e| matches!(e.phase, Phase::Prefill | Phase::Decode) && e.trace != 0);
+    assert!(span_traced, "traced requests must attach their trace to the phase spans they rode");
+
+    // The pool is gone but the admin plane still answers — and now
+    // reports the truth.
+    let (code, _) = http_get(admin.addr(), "/healthz");
+    assert_eq!(code, 503, "/healthz after shutdown: no live workers");
+    let (code, body) = http_get(admin.addr(), "/metrics");
+    assert_eq!(code, 200, "post-shutdown scrape still serves final snapshots");
+    prometheus_lint(&body).expect("post-shutdown /metrics exposition must be lint-clean");
+    admin.stop();
+}
+
+/// The SLO watchdog end to end over HTTP: a burst of bad outcomes flips
+/// `/readyz` to 503 (fast-burn) while `/healthz` stays 200 (the pool is
+/// alive, just burning budget); enough good traffic dilutes the burn
+/// rate back under threshold; losing all workers flips both.
+#[test]
+fn readyz_watchdog_trips_on_fast_burn_and_recovers() {
+    let registry = Arc::new(MetricsRegistry::new(1));
+    registry.set_alive(0, true);
+    let slo = Arc::new(SloTracker::new(5, 0.99));
+    let admin = AdminServer::start(
+        "127.0.0.1:0",
+        AdminState {
+            registry: Arc::clone(&registry),
+            slo: Some(Arc::clone(&slo)),
+            frontdoor: None,
+            frontdoor_recorder: None,
+        },
+    )
+    .expect("binding admin plane");
+
+    for _ in 0..50 {
+        slo.record_bad();
+    }
+    let (code, _) = http_get(admin.addr(), "/healthz");
+    assert_eq!(code, 200, "liveness is not readiness: workers are up");
+    let (code, body) = http_get(admin.addr(), "/readyz");
+    assert_eq!(code, 503, "50 bad outcomes in the fast window must trip the watchdog");
+    assert!(body.contains("fast-burn"), "watchdog names its cause: {body}");
+    let (code, body) = http_get(admin.addr(), "/slo");
+    assert_eq!(code, 200);
+    assert!(body.contains("\"degraded\": true") || body.contains("\"degraded\":true"), "{body}");
+
+    // 50 bad / 450 total = 11.1% bad → burn ≈ 11.1 < 14: under threshold.
+    for _ in 0..400 {
+        slo.record_good();
+    }
+    let (code, _) = http_get(admin.addr(), "/readyz");
+    assert_eq!(code, 200, "good traffic dilutes the fast window below threshold");
+
+    registry.set_alive(0, false);
+    let (code, _) = http_get(admin.addr(), "/readyz");
+    assert_eq!(code, 503, "no live workers trumps a clean SLO");
+    let (code, _) = http_get(admin.addr(), "/flight?worker=frontdoor");
+    assert_eq!(code, 404, "front-door recorder not configured here");
+    admin.stop();
+}

@@ -64,7 +64,17 @@ fn wire(
     tenant: &str,
     prompt: Vec<i32>,
 ) -> WireRequest {
-    WireRequest { id, session, priority, deadline_ms, gen_tokens, resume, tenant: tenant.to_string(), prompt }
+    WireRequest {
+        id,
+        session,
+        priority,
+        deadline_ms,
+        gen_tokens,
+        resume,
+        tenant: tenant.to_string(),
+        prompt,
+        trace_id: 0,
+    }
 }
 
 /// Everything a client observed for one request id.
@@ -115,10 +125,20 @@ fn collect(stream: &mut TcpStream, want: usize) -> HashMap<u64, Outcome> {
 /// together.
 #[test]
 fn spec_conformance_vectors_decode_and_reencode_verbatim() {
-    let client_vectors: [(&str, ClientFrame); 3] = [
+    let client_vectors: [(&str, ClientFrame); 4] = [
         (
             "0000002e01010000000000000007000000000000000001000007d00000000400000461636d65000000020000000300000005",
             ClientFrame::Request(wire(7, 0, 1, 2000, 4, None, "acme", vec![3, 5])),
+        ),
+        (
+            // The trace_id frame extension: the untraced request above
+            // plus the trailing tag 0x01 + id block (docs/PROTOCOL.md
+            // "Request extensions").
+            "0000003701010000000000000007000000000000000000000000000000000400000461636d65000000020000000100000002010102030405060708",
+            ClientFrame::Request(WireRequest {
+                trace_id: 0x0102_0304_0506_0708,
+                ..wire(7, 0, 0, 0, 4, None, "acme", vec![1, 2])
+            }),
         ),
         (
             "00000042010100000000000000080000000000000003000000000000000002010000000900000001000000040004626574610000000400000001000000020000000900000004",
@@ -190,6 +210,29 @@ fn spec_vector_corruptions_are_rejected() {
     let mut trailing = payload.clone();
     trailing.push(0);
     assert!(decode_client(&trailing).is_err(), "trailing byte accepted");
+
+    // The trace_id extension's canonical-encoding rules: an explicit
+    // zero id and an unknown extension tag are both rejected (zero is
+    // only representable by absence, so every frame has exactly one
+    // encoding), and a mid-extension truncation is a truncated frame —
+    // while cutting the whole block off yields the valid untraced frame.
+    let traced = "0000003701010000000000000007000000000000000000000000000000000400000461636d65000000020000000100000002010102030405060708";
+    let traced_payload = unhex(traced)[4..].to_vec();
+    assert!(decode_client(&traced_payload).is_ok(), "traced baseline vector must decode");
+    let mut zero_trace = traced_payload.clone();
+    let ext = zero_trace.len() - 8;
+    zero_trace[ext..].fill(0);
+    assert!(decode_client(&zero_trace).is_err(), "explicit zero trace id accepted");
+    let mut bad_tag = traced_payload.clone();
+    bad_tag[ext - 1] = 0x02;
+    assert!(decode_client(&bad_tag).is_err(), "unknown extension tag accepted");
+    for cut in ext..traced_payload.len() {
+        assert!(decode_client(&traced_payload[..cut]).is_err(), "extension truncation at {cut} accepted");
+    }
+    match decode_client(&traced_payload[..ext - 1]) {
+        Ok(ClientFrame::Request(r)) => assert_eq!(r.trace_id, 0, "extension-free prefix is the untraced frame"),
+        other => panic!("extension-free prefix must decode untraced: {other:?}"),
+    }
 
     // Framing layer: a length prefix above MAX_FRAME is refused before
     // any payload allocation.

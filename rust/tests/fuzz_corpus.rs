@@ -105,6 +105,7 @@ fn frame_codec_roundtrips_on_fuzzed_frames() {
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-request").as_slice(),
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-resume").as_slice(),
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-cancel").as_slice(),
+            include_bytes!("../fuzz/corpus/frame_roundtrip/seed-traced").as_slice(),
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-tokens").as_slice(),
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-hostile").as_slice(),
         ],

@@ -197,6 +197,7 @@ fn batcher_backpressure_under_load() {
             reply: tx.clone(),
             t_submit: std::time::Instant::now(),
             session: None,
+            trace: 0,
         }) {
             accepted += 1;
         }
