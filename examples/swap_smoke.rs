@@ -1,0 +1,322 @@
+//! Rolling hot-swap smoke: the CI `swap-smoke` job's driver.
+//!
+//! End to end over real sockets, in one process:
+//!
+//! 1. pack two `.lcdw` v2 artifacts (`prod@1` 6-centroid, `prod@2`
+//!    8-centroid — same name, different quantization recipe) into a
+//!    scratch model dir, exactly as `lcd pack` would;
+//! 2. load them through the verified `ModelRegistry` and boot a worker
+//!    pool whose engines rebuild from artifact weights, fronted by the
+//!    TCP wire protocol and the HTTP admin plane on loopback;
+//! 3. drive request waves before, during, and after a rolling swap
+//!    triggered the operator way — `GET /swap?model=prod@2` — polling
+//!    `/models` until every worker serves the new artifact;
+//! 4. gate on the ISSUE's acceptance properties, printed as
+//!    machine-checkable `SWAP_GATE <name> PASS|FAIL` lines:
+//!    * `swap_zero_drops` — every submitted request completes
+//!      (`completed + rejected == submitted` with `rejected == 0`);
+//!    * `postswap_bit_identity` — post-swap streams are bit-identical
+//!      to a fresh engine rebuilt from the new artifact's verified
+//!      tensors;
+//!    * `postswap_metrics_lint` — the post-swap `/metrics` scrape is
+//!      lint-clean and reports every worker on `prod@2`.
+//!
+//! Run: `cargo run --release --example swap_smoke`
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::process::exit;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lcd::coordinator::frontdoor::{
+    decode_server, encode_client, read_frame, write_frame, MAX_FRAME,
+};
+use lcd::coordinator::{
+    start_pool_models, AdmissionPolicy, AdminServer, AdminState, CachedLutEngine, ClientFrame,
+    FrontDoor, FrontDoorConfig, FrontDoorObs, HostLutModel, HostLutSpec, HostLutWeights,
+    MetricsRegistry, SchedulerConfig, ServerFrame, SessionOptions, WireRequest,
+};
+use lcd::model::{write_lcdw_v2, ModelKey, ModelRecipe, ModelRegistry};
+use lcd::telemetry::{prometheus_lint, TelemetryConfig};
+use lcd::util::argmax;
+
+const WORKERS: usize = 2;
+const BATCH: usize = 2;
+const SEQ: usize = 48;
+
+fn spec_of(r: &ModelRecipe) -> HostLutSpec {
+    HostLutSpec {
+        batch: BATCH,
+        seq: SEQ,
+        vocab: r.vocab,
+        hidden: r.hidden,
+        depth: r.depth,
+        centroids: r.centroids,
+        seed: r.seed,
+        gemm_threads: 0,
+        gemm_shard_rows: 0,
+    }
+}
+
+/// Pack `name@version` from the recipe's seeded weights (`lcd pack`'s
+/// serialization path).
+fn pack(dir: &str, name: &str, version: u32, r: &ModelRecipe) {
+    let spec = spec_of(r);
+    let weights = HostLutModel::seeded_weights(spec.clone()).expect("seeded weights");
+    let tensors = weights.to_tensors(&spec).expect("weights to tensors");
+    let path = format!("{dir}/{name}@{version}.lcdw");
+    write_lcdw_v2(
+        &path,
+        name,
+        version,
+        &r.to_json(),
+        "swap_smoke",
+        tensors.iter().map(|(n, t)| (n.as_str(), t)),
+    )
+    .expect("packing artifact");
+}
+
+/// Rebuild a serving engine from a verified registry entry — the same
+/// path the pool's worker builder takes.
+fn engine_from(registry: &ModelRegistry, key: &ModelKey) -> anyhow::Result<CachedLutEngine> {
+    let artifact = registry.get(key)?;
+    let spec = spec_of(&artifact.recipe);
+    let weights = HostLutWeights::from_tensors(&artifact.tensors, &spec)?;
+    let model = HostLutModel::build_from_weights(spec, &weights)?;
+    CachedLutEngine::from_model(model)
+}
+
+/// The uninterrupted greedy stream a fresh engine on `key` serves.
+fn reference_stream(registry: &ModelRegistry, key: &ModelKey, prompt: &[i32], gen: usize) -> Vec<i32> {
+    let mut e = engine_from(registry, key).expect("reference rebuild");
+    let row = e.prefill(0, prompt).expect("prefill");
+    let mut out = Vec::with_capacity(gen);
+    if gen == 0 {
+        return out;
+    }
+    let mut tok = argmax(&row) as i32;
+    out.push(tok);
+    while out.len() < gen {
+        let row = e.decode_step(0, tok).expect("decode step");
+        tok = argmax(&row) as i32;
+        out.push(tok);
+    }
+    out
+}
+
+/// One-shot HTTP/1.0 GET; returns (status, body).
+fn http_get(addr: SocketAddr, target: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connecting to admin plane");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).expect("setting read timeout");
+    write!(stream, "GET {target} HTTP/1.0\r\nHost: admin\r\n\r\n").expect("writing request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("reading admin response");
+    let status = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("admin response has no status line: {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// Submit `wave` requests on one wire connection and read to their
+/// terminals. Returns per-id token streams and the count of non-Done
+/// terminals (sheds/rejects — any of which is a dropped request here,
+/// since this workload never overloads the queue).
+fn drive_wave(
+    addr: SocketAddr,
+    first_id: u64,
+    wave: &[(Vec<i32>, u32)],
+    pace: Option<Duration>,
+) -> (HashMap<u64, Vec<i32>>, usize) {
+    let mut stream = TcpStream::connect(addr).expect("connecting front door");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).expect("setting read timeout");
+    for (i, (prompt, gen)) in wave.iter().enumerate() {
+        let frame = ClientFrame::Request(WireRequest {
+            id: first_id + i as u64,
+            session: 0,
+            priority: 0,
+            deadline_ms: 0,
+            gen_tokens: *gen,
+            resume: None,
+            tenant: "smoke".to_string(),
+            prompt: prompt.clone(),
+            trace_id: 0,
+            model: None,
+        });
+        write_frame(&mut stream, &encode_client(&frame)).expect("writing request frame");
+        if let Some(p) = pace {
+            std::thread::sleep(p);
+        }
+    }
+    let mut tokens: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut terminals = 0;
+    let mut dropped = 0;
+    while terminals < wave.len() {
+        let payload = read_frame(&mut stream, MAX_FRAME)
+            .expect("reading server frame")
+            .expect("server closed before all terminals");
+        match decode_server(&payload).expect("valid server frame") {
+            ServerFrame::Tokens { id, tokens: t } => tokens.entry(id).or_default().extend(t),
+            ServerFrame::Done { .. } => {
+                terminals += 1;
+            }
+            other => {
+                eprintln!("[swap_smoke] non-Done terminal: {other:?}");
+                terminals += 1;
+                dropped += 1;
+            }
+        }
+    }
+    (tokens, dropped)
+}
+
+fn gate(name: &str, pass: bool, detail: &str) -> bool {
+    println!("SWAP_GATE {name} {} ({detail})", if pass { "PASS" } else { "FAIL" });
+    pass
+}
+
+fn main() {
+    // 1. Pack the two artifact versions into a scratch model dir.
+    let dir_path = std::env::temp_dir().join(format!("lcd-swap-smoke-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir_path);
+    std::fs::create_dir_all(&dir_path).expect("creating scratch model dir");
+    let dir = dir_path.to_str().expect("utf8 temp path").to_string();
+    let r1 = ModelRecipe { vocab: 24, hidden: 24, depth: 2, centroids: 6, seed: 0x5a11 };
+    let r2 = ModelRecipe { vocab: 24, hidden: 24, depth: 2, centroids: 8, seed: 0x5a22 };
+    pack(&dir, "prod", 1, &r1);
+    pack(&dir, "prod", 2, &r2);
+
+    // 2. Verified registry → artifact-built pool → front door + admin.
+    let registry = Arc::new(ModelRegistry::load_dir(&dir).expect("loading packed artifacts"));
+    let k1 = ModelKey::new("prod", 1).unwrap();
+    let k2 = ModelKey::new("prod", 2).unwrap();
+    let metrics = Arc::new(MetricsRegistry::new(WORKERS));
+    let handle = {
+        let registry = Arc::clone(&registry);
+        start_pool_models(
+            WORKERS,
+            BATCH,
+            256,
+            SchedulerConfig::unchunked(AdmissionPolicy::Fifo),
+            SessionOptions::default(),
+            TelemetryConfig::default(),
+            Some(Arc::clone(&metrics)),
+            k1.clone(),
+            move |_w, key: &ModelKey| engine_from(&registry, key),
+        )
+    };
+    let swap = handle.swap_controller();
+    let door = FrontDoor::start_obs(
+        handle,
+        FrontDoorConfig::default(),
+        FrontDoorObs { slo: None, recorder: None },
+    )
+    .expect("binding front door");
+    let admin = AdminServer::start(
+        "127.0.0.1:0",
+        AdminState {
+            registry: Arc::clone(&metrics),
+            slo: None,
+            frontdoor: Some(door.stats_handle()),
+            frontdoor_recorder: None,
+            models: Some(Arc::clone(&registry)),
+            swap: Some(swap),
+        },
+    )
+    .expect("binding admin plane");
+    println!("[swap_smoke] front door {}, admin {}", door.addr(), admin.addr());
+
+    let wave: Vec<(Vec<i32>, u32)> =
+        (0..8).map(|i| (vec![(i * 3) % 24, (i * 7 + 1) % 24, i % 24], 4)).collect();
+    let mut submitted = 0usize;
+    let mut dropped = 0usize;
+
+    // 3a. Pre-swap wave on prod@1.
+    let (_, d) = drive_wave(door.addr(), 1, &wave, None);
+    submitted += wave.len();
+    dropped += d;
+
+    // 3b. Trigger the rolling swap the operator way, with a paced wave
+    // racing it.
+    let (code, body) = http_get(admin.addr(), "/swap?model=nope");
+    assert_eq!(code, 400, "malformed key must be a typed 400, got {code}: {body}");
+    let (code, body) = http_get(admin.addr(), "/swap?model=prod@9");
+    assert_eq!(code, 404, "unknown version must be a typed 404, got {code}: {body}");
+    let loader = {
+        let addr = door.addr();
+        let wave = wave.clone();
+        std::thread::spawn(move || drive_wave(addr, 101, &wave, Some(Duration::from_millis(2))))
+    };
+    let (code, body) = http_get(admin.addr(), "/swap?model=prod@2");
+    assert_eq!(code, 202, "swap accept, got {code}: {body}");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (code, body) = http_get(admin.addr(), "/models");
+        assert_eq!(code, 200, "/models during swap");
+        let swapping = body.contains("swapping_to");
+        let all_new = body.matches("\"serving\": \"prod@2\"").count() == WORKERS
+            || body.matches("\"serving\":\"prod@2\"").count() == WORKERS;
+        if all_new && !swapping {
+            break;
+        }
+        assert!(Instant::now() < deadline, "rolling swap did not finish in 60s: {body}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let (_, d) = loader.join().expect("mid-swap loader");
+    submitted += wave.len();
+    dropped += d;
+
+    // 3c. Post-swap wave: must serve, and must serve prod@2's streams.
+    let (streams, d) = drive_wave(door.addr(), 201, &wave, None);
+    submitted += wave.len();
+    dropped += d;
+    let mut identical = true;
+    for (i, (prompt, gen)) in wave.iter().enumerate() {
+        let want = reference_stream(&registry, &k2, prompt, *gen as usize);
+        let got = streams.get(&(201 + i as u64));
+        if got != Some(&want) {
+            eprintln!("[swap_smoke] post-swap stream {i}: got {got:?}, want {want:?}");
+            identical = false;
+        }
+    }
+    // Teeth: the two artifacts must be distinguishable on this workload.
+    let distinguishable = wave.iter().any(|(p, g)| {
+        reference_stream(&registry, &k1, p, *g as usize)
+            != reference_stream(&registry, &k2, p, *g as usize)
+    });
+
+    // 4. Post-swap admin scrape + shutdown accounting.
+    let (code, metrics_body) = http_get(admin.addr(), "/metrics");
+    let lint = code == 200 && prometheus_lint(&metrics_body).is_ok();
+    let labeled = (0..WORKERS)
+        .all(|w| metrics_body.contains(&format!("lcd_worker_model{{worker=\"{w}\",model=\"prod@2\"}} 1")));
+    let report = door.shutdown();
+    admin.stop();
+    let _ = std::fs::remove_dir_all(&dir_path);
+
+    let agg = &report.pool.aggregate;
+    let ok = gate(
+        "swap_zero_drops",
+        dropped == 0 && agg.rejected == 0 && agg.completed == submitted as u64,
+        &format!(
+            "submitted {submitted}, completed {}, rejected {}, non-done terminals {dropped}, \
+             worker swaps {}",
+            agg.completed, agg.rejected, agg.model_swaps
+        ),
+    ) & gate(
+        "postswap_bit_identity",
+        identical && distinguishable,
+        &format!("streams match prod@2 references: {identical}, artifacts distinguishable: {distinguishable}"),
+    ) & gate(
+        "postswap_metrics_lint",
+        lint && labeled,
+        &format!("lint clean: {lint}, all workers labeled prod@2: {labeled}"),
+    );
+    if !ok {
+        exit(1);
+    }
+}

@@ -112,6 +112,7 @@ fn main() {
                 t_submit: Instant::now(),
                 session: None,
                 trace: 0,
+                model: None,
             });
             debug_assert!(ok);
         }
@@ -146,6 +147,7 @@ fn main() {
                     t_submit: Instant::now(),
                     session: None,
                     trace: 0,
+                    model: None,
                 });
             }
             let mut admitted = 0usize;
@@ -572,6 +574,7 @@ fn drain_chunk_budget(budgeted: bool) -> (usize, usize) {
             t_submit: Instant::now(),
             session: None,
             trace: 0,
+            model: None,
         });
         assert!(ok, "queue cap must fit the whole request set");
     }

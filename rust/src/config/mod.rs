@@ -135,6 +135,16 @@ pub struct ServeConfig {
     /// Availability objective in (0, 1): the error-budget denominator
     /// behind `/slo` burn rates and the `/readyz` fast-burn watchdog.
     pub slo_availability: f64,
+    /// Directory of verified `.lcdw` v2 artifacts to serve from. Empty
+    /// = registry off (the pool builds its engine from the config
+    /// shape knobs instead); non-empty enables `--model-id`, the admin
+    /// plane's `/models` + `/swap`, and the wire model selector.
+    pub model_dir: String,
+    /// Initial serving model as `name@version`. Empty = the registry's
+    /// default key (latest version of the first model name). Requires
+    /// `serve.model_dir`. Validated as a key at load time; existence
+    /// is checked against the registry when serving starts.
+    pub model: String,
 }
 
 impl Default for ServeConfig {
@@ -168,6 +178,8 @@ impl Default for ServeConfig {
             admin_listen: String::new(),
             slo_ttft_ms: 0,
             slo_availability: 0.99,
+            model_dir: String::new(),
+            model: String::new(),
         }
     }
 }
@@ -402,6 +414,12 @@ impl LcdConfig {
             if let Some(v) = s.get("slo_availability") {
                 cfg.serve.slo_availability = v.as_f64()?;
             }
+            if let Some(v) = s.get("model_dir") {
+                cfg.serve.model_dir = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("model") {
+                cfg.serve.model = v.as_str()?.to_string();
+            }
         }
         // Fail on bad serving knobs at load time, not at serve time.
         cfg.serve.admission_policy()?;
@@ -459,6 +477,7 @@ impl LcdConfig {
         if !(cfg.serve.slo_availability > 0.0 && cfg.serve.slo_availability < 1.0) {
             bail!("serve.slo_availability must be in (0, 1)");
         }
+        validate_model_knobs(&cfg.serve)?;
         Ok(cfg)
     }
 
@@ -632,10 +651,37 @@ impl LcdConfig {
                 }
                 self.serve.shed_queue = v;
             }
+            "serve.model_dir" => self.serve.model_dir = value.to_string(),
+            "serve.model" => {
+                // Validate the key shape before assigning so a bad
+                // override leaves the config untouched; existence is a
+                // registry question at serve time. (The `model_dir`
+                // pairing is not checked here — overrides apply in any
+                // order — the serve path re-validates the pair.)
+                if !value.is_empty() {
+                    crate::model::ModelKey::parse(value)
+                        .map_err(|e| anyhow::anyhow!("serve.model: {e}"))?;
+                }
+                self.serve.model = value.to_string();
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
     }
+}
+
+/// Model-registry knob validation for the JSON load path: a bad key
+/// shape or an initial model with no registry to look it up in fails
+/// at load time, not at the first engine build.
+fn validate_model_knobs(serve: &ServeConfig) -> Result<()> {
+    if !serve.model.is_empty() {
+        if serve.model_dir.is_empty() {
+            bail!("serve.model requires serve.model_dir (no registry to resolve '{}')", serve.model);
+        }
+        crate::model::ModelKey::parse(&serve.model)
+            .map_err(|e| anyhow::anyhow!("serve.model: {e}"))?;
+    }
+    Ok(())
 }
 
 /// Draft-engine knob validation for the JSON load path (per-key
@@ -1043,6 +1089,36 @@ mod tests {
         assert_eq!(cfg.serve.slo_availability, 0.99, "failed override leaves config untouched");
         cfg.set_override("serve.slo_availability=0.995").unwrap();
         assert_eq!(cfg.serve.slo_availability, 0.995);
+    }
+
+    #[test]
+    fn model_registry_knobs_parse_validate_and_override() {
+        let doc = Json::parse(
+            r#"{"serve": {"model_dir": "models/", "model": "toy-2bit@3"}}"#,
+        )
+        .unwrap();
+        let cfg = LcdConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serve.model_dir, "models/");
+        assert_eq!(cfg.serve.model, "toy-2bit@3");
+        // Defaults: registry off.
+        let d = LcdConfig::default();
+        assert_eq!((d.serve.model_dir.as_str(), d.serve.model.as_str()), ("", ""));
+        // Load-time rejections: a model with no registry, and bad keys.
+        let bad = |s: &str| LcdConfig::from_json(&Json::parse(s).unwrap()).is_err();
+        assert!(bad(r#"{"serve": {"model": "toy@1"}}"#), "model without model_dir");
+        assert!(bad(r#"{"serve": {"model_dir": "m/", "model": "noversion"}}"#));
+        assert!(bad(r#"{"serve": {"model_dir": "m/", "model": "bad name@1"}}"#));
+        assert!(!bad(r#"{"serve": {"model_dir": "m/"}}"#), "dir alone is fine");
+        // Overrides validate the key shape and stay atomic.
+        let mut cfg = LcdConfig::default();
+        cfg.set_override("serve.model_dir=models/").unwrap();
+        assert_eq!(cfg.serve.model_dir, "models/");
+        cfg.set_override("serve.model=toy@2").unwrap();
+        assert_eq!(cfg.serve.model, "toy@2");
+        assert!(cfg.set_override("serve.model=notakey").is_err());
+        assert_eq!(cfg.serve.model, "toy@2", "failed override leaves config untouched");
+        cfg.set_override("serve.model=").unwrap();
+        assert_eq!(cfg.serve.model, "", "empty clears the selection");
     }
 
     #[test]

@@ -35,6 +35,17 @@
 //!   flight dump as `chrome://tracing` JSON, without killing the
 //!   process. `worker=frontdoor` (or N = worker count) serves the
 //!   front door's own recorder: receive/queue/stream-out spans.
+//! * `GET /models` — the verified model catalog (registry keys, recipe
+//!   shapes, parameter counts) plus what each worker currently serves
+//!   and any in-progress swap targets.
+//! * `GET /swap?model=name@version` — start a rolling hot-swap of the
+//!   whole pool onto a registry model. The target is validated against
+//!   the registry *before* any worker is touched (an unknown or
+//!   refused artifact answers a typed 4xx and the pool keeps serving);
+//!   a valid target answers `202 Accepted` immediately while a
+//!   background thread drives the worker-by-worker swap. (The admin
+//!   plane is GET-only by design; the swap is idempotent on its
+//!   target, so a retried GET is safe.)
 //!
 //! The listener is deliberately serial (one connection at a time, 2 s
 //! socket timeouts, 8 KiB request cap): the admin plane is for one
@@ -43,10 +54,12 @@
 
 use super::frontdoor::{FrontDoorStats, TenantStats};
 use super::request::{help_for, Metrics};
-use super::server::MetricsRegistry;
+use super::server::{MetricsRegistry, SwapController};
+use crate::model::{ModelKey, ModelRegistry};
 use crate::telemetry::{
     FlightRecorder, PhaseStats, SloTracker, FAST_BURN_WINDOW_SECS, SLOW_BURN_WINDOW_SECS,
 };
+use crate::util::Json;
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -77,6 +90,11 @@ pub struct AdminState {
     /// The front door's shared flight recorder, served by
     /// `/flight?worker=frontdoor`.
     pub frontdoor_recorder: Option<Arc<Mutex<FlightRecorder>>>,
+    /// Verified model catalog; `None` disables `/models` and `/swap`.
+    pub models: Option<Arc<ModelRegistry>>,
+    /// Rolling hot-swap controller (`ServerHandle::swap_controller`);
+    /// `None` disables `/swap` and the per-worker model info gauge.
+    pub swap: Option<SwapController>,
 }
 
 impl Default for AdminState {
@@ -88,6 +106,8 @@ impl Default for AdminState {
             slo: None,
             frontdoor: None,
             frontdoor_recorder: None,
+            models: None,
+            swap: None,
         }
     }
 }
@@ -205,6 +225,16 @@ fn handle_connection(stream: &mut TcpStream, state: &AdminState) -> Result<()> {
                 .unwrap_or("0");
             serve_flight(stream, state, worker);
         }
+        "/models" => match &state.models {
+            Some(reg) => {
+                respond(stream, 200, "OK", "application/json", &models_json(reg, state).to_string())
+            }
+            None => respond(stream, 404, "Not Found", "text/plain", "no model registry configured\n"),
+        },
+        "/swap" => {
+            let model = query.split('&').find_map(|kv| kv.strip_prefix("model=")).unwrap_or("");
+            serve_swap(stream, state, model);
+        }
         _ => respond(stream, 404, "Not Found", "text/plain", "unknown admin endpoint\n"),
     }
     Ok(())
@@ -245,6 +275,98 @@ fn serve_flight(stream: &mut TcpStream, state: &AdminState, worker: &str) {
             "Not Found",
             "text/plain",
             "no flight dump published for that worker (telemetry off, or index out of range)\n",
+        ),
+    }
+}
+
+/// The `/models` body: the verified catalog plus the live per-worker
+/// serving assignment (and in-progress swap targets) when a swap
+/// controller is wired in.
+fn models_json(reg: &ModelRegistry, state: &AdminState) -> Json {
+    let catalog = reg
+        .iter()
+        .map(|(key, art)| {
+            Json::obj(vec![
+                ("model", Json::str(key.to_string())),
+                ("recipe", art.recipe.to_json()),
+                ("n_params", Json::int(art.n_params())),
+                ("path", Json::str(art.path.clone())),
+            ])
+        })
+        .collect();
+    let mut fields = vec![("models", Json::arr(catalog))];
+    if let Some(swap) = &state.swap {
+        let workers = swap
+            .models()
+            .into_iter()
+            .map(|(w, serving, pending)| {
+                let mut f = vec![
+                    ("worker", Json::int(w)),
+                    ("serving", Json::str(serving.to_string())),
+                ];
+                if let Some(p) = pending {
+                    f.push(("swapping_to", Json::str(p.to_string())));
+                }
+                Json::obj(f)
+            })
+            .collect();
+        fields.push(("workers", Json::arr(workers)));
+        let (done, failed) = swap.counters();
+        fields.push(("swaps_done", Json::int(done as usize)));
+        fields.push(("swap_failures", Json::int(failed as usize)));
+    }
+    Json::obj(fields)
+}
+
+/// `GET /swap?model=name@version`: validate the target against the
+/// registry (typed refusal — bad key 400, unknown model 404 — before
+/// any worker is touched), then drive the rolling swap from a
+/// background thread and answer 202 immediately. Progress is visible
+/// on `/models` and the `lcd_worker_model` metric.
+fn serve_swap(stream: &mut TcpStream, state: &AdminState, model: &str) {
+    let (Some(reg), Some(swap)) = (&state.models, &state.swap) else {
+        respond(stream, 404, "Not Found", "text/plain", "no model registry / swap controller configured\n");
+        return;
+    };
+    let key = match ModelKey::parse(model) {
+        Ok(k) => k,
+        Err(e) => {
+            respond(stream, 400, "Bad Request", "text/plain", &format!("{e}\n"));
+            return;
+        }
+    };
+    // The registry is the trust boundary: only verified artifacts are
+    // in it, so an unknown (or earlier-refused) target stops here with
+    // the pool untouched.
+    if let Err(e) = reg.get(&key) {
+        respond(stream, 404, "Not Found", "text/plain", &format!("{e}\n"));
+        return;
+    }
+    let controller = swap.clone();
+    let target = key.clone();
+    let spawned = std::thread::Builder::new()
+        .name("lcd-admin-swap".to_string())
+        .spawn(move || {
+            let report = controller.rolling(&target);
+            eprintln!(
+                "[admin] rolling swap to {target}: {} swapped, {} failed, {} skipped",
+                report.swapped, report.failed, report.skipped
+            );
+        });
+    match spawned {
+        Ok(_) => {
+            let body = Json::obj(vec![
+                ("status", Json::str("accepted")),
+                ("model", Json::str(key.to_string())),
+            ]);
+            respond(stream, 202, "Accepted", "application/json", &body.to_string());
+        }
+        Err(e) => respond(
+            stream,
+            500,
+            "Internal Server Error",
+            "text/plain",
+            &format!("spawning swap thread: {e}\n"),
         ),
     }
 }
@@ -385,12 +507,17 @@ pub fn metrics_text(state: &AdminState) -> String {
         let _ = writeln!(out, "# TYPE lcd_frontdoor_inflight gauge");
         let _ = writeln!(out, "lcd_frontdoor_inflight {}", fd.inflight());
         let tenants = fd.tenants();
-        let tenant_fams: [(&str, &str, fn(&TenantStats) -> u64); 5] = [
+        let tenant_fams: [(&str, &str, fn(&TenantStats) -> u64); 6] = [
             ("lcd_tenant_submitted", "Tenant requests received on the socket (pre-shed).", |t| {
                 t.submitted
             }),
             ("lcd_tenant_completed", "Tenant requests that streamed to Done.", |t| t.completed),
             ("lcd_tenant_shed", "Tenant requests answered Overloaded.", |t| t.shed),
+            (
+                "lcd_tenant_rejected",
+                "Tenant requests refused typed (e.g. a model pin nothing serves).",
+                |t| t.rejected,
+            ),
             ("lcd_tenant_cancelled", "Tenant requests torn down by cancel or disconnect.", |t| {
                 t.cancelled
             }),
@@ -424,6 +551,30 @@ pub fn metrics_text(state: &AdminState) -> String {
                 }
             }
         }
+    }
+    if let Some(swap) = &state.swap {
+        // Info gauge: which registry model each worker serves, as a
+        // label (value is always 1) — the idiom dashboards join on.
+        let _ = writeln!(out, "# HELP lcd_worker_model {}", help_for("worker_model"));
+        let _ = writeln!(out, "# TYPE lcd_worker_model gauge");
+        for (w, serving, _) in swap.models() {
+            let _ = writeln!(
+                out,
+                "lcd_worker_model{{worker=\"{w}\",model=\"{}\"}} 1",
+                label_escape(&serving.to_string())
+            );
+        }
+        // Pool-level swap counters; the per-worker `lcd_model_swaps`
+        // counter above attributes completions to workers, this pair
+        // is the controller's own view (including failures, which no
+        // worker snapshot carries).
+        let (done, failed) = swap.counters();
+        let _ = writeln!(out, "# HELP lcd_pool_model_swaps {}", help_for("model_swaps"));
+        let _ = writeln!(out, "# TYPE lcd_pool_model_swaps counter");
+        let _ = writeln!(out, "lcd_pool_model_swaps {done}");
+        let _ = writeln!(out, "# HELP lcd_swap_failures {}", help_for("swap_failures"));
+        let _ = writeln!(out, "# TYPE lcd_swap_failures counter");
+        let _ = writeln!(out, "lcd_swap_failures {failed}");
     }
     if let Some(slo) = &state.slo {
         let fast = slo.window(FAST_BURN_WINDOW_SECS);
@@ -524,6 +675,119 @@ mod tests {
         assert_eq!(get(admin.addr(), "/flight?worker=zzz").0, 404);
         assert_eq!(get(admin.addr(), "/flight?worker=frontdoor").0, 404, "no fd recorder");
         assert_eq!(get(admin.addr(), "/nope").0, 404);
+        admin.stop();
+    }
+
+    #[test]
+    fn model_plane_lists_swaps_and_refuses_typed() {
+        use super::super::batcher::AdmissionPolicy;
+        use super::super::incremental::FullRecomputeStep;
+        use super::super::scheduler::SchedulerConfig;
+        use super::super::server::{start_pool_models, Engine};
+        use super::super::session::SessionOptions;
+        use crate::model::lcdw::write_lcdw_v2;
+        use crate::model::ModelRecipe;
+        use crate::telemetry::TelemetryConfig;
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+
+        struct TinyEngine;
+        impl Engine for TinyEngine {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn seq(&self) -> usize {
+                4
+            }
+            fn vocab(&self) -> usize {
+                8
+            }
+            fn name(&self) -> &str {
+                "tiny"
+            }
+            fn forward(&mut self, _tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+                Ok(vec![0.0; 4 * 8])
+            }
+        }
+
+        let dir = std::env::temp_dir().join(format!("lcd_admin_models_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir = dir.to_string_lossy().into_owned();
+        for version in [1u32, 2] {
+            let mut rng = Rng::new(u64::from(version));
+            let emb = Tensor::randn(vec![8, 6], 0.5, &mut rng);
+            let recipe = ModelRecipe {
+                vocab: 8,
+                hidden: 6,
+                depth: 1,
+                centroids: 4,
+                seed: u64::from(version),
+            };
+            write_lcdw_v2(
+                &format!("{dir}/toy-v{version}.lcdw"),
+                "toy",
+                version,
+                &recipe.to_json(),
+                "admin plane test",
+                vec![("emb", &emb)].into_iter(),
+            )
+            .unwrap();
+        }
+        let models = Arc::new(ModelRegistry::load_dir(&dir).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+
+        let m1 = ModelKey::new("toy", 1).unwrap();
+        let m2 = ModelKey::new("toy", 2).unwrap();
+        let handle = start_pool_models(
+            1,
+            1,
+            16,
+            SchedulerConfig::unchunked(AdmissionPolicy::Fifo),
+            SessionOptions::default(),
+            TelemetryConfig::off(),
+            None,
+            m1.clone(),
+            |_w, _key: &ModelKey| FullRecomputeStep::new(TinyEngine),
+        );
+        let state = AdminState {
+            models: Some(Arc::clone(&models)),
+            swap: Some(handle.swap_controller()),
+            ..AdminState::default()
+        };
+        let admin = AdminServer::start("127.0.0.1:0", state).unwrap();
+
+        let (status, body) = get(admin.addr(), "/models");
+        assert_eq!(status, 200);
+        assert!(body.contains("toy@1") && body.contains("toy@2"), "{body}");
+        assert!(body.contains("\"serving\":\"toy@1\""), "{body}");
+
+        // Typed refusals, before any worker is touched.
+        assert_eq!(get(admin.addr(), "/swap?model=notakey").0, 400, "unparseable key");
+        assert_eq!(get(admin.addr(), "/swap?model=toy@9").0, 404, "unknown version");
+        assert_eq!(handle.worker_models(), vec![m1.clone()], "refusals must not swap");
+
+        // A valid target is accepted and the rolling swap completes.
+        let (status, body) = get(admin.addr(), "/swap?model=toy@2");
+        assert_eq!(status, 202, "{body}");
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while handle.worker_models() != vec![m2.clone()] {
+            assert!(std::time::Instant::now() < deadline, "swap did not complete");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let (status, body) = get(admin.addr(), "/metrics");
+        assert_eq!(status, 200);
+        assert!(
+            body.contains("lcd_worker_model{worker=\"0\",model=\"toy@2\"} 1"),
+            "info gauge must track the swap: {body}"
+        );
+        assert!(body.contains("lcd_pool_model_swaps 1"), "{body}");
+        crate::telemetry::prometheus_lint(&body).expect("scrape must lint clean");
+        let (status, body) = get(admin.addr(), "/models");
+        assert_eq!(status, 200);
+        assert!(body.contains("\"serving\":\"toy@2\""), "{body}");
+        assert!(body.contains("\"swaps_done\":1"), "{body}");
+
+        handle.shutdown_report();
         admin.stop();
     }
 

@@ -423,6 +423,7 @@ mod tests {
                 t_submit: Instant::now(),
                 session: None,
                 trace: 0,
+                model: None,
             },
             rx,
         )

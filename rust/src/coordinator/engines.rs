@@ -103,6 +103,116 @@ impl HostLutSpec {
     }
 }
 
+/// Dense pre-clustering weights for a [`HostLutModel`]: the embedding
+/// table plus each LUT layer's f32 weight matrix (`depth` hidden
+/// layers + the vocab projection). This is the payload a `.lcdw` v2
+/// artifact carries — k-means clustering and LUT compilation happen at
+/// engine-build time from these plus the recipe.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostLutWeights {
+    /// `vocab × hidden` row-major embedding table.
+    pub emb: Vec<f32>,
+    /// `depth + 1` weight matrices; layer `l < depth` is
+    /// `hidden × hidden`, the last is `hidden × vocab`.
+    pub layers: Vec<Vec<f32>>,
+}
+
+impl HostLutWeights {
+    fn layer_dims(spec: &HostLutSpec, l: usize) -> (usize, usize) {
+        if l == spec.depth {
+            (spec.hidden, spec.vocab)
+        } else {
+            (spec.hidden, spec.hidden)
+        }
+    }
+
+    /// Check lengths against a spec's model shape.
+    pub fn validate(&self, spec: &HostLutSpec) -> Result<()> {
+        anyhow::ensure!(
+            self.emb.len() == spec.vocab * spec.hidden,
+            "embedding length {} does not match vocab {} × hidden {}",
+            self.emb.len(),
+            spec.vocab,
+            spec.hidden
+        );
+        anyhow::ensure!(
+            self.layers.len() == spec.depth + 1,
+            "weight stack has {} layers, spec depth {} needs {}",
+            self.layers.len(),
+            spec.depth,
+            spec.depth + 1
+        );
+        for (l, w) in self.layers.iter().enumerate() {
+            let (d_in, d_out) = Self::layer_dims(spec, l);
+            anyhow::ensure!(
+                w.len() == d_in * d_out,
+                "layer {l} has {} weights, expected {d_in}×{d_out}",
+                w.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Artifact tensor form: `emb` as `[vocab, hidden]` and each layer
+    /// as `layers.{l}.w` `[d_in, d_out]` — the naming `.lcdw` v2
+    /// manifests use.
+    pub fn to_tensors(&self, spec: &HostLutSpec) -> Result<Vec<(String, crate::tensor::Tensor)>> {
+        self.validate(spec)?;
+        let mut out = Vec::with_capacity(self.layers.len() + 1);
+        out.push((
+            "emb".to_string(),
+            crate::tensor::Tensor::new(vec![spec.vocab, spec.hidden], self.emb.clone())?,
+        ));
+        for (l, w) in self.layers.iter().enumerate() {
+            let (d_in, d_out) = Self::layer_dims(spec, l);
+            out.push((
+                format!("layers.{l}.w"),
+                crate::tensor::Tensor::new(vec![d_in, d_out], w.clone())?,
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Inverse of [`HostLutWeights::to_tensors`]: pull `emb` +
+    /// `layers.{l}.w` out of a verified artifact's tensor list,
+    /// validating every shape against the spec.
+    pub fn from_tensors(
+        tensors: &[(String, crate::tensor::Tensor)],
+        spec: &HostLutSpec,
+    ) -> Result<HostLutWeights> {
+        let find = |name: &str| -> Result<&crate::tensor::Tensor> {
+            tensors
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, t)| t)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing tensor '{name}'"))
+        };
+        let emb = find("emb")?;
+        anyhow::ensure!(
+            emb.shape() == [spec.vocab, spec.hidden],
+            "tensor 'emb' shape {:?} does not match recipe [vocab {}, hidden {}]",
+            emb.shape(),
+            spec.vocab,
+            spec.hidden
+        );
+        let mut layers = Vec::with_capacity(spec.depth + 1);
+        for l in 0..=spec.depth {
+            let name = format!("layers.{l}.w");
+            let t = find(&name)?;
+            let (d_in, d_out) = Self::layer_dims(spec, l);
+            anyhow::ensure!(
+                t.shape() == [d_in, d_out],
+                "tensor '{name}' shape {:?} does not match recipe [{d_in}, {d_out}]",
+                t.shape()
+            );
+            layers.push(t.data().to_vec());
+        }
+        let w = HostLutWeights { emb: emb.data().to_vec(), layers };
+        w.validate(spec)?;
+        Ok(w)
+    }
+}
+
 /// The deterministic LUT-stack LM itself: embedding table + compiled
 /// linear stack. Positions are independent (no attention), so every
 /// entry point below operates on "rows" — flat lists of token positions
@@ -118,28 +228,69 @@ pub struct HostLutModel {
 
 impl HostLutModel {
     pub fn build(spec: HostLutSpec) -> Result<HostLutModel> {
+        Ok(HostLutModel::build_inner(spec, None)?.0)
+    }
+
+    /// Build from externally supplied dense weights (a verified `.lcdw`
+    /// artifact) instead of the seeded draws. The PRNG is still stepped
+    /// through the exact draw sequence [`HostLutModel::build`] performs
+    /// — generated values are discarded in favor of `weights` — so
+    /// k-means, which shares the stream, initializes identically. An
+    /// artifact packed from [`HostLutModel::seeded_weights`] of the same
+    /// spec therefore rebuilds a bit-identical model, which is what lets
+    /// hot-swap acceptance tests pin artifact-served streams against
+    /// seed-built references.
+    pub fn build_from_weights(spec: HostLutSpec, weights: &HostLutWeights) -> Result<HostLutModel> {
+        weights.validate(&spec)?;
+        Ok(HostLutModel::build_inner(spec, Some(weights))?.0)
+    }
+
+    /// The dense pre-clustering weights [`HostLutModel::build`] would
+    /// use for this spec — what `lcd pack` serializes into an artifact.
+    /// Runs the full build (k-means draws are interleaved with weight
+    /// draws in one PRNG stream, so the stream must be advanced the
+    /// same way) and returns the captured weights.
+    pub fn seeded_weights(spec: HostLutSpec) -> Result<HostLutWeights> {
+        Ok(HostLutModel::build_inner(spec, None)?.1)
+    }
+
+    fn build_inner(
+        spec: HostLutSpec,
+        provided: Option<&HostLutWeights>,
+    ) -> Result<(HostLutModel, HostLutWeights)> {
         anyhow::ensure!(spec.batch > 0, "batch must be positive");
         // seq >= 2 keeps room for at least one generated token next to a
         // prompt token; Session window arithmetic relies on it.
         anyhow::ensure!(spec.seq >= 2, "seq must be >= 2 (got {})", spec.seq);
         anyhow::ensure!(spec.vocab > 1 && spec.hidden > 0, "vocab/hidden must be positive");
         let mut rng = Rng::new(spec.seed ^ 0x4057_1075);
-        let emb = rng.normal_vec(spec.vocab * spec.hidden, 0.0, 0.5);
+        let gen_emb = rng.normal_vec(spec.vocab * spec.hidden, 0.0, 0.5);
+        let emb = match provided {
+            Some(p) => p.emb.clone(),
+            None => gen_emb,
+        };
         let std = 1.0 / (spec.hidden as f32).sqrt();
         let mut layers = Vec::with_capacity(spec.depth + 1);
+        let mut used: Vec<Vec<f32>> = Vec::with_capacity(spec.depth + 1);
         for l in 0..=spec.depth {
             let (d_in, d_out) =
                 if l == spec.depth { (spec.hidden, spec.vocab) } else { (spec.hidden, spec.hidden) };
-            let w = rng.normal_vec(d_in * d_out, 0.0, std);
+            let gen_w = rng.normal_vec(d_in * d_out, 0.0, std);
+            let w = match provided {
+                Some(p) => p.layers[l].clone(),
+                None => gen_w,
+            };
             let km = kmeans_1d(&w, spec.centroids.clamp(2, 16), 20, &mut rng);
             // Inputs are tanh-bounded (|x| ≤ 1 after the first layer; the
             // embedding is clipped by the quantizer), so an inv-scale of
             // 127 uses the full INT8 range: s_m = 1, s_q = 1/127.
             let layer = LutLayer::compile(&km.clustering, d_in, d_out, 1.0, 1.0 / 127.0)?;
             layers.push(SimdLutLayer::compile(&layer));
+            used.push(w);
         }
         let stack = LutStack::new(layers, spec.gemm_threads, spec.gemm_shard_rows);
-        Ok(HostLutModel { spec, emb, stack })
+        let weights = HostLutWeights { emb: emb.clone(), layers: used };
+        Ok((HostLutModel { spec, emb, stack }, weights))
     }
 
     pub fn spec(&self) -> &HostLutSpec {
@@ -311,6 +462,38 @@ mod tests {
         let mut e = HostLutEngine::build(tiny_spec(1)).unwrap();
         assert!(e.forward(&[0i32; 3]).is_err(), "wrong token count must fail");
         assert!(e.weight_bytes() > 0);
+    }
+
+    /// The artifact contract: packing a model's seeded weights and
+    /// rebuilding from them (the registry's path) must produce the same
+    /// bits as building from the seed directly, and the tensor form
+    /// must round-trip losslessly.
+    #[test]
+    fn weights_roundtrip_rebuilds_identical_model() {
+        let spec = tiny_spec(1);
+        let seeded = HostLutModel::seeded_weights(spec.clone()).unwrap();
+        let tensors = seeded.to_tensors(&spec).unwrap();
+        let back = HostLutWeights::from_tensors(&tensors, &spec).unwrap();
+        assert_eq!(back, seeded, "tensor form must round-trip losslessly");
+
+        let from_seed = HostLutModel::build(spec.clone()).unwrap();
+        let from_artifact = HostLutModel::build_from_weights(spec.clone(), &back).unwrap();
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 7 + 2) % 16).collect();
+        let mut s1 = SimdScratch::default();
+        let mut s2 = SimdScratch::default();
+        assert_eq!(
+            from_seed.forward_rows(&tokens, &mut s1),
+            from_artifact.forward_rows(&tokens, &mut s2),
+            "artifact-built model must be bit-identical to the seed build"
+        );
+
+        // Mismatched shapes are refused before building anything.
+        let mut missing = tensors.clone();
+        missing.retain(|(n, _)| n != "emb");
+        assert!(HostLutWeights::from_tensors(&missing, &spec).is_err());
+        let mut short = back.clone();
+        short.layers.pop();
+        assert!(HostLutModel::build_from_weights(spec, &short).is_err());
     }
 
     #[test]

@@ -41,6 +41,8 @@ use anyhow::{bail, Context, Result};
 use super::request::Metrics;
 use super::server::{ServerHandle, ServerReport};
 use super::session::{ResumeTurn, SessionId, TurnRequest};
+use crate::model::lcdw::MAX_MODEL_NAME;
+use crate::model::ModelKey;
 use crate::telemetry::{FlightRecorder, Histogram, Phase, SloTracker};
 use crate::util::Json;
 
@@ -57,6 +59,8 @@ pub const MAX_PROMPT_TOKENS: usize = 65_536;
 pub const MAX_GEN_TOKENS: u32 = 1 << 20;
 /// Number of priority tiers; wire priorities clamp to `0..PRIORITY_TIERS`.
 pub const PRIORITY_TIERS: u8 = 4;
+/// Maximum `Rejected` reason length in bytes.
+pub const MAX_REASON_BYTES: usize = 256;
 
 const TYPE_REQUEST: u8 = 0x01;
 const TYPE_CANCEL: u8 = 0x02;
@@ -64,6 +68,13 @@ const TYPE_TOKENS: u8 = 0x81;
 const TYPE_DONE: u8 = 0x82;
 const TYPE_OVERLOADED: u8 = 0x83;
 const TYPE_CANCELLED: u8 = 0x84;
+const TYPE_REJECTED: u8 = 0x85;
+
+/// Request extension tags (`docs/PROTOCOL.md`). Extensions trail the
+/// fixed request body in strictly ascending tag order, each appearing
+/// at most once; unknown tags are rejected, not skipped.
+const EXT_TRACE: u8 = 0x01;
+const EXT_MODEL: u8 = 0x02;
 
 /// A decoded `Request` frame (client → server).
 #[derive(Clone, Debug, PartialEq)]
@@ -90,6 +101,13 @@ pub struct WireRequest {
     /// receipt, fair-queue wait, admission, scheduler phases, stream-out
     /// — carries it, so one grep reconstructs the request's timeline.
     pub trace_id: u64,
+    /// Requested registry model (optional frame extension; `None` =
+    /// any model). The dispatcher refuses a pin no worker serves (and
+    /// none is swapping toward) with a typed [`ServerFrame::Rejected`]
+    /// before the pool sees the request. Stateless requests carry the
+    /// pin into pool admission too; session turns are placed by the
+    /// router, so for them the pin is a submission-time gate only.
+    pub model: Option<ModelKey>,
 }
 
 /// Client → server frames.
@@ -138,6 +156,16 @@ pub enum ServerFrame {
         id: u64,
         /// True when the deadline expired; false for client cancel.
         deadline: bool,
+    },
+    /// Terminal: refused typed at submission — e.g. the request pinned
+    /// a model no worker serves. Unlike [`ServerFrame::Overloaded`]
+    /// this is not load: retrying the same frame cannot succeed until
+    /// an operator changes what the pool serves.
+    Rejected {
+        /// Request id.
+        id: u64,
+        /// Refusal reason (UTF-8, ≤ [`MAX_REASON_BYTES`]).
+        reason: String,
     },
 }
 
@@ -250,22 +278,44 @@ pub fn decode_client(payload: &[u8]) -> Result<ClientFrame> {
                 .to_string();
             let n = cur.u32()? as usize;
             let prompt = cur.tokens(n, "prompt")?;
-            // Optional trailing extension block. Exactly one encoding
-            // per value keeps the frame canonical: absent extension ⇔
-            // trace_id 0, present ⇔ tag 0x01 + a nonzero trace id.
-            let trace_id = if cur.remaining() == 0 {
-                0
-            } else {
+            // Optional trailing extension block: extensions in strictly
+            // ascending tag order, each at most once. Exactly one
+            // encoding per value keeps the frame canonical: absent
+            // trace ⇔ trace_id 0, present ⇔ tag 0x01 + a nonzero id;
+            // absent model ⇔ no pin, present ⇔ tag 0x02 + a valid key.
+            let mut trace_id = 0u64;
+            let mut model = None;
+            let mut last_tag = 0u8;
+            while cur.remaining() > 0 {
                 let tag = cur.u8()?;
-                if tag != 0x01 {
-                    bail!("unknown request extension tag {tag:#04x}");
+                if tag <= last_tag {
+                    bail!("request extension tag {tag:#04x} out of ascending order");
                 }
-                let t = cur.u64()?;
-                if t == 0 {
-                    bail!("trace_id extension must carry a nonzero id");
+                last_tag = tag;
+                match tag {
+                    EXT_TRACE => {
+                        let t = cur.u64()?;
+                        if t == 0 {
+                            bail!("trace_id extension must carry a nonzero id");
+                        }
+                        trace_id = t;
+                    }
+                    EXT_MODEL => {
+                        let nlen = cur.u8()? as usize;
+                        if nlen == 0 || nlen > MAX_MODEL_NAME {
+                            bail!("model name of {nlen} bytes outside 1..={MAX_MODEL_NAME}");
+                        }
+                        let name = std::str::from_utf8(cur.take(nlen)?)
+                            .context("model name is not UTF-8")?;
+                        let version = cur.u32()?;
+                        model = Some(
+                            ModelKey::new(name, version)
+                                .map_err(|e| anyhow::anyhow!("model extension: {e}"))?,
+                        );
+                    }
+                    t => bail!("unknown request extension tag {t:#04x}"),
                 }
-                t
-            };
+            }
             ClientFrame::Request(WireRequest {
                 id,
                 session,
@@ -276,6 +326,7 @@ pub fn decode_client(payload: &[u8]) -> Result<ClientFrame> {
                 tenant,
                 prompt,
                 trace_id,
+                model,
             })
         }
         TYPE_CANCEL => ClientFrame::Cancel { id: cur.u64()? },
@@ -307,6 +358,17 @@ pub fn decode_server(payload: &[u8]) -> Result<ServerFrame> {
                 r => bail!("invalid cancel reason {r:#04x}"),
             };
             ServerFrame::Cancelled { id, deadline }
+        }
+        TYPE_REJECTED => {
+            let id = cur.u64()?;
+            let rlen = cur.u16()? as usize;
+            if rlen > MAX_REASON_BYTES {
+                bail!("rejection reason of {rlen} bytes exceeds {MAX_REASON_BYTES}");
+            }
+            let reason = std::str::from_utf8(cur.take(rlen)?)
+                .context("rejection reason is not UTF-8")?
+                .to_string();
+            ServerFrame::Rejected { id, reason }
         }
         t => bail!("unknown server frame type {t:#04x}"),
     };
@@ -343,8 +405,15 @@ pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
                 out.extend_from_slice(&t.to_be_bytes());
             }
             if r.trace_id != 0 {
-                out.push(0x01);
+                out.push(EXT_TRACE);
                 out.extend_from_slice(&r.trace_id.to_be_bytes());
+            }
+            if let Some(key) = &r.model {
+                out.push(EXT_MODEL);
+                debug_assert!((1..=MAX_MODEL_NAME).contains(&key.name().len()));
+                out.push(key.name().len() as u8);
+                out.extend_from_slice(key.name().as_bytes());
+                out.extend_from_slice(&key.version().to_be_bytes());
             }
         }
         ClientFrame::Cancel { id } => {
@@ -382,6 +451,13 @@ pub fn encode_server(frame: &ServerFrame) -> Vec<u8> {
             out.push(TYPE_CANCELLED);
             out.extend_from_slice(&id.to_be_bytes());
             out.push(u8::from(*deadline));
+        }
+        ServerFrame::Rejected { id, reason } => {
+            out.push(TYPE_REJECTED);
+            out.extend_from_slice(&id.to_be_bytes());
+            debug_assert!(reason.len() <= MAX_REASON_BYTES);
+            out.extend_from_slice(&(reason.len() as u16).to_be_bytes());
+            out.extend_from_slice(reason.as_bytes());
         }
     }
     out
@@ -681,7 +757,8 @@ impl Default for FrontDoorConfig {
 }
 
 /// Per-tenant front-door counters; `submitted == completed + shed +
-/// cancelled + expired` once a tenant's traffic has fully drained.
+/// rejected + cancelled + expired` once a tenant's traffic has fully
+/// drained.
 #[derive(Clone, Debug, Default)]
 pub struct TenantStats {
     /// Requests received on the socket (pre-shed).
@@ -690,6 +767,9 @@ pub struct TenantStats {
     pub completed: u64,
     /// Requests answered `Overloaded` (socket shed or pool reject).
     pub shed: u64,
+    /// Requests answered `Rejected` (typed refusal — e.g. a model pin
+    /// nothing serves). Not load: these do not clear under retry.
+    pub rejected: u64,
     /// Requests torn down by client cancel or disconnect.
     pub cancelled: u64,
     /// Requests torn down by deadline expiry.
@@ -706,6 +786,7 @@ impl TenantStats {
             ("submitted", Json::int(self.submitted as usize)),
             ("completed", Json::int(self.completed as usize)),
             ("shed", Json::int(self.shed as usize)),
+            ("rejected", Json::int(self.rejected as usize)),
             ("cancelled", Json::int(self.cancelled as usize)),
             ("expired", Json::int(self.expired as usize)),
             ("p50_ttft_us", Json::int(self.ttft_us.percentile(0.50) as usize)),
@@ -1166,6 +1247,26 @@ fn dispatcher_loop(
             let wire_id = wire.id;
             let trace = wire.trace_id;
             let gen = wire.gen_tokens as usize;
+            // Model pre-check: a pin nothing serves (and nothing is
+            // swapping toward) is refused typed, right here — the pool
+            // never sees the request. A pin that loses a race with a
+            // concurrent swap still lands in the pool's own submit
+            // gate and resolves as a shed below.
+            if let Some(key) = &wire.model {
+                if !handle.serves(key) {
+                    bump_tenant(&tenants, &tenant, |t| t.rejected += 1);
+                    obs.slo_bad();
+                    send_to(
+                        &mut writers,
+                        conn,
+                        &ServerFrame::Rejected {
+                            id: wire_id,
+                            reason: format!("model {key} is not served by this pool"),
+                        },
+                    );
+                    continue;
+                }
+            }
             let submitted = Instant::now();
             // The fair-queue wait, closed at submission — the span
             // between frame receipt and pool admission in a trace.
@@ -1179,7 +1280,7 @@ fn dispatcher_loop(
                 };
                 handle.submit_turn_with_id_traced(turn, gen, trace)
             } else {
-                handle.submit_with_id_traced(wire.prompt, gen, trace)
+                handle.submit_with_id_traced_model(wire.prompt, gen, trace, wire.model)
             };
             by_wire.insert((conn, wire_id), pid);
             pending.insert(
@@ -1303,6 +1404,7 @@ mod tests {
                 tenant: tenant.to_string(),
                 prompt: vec![1],
                 trace_id: 0,
+                model: None,
             },
             received: Instant::now(),
             deadline: None,
@@ -1322,6 +1424,7 @@ mod tests {
                 tenant: "acme".to_string(),
                 prompt: vec![3, 5],
                 trace_id: 0,
+                model: None,
             }),
             ClientFrame::Request(WireRequest {
                 id: 8,
@@ -1333,6 +1436,7 @@ mod tests {
                 tenant: "beta".to_string(),
                 prompt: vec![1, 2, 9, 4],
                 trace_id: 0,
+                model: None,
             }),
             ClientFrame::Request(WireRequest {
                 id: 9,
@@ -1344,6 +1448,19 @@ mod tests {
                 tenant: "acme".to_string(),
                 prompt: vec![11],
                 trace_id: 0xdead_beef_0042_0007,
+                model: None,
+            }),
+            ClientFrame::Request(WireRequest {
+                id: 10,
+                session: 0,
+                priority: 0,
+                deadline_ms: 0,
+                gen_tokens: 3,
+                resume: None,
+                tenant: "acme".to_string(),
+                prompt: vec![2, 4],
+                trace_id: 0x55,
+                model: Some(ModelKey::parse("toy-2bit@3").unwrap()),
             }),
             ClientFrame::Cancel { id: 7 },
         ];
@@ -1357,6 +1474,8 @@ mod tests {
             ServerFrame::Overloaded { id: 7, queue_depth: 256 },
             ServerFrame::Cancelled { id: 7, deadline: true },
             ServerFrame::Cancelled { id: 7, deadline: false },
+            ServerFrame::Rejected { id: 7, reason: "model toy@9 is not served".to_string() },
+            ServerFrame::Rejected { id: 8, reason: String::new() },
         ];
         for f in frames {
             let bytes = encode_server(&f);
@@ -1382,6 +1501,7 @@ mod tests {
             tenant: "t".to_string(),
             prompt: vec![8],
             trace_id: 0,
+            model: None,
         }));
         for cut in 0..full.len() {
             assert!(decode_client(&full[..cut]).is_err(), "prefix {cut} must not decode");
@@ -1407,6 +1527,7 @@ mod tests {
             tenant: String::new(),
             prompt: vec![],
             trace_id: 0,
+            model: None,
         }));
         let mut resumed = stateless.clone();
         assert_eq!(resumed[27], 0, "resume flag offset");
@@ -1429,6 +1550,7 @@ mod tests {
             tenant: "ab".to_string(),
             prompt: vec![],
             trace_id: 0,
+            model: None,
         }));
         // Tenant bytes start after the u16 length at offset 28.
         bad_utf8[30] = 0xff;
@@ -1447,10 +1569,12 @@ mod tests {
             tenant: "t".to_string(),
             prompt: vec![1, 2],
             trace_id: 0,
+            model: None,
         };
         let plain = encode_client(&ClientFrame::Request(base.clone()));
         let traced = encode_client(&ClientFrame::Request(WireRequest {
             trace_id: 0x0102_0304_0506_0708,
+            model: None,
             ..base.clone()
         }));
         // The extension is exactly 9 trailing bytes: tag + trace id.
@@ -1470,9 +1594,14 @@ mod tests {
         assert!(decode_client(&zero).is_err(), "explicit zero trace id is non-canonical");
         // Unknown extension tags are rejected, not skipped.
         let mut unknown = plain.clone();
-        unknown.push(0x02);
+        unknown.push(0x03);
         unknown.extend_from_slice(&7u64.to_be_bytes());
         assert!(decode_client(&unknown).is_err());
+        // Duplicate tags violate the ascending-order rule.
+        let mut dup = traced.clone();
+        dup.push(0x01);
+        dup.extend_from_slice(&9u64.to_be_bytes());
+        assert!(decode_client(&dup).is_err(), "duplicate trace extension is rejected");
         // Truncated extension bodies are rejected.
         for cut in 1..9 {
             let mut short = plain.clone();
@@ -1482,6 +1611,84 @@ mod tests {
         }
         // Trailing garbage after a complete extension still errors.
         let mut long = traced.clone();
+        long.push(0);
+        assert!(decode_client(&long).is_err());
+    }
+
+    #[test]
+    fn model_extension_is_canonical() {
+        let base = WireRequest {
+            id: 6,
+            session: 0,
+            priority: 0,
+            deadline_ms: 0,
+            gen_tokens: 2,
+            resume: None,
+            tenant: "t".to_string(),
+            prompt: vec![1],
+            trace_id: 0,
+            model: None,
+        };
+        let plain = encode_client(&ClientFrame::Request(base.clone()));
+        let key = ModelKey::parse("toy@7").unwrap();
+        let pinned = encode_client(&ClientFrame::Request(WireRequest {
+            model: Some(key.clone()),
+            ..base.clone()
+        }));
+        // The extension is tag + name_len + name + version (u32 BE).
+        assert_eq!(pinned.len(), plain.len() + 1 + 1 + 3 + 4);
+        assert_eq!(&pinned[..plain.len()], &plain[..], "prefix is byte-identical");
+        assert_eq!(pinned[plain.len()], 0x02, "extension tag");
+        assert_eq!(pinned[plain.len() + 1], 3, "name length");
+        assert_eq!(&pinned[plain.len() + 2..plain.len() + 5], b"toy");
+        assert_eq!(&pinned[plain.len() + 5..], &7u32.to_be_bytes());
+        match decode_client(&pinned).unwrap() {
+            ClientFrame::Request(r) => assert_eq!(r.model, Some(key.clone())),
+            other => panic!("decoded {other:?}"),
+        }
+        // Trace + model together must appear in ascending tag order;
+        // the reverse order is rejected.
+        let both = encode_client(&ClientFrame::Request(WireRequest {
+            trace_id: 0x42,
+            model: Some(key.clone()),
+            ..base.clone()
+        }));
+        assert_eq!(both[plain.len()], 0x01, "trace tag first");
+        assert_eq!(both[plain.len() + 9], 0x02, "model tag second");
+        match decode_client(&both).unwrap() {
+            ClientFrame::Request(r) => {
+                assert_eq!(r.trace_id, 0x42);
+                assert_eq!(r.model, Some(key.clone()));
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        let mut reversed = plain.clone();
+        reversed.extend_from_slice(&both[plain.len() + 9..]); // model ext
+        reversed.extend_from_slice(&both[plain.len()..plain.len() + 9]); // trace ext
+        assert_eq!(reversed.len(), both.len());
+        assert!(decode_client(&reversed).is_err(), "descending tag order is non-canonical");
+        // A zero-length name is rejected (absence encodes "no pin").
+        let mut empty = plain.clone();
+        empty.push(0x02);
+        empty.push(0);
+        empty.extend_from_slice(&1u32.to_be_bytes());
+        assert!(decode_client(&empty).is_err(), "empty model name is non-canonical");
+        // Name bytes failing ModelKey validation are rejected.
+        let mut bad = plain.clone();
+        bad.push(0x02);
+        bad.push(3);
+        bad.extend_from_slice(b"a b");
+        bad.extend_from_slice(&1u32.to_be_bytes());
+        assert!(decode_client(&bad).is_err(), "invalid model name is rejected");
+        // Truncated model extensions are rejected at every cut.
+        let ext = &pinned[plain.len()..];
+        for cut in 1..ext.len() {
+            let mut short = plain.clone();
+            short.extend_from_slice(&ext[..cut]);
+            assert!(decode_client(&short).is_err(), "truncated model extension ({cut} bytes)");
+        }
+        // Trailing garbage after a complete extension still errors.
+        let mut long = pinned.clone();
         long.push(0);
         assert!(decode_client(&long).is_err());
     }

@@ -359,7 +359,14 @@ pub struct CachedLutEngine {
 
 impl CachedLutEngine {
     pub fn build(spec: HostLutSpec) -> Result<CachedLutEngine> {
-        let model = HostLutModel::build(spec)?;
+        Self::from_model(HostLutModel::build(spec)?)
+    }
+
+    /// Wrap an already-built model (e.g. one rebuilt from a verified
+    /// `.lcdw` artifact via [`HostLutModel::build_from_weights`]) in a
+    /// fresh incremental engine — the hot-swap path, where the weight
+    /// store changes but the slot/window geometry is recreated clean.
+    pub fn from_model(model: HostLutModel) -> Result<CachedLutEngine> {
         let s = model.spec();
         let cache = SlotCache::new(s.batch, s.seq, s.hidden);
         let name = format!("cached-lut-w{}xd{}-t{}", s.hidden, s.depth, s.gemm_threads);

@@ -197,7 +197,7 @@ pub use admin::{AdminServer, AdminState};
 pub use batcher::{window_clip, AdmissionPolicy, Batcher, Session};
 #[cfg(any(test, feature = "chaos"))]
 pub use chaos::{AuditReport, ChaosEngine, FaultPlan, FaultPoint};
-pub use engines::{HostLutEngine, HostLutModel, HostLutSpec};
+pub use engines::{HostLutEngine, HostLutModel, HostLutSpec, HostLutWeights};
 pub use frontdoor::{
     ClientFrame, FairQueue, FrontDoor, FrontDoorConfig, FrontDoorObs, FrontDoorReport,
     FrontDoorStats, ServerFrame, TenantStats, WireRequest,
@@ -208,8 +208,9 @@ pub use router::Router;
 pub use scheduler::{ChunkJob, IterationPlan, Scheduler, SchedulerConfig};
 pub use server::{
     serve_blocking, serve_blocking_sched, serve_blocking_step, serve_blocking_tele, start,
-    start_pool, start_pool_obs, start_pool_sched, start_pool_session, start_pool_step,
-    start_pool_tele, Engine, MetricsRegistry, ServerHandle, ServerReport,
+    start_pool, start_pool_models, start_pool_obs, start_pool_sched, start_pool_session,
+    start_pool_step, start_pool_tele, Engine, MetricsRegistry, ServerHandle, ServerReport,
+    SwapController, SwapReport,
 };
 pub use session::{
     Lease, LeaseTable, ResumeTurn, SessionId, SessionMeta, SessionOptions, SessionStore,

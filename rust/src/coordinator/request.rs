@@ -1,6 +1,7 @@
 //! Request/response types and serving metrics.
 
 use super::session::SessionMeta;
+use crate::model::ModelKey;
 use crate::telemetry::{Histogram, PhaseStats};
 use crate::util::json::Json;
 use std::sync::mpsc::Sender;
@@ -27,6 +28,12 @@ pub struct GenRequest {
     /// untraced). Every flight-recorder span the request participates
     /// in carries it, so one grep reconstructs the request's timeline.
     pub trace: u64,
+    /// Model pin: `Some(key)` restricts admission to workers currently
+    /// serving that registry model (`None` = any worker). Pinned
+    /// requests no live or swapping-in worker can ever serve are
+    /// rejected at submit time or by the post-swap stranded sweep —
+    /// never silently served by the wrong weights.
+    pub model: Option<ModelKey>,
 }
 
 /// A completed generation.
@@ -133,6 +140,9 @@ pub struct Metrics {
     /// Prompt chunks fed through chunked-prefill phases (equals the
     /// number of prefilled prompts when chunking is off/disabled).
     pub prefill_chunks: u64,
+    /// Rolling hot-swaps this worker completed (engine rebuilt onto a
+    /// new registry model with zero dropped requests).
+    pub model_swaps: u64,
     /// TTFT samples of completed *session turns* only, kept as a bounded
     /// digest so per-worker percentiles merge order-independently.
     pub session_ttfts: TtftDigest,
@@ -165,6 +175,7 @@ pub struct MetricsSnapshot {
     pub routed_misses: u64,
     pub resumed_tokens: u64,
     pub prefill_chunks: u64,
+    pub model_swaps: u64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
     pub p50_ttft_us: u64,
@@ -224,6 +235,7 @@ impl Metrics {
         self.routed_misses += other.routed_misses;
         self.resumed_tokens += other.resumed_tokens;
         self.prefill_chunks += other.prefill_chunks;
+        self.model_swaps += other.model_swaps;
         self.session_ttfts.merge(&other.session_ttfts);
         self.phases.merge(&other.phases);
         self.latency_us.merge(&other.latency_us);
@@ -269,6 +281,7 @@ impl Metrics {
             routed_misses: self.routed_misses,
             resumed_tokens: self.resumed_tokens,
             prefill_chunks: self.prefill_chunks,
+            model_swaps: self.model_swaps,
             p50_latency_us: p50_lat,
             p99_latency_us: p99_lat,
             p50_ttft_us: p50_ttft,
@@ -308,7 +321,7 @@ impl MetricsSnapshot {
     /// Counter-valued fields — the shared source for both exposition
     /// formats (crate-visible so the admin plane can emit per-worker
     /// labeled series from the same list).
-    pub(crate) fn counter_fields(&self) -> [(&'static str, u64); 16] {
+    pub(crate) fn counter_fields(&self) -> [(&'static str, u64); 17] {
         [
             ("completed", self.completed),
             ("rejected", self.rejected),
@@ -325,6 +338,7 @@ impl MetricsSnapshot {
             ("routed_misses", self.routed_misses),
             ("resumed_tokens", self.resumed_tokens),
             ("prefill_chunks", self.prefill_chunks),
+            ("model_swaps", self.model_swaps),
             ("session_ttft_samples", self.session_ttft_samples),
         ]
     }
@@ -469,6 +483,9 @@ pub(crate) fn help_for(name: &str) -> &'static str {
         "routed_misses" => "Routed turns whose lease bookkeeping disagreed at placement.",
         "resumed_tokens" => "Tokens fed through warm-resume phases.",
         "prefill_chunks" => "Prompt chunks fed through chunked-prefill phases.",
+        "model_swaps" => "Rolling hot-swaps completed (engine rebuilt onto a new model).",
+        "swap_failures" => "Rolling hot-swap attempts that failed (old engine kept serving).",
+        "worker_model" => "Registry model currently served by each worker (info gauge, value 1).",
         "session_ttft_samples" => "Completed session turns in the TTFT digest.",
         "p50_latency_us" => "Median end-to-end request latency (µs).",
         "p99_latency_us" => "p99 end-to-end request latency (µs).",

@@ -196,6 +196,7 @@ mod tests {
                 t_submit: Instant::now(),
                 session: None,
                 trace: 0,
+                model: None,
             },
             rx,
         )

@@ -70,6 +70,7 @@ use super::request::{GenRequest, GenResponse, Metrics, MetricsSnapshot};
 use super::router::Router;
 use super::scheduler::{IterationPlan, Scheduler, SchedulerConfig};
 use super::session::{Lease, LeaseTable, SessionId, SessionOptions, TurnRequest};
+use crate::model::ModelKey;
 use crate::telemetry::{FlightDump, FlightRecorder, Gauges, Phase, Registry, TelemetryConfig};
 use crate::util::argmax;
 use anyhow::Result;
@@ -139,6 +140,18 @@ struct QueueState {
     /// that already completed are removed after the completing
     /// iteration, so the set stays bounded by in-flight cancels.
     cancels: HashSet<u64>,
+    /// Registry model each worker currently serves (admission matches
+    /// pinned requests against this; one entry per worker).
+    worker_models: Vec<ModelKey>,
+    /// Rolling hot-swap targets set by [`SwapController`]: `Some(key)`
+    /// makes worker `w` stop admitting, drain in flight, rebuild its
+    /// engine on `key`, then clear the entry (success or failure).
+    pending_swaps: Vec<Option<ModelKey>>,
+    /// Rolling swaps completed across the pool (controller-visible).
+    swaps_done: u64,
+    /// Swap attempts whose engine rebuild failed — the worker keeps
+    /// serving its OLD model, it never dies for a bad swap.
+    swap_failures: u64,
 }
 
 impl QueueState {
@@ -159,8 +172,70 @@ impl QueueState {
         if self.exited_flags.len() < workers {
             self.exited_flags.resize(workers, false);
         }
+        if self.worker_models.len() < workers {
+            self.worker_models.resize_with(workers, default_model_key);
+        }
+        if self.pending_swaps.len() < workers {
+            self.pending_swaps.resize_with(workers, || None);
+        }
         self.exited = self.exited_flags.iter().filter(|&&f| f).count();
     }
+
+    /// Can any live (or swapping-in) worker serve `key`? The submit-time
+    /// admission gate for pinned requests: pending swap targets count so
+    /// traffic for an incoming model queues instead of bouncing during
+    /// the swap window.
+    fn serves(&self, key: &ModelKey) -> bool {
+        let live = self
+            .worker_models
+            .iter()
+            .enumerate()
+            .any(|(w, m)| m == key && !self.exited_flags.get(w).copied().unwrap_or(true));
+        live || self.pending_swaps.iter().any(|p| p.as_ref() == Some(key))
+    }
+
+    /// Does the shared queue hold a request worker `w` may admit
+    /// (unpinned, or pinned to the model `w` currently serves)?
+    fn admissible_for(&self, worker: usize) -> bool {
+        let mine = &self.worker_models[worker];
+        self.queue.iter().any(|r| r.model.as_ref().map_or(true, |k| k == mine))
+    }
+
+    /// Reject queued requests pinned to a model no live worker serves
+    /// and no pending swap will bring up — run after a swap retires a
+    /// model so pinned stragglers disconnect instead of waiting forever.
+    /// Returns the number dropped (callers count them as rejected).
+    fn sweep_stranded(&mut self) -> u64 {
+        let mut dropped = 0u64;
+        let worker_models = std::mem::take(&mut self.worker_models);
+        let pending_swaps = std::mem::take(&mut self.pending_swaps);
+        let exited_flags = std::mem::take(&mut self.exited_flags);
+        self.queue.retain(|r| match &r.model {
+            None => true,
+            Some(key) => {
+                let live = worker_models
+                    .iter()
+                    .enumerate()
+                    .any(|(w, m)| m == key && !exited_flags.get(w).copied().unwrap_or(true));
+                let served = live || pending_swaps.iter().any(|p| p.as_ref() == Some(key));
+                if !served {
+                    dropped += 1;
+                }
+                served
+            }
+        });
+        self.worker_models = worker_models;
+        self.pending_swaps = pending_swaps;
+        self.exited_flags = exited_flags;
+        dropped
+    }
+}
+
+/// The key every model-oblivious entry point serves under: pools started
+/// through [`start_pool`] / [`start_pool_obs`] have one model for all
+/// workers and ignore pins only in the sense that nothing ever pins.
+fn default_model_key() -> ModelKey {
+    ModelKey::new("default", 0).expect("static default key is valid")
 }
 
 struct Shared {
@@ -229,7 +304,7 @@ impl ServerHandle {
     /// rejected by backpressure are dropped, which the caller observes as
     /// a disconnected receiver.
     pub fn submit(&self, prompt: Vec<i32>, gen_tokens: usize) -> Receiver<GenResponse> {
-        self.submit_inner(prompt, gen_tokens, None, 0).1
+        self.submit_inner(prompt, gen_tokens, None, 0, None).1
     }
 
     /// [`ServerHandle::submit`], also returning the assigned request id
@@ -239,7 +314,7 @@ impl ServerHandle {
         prompt: Vec<i32>,
         gen_tokens: usize,
     ) -> (u64, Receiver<GenResponse>) {
-        self.submit_inner(prompt, gen_tokens, None, 0)
+        self.submit_inner(prompt, gen_tokens, None, 0, None)
     }
 
     /// [`ServerHandle::submit_with_id`] carrying a client trace id
@@ -254,7 +329,32 @@ impl ServerHandle {
         gen_tokens: usize,
         trace: u64,
     ) -> (u64, Receiver<GenResponse>) {
-        self.submit_inner(prompt, gen_tokens, None, trace)
+        self.submit_inner(prompt, gen_tokens, None, trace, None)
+    }
+
+    /// [`ServerHandle::submit`] pinned to a registry model: only workers
+    /// currently serving `model` may admit the request. A pin no live or
+    /// swapping-in worker can satisfy is rejected immediately (the
+    /// caller observes a disconnected receiver), never served by the
+    /// wrong weights.
+    pub fn submit_model(
+        &self,
+        prompt: Vec<i32>,
+        gen_tokens: usize,
+        model: ModelKey,
+    ) -> Receiver<GenResponse> {
+        self.submit_inner(prompt, gen_tokens, None, 0, Some(model)).1
+    }
+
+    /// General single-shot form: trace id plus optional model pin.
+    pub fn submit_with_id_traced_model(
+        &self,
+        prompt: Vec<i32>,
+        gen_tokens: usize,
+        trace: u64,
+        model: Option<ModelKey>,
+    ) -> (u64, Receiver<GenResponse>) {
+        self.submit_inner(prompt, gen_tokens, None, trace, model)
     }
 
     /// Submit one conversation turn (built by
@@ -285,7 +385,7 @@ impl ServerHandle {
         trace: u64,
     ) -> (u64, Receiver<GenResponse>) {
         let meta = super::session::SessionMeta { id: turn.session, resume: turn.resume };
-        self.submit_inner(turn.prompt, gen_tokens, Some(meta), trace)
+        self.submit_inner(turn.prompt, gen_tokens, Some(meta), trace, None)
     }
 
     /// Mark a request for cancellation. Best-effort and idempotent:
@@ -316,6 +416,7 @@ impl ServerHandle {
         gen_tokens: usize,
         session: Option<super::session::SessionMeta>,
         trace: u64,
+        model: Option<ModelKey>,
     ) -> (u64, Receiver<GenResponse>) {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -325,6 +426,7 @@ impl ServerHandle {
             .as_ref()
             .filter(|m| m.resume.is_some())
             .and_then(|m| self.shared.router.route(m.id));
+        let pinned = model.is_some();
         let req = GenRequest {
             id,
             prompt,
@@ -333,11 +435,13 @@ impl ServerHandle {
             t_submit: Instant::now(),
             session,
             trace,
+            model,
         };
         let mut st = self.shared.lock_state();
         if st.shutting_down
             || st.exited == self.shared.workers
             || st.queued() >= self.shared.queue_cap
+            || req.model.as_ref().is_some_and(|k| !st.serves(k))
         {
             st.rejected += 1; // dropping `req` disconnects the receiver
         } else {
@@ -350,11 +454,40 @@ impl ServerHandle {
                 }
                 _ => {
                     st.queue.push_back(req);
-                    self.shared.cond.notify_one();
+                    if pinned {
+                        // notify_one could wake a worker serving a
+                        // different model, which sleeps again without
+                        // re-notifying the one that can take this.
+                        self.shared.cond.notify_all();
+                    } else {
+                        self.shared.cond.notify_one();
+                    }
                 }
             }
         }
         (id, rx)
+    }
+
+    /// The registry model each worker currently serves (index = worker).
+    /// A snapshot: a rolling swap in flight may change it immediately
+    /// after.
+    pub fn worker_models(&self) -> Vec<ModelKey> {
+        self.shared.lock_state().worker_models.clone()
+    }
+
+    /// Can a request pinned to `key` be admitted right now? True when a
+    /// live worker serves `key` or a pending swap is bringing it up —
+    /// the same gate `submit_model` applies, exposed so the front door
+    /// can answer a typed rejection before enqueueing.
+    pub fn serves(&self, key: &ModelKey) -> bool {
+        self.shared.lock_state().serves(key)
+    }
+
+    /// A cloneable controller for rolling hot-swaps over this pool. Grab
+    /// it before handing the `ServerHandle` to a front door (the handle
+    /// moves; the controller only holds the shared queue state).
+    pub fn swap_controller(&self) -> SwapController {
+        SwapController { shared: Arc::clone(&self.shared) }
     }
 
     /// Number of worker threads behind this handle.
@@ -420,6 +553,110 @@ impl Drop for ServerHandle {
         for join in self.joins.drain(..) {
             let _ = join.join();
         }
+    }
+}
+
+/// Outcome of one [`SwapController::rolling`] pass over the pool.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SwapReport {
+    /// Workers now serving the target model (includes workers that
+    /// already served it when the pass started).
+    pub swapped: usize,
+    /// Workers whose engine rebuild failed; each kept serving its old
+    /// model.
+    pub failed: usize,
+    /// Workers skipped because they had exited (or the pool began
+    /// shutting down mid-pass).
+    pub skipped: usize,
+}
+
+/// Drives zero-downtime rolling hot-swaps over a pool started with
+/// [`start_pool_models`]: workers are upgraded **one at a time** — the
+/// target worker drains its in-flight plans and rebuilds its engine on
+/// the new model while every peer keeps serving, so the pool never
+/// drops a request for a swap. Cloneable and detached from the
+/// [`ServerHandle`] (it holds only the shared queue state), so the admin
+/// plane can trigger swaps while the front door owns the handle.
+#[derive(Clone)]
+pub struct SwapController {
+    shared: Arc<Shared>,
+}
+
+impl SwapController {
+    /// Per-worker (index, current model, pending swap target) snapshot.
+    pub fn models(&self) -> Vec<(usize, ModelKey, Option<ModelKey>)> {
+        let st = self.shared.lock_state();
+        st.worker_models
+            .iter()
+            .enumerate()
+            .map(|(w, m)| (w, m.clone(), st.pending_swaps[w].clone()))
+            .collect()
+    }
+
+    /// Pool-lifetime swap counters: `(completed, failed)`.
+    pub fn counters(&self) -> (u64, u64) {
+        let st = self.shared.lock_state();
+        (st.swaps_done, st.swap_failures)
+    }
+
+    /// Upgrade every live worker to `key`, one worker at a time. Blocks
+    /// until the pass completes; in-flight and queued requests are never
+    /// dropped (each worker finishes what it holds before rebuilding,
+    /// peers keep admitting throughout). A worker whose rebuild fails
+    /// keeps its old engine and is counted in [`SwapReport::failed`].
+    /// Idempotent: workers already on `key` are counted as swapped
+    /// without draining.
+    pub fn rolling(&self, key: &ModelKey) -> SwapReport {
+        let mut report = SwapReport::default();
+        for w in 0..self.shared.workers {
+            let baseline = {
+                let mut st = self.shared.lock_state();
+                if st.shutting_down || st.exited_flags[w] {
+                    report.skipped += 1;
+                    continue;
+                }
+                if st.worker_models[w] == *key && st.pending_swaps[w].is_none() {
+                    report.swapped += 1;
+                    continue;
+                }
+                st.pending_swaps[w] = Some(key.clone());
+                st.swap_failures
+            };
+            self.shared.cond.notify_all();
+            // Wait for worker w to drain + rebuild (or die trying). No
+            // overall deadline: draining is bounded by the worker's
+            // in-flight generation lengths, and shutdown/exit below
+            // breaks the wait.
+            let mut st = self.shared.lock_state();
+            loop {
+                if st.pending_swaps[w].is_none() {
+                    if st.swap_failures > baseline {
+                        report.failed += 1;
+                    } else {
+                        report.swapped += 1;
+                    }
+                    break;
+                }
+                if st.shutting_down || st.exited_flags[w] {
+                    // The worker can no longer answer; drop the marker so
+                    // `serves` stops advertising the target through it,
+                    // and reject anything queued on that promise.
+                    st.pending_swaps[w] = None;
+                    st.rejected += st.sweep_stranded();
+                    report.skipped += 1;
+                    break;
+                }
+                st = match self.shared.cond.wait_timeout(st, Duration::from_millis(20)) {
+                    Ok((guard, _)) => guard,
+                    Err(poisoned) => {
+                        let (mut guard, _) = poisoned.into_inner();
+                        guard.repair(self.shared.workers);
+                        guard
+                    }
+                };
+            }
+        }
+        report
     }
 }
 
@@ -547,6 +784,41 @@ where
     F: Fn(usize) -> Result<S> + Send + Sync + 'static,
     S: StepEngine,
 {
+    start_pool_models(
+        workers,
+        max_batch,
+        queue_cap,
+        sched,
+        opts,
+        tele,
+        registry,
+        default_model_key(),
+        move |worker, _key| build(worker),
+    )
+}
+
+/// [`start_pool_obs`] with a **model-aware** engine builder: every
+/// worker starts on `initial` and the builder is re-invoked — inside
+/// the worker thread, with the worker index and target [`ModelKey`] —
+/// whenever a [`SwapController::rolling`] pass upgrades that worker.
+/// Requests pinned via [`ServerHandle::submit_model`] are admitted only
+/// by workers currently serving that key.
+#[allow(clippy::too_many_arguments)]
+pub fn start_pool_models<F, S>(
+    workers: usize,
+    max_batch: usize,
+    queue_cap: usize,
+    sched: SchedulerConfig,
+    opts: SessionOptions,
+    tele: TelemetryConfig,
+    registry: Option<Arc<MetricsRegistry>>,
+    initial: ModelKey,
+    build: F,
+) -> ServerHandle
+where
+    F: Fn(usize, &ModelKey) -> Result<S> + Send + Sync + 'static,
+    S: StepEngine,
+{
     let workers = workers.max(1);
     let shared = Arc::new(Shared {
         state: Mutex::new(QueueState {
@@ -557,6 +829,10 @@ where
             exited: 0,
             exited_flags: vec![false; workers],
             cancels: HashSet::new(),
+            worker_models: vec![initial; workers],
+            pending_swaps: vec![None; workers],
+            swaps_done: 0,
+            swap_failures: 0,
         }),
         cond: Condvar::new(),
         queue_cap: queue_cap.max(1),
@@ -594,7 +870,7 @@ fn pool_worker<F, S>(
     build: Arc<F>,
     results: Sender<(usize, Metrics)>,
 ) where
-    F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    F: Fn(usize, &ModelKey) -> Result<S> + Send + Sync + 'static,
     S: StepEngine,
 {
     let mut metrics = Metrics::default();
@@ -605,20 +881,24 @@ fn pool_worker<F, S>(
     // Catch panics (engine build or decode) so the exit bookkeeping below
     // always runs — otherwise queued requests would keep their reply
     // senders alive forever and clients would hang in recv().
-    let outcome = catch_unwind(AssertUnwindSafe(|| match (build.as_ref())(worker) {
-        Ok(mut engine) => run_worker(
-            &mut engine,
-            &shared,
-            max_batch,
-            sched,
-            opts,
-            worker,
-            &mut metrics,
-            &mut recorder,
-            &tele,
-            registry.as_deref(),
-        ),
-        Err(err) => eprintln!("engine build failed on worker {worker}: {err:#}"),
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        let initial = shared.lock_state().worker_models[worker].clone();
+        match (build.as_ref())(worker, &initial) {
+            Ok(engine) => run_worker(
+                engine,
+                &shared,
+                max_batch,
+                sched,
+                opts,
+                worker,
+                &mut metrics,
+                &mut recorder,
+                &tele,
+                registry.as_deref(),
+                build.as_ref(),
+            ),
+            Err(err) => eprintln!("engine build failed on worker {worker}: {err:#}"),
+        }
     }));
     if outcome.is_err() {
         eprintln!("serve worker {worker} panicked; draining its queue share");
@@ -821,8 +1101,8 @@ fn drain_routed(
 /// run resume + prefill + decode phases, complete sessions — retaining
 /// resumable ones under the lease budget.
 #[allow(clippy::too_many_arguments)]
-fn run_worker<S: StepEngine>(
-    engine: &mut S,
+fn run_worker<S: StepEngine, F>(
+    mut engine: S,
     shared: &Arc<Shared>,
     max_batch: usize,
     sched: SchedulerConfig,
@@ -832,13 +1112,16 @@ fn run_worker<S: StepEngine>(
     recorder: &mut Option<FlightRecorder>,
     tele: &TelemetryConfig,
     registry: Option<&MetricsRegistry>,
-) {
+    build: &F,
+) where
+    F: Fn(usize, &ModelKey) -> Result<S>,
+{
     if engine.seq() < 2 {
         eprintln!("engine '{}' has seq {} < 2; refusing to serve", engine.name(), engine.seq());
         return;
     }
-    let slots = max_batch.min(engine.slots()).max(1);
-    let seq = engine.seq();
+    let mut slots = max_batch.min(engine.slots()).max(1);
+    let mut seq = engine.seq();
     let scheduler = Scheduler::new(sched);
     let mut batcher = Batcher::with_policy(slots, slots, sched.policy);
     let mut leases = LeaseTable::new(opts.retained_slots.min(slots), opts.retain_ttl_iters);
@@ -848,14 +1131,21 @@ fn run_worker<S: StepEngine>(
         // Lease TTL sweep (iteration clock): expired windows are poison-
         // cleared BEFORE admission, so a racing resume misses cleanly.
         for lease in leases.expired(iteration) {
-            evict_slot(engine, &mut batcher, metrics, &shared.router, worker, &lease);
+            evict_slot(&mut engine, &mut batcher, metrics, &shared.router, worker, &lease);
         }
         // Admission: block while fully idle, otherwise just top up free
-        // slots so decode iterations aren't delayed.
+        // slots so decode iterations aren't delayed. A pending hot-swap
+        // wakes the wait, stops admission, and — once the batcher runs
+        // dry — rebuilds the engine (`swap_to` below).
         let mut resumes: Vec<(usize, Vec<i32>)> = Vec::new();
+        let mut swap_to: Option<ModelKey> = None;
         {
             let mut st = shared.lock_state();
-            while batcher.is_idle() && st.queue.is_empty() && st.routed[worker].is_empty() {
+            while batcher.is_idle()
+                && !st.admissible_for(worker)
+                && st.routed[worker].is_empty()
+                && st.pending_swaps[worker].is_none()
+            {
                 if st.shutting_down {
                     return; // clean drain: nothing queued, nothing in flight
                 }
@@ -923,82 +1213,165 @@ fn run_worker<S: StepEngine>(
                     }
                 }
             }
-            let mut free =
-                slots.saturating_sub(batcher.active() + batcher.reserved() + batcher.pending());
-            loop {
-                // Routed queue first (lease hits consume no free slot;
-                // misses — including stale-lease placement failures —
-                // take normal admission capacity).
-                free = drain_routed(
-                    &mut st,
-                    shared,
-                    &mut batcher,
-                    &mut leases,
-                    metrics,
-                    &mut resumes,
-                    worker,
-                    seq,
-                    free,
-                );
-                // Waiting traffic must never starve behind retained
-                // windows: evict leases LRU-first while blocked requests
-                // outnumber free slots. The shared queue is drained by
-                // EVERY live worker, so only this worker's fair share of
-                // it counts — otherwise any global backlog would make
-                // all workers wipe their warm leases for requests their
-                // peers are about to take.
-                let alive = (shared.workers - st.exited).max(1);
-                let shared_share = st.queue.len().div_ceil(alive);
-                let waiting = shared_share
-                    + st.routed[worker]
+            if st.pending_swaps[worker].is_some() {
+                // Draining toward a swap: admit nothing new. This
+                // worker's routed turns go back to the shared queue —
+                // their leases die with the swap anyway, so any peer can
+                // serve them through the cold-prefill fallback instead
+                // of them waiting out the drain.
+                if !st.routed[worker].is_empty() {
+                    while let Some(req) = st.routed[worker].pop_front() {
+                        st.queue.push_back(req);
+                    }
+                    shared.cond.notify_all();
+                }
+                if batcher.is_idle() {
+                    swap_to = st.pending_swaps[worker].clone();
+                }
+            } else {
+                let mine = st.worker_models[worker].clone();
+                let mut free =
+                    slots.saturating_sub(batcher.active() + batcher.reserved() + batcher.pending());
+                loop {
+                    // Routed queue first (lease hits consume no free slot;
+                    // misses — including stale-lease placement failures —
+                    // take normal admission capacity).
+                    free = drain_routed(
+                        &mut st,
+                        shared,
+                        &mut batcher,
+                        &mut leases,
+                        metrics,
+                        &mut resumes,
+                        worker,
+                        seq,
+                        free,
+                    );
+                    // Waiting traffic must never starve behind retained
+                    // windows: evict leases LRU-first while blocked requests
+                    // outnumber free slots. The shared queue is drained by
+                    // EVERY live worker, so only this worker's fair share of
+                    // it counts — otherwise any global backlog would make
+                    // all workers wipe their warm leases for requests their
+                    // peers are about to take. Only requests this worker's
+                    // model can admit count at all.
+                    let alive = (shared.workers - st.exited).max(1);
+                    let compatible = st
+                        .queue
                         .iter()
-                        .filter(|r| {
-                            !r.session
-                                .as_ref()
-                                .map(|m| m.resume.is_some() && leases.contains(m.id))
-                                .unwrap_or(false)
-                        })
+                        .filter(|r| r.model.as_ref().map_or(true, |k| *k == mine))
                         .count();
-                let mut evicted = false;
-                while free < waiting.min(slots) {
-                    match leases.evict_lru() {
-                        Some(lease) => {
-                            evict_slot(
-                                engine,
-                                &mut batcher,
-                                metrics,
-                                &shared.router,
-                                worker,
-                                &lease,
-                            );
-                            free += 1;
-                            evicted = true;
+                    let shared_share = compatible.div_ceil(alive);
+                    let waiting = shared_share
+                        + st.routed[worker]
+                            .iter()
+                            .filter(|r| {
+                                !r.session
+                                    .as_ref()
+                                    .map(|m| m.resume.is_some() && leases.contains(m.id))
+                                    .unwrap_or(false)
+                            })
+                            .count();
+                    let mut evicted = false;
+                    while free < waiting.min(slots) {
+                        match leases.evict_lru() {
+                            Some(lease) => {
+                                evict_slot(
+                                    &mut engine,
+                                    &mut batcher,
+                                    metrics,
+                                    &shared.router,
+                                    worker,
+                                    &lease,
+                                );
+                                free += 1;
+                                evicted = true;
+                            }
+                            None => break,
+                        }
+                    }
+                    // Freed slots may unblock routed misses (and an eviction
+                    // can demote a queued hit): reprocess the routed queue.
+                    // Terminates: each pass must evict at least one lease.
+                    if !evicted || free == 0 || st.routed[worker].is_empty() {
+                        break;
+                    }
+                }
+                for _ in 0..free {
+                    // Pop the oldest request this worker's model can
+                    // serve; pinned requests for other models stay for
+                    // their worker (FIFO within each compatibility
+                    // class).
+                    let idx = st
+                        .queue
+                        .iter()
+                        .position(|r| r.model.as_ref().map_or(true, |k| *k == mine));
+                    match idx.and_then(|i| st.queue.remove(i)) {
+                        Some(req) => {
+                            metrics.record_start();
+                            // A resumable turn on the shared queue has no
+                            // live lease anywhere: cold-prefill fallback.
+                            if req.session.as_ref().map(|m| m.resume.is_some()).unwrap_or(false) {
+                                metrics.cache_misses += 1;
+                            }
+                            let admitted = batcher.submit(req);
+                            debug_assert!(admitted, "local batcher sized to its slot count");
                         }
                         None => break,
                     }
                 }
-                // Freed slots may unblock routed misses (and an eviction
-                // can demote a queued hit): reprocess the routed queue.
-                // Terminates: each pass must evict at least one lease.
-                if !evicted || free == 0 || st.routed[worker].is_empty() {
-                    break;
-                }
             }
-            for _ in 0..free {
-                match st.queue.pop_front() {
-                    Some(req) => {
-                        metrics.record_start();
-                        // A resumable turn on the shared queue has no
-                        // live lease anywhere: cold-prefill fallback.
-                        if req.session.as_ref().map(|m| m.resume.is_some()).unwrap_or(false) {
-                            metrics.cache_misses += 1;
-                        }
-                        let admitted = batcher.submit(req);
-                        debug_assert!(admitted, "local batcher sized to its slot count");
-                    }
-                    None => break,
-                }
+        }
+        // Drain complete for a pending swap: evict every retained lease
+        // (later resumes degrade to counted cold prefills), rebuild the
+        // engine on the target model, and only then re-enter admission.
+        // A failed rebuild keeps the OLD engine serving — a bad artifact
+        // or builder error must never kill a worker.
+        if let Some(key) = swap_to {
+            while let Some(lease) = leases.evict_lru() {
+                evict_slot(&mut engine, &mut batcher, metrics, &shared.router, worker, &lease);
             }
+            let ok = match build(worker, &key) {
+                Ok(next) if next.seq() >= 2 => {
+                    engine = next;
+                    slots = max_batch.min(engine.slots()).max(1);
+                    seq = engine.seq();
+                    // The batcher is idle and every lease is evicted, so
+                    // both rebuild cleanly against the new geometry.
+                    batcher = Batcher::with_policy(slots, slots, sched.policy);
+                    leases = LeaseTable::new(opts.retained_slots.min(slots), opts.retain_ttl_iters);
+                    true
+                }
+                Ok(next) => {
+                    eprintln!(
+                        "swap to {key} on worker {worker} refused: engine '{}' has seq {} < 2",
+                        next.name(),
+                        next.seq()
+                    );
+                    false
+                }
+                Err(err) => {
+                    eprintln!("swap to {key} on worker {worker} failed to build: {err:#}");
+                    false
+                }
+            };
+            {
+                let mut st = shared.lock_state();
+                if ok {
+                    st.worker_models[worker] = key;
+                    st.swaps_done += 1;
+                    metrics.model_swaps += 1;
+                } else {
+                    st.swap_failures += 1;
+                }
+                st.pending_swaps[worker] = None;
+                // The swap may have retired the old model's last worker
+                // (or, on failure, the target's only promise): reject
+                // pinned stragglers no one will ever serve.
+                metrics.rejected += st.sweep_stranded();
+            }
+            shared.cond.notify_all();
+            continue;
         }
         if batcher.is_idle() && resumes.is_empty() {
             continue;
@@ -1016,7 +1389,7 @@ fn run_worker<S: StepEngine>(
                 r.begin_iteration(iteration);
             }
             serve_iteration(
-                engine,
+                &mut engine,
                 &mut batcher,
                 metrics,
                 &resumes,
@@ -1495,6 +1868,7 @@ pub fn serve_blocking_tele<S: StepEngine>(
             t_submit: Instant::now(),
             session: None,
             trace: 0,
+            model: None,
         };
         assert!(batcher.submit(req));
     }
@@ -1829,6 +2203,10 @@ mod tests {
                 exited: 0,
                 exited_flags: vec![false; workers],
                 cancels: HashSet::new(),
+                worker_models: vec![default_model_key(); workers],
+                pending_swaps: vec![None; workers],
+                swaps_done: 0,
+                swap_failures: 0,
             }),
             cond: Condvar::new(),
             queue_cap: 8,
@@ -1852,6 +2230,7 @@ mod tests {
                     resume: Some(ResumeTurn { pending: 3, append: vec![4] }),
                 }),
                 trace: 0,
+                model: None,
             },
             rx,
         )
@@ -1872,6 +2251,7 @@ mod tests {
             t_submit: Instant::now(),
             session: None,
             trace: 0,
+            model: None,
         };
         assert!(batcher.submit(occupier));
         assert_eq!(batcher.fill_slots(8), vec![0]);
@@ -1939,10 +2319,16 @@ mod tests {
             exited: 7, // inconsistent with the flags below
             exited_flags: vec![true],
             cancels: HashSet::new(),
+            worker_models: Vec::new(),
+            pending_swaps: Vec::new(),
+            swaps_done: 0,
+            swap_failures: 0,
         };
         st.repair(3);
         assert_eq!(st.routed.len(), 3, "per-worker queues cover every worker");
         assert_eq!(st.exited_flags.len(), 3);
+        assert_eq!(st.worker_models.len(), 3, "every worker has a model entry");
+        assert_eq!(st.pending_swaps.len(), 3);
         assert_eq!(st.exited, 1, "exited recomputed from the flags");
     }
 
@@ -1980,5 +2366,178 @@ mod tests {
         let fifo = run(AdmissionPolicy::Fifo);
         assert_eq!(fifo, run(AdmissionPolicy::ShortestPromptFirst));
         assert_eq!(fifo, run(AdmissionPolicy::TokenBudget { max_prefill_tokens: 1 }));
+    }
+
+    /// Version-stepped mock: predicts `token + step` — distinguishable
+    /// weights per model version, so a served stream identifies exactly
+    /// which model produced it.
+    struct SteppedEngine {
+        b: usize,
+        s: usize,
+        v: usize,
+        step: i32,
+    }
+
+    impl Engine for SteppedEngine {
+        fn batch(&self) -> usize {
+            self.b
+        }
+        fn seq(&self) -> usize {
+            self.s
+        }
+        fn vocab(&self) -> usize {
+            self.v
+        }
+        fn name(&self) -> &str {
+            "stepped"
+        }
+        fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+            let mut logits = vec![0.0f32; self.b * self.s * self.v];
+            for slot in 0..self.b {
+                for pos in 0..self.s {
+                    let t = tokens[slot * self.s + pos];
+                    let next = (t + self.step).rem_euclid(self.v as i32) as usize;
+                    logits[(slot * self.s + pos) * self.v + next] = 10.0;
+                }
+            }
+            Ok(logits)
+        }
+    }
+
+    /// The stream a single-model pool of `step` would serve for this
+    /// prompt — the bit-identity reference for swap tests.
+    fn stepped_ref(prompt_last: i32, gen: usize, step: i32) -> Vec<i32> {
+        let mut out = Vec::with_capacity(gen);
+        let mut t = prompt_last;
+        for _ in 0..gen {
+            t = (t + step).rem_euclid(64);
+            out.push(t);
+        }
+        out
+    }
+
+    fn stepped_pool(workers: usize, initial: &ModelKey) -> ServerHandle {
+        start_pool_models(
+            workers,
+            2,
+            256,
+            SchedulerConfig::unchunked(AdmissionPolicy::Fifo),
+            SessionOptions::default(),
+            TelemetryConfig::off(),
+            None,
+            initial.clone(),
+            |_w, key: &ModelKey| {
+                anyhow::ensure!(key.version() < 9, "version {} does not exist", key.version());
+                FullRecomputeStep::new(SteppedEngine {
+                    b: 2,
+                    s: 8,
+                    v: 64,
+                    step: key.version() as i32,
+                })
+            },
+        )
+    }
+
+    #[test]
+    fn rolling_swap_under_load_drops_nothing_and_switches_models() {
+        let m1 = ModelKey::new("m", 1).unwrap();
+        let m2 = ModelKey::new("m", 2).unwrap();
+        let handle = stepped_pool(2, &m1);
+        let ctl = handle.swap_controller();
+        assert_eq!(handle.worker_models(), vec![m1.clone(), m1.clone()]);
+        assert!(handle.serves(&m1) && !handle.serves(&m2));
+        // Before: a batch in flight when the swap starts.
+        let before: Vec<_> = (0..8).map(|i| (i, handle.submit(vec![i], 3))).collect();
+        // During: submissions racing the rolling pass itself.
+        let (report, during) = std::thread::scope(|s| {
+            let loader = s.spawn(|| {
+                (8..24i32)
+                    .map(|i| {
+                        std::thread::sleep(Duration::from_millis(2));
+                        (i, handle.submit(vec![i], 3))
+                    })
+                    .collect::<Vec<_>>()
+            });
+            let report = ctl.rolling(&m2);
+            (report, loader.join().unwrap())
+        });
+        assert_eq!(report, SwapReport { swapped: 2, failed: 0, skipped: 0 });
+        assert_eq!(handle.worker_models(), vec![m2.clone(), m2.clone()]);
+        assert!(handle.serves(&m2) && !handle.serves(&m1));
+        assert_eq!(ctl.counters(), (2, 0));
+        // After: only the new model serves.
+        let after: Vec<_> = (24..32).map(|i| (i, handle.submit(vec![i], 3))).collect();
+        let mut completed = 0u64;
+        for (p, rx) in before.into_iter().chain(during) {
+            let resp = rx.recv().expect("no request may be dropped by a rolling swap");
+            completed += 1;
+            let old = stepped_ref(p, 3, 1);
+            let new = stepped_ref(p, 3, 2);
+            assert!(
+                resp.tokens == old || resp.tokens == new,
+                "stream for prompt {p} matches neither model: {:?}",
+                resp.tokens
+            );
+        }
+        for (p, rx) in after {
+            let resp = rx.recv().expect("post-swap submissions must be served");
+            completed += 1;
+            assert_eq!(resp.tokens, stepped_ref(p, 3, 2), "post-swap stream must be the new model's");
+        }
+        let snap = handle.shutdown();
+        assert_eq!(snap.completed, completed);
+        assert_eq!(snap.rejected, 0, "a rolling swap must drop zero requests");
+        assert_eq!(snap.model_swaps, 2, "each worker counts its own swap");
+    }
+
+    #[test]
+    fn pinned_requests_follow_their_model_and_unserved_pins_reject() {
+        let m1 = ModelKey::new("m", 1).unwrap();
+        let m2 = ModelKey::new("m", 2).unwrap();
+        let handle = stepped_pool(1, &m1);
+        let ctl = handle.swap_controller();
+        // A pin the pool serves is honored; one it doesn't is refused
+        // up front (disconnected receiver), never mis-served.
+        let rx = handle.submit_model(vec![5], 3, m1.clone());
+        assert_eq!(rx.recv().unwrap().tokens, stepped_ref(5, 3, 1));
+        let rx = handle.submit_model(vec![5], 3, m2.clone());
+        assert!(rx.recv().is_err(), "pin for an unserved model must reject");
+        assert_eq!(ctl.rolling(&m2), SwapReport { swapped: 1, failed: 0, skipped: 0 });
+        let rx = handle.submit_model(vec![5], 3, m2.clone());
+        assert_eq!(rx.recv().unwrap().tokens, stepped_ref(5, 3, 2));
+        let rx = handle.submit_model(vec![5], 3, m1);
+        assert!(rx.recv().is_err(), "the retired model no longer admits");
+        let snap = handle.shutdown();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.rejected, 2, "both bad pins counted");
+    }
+
+    #[test]
+    fn failed_swap_keeps_the_old_engine_serving() {
+        let m1 = ModelKey::new("m", 1).unwrap();
+        let missing = ModelKey::new("m", 9).unwrap();
+        let handle = stepped_pool(1, &m1);
+        let ctl = handle.swap_controller();
+        assert_eq!(handle.submit(vec![7], 2).recv().unwrap().tokens, stepped_ref(7, 2, 1));
+        let report = ctl.rolling(&missing);
+        assert_eq!(report, SwapReport { swapped: 0, failed: 1, skipped: 0 });
+        assert_eq!(ctl.counters(), (0, 1));
+        // The worker survived the failed rebuild and still serves m@1.
+        assert_eq!(handle.worker_models(), vec![m1]);
+        assert_eq!(handle.submit(vec![9], 2).recv().unwrap().tokens, stepped_ref(9, 2, 1));
+        let snap = handle.shutdown();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.model_swaps, 0);
+    }
+
+    #[test]
+    fn rolling_swap_is_idempotent_on_the_current_model() {
+        let m1 = ModelKey::new("m", 1).unwrap();
+        let handle = stepped_pool(2, &m1);
+        let ctl = handle.swap_controller();
+        let report = ctl.rolling(&m1);
+        assert_eq!(report, SwapReport { swapped: 2, failed: 0, skipped: 0 });
+        assert_eq!(ctl.counters(), (0, 0), "no drain or rebuild for a no-op swap");
+        assert_eq!(handle.shutdown().model_swaps, 0);
     }
 }

@@ -22,8 +22,14 @@
 //! * [`frame_roundtrip`] — the front-door wire codec
 //!   (`docs/PROTOCOL.md`) never panics on arbitrary payload bytes,
 //!   accepted payloads are canonical (`encode(decode(b)) == b`), and
-//!   structured frames built from the fuzz input survive
-//!   `decode(encode(f)) == f`.
+//!   structured frames built from the fuzz input — including the
+//!   `trace_id` and model-selector extensions and the typed `Rejected`
+//!   reply — survive `decode(encode(f)) == f`;
+//! * [`lcdw_never_panics`] — the `.lcdw` artifact parser returns typed
+//!   errors (never panics) on arbitrary bytes, accepted images survive
+//!   a parse → encode → parse loop losslessly, arbitrary text through
+//!   the manifest parser re-serializes canonically, and any single-bit
+//!   corruption of a valid v2 payload is refused by checksum.
 //!
 //! The drivers are deliberately toolchain-agnostic: `rust/fuzz/` wraps
 //! them in nightly-only `cargo fuzz` targets for open-ended exploration,
@@ -46,6 +52,12 @@ use crate::lut::{
     lut_gemm_bucket, lut_gemm_fp_ref, lut_gemm_table, lut_gemm_table_sym, LutLayer, PackedIndices,
     ParallelLut, ProductTable, SimdLutLayer, SimdScratch, SlotCache,
 };
+use crate::model::lcdw::{
+    encode_lcdw, parse_lcdw, tensor_sha256, ArtifactManifest, LcdwFile, TensorEntry, LCDW_V2,
+    MANIFEST_SCHEMA,
+};
+use crate::model::ModelKey;
+use crate::tensor::Tensor;
 use crate::telemetry::Histogram;
 use crate::util::json::Json;
 use crate::util::{mse, Rng};
@@ -381,6 +393,16 @@ pub fn frame_roundtrip(data: &[u8]) {
     // Absent on even picks, present (and forced nonzero — zero is only
     // representable by absence) on odd ones.
     let trace_id = if r.byte() % 2 == 0 { 0 } else { r.u64() | 1 };
+    // Model pin: absent ⇔ None; present carries a valid registry key
+    // (lowercase names always satisfy `valid_model_name`), so the
+    // canonical-absence rule of the 0x02 extension is fuzzed both ways.
+    let model = if r.byte() % 2 == 0 {
+        None
+    } else {
+        let name: String = (0..r.range(1, 12)).map(|_| char::from(b'a' + r.byte() % 26)).collect();
+        let version = (r.u64() % 10_000) as u32;
+        Some(ModelKey::new(&name, version).expect("lowercase names are valid model names"))
+    };
     let request = ClientFrame::Request(WireRequest {
         id: r.u64(),
         session,
@@ -391,6 +413,7 @@ pub fn frame_roundtrip(data: &[u8]) {
         tenant,
         prompt: (0..r.range(0, 12)).map(|_| i32::from(r.i8())).collect(),
         trace_id,
+        model,
     });
     let frames = [request, ClientFrame::Cancel { id: r.u64() }];
     for frame in &frames {
@@ -407,12 +430,102 @@ pub fn frame_roundtrip(data: &[u8]) {
         ServerFrame::Done { id: r.u64(), ttft_us: r.u64(), latency_us: r.u64() },
         ServerFrame::Overloaded { id: r.u64(), queue_depth: (r.range(0, 4096)) as u32 },
         ServerFrame::Cancelled { id: r.u64(), deadline: r.byte() % 2 == 1 },
+        ServerFrame::Rejected {
+            id: r.u64(),
+            reason: (0..r.range(0, 48)).map(|_| char::from(b'a' + r.byte() % 26)).collect(),
+        },
     ];
     for frame in &replies {
         let bytes = encode_server(frame);
         let back = decode_server(&bytes)
             .unwrap_or_else(|e| panic!("valid server frame failed to decode: {e} ({frame:?})"));
         assert_eq!(&back, frame, "server frame round-trip diverged");
+    }
+}
+
+/// `.lcdw` artifact-path driver (`model::lcdw`). Three phases:
+///
+/// 1. **Raw**: the input bytes go straight to [`parse_lcdw`]. A typed
+///    `Err` is fine; a panic is a finding. An accepted image must
+///    survive parse → [`encode_lcdw`] → parse with identical version,
+///    manifest key and tensors (v2 manifests re-serialize in canonical
+///    compact JSON, so semantic — not byte — equality is the contract).
+/// 2. **Manifest text**: the same bytes as (lossy) UTF-8 through
+///    [`ArtifactManifest::parse`]; accepted manifests must re-serialize
+///    to a fixed point.
+/// 3. **Structured**: a valid v2 artifact is synthesized from the
+///    remaining input and must parse; then one fuzz-chosen bit is
+///    flipped. Corruption anywhere may be refused typed but must never
+///    panic, and corruption inside the tensor payload must be refused
+///    (the per-tensor sha256 is what makes tampering detectable).
+pub fn lcdw_never_panics(data: &[u8]) {
+    // Phase 1: arbitrary bytes against the artifact parser.
+    if let Ok(file) = parse_lcdw(data) {
+        let bytes = encode_lcdw(&file).expect("parsed artifact must re-encode");
+        let again =
+            parse_lcdw(&bytes).unwrap_or_else(|e| panic!("re-encoded artifact failed to parse: {e}"));
+        assert_eq!(again.version, file.version, "artifact version changed across re-encode");
+        assert_eq!(
+            file.manifest.as_ref().map(ArtifactManifest::key_string),
+            again.manifest.as_ref().map(|m| m.key_string()),
+            "manifest key changed across re-encode"
+        );
+        assert_eq!(file.tensors.len(), again.tensors.len(), "tensor count changed");
+        for ((n1, t1), (n2, t2)) in file.tensors.iter().zip(&again.tensors) {
+            assert_eq!(n1, n2, "tensor name changed across re-encode");
+            assert_eq!(t1.shape(), t2.shape(), "tensor shape changed across re-encode ({n1})");
+            assert_eq!(t1.data(), t2.data(), "tensor data changed across re-encode ({n1})");
+        }
+    }
+
+    // Phase 2: manifest-text differential.
+    if let Ok(m) = ArtifactManifest::parse(&String::from_utf8_lossy(data)) {
+        let text = m.to_json().to_string();
+        let again = ArtifactManifest::parse(&text).expect("canonical manifest must re-parse");
+        assert_eq!(again.to_json().to_string(), text, "manifest re-serialization is not a fixed point");
+    }
+
+    // Phase 3: synthesized v2 artifact + single-bit corruption.
+    let mut r = ByteReader::new(data);
+    let rows = r.range(1, 6);
+    let cols = r.range(1, 6);
+    let mut rng = Rng::new(r.u64());
+    let t = Tensor::randn(vec![rows, cols], 0.5, &mut rng);
+    let name: String = (0..r.range(1, 12)).map(|_| char::from(b'a' + r.byte() % 26)).collect();
+    let recipe = Json::obj(vec![
+        ("vocab", Json::int(r.range(2, 64))),
+        ("hidden", Json::int(r.range(1, 64))),
+        ("depth", Json::int(r.range(0, 4))),
+        ("centroids", Json::int(r.range(2, 16))),
+        ("seed", Json::int(r.range(0, 1 << 15))),
+    ]);
+    let manifest = ArtifactManifest {
+        schema: MANIFEST_SCHEMA,
+        name,
+        version: (r.u64() % 10_000) as u32,
+        recipe_sha256: crate::util::sha256_hex(recipe.to_string().as_bytes()),
+        recipe,
+        created_by: "fuzz".to_string(),
+        tensors: vec![TensorEntry {
+            name: "w".to_string(),
+            shape: vec![rows, cols],
+            sha256: tensor_sha256(&t),
+        }],
+    };
+    let file =
+        LcdwFile { version: LCDW_V2, manifest: Some(manifest), tensors: vec![("w".to_string(), t)] };
+    let bytes = encode_lcdw(&file).expect("synthesized artifact must encode");
+    let payload_start = bytes.len() - rows * cols * 4;
+    parse_lcdw(&bytes).unwrap_or_else(|e| panic!("valid synthesized artifact failed to parse: {e}"));
+    let idx = (r.u64() as usize) % bytes.len();
+    let mut corrupt = bytes;
+    corrupt[idx] ^= 1 << (r.byte() % 8);
+    let reparsed = parse_lcdw(&corrupt); // typed Err or Ok — never a panic
+    if idx >= payload_start {
+        assert!(
+            reparsed.is_err(),
+            "tensor-payload corruption at byte {idx} slipped past the checksum"
+        );
     }
 }
 
@@ -437,7 +550,52 @@ mod tests {
             slot_cache_differential(&input);
             histogram_differential(&input);
             frame_roundtrip(&input);
+            lcdw_never_panics(&input);
         }
+    }
+
+    /// A pristine v2 image produced by the crate's own writer must pass
+    /// phase 1 of the lcdw driver (the accept path, which random bytes
+    /// essentially never reach), and corrupting its last byte — always
+    /// tensor payload — must be refused by checksum, not accepted and
+    /// not a panic.
+    #[test]
+    fn lcdw_driver_accept_path_and_checksum_refusal() {
+        let mut rng = Rng::new(77);
+        let t = crate::tensor::Tensor::randn(vec![2, 3], 0.5, &mut rng);
+        let recipe = Json::obj(vec![
+            ("vocab", Json::int(8)),
+            ("hidden", Json::int(3)),
+            ("depth", Json::int(1)),
+            ("centroids", Json::int(4)),
+            ("seed", Json::int(9)),
+        ]);
+        let manifest = ArtifactManifest {
+            schema: MANIFEST_SCHEMA,
+            name: "fuzz-probe".to_string(),
+            version: 1,
+            recipe_sha256: crate::util::sha256_hex(recipe.to_string().as_bytes()),
+            recipe,
+            created_by: "unit".to_string(),
+            tensors: vec![TensorEntry {
+                name: "w".to_string(),
+                shape: vec![2, 3],
+                sha256: tensor_sha256(&t),
+            }],
+        };
+        let file = LcdwFile {
+            version: LCDW_V2,
+            manifest: Some(manifest),
+            tensors: vec![("w".to_string(), t)],
+        };
+        let bytes = encode_lcdw(&file).unwrap();
+        assert!(parse_lcdw(&bytes).is_ok(), "pristine writer output must parse");
+        lcdw_never_panics(&bytes);
+        let mut corrupt = bytes;
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0x40;
+        assert!(parse_lcdw(&corrupt).is_err(), "payload corruption must be refused");
+        lcdw_never_panics(&corrupt);
     }
 
     #[test]

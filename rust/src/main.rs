@@ -5,6 +5,7 @@
 //! lcd compress  --model gpt [--min-k K]        LCD-compress, print per-layer report
 //! lcd eval      --model gpt                    FP vs LCD perplexity / accuracy
 //! lcd serve     --model gpt [--engine lut|fp|host|cached|speculative]  run the generation server
+//! lcd pack      --model-dir D --model-id n@v pack a `.lcdw` v2 model artifact
 //! lcd repro     --exp table1|...|all           regenerate a paper table/figure
 //! ```
 //!
@@ -34,13 +35,16 @@ struct Args {
     /// `serve`: write the final telemetry exposition here after shutdown
     /// (`.json` suffix = JSON snapshot, anything else = Prometheus text).
     telemetry_dump: Option<String>,
+    /// `pack`: centroids per layer (2..=16) — the bit-width lever; a
+    /// `k`-centroid artifact serves at `log2(k)` bits per weight.
+    centroids: usize,
     cfg: LcdConfig,
 }
 
 fn parse_args() -> Result<Args> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        bail!("usage: lcd <train|compress|eval|serve|repro> [flags]\n{}", HELP);
+        bail!("usage: lcd <train|compress|eval|serve|pack|repro> [flags]\n{}", HELP);
     }
     let command = argv[0].clone();
     let mut cfg = LcdConfig::default();
@@ -49,6 +53,7 @@ fn parse_args() -> Result<Args> {
     let mut requests = 32usize;
     let mut turns = 1usize;
     let mut telemetry_dump = None;
+    let mut centroids = 8usize;
     let mut i = 1;
     // --config applies first so --set/--model can override it.
     let mut sets: Vec<String> = Vec::new();
@@ -82,6 +87,9 @@ fn parse_args() -> Result<Args> {
             "--prefill-chunk" => sets.push(format!("serve.prefill_chunk={}", take(&mut i)?)),
             "--draft-k" => sets.push(format!("serve.draft_k={}", take(&mut i)?)),
             "--draft" => sets.push(format!("serve.draft={}", take(&mut i)?)),
+            "--model-dir" => sets.push(format!("serve.model_dir={}", take(&mut i)?)),
+            "--model-id" => sets.push(format!("serve.model={}", take(&mut i)?)),
+            "--centroids" => centroids = take(&mut i)?.parse()?,
             "--listen" => sets.push(format!("serve.listen={}", take(&mut i)?)),
             "--admin-listen" => sets.push(format!("serve.admin_listen={}", take(&mut i)?)),
             "--telemetry-dump" => telemetry_dump = Some(take(&mut i)?),
@@ -96,7 +104,7 @@ fn parse_args() -> Result<Args> {
     for kv in &sets {
         cfg.set_override(kv)?;
     }
-    Ok(Args { command, exp, engine, requests, turns, telemetry_dump, cfg })
+    Ok(Args { command, exp, engine, requests, turns, telemetry_dump, centroids, cfg })
 }
 
 const HELP: &str = "\
@@ -106,6 +114,7 @@ commands:
   compress   run the LCD pipeline, print the per-layer report
   eval       compare FP vs LCD quality
   serve      run the batched generation server on a synthetic request mix
+  pack       seed + pack a versioned .lcdw v2 model artifact into --model-dir
   repro      regenerate a paper experiment (--exp table1|table2|table3|fig2|fig6|fig7|fig8|all)
 flags:
   --config <file>  --set k=v  --model gpt|llama|bert  --steps N  --min-k K
@@ -133,6 +142,18 @@ flags:
                    serve.slo_availability), /slo burn-rate JSON,
                    /flight?worker=N chrome-trace dumps; requires
                    --listen. See docs/OPERATIONS.md)
+  --model-dir <dir> (serve: load every verified .lcdw v2 artifact in
+                   <dir> into the model registry and serve from it —
+                   engines rebuild from artifact weights (needs
+                   --engine cached|speculative); enables the admin
+                   /models + /swap endpoints and the wire-level model
+                   selector. pack: where the packed artifact goes)
+  --model-id name@version (serve: the registry key to serve initially,
+                   default = latest version of the first model name;
+                   pack: the key to pack — versions are immutable, so
+                   re-packing an existing key is refused)
+  --centroids N    (pack: centroids per layer, 2..=16 — the bit-width
+                   lever: a k-centroid artifact serves at log2(k) bits)
   --gemm-threads N (parallel LUT GEMM threads; output is bit-identical)
   --telemetry-dump <file> (serve: write the final metrics exposition —
                    phase latency histograms, TTFT, GEMM time — as JSON
@@ -156,6 +177,7 @@ fn main() -> Result<()> {
         "serve" => {
             cmd_serve(&args.cfg, &args.engine, args.requests, args.turns, args.telemetry_dump)
         }
+        "pack" => cmd_pack(&args.cfg, args.centroids),
         "repro" => {
             let exp = args.exp.context("repro needs --exp <id>")?;
             repro::run(&exp, &args.cfg)
@@ -241,6 +263,60 @@ fn cmd_eval(cfg: &LcdConfig) -> Result<()> {
     Ok(())
 }
 
+/// `lcd pack`: draw the seeded dense weights for the configured model
+/// shape and serialize them as a versioned `.lcdw` v2 artifact — the
+/// unit the model registry loads and the rolling hot-swap path serves.
+/// `--centroids` is the bit-width lever (`log2(k)` bits per weight);
+/// everything else (vocab/hidden/depth/seed) comes from the config, so
+/// `pack` + `serve --model-dir` reproduces `serve --engine cached`
+/// streams bit-for-bit.
+fn cmd_pack(cfg: &LcdConfig, centroids: usize) -> Result<()> {
+    use lcd::coordinator::{HostLutModel, HostLutSpec};
+    use lcd::model::{ModelKey, ModelRecipe};
+    if cfg.serve.model_dir.is_empty() {
+        bail!("pack needs --model-dir <dir> (where the packed artifact goes)");
+    }
+    if cfg.serve.model.is_empty() {
+        bail!("pack needs --model-id <name@version> (the registry key to publish)");
+    }
+    let key = ModelKey::parse(&cfg.serve.model)?;
+    if !(2..=16).contains(&centroids) {
+        bail!("--centroids must be in 2..=16 (got {centroids})");
+    }
+    let mut spec = HostLutSpec::from_cfg(cfg);
+    spec.centroids = centroids;
+    let recipe = ModelRecipe {
+        vocab: spec.vocab,
+        hidden: spec.hidden,
+        depth: spec.depth,
+        centroids: spec.centroids,
+        seed: spec.seed,
+    };
+    let weights = HostLutModel::seeded_weights(spec.clone())?;
+    let tensors = weights.to_tensors(&spec)?;
+    std::fs::create_dir_all(&cfg.serve.model_dir)
+        .with_context(|| format!("creating model dir {}", cfg.serve.model_dir))?;
+    let path = format!("{}/{}@{}.lcdw", cfg.serve.model_dir, key.name(), key.version());
+    if std::path::Path::new(&path).exists() {
+        bail!("refusing to overwrite {path}: published versions are immutable — bump the version");
+    }
+    let manifest = lcd::model::write_lcdw_v2(
+        &path,
+        key.name(),
+        key.version(),
+        &recipe.to_json(),
+        "lcd pack",
+        tensors.iter().map(|(n, t)| (n.as_str(), t)),
+    )?;
+    let n_params: usize = tensors.iter().map(|(_, t)| t.data().len()).sum();
+    println!(
+        "packed {key}: {} tensors, {n_params} params, {centroids} centroids ({:.2} bits/weight) -> {path}",
+        manifest.tensors.len(),
+        (centroids as f64).log2()
+    );
+    Ok(())
+}
+
 fn cmd_serve(
     cfg: &LcdConfig,
     engine_kind: &str,
@@ -275,16 +351,76 @@ fn cmd_serve(
     }
     let registry = (!cfg.serve.admin_listen.is_empty())
         .then(|| Arc::new(lcd::coordinator::MetricsRegistry::new(cfg.serve.workers)));
-    let handle = server::start_pool_obs(
-        cfg.serve.workers,
-        cfg.serve.max_batch,
-        cfg.serve.queue_cap,
-        sched,
-        cfg.serve.session_options(),
-        cfg.serve.telemetry_config(),
-        registry.clone(),
-        move |_worker| lcd::repro::shared::build_step_engine(&cfg2, &engine_kind2),
-    );
+    // `--model-dir`: serve from the model registry. Every `.lcdw` v2
+    // artifact in the directory is checksum-verified up front (a
+    // tampered artifact fails the whole load — nothing serves), workers
+    // rebuild engines from artifact weights, and the pool becomes
+    // rolling-hot-swappable via the admin `/swap` endpoint and
+    // model-pinnable via the wire-level selector extension.
+    let model_registry = if cfg.serve.model_dir.is_empty() {
+        None
+    } else {
+        if !matches!(engine_kind, "cached" | "speculative") {
+            bail!(
+                "--model-dir serving rebuilds engines from artifact weights and needs \
+                 --engine cached|speculative (got '{engine_kind}')"
+            );
+        }
+        let reg = lcd::model::ModelRegistry::load_dir(&cfg.serve.model_dir)?;
+        if reg.is_empty() {
+            bail!(
+                "model dir '{}' holds no .lcdw artifacts (publish one with `lcd pack`)",
+                cfg.serve.model_dir
+            );
+        }
+        Some(Arc::new(reg))
+    };
+    let handle = if let Some(models) = &model_registry {
+        let initial = if cfg.serve.model.is_empty() {
+            models.default_key().expect("registry emptiness was checked above")
+        } else {
+            let key = lcd::model::ModelKey::parse(&cfg.serve.model)?;
+            if !models.contains(&key) {
+                bail!(
+                    "serve.model {key} is not in '{}' (available: {})",
+                    cfg.serve.model_dir,
+                    models
+                        .keys()
+                        .iter()
+                        .map(|k| k.to_string())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+            key
+        };
+        println!("model registry: {} artifact(s), serving {initial}", models.len());
+        let models2 = Arc::clone(models);
+        server::start_pool_models(
+            cfg.serve.workers,
+            cfg.serve.max_batch,
+            cfg.serve.queue_cap,
+            sched,
+            cfg.serve.session_options(),
+            cfg.serve.telemetry_config(),
+            registry.clone(),
+            initial,
+            move |_worker, key| {
+                lcd::repro::shared::build_registry_engine(&cfg2, &engine_kind2, &models2, key)
+            },
+        )
+    } else {
+        server::start_pool_obs(
+            cfg.serve.workers,
+            cfg.serve.max_batch,
+            cfg.serve.queue_cap,
+            sched,
+            cfg.serve.session_options(),
+            cfg.serve.telemetry_config(),
+            registry.clone(),
+            move |_worker| lcd::repro::shared::build_step_engine(&cfg2, &engine_kind2),
+        )
+    };
 
     // `--listen`: hand the pool to the network front door and serve
     // until killed. The synthetic request mix below is skipped — real
@@ -306,15 +442,24 @@ fn cmd_serve(
                 slo: Some(Arc::clone(&slo)),
                 recorder: Some(Arc::clone(&recorder)),
             };
+            // The swap controller must be taken before the front door
+            // consumes the pool handle; it only exists for
+            // registry-backed pools.
+            let swap = model_registry.as_ref().map(|_| handle.swap_controller());
             let door = lcd::coordinator::FrontDoor::start_obs(handle, fd_cfg, obs)?;
             let state = AdminState {
                 registry,
                 slo: Some(slo),
                 frontdoor: Some(door.stats_handle()),
                 frontdoor_recorder: Some(recorder),
+                models: model_registry.clone(),
+                swap,
             };
             let admin = AdminServer::start(&cfg.serve.admin_listen, state)?;
             println!("admin plane listening on {}", admin.addr());
+            if model_registry.is_some() {
+                println!("model plane: GET /models (catalog), GET /swap?model=name@version (rolling hot-swap)");
+            }
             (door, Some(admin))
         } else {
             (lcd::coordinator::FrontDoor::start(handle, fd_cfg)?, None)

@@ -1,96 +1,555 @@
-//! `.lcdw` — tiny binary checkpoint format shared with build-time python.
+//! `.lcdw` checkpoint format: versioned, checksummed weight artifacts.
 //!
-//! Layout (little-endian):
+//! Two on-disk versions are readable:
+//!
+//! **v1** (legacy, still written by [`write_lcdw`] for plain weight dumps):
+//!
 //! ```text
-//! magic  b"LCDW"        4 bytes
-//! version u32           (currently 1)
-//! n_tensors u32
+//! magic   b"LCDW"        4 bytes
+//! version u32 LE = 1
+//! count   u32 LE         number of tensors
 //! per tensor:
-//!   name_len u32, name bytes (utf-8)
-//!   ndim u32, dims u32 × ndim
-//!   data f32 × prod(dims)
+//!   name_len u32 LE, name bytes (utf-8)
+//!   ndim     u32 LE, dims u32 LE × ndim
+//!   data     f32 LE × prod(dims)
 //! ```
+//!
+//! **v2** (artifact format written by [`write_lcdw_v2`]): a JSON manifest
+//! followed by the raw payload. The manifest is self-describing — model
+//! name/version, the quantization recipe plus its hash, provenance, and a
+//! per-tensor sha256 over the tensor's little-endian payload bytes. Tensor
+//! names and shapes live only in the manifest; the payload is the
+//! concatenation of each tensor's f32 LE data in manifest order.
+//!
+//! ```text
+//! magic        b"LCDW"   4 bytes
+//! version      u32 LE = 2
+//! manifest_len u32 LE
+//! manifest     JSON (utf-8), manifest_len bytes
+//! payload      f32 LE data for each manifest tensor, in order
+//! ```
+//!
+//! Both parsers are hostile-input hardened (fuzzed by
+//! `lcd::fuzz::lcdw_never_panics`): every length and product is checked
+//! before use, pre-allocations are capped by the bytes actually remaining,
+//! and all failures surface as a typed [`LcdwError`] — never a panic, and
+//! never a partially validated result (a v2 checksum mismatch refuses the
+//! whole artifact).
 
 use crate::tensor::Tensor;
-use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use crate::util::json::Json;
+use crate::util::sha256::{to_hex, Sha256};
+use anyhow::{Context, Result};
+use std::fmt;
+use std::io::{BufWriter, Write};
 
 const MAGIC: &[u8; 4] = b"LCDW";
-const VERSION: u32 = 1;
+/// Legacy manifest-less version.
+pub const LCDW_V1: u32 = 1;
+/// Manifested artifact version.
+pub const LCDW_V2: u32 = 2;
+/// Manifest `schema` field value for v2 artifacts.
+pub const MANIFEST_SCHEMA: u32 = 2;
+/// Model names are bounded so they can ride wire-protocol extensions
+/// (one length byte) and metric labels without escaping concerns.
+pub const MAX_MODEL_NAME: usize = 64;
 
-/// Write tensors to a `.lcdw` file.
-pub fn write_lcdw<'a>(
-    path: &str,
-    tensors: impl Iterator<Item = (&'a str, &'a Tensor)>,
-) -> Result<()> {
-    let items: Vec<(&str, &Tensor)> = tensors.collect();
-    let mut out = Vec::new();
-    out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
-    out.extend_from_slice(&(items.len() as u32).to_le_bytes());
-    for (name, t) in items {
-        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
-        out.extend_from_slice(name.as_bytes());
-        out.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
-        for &d in t.shape() {
-            out.extend_from_slice(&(d as u32).to_le_bytes());
-        }
-        for &v in t.data() {
-            out.extend_from_slice(&v.to_le_bytes());
+/// Typed failure for `.lcdw` parsing and verification. Converts into
+/// `anyhow::Error` via `std::error::Error`, so path-level helpers can
+/// still `?` it while callers that care (the registry, the fuzz driver)
+/// can match on the variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LcdwError {
+    /// Underlying I/O failure (message-only so the error stays `Clone`).
+    Io(String),
+    /// File does not start with `b"LCDW"`.
+    BadMagic,
+    /// Version field is neither 1 nor 2.
+    UnsupportedVersion(u32),
+    /// A length field asked for more bytes than remain in the file.
+    Truncated { offset: usize, needed: usize },
+    /// A size computation (shape product, byte count) overflowed.
+    Overflow { context: &'static str },
+    /// A name or manifest was not valid UTF-8.
+    BadUtf8 { context: &'static str },
+    /// Bytes remain after the last tensor — rejected to keep the
+    /// encoding canonical (encode ∘ decode is a fixed point).
+    TrailingBytes { extra: usize },
+    /// The v2 JSON manifest is malformed or fails validation.
+    BadManifest(String),
+    /// A tensor record is internally inconsistent (shape/data mismatch).
+    BadTensor(String),
+    /// A v2 tensor's payload hash does not match its manifest entry.
+    /// The artifact is refused whole; no tensors are returned.
+    ChecksumMismatch { tensor: String, expected: String, actual: String },
+}
+
+impl fmt::Display for LcdwError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LcdwError::Io(msg) => write!(f, "lcdw io error: {msg}"),
+            LcdwError::BadMagic => write!(f, "not an lcdw file (bad magic)"),
+            LcdwError::UnsupportedVersion(v) => write!(f, "unsupported lcdw version {v}"),
+            LcdwError::Truncated { offset, needed } => {
+                write!(f, "truncated lcdw file: need {needed} bytes at offset {offset}")
+            }
+            LcdwError::Overflow { context } => write!(f, "lcdw size overflow in {context}"),
+            LcdwError::BadUtf8 { context } => write!(f, "invalid utf-8 in lcdw {context}"),
+            LcdwError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes in lcdw file")
+            }
+            LcdwError::BadManifest(msg) => write!(f, "bad lcdw manifest: {msg}"),
+            LcdwError::BadTensor(msg) => write!(f, "bad lcdw tensor: {msg}"),
+            LcdwError::ChecksumMismatch { tensor, expected, actual } => write!(
+                f,
+                "checksum mismatch for tensor '{tensor}': manifest {expected}, payload {actual}"
+            ),
         }
     }
-    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
-    f.write_all(&out)?;
+}
+
+impl std::error::Error for LcdwError {}
+
+impl From<std::io::Error> for LcdwError {
+    fn from(e: std::io::Error) -> LcdwError {
+        LcdwError::Io(e.to_string())
+    }
+}
+
+/// Returns true iff `name` is a legal model/artifact name: 1..=64 bytes
+/// of `[A-Za-z0-9._-]`. The bound keeps names safe for wire frames
+/// (length fits one byte), metric labels and filenames.
+pub fn valid_model_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= MAX_MODEL_NAME
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-')
+}
+
+/// One tensor's manifest row: name, shape, and the sha256 (lowercase
+/// hex) of its little-endian f32 payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub sha256: String,
+}
+
+/// Parsed v2 artifact manifest. `recipe` is an opaque JSON object — the
+/// registry layer interprets it (see `model::registry::ModelRecipe`);
+/// this layer only pins its integrity via `recipe_sha256`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    /// Manifest schema version; always [`MANIFEST_SCHEMA`] today.
+    pub schema: u32,
+    /// Model name (validated by [`valid_model_name`]).
+    pub name: String,
+    /// Monotonic artifact version for this name.
+    pub version: u32,
+    /// Quantization recipe (opaque JSON object).
+    pub recipe: Json,
+    /// sha256 of the recipe's compact JSON serialization.
+    pub recipe_sha256: String,
+    /// Free-text provenance (tool + config that produced the artifact).
+    pub created_by: String,
+    pub tensors: Vec<TensorEntry>,
+}
+
+fn is_hex_digest(s: &str) -> bool {
+    s.len() == 64 && s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+impl ArtifactManifest {
+    /// `"name@version"`, the registry's lookup key form.
+    pub fn key_string(&self) -> String {
+        format!("{}@{}", self.name, self.version)
+    }
+
+    /// Validate and build from parsed JSON. Every constraint violated
+    /// here is a [`LcdwError::BadManifest`] naming the field.
+    pub fn from_json(v: &Json) -> Result<ArtifactManifest, LcdwError> {
+        let bad = LcdwError::BadManifest;
+        let field = |key: &str| -> Result<&Json, LcdwError> {
+            v.get(key).ok_or_else(|| bad(format!("missing field '{key}'")))
+        };
+        let schema = field("schema")?.as_usize().map_err(|e| bad(format!("schema: {e}")))?;
+        if schema != MANIFEST_SCHEMA as usize {
+            return Err(bad(format!("unsupported manifest schema {schema}")));
+        }
+        let name = field("name")?.as_str().map_err(|e| bad(format!("name: {e}")))?.to_string();
+        if !valid_model_name(&name) {
+            return Err(bad(format!(
+                "invalid model name '{name}' (1..={MAX_MODEL_NAME} bytes of [A-Za-z0-9._-])"
+            )));
+        }
+        let version = field("version")?.as_usize().map_err(|e| bad(format!("version: {e}")))?;
+        let version =
+            u32::try_from(version).map_err(|_| bad(format!("version {version} exceeds u32")))?;
+        let recipe = field("recipe")?.clone();
+        if recipe.as_obj().is_err() {
+            return Err(bad("recipe must be a JSON object".to_string()));
+        }
+        let recipe_sha256 =
+            field("recipe_sha256")?.as_str().map_err(|e| bad(format!("recipe_sha256: {e}")))?.to_string();
+        if !is_hex_digest(&recipe_sha256) {
+            return Err(bad("recipe_sha256 must be 64 lowercase hex chars".to_string()));
+        }
+        let actual = crate::util::sha256_hex(recipe.to_string().as_bytes());
+        if actual != recipe_sha256 {
+            return Err(bad(format!(
+                "recipe_sha256 mismatch: manifest {recipe_sha256}, recipe hashes to {actual}"
+            )));
+        }
+        let created_by = match v.get("created_by") {
+            Some(j) => j.as_str().map_err(|e| bad(format!("created_by: {e}")))?.to_string(),
+            None => String::new(),
+        };
+        let tensor_list = field("tensors")?.as_arr().map_err(|e| bad(format!("tensors: {e}")))?;
+        let mut tensors: Vec<TensorEntry> = Vec::with_capacity(tensor_list.len());
+        for (i, t) in tensor_list.iter().enumerate() {
+            let tname = t
+                .get("name")
+                .ok_or_else(|| bad(format!("tensors[{i}]: missing field 'name'")))?
+                .as_str()
+                .map_err(|e| bad(format!("tensors[{i}].name: {e}")))?
+                .to_string();
+            if tname.is_empty() {
+                return Err(bad(format!("tensors[{i}]: empty name")));
+            }
+            let shape = t
+                .get("shape")
+                .ok_or_else(|| bad(format!("tensor '{tname}': missing field 'shape'")))?
+                .as_usize_vec()
+                .map_err(|e| bad(format!("tensor '{tname}' shape: {e}")))?;
+            checked_count(&shape)?;
+            let sha = t
+                .get("sha256")
+                .ok_or_else(|| bad(format!("tensor '{tname}': missing field 'sha256'")))?
+                .as_str()
+                .map_err(|e| bad(format!("tensor '{tname}' sha256: {e}")))?
+                .to_string();
+            if !is_hex_digest(&sha) {
+                return Err(bad(format!("tensor '{tname}' sha256 must be 64 lowercase hex chars")));
+            }
+            if tensors.iter().any(|e| e.name == tname) {
+                return Err(bad(format!("duplicate tensor name '{tname}'")));
+            }
+            tensors.push(TensorEntry { name: tname, shape, sha256: sha });
+        }
+        Ok(ArtifactManifest {
+            schema: MANIFEST_SCHEMA,
+            name,
+            version,
+            recipe,
+            recipe_sha256,
+            created_by,
+            tensors,
+        })
+    }
+
+    /// Serialize back to the JSON document form `from_json` accepts.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::int(self.schema as usize)),
+            ("name", Json::str(self.name.clone())),
+            ("version", Json::int(self.version as usize)),
+            ("recipe", self.recipe.clone()),
+            ("recipe_sha256", Json::str(self.recipe_sha256.clone())),
+            ("created_by", Json::str(self.created_by.clone())),
+            (
+                "tensors",
+                Json::arr(
+                    self.tensors
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("name", Json::str(t.name.clone())),
+                                ("shape", Json::arr(t.shape.iter().map(|&d| Json::int(d)).collect())),
+                                ("sha256", Json::str(t.sha256.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse + validate a manifest from JSON text.
+    pub fn parse(text: &str) -> Result<ArtifactManifest, LcdwError> {
+        let v = Json::parse(text).map_err(|e| LcdwError::BadManifest(e.to_string()))?;
+        ArtifactManifest::from_json(&v)
+    }
+}
+
+/// A fully parsed `.lcdw` file: which on-disk version it was, the v2
+/// manifest when present, and the (verified) tensors.
+#[derive(Debug, Clone)]
+pub struct LcdwFile {
+    pub version: u32,
+    /// Present iff `version == 2`.
+    pub manifest: Option<ArtifactManifest>,
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+/// Element count of a shape with overflow checking, also rejecting
+/// counts whose f32 byte size would overflow.
+fn checked_count(shape: &[usize]) -> Result<usize, LcdwError> {
+    let mut count: usize = 1;
+    for &d in shape {
+        count = count.checked_mul(d).ok_or(LcdwError::Overflow { context: "shape product" })?;
+    }
+    count.checked_mul(4).ok_or(LcdwError::Overflow { context: "tensor byte size" })?;
+    Ok(count)
+}
+
+/// Bounds-checked cursor over the raw file bytes. `pos <= bytes.len()`
+/// is an invariant, so `remaining()` never underflows.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], LcdwError> {
+        if n > self.remaining() {
+            return Err(LcdwError::Truncated { offset: self.pos, needed: n });
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, LcdwError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes(b.try_into().expect("take(4) yields 4 bytes")))
+    }
+}
+
+fn decode_f32s(raw: &[u8]) -> Vec<f32> {
+    raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4)"))).collect()
+}
+
+/// Parse a `.lcdw` file image from memory. This is the hardened core
+/// shared by [`read_lcdw`]/[`read_lcdw_file`] and the fuzz driver: it
+/// must return `Err`, never panic, on arbitrary input, and for v2 it
+/// verifies every tensor checksum before returning anything.
+pub fn parse_lcdw(bytes: &[u8]) -> Result<LcdwFile, LcdwError> {
+    let mut r = Reader { bytes, pos: 0 };
+    if r.take(4)? != MAGIC {
+        return Err(LcdwError::BadMagic);
+    }
+    let version = r.u32()?;
+    match version {
+        LCDW_V1 => parse_v1(r),
+        LCDW_V2 => parse_v2(r),
+        other => Err(LcdwError::UnsupportedVersion(other)),
+    }
+}
+
+fn parse_v1(mut r: Reader<'_>) -> Result<LcdwFile, LcdwError> {
+    let n = r.u32()? as usize;
+    // Each record needs at least name_len + ndim = 8 bytes, so a count
+    // that can't fit in the remaining bytes is refused before sizing
+    // the allocation it would otherwise demand.
+    if n > r.remaining() / 8 {
+        return Err(LcdwError::Truncated { offset: r.pos, needed: n.saturating_mul(8) });
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = r.u32()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .map_err(|_| LcdwError::BadUtf8 { context: "tensor name" })?
+            .to_string();
+        let ndim = r.u32()? as usize;
+        if ndim > r.remaining() / 4 {
+            return Err(LcdwError::Truncated { offset: r.pos, needed: ndim.saturating_mul(4) });
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let count = checked_count(&shape)?;
+        let raw = r.take(count * 4)?;
+        let t = Tensor::new(shape, decode_f32s(raw)).map_err(|e| LcdwError::BadTensor(e.to_string()))?;
+        out.push((name, t));
+    }
+    if r.remaining() != 0 {
+        return Err(LcdwError::TrailingBytes { extra: r.remaining() });
+    }
+    Ok(LcdwFile { version: LCDW_V1, manifest: None, tensors: out })
+}
+
+fn parse_v2(mut r: Reader<'_>) -> Result<LcdwFile, LcdwError> {
+    let manifest_len = r.u32()? as usize;
+    let manifest_text = std::str::from_utf8(r.take(manifest_len)?)
+        .map_err(|_| LcdwError::BadUtf8 { context: "manifest" })?;
+    let manifest = ArtifactManifest::parse(manifest_text)?;
+    let mut out = Vec::with_capacity(manifest.tensors.len().min(1 + r.remaining() / 4));
+    for entry in &manifest.tensors {
+        let count = checked_count(&entry.shape)?;
+        let raw = r.take(count * 4)?;
+        let actual = crate::util::sha256_hex(raw);
+        if actual != entry.sha256 {
+            return Err(LcdwError::ChecksumMismatch {
+                tensor: entry.name.clone(),
+                expected: entry.sha256.clone(),
+                actual,
+            });
+        }
+        let t = Tensor::new(entry.shape.clone(), decode_f32s(raw))
+            .map_err(|e| LcdwError::BadTensor(e.to_string()))?;
+        out.push((entry.name.clone(), t));
+    }
+    if r.remaining() != 0 {
+        return Err(LcdwError::TrailingBytes { extra: r.remaining() });
+    }
+    Ok(LcdwFile { version: LCDW_V2, manifest: Some(manifest), tensors: out })
+}
+
+/// Read a checkpoint's tensors from disk (v1 or v2 accepted; v2
+/// checksums verified). Kept for callers that only want weights —
+/// [`read_lcdw_file`] additionally returns the manifest.
+pub fn read_lcdw(path: &str) -> Result<Vec<(String, Tensor)>> {
+    Ok(read_lcdw_file(path)?.tensors)
+}
+
+/// Read and fully verify a `.lcdw` file, returning version + manifest +
+/// tensors.
+pub fn read_lcdw_file(path: &str) -> Result<LcdwFile> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading lcdw file {path}"))?;
+    parse_lcdw(&bytes).with_context(|| format!("parsing lcdw file {path}"))
+}
+
+/// Stream a tensor's data as little-endian bytes through `f`, one
+/// bounded chunk at a time, without materializing the whole payload.
+fn for_f32_chunks(data: &[f32], mut f: impl FnMut(&[u8]) -> std::io::Result<()>) -> std::io::Result<()> {
+    let mut buf = [0u8; 4096];
+    for chunk in data.chunks(buf.len() / 4) {
+        let mut n = 0;
+        for &x in chunk {
+            buf[n..n + 4].copy_from_slice(&x.to_le_bytes());
+            n += 4;
+        }
+        f(&buf[..n])?;
+    }
     Ok(())
 }
 
-/// Read all tensors from a `.lcdw` file.
-pub fn read_lcdw(path: &str) -> Result<Vec<(String, Tensor)>> {
-    let mut bytes = Vec::new();
-    std::fs::File::open(path)
-        .with_context(|| format!("opening {path}"))?
-        .read_to_end(&mut bytes)?;
-    let mut pos = 0usize;
-    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-        if *pos + n > bytes.len() {
-            bail!("truncated lcdw file at byte {}", *pos);
-        }
-        let s = &bytes[*pos..*pos + n];
-        *pos += n;
-        Ok(s)
-    };
-    let u32_at = |pos: &mut usize| -> Result<u32> {
-        let b = take(pos, 4)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-    };
+/// sha256 (lowercase hex) of a tensor's little-endian payload bytes —
+/// the digest stored in v2 manifests.
+pub fn tensor_sha256(t: &Tensor) -> String {
+    let mut h = Sha256::new();
+    for_f32_chunks(t.data(), |b| {
+        h.update(b);
+        Ok(())
+    })
+    .expect("hashing callback is infallible");
+    to_hex(&h.finish())
+}
 
-    if take(&mut pos, 4)? != MAGIC {
-        bail!("bad magic (not an lcdw file)");
-    }
-    let version = u32_at(&mut pos)?;
-    if version != VERSION {
-        bail!("unsupported lcdw version {version}");
-    }
-    let n = u32_at(&mut pos)? as usize;
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        let name_len = u32_at(&mut pos)? as usize;
-        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
-        let ndim = u32_at(&mut pos)? as usize;
-        let mut shape = Vec::with_capacity(ndim);
-        for _ in 0..ndim {
-            shape.push(u32_at(&mut pos)? as usize);
+fn write_v1_into<W: Write>(w: &mut W, items: &[(&str, &Tensor)]) -> std::io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&LCDW_V1.to_le_bytes())?;
+    w.write_all(&(items.len() as u32).to_le_bytes())?;
+    for (name, t) in items {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u32).to_le_bytes())?;
         }
-        let count: usize = shape.iter().product();
-        let raw = take(&mut pos, count * 4)?;
-        let data: Vec<f32> = raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        out.push((name, Tensor::new(shape, data)?));
+        for_f32_chunks(t.data(), |b| w.write_all(b))?;
     }
-    if pos != bytes.len() {
-        bail!("trailing bytes in lcdw file");
+    Ok(())
+}
+
+fn write_v2_into<W: Write>(
+    w: &mut W,
+    manifest: &ArtifactManifest,
+    tensors: &[(&str, &Tensor)],
+) -> std::io::Result<()> {
+    let text = manifest.to_json().to_string();
+    w.write_all(MAGIC)?;
+    w.write_all(&LCDW_V2.to_le_bytes())?;
+    w.write_all(&(text.len() as u32).to_le_bytes())?;
+    w.write_all(text.as_bytes())?;
+    for (_, t) in tensors {
+        for_f32_chunks(t.data(), |b| w.write_all(b))?;
+    }
+    Ok(())
+}
+
+/// Write a legacy v1 checkpoint, streaming each tensor through a
+/// `BufWriter` (peak memory stays one 4 KiB chunk above the weights
+/// themselves, not a second whole-checkpoint buffer).
+pub fn write_lcdw<'a>(path: &str, tensors: impl Iterator<Item = (&'a str, &'a Tensor)>) -> Result<()> {
+    let items: Vec<(&str, &Tensor)> = tensors.collect();
+    let f = std::fs::File::create(path).with_context(|| format!("creating lcdw file {path}"))?;
+    let mut w = BufWriter::new(f);
+    write_v1_into(&mut w, &items).with_context(|| format!("writing lcdw file {path}"))?;
+    w.flush().with_context(|| format!("flushing lcdw file {path}"))?;
+    Ok(())
+}
+
+/// Write a v2 artifact: computes per-tensor checksums and the recipe
+/// hash, builds the manifest, and streams manifest + payload through a
+/// `BufWriter`. Returns the manifest that was written.
+///
+/// `recipe` must be a JSON object describing the quantization recipe;
+/// `name` must satisfy [`valid_model_name`].
+pub fn write_lcdw_v2<'a>(
+    path: &str,
+    name: &str,
+    version: u32,
+    recipe: &Json,
+    created_by: &str,
+    tensors: impl Iterator<Item = (&'a str, &'a Tensor)>,
+) -> Result<ArtifactManifest> {
+    if !valid_model_name(name) {
+        anyhow::bail!("invalid model name '{name}' (1..={MAX_MODEL_NAME} bytes of [A-Za-z0-9._-])");
+    }
+    if recipe.as_obj().is_err() {
+        anyhow::bail!("artifact recipe must be a JSON object");
+    }
+    let items: Vec<(&str, &Tensor)> = tensors.collect();
+    let entries: Vec<TensorEntry> = items
+        .iter()
+        .map(|(n, t)| TensorEntry { name: n.to_string(), shape: t.shape().to_vec(), sha256: tensor_sha256(t) })
+        .collect();
+    let manifest = ArtifactManifest {
+        schema: MANIFEST_SCHEMA,
+        name: name.to_string(),
+        version,
+        recipe: recipe.clone(),
+        recipe_sha256: crate::util::sha256_hex(recipe.to_string().as_bytes()),
+        created_by: created_by.to_string(),
+        tensors: entries,
+    };
+    let f = std::fs::File::create(path).with_context(|| format!("creating lcdw file {path}"))?;
+    let mut w = BufWriter::new(f);
+    write_v2_into(&mut w, &manifest, &items).with_context(|| format!("writing lcdw file {path}"))?;
+    w.flush().with_context(|| format!("flushing lcdw file {path}"))?;
+    Ok(manifest)
+}
+
+/// Re-encode a parsed file to bytes (v1 or v2). Used by the fuzz
+/// driver's differential round-trip; the manifest re-serializes in
+/// canonical compact form, so `parse(encode(parse(x)))` must equal
+/// `parse(x)` semantically even when `x` used different JSON spacing.
+pub fn encode_lcdw(file: &LcdwFile) -> Result<Vec<u8>> {
+    let items: Vec<(&str, &Tensor)> = file.tensors.iter().map(|(n, t)| (n.as_str(), t)).collect();
+    let mut out = Vec::new();
+    match (&file.manifest, file.version) {
+        (Some(m), LCDW_V2) => write_v2_into(&mut out, m, &items)?,
+        (None, LCDW_V1) => write_v1_into(&mut out, &items)?,
+        _ => anyhow::bail!(
+            "inconsistent LcdwFile: version {} with manifest present = {}",
+            file.version,
+            file.manifest.is_some()
+        ),
     }
     Ok(out)
 }
@@ -100,31 +559,317 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
-    #[test]
-    fn roundtrip() {
+    fn tmp_path(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("lcd_lcdw_{}_{}.lcdw", tag, std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn sample_tensors() -> Vec<(String, Tensor)> {
         let mut rng = Rng::new(210);
-        let a = Tensor::randn(vec![3, 5], 1.0, &mut rng);
-        let b = Tensor::randn(vec![7], 0.5, &mut rng);
-        let path = std::env::temp_dir().join("lcdw_rt.lcdw");
-        let path = path.to_str().unwrap();
-        write_lcdw(path, vec![("alpha", &a), ("beta.gamma", &b)].into_iter()).unwrap();
-        let back = read_lcdw(path).unwrap();
-        assert_eq!(back.len(), 2);
-        assert_eq!(back[0].0, "alpha");
-        assert_eq!(&back[0].1, &a);
-        assert_eq!(back[1].0, "beta.gamma");
-        assert_eq!(&back[1].1, &b);
-        std::fs::remove_file(path).ok();
+        vec![
+            ("alpha".to_string(), Tensor::randn(vec![3, 5], 1.0, &mut rng)),
+            ("beta.gamma".to_string(), Tensor::randn(vec![2, 2, 2], 0.5, &mut rng)),
+        ]
+    }
+
+    fn sample_recipe() -> Json {
+        Json::obj(vec![
+            ("vocab", Json::int(20)),
+            ("hidden", Json::int(24)),
+            ("depth", Json::int(2)),
+            ("centroids", Json::int(6)),
+            ("seed", Json::int(11)),
+        ])
+    }
+
+    fn encode_v1(tensors: &[(String, Tensor)]) -> Vec<u8> {
+        let items: Vec<(&str, &Tensor)> = tensors.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        let mut out = Vec::new();
+        write_v1_into(&mut out, &items).unwrap();
+        out
+    }
+
+    fn encode_v2(tensors: &[(String, Tensor)]) -> Vec<u8> {
+        let items: Vec<(&str, &Tensor)> = tensors.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        let entries: Vec<TensorEntry> = items
+            .iter()
+            .map(|(n, t)| TensorEntry {
+                name: n.to_string(),
+                shape: t.shape().to_vec(),
+                sha256: tensor_sha256(t),
+            })
+            .collect();
+        let recipe = sample_recipe();
+        let manifest = ArtifactManifest {
+            schema: MANIFEST_SCHEMA,
+            name: "toy".to_string(),
+            version: 1,
+            recipe_sha256: crate::util::sha256_hex(recipe.to_string().as_bytes()),
+            recipe,
+            created_by: "unit-test".to_string(),
+            tensors: entries,
+        };
+        let mut out = Vec::new();
+        write_v2_into(&mut out, &manifest, &items).unwrap();
+        out
+    }
+
+    fn manifest_len_of(bytes: &[u8]) -> usize {
+        u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize
+    }
+
+    fn assert_same_tensors(a: &[(String, Tensor)], b: &[(String, Tensor)]) {
+        assert_eq!(a.len(), b.len());
+        for ((an, at), (bn, bt)) in a.iter().zip(b) {
+            assert_eq!(an, bn);
+            assert_eq!(at.shape(), bt.shape());
+            assert_eq!(at.data(), bt.data());
+        }
+    }
+
+    #[test]
+    fn roundtrip_v1() {
+        let tensors = sample_tensors();
+        let path = tmp_path("rt_v1");
+        write_lcdw(&path, tensors.iter().map(|(n, t)| (n.as_str(), t))).unwrap();
+        let back = read_lcdw(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_same_tensors(&tensors, &back);
+    }
+
+    #[test]
+    fn roundtrip_v2_with_manifest() {
+        let tensors = sample_tensors();
+        let path = tmp_path("rt_v2");
+        let recipe = sample_recipe();
+        let written = write_lcdw_v2(
+            &path,
+            "toy-2bit",
+            3,
+            &recipe,
+            "lcd pack (unit test)",
+            tensors.iter().map(|(n, t)| (n.as_str(), t)),
+        )
+        .unwrap();
+        let file = read_lcdw_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(file.version, LCDW_V2);
+        let m = file.manifest.unwrap();
+        assert_eq!(m, written);
+        assert_eq!(m.key_string(), "toy-2bit@3");
+        assert_eq!(m.recipe.get("centroids").unwrap().as_usize().unwrap(), 6);
+        assert_same_tensors(&tensors, &file.tensors);
+    }
+
+    /// v1 files written by the old writer stay readable, and v2 files
+    /// read through the legacy `read_lcdw` entry drop only the
+    /// manifest, not the tensors (cross-version contract).
+    #[test]
+    fn cross_version_reads() {
+        let tensors = sample_tensors();
+        let v1 = encode_v1(&tensors);
+        let v2 = encode_v2(&tensors);
+        let f1 = parse_lcdw(&v1).unwrap();
+        assert_eq!(f1.version, LCDW_V1);
+        assert!(f1.manifest.is_none());
+        let f2 = parse_lcdw(&v2).unwrap();
+        assert_eq!(f2.version, LCDW_V2);
+        assert!(f2.manifest.is_some());
+        assert_same_tensors(&f1.tensors, &f2.tensors);
+
+        // Path-level cross-version: both versions through read_lcdw.
+        let p1 = tmp_path("xv_v1");
+        let p2 = tmp_path("xv_v2");
+        std::fs::write(&p1, &v1).unwrap();
+        std::fs::write(&p2, &v2).unwrap();
+        let t1 = read_lcdw(&p1).unwrap();
+        let t2 = read_lcdw(&p2).unwrap();
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+        assert_same_tensors(&t1, &t2);
     }
 
     #[test]
     fn rejects_corruption() {
-        let path = std::env::temp_dir().join("lcdw_bad.lcdw");
-        let path = path.to_str().unwrap();
-        std::fs::write(path, b"NOPE").unwrap();
-        assert!(read_lcdw(path).is_err());
-        std::fs::write(path, b"LCDW\x01\x00\x00\x00\x05\x00\x00\x00").unwrap();
-        assert!(read_lcdw(path).is_err());
-        std::fs::remove_file(path).ok();
+        assert_eq!(parse_lcdw(b"NOPE0000").unwrap_err(), LcdwError::BadMagic);
+        assert!(matches!(parse_lcdw(b"LCDW").unwrap_err(), LcdwError::Truncated { .. }));
+        let mut bad_ver = encode_v1(&sample_tensors());
+        bad_ver[4..8].copy_from_slice(&9u32.to_le_bytes());
+        assert_eq!(parse_lcdw(&bad_ver).unwrap_err(), LcdwError::UnsupportedVersion(9));
+    }
+
+    /// Hostile header fields must fail typed, with no huge allocation
+    /// and no arithmetic panic (the ISSUE's overflow bugfix).
+    #[test]
+    fn hostile_headers_fail_typed() {
+        let mut base = Vec::new();
+        base.extend_from_slice(b"LCDW");
+        base.extend_from_slice(&LCDW_V1.to_le_bytes());
+
+        // Huge tensor count from a tiny file: refused before allocating.
+        let mut huge_count = base.clone();
+        huge_count.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(parse_lcdw(&huge_count).unwrap_err(), LcdwError::Truncated { .. }));
+
+        // Huge ndim from a tiny file.
+        let mut huge_ndim = base.clone();
+        huge_ndim.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        huge_ndim.extend_from_slice(&1u32.to_le_bytes()); // name_len 1
+        huge_ndim.push(b'a');
+        huge_ndim.extend_from_slice(&u32::MAX.to_le_bytes()); // ndim
+        assert!(matches!(parse_lcdw(&huge_ndim).unwrap_err(), LcdwError::Truncated { .. }));
+
+        // Shape product overflows usize: typed Overflow, no wrap.
+        let mut overflow = base.clone();
+        overflow.extend_from_slice(&1u32.to_le_bytes());
+        overflow.extend_from_slice(&1u32.to_le_bytes());
+        overflow.push(b'a');
+        overflow.extend_from_slice(&6u32.to_le_bytes()); // ndim = 6
+        for _ in 0..6 {
+            overflow.extend_from_slice(&0xFFFF_FFFFu32.to_le_bytes());
+        }
+        overflow.extend_from_slice(&[0u8; 64]); // dims themselves aren't what truncates
+        assert_eq!(
+            parse_lcdw(&overflow).unwrap_err(),
+            LcdwError::Overflow { context: "shape product" }
+        );
+
+        // count * 4 overflows even though the element count fits usize.
+        let mut byte_overflow = base.clone();
+        byte_overflow.extend_from_slice(&1u32.to_le_bytes());
+        byte_overflow.extend_from_slice(&1u32.to_le_bytes());
+        byte_overflow.push(b'a');
+        byte_overflow.extend_from_slice(&2u32.to_le_bytes()); // ndim = 2
+        byte_overflow.extend_from_slice(&0xFFFF_FFFFu32.to_le_bytes());
+        byte_overflow.extend_from_slice(&0xFFFF_FFFFu32.to_le_bytes());
+        byte_overflow.extend_from_slice(&[0u8; 64]);
+        assert_eq!(
+            parse_lcdw(&byte_overflow).unwrap_err(),
+            LcdwError::Overflow { context: "tensor byte size" }
+        );
+
+        // Non-UTF-8 tensor name.
+        let mut bad_name = base.clone();
+        bad_name.extend_from_slice(&1u32.to_le_bytes());
+        bad_name.extend_from_slice(&2u32.to_le_bytes());
+        bad_name.extend_from_slice(&[0xFF, 0xFE]);
+        assert_eq!(
+            parse_lcdw(&bad_name).unwrap_err(),
+            LcdwError::BadUtf8 { context: "tensor name" }
+        );
+
+        // Trailing bytes are refused (canonical encoding).
+        let mut trailing = encode_v1(&sample_tensors());
+        trailing.push(0);
+        assert_eq!(parse_lcdw(&trailing).unwrap_err(), LcdwError::TrailingBytes { extra: 1 });
+
+        // Truncated payload.
+        let whole = encode_v1(&sample_tensors());
+        let cut = &whole[..whole.len() - 3];
+        assert!(matches!(parse_lcdw(cut).unwrap_err(), LcdwError::Truncated { .. }));
+    }
+
+    #[test]
+    fn v2_rejects_tamper_and_bad_manifests() {
+        let tensors = sample_tensors();
+        let good = encode_v2(&tensors);
+
+        // Flip one payload byte: typed checksum refusal, nothing loaded.
+        let mut tampered = good.clone();
+        let last = tampered.len() - 1;
+        tampered[last] ^= 0x01;
+        match parse_lcdw(&tampered).unwrap_err() {
+            LcdwError::ChecksumMismatch { tensor, .. } => assert_eq!(tensor, "beta.gamma"),
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+
+        // manifest_len pointing past the end of the file.
+        let mut long_manifest = Vec::new();
+        long_manifest.extend_from_slice(b"LCDW");
+        long_manifest.extend_from_slice(&LCDW_V2.to_le_bytes());
+        long_manifest.extend_from_slice(&u32::MAX.to_le_bytes());
+        long_manifest.extend_from_slice(b"{}");
+        assert!(matches!(parse_lcdw(&long_manifest).unwrap_err(), LcdwError::Truncated { .. }));
+
+        // Manifest that is not JSON at all.
+        let mut not_json = Vec::new();
+        not_json.extend_from_slice(b"LCDW");
+        not_json.extend_from_slice(&LCDW_V2.to_le_bytes());
+        not_json.extend_from_slice(&4u32.to_le_bytes());
+        not_json.extend_from_slice(b"!!!!");
+        assert!(matches!(parse_lcdw(&not_json).unwrap_err(), LcdwError::BadManifest(_)));
+
+        // Recipe edited without rehashing: refused at manifest level.
+        let len = manifest_len_of(&good);
+        let mut m =
+            ArtifactManifest::parse(std::str::from_utf8(&good[12..12 + len]).unwrap()).unwrap();
+        m.recipe = Json::obj(vec![("centroids", Json::int(99))]);
+        assert!(matches!(
+            ArtifactManifest::from_json(&m.to_json()).unwrap_err(),
+            LcdwError::BadManifest(msg) if msg.contains("recipe_sha256 mismatch")
+        ));
+    }
+
+    #[test]
+    fn manifest_validation_rejections() {
+        let tensors = sample_tensors();
+        let good_bytes = encode_v2(&tensors);
+        let len = manifest_len_of(&good_bytes);
+        let good =
+            ArtifactManifest::parse(std::str::from_utf8(&good_bytes[12..12 + len]).unwrap()).unwrap();
+
+        // Missing field.
+        let mut missing = good.to_json();
+        if let Json::Obj(fields) = &mut missing {
+            fields.retain(|(k, _)| k != "tensors");
+        }
+        assert!(matches!(
+            ArtifactManifest::from_json(&missing).unwrap_err(),
+            LcdwError::BadManifest(msg) if msg.contains("missing field 'tensors'")
+        ));
+
+        // Bad schema.
+        let mut bad_schema = good.clone();
+        bad_schema.schema = 7;
+        assert!(ArtifactManifest::from_json(&bad_schema.to_json()).is_err());
+
+        // Invalid model name (too long / bad chars).
+        let mut bad_name = good.clone();
+        bad_name.name = "a".repeat(MAX_MODEL_NAME + 1);
+        assert!(ArtifactManifest::from_json(&bad_name.to_json()).is_err());
+        bad_name.name = "no spaces".to_string();
+        assert!(ArtifactManifest::from_json(&bad_name.to_json()).is_err());
+
+        // Duplicate tensor names.
+        let mut dup = good.clone();
+        let first = dup.tensors[0].clone();
+        dup.tensors.push(first);
+        assert!(matches!(
+            ArtifactManifest::from_json(&dup.to_json()).unwrap_err(),
+            LcdwError::BadManifest(msg) if msg.contains("duplicate tensor name")
+        ));
+
+        // Malformed digest string.
+        let mut bad_sha = good.clone();
+        bad_sha.tensors[0].sha256 = "zz".to_string();
+        assert!(ArtifactManifest::from_json(&bad_sha.to_json()).is_err());
+    }
+
+    /// encode ∘ decode is a fixed point for both versions (the property
+    /// the fuzz driver checks on arbitrary accepted inputs).
+    #[test]
+    fn encode_decode_fixed_point() {
+        for bytes in [encode_v1(&sample_tensors()), encode_v2(&sample_tensors())] {
+            let f1 = parse_lcdw(&bytes).unwrap();
+            let re = encode_lcdw(&f1).unwrap();
+            let f2 = parse_lcdw(&re).unwrap();
+            assert_eq!(f1.version, f2.version);
+            assert_eq!(f1.manifest, f2.manifest);
+            assert_same_tensors(&f1.tensors, &f2.tensors);
+            // Second encode is byte-stable.
+            assert_eq!(re, encode_lcdw(&f2).unwrap());
+        }
     }
 }

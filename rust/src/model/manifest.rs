@@ -234,4 +234,45 @@ mod tests {
         assert!(m.model("nope").is_err());
         assert!(m.artifact("nope").is_err());
     }
+
+    #[test]
+    fn rejects_unsupported_dtype_naming_it() {
+        let doc = Json::parse(&SAMPLE.replace("\"i32\"", "\"f16\"")).unwrap();
+        let err = Manifest::from_json("x", &doc).unwrap_err().to_string();
+        assert!(err.contains("unsupported dtype 'f16'"), "error must name the dtype: {err}");
+    }
+
+    /// Every malformed-field class is refused with `Err`, never a panic
+    /// and never a silently defaulted spec: hostile shapes (fractional,
+    /// negative), missing per-param and per-artifact fields, and
+    /// wrong-typed `linear` markers.
+    #[test]
+    fn rejects_malformed_params_shapes_and_artifacts() {
+        let cases: &[&str] = &[
+            // fractional shape entry
+            r#"{"models":{"m":{"kind":"gpt","config":{"batch":1,"seq":2,"vocab":3,"d_model":4},
+                "params":[{"name":"w","shape":[2.5],"init_std":0.1}]}},"artifacts":{}}"#,
+            // negative shape entry
+            r#"{"models":{"m":{"kind":"gpt","config":{"batch":1,"seq":2,"vocab":3,"d_model":4},
+                "params":[{"name":"w","shape":[-3],"init_std":0.1}]}},"artifacts":{}}"#,
+            // param missing init_std
+            r#"{"models":{"m":{"kind":"gpt","config":{"batch":1,"seq":2,"vocab":3,"d_model":4},
+                "params":[{"name":"w","shape":[3]}]}},"artifacts":{}}"#,
+            // config missing d_model
+            r#"{"models":{"m":{"kind":"gpt","config":{"batch":1,"seq":2,"vocab":3},
+                "params":[]}},"artifacts":{}}"#,
+            // linear marker must be a calibration-output index
+            r#"{"models":{"m":{"kind":"gpt","config":{"batch":1,"seq":2,"vocab":3,"d_model":4},
+                "params":[{"name":"w","shape":[3],"init_std":0.1,"linear":true}]}},"artifacts":{}}"#,
+            // artifact input missing dtype
+            r#"{"models":{},"artifacts":{"a":{"file":"a.hlo",
+                "inputs":[{"name":"x","shape":[1]}],"outputs":[]}}}"#,
+            // artifact missing file
+            r#"{"models":{},"artifacts":{"a":{"inputs":[],"outputs":[]}}}"#,
+        ];
+        for hostile in cases {
+            let doc = Json::parse(hostile).expect("test documents are well-formed JSON");
+            assert!(Manifest::from_json("x", &doc).is_err(), "must refuse: {hostile}");
+        }
+    }
 }

@@ -10,9 +10,14 @@
 
 pub mod lcdw;
 pub mod manifest;
+pub mod registry;
 
-pub use lcdw::{read_lcdw, write_lcdw};
+pub use lcdw::{
+    parse_lcdw, read_lcdw, read_lcdw_file, valid_model_name, write_lcdw, write_lcdw_v2,
+    ArtifactManifest, LcdwError, LcdwFile, TensorEntry,
+};
 pub use manifest::{ArtifactSpec, Manifest, ModelSpec, ParamSpec, TensorSpec};
+pub use registry::{ModelArtifact, ModelKey, ModelRecipe, ModelRegistry, RegistryError};
 
 use crate::tensor::Tensor;
 use crate::util::Rng;

@@ -1,0 +1,430 @@
+//! `ModelRegistry` — named + versioned model artifacts for multi-model
+//! serving.
+//!
+//! The registry is the trust boundary between `.lcdw` files on disk and
+//! everything that serves weights: it loads v2 artifacts (see
+//! [`super::lcdw`]), verifies every tensor checksum and the recipe hash
+//! **before** a model becomes visible, and exposes verified models under
+//! a [`ModelKey`] (`name@version`). A failed artifact never partially
+//! loads — [`RegistryError`] is typed so callers (CLI, admin plane, the
+//! rolling-swap controller) can refuse with a precise reason and leave
+//! the running pool untouched.
+//!
+//! The registry itself is immutable once built and shared as
+//! `Arc<ModelRegistry>`; hot-swap changes which registry entry a worker
+//! serves, not the registry.
+
+use super::lcdw::{parse_lcdw, valid_model_name, ArtifactManifest, LcdwError, LCDW_V2, MAX_MODEL_NAME};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+/// Identity of one artifact: a validated name plus a version number.
+/// Renders and parses as `"name@version"` — the form used by the CLI
+/// (`--model-id`), the admin plane (`/swap?model=`), metric labels and
+/// the wire-protocol model-selector extension.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelKey {
+    name: String,
+    version: u32,
+}
+
+impl ModelKey {
+    pub fn new(name: &str, version: u32) -> Result<ModelKey, RegistryError> {
+        if !valid_model_name(name) {
+            return Err(RegistryError::BadKey(format!(
+                "invalid model name '{name}' (1..={MAX_MODEL_NAME} bytes of [A-Za-z0-9._-])"
+            )));
+        }
+        Ok(ModelKey { name: name.to_string(), version })
+    }
+
+    /// Parse `"name@version"`.
+    pub fn parse(s: &str) -> Result<ModelKey, RegistryError> {
+        let (name, ver) = s
+            .rsplit_once('@')
+            .ok_or_else(|| RegistryError::BadKey(format!("model key '{s}' is not name@version")))?;
+        let version: u32 = ver
+            .parse()
+            .map_err(|_| RegistryError::BadKey(format!("model key '{s}': bad version '{ver}'")))?;
+        ModelKey::new(name, version)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+}
+
+impl fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.name, self.version)
+    }
+}
+
+/// Typed registry failure. `Artifact` wraps the `.lcdw` layer's own
+/// typed error (checksum mismatch, truncation, …) so refusal reasons
+/// survive to the admin/CLI surface intact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RegistryError {
+    BadKey(String),
+    Io(String),
+    /// `.lcdw` parse/verify failure (includes `ChecksumMismatch`).
+    Artifact { path: String, error: LcdwError },
+    /// v1 files carry no manifest, hence no identity — not registrable.
+    NotAnArtifact { path: String, version: u32 },
+    /// Manifest recipe missing/ill-typed fields.
+    BadRecipe { key: String, reason: String },
+    /// Two artifacts claim the same `name@version`.
+    Duplicate { key: ModelKey, path: String },
+    /// Lookup for a key the registry does not hold.
+    Unknown(ModelKey),
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::BadKey(msg) => write!(f, "bad model key: {msg}"),
+            RegistryError::Io(msg) => write!(f, "registry io error: {msg}"),
+            RegistryError::Artifact { path, error } => {
+                write!(f, "artifact {path} refused: {error}")
+            }
+            RegistryError::NotAnArtifact { path, version } => {
+                write!(f, "{path} is lcdw v{version}, not a v{LCDW_V2} artifact (no manifest)")
+            }
+            RegistryError::BadRecipe { key, reason } => {
+                write!(f, "artifact {key} has an unusable recipe: {reason}")
+            }
+            RegistryError::Duplicate { key, path } => {
+                write!(f, "artifact {path} duplicates already-registered model {key}")
+            }
+            RegistryError::Unknown(key) => write!(f, "unknown model {key}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// The quantization recipe a serving engine needs to reconstruct the
+/// LUT stack from an artifact's tensors: model shape, centroid count
+/// (the bit-width lever — 4 centroids = 2-bit, 8 = 3-bit), and the
+/// clustering seed. Serving-only shape (batch, seq, thread counts)
+/// deliberately does NOT live here — it comes from the local config at
+/// engine-build time, so one artifact serves under any pool shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelRecipe {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub depth: usize,
+    pub centroids: usize,
+    pub seed: u64,
+}
+
+impl ModelRecipe {
+    /// The manifest `recipe` object form ([`ModelRecipe::from_json`]'s
+    /// inverse). Field order is fixed: the recipe hash covers this
+    /// serialization.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab", Json::int(self.vocab)),
+            ("hidden", Json::int(self.hidden)),
+            ("depth", Json::int(self.depth)),
+            ("centroids", Json::int(self.centroids)),
+            ("seed", Json::int(self.seed as usize)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelRecipe, String> {
+        let field = |key: &str| -> Result<usize, String> {
+            v.get(key)
+                .ok_or_else(|| format!("missing recipe field '{key}'"))?
+                .as_usize()
+                .map_err(|e| format!("recipe field '{key}': {e}"))
+        };
+        let recipe = ModelRecipe {
+            vocab: field("vocab")?,
+            hidden: field("hidden")?,
+            depth: field("depth")?,
+            centroids: field("centroids")?,
+            seed: field("seed")? as u64,
+        };
+        if recipe.vocab < 2 || recipe.hidden == 0 {
+            return Err(format!(
+                "vocab must be >= 2 and hidden positive (got vocab {}, hidden {})",
+                recipe.vocab, recipe.hidden
+            ));
+        }
+        if recipe.centroids < 2 || recipe.centroids > 16 {
+            return Err(format!("centroids must be in 2..=16 (got {})", recipe.centroids));
+        }
+        Ok(recipe)
+    }
+}
+
+/// One verified artifact: identity, interpreted recipe, the raw
+/// manifest, and the checksum-verified tensors.
+pub struct ModelArtifact {
+    pub key: ModelKey,
+    pub recipe: ModelRecipe,
+    pub manifest: ArtifactManifest,
+    pub tensors: Vec<(String, Tensor)>,
+    /// Where the artifact was loaded from ("" for in-memory inserts).
+    pub path: String,
+}
+
+impl ModelArtifact {
+    /// Tensor lookup by manifest name.
+    pub fn tensor(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Total f32 parameter count across tensors.
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.data().len()).sum()
+    }
+}
+
+/// Verified, immutable model catalog keyed by [`ModelKey`].
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<ModelKey, Arc<ModelArtifact>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Load every `*.lcdw` file in `dir` (sorted by filename so load
+    /// order — and hence first-error reporting — is deterministic).
+    /// Any refused artifact fails the whole load: a registry is either
+    /// fully verified or not constructed.
+    pub fn load_dir(dir: &str) -> Result<ModelRegistry, RegistryError> {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| RegistryError::Io(format!("reading model dir {dir}: {e}")))?;
+        let mut paths: Vec<String> = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|e| RegistryError::Io(format!("reading model dir {dir}: {e}")))?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("lcdw") {
+                paths.push(path.to_string_lossy().into_owned());
+            }
+        }
+        paths.sort();
+        let mut reg = ModelRegistry::new();
+        for path in &paths {
+            reg.load_file(path)?;
+        }
+        Ok(reg)
+    }
+
+    /// Load + verify one artifact file and register it.
+    pub fn load_file(&mut self, path: &str) -> Result<ModelKey, RegistryError> {
+        let bytes =
+            std::fs::read(path).map_err(|e| RegistryError::Io(format!("reading {path}: {e}")))?;
+        let file = parse_lcdw(&bytes)
+            .map_err(|error| RegistryError::Artifact { path: path.to_string(), error })?;
+        let manifest = match file.manifest {
+            Some(m) => m,
+            None => {
+                return Err(RegistryError::NotAnArtifact { path: path.to_string(), version: file.version })
+            }
+        };
+        let artifact = Self::interpret(manifest, file.tensors, path)?;
+        let key = artifact.key.clone();
+        self.insert(artifact)?;
+        Ok(key)
+    }
+
+    /// Interpret a parsed (already checksum-verified) artifact: build
+    /// its key and recipe, refusing unusable manifests typed.
+    fn interpret(
+        manifest: ArtifactManifest,
+        tensors: Vec<(String, Tensor)>,
+        path: &str,
+    ) -> Result<ModelArtifact, RegistryError> {
+        let key = ModelKey::new(&manifest.name, manifest.version)?;
+        let recipe = ModelRecipe::from_json(&manifest.recipe)
+            .map_err(|reason| RegistryError::BadRecipe { key: key.to_string(), reason })?;
+        Ok(ModelArtifact { key, recipe, manifest, tensors, path: path.to_string() })
+    }
+
+    /// Register a verified artifact. Refuses duplicate keys — versions
+    /// are immutable once published.
+    pub fn insert(&mut self, artifact: ModelArtifact) -> Result<(), RegistryError> {
+        let key = artifact.key.clone();
+        if self.models.contains_key(&key) {
+            return Err(RegistryError::Duplicate { key, path: artifact.path.clone() });
+        }
+        self.models.insert(key, Arc::new(artifact));
+        Ok(())
+    }
+
+    pub fn get(&self, key: &ModelKey) -> Result<Arc<ModelArtifact>, RegistryError> {
+        self.models.get(key).cloned().ok_or_else(|| RegistryError::Unknown(key.clone()))
+    }
+
+    pub fn contains(&self, key: &ModelKey) -> bool {
+        self.models.contains_key(key)
+    }
+
+    /// All keys in sorted order (name asc, version asc).
+    pub fn keys(&self) -> Vec<ModelKey> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// The latest version of `name`, if any artifact carries it.
+    pub fn latest(&self, name: &str) -> Option<ModelKey> {
+        self.models.keys().filter(|k| k.name() == name).max_by_key(|k| k.version()).cloned()
+    }
+
+    /// Default serving key for a registry with no explicit selection:
+    /// the latest version of the lexicographically first model name.
+    pub fn default_key(&self) -> Option<ModelKey> {
+        let first = self.models.keys().next()?.name().to_string();
+        self.latest(&first)
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Iterate artifacts in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&ModelKey, &Arc<ModelArtifact>)> {
+        self.models.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lcdw::write_lcdw_v2;
+    use crate::util::Rng;
+
+    fn tmp_dir(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("lcd_registry_{}_{}", tag, std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.to_string_lossy().into_owned()
+    }
+
+    fn sample_recipe() -> ModelRecipe {
+        ModelRecipe { vocab: 20, hidden: 24, depth: 2, centroids: 6, seed: 11 }
+    }
+
+    fn write_sample(dir: &str, name: &str, version: u32, seed: u64) -> String {
+        let mut rng = Rng::new(seed);
+        let emb = Tensor::randn(vec![20, 24], 0.5, &mut rng);
+        let w0 = Tensor::randn(vec![24, 24], 0.2, &mut rng);
+        let recipe = ModelRecipe { seed, ..sample_recipe() }.to_json();
+        let path = format!("{dir}/{name}-v{version}.lcdw");
+        write_lcdw_v2(
+            &path,
+            name,
+            version,
+            &recipe,
+            "registry unit test",
+            vec![("emb", &emb), ("layers.0.w", &w0)].into_iter(),
+        )
+        .unwrap();
+        path
+    }
+
+    #[test]
+    fn key_parse_display_roundtrip() {
+        let k = ModelKey::parse("toy-2bit@3").unwrap();
+        assert_eq!(k.name(), "toy-2bit");
+        assert_eq!(k.version(), 3);
+        assert_eq!(k.to_string(), "toy-2bit@3");
+        assert_eq!(ModelKey::parse(&k.to_string()).unwrap(), k);
+        assert!(ModelKey::parse("noversion").is_err());
+        assert!(ModelKey::parse("bad name@1").is_err());
+        assert!(ModelKey::parse("toy@notanum").is_err());
+        assert!(ModelKey::parse("@1").is_err());
+    }
+
+    #[test]
+    fn load_dir_and_lookup() {
+        let dir = tmp_dir("load");
+        write_sample(&dir, "toy", 1, 5);
+        write_sample(&dir, "toy", 2, 6);
+        write_sample(&dir, "other", 1, 7);
+        let reg = ModelRegistry::load_dir(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(reg.len(), 3);
+        let keys: Vec<String> = reg.keys().iter().map(|k| k.to_string()).collect();
+        assert_eq!(keys, vec!["other@1", "toy@1", "toy@2"]);
+        assert_eq!(reg.latest("toy").unwrap().to_string(), "toy@2");
+        assert_eq!(reg.default_key().unwrap().to_string(), "other@1");
+        let art = reg.get(&ModelKey::parse("toy@2").unwrap()).unwrap();
+        assert_eq!(art.recipe.seed, 6);
+        assert_eq!(art.n_params(), 20 * 24 + 24 * 24);
+        assert!(art.tensor("emb").is_some());
+        let missing = reg.get(&ModelKey::parse("toy@9").unwrap()).unwrap_err();
+        assert!(matches!(missing, RegistryError::Unknown(_)));
+    }
+
+    /// The acceptance criterion's tamper case: a flipped payload byte
+    /// must refuse the artifact with a typed checksum error and load
+    /// nothing — before any worker could swap to it.
+    #[test]
+    fn tampered_artifact_refused_typed() {
+        let dir = tmp_dir("tamper");
+        let path = write_sample(&dir, "toy", 1, 5);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelRegistry::load_dir(&dir).unwrap_err();
+        std::fs::remove_dir_all(&dir).ok();
+        match err {
+            RegistryError::Artifact { error: LcdwError::ChecksumMismatch { tensor, .. }, .. } => {
+                assert_eq!(tensor, "layers.0.w");
+            }
+            other => panic!("expected typed checksum refusal, got {other}"),
+        }
+    }
+
+    #[test]
+    fn v1_files_are_not_artifacts() {
+        let dir = tmp_dir("v1");
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(vec![4, 4], 1.0, &mut rng);
+        let path = format!("{dir}/legacy.lcdw");
+        crate::model::lcdw::write_lcdw(&path, vec![("w", &t)].into_iter()).unwrap();
+        let err = ModelRegistry::load_dir(&dir).unwrap_err();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(matches!(err, RegistryError::NotAnArtifact { version: 1, .. }));
+    }
+
+    #[test]
+    fn duplicate_keys_refused() {
+        let dir = tmp_dir("dup");
+        write_sample(&dir, "toy", 1, 5);
+        let mut reg = ModelRegistry::load_dir(&dir).unwrap();
+        let p2 = write_sample(&dir, "toy", 1, 9);
+        let err = reg.load_file(&p2).unwrap_err();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(matches!(err, RegistryError::Duplicate { .. }));
+    }
+
+    #[test]
+    fn recipe_validation() {
+        let good = sample_recipe();
+        let back = ModelRecipe::from_json(&good.to_json()).unwrap();
+        assert_eq!(back, good);
+        let mut bad = good;
+        bad.centroids = 40;
+        assert!(ModelRecipe::from_json(&bad.to_json()).is_err());
+        let missing = Json::obj(vec![("vocab", Json::int(8))]);
+        assert!(ModelRecipe::from_json(&missing).unwrap_err().contains("missing recipe field"));
+    }
+}

@@ -5,7 +5,7 @@ use crate::config::LcdConfig;
 use crate::data::tasks::{ClassificationSet, McSuite, TaskKind};
 use crate::data::{eval_lm_batches, CharTokenizer, CorpusSpec, LmBatch, SyntheticCorpus};
 use crate::eval::{classification_accuracy, mc_accuracy, perplexity};
-use crate::model::WeightStore;
+use crate::model::{ModelKey, ModelRecipe, ModelRegistry, WeightStore};
 use crate::pipeline::train::{pad_to_seq, train_bert};
 use crate::pipeline::{compress_model, train_model, CompressedModel, ModelRunner};
 use crate::coordinator::Engine;
@@ -385,6 +385,81 @@ fn build_draft_engine(cfg: &LcdConfig) -> Result<Box<dyn crate::coordinator::Ste
         other => anyhow::bail!("unknown serve.draft '{other}' (narrow|oracle)"),
     };
     Ok(draft)
+}
+
+// ---------------------------------------------------------------------------
+// Registry-backed serving (`--model-dir`): engines rebuilt from verified
+// `.lcdw` v2 artifacts instead of seeded draws.
+// ---------------------------------------------------------------------------
+
+/// Serving spec for a registry artifact: the model shape (vocab /
+/// hidden / depth / centroids / seed) comes from the artifact recipe —
+/// the single source of truth once a model is packed — while the
+/// serving geometry (batch, seq) and the GEMM knobs still come from
+/// the config. Two pools serving the same artifact therefore agree on
+/// the model even if their batch sizes differ.
+pub fn spec_for_recipe(cfg: &LcdConfig, recipe: &ModelRecipe) -> crate::coordinator::HostLutSpec {
+    crate::coordinator::HostLutSpec {
+        batch: cfg.serve.max_batch.max(1),
+        seq: cfg.serve.seq,
+        vocab: recipe.vocab,
+        hidden: recipe.hidden,
+        depth: recipe.depth,
+        centroids: recipe.centroids,
+        seed: recipe.seed,
+        gemm_threads: cfg.gemm_threads,
+        gemm_shard_rows: cfg.gemm_shard_rows,
+    }
+}
+
+/// Model-aware engine builder for
+/// [`crate::coordinator::start_pool_models`]: resolve `key` in the
+/// registry, rebuild the dense weights from the verified artifact and
+/// wrap them in the incremental engine. Because
+/// [`crate::coordinator::HostLutModel::build_from_weights`] replays the
+/// seeded PRNG stream, an artifact packed by `lcd pack` from the same
+/// recipe serves streams bit-identical to a seed-built `--engine
+/// cached` pool — the invariant the hot-swap acceptance tests pin.
+///
+/// Only the incremental kinds make sense here: "cached" and its
+/// "speculative" wrap. The artifact kinds ("fp"/"lut") train their own
+/// checkpoints and have no registry path.
+pub fn build_registry_engine(
+    cfg: &LcdConfig,
+    kind: &str,
+    registry: &ModelRegistry,
+    key: &ModelKey,
+) -> Result<Box<dyn crate::coordinator::StepEngine>> {
+    let (kind, speculate) = match kind {
+        "speculative" => ("cached", true),
+        k => (k, cfg.serve.speculative),
+    };
+    anyhow::ensure!(
+        kind == "cached",
+        "registry-backed serving (--model-dir) supports --engine cached|speculative, not '{kind}'"
+    );
+    let artifact = registry.get(key)?;
+    let spec = spec_for_recipe(cfg, &artifact.recipe);
+    let weights = crate::coordinator::HostLutWeights::from_tensors(&artifact.tensors, &spec)?;
+    let model = crate::coordinator::HostLutModel::build_from_weights(spec, &weights)?;
+    let engine = crate::coordinator::CachedLutEngine::from_model(model)?;
+    eprintln!(
+        "[engine] registry {key}: {} ({} KiB packed LUT weights)",
+        crate::coordinator::StepEngine::name(&engine),
+        engine.weight_bytes() / 1024
+    );
+    let inner: Box<dyn crate::coordinator::StepEngine> = Box::new(engine);
+    if !speculate {
+        return Ok(inner);
+    }
+    let draft = build_draft_engine(cfg)?;
+    let engine = crate::coordinator::SpeculativeEngine::new(inner, draft, cfg.serve.draft_k)?;
+    eprintln!(
+        "[engine] speculative over registry {key} (draft_k {}, draft '{}')",
+        cfg.serve.draft_k,
+        cfg.serve.draft
+    );
+    Ok(Box::new(engine))
 }
 
 /// The LUT artifact's parameter prefix (non-linear params + per-linear

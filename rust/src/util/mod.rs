@@ -7,9 +7,11 @@ pub mod bench;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod sha256;
 
 pub use json::Json;
 pub use rng::{Rng, ZipfTable};
+pub use sha256::{sha256_hex, Sha256};
 
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f32]) -> f32 {

@@ -102,6 +102,8 @@ fn admin_plane_serves_live_introspection_and_registry_fold_matches_exit_report()
             slo: Some(Arc::clone(&slo)),
             frontdoor: Some(door.stats_handle()),
             frontdoor_recorder: Some(Arc::clone(&recorder)),
+            models: None,
+            swap: None,
         },
     )
     .expect("binding admin plane");
@@ -122,6 +124,7 @@ fn admin_plane_serves_live_introspection_and_registry_fold_matches_exit_report()
             tenant: if i % 2 == 0 { "gold".to_string() } else { "bronze".to_string() },
             prompt: prompt.clone(),
             trace_id: trace_of(i),
+            model: None,
         });
         write_frame(&mut stream, &encode_client(&frame)).expect("writing request frame");
     }
@@ -267,6 +270,8 @@ fn readyz_watchdog_trips_on_fast_burn_and_recovers() {
             slo: Some(Arc::clone(&slo)),
             frontdoor: None,
             frontdoor_recorder: None,
+            models: None,
+            swap: None,
         },
     )
     .expect("binding admin plane");

@@ -36,6 +36,7 @@ use lcd::coordinator::{
     FrontDoorConfig, ResumeTurn, SchedulerConfig, ServerFrame, SessionOptions, SessionStore,
     StepEngine, WireRequest,
 };
+use lcd::model::ModelKey;
 use lcd::util::Rng;
 
 /// The normative spec; the conformance test reads its vectors verbatim.
@@ -74,6 +75,7 @@ fn wire(
         tenant: tenant.to_string(),
         prompt,
         trace_id: 0,
+        model: None,
     }
 }
 
@@ -86,6 +88,8 @@ struct Outcome {
     overloaded: bool,
     /// `Some(deadline)` once a `Cancelled` frame arrived.
     cancelled: Option<bool>,
+    /// `Some(reason)` once a typed `Rejected` frame arrived.
+    rejected: Option<String>,
 }
 
 /// Read server frames until `want` terminal frames have arrived.
@@ -114,6 +118,10 @@ fn collect(stream: &mut TcpStream, want: usize) -> HashMap<u64, Outcome> {
                 out.entry(id).or_default().cancelled = Some(deadline);
                 terminals += 1;
             }
+            ServerFrame::Rejected { id, reason } => {
+                out.entry(id).or_default().rejected = Some(reason);
+                terminals += 1;
+            }
         }
     }
     out
@@ -125,7 +133,7 @@ fn collect(stream: &mut TcpStream, want: usize) -> HashMap<u64, Outcome> {
 /// together.
 #[test]
 fn spec_conformance_vectors_decode_and_reencode_verbatim() {
-    let client_vectors: [(&str, ClientFrame); 4] = [
+    let client_vectors: [(&str, ClientFrame); 5] = [
         (
             "0000002e01010000000000000007000000000000000001000007d00000000400000461636d65000000020000000300000005",
             ClientFrame::Request(wire(7, 0, 1, 2000, 4, None, "acme", vec![3, 5])),
@@ -153,9 +161,19 @@ fn spec_conformance_vectors_decode_and_reencode_verbatim() {
                 vec![1, 2, 9, 4],
             )),
         ),
+        (
+            // The model-selector frame extension: tag 0x02 + name_len
+            // u8 + name bytes + version u32 pins the request to one
+            // registry key (docs/PROTOCOL.md "Request extensions").
+            "0000003701010000000000000007000000000000000000000000000000000400000461636d650000000200000003000000050203746f7900000003",
+            ClientFrame::Request(WireRequest {
+                model: Some(ModelKey::parse("toy@3").unwrap()),
+                ..wire(7, 0, 0, 0, 4, None, "acme", vec![3, 5])
+            }),
+        ),
         ("0000000a01020000000000000007", ClientFrame::Cancel { id: 7 }),
     ];
-    let server_vectors: [(&str, ServerFrame); 4] = [
+    let server_vectors: [(&str, ServerFrame); 5] = [
         (
             "0000001601810000000000000007000000020000000900000002",
             ServerFrame::Tokens { id: 7, tokens: vec![9, 2] },
@@ -166,6 +184,10 @@ fn spec_conformance_vectors_decode_and_reencode_verbatim() {
         ),
         ("0000000e0183000000000000000700000100", ServerFrame::Overloaded { id: 7, queue_depth: 256 }),
         ("0000000b0184000000000000000701", ServerFrame::Cancelled { id: 7, deadline: true }),
+        (
+            "0000001901850000000000000007000d756e6b6e6f776e206d6f64656c",
+            ServerFrame::Rejected { id: 7, reason: "unknown model".to_string() },
+        ),
     ];
 
     let split = |hex: &str| -> (usize, Vec<u8>) {

@@ -106,8 +106,25 @@ fn frame_codec_roundtrips_on_fuzzed_frames() {
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-resume").as_slice(),
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-cancel").as_slice(),
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-traced").as_slice(),
+            include_bytes!("../fuzz/corpus/frame_roundtrip/seed-model").as_slice(),
+            include_bytes!("../fuzz/corpus/frame_roundtrip/seed-rejected").as_slice(),
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-tokens").as_slice(),
             include_bytes!("../fuzz/corpus/frame_roundtrip/seed-hostile").as_slice(),
+        ],
+    );
+}
+
+#[test]
+fn lcdw_parser_never_panics_on_fuzzed_artifacts() {
+    run(
+        "lcdw_parse",
+        fuzz::lcdw_never_panics,
+        &[
+            include_bytes!("../fuzz/corpus/lcdw_parse/seed-v2-valid").as_slice(),
+            include_bytes!("../fuzz/corpus/lcdw_parse/seed-v2-tampered").as_slice(),
+            include_bytes!("../fuzz/corpus/lcdw_parse/seed-v2-truncated").as_slice(),
+            include_bytes!("../fuzz/corpus/lcdw_parse/seed-v1").as_slice(),
+            include_bytes!("../fuzz/corpus/lcdw_parse/seed-hostile").as_slice(),
         ],
     );
 }

@@ -198,6 +198,7 @@ fn batcher_backpressure_under_load() {
             t_submit: std::time::Instant::now(),
             session: None,
             trace: 0,
+            model: None,
         }) {
             accepted += 1;
         }

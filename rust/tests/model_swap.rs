@@ -1,0 +1,311 @@
+//! Acceptance suite for the versioned-artifact serving path: `.lcdw` v2
+//! on disk → verified `ModelRegistry` → real LUT engines → rolling
+//! hot-swap. The in-module server tests cover the swap mechanics over
+//! mock engines; this suite runs the whole production path end to end
+//! and pins the ISSUE's acceptance properties:
+//!
+//! * an artifact packed from a recipe's seeded weights rebuilds a
+//!   **bit-identical** engine through the registry (the `lcd pack` →
+//!   `--model-dir` round trip);
+//! * a tampered artifact is refused with a **typed** error at load time
+//!   — it never enters a registry, so no worker can ever swap to it —
+//!   and a rolling pass targeting a missing version fails per-worker
+//!   while the old engine keeps serving bit-identically;
+//! * a rolling hot-swap under load drops **zero** requests
+//!   (`completed + rejected == submitted`, rejected = 0) and post-swap
+//!   streams equal a fresh pool on the new artifact;
+//! * published versions are immutable: re-registering a `name@version`
+//!   is a typed `Duplicate` refusal, and v1 files (no manifest, no
+//!   identity) are typed `NotAnArtifact` refusals.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lcd::coordinator::{
+    start_pool_models, AdmissionPolicy, CachedLutEngine, HostLutModel, HostLutSpec,
+    HostLutWeights, SchedulerConfig, ServerHandle, SessionOptions, SwapReport,
+};
+use lcd::model::{
+    write_lcdw, write_lcdw_v2, ModelKey, ModelRecipe, ModelRegistry, RegistryError,
+};
+use lcd::telemetry::TelemetryConfig;
+use lcd::util::argmax;
+
+/// Pool shape shared by every test: what `serve.max_batch` / `serve.seq`
+/// would supply in production. One spec per recipe everywhere (pack,
+/// registry rebuild, reference) keeps the bit-identity comparisons
+/// exact.
+const BATCH: usize = 2;
+const SEQ: usize = 48;
+
+/// A fresh scratch dir per test (cleared on entry so reruns are clean).
+fn scratch_dir(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("lcd-model-swap-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("creating scratch dir");
+    dir.to_str().expect("utf8 temp path").to_string()
+}
+
+fn recipe(seed: u64, centroids: usize) -> ModelRecipe {
+    ModelRecipe { vocab: 24, hidden: 24, depth: 2, centroids, seed }
+}
+
+/// The full serving spec for `recipe` under this suite's pool shape.
+fn spec_of(r: &ModelRecipe) -> HostLutSpec {
+    HostLutSpec {
+        batch: BATCH,
+        seq: SEQ,
+        vocab: r.vocab,
+        hidden: r.hidden,
+        depth: r.depth,
+        centroids: r.centroids,
+        seed: r.seed,
+        gemm_threads: 0,
+        gemm_shard_rows: 0,
+    }
+}
+
+/// Pack `name@version` from the recipe's seeded weights — exactly what
+/// `lcd pack` serializes. Returns the artifact path.
+fn pack(dir: &str, name: &str, version: u32, r: &ModelRecipe) -> String {
+    let spec = spec_of(r);
+    let weights = HostLutModel::seeded_weights(spec.clone()).expect("seeded weights");
+    let tensors = weights.to_tensors(&spec).expect("weights to tensors");
+    let path = format!("{dir}/{name}@{version}.lcdw");
+    write_lcdw_v2(
+        &path,
+        name,
+        version,
+        &r.to_json(),
+        "model_swap suite",
+        tensors.iter().map(|(n, t)| (n.as_str(), t)),
+    )
+    .expect("packing artifact");
+    path
+}
+
+/// Rebuild a serving engine from a verified registry entry — the exact
+/// path `build_registry_engine` takes in production.
+fn engine_from(registry: &ModelRegistry, key: &ModelKey) -> anyhow::Result<CachedLutEngine> {
+    let artifact = registry.get(key)?;
+    let spec = spec_of(&artifact.recipe);
+    let weights = HostLutWeights::from_tensors(&artifact.tensors, &spec)?;
+    let model = HostLutModel::build_from_weights(spec, &weights)?;
+    CachedLutEngine::from_model(model)
+}
+
+/// A worker pool whose engines are rebuilt from registry artifacts on
+/// every (initial or swap-time) model assignment.
+fn artifact_pool(registry: Arc<ModelRegistry>, workers: usize, initial: &ModelKey) -> ServerHandle {
+    start_pool_models(
+        workers,
+        BATCH,
+        256,
+        SchedulerConfig::unchunked(AdmissionPolicy::Fifo),
+        SessionOptions::default(),
+        TelemetryConfig::off(),
+        None,
+        initial.clone(),
+        move |_w, key: &ModelKey| engine_from(&registry, key),
+    )
+}
+
+/// Greedy stream off one engine (slot 0) — mirror of
+/// `common::reference_stream`, but over a caller-built engine so we can
+/// compare registry-rebuilt engines against seed-built ones.
+fn stream_of(e: &mut CachedLutEngine, prompt: &[i32], gen: usize) -> Vec<i32> {
+    let row = e.prefill(0, prompt).expect("prefill");
+    let mut out = Vec::with_capacity(gen);
+    if gen == 0 {
+        return out;
+    }
+    let mut tok = argmax(&row) as i32;
+    out.push(tok);
+    while out.len() < gen {
+        let row = e.decode_step(0, tok).expect("decode step");
+        tok = argmax(&row) as i32;
+        out.push(tok);
+    }
+    out
+}
+
+#[test]
+fn packed_artifact_rebuilds_bit_identical_through_the_registry() {
+    let dir = scratch_dir("identity");
+    let r = recipe(0x5eed_1dea, 6);
+    pack(&dir, "toy", 1, &r);
+    let registry = ModelRegistry::load_dir(&dir).expect("pristine artifact must load");
+    let key = ModelKey::new("toy", 1).unwrap();
+    assert_eq!(registry.keys(), vec![key.clone()]);
+    assert_eq!(registry.default_key(), Some(key.clone()));
+    let artifact = registry.get(&key).expect("registered artifact");
+    assert_eq!(artifact.recipe, r, "recipe survives the disk round trip");
+    assert!(artifact.n_params() > 0);
+    assert_eq!(artifact.manifest.name, "toy");
+    assert_eq!(artifact.manifest.version, 1);
+
+    // Every stream off the registry-rebuilt engine equals the
+    // uninterrupted seed-built reference, bit for bit.
+    let spec = spec_of(&r);
+    for (i, (prompt, gen)) in common::request_set(0x11, r.vocab, 6).into_iter().enumerate() {
+        let mut rebuilt = engine_from(&registry, &key).expect("registry rebuild");
+        assert_eq!(
+            stream_of(&mut rebuilt, &prompt, gen),
+            common::reference_stream(&spec, &prompt, gen),
+            "request {i}: registry-rebuilt stream diverged from the seed-built reference"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tampered_artifact_is_refused_typed_and_never_partially_loads() {
+    let dir = scratch_dir("tamper");
+    let r = recipe(0xbad_5eed, 6);
+    pack(&dir, "toy", 1, &r);
+    let path = pack(&dir, "toy", 2, &recipe(0xbad_5eee, 8));
+    // Flip one bit inside the v2 tensor payload (the file tail).
+    let mut bytes = std::fs::read(&path).expect("reading artifact");
+    let n = bytes.len();
+    bytes[n - 3] ^= 0x01;
+    std::fs::write(&path, &bytes).expect("writing tampered artifact");
+    // The whole load refuses — the intact sibling must not half-load a
+    // registry that silently misses versions.
+    let err = ModelRegistry::load_dir(&dir).expect_err("tampered artifact must refuse the load");
+    assert!(
+        matches!(err, RegistryError::Artifact { .. }),
+        "refusal must be the typed artifact error, got: {err}"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains(&path), "refusal must name the offending file: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rolling_swap_on_real_artifacts_drops_nothing_and_switches_streams() {
+    let dir = scratch_dir("swap");
+    let ra = recipe(0xaaaa, 6);
+    let rb = recipe(0xbbbb, 8); // different weights AND bit-width
+    pack(&dir, "prod", 1, &ra);
+    pack(&dir, "prod", 2, &rb);
+    let registry = Arc::new(ModelRegistry::load_dir(&dir).expect("loading artifacts"));
+    let k1 = ModelKey::new("prod", 1).unwrap();
+    let k2 = ModelKey::new("prod", 2).unwrap();
+    assert_eq!(registry.latest("prod"), Some(k2.clone()));
+
+    let handle = artifact_pool(Arc::clone(&registry), 2, &k1);
+    let ctl = handle.swap_controller();
+    let requests = common::request_set(0x77, ra.vocab, 8);
+    let submit_all = || {
+        requests
+            .iter()
+            .map(|(p, g)| (p.clone(), *g, handle.submit(p.clone(), *g)))
+            .collect::<Vec<_>>()
+    };
+
+    // Before: a batch in flight when the rolling pass starts. During:
+    // submissions racing the pass itself.
+    let before = submit_all();
+    let (report, during) = std::thread::scope(|s| {
+        let loader = s.spawn(|| {
+            requests
+                .iter()
+                .map(|(p, g)| {
+                    std::thread::sleep(Duration::from_millis(2));
+                    (p.clone(), *g, handle.submit(p.clone(), *g))
+                })
+                .collect::<Vec<_>>()
+        });
+        let report = ctl.rolling(&k2);
+        (report, loader.join().unwrap())
+    });
+    assert_eq!(report, SwapReport { swapped: 2, failed: 0, skipped: 0 });
+    assert_eq!(handle.worker_models(), vec![k2.clone(), k2.clone()]);
+    let after = submit_all();
+
+    let sa = spec_of(&ra);
+    let sb = spec_of(&rb);
+    let mut completed = 0u64;
+    let mut distinguishable = 0usize;
+    for (p, g, rx) in before.into_iter().chain(during) {
+        let resp = rx.recv().expect("no request may be dropped by a rolling swap");
+        completed += 1;
+        let old = common::reference_stream(&sa, &p, g);
+        let new = common::reference_stream(&sb, &p, g);
+        distinguishable += usize::from(old != new);
+        assert!(
+            resp.tokens == old || resp.tokens == new,
+            "mid-swap stream for {p:?} matches neither artifact: {:?}",
+            resp.tokens
+        );
+    }
+    assert!(distinguishable > 0, "the two artifacts must serve distinguishable streams");
+    for (p, g, rx) in after {
+        let resp = rx.recv().expect("post-swap submissions must be served");
+        completed += 1;
+        assert_eq!(
+            resp.tokens,
+            common::reference_stream(&sb, &p, g),
+            "post-swap stream for {p:?} must be bit-identical to a fresh pool on the new artifact"
+        );
+    }
+    let snap = handle.shutdown();
+    assert_eq!(snap.completed, completed);
+    assert_eq!(snap.rejected, 0, "completed + rejected == submitted, with zero rejects");
+    assert_eq!(snap.model_swaps, 2, "each worker counts its own rebuild");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn swap_to_an_absent_version_fails_per_worker_and_old_artifact_keeps_serving() {
+    let dir = scratch_dir("refuse");
+    let r = recipe(0xcccc, 6);
+    pack(&dir, "prod", 1, &r);
+    let registry = Arc::new(ModelRegistry::load_dir(&dir).expect("loading artifact"));
+    let k1 = ModelKey::new("prod", 1).unwrap();
+    let absent = ModelKey::new("prod", 2).unwrap();
+    assert!(matches!(registry.get(&absent), Err(RegistryError::Unknown(_))));
+
+    let handle = artifact_pool(Arc::clone(&registry), 1, &k1);
+    let ctl = handle.swap_controller();
+    let spec = spec_of(&r);
+    let (p, g) = (vec![3, 1, 4], 5);
+    let reference = common::reference_stream(&spec, &p, g);
+    assert_eq!(handle.submit(p.clone(), g).recv().unwrap().tokens, reference);
+    // The rebuild closure hits the registry's typed Unknown refusal;
+    // the worker keeps its old engine and keeps serving bit-identically.
+    let report = ctl.rolling(&absent);
+    assert_eq!(report, SwapReport { swapped: 0, failed: 1, skipped: 0 });
+    assert_eq!(handle.worker_models(), vec![k1]);
+    assert_eq!(handle.submit(p.clone(), g).recv().unwrap().tokens, reference);
+    let snap = handle.shutdown();
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.model_swaps, 0, "a failed rolling pass must not count swaps");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn published_versions_are_immutable_and_v1_files_carry_no_identity() {
+    let dir = scratch_dir("immutable");
+    let r = recipe(0xeeee, 4);
+    let path = pack(&dir, "toy", 1, &r);
+    let mut registry = ModelRegistry::new();
+    registry.load_file(&path).expect("first registration");
+    // Re-registering the same name@version is a typed Duplicate refusal
+    // — versions are immutable, republishing means bumping the version.
+    let err = registry.load_file(&path).expect_err("duplicate version must refuse");
+    assert!(matches!(err, RegistryError::Duplicate { .. }), "typed duplicate, got: {err}");
+    assert_eq!(registry.len(), 1);
+
+    // v1 checkpoints have no manifest, hence no name@version identity.
+    let spec = spec_of(&r);
+    let weights = HostLutModel::seeded_weights(spec.clone()).expect("seeded weights");
+    let tensors = weights.to_tensors(&spec).expect("to tensors");
+    let v1_path = format!("{dir}/legacy.lcdw");
+    write_lcdw(&v1_path, tensors.iter().map(|(n, t)| (n.as_str(), t))).expect("writing v1");
+    let err = registry.load_file(&v1_path).expect_err("v1 file must refuse registration");
+    assert!(matches!(err, RegistryError::NotAnArtifact { .. }), "typed v1 refusal, got: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
